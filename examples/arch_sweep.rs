@@ -1,0 +1,54 @@
+//! Architecture sweep: explore the §VI-C design space on one workload —
+//! row-buffer count × smem placement × offload policy × scheduler —
+//! and print a ranked table.
+//!
+//! ```sh
+//! cargo run --release --example arch_sweep [workload]
+//! ```
+
+use mpu::config::{MachineConfig, OffloadPolicy, SchedPolicy, SmemLocation};
+use mpu::coordinator::run_workload;
+use mpu::workloads::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "hist".into());
+    let w = Workload::from_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?;
+    let mut results: Vec<(String, u64, f64)> = Vec::new();
+    for bufs in [1usize, 4] {
+        for smem in [SmemLocation::NearBank, SmemLocation::FarBank] {
+            for pol in [OffloadPolicy::CompilerAnnotated, OffloadPolicy::AllFarBank] {
+                for sched in [SchedPolicy::Gto, SchedPolicy::RoundRobin] {
+                    let mut cfg = MachineConfig::scaled();
+                    cfg.row_buffers_per_bank = bufs;
+                    cfg.smem_location = smem;
+                    cfg.offload_policy = pol;
+                    cfg.sched_policy = sched;
+                    let r = run_workload(w, &cfg)?;
+                    anyhow::ensure!(r.correct, "incorrect under sweep point");
+                    let label = format!(
+                        "rowbuf={bufs} smem={} policy={} sched={}",
+                        if smem == SmemLocation::NearBank { "near" } else { "far" },
+                        match pol {
+                            OffloadPolicy::CompilerAnnotated => "annotated",
+                            _ => "all_fb",
+                        },
+                        if sched == SchedPolicy::Gto { "gto" } else { "rr" },
+                    );
+                    results.push((label, r.cycles, r.stats.row_miss_rate()));
+                }
+            }
+        }
+    }
+    results.sort_by_key(|r| r.1);
+    println!("arch sweep on `{}` (best first):", w.name());
+    let best = results[0].1 as f64;
+    for (label, cycles, miss) in &results {
+        println!(
+            "{cycles:>9} cycles  ({:.2}x vs best)  miss {:>5.1}%  {label}",
+            *cycles as f64 / best,
+            miss * 100.0
+        );
+    }
+    Ok(())
+}

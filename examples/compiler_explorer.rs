@@ -1,0 +1,55 @@
+//! Compiler explorer: show the MPU backend's work on a kernel — the
+//! assembled mini-PTX, Algorithm-1 location annotations per instruction,
+//! branch re-convergence points, and the register-location breakdown.
+//!
+//! ```sh
+//! cargo run --release --example compiler_explorer [workload]
+//! ```
+
+use mpu::compiler::compile;
+use mpu::isa::instr::Loc;
+use mpu::workloads::{prepare, Device, Scale, Workload};
+
+struct NullDev {
+    top: u64,
+}
+impl Device for NullDev {
+    fn alloc_bytes(&mut self, bytes: usize) -> u64 {
+        let a = self.top;
+        self.top += bytes as u64;
+        a
+    }
+    fn write_f32(&mut self, _a: u64, _d: &[f32]) {}
+}
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "axpy".into());
+    let w = Workload::from_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?;
+    let mut dev = NullDev { top: 0 };
+    let p = prepare(w, Scale::Tiny, &mut dev)?;
+    let k = compile(&p.kernel)?;
+
+    println!("kernel `{}` — {} instructions", k.name, k.instrs.len());
+    println!("{:>4}  {:<4} {:<8} instruction", "pc", "loc", "reconv");
+    for (pc, i) in k.instrs.iter().enumerate() {
+        let loc = match i.loc {
+            Loc::N => "N",
+            Loc::F => "F",
+            Loc::B => "B",
+            Loc::U => "U",
+        };
+        let rc = k.reconv[pc].map(|r| r.to_string()).unwrap_or_default();
+        println!("{pc:>4}  {loc:<4} {rc:<8} {i}");
+    }
+    println!(
+        "\nregister locations (Fig. 14): {} near / {} far / {} both / {} unknown",
+        k.loc_stats.near, k.loc_stats.far, k.loc_stats.both, k.loc_stats.unknown
+    );
+    println!(
+        "physical pools: near RF {} regs, far RF {} regs (near-bank file can be half-sized, §VI-B)",
+        k.pools.near[0] + k.pools.near[1],
+        k.pools.far[0] + k.pools.far[1],
+    );
+    Ok(())
+}

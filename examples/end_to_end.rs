@@ -1,0 +1,100 @@
+//! End-to-end driver: the full three-layer system on the whole Table-I
+//! suite.
+//!
+//! For every workload: build inputs, run the cycle-level MPU simulator
+//! (L3 Rust), load the JAX/Pallas AOT artifact (L2+L1) via PJRT and
+//! execute the XLA golden on the *same inputs*, cross-check the
+//! simulator's memory image bit-for-bit (within f32 tolerance), run the
+//! GPU baseline, and report the paper's headline metrics (speedup +
+//! energy reduction). Results are recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use mpu::config::MachineConfig;
+use mpu::coordinator::report::{f2, Table};
+use mpu::coordinator::{compile_for, geomean, run_workload_gpu_scaled};
+use mpu::core::Machine;
+use mpu::energy::mpu_energy;
+use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
+use mpu::workloads::{prepare, Scale, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let scale = if std::env::args().any(|a| a == "--tiny") { Scale::Tiny } else { Scale::Small };
+    let cfg = MachineConfig::scaled();
+    let gcfg = mpu::config::GpuConfig::matched(&cfg);
+    let golden = if artifacts_available(scale) {
+        Some(XlaGolden::new()?)
+    } else {
+        eprintln!("WARNING: artifacts/ missing — run `make artifacts` for the XLA cross-check");
+        None
+    };
+
+    let mut t = Table::new(
+        "End-to-end: simulator vs XLA golden vs GPU baseline",
+        &["workload", "sim==golden", "sim==XLA", "speedup", "energy_red", "near%", "GB/s"],
+    );
+    let mut speedups = Vec::new();
+    let mut energies = Vec::new();
+    let t0 = std::time::Instant::now();
+    for w in Workload::ALL {
+        // L3: MPU simulation.
+        let mut m = Machine::new(&cfg);
+        let p = prepare(w, scale, &mut m)?;
+        let k = compile_for(&p, &cfg)?;
+        m.launch(k, p.launch, &p.params, p.home_fn())?;
+        let stats = m.run()?;
+        let sim_out = m.read_f32s(p.out_addr, p.out_len);
+
+        // Check vs pure-Rust golden.
+        let max_err = sim_out
+            .iter()
+            .zip(&p.golden)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        let rust_ok = max_err <= p.tol.max(f32::EPSILON);
+
+        // Check vs the AOT-compiled JAX/Pallas golden via PJRT.
+        let xla_ok = match &golden {
+            Some(g) => {
+                let v = validate_against_xla(g, &p, scale, &sim_out)?;
+                if v.passed { "yes".to_string() } else { format!("NO ({})", v.mismatches) }
+            }
+            None => "skip".to_string(),
+        };
+
+        // GPU baseline on identical inputs.
+        let gpu = run_workload_gpu_scaled(w, &gcfg, &cfg, scale)?;
+        let speedup = gpu.cycles as f64 / stats.cycles.max(1) as f64;
+        let e_mpu = mpu_energy(&stats, &cfg.energy).total();
+        let e_red = gpu.energy.total() / e_mpu.max(1e-30);
+        speedups.push(speedup);
+        energies.push(e_red);
+
+        t.row(vec![
+            w.name().into(),
+            if rust_ok { "yes".into() } else { format!("NO ({max_err:.1e})") },
+            xla_ok,
+            f2(speedup),
+            f2(e_red),
+            format!("{:.0}%", stats.near_fraction() * 100.0),
+            f2(stats.dram_bytes_per_cycle()),
+        ]);
+    }
+    t.row(vec![
+        "GEOMEAN".into(),
+        String::new(),
+        String::new(),
+        f2(geomean(&speedups)),
+        f2(geomean(&energies)),
+        String::new(),
+        String::new(),
+    ]);
+    t.emit("end_to_end");
+    println!(
+        "\npaper headline: 3.46x speedup, 2.57x energy reduction — measured geomeans above.\nwall time: {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,15 @@
+// Perf driver: simulate the 3 slowest workloads repeatedly.
+use mpu::config::MachineConfig;
+use mpu::coordinator::run_workload;
+use mpu::workloads::Workload;
+fn main() {
+    let cfg = MachineConfig::scaled();
+    let t0 = std::time::Instant::now();
+    let mut cycles = 0u64;
+    for w in [Workload::Nw, Workload::Ttrans, Workload::Kmeans, Workload::Blur] {
+        let r = run_workload(w, &cfg).unwrap();
+        cycles += r.cycles;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("simulated {cycles} cycles in {dt:.2}s = {:.2} Mcycles/s", cycles as f64 / dt / 1e6);
+}

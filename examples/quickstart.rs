@@ -1,0 +1,37 @@
+//! Quickstart: run one workload (AXPY by default) on the MPU simulator,
+//! check the result against the pure-Rust golden, and print the key
+//! §VI metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart [workload]
+//! ```
+
+use mpu::config::MachineConfig;
+use mpu::coordinator::run_workload;
+use mpu::workloads::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "axpy".into());
+    let w = Workload::from_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}` (try: axpy, gemv, blur, ...)"))?;
+    let cfg = MachineConfig::scaled();
+    println!(
+        "machine: {} procs x {} cores x {} subcores, {} banks, {} row-buffers/bank",
+        cfg.processors,
+        cfg.cores_per_proc,
+        cfg.subcores_per_core,
+        cfg.total_banks(),
+        cfg.row_buffers_per_bank
+    );
+    let r = run_workload(w, &cfg)?;
+    println!("\nworkload  : {}", w.name());
+    println!("correct   : {} (max_err {:.2e})", r.correct, r.max_err);
+    println!("cycles    : {}", r.cycles);
+    println!("instrs    : {} ({:.0}% near-bank)", r.stats.instrs_total(), r.stats.near_fraction() * 100.0);
+    println!("DRAM BW   : {:.1} GB/s achieved", r.dram_gbps());
+    println!("row miss  : {:.1}%", r.stats.row_miss_rate() * 100.0);
+    println!("TSV bytes : {}", r.stats.tsv_total_bytes());
+    println!("energy    : {:.3} mJ", r.energy.total() * 1e3);
+    anyhow::ensure!(r.correct, "output mismatch");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+"""AOT lowering: every workload model → HLO *text* in artifacts/.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only axpy,...]
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(workload: str, scale: str) -> str:
+    fn = model.build(workload, scale)
+    shapes = model.input_shapes(workload, scale)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated workload filter")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    only = {w for w in args.only.split(",") if w}
+    for w in model.WORKLOADS:
+        if only and w not in only:
+            continue
+        for scale in model.SCALES:
+            text = lower_one(w, scale)
+            path = out / f"{w}_{scale}.hlo.txt"
+            path.write_text(text)
+            print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,289 @@
+"""Layer-1 Pallas kernels for the twelve workloads.
+
+All kernels run in *interpret* mode (the CPU PJRT plugin cannot execute
+Mosaic custom-calls — see /opt/xla-example/README.md); on a real TPU the
+same BlockSpecs express the HBM->VMEM schedule. Block shapes follow the
+VMEM budget table in DESIGN.md §9: element-wise kernels stream 1024-wide
+strips, GEMV tiles rows at 128 so the (n, 128) A-tile plus x fit in VMEM
+and feed the MXU via `jnp.dot`, stencils operate on whole row bands
+(images here are thin: W×16).
+
+Every kernel is checked against the pure-jnp oracle in `ref.py` by
+`python/tests/test_kernel.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_INTERPRET = True
+
+
+def _strip_grid(n, bs=1024):
+    bs = min(bs, n)
+    assert n % bs == 0, f"size {n} not divisible by strip {bs}"
+    return bs, n // bs
+
+
+def axpy(x, y, alpha):
+    """Strip-mined alpha*x + y."""
+    n = x.shape[0]
+    bs, grid = _strip_grid(n)
+
+    def kernel(a_ref, x_ref, y_ref, o_ref):
+        o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        interpret=_INTERPRET,
+    )(alpha, x, y)
+
+
+def pr(x):
+    """Two-stage reduction: per-strip partial sums in the kernel, final
+    sum in the surrounding jax (mirrors the CUDA block-tree + atomic)."""
+    n = x.shape[0]
+    bs, grid = _strip_grid(n)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = jnp.sum(x_ref[...])[None]
+
+    partial = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((grid,), jnp.float32),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        interpret=_INTERPRET,
+    )(x)
+    return jnp.sum(partial)[None]
+
+
+def gemv(a_t, x, m, n):
+    """Row-tiled y = A@x; A arrives flat column-major -> (n, m) row-major.
+    Each grid step loads an (n, 128) A-tile and the full x into VMEM and
+    issues one MXU-shaped dot."""
+    bs = 128 if m % 128 == 0 else m
+    grid = m // bs
+    a2 = a_t.reshape(n, m)
+
+    def kernel(a_ref, x_ref, o_ref):
+        o_ref[...] = jnp.dot(x_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n, bs), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        interpret=_INTERPRET,
+    )(a2, x)
+
+
+def ttrans(inp, m, n):
+    """Tiled transpose: read an (tile_m, n) row band, write its transpose
+    as an (n, tile_m) column band."""
+    tm = 32 if m % 32 == 0 else m
+    grid = m // tm
+    x2 = inp.reshape(m, n)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...].T
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n, tm), lambda i: (0, i)),
+        interpret=_INTERPRET,
+    )(x2)
+    return out.reshape(-1)
+
+
+def _stencil_call(kernel, img, w, h, extra=None, out_shape=None):
+    """Whole-band stencil helper: thin images (h ≤ 16 rows) fit in one
+    VMEM block, so the halo exchange is internal to the block."""
+    x2 = img.reshape(h, w)
+    out_shape = out_shape or (h, w)
+    ins = [x2] if extra is None else [x2, extra]
+    in_specs = [pl.BlockSpec(x2.shape, lambda: (0, 0))]
+    if extra is not None:
+        in_specs.append(pl.BlockSpec(extra.shape, lambda: tuple(0 for _ in extra.shape)))
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(out_shape, lambda: (0, 0)),
+        interpret=_INTERPRET,
+    )(*ins)
+    return out.reshape(-1)
+
+
+def blur(img, w, h):
+    def kernel(x_ref, o_ref):
+        x = jnp.pad(x_ref[...], 1, mode="edge")
+        s = jnp.zeros_like(x_ref[...])
+        for dy in range(3):
+            for dx in range(3):
+                s = s + x[dy : dy + x_ref.shape[0], dx : dx + x_ref.shape[1]]
+        o_ref[...] = s * jnp.float32(0.111111112)
+
+    return _stencil_call(kernel, img, w, h)
+
+
+def conv(img, wts, w, h):
+    def kernel(x_ref, w_ref, o_ref):
+        x = jnp.pad(x_ref[...], 1, mode="edge")
+        s = jnp.zeros_like(x_ref[...])
+        for dy in range(3):
+            for dx in range(3):
+                s = s + x[dy : dy + x_ref.shape[0], dx : dx + x_ref.shape[1]] * w_ref[dy * 3 + dx]
+        o_ref[...] = s
+
+    return _stencil_call(kernel, img, w, h, extra=wts)
+
+
+def maxp(img, w, h):
+    def kernel(x_ref, o_ref):
+        x = x_ref[...]
+        o_ref[...] = x.reshape(x.shape[0] // 2, 2, x.shape[1] // 2, 2).max(axis=(1, 3))
+
+    return _stencil_call(kernel, img, w, h, out_shape=(h // 2, w // 2))
+
+
+def upsamp(img, w, h):
+    def kernel(x_ref, o_ref):
+        x = x_ref[...]
+        o_ref[...] = jnp.repeat(jnp.repeat(x, 2, axis=0), 2, axis=1)
+
+    return _stencil_call(kernel, img, w, h, out_shape=(h * 2, w * 2))
+
+
+def hist(data, bins=256):
+    """Privatized per-strip histograms via a one-hot matmul (the MXU
+    formulation of binning), summed across strips — mirroring the CUDA
+    shared-memory privatization + global flush."""
+    n = data.shape[0]
+    bs, grid = _strip_grid(n)
+
+    def kernel(x_ref, o_ref):
+        idx = x_ref[...].astype(jnp.int32)
+        o_ref[...] = jax.nn.one_hot(idx, bins, dtype=jnp.float32).sum(axis=0)[None, :]
+
+    partial = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((grid, bins), jnp.float32),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, bins), lambda i: (i, 0)),
+        interpret=_INTERPRET,
+    )(data)
+    return partial.sum(axis=0)
+
+
+def kmeans(points, cents, n, k=8, d=4):
+    """Point-tiled nearest-centroid assignment: a (d, bs) point tile and
+    the full centroid table in VMEM per step."""
+    bs = 1024 if n % 1024 == 0 else n
+    grid = n // bs
+    p2 = points.reshape(d, n)
+    c2 = cents.reshape(k, d)
+
+    def kernel(p_ref, c_ref, o_ref):
+        pts = p_ref[...].T  # (bs, d)
+        dist = ((pts[:, None, :] - c_ref[...][None, :, :]) ** 2).sum(-1)
+        o_ref[...] = jnp.argmin(dist, axis=1).astype(jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((d, bs), lambda i: (0, i)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        interpret=_INTERPRET,
+    )(p2, c2)
+
+
+def knn(lat, lng, qlat=45.0, qlng=90.0):
+    n = lat.shape[0]
+    bs, grid = _strip_grid(n)
+
+    def kernel(a_ref, b_ref, o_ref):
+        da = a_ref[...] - qlat
+        db = b_ref[...] - qlng
+        o_ref[...] = jnp.sqrt(da * da + db * db)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        interpret=_INTERPRET,
+    )(lat, lng)
+
+
+def nw(a, b):
+    """Wavefront DP inside one kernel: the whole score matrix fits in
+    VMEM at these sizes ((n+1)^2 × 4 B ≈ 65 KiB for n=127); the scans are
+    the same as the oracle's."""
+    n = a.shape[0]
+    rs = n + 1
+
+    def kernel(a_ref, b_ref, o_ref):
+        f = ref.nw(a_ref[...], b_ref[...])
+        o_ref[...] = f
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((rs * rs,), jnp.float32),
+        in_specs=[
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rs * rs,), lambda: (0,)),
+        interpret=_INTERPRET,
+    )(a, b)
+
+
+# Static-shape convenience wrappers used by the AOT models.
+WORKLOADS = {
+    "axpy": axpy,
+    "pr": pr,
+    "gemv": gemv,
+    "ttrans": ttrans,
+    "blur": blur,
+    "conv": conv,
+    "maxp": maxp,
+    "upsamp": upsamp,
+    "hist": hist,
+    "kmeans": kmeans,
+    "knn": knn,
+    "nw": nw,
+}
+
+
+def partial_for(name, **static):
+    return functools.partial(WORKLOADS[name], **static)

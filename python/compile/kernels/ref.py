@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for the twelve Table-I workloads.
+
+These are the L2-level reference semantics: every Pallas kernel in this
+package is checked against the matching function here (pytest), and the
+AOT'd models must agree with the Rust simulator's functional output.
+
+All functions take/return *flat* float32 arrays (plus static shape
+arguments) so the Rust PJRT bridge can feed them as rank-1 literals.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def axpy(x, y, alpha):
+    """y' = alpha*x + y. alpha is a (1,) array."""
+    return alpha[0] * x + y
+
+
+def pr(x):
+    """Sum-reduction to a (1,) array."""
+    return jnp.sum(x)[None]
+
+
+def gemv(a_t, x, m, n):
+    """y = A @ x with A given column-major as flat a_t (row-major (n, m))."""
+    return jnp.dot(x, a_t.reshape(n, m), preferred_element_type=jnp.float32)
+
+
+def _clamp_pad(img):
+    """Edge-clamped 1-pixel pad (h, w) -> (h+2, w+2)."""
+    return jnp.pad(img, 1, mode="edge")
+
+
+def ttrans(inp, m, n):
+    """out[j*m + i] = in[i*n + j]."""
+    return inp.reshape(m, n).T.reshape(-1)
+
+
+def blur(img, w, h):
+    """3x3 box blur, clamped edges; img flat (h*w,)."""
+    x = _clamp_pad(img.reshape(h, w))
+    s = jnp.zeros((h, w), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            s = s + x[dy : dy + h, dx : dx + w]
+    return (s * jnp.float32(0.111111112)).reshape(-1)
+
+
+def conv(img, wts, w, h):
+    """3x3 convolution with clamped edges; weights wts flat (9,)."""
+    x = _clamp_pad(img.reshape(h, w))
+    s = jnp.zeros((h, w), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            s = s + x[dy : dy + h, dx : dx + w] * wts[dy * 3 + dx]
+    return s.reshape(-1)
+
+
+def maxp(img, w, h):
+    """2x2 max-pool, stride 2."""
+    x = img.reshape(h, w).reshape(h // 2, 2, w // 2, 2)
+    return x.max(axis=(1, 3)).reshape(-1)
+
+
+def upsamp(img, w, h):
+    """2x nearest-neighbour upsample."""
+    x = img.reshape(h, w)
+    return jnp.repeat(jnp.repeat(x, 2, axis=0), 2, axis=1).reshape(-1)
+
+
+def hist(data, bins=256):
+    """256-bin histogram of floor(data); counts as f32."""
+    idx = data.astype(jnp.int32)
+    return jax.nn.one_hot(idx, bins, dtype=jnp.float32).sum(axis=0)
+
+
+def kmeans(points, cents, n, k=8, d=4):
+    """Nearest-centroid index per point (as f32).
+
+    points: flat column-major (d*n,) -> (d, n); cents: flat (k*d,).
+    """
+    pts = points.reshape(d, n).T  # (n, d)
+    c = cents.reshape(k, d)
+    dist = ((pts[:, None, :] - c[None, :, :]) ** 2).sum(-1)  # (n, k)
+    return jnp.argmin(dist, axis=1).astype(jnp.float32)
+
+
+def knn(lat, lng, qlat=45.0, qlng=90.0):
+    """Euclidean distance to the query point."""
+    return jnp.sqrt((lat - qlat) ** 2 + (lng - qlng) ** 2)
+
+
+def nw(a, b):
+    """Needleman-Wunsch score matrix (flattened (n+1)^2).
+
+    match +1 / mismatch -1 / gap -1, borders -i / -j. Row-by-row scan:
+    within a row, F[i][j] = max(t[j], F[i][j-1] - 1) is a sequential
+    recurrence handled by an inner lax.scan.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    n = a.shape[0]
+    rs = n + 1
+    border = -jnp.arange(rs, dtype=jnp.float32)
+
+    def row_step(prev_row, i):
+        ai = a[i - 1]
+        s = jnp.where(b == ai, jnp.float32(1.0), jnp.float32(-1.0))
+        diag = prev_row[:-1] + s
+        up = prev_row[1:] - 1.0
+        t = jnp.maximum(diag, up)
+        left0 = -i.astype(jnp.float32)
+
+        def cell(carry, tj):
+            v = jnp.maximum(tj, carry - 1.0)
+            return v, v
+
+        _, vals = jax.lax.scan(cell, left0, t)
+        row = jnp.concatenate([left0[None], vals])
+        return row, row
+
+    _, rows = jax.lax.scan(row_step, border, jnp.arange(1, n + 1))
+    f = jnp.concatenate([border[None, :], rows], axis=0)
+    return f.reshape(-1)

@@ -1,0 +1,99 @@
+"""Layer-2 models: one jax function per workload × scale, calling the
+Layer-1 Pallas kernels, with flat-vector signatures matching what the
+Rust runtime feeds from `Prepared::xla_inputs`.
+
+The static shapes here MUST mirror `rust/src/workloads/*` (`Scale::Tiny`
+/ `Scale::Small`); `python/tests/test_model.py` pins them.
+"""
+
+from .kernels import pallas_kernels as K
+
+# (workload, scale) -> dict of static sizes; keep in sync with rust.
+SIZES = {
+    ("axpy", "tiny"): dict(n=4096),
+    ("axpy", "small"): dict(n=65536),
+    ("pr", "tiny"): dict(n=4096),
+    ("pr", "small"): dict(n=65536),
+    ("gemv", "tiny"): dict(m=4096, n=16),
+    ("gemv", "small"): dict(m=8192, n=64),
+    ("ttrans", "tiny"): dict(m=64, n=64),
+    ("ttrans", "small"): dict(m=128, n=128),
+    ("blur", "tiny"): dict(w=4096, h=4),
+    ("blur", "small"): dict(w=4096, h=16),
+    ("conv", "tiny"): dict(w=4096, h=4),
+    ("conv", "small"): dict(w=4096, h=16),
+    ("maxp", "tiny"): dict(w=4096, h=4),
+    ("maxp", "small"): dict(w=4096, h=16),
+    ("upsamp", "tiny"): dict(w=2048, h=4),
+    ("upsamp", "small"): dict(w=2048, h=16),
+    ("hist", "tiny"): dict(n=8192),
+    ("hist", "small"): dict(n=65536),
+    ("kmeans", "tiny"): dict(n=4096, k=8, d=4),
+    ("kmeans", "small"): dict(n=16384, k=8, d=4),
+    ("knn", "tiny"): dict(n=4096),
+    ("knn", "small"): dict(n=32768),
+    ("nw", "tiny"): dict(n=64),
+    ("nw", "small"): dict(n=128),
+}
+
+SCALES = ("tiny", "small")
+WORKLOADS = sorted({w for (w, _) in SIZES})
+
+
+def input_shapes(workload, scale):
+    """Flat input shapes, in the order the Rust side sends them."""
+    s = SIZES[(workload, scale)]
+    if workload == "axpy":
+        return [(s["n"],), (s["n"],), (1,)]
+    if workload == "pr":
+        return [(s["n"],)]
+    if workload == "gemv":
+        return [(s["m"] * s["n"],), (s["n"],)]
+    if workload == "ttrans":
+        return [(s["m"] * s["n"],)]
+    if workload in ("blur", "maxp", "upsamp"):
+        return [(s["w"] * s["h"],)]
+    if workload == "conv":
+        return [(s["w"] * s["h"],), (9,)]
+    if workload == "hist":
+        return [(s["n"],)]
+    if workload == "kmeans":
+        return [(s["d"] * s["n"],), (s["k"] * s["d"],)]
+    if workload == "knn":
+        return [(s["n"],), (s["n"],)]
+    if workload == "nw":
+        return [(s["n"],), (s["n"],)]
+    raise KeyError(workload)
+
+
+def build(workload, scale):
+    """Return fn(*flat_inputs) -> (flat_output,) with static shapes."""
+    s = SIZES[(workload, scale)]
+
+    if workload == "axpy":
+        fn = lambda x, y, alpha: (K.axpy(x, y, alpha),)
+    elif workload == "pr":
+        fn = lambda x: (K.pr(x),)
+    elif workload == "gemv":
+        fn = lambda a, x: (K.gemv(a, x, s["m"], s["n"]),)
+    elif workload == "ttrans":
+        fn = lambda x: (K.ttrans(x, s["m"], s["n"]),)
+    elif workload == "blur":
+        fn = lambda x: (K.blur(x, s["w"], s["h"]),)
+    elif workload == "conv":
+        fn = lambda x, w: (K.conv(x, w, s["w"], s["h"]),)
+    elif workload == "maxp":
+        fn = lambda x: (K.maxp(x, s["w"], s["h"]),)
+    elif workload == "upsamp":
+        fn = lambda x: (K.upsamp(x, s["w"], s["h"]),)
+    elif workload == "hist":
+        fn = lambda x: (K.hist(x),)
+    elif workload == "kmeans":
+        fn = lambda p, c: (K.kmeans(p, c, s["n"], s["k"], s["d"]),)
+    elif workload == "knn":
+        fn = lambda a, b: (K.knn(a, b),)
+    elif workload == "nw":
+        fn = lambda a, b: (K.nw(a, b),)
+    else:
+        raise KeyError(workload)
+    return fn

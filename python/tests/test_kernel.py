@@ -1,0 +1,131 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Deterministic seeded-numpy parameter sweeps stand in for `hypothesis`
+(not available offline): every kernel is exercised across several shapes
+and several seeds per shape.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import pallas_kernels as K
+from compile.kernels import ref
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def f32(a):
+    return np.asarray(a, dtype=np.float32)
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 8192])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_axpy(n, seed):
+    r = rng(seed)
+    x, y = f32(r.uniform(-1, 1, n)), f32(r.uniform(-1, 1, n))
+    alpha = f32([1.5])
+    assert_allclose(K.axpy(x, y, alpha), ref.axpy(x, y, alpha), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 65536])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_pr(n, seed):
+    x = f32(rng(seed).uniform(0, 1, n))
+    assert_allclose(K.pr(x), ref.pr(x), rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,n", [(1024, 16), (4096, 16), (8192, 64)])
+@pytest.mark.parametrize("seed", [0, 5])
+def test_gemv(m, n, seed):
+    r = rng(seed)
+    a = f32(r.uniform(-1, 1, m * n))
+    x = f32(r.uniform(-1, 1, n))
+    assert_allclose(K.gemv(a, x, m, n), ref.gemv(a, x, m, n), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n", [(64, 64), (128, 128), (32, 96)])
+def test_ttrans(m, n):
+    x = f32(rng(7).uniform(-1, 1, m * n))
+    assert_allclose(K.ttrans(x, m, n), ref.ttrans(x, m, n))
+
+
+@pytest.mark.parametrize("w,h", [(64, 4), (4096, 4), (256, 16)])
+@pytest.mark.parametrize("seed", [0, 9])
+def test_blur(w, h, seed):
+    img = f32(rng(seed).uniform(0, 1, w * h))
+    assert_allclose(K.blur(img, w, h), ref.blur(img, w, h), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("w,h", [(64, 4), (4096, 4)])
+def test_conv(w, h):
+    r = rng(11)
+    img = f32(r.uniform(0, 1, w * h))
+    wts = f32(r.uniform(-0.5, 0.5, 9))
+    assert_allclose(K.conv(img, wts, w, h), ref.conv(img, wts, w, h), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("w,h", [(64, 4), (4096, 4), (128, 8)])
+def test_maxp(w, h):
+    img = f32(rng(13).uniform(-1, 1, w * h))
+    assert_allclose(K.maxp(img, w, h), ref.maxp(img, w, h))
+
+
+@pytest.mark.parametrize("w,h", [(64, 4), (2048, 4)])
+def test_upsamp(w, h):
+    img = f32(rng(17).uniform(0, 1, w * h))
+    assert_allclose(K.upsamp(img, w, h), ref.upsamp(img, w, h))
+
+
+@pytest.mark.parametrize("n", [1024, 8192])
+@pytest.mark.parametrize("seed", [0, 19])
+def test_hist(n, seed):
+    data = f32(rng(seed).integers(0, 256, n))
+    got = K.hist(data)
+    assert_allclose(got, ref.hist(data))
+    assert float(np.sum(np.asarray(got))) == n  # counts conserve mass
+
+
+@pytest.mark.parametrize("n", [1024, 4096])
+@pytest.mark.parametrize("seed", [0, 23])
+def test_kmeans(n, seed):
+    r = rng(seed)
+    pts = f32(r.uniform(-2, 2, 4 * n))
+    cents = f32(r.uniform(-2, 2, 8 * 4))
+    assert_allclose(K.kmeans(pts, cents, n), ref.kmeans(pts, cents, n))
+
+
+@pytest.mark.parametrize("n", [1024, 4096])
+def test_knn(n):
+    r = rng(29)
+    lat = f32(r.uniform(0, 90, n))
+    lng = f32(r.uniform(0, 180, n))
+    assert_allclose(K.knn(lat, lng), ref.knn(lat, lng), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [16, 64])
+@pytest.mark.parametrize("seed", [0, 31])
+def test_nw(n, seed):
+    r = rng(seed)
+    a = f32(r.integers(0, 4, n))
+    b = f32(r.integers(0, 4, n))
+    assert_allclose(K.nw(a, b), ref.nw(a, b))
+
+
+def test_nw_oracle_against_python_dp():
+    """Cross-check the jnp scan formulation against a plain-python DP."""
+    r = rng(37)
+    n = 24
+    a = f32(r.integers(0, 4, n))
+    b = f32(r.integers(0, 4, n))
+    rs = n + 1
+    f = np.zeros((rs, rs), dtype=np.float32)
+    f[:, 0] = -np.arange(rs)
+    f[0, :] = -np.arange(rs)
+    for i in range(1, rs):
+        for j in range(1, rs):
+            s = 1.0 if a[i - 1] == b[j - 1] else -1.0
+            f[i, j] = max(f[i - 1, j - 1] + s, f[i - 1, j] - 1.0, f[i, j - 1] - 1.0)
+    assert_allclose(np.asarray(ref.nw(a, b)).reshape(rs, rs), f)

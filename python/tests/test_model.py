@@ -1,0 +1,60 @@
+"""L2 model tests: static shapes stay in sync with the Rust workloads,
+every model traces/loweres, and HLO text is well-formed."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_sizes_cover_all_workload_scale_pairs():
+    assert set(model.SIZES) == {(w, s) for w in model.WORKLOADS for s in model.SCALES}
+    assert len(model.WORKLOADS) == 12
+
+
+# Pin the sizes to the Rust side (rust/src/workloads/*.rs).
+RUST_SIZES = {
+    ("axpy", "tiny"): dict(n=4096),
+    ("gemv", "small"): dict(m=8192, n=64),
+    ("blur", "small"): dict(w=4096, h=16),
+    ("hist", "tiny"): dict(n=8192),
+    ("kmeans", "small"): dict(n=16384, k=8, d=4),
+    ("nw", "small"): dict(n=128),
+    ("upsamp", "tiny"): dict(w=2048, h=4),
+}
+
+
+@pytest.mark.parametrize("key", sorted(RUST_SIZES))
+def test_sizes_match_rust(key):
+    assert model.SIZES[key] == RUST_SIZES[key]
+
+
+@pytest.mark.parametrize("workload", model.WORKLOADS)
+def test_models_run_and_output_is_flat(workload):
+    fn = model.build(workload, "tiny")
+    shapes = model.input_shapes(workload, "tiny")
+    rng = np.random.default_rng(1)
+    args = [jnp.asarray(rng.uniform(0, 1, s).astype(np.float32)) for s in shapes]
+    out = fn(*args)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].ndim == 1
+    assert out[0].dtype == jnp.float32
+
+
+@pytest.mark.parametrize("workload", ["axpy", "gemv", "nw"])
+def test_hlo_text_emits(workload):
+    text = aot.lower_one(workload, "tiny")
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: the root is a tuple.
+    assert "tuple(" in text or ") tuple" in text
+
+
+def test_models_are_jittable():
+    for workload in ["hist", "kmeans", "maxp"]:
+        fn = model.build(workload, "tiny")
+        shapes = model.input_shapes(workload, "tiny")
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+        jax.jit(fn).lower(*specs)  # must not raise

@@ -1,0 +1,54 @@
+//! Fig. 10 — MPU energy breakdown, aggregated over the suite.
+//! Paper: ALU 39.82%, OPC+RF 15.47%, DRAM 16.42%, TSV 16.79%,
+//! Network 4.43% (compute + data access + movement = 92.94%).
+
+use mpu::config::MachineConfig;
+use mpu::coordinator::report::{f1pct, Table};
+use mpu::coordinator::run_workload;
+use mpu::energy::EnergyBreakdown;
+use mpu::workloads::Workload;
+
+fn main() {
+    let cfg = MachineConfig::scaled();
+    let mut agg = EnergyBreakdown::default();
+    let mut per = Table::new(
+        "Fig. 10 — per-workload energy shares",
+        &["workload", "ALU", "OPC+RF", "DRAM", "SMEM", "TSV", "Network", "Frontend", "LSU-Ext"],
+    );
+    for w in Workload::ALL {
+        let r = run_workload(w, &cfg).expect("run");
+        let e = r.energy;
+        agg.alu += e.alu;
+        agg.frontend += e.frontend;
+        agg.rf_opc += e.rf_opc;
+        agg.dram += e.dram;
+        agg.smem += e.smem;
+        agg.tsv += e.tsv;
+        agg.network += e.network;
+        agg.lsu_ext += e.lsu_ext;
+        let tot = e.total();
+        per.row(vec![
+            w.name().into(),
+            f1pct(e.alu / tot),
+            f1pct(e.rf_opc / tot),
+            f1pct(e.dram / tot),
+            f1pct(e.smem / tot),
+            f1pct(e.tsv / tot),
+            f1pct(e.network / tot),
+            f1pct(e.frontend / tot),
+            f1pct(e.lsu_ext / tot),
+        ]);
+    }
+    per.emit("fig10_breakdown");
+
+    let mut t = Table::new(
+        "Fig. 10 — aggregate breakdown (paper: ALU 39.8%, OPC+RF 15.5%, DRAM 16.4%, TSV 16.8%, Network 4.4%)",
+        &["category", "share"],
+    );
+    for (name, share) in agg.shares() {
+        if share > 0.0 {
+            t.row(vec![name.into(), f1pct(share)]);
+        }
+    }
+    t.emit("fig10_aggregate");
+}

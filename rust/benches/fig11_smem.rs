@@ -1,0 +1,46 @@
+//! Fig. 11 — near-bank vs far-bank shared memory.
+//! Paper: mean 1.48× speedup and 1.89× TSV-traffic improvement on
+//! smem-using workloads; non-smem workloads identical.
+
+use mpu::config::{MachineConfig, SmemLocation};
+use mpu::coordinator::report::{f2, Table};
+use mpu::coordinator::{geomean, run_workload};
+use mpu::workloads::Workload;
+
+fn main() {
+    let near = MachineConfig::scaled();
+    let mut far = near.clone();
+    far.smem_location = SmemLocation::FarBank;
+
+    let mut t = Table::new(
+        "Fig. 11 — near vs far smem (paper: 1.48x speedup, 1.89x TSV traffic improvement)",
+        &["workload", "smem?", "speedup", "tsv_improvement"],
+    );
+    let mut sp = Vec::new();
+    let mut ti = Vec::new();
+    for w in Workload::ALL {
+        let rn = run_workload(w, &near).expect("near");
+        let rf = run_workload(w, &far).expect("far");
+        assert!(rn.correct && rf.correct, "{w:?} incorrect");
+        let s = rf.cycles as f64 / rn.cycles.max(1) as f64;
+        let tr = rf.stats.tsv_total_bytes() as f64 / rn.stats.tsv_total_bytes().max(1) as f64;
+        if w.uses_smem() {
+            sp.push(s);
+            ti.push(tr);
+        }
+        t.row(vec![
+            w.name().into(),
+            if w.uses_smem() { "yes" } else { "no" }.into(),
+            f2(s),
+            f2(tr),
+        ]);
+    }
+    t.row(vec![
+        "GEOMEAN(smem)".into(),
+        String::new(),
+        f2(geomean(&sp)),
+        f2(geomean(&ti)),
+    ]);
+    t.emit("fig11_smem");
+    println!("(shape check: smem workloads gain, non-smem workloads ~1.0)");
+}

@@ -1,0 +1,62 @@
+//! Fig. 12 — multiple activated row-buffers (MASA).
+//! Paper: speedup 1.10× (2 buffers) / 1.25× (4); row-buffer miss rate
+//! 15.60% → 9.20% → 5.45%. `--no-interleave` ablates the subarray
+//! row-interleaving (DESIGN.md §8).
+
+use mpu::config::MachineConfig;
+use mpu::coordinator::report::{f1pct, f2, Table};
+use mpu::coordinator::{geomean, run_workload};
+use mpu::workloads::Workload;
+
+fn main() {
+    let interleave = !std::env::args().any(|a| a == "--no-interleave");
+    let mut base = MachineConfig::scaled();
+    base.subarray_interleave = interleave;
+
+    let mut per = Table::new(
+        "Fig. 12 — per-workload speedup vs 1 row-buffer",
+        &["workload", "x2", "x4", "miss@1", "miss@2", "miss@4"],
+    );
+    let mut sp2 = Vec::new();
+    let mut sp4 = Vec::new();
+    let mut m = [Vec::new(), Vec::new(), Vec::new()];
+    for w in Workload::ALL {
+        let mut cyc = [0u64; 3];
+        let mut miss = [0f64; 3];
+        for (i, bufs) in [1usize, 2, 4].iter().enumerate() {
+            let mut cfg = base.clone();
+            cfg.row_buffers_per_bank = *bufs;
+            let r = run_workload(w, &cfg).expect("run");
+            assert!(r.correct, "{w:?} incorrect at {bufs} buffers");
+            cyc[i] = r.cycles;
+            miss[i] = r.stats.row_miss_rate();
+            m[i].push(miss[i]);
+        }
+        let s2 = cyc[0] as f64 / cyc[1] as f64;
+        let s4 = cyc[0] as f64 / cyc[2] as f64;
+        sp2.push(s2);
+        sp4.push(s4);
+        per.row(vec![
+            w.name().into(),
+            f2(s2),
+            f2(s4),
+            f1pct(miss[0]),
+            f1pct(miss[1]),
+            f1pct(miss[2]),
+        ]);
+    }
+    let avg = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+    per.row(vec![
+        "MEAN".into(),
+        f2(geomean(&sp2)),
+        f2(geomean(&sp4)),
+        f1pct(avg(&m[0])),
+        f1pct(avg(&m[1])),
+        f1pct(avg(&m[2])),
+    ]);
+    per.emit(if interleave { "fig12_rowbuf" } else { "fig12_rowbuf_nointerleave" });
+    println!(
+        "(paper: 1.10x/1.25x speedup, miss 15.6%->9.2%->5.45%; interleave={})",
+        interleave
+    );
+}

@@ -1,0 +1,36 @@
+//! Fig. 13 — MPU vs the processing-on-base-logic-die (PonB) baseline.
+//! Paper: mean 1.46× speedup from near-bank instruction offloading.
+
+use mpu::config::{MachineConfig, PipelineMode};
+use mpu::coordinator::report::{f2, Table};
+use mpu::coordinator::{geomean, run_workload};
+use mpu::workloads::Workload;
+
+fn main() {
+    let hybrid = MachineConfig::scaled();
+    let mut ponb = hybrid.clone();
+    ponb.pipeline_mode = PipelineMode::PonB;
+
+    let mut t = Table::new(
+        "Fig. 13 — MPU (hybrid) vs PonB (paper mean 1.46x)",
+        &["workload", "mpu_cycles", "ponb_cycles", "speedup", "near_frac"],
+    );
+    let mut sp = Vec::new();
+    for w in Workload::ALL {
+        let h = run_workload(w, &hybrid).expect("hybrid");
+        let p = run_workload(w, &ponb).expect("ponb");
+        assert!(h.correct && p.correct, "{w:?} incorrect");
+        let s = p.cycles as f64 / h.cycles.max(1) as f64;
+        sp.push(s);
+        t.row(vec![
+            w.name().into(),
+            h.cycles.to_string(),
+            p.cycles.to_string(),
+            f2(s),
+            format!("{:.2}", h.stats.near_fraction()),
+        ]);
+    }
+    t.row(vec!["GEOMEAN".into(), String::new(), String::new(), f2(geomean(&sp)), String::new()]);
+    t.emit("fig13_ponb");
+    println!("(paper: mean 1.46x; shape check: offloading beats base-die-only)");
+}

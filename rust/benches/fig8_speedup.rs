@@ -1,0 +1,47 @@
+//! Fig. 8 — MPU vs GPU: (1) per-workload speedup (paper mean 3.46×);
+//! (2) speedup vs memory intensity (B/instr) correlation.
+
+use mpu::config::MachineConfig;
+use mpu::coordinator::report::{f2, Table};
+use mpu::coordinator::{geomean, run_pair};
+use mpu::workloads::{Scale, Workload};
+
+fn main() {
+    let cfg = MachineConfig::scaled();
+    let mut t = Table::new(
+        "Fig. 8(1) — execution time and speedup vs GPU (paper mean 3.46x)",
+        &["workload", "mpu_cycles", "gpu_cycles", "speedup", "mpu_GB/s", "gpu_GB/s"],
+    );
+    let mut t2 = Table::new(
+        "Fig. 8(2) — memory intensity vs speedup",
+        &["workload", "B/instr", "speedup"],
+    );
+    let mut speedups = Vec::new();
+    for w in Workload::ALL {
+        let pair = run_pair(w, &cfg, Scale::Small).expect("pair");
+        assert!(pair.mpu.correct, "{w:?} wrong on MPU");
+        assert!(pair.gpu.correct, "{w:?} wrong on GPU");
+        let s = pair.speedup();
+        speedups.push(s);
+        t.row(vec![
+            w.name().into(),
+            pair.mpu.cycles.to_string(),
+            pair.gpu.cycles.to_string(),
+            f2(s),
+            f2(pair.mpu.dram_gbps()),
+            f2(pair.gpu.dram_gbps()),
+        ]);
+        t2.row(vec![w.name().into(), f2(pair.mpu.stats.memory_intensity()), f2(s)]);
+    }
+    t.row(vec![
+        "GEOMEAN".into(),
+        String::new(),
+        String::new(),
+        f2(geomean(&speedups)),
+        String::new(),
+        String::new(),
+    ]);
+    t.emit("fig8_speedup");
+    t2.emit("fig8_intensity");
+    println!("(paper: mean 3.46x; shape check: MPU wins, streaming kernels win most)");
+}

@@ -1,0 +1,29 @@
+//! Fig. 9 — energy and energy reduction vs GPU (paper mean 2.57×).
+
+use mpu::config::MachineConfig;
+use mpu::coordinator::report::{f2, Table};
+use mpu::coordinator::{geomean, run_pair};
+use mpu::workloads::{Scale, Workload};
+
+fn main() {
+    let cfg = MachineConfig::scaled();
+    let mut t = Table::new(
+        "Fig. 9 — energy reduction vs GPU (paper mean 2.57x)",
+        &["workload", "mpu_mJ", "gpu_mJ", "reduction"],
+    );
+    let mut reds = Vec::new();
+    for w in Workload::ALL {
+        let pair = run_pair(w, &cfg, Scale::Small).expect("pair");
+        let r = pair.energy_reduction();
+        reds.push(r);
+        t.row(vec![
+            w.name().into(),
+            format!("{:.4}", pair.mpu.energy.total() * 1e3),
+            format!("{:.4}", pair.gpu.energy.total() * 1e3),
+            f2(r),
+        ]);
+    }
+    t.row(vec!["GEOMEAN".into(), String::new(), String::new(), f2(geomean(&reds))]);
+    t.emit("fig9_energy");
+    println!("(paper: mean 2.57x; shape check: reduction roughly tracks speedup)");
+}

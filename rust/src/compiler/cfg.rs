@@ -1,0 +1,172 @@
+//! Control-flow graph over assembled instructions.
+
+use crate::isa::{Instr, Op};
+
+/// A basic block: instruction index range `[start, end)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Block {
+    pub start: usize,
+    pub end: usize,
+    pub succs: Vec<usize>,
+    pub preds: Vec<usize>,
+}
+
+/// CFG: basic blocks plus instruction→block map.
+#[derive(Clone, Debug)]
+pub struct Cfg {
+    pub blocks: Vec<Block>,
+    /// Block id of each instruction.
+    pub block_of: Vec<usize>,
+}
+
+impl Cfg {
+    /// Build the CFG. Leaders: instruction 0, every branch target, every
+    /// instruction following a branch or exit.
+    pub fn build(instrs: &[Instr]) -> Cfg {
+        let n = instrs.len();
+        let mut leader = vec![false; n];
+        if n > 0 {
+            leader[0] = true;
+        }
+        for (i, ins) in instrs.iter().enumerate() {
+            if let Some(t) = ins.target {
+                if t < n {
+                    leader[t] = true;
+                }
+                if i + 1 < n {
+                    leader[i + 1] = true;
+                }
+            }
+            if ins.op == Op::Exit && i + 1 < n {
+                leader[i + 1] = true;
+            }
+        }
+
+        let mut blocks: Vec<Block> = Vec::new();
+        let mut block_of = vec![0usize; n];
+        let mut start = 0usize;
+        for i in 0..n {
+            if i > start && leader[i] {
+                blocks.push(Block { start, end: i, succs: vec![], preds: vec![] });
+                start = i;
+            }
+        }
+        if n > 0 {
+            blocks.push(Block { start, end: n, succs: vec![], preds: vec![] });
+        }
+        for (b, blk) in blocks.iter().enumerate() {
+            for i in blk.start..blk.end {
+                block_of[i] = b;
+            }
+        }
+
+        // Edges.
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for (b, blk) in blocks.iter().enumerate() {
+            if blk.end == blk.start {
+                continue;
+            }
+            let last = &instrs[blk.end - 1];
+            match last.op {
+                Op::Exit => {}
+                Op::Bra => {
+                    if let Some(t) = last.target {
+                        if t < n {
+                            edges.push((b, block_of[t]));
+                        }
+                    }
+                    // Conditional branch falls through.
+                    if last.guard.is_some() && blk.end < n {
+                        edges.push((b, block_of[blk.end]));
+                    }
+                }
+                _ => {
+                    if blk.end < n {
+                        edges.push((b, block_of[blk.end]));
+                    }
+                }
+            }
+        }
+        for (from, to) in edges {
+            if !blocks[from].succs.contains(&to) {
+                blocks[from].succs.push(to);
+            }
+            if !blocks[to].preds.contains(&from) {
+                blocks[to].preds.push(from);
+            }
+        }
+
+        Cfg { blocks, block_of }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    #[test]
+    fn straight_line_is_one_block() {
+        let instrs = assemble("mov.u32 %r1, 1\nadd.u32 %r2, %r1, 2\nexit").unwrap();
+        let cfg = Cfg::build(&instrs);
+        assert_eq!(cfg.num_blocks(), 1);
+        assert!(cfg.blocks[0].succs.is_empty());
+    }
+
+    #[test]
+    fn loop_makes_back_edge() {
+        let instrs = assemble(
+            r#"
+            mov.u32 %r1, 0
+        LOOP:
+            add.u32 %r1, %r1, 1
+            setp.lt.s32 %p1, %r1, %r2
+            @%p1 bra LOOP
+            exit
+            "#,
+        )
+        .unwrap();
+        let cfg = Cfg::build(&instrs);
+        // Blocks: [mov], [add,setp,bra], [exit]
+        assert_eq!(cfg.num_blocks(), 3);
+        let loop_blk = cfg.block_of[1];
+        assert!(cfg.blocks[loop_blk].succs.contains(&loop_blk), "self loop edge");
+        assert!(cfg.blocks[loop_blk].succs.contains(&cfg.block_of[4]), "fallthrough edge");
+    }
+
+    #[test]
+    fn diamond_has_two_paths() {
+        let instrs = assemble(
+            r#"
+            setp.eq.s32 %p1, %r1, 0
+            @%p1 bra ELSE
+            mov.u32 %r2, 1
+            bra JOIN
+        ELSE:
+            mov.u32 %r2, 2
+        JOIN:
+            add.u32 %r3, %r2, 1
+            exit
+            "#,
+        )
+        .unwrap();
+        let cfg = Cfg::build(&instrs);
+        assert_eq!(cfg.num_blocks(), 4);
+        let entry = cfg.block_of[0];
+        assert_eq!(cfg.blocks[entry].succs.len(), 2);
+        let join = cfg.block_of[5];
+        assert_eq!(cfg.blocks[join].preds.len(), 2);
+    }
+
+    #[test]
+    fn unconditional_branch_has_single_succ() {
+        let instrs = assemble("bra END\nmov.u32 %r1, 1\nEND:\nexit").unwrap();
+        let cfg = Cfg::build(&instrs);
+        let entry = cfg.block_of[0];
+        assert_eq!(cfg.blocks[entry].succs.len(), 1);
+    }
+}

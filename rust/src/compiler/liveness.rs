@@ -1,0 +1,238 @@
+//! Register liveness analysis (backing the graph-coloring allocator,
+//! §V-B "register allocation stage").
+//!
+//! Standard backward dataflow over the CFG. One SIMT-specific rule:
+//! a *guarded* instruction writes only its active lanes, so its
+//! destination does **not** kill the register — inactive lanes keep the
+//! old value, which therefore stays live across the write.
+
+use super::cfg::Cfg;
+use crate::isa::{Instr, Reg};
+use std::collections::{HashMap, HashSet};
+
+/// Liveness result: live-out set per instruction.
+#[derive(Clone, Debug)]
+pub struct Liveness {
+    /// Registers live immediately after each instruction.
+    pub live_out: Vec<HashSet<Reg>>,
+    /// Registers live immediately before each instruction.
+    pub live_in: Vec<HashSet<Reg>>,
+}
+
+impl Liveness {
+    pub fn compute(instrs: &[Instr], cfg: &Cfg) -> Liveness {
+        let n = instrs.len();
+        let nb = cfg.num_blocks();
+        // Block-level use/def.
+        let mut use_b: Vec<HashSet<Reg>> = vec![HashSet::new(); nb];
+        let mut def_b: Vec<HashSet<Reg>> = vec![HashSet::new(); nb];
+        for (b, blk) in cfg.blocks.iter().enumerate() {
+            for i in blk.start..blk.end {
+                for r in instrs[i].reads() {
+                    if !def_b[b].contains(&r) {
+                        use_b[b].insert(r);
+                    }
+                }
+                // Guarded writes don't kill (partial lane write).
+                if instrs[i].guard.is_some() {
+                    for r in instrs[i].writes() {
+                        if !def_b[b].contains(&r) {
+                            use_b[b].insert(r);
+                        }
+                    }
+                } else {
+                    for r in instrs[i].writes() {
+                        def_b[b].insert(r);
+                    }
+                }
+            }
+        }
+
+        // Block-level fixpoint: in[b] = use[b] ∪ (out[b] − def[b]);
+        // out[b] = ⋃ in[succ].
+        let mut in_b: Vec<HashSet<Reg>> = vec![HashSet::new(); nb];
+        let mut out_b: Vec<HashSet<Reg>> = vec![HashSet::new(); nb];
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for b in (0..nb).rev() {
+                let mut out: HashSet<Reg> = HashSet::new();
+                for &s in &cfg.blocks[b].succs {
+                    out.extend(in_b[s].iter().copied());
+                }
+                let mut inn = use_b[b].clone();
+                for r in &out {
+                    if !def_b[b].contains(r) {
+                        inn.insert(*r);
+                    }
+                }
+                if inn != in_b[b] || out != out_b[b] {
+                    changed = true;
+                    in_b[b] = inn;
+                    out_b[b] = out;
+                }
+            }
+        }
+
+        // Per-instruction backward pass within each block.
+        let mut live_out = vec![HashSet::new(); n];
+        let mut live_in = vec![HashSet::new(); n];
+        for (b, blk) in cfg.blocks.iter().enumerate() {
+            let mut live = out_b[b].clone();
+            for i in (blk.start..blk.end).rev() {
+                live_out[i] = live.clone();
+                if instrs[i].guard.is_none() {
+                    for r in instrs[i].writes() {
+                        live.remove(&r);
+                    }
+                }
+                for r in instrs[i].reads() {
+                    live.insert(r);
+                }
+                if instrs[i].guard.is_some() {
+                    for r in instrs[i].writes() {
+                        live.insert(r);
+                    }
+                }
+                live_in[i] = live.clone();
+            }
+        }
+
+        Liveness { live_out, live_in }
+    }
+
+    /// Count of maximum simultaneous live registers (register pressure).
+    pub fn max_pressure(&self) -> usize {
+        self.live_in.iter().map(|s| s.len()).max().unwrap_or(0)
+    }
+}
+
+/// Build the interference graph: a def interferes with everything live
+/// across it (same class only — classes have separate files).
+pub fn interference(instrs: &[Instr], live: &Liveness) -> HashMap<Reg, HashSet<Reg>> {
+    let mut g: HashMap<Reg, HashSet<Reg>> = HashMap::new();
+    let touch = |g: &mut HashMap<Reg, HashSet<Reg>>, r: Reg| {
+        g.entry(r).or_default();
+    };
+    for (i, ins) in instrs.iter().enumerate() {
+        for r in ins.reads() {
+            touch(&mut g, r);
+        }
+        for d in ins.writes() {
+            touch(&mut g, d);
+            for o in &live.live_out[i] {
+                if *o != d && o.class == d.class {
+                    g.entry(d).or_default().insert(*o);
+                    g.entry(*o).or_default().insert(d);
+                }
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    fn liveness_of(src: &str) -> (Vec<Instr>, Liveness) {
+        let instrs = assemble(src).unwrap();
+        let cfg = Cfg::build(&instrs);
+        let l = Liveness::compute(&instrs, &cfg);
+        (instrs, l)
+    }
+
+    #[test]
+    fn straight_line_liveness() {
+        let (_, l) = liveness_of(
+            r#"
+            mov.u32 %r1, 1
+            add.u32 %r2, %r1, 2
+            add.u32 %r3, %r2, 3
+            exit
+            "#,
+        );
+        assert!(l.live_out[0].contains(&Reg::r(1)));
+        assert!(!l.live_out[1].contains(&Reg::r(1)), "r1 dead after last use");
+        assert!(l.live_out[1].contains(&Reg::r(2)));
+        assert!(!l.live_out[2].contains(&Reg::r(3)), "r3 never read");
+    }
+
+    #[test]
+    fn loop_keeps_induction_var_live() {
+        let (instrs, l) = liveness_of(
+            r#"
+            mov.u32 %r1, 0
+        LOOP:
+            add.u32 %r1, %r1, 1
+            setp.lt.s32 %p1, %r1, %r2
+            @%p1 bra LOOP
+            exit
+            "#,
+        );
+        // %r1 is live around the back edge.
+        let bra = instrs.iter().position(|i| i.is_branch()).unwrap();
+        assert!(l.live_out[bra].contains(&Reg::r(1)));
+        // %r2 (loop bound) is live throughout the loop.
+        assert!(l.live_in[1].contains(&Reg::r(2)));
+    }
+
+    #[test]
+    fn guarded_write_does_not_kill() {
+        let (_, l) = liveness_of(
+            r#"
+            mov.u32 %r1, 5
+            setp.lt.s32 %p1, %r2, 0
+            @%p1 mov.u32 %r1, 9
+            st.global.u32 [%r3+0], %r1
+            exit
+            "#,
+        );
+        // The guarded mov at pc=2 must not kill %r1: inactive lanes still
+        // read the pc=0 value at pc=3.
+        assert!(l.live_in[2].contains(&Reg::r(1)), "r1 live into guarded redefinition");
+    }
+
+    #[test]
+    fn interference_same_class_only() {
+        let (instrs, l) = liveness_of(
+            r#"
+            mov.u32 %r1, 1
+            mov.f32 %f1, 2.0
+            add.u32 %r2, %r1, 1
+            add.f32 %f2, %f1, %f1
+            st.global.u32 [%r2+0], %r1
+            st.global.f32 [%r2+4], %f2
+            exit
+            "#,
+        );
+        let g = interference(&instrs, &l);
+        // f1 and r1 never interfere (different classes).
+        assert!(!g[&Reg::f(1)].contains(&Reg::r(1)));
+        // r1 and r2 are simultaneously live (both read at pc=4).
+        assert!(g[&Reg::r(2)].contains(&Reg::r(1)));
+    }
+
+    #[test]
+    fn diamond_union_of_paths() {
+        let (_, l) = liveness_of(
+            r#"
+            setp.eq.s32 %p1, %r1, 0
+            @%p1 bra ELSE
+            mov.u32 %r2, 1
+            bra JOIN
+        ELSE:
+            mov.u32 %r2, 2
+        JOIN:
+            st.global.u32 [%r3+0], %r2
+            exit
+            "#,
+        );
+        // %r2 defined on both paths, used at join: live out of both defs.
+        assert!(l.live_out[2].contains(&Reg::r(2)));
+        assert!(l.live_out[4].contains(&Reg::r(2)));
+        // %r3 live from entry (used only at join).
+        assert!(l.live_in[0].contains(&Reg::r(3)));
+    }
+}

@@ -1,0 +1,381 @@
+//! Algorithm 1: register & instruction location annotation (§V-B).
+//!
+//! Decouples the two classes of dependency chains the paper identifies:
+//! *value* chains (computation on data loaded from DRAM → near-bank) and
+//! *address/control* chains (DRAM address arithmetic, loop variables,
+//! predicates → far-bank). Initial seeds come from memory-instruction
+//! operand roles and from the LSU design (§IV-B2); the rest is an
+//! iterative fixpoint propagation from destination registers to source
+//! registers. A register that ends up needed in both places is `B`.
+
+use super::LocStats;
+use crate::isa::instr::Loc;
+use crate::isa::{Instr, Op, Reg, RegClass, Space};
+use std::collections::HashMap;
+
+/// Merge a location into a register's current annotation: U absorbs
+/// anything; N vs F conflict becomes B.
+fn merge(cur: Loc, new: Loc) -> Loc {
+    match (cur, new) {
+        (c, Loc::U) => c,
+        (Loc::U, n) => n,
+        (c, n) if c == n => c,
+        (Loc::B, _) | (_, Loc::B) => Loc::B,
+        _ => Loc::B,
+    }
+}
+
+/// Run Algorithm 1 with the near-bank shared-memory design (the paper's
+/// default). Returns annotated instructions, the final virtual
+/// register→location table, and the Fig.-14 breakdown.
+pub fn annotate(
+    instrs: &[Instr],
+    params: &[Reg],
+) -> (Vec<Instr>, HashMap<Reg, Loc>, LocStats) {
+    annotate_with(instrs, params, true)
+}
+
+/// Run Algorithm 1. `smem_near` selects the shared-memory placement the
+/// annotation assumes: near-bank (the paper) seeds ld/st.shared operands
+/// `N`; the Fig.-11 far-bank baseline seeds them `F`.
+pub fn annotate_with(
+    instrs: &[Instr],
+    params: &[Reg],
+    smem_near: bool,
+) -> (Vec<Instr>, HashMap<Reg, Loc>, LocStats) {
+    let mut l: HashMap<Reg, Loc> = HashMap::new();
+    let mut regs: Vec<Reg> = Vec::new();
+    let seen = |r: Reg, regs: &mut Vec<Reg>| {
+        if !regs.contains(&r) {
+            regs.push(r);
+        }
+    };
+
+    for p in params {
+        seen(*p, &mut regs);
+    }
+    for i in instrs {
+        for r in i.src_regs().into_iter().chain(i.dst_regs()).chain(i.addr_reg()) {
+            seen(r, &mut regs);
+        }
+    }
+
+    let set = |l: &mut HashMap<Reg, Loc>, r: Reg, loc: Loc| {
+        let cur = l.get(&r).copied().unwrap_or(Loc::U);
+        l.insert(r, merge(cur, loc));
+    };
+
+    // ---- Initial annotation (Algorithm 1, first loop) ----
+    for i in instrs {
+        match (i.op, i.space) {
+            // Control: branch guards (and all predicates, set below) are
+            // far-bank — the front pipeline lives on the base logic die.
+            (Op::Bra, _) => {
+                for r in i.src_regs() {
+                    set(&mut l, r, Loc::F);
+                }
+            }
+            (Op::Ld, Some(Space::Global)) => {
+                // Address register far-bank (LSU does range check +
+                // coalescing); loaded value near-bank (§IV-B2: DRAM data
+                // is written to the near-bank RF first).
+                if let Some(a) = i.addr_reg() {
+                    set(&mut l, a, Loc::F);
+                }
+                for d in i.dst_regs() {
+                    set(&mut l, d, Loc::N);
+                }
+            }
+            (Op::St, Some(Space::Global)) | (Op::Red, Some(Space::Global)) => {
+                // Value source near-bank; address register far-bank.
+                for s in i.src_regs() {
+                    if s.class != RegClass::P {
+                        set(&mut l, s, Loc::N);
+                    }
+                }
+                if let Some(a) = i.addr_reg() {
+                    set(&mut l, a, Loc::F);
+                }
+            }
+            (Op::Ld, Some(Space::Shared)) | (Op::St, Some(Space::Shared)) | (Op::Red, Some(Space::Shared)) => {
+                // Near-bank shared memory (§IV-C): both address and value
+                // registers are near-bank. (Far-bank smem baseline: F.)
+                let loc = if smem_near { Loc::N } else { Loc::F };
+                if let Some(a) = i.addr_reg() {
+                    set(&mut l, a, loc);
+                }
+                for r in i.src_regs().into_iter().chain(i.dst_regs()) {
+                    if r.class != RegClass::P {
+                        set(&mut l, r, loc);
+                    }
+                }
+            }
+            _ => {}
+        }
+        // Predicate registers are control-related → far-bank.
+        for r in i.src_regs().into_iter().chain(i.dst_regs()) {
+            if r.class == RegClass::P {
+                set(&mut l, r, Loc::F);
+            }
+        }
+    }
+
+    // ---- Fixpoint propagation (Algorithm 1, while loop) ----
+    // If an instruction's destination location is known, its unknown
+    // sources follow it; a known source that disagrees becomes B.
+    // Memory and control instructions are excluded: their operand
+    // locations were *fixed* by the hardware policy above (e.g. a
+    // ld.global's address register stays F even though its data register
+    // is N — propagating across it would wrongly force addresses to B).
+    loop {
+        let mut changed = false;
+        for i in instrs {
+            if matches!(i.op, Op::Ld | Op::St | Op::Red | Op::Bra | Op::Bar | Op::Exit) {
+                continue;
+            }
+            // `setp` is also excluded: its predicate destination lives
+            // far-bank *by storage*, but the comparison itself executes
+            // wherever its value sources live — the 32-bit predicate
+            // result rides the instruction's commit return over the
+            // TSVs for free. Propagating F from the predicate into the
+            // value chain would wrongly drag whole near-bank dependency
+            // chains to B (e.g. the k-means distance accumulator).
+            if i.op == Op::Setp {
+                continue;
+            }
+            let dst_loc = i
+                .dst_regs()
+                .first()
+                .map(|d| l.get(d).copied().unwrap_or(Loc::U))
+                .unwrap_or(Loc::U);
+            if dst_loc != Loc::U {
+                // Backward: unknown sources follow a known destination.
+                for s in i.src_regs() {
+                    if s.class == RegClass::P {
+                        continue; // predicates stay far-bank
+                    }
+                    let cur = l.get(&s).copied().unwrap_or(Loc::U);
+                    let new = match cur {
+                        Loc::U => dst_loc,
+                        c if c == dst_loc => c,
+                        Loc::B => Loc::B,
+                        _ => Loc::B,
+                    };
+                    if new != cur {
+                        l.insert(s, new);
+                        changed = true;
+                    }
+                }
+            } else {
+                // Forward: a destination that nothing pins inherits its
+                // sources' location. This is what carries *value chains
+                // that never reach a store* (e.g. a running minimum that
+                // only feeds comparisons) into the near-bank file — the
+                // paper's "dependency chains of value-related registers
+                // are annotated as near-bank".
+                let src_loc = i
+                    .src_regs()
+                    .iter()
+                    .filter(|r| r.class != RegClass::P)
+                    .map(|r| l.get(r).copied().unwrap_or(Loc::U))
+                    .fold(Loc::U, merge);
+                if src_loc != Loc::U {
+                    if let Some(d) = i.dst_regs().first() {
+                        l.insert(*d, src_loc);
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // ---- Annotate instructions from their destination registers ----
+    let mut out = instrs.to_vec();
+    for i in out.iter_mut() {
+        i.loc = match i.op {
+            // Memory ops and control have hardware-fixed locations:
+            // global ld/st must pass through the far-bank LSU; shared
+            // ld/st execute at the smem's location; branches are far-bank.
+            Op::Ld | Op::St | Op::Red => match i.space {
+                Some(Space::Shared) if smem_near => Loc::N,
+                _ => Loc::F,
+            },
+            Op::Bra | Op::Bar | Op::Exit => Loc::F,
+            // A comparison executes where its value sources live; the
+            // predicate write-back is carried by the commit return.
+            Op::Setp => {
+                let src_loc = i
+                    .src_regs()
+                    .iter()
+                    .filter(|r| r.class != RegClass::P)
+                    .map(|r| l.get(r).copied().unwrap_or(Loc::U))
+                    .fold(Loc::U, merge);
+                match src_loc {
+                    Loc::N => Loc::N,
+                    _ => Loc::F,
+                }
+            }
+            _ => {
+                let d = i.dst_regs().first().copied();
+                match d {
+                    Some(d) => match l.get(&d).copied().unwrap_or(Loc::U) {
+                        Loc::N => Loc::N,
+                        Loc::F => Loc::F,
+                        // "Both" or unknown destinations fall back to the
+                        // far-bank full pipeline (§IV-B1 default).
+                        _ => Loc::F,
+                    },
+                    None => Loc::F,
+                }
+            }
+        };
+    }
+
+    let mut stats = LocStats::default();
+    for r in &regs {
+        match l.get(r).copied().unwrap_or(Loc::U) {
+            Loc::N => stats.near += 1,
+            Loc::F => stats.far += 1,
+            Loc::B => stats.both += 1,
+            Loc::U => stats.unknown += 1,
+        }
+    }
+
+    (out, l, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    fn annotate_src(src: &str) -> (Vec<Instr>, HashMap<Reg, Loc>, LocStats) {
+        let instrs = assemble(src).unwrap();
+        annotate(&instrs, &[])
+    }
+
+    #[test]
+    fn fig7_value_chain_goes_near_bank() {
+        // The paper's Fig.-7 example: a loaded value feeds an fma whose
+        // result is stored — %f1 %f2 %f3 all near-bank, the compute
+        // instruction near-bank.
+        let (instrs, l, _) = annotate_src(
+            r#"
+            ld.global.f32 %f1, [%r1+0]
+            ld.global.f32 %f2, [%r2+0]
+            mad.f32 %f3, %f1, %f2, %f3
+            st.global.f32 [%r3+0], %f3
+            exit
+            "#,
+        );
+        assert_eq!(l[&Reg::f(1)], Loc::N);
+        assert_eq!(l[&Reg::f(2)], Loc::N);
+        assert_eq!(l[&Reg::f(3)], Loc::N);
+        assert_eq!(l[&Reg::r(1)], Loc::F);
+        assert_eq!(l[&Reg::r(3)], Loc::F);
+        assert_eq!(instrs[2].loc, Loc::N, "fma offloaded near-bank");
+    }
+
+    #[test]
+    fn address_chain_stays_far_bank() {
+        let (instrs, l, _) = annotate_src(
+            r#"
+            shl.u32 %r2, %r1, 2
+            add.u32 %r3, %r4, %r2
+            ld.global.f32 %f1, [%r3+0]
+            st.global.f32 [%r3+4], %f1
+            exit
+            "#,
+        );
+        // %r3 is an address → F; propagation pulls %r4, %r2, %r1 to F.
+        assert_eq!(l[&Reg::r(3)], Loc::F);
+        assert_eq!(l[&Reg::r(2)], Loc::F);
+        assert_eq!(l[&Reg::r(1)], Loc::F);
+        assert_eq!(l[&Reg::r(4)], Loc::F);
+        assert_eq!(instrs[0].loc, Loc::F);
+        assert_eq!(instrs[1].loc, Loc::F);
+    }
+
+    #[test]
+    fn register_in_both_chains_becomes_b() {
+        // %f1 is a stored value (N) but also divides an address-bound
+        // integer conversion → ends up B.
+        let (_, l, stats) = annotate_src(
+            r#"
+            ld.global.f32 %f1, [%r1+0]
+            cvt.s32.f32 %r2, %f1
+            shl.u32 %r3, %r2, 2
+            add.u32 %r4, %r5, %r3
+            st.global.f32 [%r4+0], %f1
+            exit
+            "#,
+        );
+        // %r2 feeds the address chain (F); its source %f1 is already N →
+        // conflict → B. With bidirectional propagation the intermediate
+        // regs of the mixed chain (%r2, %r3) also become B.
+        assert_eq!(l[&Reg::f(1)], Loc::B);
+        assert!(stats.both >= 1 && stats.both <= 3, "both = {}", stats.both);
+    }
+
+    #[test]
+    fn shared_memory_regs_near_bank() {
+        let (instrs, l, _) = annotate_src(
+            r#"
+            ld.shared.f32 %f1, [%r1+0]
+            add.f32 %f2, %f1, %f1
+            st.shared.f32 [%r1+4], %f2
+            exit
+            "#,
+        );
+        assert_eq!(l[&Reg::f(1)], Loc::N);
+        assert_eq!(l[&Reg::f(2)], Loc::N);
+        assert_eq!(l[&Reg::r(1)], Loc::N, "smem address register is near-bank");
+        assert_eq!(instrs[0].loc, Loc::N);
+        assert_eq!(instrs[1].loc, Loc::N);
+    }
+
+    #[test]
+    fn predicates_are_far_bank() {
+        let (_, l, _) = annotate_src(
+            r#"
+            setp.lt.s32 %p1, %r1, %r2
+            @%p1 bra OUT
+            mov.u32 %r3, 1
+        OUT:
+            exit
+            "#,
+        );
+        assert_eq!(l[&Reg::p(1)], Loc::F);
+    }
+
+    #[test]
+    fn memory_instr_locations_fixed_by_hardware() {
+        let (instrs, _, _) = annotate_src(
+            r#"
+            ld.global.f32 %f1, [%r1+0]
+            st.shared.f32 [%r2+0], %f1
+            exit
+            "#,
+        );
+        assert_eq!(instrs[0].loc, Loc::F, "ld.global goes through the far-bank LSU");
+        assert_eq!(instrs[1].loc, Loc::N, "st.shared executes near-bank");
+    }
+
+    #[test]
+    fn stats_fractions_sum_to_one() {
+        let (_, _, s) = annotate_src(
+            r#"
+            ld.global.f32 %f1, [%r1+0]
+            add.f32 %f2, %f1, 1.0
+            st.global.f32 [%r1+0], %f2
+            exit
+            "#,
+        );
+        let sum = s.near_frac() + s.far_frac() + s.both_frac();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(s.near > 0 && s.far > 0);
+    }
+}

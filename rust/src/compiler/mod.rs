@@ -1,0 +1,202 @@
+//! The MPU compiler backend (§V-B).
+//!
+//! The paper reuses `nvcc` as frontend and adds three backend stages on
+//! PTX kernels (Fig. 6):
+//!
+//! 1. **branch analysis** — post-dominator analysis of the control-flow
+//!    graph to find each branch's re-convergence point (feeds the
+//!    hardware SIMT stack) — [`cfg`], [`postdom`];
+//! 2. **location annotation** — the paper's novel Algorithm 1: a static
+//!    analysis that labels every register and instruction near-bank (N),
+//!    far-bank (F) or both (B) to minimize TSV register traffic —
+//!    [`location`];
+//! 3. **register allocation** — liveness + graph coloring, with separate
+//!    physical pools per annotated location so near-bank registers never
+//!    alias far-bank ones — [`liveness`], [`regalloc`].
+
+pub mod cfg;
+pub mod postdom;
+pub mod location;
+pub mod liveness;
+pub mod regalloc;
+
+use crate::isa::instr::Loc;
+use crate::isa::{Instr, KernelSource, Reg};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Output of the location-annotation stage, per kernel (Fig. 14).
+#[derive(Clone, Debug, Default)]
+pub struct LocStats {
+    pub near: usize,
+    pub far: usize,
+    pub both: usize,
+    pub unknown: usize,
+}
+
+impl LocStats {
+    pub fn total(&self) -> usize {
+        self.near + self.far + self.both + self.unknown
+    }
+    pub fn near_frac(&self) -> f64 {
+        self.near as f64 / self.total().max(1) as f64
+    }
+    pub fn far_frac(&self) -> f64 {
+        // Unknown registers fall back to the far-bank file (§IV-B1).
+        (self.far + self.unknown) as f64 / self.total().max(1) as f64
+    }
+    pub fn both_frac(&self) -> f64 {
+        self.both as f64 / self.total().max(1) as f64
+    }
+}
+
+/// Physical registers required per (class, location pool) after coloring.
+#[derive(Clone, Debug, Default)]
+pub struct PoolCounts {
+    /// [R, F(loat), P] colors needed in the near-bank file.
+    pub near: [usize; 3],
+    /// [R, F(loat), P] colors needed in the far-bank file.
+    pub far: [usize; 3],
+}
+
+impl PoolCounts {
+    /// Near-bank register file bytes per warp (32 lanes × 4 B each).
+    pub fn near_bytes_per_warp(&self, warp_size: usize) -> usize {
+        (self.near[0] + self.near[1]) * warp_size * 4
+    }
+    pub fn far_bytes_per_warp(&self, warp_size: usize) -> usize {
+        (self.far[0] + self.far[1]) * warp_size * 4
+    }
+}
+
+/// A fully compiled kernel, ready for the simulator.
+#[derive(Clone, Debug)]
+pub struct CompiledKernel {
+    pub name: String,
+    /// Instructions with `loc` annotations and physical registers.
+    pub instrs: Vec<Instr>,
+    /// Re-convergence PC per instruction (branches only).
+    pub reconv: Vec<Option<usize>>,
+    /// Parameter registers (physical, post-allocation).
+    pub params: Vec<Reg>,
+    /// Physical register count per class [R, F, P].
+    pub reg_counts: [usize; 3],
+    /// Register-location breakdown of the *virtual* registers (Fig. 14).
+    pub loc_stats: LocStats,
+    /// Physical pool sizes (Table III near-bank RF sizing).
+    pub pools: PoolCounts,
+    /// Final register → location map (physical registers).
+    pub reg_locs: HashMap<Reg, Loc>,
+}
+
+impl CompiledKernel {
+    /// Location annotation of instruction `pc` with the far-bank fallback
+    /// applied (unknown → far).
+    pub fn instr_loc(&self, pc: usize) -> Loc {
+        match self.instrs[pc].loc {
+            Loc::U => Loc::F,
+            l => l,
+        }
+    }
+}
+
+/// Run the full backend: branch analysis → location annotation →
+/// liveness → register allocation. Assumes near-bank shared memory (the
+/// paper's design); see [`compile_with`].
+pub fn compile(src: &KernelSource) -> Result<CompiledKernel> {
+    compile_with(src, true)
+}
+
+/// [`compile`] with an explicit shared-memory placement assumption
+/// (`smem_near = false` reproduces the Fig.-11 far-bank smem baseline).
+pub fn compile_with(src: &KernelSource, smem_near: bool) -> Result<CompiledKernel> {
+    let graph = cfg::Cfg::build(&src.instrs);
+    let reconv = postdom::reconvergence_points(&src.instrs, &graph);
+    let (mut instrs, reg_locs_virtual, loc_stats) =
+        location::annotate_with(&src.instrs, &src.params, smem_near);
+    let live = liveness::Liveness::compute(&instrs, &graph);
+    let alloc = regalloc::allocate(&instrs, &src.params, &reg_locs_virtual, &live)?;
+    regalloc::apply(&mut instrs, &alloc.mapping);
+    let params: Vec<Reg> = src.params.iter().map(|p| alloc.mapping[p]).collect();
+
+    let mut reg_locs = HashMap::new();
+    for (v, p) in &alloc.mapping {
+        let l = reg_locs_virtual.get(v).copied().unwrap_or(Loc::U);
+        // A physical register shared by virtual regs of different
+        // locations is usable from both files.
+        reg_locs
+            .entry(*p)
+            .and_modify(|e: &mut Loc| {
+                if *e != l {
+                    *e = Loc::B;
+                }
+            })
+            .or_insert(l);
+    }
+
+    Ok(CompiledKernel {
+        name: src.name.clone(),
+        instrs,
+        reconv,
+        params,
+        reg_counts: alloc.class_counts,
+        loc_stats,
+        pools: alloc.pools,
+        reg_locs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{KernelSource, Reg};
+
+    #[test]
+    fn end_to_end_compile_axpy_shape() {
+        // y[i] = a*x[i] + y[i], strided loop — the paper's Listing-1 shape.
+        let src = KernelSource::assemble(
+            "axpy",
+            &[Reg::r(10), Reg::r(11), Reg::f(10), Reg::r(12)],
+            r#"
+                mov.u32   %r1, %tid.x
+                mov.u32   %r2, %ctaid.x
+                mad.u32   %r3, %r2, %ntid.x, %r1   // i = ctaid*ntid + tid
+                mov.u32   %r9, %nctaid.x
+                mul.u32   %r9, %r9, %ntid.x        // stride
+            LOOP:
+                setp.ge.s32 %p1, %r3, %r12
+                @%p1 bra  DONE
+                shl.u32   %r4, %r3, 2
+                add.u32   %r5, %r10, %r4
+                add.u32   %r6, %r11, %r4
+                ld.global.f32 %f1, [%r5+0]
+                ld.global.f32 %f2, [%r6+0]
+                mad.f32   %f3, %f1, %f10, %f2
+                st.global.f32 [%r6+0], %f3
+                add.u32   %r3, %r3, %r9
+                bra       LOOP
+            DONE:
+                exit
+            "#,
+        )
+        .unwrap();
+        let k = compile(&src).unwrap();
+        assert_eq!(k.instrs.len(), src.instrs.len());
+        // The value chain (f1,f2,f3 and the mad) must be near-bank.
+        let mad_f32 = k
+            .instrs
+            .iter()
+            .find(|i| i.op == crate::isa::Op::Mad && i.ty == crate::isa::Ty::F32)
+            .unwrap();
+        assert_eq!(mad_f32.loc, Loc::N, "value-chain fma should be near-bank");
+        // Address arithmetic stays far-bank.
+        let shl = k.instrs.iter().find(|i| i.op == crate::isa::Op::Shl).unwrap();
+        assert_eq!(shl.loc, Loc::F, "address shl should be far-bank");
+        // The conditional branch has a re-convergence point.
+        let bra_idx = k.instrs.iter().position(|i| i.is_branch() && i.guard.is_some()).unwrap();
+        assert!(k.reconv[bra_idx].is_some());
+        // Some registers near, some far (Fig. 14 separation exists).
+        assert!(k.loc_stats.near > 0);
+        assert!(k.loc_stats.far > 0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Post-dominator analysis → SIMT re-convergence points (§V-B, "branch
+//! analysis stage": the re-convergence point of each jump instruction is
+//! the immediate post-dominator of its block).
+
+use super::cfg::Cfg;
+use crate::isa::Instr;
+
+/// Dense bitset over block ids.
+#[derive(Clone, PartialEq)]
+struct BitSet(Vec<u64>);
+
+impl BitSet {
+    fn full(n: usize) -> Self {
+        let mut v = vec![!0u64; n.div_ceil(64)];
+        if n % 64 != 0 {
+            *v.last_mut().unwrap() = (1u64 << (n % 64)) - 1;
+        }
+        BitSet(v)
+    }
+    fn only(n: usize, i: usize) -> Self {
+        let mut v = vec![0u64; n.div_ceil(64)];
+        v[i / 64] |= 1 << (i % 64);
+        BitSet(v)
+    }
+    fn contains(&self, i: usize) -> bool {
+        self.0[i / 64] & (1 << (i % 64)) != 0
+    }
+    fn insert(&mut self, i: usize) {
+        self.0[i / 64] |= 1 << (i % 64);
+    }
+    fn intersect_with(&mut self, o: &BitSet) {
+        for (a, b) in self.0.iter_mut().zip(&o.0) {
+            *a &= b;
+        }
+    }
+    fn count(&self) -> usize {
+        self.0.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+/// Compute, for every instruction, the re-convergence PC if the
+/// instruction is a branch: the first instruction of the immediate
+/// post-dominator block. Branches whose block post-dominates everything
+/// (no ipdom) re-converge at program exit (`None` → the hardware treats
+/// it as "reconverge at exit").
+pub fn reconvergence_points(instrs: &[Instr], cfg: &Cfg) -> Vec<Option<usize>> {
+    let nb = cfg.num_blocks();
+    let mut out = vec![None; instrs.len()];
+    if nb == 0 {
+        return out;
+    }
+
+    // Virtual exit node with edges from every block that ends in Exit or
+    // has no successors.
+    let exit = nb;
+    let total = nb + 1;
+    let mut succs: Vec<Vec<usize>> = cfg.blocks.iter().map(|b| b.succs.clone()).collect();
+    succs.push(vec![]);
+    for (b, blk) in cfg.blocks.iter().enumerate() {
+        if blk.succs.is_empty() {
+            succs[b].push(exit);
+        }
+    }
+
+    // Iterative post-dominator sets: pdom(n) = {n} ∪ ⋂ pdom(succ).
+    let mut pdom: Vec<BitSet> = (0..total).map(|_| BitSet::full(total)).collect();
+    pdom[exit] = BitSet::only(total, exit);
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for n in (0..nb).rev() {
+            let mut new = if succs[n].is_empty() {
+                BitSet::only(total, n)
+            } else {
+                let mut acc = pdom[succs[n][0]].clone();
+                for &s in &succs[n][1..] {
+                    acc.intersect_with(&pdom[s]);
+                }
+                acc.insert(n);
+                acc
+            };
+            std::mem::swap(&mut new, &mut pdom[n]);
+            if new != pdom[n] {
+                changed = true;
+            }
+        }
+    }
+
+    // Immediate post-dominator: the strict post-dominator whose own pdom
+    // set has size |pdom(n)| - 1.
+    let ipdom = |n: usize| -> Option<usize> {
+        let want = pdom[n].count() - 1;
+        (0..nb)
+            .filter(|&p| p != n && pdom[n].contains(p))
+            .find(|&p| pdom[p].count() == want)
+    };
+
+    for (i, ins) in instrs.iter().enumerate() {
+        if ins.is_branch() {
+            let b = cfg.block_of[i];
+            out[i] = ipdom(b).map(|p| cfg.blocks[p].start);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    fn reconv_of(src: &str) -> (Vec<Option<usize>>, Vec<crate::isa::Instr>) {
+        let instrs = assemble(src).unwrap();
+        let cfg = Cfg::build(&instrs);
+        (reconvergence_points(&instrs, &cfg), instrs)
+    }
+
+    #[test]
+    fn diamond_reconverges_at_join() {
+        let (rc, instrs) = reconv_of(
+            r#"
+            setp.eq.s32 %p1, %r1, 0
+            @%p1 bra ELSE
+            mov.u32 %r2, 1
+            bra JOIN
+        ELSE:
+            mov.u32 %r2, 2
+        JOIN:
+            add.u32 %r3, %r2, 1
+            exit
+            "#,
+        );
+        // The conditional branch at pc=1 reconverges at JOIN (pc=5).
+        assert!(instrs[1].is_branch());
+        assert_eq!(rc[1], Some(5));
+        // The unconditional `bra JOIN` also reports JOIN.
+        assert_eq!(rc[3], Some(5));
+    }
+
+    #[test]
+    fn loop_branch_reconverges_after_loop() {
+        let (rc, _) = reconv_of(
+            r#"
+            mov.u32 %r1, 0
+        LOOP:
+            add.u32 %r1, %r1, 1
+            setp.lt.s32 %p1, %r1, %r2
+            @%p1 bra LOOP
+            exit
+            "#,
+        );
+        // Backward branch at pc=3 reconverges at the exit block (pc=4).
+        assert_eq!(rc[3], Some(4));
+    }
+
+    #[test]
+    fn guarded_forward_skip() {
+        let (rc, _) = reconv_of(
+            r#"
+            setp.ge.s32 %p1, %r1, %r2
+            @%p1 bra SKIP
+            mov.f32 %f1, 0.0
+        SKIP:
+            exit
+            "#,
+        );
+        assert_eq!(rc[1], Some(3));
+    }
+
+    #[test]
+    fn nested_diamonds() {
+        let (rc, instrs) = reconv_of(
+            r#"
+            setp.eq.s32 %p1, %r1, 0
+            @%p1 bra OUTER_ELSE
+            setp.eq.s32 %p2, %r2, 0
+            @%p2 bra INNER_ELSE
+            mov.u32 %r3, 1
+            bra INNER_JOIN
+        INNER_ELSE:
+            mov.u32 %r3, 2
+        INNER_JOIN:
+            bra OUTER_JOIN
+        OUTER_ELSE:
+            mov.u32 %r3, 3
+        OUTER_JOIN:
+            exit
+            "#,
+        );
+        let outer = instrs.iter().position(|i| i.is_branch() && i.guard.map(|g| g.0.idx) == Some(1)).unwrap();
+        let inner = instrs.iter().position(|i| i.is_branch() && i.guard.map(|g| g.0.idx) == Some(2)).unwrap();
+        let outer_join = 9; // OUTER_JOIN: exit
+        let inner_join = 7; // INNER_JOIN: bra OUTER_JOIN
+        assert_eq!(rc[outer], Some(outer_join));
+        assert_eq!(rc[inner], Some(inner_join));
+        // Inner reconvergence must come before outer.
+        assert!(rc[inner].unwrap() < rc[outer].unwrap());
+    }
+}

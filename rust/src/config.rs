@@ -1,0 +1,490 @@
+//! Machine configuration: the paper's Table II, plus a scaled-down default
+//! used by tests and benches (same ratios, smaller geometry — see
+//! DESIGN.md §3).
+
+/// Where instructions may execute (paper §IV-B, §VI-C/D ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Full MPU hybrid pipeline with instruction offloading (the paper).
+    Hybrid,
+    /// Processing-on-base-logic-die baseline: every instruction executes
+    /// far-bank; all DRAM data crosses the TSVs (Fig. 13).
+    PonB,
+}
+
+/// Instruction-location policy used at issue time (Fig. 15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OffloadPolicy {
+    /// Use the compiler's Algorithm-1 annotations (the paper's proposal).
+    CompilerAnnotated,
+    /// Hardware default: offload when all source registers have valid
+    /// near-bank copies (register-track-table policy, §IV-B1).
+    HardwareDefault,
+    /// Naive: offload every offloadable instruction near-bank.
+    AllNearBank,
+    /// Naive: keep every instruction far-bank.
+    AllFarBank,
+}
+
+/// Shared-memory placement (Fig. 11 ablation; §IV-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SmemLocation {
+    /// Near-bank shared memory on the DRAM die (horizontal core
+    /// structure; the paper's design).
+    NearBank,
+    /// Shared memory on the base logic die (vertical structure baseline).
+    FarBank,
+}
+
+/// Warp scheduling discipline (GTO is the paper's implicit default; RR is
+/// an extension ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Greedy-then-oldest.
+    Gto,
+    /// Loose round-robin.
+    RoundRobin,
+}
+
+/// DRAM timing parameters, in memory-controller cycles (Table II row
+/// `tRCD/tCCD/tRTP/tRP/tRAS/tRFC/tREFI`).
+#[derive(Clone, Copy, Debug)]
+pub struct DramTiming {
+    pub t_rcd: u64,
+    pub t_ccd: u64,
+    pub t_rtp: u64,
+    pub t_rp: u64,
+    pub t_ras: u64,
+    pub t_rfc: u64,
+    pub t_refi: u64,
+    /// Column (CAS) latency from RD command to data, not separately listed
+    /// in Table II; HBM-class value.
+    pub t_cl: u64,
+}
+
+impl Default for DramTiming {
+    fn default() -> Self {
+        DramTiming { t_rcd: 14, t_ccd: 2, t_rtp: 4, t_rp: 14, t_ras: 33, t_rfc: 350, t_refi: 3900, t_cl: 14 }
+    }
+}
+
+/// Per-access / per-bit energy coefficients in joules (Table II rows
+/// `RD,WR/PRE,ACT/REF/RF/SMEM` and `TSV / (on)off-chip bus`).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyCoeffs {
+    /// DRAM read or write, J per 256-bit column access.
+    pub dram_rdwr: f64,
+    /// DRAM precharge+activate pair, J per event.
+    pub dram_preact: f64,
+    /// DRAM refresh, J per event.
+    pub dram_ref: f64,
+    /// Register-file access, J per 32-bit access.
+    pub rf: f64,
+    /// Shared-memory access, J per 32-bit access.
+    pub smem: f64,
+    /// Operand collector, J per operand.
+    pub operand_collector: f64,
+    /// LSU-Extension, J per request.
+    pub lsu_ext: f64,
+    /// TSV, J per bit.
+    pub tsv_bit: f64,
+    /// On-chip (mesh) bus, J per bit.
+    pub onchip_bit: f64,
+    /// Off-chip (SERDES) bus, J per bit.
+    pub offchip_bit: f64,
+    /// Vector-ALU op, J per 32-bit lane-op (measured PTX numbers [8,9]).
+    pub alu_op: f64,
+    /// Front-pipeline (fetch/decode/issue/scoreboard) J per instruction.
+    pub frontend_instr: f64,
+}
+
+impl Default for EnergyCoeffs {
+    fn default() -> Self {
+        EnergyCoeffs {
+            dram_rdwr: 0.15e-9,
+            dram_preact: 0.27e-9,
+            dram_ref: 1.13e-9,
+            rf: 40.0e-12,
+            smem: 22.2e-12,
+            operand_collector: 41.49e-12,
+            lsu_ext: 39.67e-12,
+            tsv_bit: 4.53e-12,
+            onchip_bit: 0.72e-12,
+            offchip_bit: 4.50e-12,
+            alu_op: 20.0e-12,
+            frontend_instr: 60.0e-12,
+        }
+    }
+}
+
+/// Full machine configuration (Table II + ablation knobs).
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    // ---- geometry ----
+    /// Number of 3D-stacked processors (cubes).
+    pub processors: usize,
+    /// SIMT cores per processor (on the base logic die).
+    pub cores_per_proc: usize,
+    /// Subcores per core.
+    pub subcores_per_core: usize,
+    /// Near-bank units per core (one per subcore in the paper).
+    pub nbus_per_core: usize,
+    /// DRAM banks behind each NBU's memory controller.
+    pub banks_per_nbu: usize,
+    /// Simultaneously activated row-buffers per bank (MASA; 1 disables).
+    pub row_buffers_per_bank: usize,
+
+    // ---- SIMT ----
+    /// Threads per warp (Table II: SIMT 32).
+    pub warp_size: usize,
+    /// Maximum resident warps per subcore.
+    pub max_warps_per_subcore: usize,
+    /// Instructions issued per subcore per cycle.
+    pub issue_width: usize,
+
+    // ---- capacities (bytes) ----
+    /// DRAM bank capacity.
+    pub bank_bytes: usize,
+    /// DRAM row (page) size per bank.
+    pub row_bytes: usize,
+    /// Bank column-IO width in bits (Table II: 256 b).
+    pub bank_io_bits: usize,
+    /// Far-bank register file per subcore.
+    pub fb_rf_bytes: usize,
+    /// Near-bank register file per NBU (half of far-bank; §VI-B).
+    pub nb_rf_bytes: usize,
+    /// Shared memory per core.
+    pub smem_bytes: usize,
+
+    // ---- interconnect ----
+    /// TSV data-bus width per core, bits (Table II: 64 b buses, 1024 per
+    /// stack).
+    pub tsv_bits_per_core: usize,
+    /// TSV clock relative to core clock (fTSV/fCore = 2).
+    pub tsv_clock_mult: u64,
+    /// Mesh link width, bits (on-chip bus 256 b).
+    pub mesh_link_bits: usize,
+    /// Mesh per-hop latency in core cycles.
+    pub mesh_hop_latency: u64,
+    /// Off-chip (inter-processor) link width, bits.
+    pub offchip_link_bits: usize,
+    /// Off-chip serialization + flight latency, core cycles.
+    pub offchip_latency: u64,
+
+    // ---- latencies (core cycles) ----
+    /// ALU latency for simple int/fp ops.
+    pub alu_latency: u64,
+    /// Latency of special ops (div/sqrt).
+    pub sfu_latency: u64,
+    /// Operand-collector latency.
+    pub opc_latency: u64,
+    /// Shared-memory access latency (near-bank).
+    pub smem_latency: u64,
+    /// One-way TSV latency (command/packet), core cycles.
+    pub tsv_latency: u64,
+    /// Offloaded-instruction packet size on the TSVs (64-bit encoded
+    /// instruction: opcode + register ids + SIMT mask), bytes.
+    pub offload_packet_bytes: u64,
+
+    // ---- models / policies ----
+    pub timing: DramTiming,
+    pub energy: EnergyCoeffs,
+    pub pipeline_mode: PipelineMode,
+    pub offload_policy: OffloadPolicy,
+    pub smem_location: SmemLocation,
+    pub sched_policy: SchedPolicy,
+    /// Interleave consecutive DRAM rows across subarrays so MASA
+    /// row-buffers capture streaming (§IV-C). Turn off to ablate.
+    pub subarray_interleave: bool,
+    /// Maximum thread blocks resident per core.
+    pub max_blocks_per_core: usize,
+    /// Address-interleave granularity across (nbu, bank) in bytes.
+    pub interleave_bytes: usize,
+    /// Safety valve for the simulator: abort after this many cycles.
+    pub max_cycles: u64,
+}
+
+impl MachineConfig {
+    /// The paper's full Table-II configuration:
+    /// `Proc/(3D,Core)/(Subcore,NBU/Bank/RowBuf) = 8/(4,16)/(4,4/4/4)`.
+    pub fn paper() -> Self {
+        MachineConfig {
+            processors: 8,
+            cores_per_proc: 16,
+            subcores_per_core: 4,
+            nbus_per_core: 4,
+            banks_per_nbu: 4,
+            row_buffers_per_bank: 4,
+            warp_size: 32,
+            max_warps_per_subcore: 16,
+            issue_width: 1,
+            bank_bytes: 16 << 20,
+            row_bytes: 2048,
+            bank_io_bits: 256,
+            fb_rf_bytes: 32 << 10,
+            nb_rf_bytes: 16 << 10,
+            smem_bytes: 64 << 10,
+            tsv_bits_per_core: 64,
+            tsv_clock_mult: 2,
+            mesh_link_bits: 256,
+            mesh_hop_latency: 2,
+            offchip_link_bits: 128,
+            offchip_latency: 32,
+            alu_latency: 4,
+            sfu_latency: 16,
+            opc_latency: 2,
+            smem_latency: 8,
+            tsv_latency: 2,
+            offload_packet_bytes: 8,
+            timing: DramTiming::default(),
+            energy: EnergyCoeffs::default(),
+            pipeline_mode: PipelineMode::Hybrid,
+            offload_policy: OffloadPolicy::CompilerAnnotated,
+            smem_location: SmemLocation::NearBank,
+            sched_policy: SchedPolicy::Gto,
+            subarray_interleave: true,
+            max_blocks_per_core: 8,
+            interleave_bytes: 256,
+            max_cycles: 2_000_000_000,
+        }
+    }
+
+    /// Scaled-down configuration for tests/benches: 1 processor, 4 cores,
+    /// same per-core geometry and all the same ratios (DESIGN.md §3).
+    pub fn scaled() -> Self {
+        let mut c = Self::paper();
+        c.processors = 1;
+        c.cores_per_proc = 4;
+        c.bank_bytes = 1 << 20;
+        c.max_cycles = 200_000_000;
+        c
+    }
+
+    /// Total cores in the machine.
+    pub fn total_cores(&self) -> usize {
+        self.processors * self.cores_per_proc
+    }
+
+    /// Total DRAM banks in the machine.
+    pub fn total_banks(&self) -> usize {
+        self.total_cores() * self.nbus_per_core * self.banks_per_nbu
+    }
+
+    /// Total global-memory capacity in bytes.
+    pub fn total_mem_bytes(&self) -> usize {
+        self.total_banks() * self.bank_bytes
+    }
+
+    /// Peak bank-level bandwidth in bytes per core-cycle for the whole
+    /// machine (each bank moves `bank_io_bits` per `tCCD`).
+    pub fn peak_bank_bytes_per_cycle(&self) -> f64 {
+        self.total_banks() as f64 * (self.bank_io_bits as f64 / 8.0) / self.timing.t_ccd as f64
+    }
+
+    /// Peak TSV bandwidth in bytes per core-cycle for the whole machine.
+    pub fn peak_tsv_bytes_per_cycle(&self) -> f64 {
+        self.total_cores() as f64 * (self.tsv_bits_per_core as f64 / 8.0) * self.tsv_clock_mult as f64
+    }
+
+    /// Apply a `key=value` override (used by the CLI). Returns an error
+    /// string on unknown keys or malformed values.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(v: &str) -> Result<T, String> {
+            v.parse::<T>().map_err(|_| format!("bad value `{v}`"))
+        }
+        match key {
+            "processors" => self.processors = p(value)?,
+            "cores_per_proc" => self.cores_per_proc = p(value)?,
+            "subcores_per_core" => self.subcores_per_core = p(value)?,
+            "nbus_per_core" => self.nbus_per_core = p(value)?,
+            "banks_per_nbu" => self.banks_per_nbu = p(value)?,
+            "row_buffers_per_bank" => self.row_buffers_per_bank = p(value)?,
+            "max_warps_per_subcore" => self.max_warps_per_subcore = p(value)?,
+            "max_blocks_per_core" => self.max_blocks_per_core = p(value)?,
+            "row_bytes" => self.row_bytes = p(value)?,
+            "interleave_bytes" => self.interleave_bytes = p(value)?,
+            "subarray_interleave" => self.subarray_interleave = p(value)?,
+            "pipeline_mode" => {
+                self.pipeline_mode = match value {
+                    "hybrid" => PipelineMode::Hybrid,
+                    "ponb" => PipelineMode::PonB,
+                    _ => return Err(format!("bad pipeline_mode `{value}`")),
+                }
+            }
+            "offload_policy" => {
+                self.offload_policy = match value {
+                    "annotated" => OffloadPolicy::CompilerAnnotated,
+                    "hw" => OffloadPolicy::HardwareDefault,
+                    "all_nb" => OffloadPolicy::AllNearBank,
+                    "all_fb" => OffloadPolicy::AllFarBank,
+                    _ => return Err(format!("bad offload_policy `{value}`")),
+                }
+            }
+            "smem_location" => {
+                self.smem_location = match value {
+                    "near" => SmemLocation::NearBank,
+                    "far" => SmemLocation::FarBank,
+                    _ => return Err(format!("bad smem_location `{value}`")),
+                }
+            }
+            "sched" => {
+                self.sched_policy = match value {
+                    "gto" => SchedPolicy::Gto,
+                    "rr" => SchedPolicy::RoundRobin,
+                    _ => return Err(format!("bad sched `{value}`")),
+                }
+            }
+            _ => return Err(format!("unknown config key `{key}`")),
+        }
+        Ok(())
+    }
+}
+
+/// V100-like GPU baseline configuration (DESIGN.md §2 substitution).
+///
+/// The model keeps the *per-SM* ratios of a Tesla V100 (80 SMs sharing
+/// 900 GB/s of HBM2, ~400-cycle memory latency) but is instantiated with
+/// the same number of SMs as the MPU config has cores so runtimes compare
+/// one-to-one.
+#[derive(Clone, Debug)]
+pub struct GpuConfig {
+    /// Streaming multiprocessors.
+    pub sms: usize,
+    pub subcores_per_sm: usize,
+    pub warp_size: usize,
+    pub max_warps_per_subcore: usize,
+    pub max_blocks_per_sm: usize,
+    /// HBM bandwidth in bytes per core cycle, whole chip.
+    pub hbm_bytes_per_cycle: f64,
+    /// Average DRAM access latency (core cycles).
+    pub mem_latency: u64,
+    /// L2 hit latency.
+    pub l2_latency: u64,
+    /// Fraction of accesses served by L2 (streaming workloads: low).
+    pub l2_hit_rate: f64,
+    pub alu_latency: u64,
+    pub sfu_latency: u64,
+    pub smem_latency: u64,
+    pub smem_bytes: usize,
+    pub energy: GpuEnergyCoeffs,
+    pub sched_policy: SchedPolicy,
+    pub max_cycles: u64,
+}
+
+/// GPU baseline energy coefficients: the long compute-centric data path
+/// (HBM cell → TSV → off-chip PHY → L2 → crossbar → L1 → RF), per §VI-B's
+/// narrative, built from the same Table-II primitives.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuEnergyCoeffs {
+    /// DRAM cell read/write, J per 256-bit access (same cell energy).
+    pub dram_rdwr: f64,
+    pub dram_preact: f64,
+    /// HBM-internal TSV traversal, J per bit.
+    pub tsv_bit: f64,
+    /// Interposer/off-chip PHY, J per bit.
+    pub phy_bit: f64,
+    /// L2 + crossbar + L1 path, J per bit.
+    pub cache_path_bit: f64,
+    pub rf: f64,
+    pub smem: f64,
+    pub operand_collector: f64,
+    pub alu_op: f64,
+    pub frontend_instr: f64,
+}
+
+impl Default for GpuEnergyCoeffs {
+    fn default() -> Self {
+        GpuEnergyCoeffs {
+            dram_rdwr: 0.15e-9,
+            dram_preact: 0.27e-9,
+            tsv_bit: 4.53e-12,
+            phy_bit: 4.50e-12,
+            cache_path_bit: 3.00e-12,
+            rf: 40.0e-12,
+            smem: 22.2e-12,
+            operand_collector: 41.49e-12,
+            alu_op: 20.0e-12,
+            frontend_instr: 60.0e-12,
+        }
+    }
+}
+
+impl GpuConfig {
+    /// Baseline matched to an MPU machine config: same SM count as MPU
+    /// cores, V100 per-SM bandwidth share (900 GB/s / 80 SMs @ ~1.4 GHz
+    /// ≈ 8 B/cycle/SM).
+    pub fn matched(mpu: &MachineConfig) -> Self {
+        let sms = mpu.total_cores();
+        GpuConfig {
+            sms,
+            subcores_per_sm: 4,
+            warp_size: mpu.warp_size,
+            max_warps_per_subcore: 16,
+            max_blocks_per_sm: 8,
+            hbm_bytes_per_cycle: 8.0 * sms as f64,
+            mem_latency: 400,
+            l2_latency: 130,
+            l2_hit_rate: 0.15,
+            alu_latency: 4,
+            sfu_latency: 16,
+            smem_latency: 24,
+            smem_bytes: 96 << 10,
+            energy: GpuEnergyCoeffs::default(),
+            sched_policy: SchedPolicy::Gto,
+            max_cycles: mpu.max_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry_matches_table2() {
+        let c = MachineConfig::paper();
+        assert_eq!(c.processors, 8);
+        assert_eq!(c.cores_per_proc, 16);
+        assert_eq!(c.subcores_per_core, 4);
+        assert_eq!(c.nbus_per_core, 4);
+        assert_eq!(c.banks_per_nbu, 4);
+        assert_eq!(c.row_buffers_per_bank, 4);
+        assert_eq!(c.warp_size, 32);
+        assert_eq!(c.bank_bytes, 16 << 20);
+        assert_eq!(c.fb_rf_bytes, 32 << 10);
+        assert_eq!(c.nb_rf_bytes, 16 << 10);
+        assert_eq!(c.smem_bytes, 64 << 10);
+        assert_eq!(c.timing.t_rcd, 14);
+        assert_eq!(c.timing.t_rfc, 350);
+    }
+
+    #[test]
+    fn bank_bandwidth_dwarfs_tsv_bandwidth() {
+        // The whole premise of near-bank computing (§III): bank-internal
+        // bandwidth is roughly an order of magnitude above TSV bandwidth.
+        let c = MachineConfig::paper();
+        let ratio = c.peak_bank_bytes_per_cycle() / c.peak_tsv_bytes_per_cycle();
+        assert!(ratio >= 8.0, "bank/TSV bandwidth ratio {ratio} too low");
+    }
+
+    #[test]
+    fn set_overrides_work() {
+        let mut c = MachineConfig::scaled();
+        c.set("row_buffers_per_bank", "2").unwrap();
+        assert_eq!(c.row_buffers_per_bank, 2);
+        c.set("offload_policy", "all_nb").unwrap();
+        assert_eq!(c.offload_policy, OffloadPolicy::AllNearBank);
+        c.set("smem_location", "far").unwrap();
+        assert_eq!(c.smem_location, SmemLocation::FarBank);
+        assert!(c.set("nonsense", "1").is_err());
+        assert!(c.set("sched", "nonsense").is_err());
+    }
+
+    #[test]
+    fn gpu_matched_has_same_sm_count() {
+        let m = MachineConfig::scaled();
+        let g = GpuConfig::matched(&m);
+        assert_eq!(g.sms, m.total_cores());
+        assert!(g.hbm_bytes_per_cycle > 0.0);
+    }
+}

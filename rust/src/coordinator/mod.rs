@@ -1,0 +1,171 @@
+//! Experiment coordinator: runs prepared workloads on the MPU machine
+//! and the GPU baseline, validates outputs against the pure-Rust golden
+//! (and, via [`crate::runtime`], the AOT-compiled XLA golden), and
+//! derives every §VI metric the benches report.
+
+pub mod report;
+
+use crate::compiler::{compile_with, CompiledKernel, LocStats};
+use crate::config::{GpuConfig, MachineConfig, SmemLocation};
+use crate::core::Machine;
+use crate::energy::{gpu_energy, mpu_energy, EnergyBreakdown};
+use crate::gpu::GpuMachine;
+use crate::sim::Stats;
+use crate::workloads::{prepare, Prepared, Scale, Workload};
+use anyhow::Result;
+
+/// Result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub workload: Workload,
+    pub machine: &'static str,
+    pub cycles: u64,
+    pub stats: Stats,
+    pub energy: EnergyBreakdown,
+    /// Output matched the pure-Rust golden within tolerance.
+    pub correct: bool,
+    pub max_err: f32,
+    /// Device output (for the XLA cross-check).
+    pub output: Vec<f32>,
+    /// Compile-time register-location stats (Fig. 14).
+    pub loc_stats: LocStats,
+}
+
+impl RunReport {
+    /// Achieved DRAM bandwidth in GB/s at the 1 GHz core clock.
+    pub fn dram_gbps(&self) -> f64 {
+        self.stats.dram_bytes_per_cycle() // bytes/cycle × 1 GHz = GB/s
+    }
+}
+
+fn check(out: &[f32], golden: &[f32], tol: f32) -> (bool, f32) {
+    let mut max_err = 0f32;
+    for (a, b) in out.iter().zip(golden) {
+        let e = (a - b).abs();
+        if e > max_err {
+            max_err = e;
+        }
+    }
+    (max_err <= tol.max(f32::EPSILON), max_err)
+}
+
+/// Compile a prepared workload consistently with the machine config.
+pub fn compile_for(p: &Prepared, cfg: &MachineConfig) -> Result<CompiledKernel> {
+    compile_with(&p.kernel, cfg.smem_location == SmemLocation::NearBank)
+}
+
+/// Run one workload on the MPU machine (default Small scale).
+pub fn run_workload(w: Workload, cfg: &MachineConfig) -> Result<RunReport> {
+    run_workload_scaled(w, cfg, Scale::Small)
+}
+
+/// Run one workload on the MPU machine at a given problem scale.
+pub fn run_workload_scaled(w: Workload, cfg: &MachineConfig, scale: Scale) -> Result<RunReport> {
+    let mut m = Machine::new(cfg);
+    let p = prepare(w, scale, &mut m)?;
+    let kernel = compile_for(&p, cfg)?;
+    let loc_stats = kernel.loc_stats.clone();
+    m.launch(kernel, p.launch, &p.params, p.home_fn())?;
+    let stats = m.run()?;
+    let output = m.read_f32s(p.out_addr, p.out_len);
+    let (correct, max_err) = check(&output, &p.golden, p.tol);
+    let energy = mpu_energy(&stats, &cfg.energy);
+    Ok(RunReport {
+        workload: w,
+        machine: "mpu",
+        cycles: stats.cycles,
+        stats,
+        energy,
+        correct,
+        max_err,
+        output,
+        loc_stats,
+    })
+}
+
+/// Run one workload on the GPU baseline.
+pub fn run_workload_gpu(w: Workload, gcfg: &GpuConfig, cfg: &MachineConfig) -> Result<RunReport> {
+    run_workload_gpu_scaled(w, gcfg, cfg, Scale::Small)
+}
+
+pub fn run_workload_gpu_scaled(
+    w: Workload,
+    gcfg: &GpuConfig,
+    cfg: &MachineConfig,
+    scale: Scale,
+) -> Result<RunReport> {
+    let mut g = GpuMachine::new(gcfg);
+    let p = prepare(w, scale, &mut g)?;
+    let kernel = compile_for(&p, cfg)?;
+    let loc_stats = kernel.loc_stats.clone();
+    g.launch(kernel, p.launch, &p.params)?;
+    let stats = g.run()?;
+    let output = g.read_f32s(p.out_addr, p.out_len);
+    let (correct, max_err) = check(&output, &p.golden, p.tol);
+    let energy = gpu_energy(&stats, &gcfg.energy);
+    Ok(RunReport {
+        workload: w,
+        machine: "gpu",
+        cycles: stats.cycles,
+        stats,
+        energy,
+        correct,
+        max_err,
+        output,
+        loc_stats,
+    })
+}
+
+/// MPU-vs-GPU pair for one workload (the Fig. 8 / Fig. 9 primitive).
+pub struct PairReport {
+    pub mpu: RunReport,
+    pub gpu: RunReport,
+}
+
+impl PairReport {
+    pub fn speedup(&self) -> f64 {
+        self.gpu.cycles as f64 / self.mpu.cycles.max(1) as f64
+    }
+    pub fn energy_reduction(&self) -> f64 {
+        self.gpu.energy.total() / self.mpu.energy.total().max(1e-30)
+    }
+}
+
+/// Run the MPU/GPU pair at a scale.
+pub fn run_pair(w: Workload, cfg: &MachineConfig, scale: Scale) -> Result<PairReport> {
+    let gcfg = GpuConfig::matched(cfg);
+    Ok(PairReport {
+        mpu: run_workload_scaled(w, cfg, scale)?,
+        gpu: run_workload_gpu_scaled(w, &gcfg, cfg, scale)?,
+    })
+}
+
+/// Geometric mean helper (the paper reports means over the suite).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+        assert!((geomean(&[5.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_pair_runs_correct_and_faster() {
+        let cfg = MachineConfig::scaled();
+        let pair = run_pair(Workload::Axpy, &cfg, Scale::Tiny).unwrap();
+        assert!(pair.mpu.correct, "MPU output wrong (max_err {})", pair.mpu.max_err);
+        assert!(pair.gpu.correct, "GPU output wrong (max_err {})", pair.gpu.max_err);
+        assert!(pair.speedup() > 1.0, "speedup {}", pair.speedup());
+        assert!(pair.energy_reduction() > 1.0, "energy red {}", pair.energy_reduction());
+    }
+}

@@ -1,0 +1,103 @@
+//! Table rendering for bench harnesses: fixed-width text tables on
+//! stdout plus TSV files under `reports/` for plotting.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// A simple column-aligned table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout and save as TSV under `reports/<name>.tsv`.
+    pub fn emit(&self, name: &str) {
+        print!("{}", self.render());
+        let dir = Path::new("reports");
+        let _ = fs::create_dir_all(dir);
+        let mut tsv = String::new();
+        let _ = writeln!(tsv, "{}", self.headers.join("\t"));
+        for r in &self.rows {
+            let _ = writeln!(tsv, "{}", r.join("\t"));
+        }
+        let _ = fs::write(dir.join(format!("{name}.tsv")), tsv);
+    }
+}
+
+/// Format helpers.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f1pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new("demo", &["wl", "speedup"]);
+        t.row(vec!["axpy".into(), "3.46".into()]);
+        t.row(vec!["nw".into(), "1.10".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("axpy"));
+        assert!(s.contains("3.46"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(f2(3.456), "3.46");
+        assert_eq!(f1pct(0.559), "55.9%");
+    }
+}

@@ -1,0 +1,244 @@
+//! Functional (value-level) execution of mini-PTX instructions, one warp
+//! at a time. Pure functions over lane vectors — the timing model lives
+//! in [`crate::core::machine`]; this module only computes *what* the
+//! hardware computes, so the simulator's memory image can be validated
+//! bit-for-bit against the JAX/Pallas golden models.
+
+use crate::isa::{CmpOp, Instr, Op, Operand, Special, Ty};
+
+/// Lane context: per-thread special values.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneCtx {
+    pub tid: u32,
+    pub ntid: u32,
+    pub ctaid: u32,
+    pub nctaid: u32,
+}
+
+/// Evaluate an operand for one lane given a register-read closure.
+pub fn operand_value(op: &Operand, ctx: &LaneCtx, read: &impl Fn(crate::isa::Reg) -> u32) -> u32 {
+    match op {
+        Operand::Reg(r) => read(*r),
+        Operand::ImmI(i) => *i as u32,
+        Operand::ImmF(f) => f.to_bits(),
+        Operand::Special(s) => match s {
+            Special::TidX => ctx.tid,
+            Special::NTidX => ctx.ntid,
+            Special::CtaIdX => ctx.ctaid,
+            Special::NCtaIdX => ctx.nctaid,
+        },
+    }
+}
+
+/// Execute an ALU-class instruction for one lane. `srcs` are the already
+/// evaluated source bit patterns. Returns the destination bit pattern.
+pub fn alu_lane(instr: &Instr, srcs: &[u32]) -> u32 {
+    let f = |i: usize| f32::from_bits(srcs[i]);
+    let s = |i: usize| srcs[i] as i32;
+    let u = |i: usize| srcs[i];
+    match instr.op {
+        Op::Mov => srcs[0],
+        Op::Cvt => {
+            let from = instr.src_ty.unwrap_or(instr.ty);
+            match (instr.ty, from) {
+                (Ty::F32, Ty::S32) => (s(0) as f32).to_bits(),
+                (Ty::F32, Ty::U32) => (u(0) as f32).to_bits(),
+                (Ty::S32, Ty::F32) => (f(0) as i32) as u32,
+                (Ty::U32, Ty::F32) => f(0) as u32,
+                _ => srcs[0],
+            }
+        }
+        Op::Add => match instr.ty {
+            Ty::F32 => (f(0) + f(1)).to_bits(),
+            _ => u(0).wrapping_add(u(1)),
+        },
+        Op::Sub => match instr.ty {
+            Ty::F32 => (f(0) - f(1)).to_bits(),
+            _ => u(0).wrapping_sub(u(1)),
+        },
+        Op::Mul => match instr.ty {
+            Ty::F32 => (f(0) * f(1)).to_bits(),
+            Ty::S32 => (s(0).wrapping_mul(s(1))) as u32,
+            _ => u(0).wrapping_mul(u(1)),
+        },
+        Op::Mad => match instr.ty {
+            Ty::F32 => (f(0) * f(1) + f(2)).to_bits(),
+            Ty::S32 => (s(0).wrapping_mul(s(1)).wrapping_add(s(2))) as u32,
+            _ => u(0).wrapping_mul(u(1)).wrapping_add(u(2)),
+        },
+        Op::Div => match instr.ty {
+            Ty::F32 => (f(0) / f(1)).to_bits(),
+            Ty::S32 => {
+                if s(1) == 0 { 0 } else { (s(0).wrapping_div(s(1))) as u32 }
+            }
+            _ => {
+                if u(1) == 0 { 0 } else { u(0) / u(1) }
+            }
+        },
+        Op::Rem => match instr.ty {
+            Ty::F32 => (f(0) % f(1)).to_bits(),
+            Ty::S32 => {
+                if s(1) == 0 { 0 } else { (s(0).wrapping_rem(s(1))) as u32 }
+            }
+            _ => {
+                if u(1) == 0 { 0 } else { u(0) % u(1) }
+            }
+        },
+        Op::Min => match instr.ty {
+            Ty::F32 => f(0).min(f(1)).to_bits(),
+            Ty::S32 => s(0).min(s(1)) as u32,
+            _ => u(0).min(u(1)),
+        },
+        Op::Max => match instr.ty {
+            Ty::F32 => f(0).max(f(1)).to_bits(),
+            Ty::S32 => s(0).max(s(1)) as u32,
+            _ => u(0).max(u(1)),
+        },
+        Op::And => u(0) & u(1),
+        Op::Or => u(0) | u(1),
+        Op::Xor => u(0) ^ u(1),
+        Op::Shl => u(0).wrapping_shl(u(1) & 31),
+        Op::Shr => match instr.ty {
+            Ty::S32 => (s(0).wrapping_shr(u(1) & 31)) as u32,
+            _ => u(0).wrapping_shr(u(1) & 31),
+        },
+        Op::Neg => match instr.ty {
+            Ty::F32 => (-f(0)).to_bits(),
+            _ => (s(0).wrapping_neg()) as u32,
+        },
+        Op::Abs => match instr.ty {
+            Ty::F32 => f(0).abs().to_bits(),
+            _ => (s(0).wrapping_abs()) as u32,
+        },
+        Op::Sqrt => f(0).sqrt().to_bits(),
+        Op::Setp => {
+            let c = instr.cmp.expect("setp has cmp");
+            let t = match instr.ty {
+                Ty::F32 => cmp_f32(c, f(0), f(1)),
+                Ty::S32 => cmp_i(c, s(0) as i64, s(1) as i64),
+                _ => cmp_i(c, u(0) as i64, u(1) as i64),
+            };
+            t as u32
+        }
+        Op::Selp => {
+            if srcs[2] != 0 {
+                srcs[0]
+            } else {
+                srcs[1]
+            }
+        }
+        _ => panic!("alu_lane called on non-ALU op {:?}", instr.op),
+    }
+}
+
+fn cmp_f32(c: CmpOp, a: f32, b: f32) -> bool {
+    match c {
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+        CmpOp::Gt => a > b,
+        CmpOp::Ge => a >= b,
+    }
+}
+
+fn cmp_i(c: CmpOp, a: i64, b: i64) -> bool {
+    match c {
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+        CmpOp::Gt => a > b,
+        CmpOp::Ge => a >= b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::Loc;
+    use crate::isa::Reg;
+
+    fn instr(op: Op, ty: Ty) -> Instr {
+        Instr {
+            op,
+            ty,
+            src_ty: None,
+            dst: Some(Reg::r(0)),
+            srcs: vec![],
+            mem: None,
+            space: None,
+            cmp: None,
+            guard: None,
+            target: None,
+            loc: Loc::U,
+        }
+    }
+
+    #[test]
+    fn f32_arith() {
+        let i = instr(Op::Mad, Ty::F32);
+        let r = alu_lane(&i, &[2.0f32.to_bits(), 3.0f32.to_bits(), 1.0f32.to_bits()]);
+        assert_eq!(f32::from_bits(r), 7.0);
+        let i = instr(Op::Sqrt, Ty::F32);
+        assert_eq!(f32::from_bits(alu_lane(&i, &[9.0f32.to_bits()])), 3.0);
+        let i = instr(Op::Min, Ty::F32);
+        assert_eq!(f32::from_bits(alu_lane(&i, &[1.5f32.to_bits(), (-2.0f32).to_bits()])), -2.0);
+    }
+
+    #[test]
+    fn integer_wrapping_and_shifts() {
+        let i = instr(Op::Add, Ty::U32);
+        assert_eq!(alu_lane(&i, &[u32::MAX, 1]), 0);
+        let i = instr(Op::Shl, Ty::U32);
+        assert_eq!(alu_lane(&i, &[1, 4]), 16);
+        let i = instr(Op::Shr, Ty::S32);
+        assert_eq!(alu_lane(&i, &[(-8i32) as u32, 1]) as i32, -4);
+        let i = instr(Op::Shr, Ty::U32);
+        assert_eq!(alu_lane(&i, &[0x8000_0000, 31]), 1);
+    }
+
+    #[test]
+    fn division_by_zero_yields_zero_int() {
+        let i = instr(Op::Div, Ty::S32);
+        assert_eq!(alu_lane(&i, &[5, 0]), 0);
+        let i = instr(Op::Rem, Ty::U32);
+        assert_eq!(alu_lane(&i, &[5, 0]), 0);
+    }
+
+    #[test]
+    fn setp_and_selp() {
+        let mut i = instr(Op::Setp, Ty::S32);
+        i.cmp = Some(CmpOp::Lt);
+        assert_eq!(alu_lane(&i, &[(-1i32) as u32, 0]), 1);
+        assert_eq!(alu_lane(&i, &[3, 0]), 0);
+        let mut i = instr(Op::Setp, Ty::F32);
+        i.cmp = Some(CmpOp::Ge);
+        assert_eq!(alu_lane(&i, &[1.0f32.to_bits(), 1.0f32.to_bits()]), 1);
+        let i = instr(Op::Selp, Ty::U32);
+        assert_eq!(alu_lane(&i, &[7, 9, 1]), 7);
+        assert_eq!(alu_lane(&i, &[7, 9, 0]), 9);
+    }
+
+    #[test]
+    fn cvt_conversions() {
+        let mut i = instr(Op::Cvt, Ty::F32);
+        i.src_ty = Some(Ty::S32);
+        assert_eq!(f32::from_bits(alu_lane(&i, &[(-3i32) as u32])), -3.0);
+        let mut i = instr(Op::Cvt, Ty::S32);
+        i.src_ty = Some(Ty::F32);
+        assert_eq!(alu_lane(&i, &[3.7f32.to_bits()]) as i32, 3, "cvt truncates toward zero");
+        assert_eq!(alu_lane(&i, &[(-3.7f32).to_bits()]) as i32, -3);
+    }
+
+    #[test]
+    fn specials_resolve_from_ctx() {
+        let ctx = LaneCtx { tid: 5, ntid: 128, ctaid: 2, nctaid: 16 };
+        let read = |_r: Reg| 0u32;
+        assert_eq!(operand_value(&Operand::Special(Special::TidX), &ctx, &read), 5);
+        assert_eq!(operand_value(&Operand::Special(Special::NTidX), &ctx, &read), 128);
+        assert_eq!(operand_value(&Operand::Special(Special::CtaIdX), &ctx, &read), 2);
+        assert_eq!(operand_value(&Operand::Special(Special::NCtaIdX), &ctx, &read), 16);
+        assert_eq!(operand_value(&Operand::ImmF(2.5), &ctx, &read), 2.5f32.to_bits());
+    }
+}

@@ -1,0 +1,179 @@
+//! Load-store-unit front half (§IV-B2, Fig. 4): address-range checking
+//! (local vs remote split), memory coalescing into bank-IO-width chunks,
+//! and the near-bank-offload qualification test (all lanes valid + single
+//! NBU + perfectly coalesced).
+
+use crate::mem::{AddrMap, BankCoord};
+
+/// One coalesced bank-IO-width DRAM chunk of a warp access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    /// Chunk-aligned base address.
+    pub addr: u64,
+    pub coord: BankCoord,
+    /// Flat global core id owning the chunk.
+    pub core_global: usize,
+}
+
+/// A warp's memory access after LSU processing.
+#[derive(Clone, Debug)]
+pub struct WarpAccess {
+    /// Unique chunks, in first-touch lane order.
+    pub chunks: Vec<Chunk>,
+    /// All active lanes' addresses form one contiguous ascending 4-byte
+    /// run (Fig. 4: "perfectly coalesced").
+    pub contiguous: bool,
+    /// All chunks map to a single (core, NBU) pair.
+    pub single_nbu: bool,
+    /// All chunks map to a single core.
+    pub single_core: bool,
+}
+
+/// Coalesce per-lane 4-byte accesses into unique chunks of
+/// `chunk_bytes` (the bank IO width).
+pub fn coalesce(addrs: &[u64], map: &AddrMap, chunk_bytes: u64, cores_per_proc: usize) -> WarpAccess {
+    let mut chunks: Vec<Chunk> = Vec::new();
+    for &a in addrs {
+        // A 4-byte access may straddle two chunks only if misaligned;
+        // the ISA is word-aligned so one chunk suffices.
+        let base = a & !(chunk_bytes - 1);
+        if !chunks.iter().any(|c| c.addr == base) {
+            let coord = map.decode(base);
+            let core_global = coord.proc * cores_per_proc + coord.core;
+            chunks.push(Chunk { addr: base, coord, core_global });
+        }
+    }
+
+    let contiguous = {
+        let mut sorted: Vec<u64> = addrs.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        sorted.len() == addrs.len()
+            && sorted.windows(2).all(|w| w[1] == w[0] + 4)
+    };
+
+    let single_nbu = {
+        let mut it = chunks.iter();
+        match it.next() {
+            None => true,
+            Some(first) => it.all(|c| {
+                c.core_global == first.core_global && c.coord.nbu == first.coord.nbu
+            }),
+        }
+    };
+    let single_core = {
+        let mut it = chunks.iter();
+        match it.next() {
+            None => true,
+            Some(first) => it.all(|c| c.core_global == first.core_global),
+        }
+    };
+
+    WarpAccess { chunks, contiguous, single_nbu, single_core }
+}
+
+impl WarpAccess {
+    /// Split chunk indices into (local, remote) relative to `home_core`.
+    pub fn split(&self, home_core: usize) -> (Vec<usize>, Vec<usize>) {
+        let mut local = Vec::new();
+        let mut remote = Vec::new();
+        for (i, c) in self.chunks.iter().enumerate() {
+            if c.core_global == home_core {
+                local.push(i);
+            } else {
+                remote.push(i);
+            }
+        }
+        (local, remote)
+    }
+
+    /// Fig. 4 (6): qualify for near-bank offloading — every thread
+    /// active (`full_warp`), all addresses in the issuing core's own
+    /// DRAM die, and perfectly coalesced. When it qualifies, only the
+    /// leading address crosses the TSVs.
+    ///
+    /// Fidelity note: the paper checks the *NBU* id against the warp's
+    /// NBU; under the §IV-C horizontal core structure all four NBUs of a
+    /// core share one DRAM die, so we qualify at core granularity and
+    /// model the cross-NBU on-die hop as free (DESIGN.md §2). The strict
+    /// per-NBU condition is still exposed via `single_nbu` for analysis.
+    pub fn offloadable(&self, full_warp: bool, home_core: usize) -> bool {
+        full_warp
+            && self.contiguous
+            && self.single_core
+            && !self.chunks.is_empty()
+            && self.chunks[0].core_global == home_core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn setup() -> (MachineConfig, AddrMap) {
+        let cfg = MachineConfig::scaled();
+        let m = AddrMap::new(&cfg);
+        (cfg, m)
+    }
+
+    #[test]
+    fn contiguous_warp_access_coalesces_to_four_chunks() {
+        let (cfg, m) = setup();
+        // 32 lanes × 4 B = 128 B = 4 chunks of 32 B.
+        let addrs: Vec<u64> = (0..32).map(|i| i * 4).collect();
+        let wa = coalesce(&addrs, &m, 32, cfg.cores_per_proc);
+        assert_eq!(wa.chunks.len(), 4);
+        assert!(wa.contiguous);
+        assert!(wa.single_nbu, "128 B run stays inside one 256 B interleave chunk");
+    }
+
+    #[test]
+    fn broadcast_coalesces_to_one_chunk_not_contiguous() {
+        let (cfg, m) = setup();
+        let addrs = vec![64u64; 32];
+        let wa = coalesce(&addrs, &m, 32, cfg.cores_per_proc);
+        assert_eq!(wa.chunks.len(), 1);
+        assert!(!wa.contiguous, "replicated addresses are not a contiguous run");
+    }
+
+    #[test]
+    fn strided_access_explodes_chunks() {
+        let (cfg, m) = setup();
+        // Stride 32 B: every lane its own chunk.
+        let addrs: Vec<u64> = (0..32).map(|i| i * 32).collect();
+        let wa = coalesce(&addrs, &m, 32, cfg.cores_per_proc);
+        assert_eq!(wa.chunks.len(), 32);
+        assert!(!wa.contiguous);
+    }
+
+    #[test]
+    fn offloadable_requires_all_three_conditions() {
+        let (cfg, m) = setup();
+        let addrs: Vec<u64> = (0..32).map(|i| i * 4).collect();
+        let wa = coalesce(&addrs, &m, 32, cfg.cores_per_proc);
+        let home = wa.chunks[0].core_global;
+        assert!(wa.offloadable(true, home));
+        assert!(!wa.offloadable(false, home), "divergent warp");
+        assert!(!wa.offloadable(true, home + 1), "wrong core");
+        // Broadcast (non-contiguous) never offloads.
+        let wb = coalesce(&vec![0u64; 32], &m, 32, cfg.cores_per_proc);
+        assert!(!wb.offloadable(true, wb.chunks[0].core_global));
+    }
+
+    #[test]
+    fn split_partitions_by_core() {
+        let (cfg, m) = setup();
+        // Two accesses far apart → different banks, possibly different
+        // cores. Build addresses in interleave chunks of different cores.
+        let banks_per_core = cfg.nbus_per_core * cfg.banks_per_nbu;
+        let other_core_addr = (cfg.interleave_bytes * banks_per_core) as u64;
+        let wa = coalesce(&[0, other_core_addr], &m, 32, cfg.cores_per_proc);
+        assert_eq!(wa.chunks.len(), 2);
+        let home = wa.chunks[0].core_global;
+        let (local, remote) = wa.split(home);
+        assert_eq!(local.len(), 1);
+        assert_eq!(remote.len(), 1);
+        assert!(!wa.single_nbu);
+    }
+}

@@ -1,0 +1,20 @@
+//! The MPU core model (§IV): hybrid far-bank/near-bank SIMT pipeline.
+//!
+//! * [`exec`] — functional per-lane execution of the mini-PTX ISA;
+//! * [`warp`] — warp state: registers, SIMT stack, scoreboard, and the
+//!   §IV-B1 register track table;
+//! * [`offload`] — the Fig.-3 instruction-offload decision and register
+//!   move planning;
+//! * [`lsu`] — LSU front half: range check, coalescing, and the Fig.-4
+//!   near-bank-offload qualification;
+//! * [`machine`] — the assembled machine: cores, subcores, NBUs, TSVs,
+//!   DRAM controllers, mesh, barriers, and the timing main loop.
+
+pub mod exec;
+pub mod warp;
+pub mod offload;
+pub mod lsu;
+pub mod machine;
+
+pub use machine::Machine;
+pub use offload::ExecLoc;

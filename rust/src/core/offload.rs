@@ -1,0 +1,297 @@
+//! Instruction-offload decision + register-move planning (§IV-B1, Fig. 3).
+//!
+//! Step 1: instruction location — hardware-mandated far-bank set first
+//! (global ld/st through the LSU, control flow, barriers), then the
+//! compiler hint (Algorithm-1 annotation), then the hardware default
+//! (offload iff all sources have valid near-bank copies), with far-bank
+//! as the universal fallback.
+//!
+//! Step 2: source-register locations — hardware policy for memory ops
+//! (address regs far, value regs near), otherwise follow the
+//! instruction.
+//!
+//! Step 3: register movement — compare against the track table; every
+//! miss is one warp-register (128 B) transfer by the register move
+//! engine.
+
+use super::warp::TrackTable;
+use crate::config::{MachineConfig, OffloadPolicy, PipelineMode, SmemLocation};
+use crate::isa::instr::Loc;
+use crate::isa::{Instr, Op, Reg, RegClass, Space};
+
+/// Where an instruction executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecLoc {
+    Near,
+    Far,
+}
+
+/// A planned register move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MoveDir {
+    /// Far-bank RF → near-bank RF (down the TSVs).
+    ToNb,
+    /// Near-bank RF → far-bank RF (up the TSVs).
+    ToFb,
+}
+
+/// Step 1 of Fig. 3: decide the execution location.
+pub fn instr_location(
+    instr: &Instr,
+    instr_loc_hint: Loc,
+    cfg: &MachineConfig,
+    track: &TrackTable,
+) -> ExecLoc {
+    if cfg.pipeline_mode == PipelineMode::PonB {
+        return ExecLoc::Far;
+    }
+    // Hardware-mandated set (highest priority).
+    match instr.op {
+        Op::Bra | Op::Bar | Op::Exit => return ExecLoc::Far,
+        Op::Ld | Op::St | Op::Red => {
+            return match instr.space {
+                Some(Space::Shared) if cfg.smem_location == SmemLocation::NearBank => ExecLoc::Near,
+                // Far-bank smem executes on the base logic die; global
+                // accesses always go through the far-bank LSU front half
+                // (the near-bank handoff is modelled inside the LSU path).
+                _ => ExecLoc::Far,
+            };
+        }
+        _ => {}
+    }
+    match cfg.offload_policy {
+        OffloadPolicy::AllNearBank => ExecLoc::Near,
+        OffloadPolicy::AllFarBank => ExecLoc::Far,
+        OffloadPolicy::CompilerAnnotated => match instr_loc_hint {
+            Loc::N => ExecLoc::Near,
+            Loc::F | Loc::B => ExecLoc::Far,
+            Loc::U => hardware_default(instr, track),
+        },
+        OffloadPolicy::HardwareDefault => hardware_default(instr, track),
+    }
+}
+
+/// The §IV-B1 default policy: offload iff every source register has a
+/// valid near-bank copy; far-bank is the fall-back with full pipeline
+/// support.
+fn hardware_default(instr: &Instr, track: &TrackTable) -> ExecLoc {
+    let srcs: Vec<Reg> = instr
+        .reads()
+        .into_iter()
+        .filter(|r| r.class != RegClass::P)
+        .collect();
+    if !srcs.is_empty() && srcs.iter().all(|r| track.nb_valid(*r)) {
+        ExecLoc::Near
+    } else {
+        ExecLoc::Far
+    }
+}
+
+/// Required location of each *read* register (step 2 of Fig. 3).
+/// Predicates never move — the SIMT mask travels with the instruction
+/// packet.
+pub fn required_reg_locs(instr: &Instr, loc: ExecLoc, cfg: &MachineConfig) -> Vec<(Reg, ExecLoc)> {
+    let mut out = Vec::new();
+    match (instr.op, instr.space) {
+        (Op::Ld, Some(Space::Global)) => {
+            if let Some(a) = instr.addr_reg() {
+                out.push((a, ExecLoc::Far));
+            }
+        }
+        (Op::St, Some(Space::Global)) | (Op::Red, Some(Space::Global)) => {
+            if let Some(a) = instr.addr_reg() {
+                out.push((a, ExecLoc::Far));
+            }
+            let value_loc = if cfg.pipeline_mode == PipelineMode::PonB {
+                ExecLoc::Far
+            } else {
+                ExecLoc::Near
+            };
+            for s in instr.srcs.iter().filter_map(|o| o.as_reg()) {
+                if s.class != RegClass::P {
+                    out.push((s, value_loc));
+                }
+            }
+        }
+        (Op::Ld | Op::St | Op::Red, Some(Space::Shared)) => {
+            // Shared memory executes wherever the smem lives; all its
+            // registers are needed there.
+            for r in instr
+                .srcs
+                .iter()
+                .filter_map(|o| o.as_reg())
+                .chain(instr.addr_reg())
+            {
+                if r.class != RegClass::P {
+                    out.push((r, loc));
+                }
+            }
+        }
+        _ => {
+            for r in instr
+                .srcs
+                .iter()
+                .filter_map(|o| o.as_reg())
+                .chain(instr.addr_reg())
+            {
+                if r.class != RegClass::P {
+                    out.push((r, loc));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Step 3 of Fig. 3: plan the register moves against the track table.
+/// A register valid in *neither* file has never been written (reads as
+/// zero) and is materialized in place without traffic.
+pub fn plan_moves(required: &[(Reg, ExecLoc)], track: &TrackTable) -> Vec<(Reg, MoveDir)> {
+    let mut moves = Vec::new();
+    for (r, want) in required {
+        match want {
+            ExecLoc::Near if !track.nb_valid(*r) && track.fb_valid(*r) => {
+                moves.push((*r, MoveDir::ToNb));
+            }
+            ExecLoc::Far if !track.fb_valid(*r) && track.nb_valid(*r) => {
+                moves.push((*r, MoveDir::ToFb));
+            }
+            _ => {}
+        }
+    }
+    moves
+}
+
+/// Where the destination register is written (updates the track table).
+pub fn dst_location(instr: &Instr, loc: ExecLoc, cfg: &MachineConfig) -> Option<(Reg, ExecLoc)> {
+    let dst = instr.dst?;
+    // Predicates physically live far-bank (control logic).
+    if dst.class == RegClass::P {
+        return Some((dst, ExecLoc::Far));
+    }
+    match (instr.op, instr.space) {
+        // §IV-B2: global-load data always lands in the near-bank RF
+        // first (PonB has no near-bank RF).
+        (Op::Ld, Some(Space::Global)) => {
+            if cfg.pipeline_mode == PipelineMode::PonB {
+                Some((dst, ExecLoc::Far))
+            } else {
+                Some((dst, ExecLoc::Near))
+            }
+        }
+        _ => Some((dst, loc)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::scaled()
+    }
+
+    fn annotated(src: &str) -> Vec<Instr> {
+        let instrs = assemble(src).unwrap();
+        let (instrs, _, _) = crate::compiler::location::annotate(&instrs, &[]);
+        instrs
+    }
+
+    #[test]
+    fn hardware_set_overrides_everything() {
+        let cfg = cfg();
+        let t = TrackTable::default();
+        let i = annotated("ld.global.f32 %f1, [%r1+0]\nexit");
+        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far);
+        let i = annotated("bar.sync\nexit");
+        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far);
+    }
+
+    #[test]
+    fn smem_follows_its_location() {
+        let mut cfg = cfg();
+        let t = TrackTable::default();
+        let i = annotated("st.shared.f32 [%r1+0], %f1\nexit");
+        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Near);
+        cfg.smem_location = SmemLocation::FarBank;
+        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far);
+    }
+
+    #[test]
+    fn compiler_hint_decides_alu() {
+        let cfg = cfg();
+        let t = TrackTable::default();
+        let i = annotated("add.f32 %f1, %f2, %f3\nexit");
+        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Near);
+        assert_eq!(instr_location(&i[0], Loc::F, &cfg, &t), ExecLoc::Far);
+    }
+
+    #[test]
+    fn hardware_default_uses_track_table() {
+        let mut cfg = cfg();
+        cfg.offload_policy = OffloadPolicy::HardwareDefault;
+        let mut t = TrackTable::default();
+        let i = annotated("add.f32 %f1, %f2, %f3\nexit");
+        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far, "no NB copies yet");
+        t.write_nb(Reg::f(2));
+        t.write_nb(Reg::f(3));
+        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Near);
+    }
+
+    #[test]
+    fn ponb_never_offloads() {
+        let mut cfg = cfg();
+        cfg.pipeline_mode = PipelineMode::PonB;
+        let mut t = TrackTable::default();
+        t.write_nb(Reg::f(2));
+        t.write_nb(Reg::f(3));
+        let i = annotated("add.f32 %f1, %f2, %f3\nexit");
+        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far);
+        assert_eq!(dst_location(&i[0], ExecLoc::Far, &cfg), Some((Reg::f(1), ExecLoc::Far)));
+    }
+
+    #[test]
+    fn ld_global_addr_far_data_near() {
+        let cfg = cfg();
+        let i = annotated("ld.global.f32 %f1, [%r1+0]\nexit");
+        let req = required_reg_locs(&i[0], ExecLoc::Far, &cfg);
+        assert_eq!(req, vec![(Reg::r(1), ExecLoc::Far)]);
+        assert_eq!(dst_location(&i[0], ExecLoc::Far, &cfg), Some((Reg::f(1), ExecLoc::Near)));
+    }
+
+    #[test]
+    fn st_global_value_near_addr_far() {
+        let cfg = cfg();
+        let i = annotated("st.global.f32 [%r1+0], %f1\nexit");
+        let req = required_reg_locs(&i[0], ExecLoc::Far, &cfg);
+        assert!(req.contains(&(Reg::r(1), ExecLoc::Far)));
+        assert!(req.contains(&(Reg::f(1), ExecLoc::Near)));
+    }
+
+    #[test]
+    fn moves_follow_track_table_state() {
+        let mut t = TrackTable::default();
+        t.write_fb(Reg::f(1)); // only far copy
+        t.write_nb(Reg::f(2)); // only near copy
+        let req = vec![(Reg::f(1), ExecLoc::Near), (Reg::f(2), ExecLoc::Near)];
+        let m = plan_moves(&req, &t);
+        assert_eq!(m, vec![(Reg::f(1), MoveDir::ToNb)]);
+        let req = vec![(Reg::f(2), ExecLoc::Far)];
+        assert_eq!(plan_moves(&req, &t), vec![(Reg::f(2), MoveDir::ToFb)]);
+        // Valid in neither file → no traffic.
+        let req = vec![(Reg::f(7), ExecLoc::Near)];
+        assert!(plan_moves(&req, &t).is_empty());
+    }
+
+    #[test]
+    fn predicates_never_move() {
+        let cfg = cfg();
+        let i = annotated("@%p1 add.f32 %f1, %f2, %f3\nexit");
+        let req = required_reg_locs(&i[0], ExecLoc::Near, &cfg);
+        assert!(req.iter().all(|(r, _)| r.class != RegClass::P));
+        // And a setp destination lands far-bank even if issued near.
+        let i = annotated("setp.lt.f32 %p1, %f1, %f2\nexit");
+        assert_eq!(dst_location(&i[0], ExecLoc::Near, &cfg), Some((Reg::p(1), ExecLoc::Far)));
+    }
+}

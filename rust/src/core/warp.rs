@@ -1,0 +1,399 @@
+//! Warp state: per-lane registers, the SIMT re-convergence stack (§III),
+//! the scoreboard view (`reg_ready`), and the register track table that
+//! the offload machinery consults (§IV-B1: *FBValid*/*NBValid* bits).
+
+use crate::isa::{Instr, Operand, Reg, RegClass};
+use std::collections::HashSet;
+
+/// One SIMT-stack entry: execution resumes at `pc` under `mask`, popping
+/// when `pc` reaches `rpc` (the re-convergence PC).
+#[derive(Clone, Copy, Debug)]
+pub struct SimtEntry {
+    pub pc: usize,
+    pub mask: u64,
+    pub rpc: usize,
+}
+
+/// Dense per-register write-completion times (the scoreboard's data).
+/// Indexed by (class, idx) — no hashing on the issue hot path
+/// (EXPERIMENTS.md §Perf iteration 2).
+#[derive(Clone, Debug)]
+pub struct RegReady {
+    t: [Vec<u64>; 3],
+}
+
+impl RegReady {
+    fn new(counts: [usize; 3]) -> RegReady {
+        RegReady { t: [vec![0; counts[0]], vec![0; counts[1]], vec![0; counts[2]]] }
+    }
+
+    #[inline]
+    fn slot(&mut self, r: Reg) -> &mut u64 {
+        let c = Warp::class_idx(r.class);
+        let v = &mut self.t[c];
+        if r.idx as usize >= v.len() {
+            v.resize(r.idx as usize + 1, 0);
+        }
+        &mut v[r.idx as usize]
+    }
+
+    /// Record a pending write completing at `at`.
+    pub fn insert(&mut self, r: Reg, at: u64) {
+        *self.slot(r) = at;
+    }
+
+    /// Completion time of the last write to `r` (0 = ready since launch).
+    #[inline]
+    pub fn get(&self, r: Reg) -> u64 {
+        let v = &self.t[Warp::class_idx(r.class)];
+        v.get(r.idx as usize).copied().unwrap_or(0)
+    }
+}
+
+/// Register track table (§IV-B1): which physical file(s) hold a valid
+/// copy of each register for this warp.
+#[derive(Clone, Debug, Default)]
+pub struct TrackTable {
+    nb: HashSet<Reg>,
+    fb: HashSet<Reg>,
+}
+
+impl TrackTable {
+    pub fn nb_valid(&self, r: Reg) -> bool {
+        self.nb.contains(&r)
+    }
+    pub fn fb_valid(&self, r: Reg) -> bool {
+        self.fb.contains(&r)
+    }
+    /// A register move copies (does not invalidate the source side).
+    pub fn copy_to_nb(&mut self, r: Reg) {
+        self.nb.insert(r);
+    }
+    pub fn copy_to_fb(&mut self, r: Reg) {
+        self.fb.insert(r);
+    }
+    /// A write lands in exactly one file and invalidates the other copy.
+    pub fn write_nb(&mut self, r: Reg) {
+        self.nb.insert(r);
+        self.fb.remove(&r);
+    }
+    pub fn write_fb(&mut self, r: Reg) {
+        self.fb.insert(r);
+        self.nb.remove(&r);
+    }
+}
+
+/// Warp execution status (scheduler's view).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WarpState {
+    Ready,
+    /// Waiting at a block barrier.
+    AtBarrier,
+    /// All lanes exited.
+    Done,
+}
+
+/// A resident warp.
+#[derive(Clone, Debug)]
+pub struct Warp {
+    /// Block id this warp belongs to (grid-level).
+    pub block: u32,
+    /// Warp index within the block.
+    pub warp_in_block: usize,
+    /// Number of live threads (last warp of a block may be partial).
+    pub lanes: usize,
+    /// Subcore (and therefore NBU) this warp is bound to.
+    pub subcore: usize,
+    pub state: WarpState,
+    /// SIMT stack; `stack.last()` is the executing entry.
+    pub stack: Vec<SimtEntry>,
+    /// Cycle at which the warp may next issue.
+    pub ready_at: u64,
+    /// Cycle of last issue (GTO greedy bookkeeping).
+    pub last_issue: u64,
+    /// Pending-write completion times (scoreboard).
+    pub reg_ready: RegReady,
+    pub track: TrackTable,
+    /// Register values: [class][reg][lane].
+    regs: [Vec<Vec<u32>>; 3],
+    warp_size: usize,
+}
+
+impl Warp {
+    pub fn new(
+        block: u32,
+        warp_in_block: usize,
+        lanes: usize,
+        subcore: usize,
+        reg_counts: [usize; 3],
+        warp_size: usize,
+    ) -> Warp {
+        let full: u64 = if lanes >= 64 { !0 } else { (1u64 << lanes) - 1 };
+        Warp {
+            block,
+            warp_in_block,
+            lanes,
+            subcore,
+            state: WarpState::Ready,
+            stack: vec![SimtEntry { pc: 0, mask: full, rpc: usize::MAX }],
+            ready_at: 0,
+            last_issue: 0,
+            reg_ready: RegReady::new(reg_counts),
+            track: TrackTable::default(),
+            regs: [
+                vec![vec![0; warp_size]; reg_counts[0]],
+                vec![vec![0; warp_size]; reg_counts[1]],
+                vec![vec![0; warp_size]; reg_counts[2]],
+            ],
+            warp_size,
+        }
+    }
+
+    #[inline]
+    pub(crate) fn class_idx(c: RegClass) -> usize {
+        match c {
+            RegClass::R => 0,
+            RegClass::F => 1,
+            RegClass::P => 2,
+        }
+    }
+
+    pub fn read(&self, r: Reg, lane: usize) -> u32 {
+        self.regs[Self::class_idx(r.class)][r.idx as usize][lane]
+    }
+
+    pub fn write(&mut self, r: Reg, lane: usize, v: u32) {
+        self.regs[Self::class_idx(r.class)][r.idx as usize][lane] = v;
+    }
+
+    /// Broadcast-write a value to all lanes (parameter delivery).
+    pub fn write_all(&mut self, r: Reg, v: u32) {
+        for lane in 0..self.warp_size {
+            self.write(r, lane, v);
+        }
+    }
+
+    /// Current PC (top of SIMT stack).
+    pub fn pc(&self) -> usize {
+        self.stack.last().map(|e| e.pc).unwrap_or(usize::MAX)
+    }
+
+    /// Current active mask.
+    pub fn active_mask(&self) -> u64 {
+        self.stack.last().map(|e| e.mask).unwrap_or(0)
+    }
+
+    pub fn is_lane_active(&self, lane: usize) -> bool {
+        self.active_mask() >> lane & 1 == 1
+    }
+
+    /// Active lane indices.
+    pub fn active_lanes(&self) -> Vec<usize> {
+        let m = self.active_mask();
+        (0..self.lanes).filter(|&l| m >> l & 1 == 1).collect()
+    }
+
+    /// Step the top PC to `pc`, then pop any entries that reached their
+    /// re-convergence point.
+    pub fn set_pc(&mut self, pc: usize) {
+        if let Some(top) = self.stack.last_mut() {
+            top.pc = pc;
+        }
+        while self.stack.len() > 1 {
+            let top = *self.stack.last().unwrap();
+            if top.pc == top.rpc || top.mask == 0 {
+                self.stack.pop();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Execute a (possibly divergent) branch: lanes in `taken` jump to
+    /// `target`, the rest fall through to `fall`; both re-converge at
+    /// `rpc`. Standard GPGPU-Sim stack discipline.
+    pub fn branch(&mut self, taken: u64, target: usize, fall: usize, rpc: usize) {
+        let cur = self.active_mask();
+        let taken = taken & cur;
+        let not_taken = cur & !taken;
+        if taken == cur {
+            self.set_pc(target);
+        } else if taken == 0 {
+            self.set_pc(fall);
+        } else {
+            // Divergence: current entry becomes the re-convergence entry.
+            // A path that starts *at* the re-convergence point is empty —
+            // pushing it would let those lanes run ahead of the other
+            // path (e.g. `@%p bra SKIP` where SKIP is the join): its
+            // lanes simply wait in the re-convergence entry.
+            if let Some(top) = self.stack.last_mut() {
+                top.pc = rpc;
+            }
+            if fall != rpc {
+                self.stack.push(SimtEntry { pc: fall, mask: not_taken, rpc });
+            }
+            if target != rpc {
+                self.stack.push(SimtEntry { pc: target, mask: taken, rpc });
+            }
+        }
+    }
+
+    /// Retire `mask` lanes (exit instruction). Returns true if the warp
+    /// has fully terminated.
+    pub fn exit_lanes(&mut self, mask: u64) -> bool {
+        for e in self.stack.iter_mut() {
+            e.mask &= !mask;
+        }
+        self.stack.retain(|e| e.mask != 0);
+        if self.stack.is_empty() {
+            self.state = WarpState::Done;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Scoreboard check: can this instruction's operands be used at
+    /// `now`? Returns the earliest cycle all reads+writes are resolved.
+    pub fn operands_ready_at(&self, reads: &[Reg], writes: &[Reg]) -> u64 {
+        reads.iter().chain(writes.iter()).map(|r| self.reg_ready.get(*r)).max().unwrap_or(0)
+    }
+
+    /// Allocation-free scoreboard check for an instruction (the issue
+    /// hot path; equivalent to `operands_ready_at(reads(), writes())`).
+    #[inline]
+    pub fn instr_ready_at(&self, i: &Instr) -> u64 {
+        let mut t = 0u64;
+        for o in &i.srcs {
+            if let Operand::Reg(r) = o {
+                t = t.max(self.reg_ready.get(*r));
+            }
+        }
+        if let Some(m) = i.mem {
+            t = t.max(self.reg_ready.get(m.base));
+        }
+        if let Some((p, _)) = i.guard {
+            t = t.max(self.reg_ready.get(p));
+        }
+        if let Some(d) = i.dst {
+            t = t.max(self.reg_ready.get(d));
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn warp() -> Warp {
+        Warp::new(0, 0, 32, 0, [8, 8, 2], 32)
+    }
+
+    #[test]
+    fn full_mask_for_32_lanes() {
+        let w = warp();
+        assert_eq!(w.active_mask(), 0xFFFF_FFFF);
+        assert_eq!(w.active_lanes().len(), 32);
+        let w = Warp::new(0, 0, 5, 0, [1, 1, 1], 32);
+        assert_eq!(w.active_mask(), 0b11111);
+    }
+
+    #[test]
+    fn uniform_branch_no_divergence() {
+        let mut w = warp();
+        w.branch(0xFFFF_FFFF, 10, 1, 20);
+        assert_eq!(w.pc(), 10);
+        assert_eq!(w.stack.len(), 1);
+        w.branch(0, 5, 11, 20);
+        assert_eq!(w.pc(), 11);
+    }
+
+    #[test]
+    fn divergent_branch_pushes_and_reconverges() {
+        let mut w = warp();
+        // Half the lanes take the branch to 10, rest fall to 2; rpc 20.
+        w.branch(0x0000_FFFF, 10, 2, 20);
+        assert_eq!(w.stack.len(), 3);
+        assert_eq!(w.pc(), 10);
+        assert_eq!(w.active_mask(), 0x0000_FFFF);
+        // Taken path reaches rpc → pops to fall path.
+        w.set_pc(20);
+        assert_eq!(w.pc(), 2);
+        assert_eq!(w.active_mask(), 0xFFFF_0000);
+        // Fall path reaches rpc → pops to re-converged entry.
+        w.set_pc(20);
+        assert_eq!(w.pc(), 20);
+        assert_eq!(w.active_mask(), 0xFFFF_FFFF);
+        assert_eq!(w.stack.len(), 1);
+    }
+
+    #[test]
+    fn branch_to_reconvergence_point_does_not_run_ahead() {
+        // `@%p bra SKIP` guarding a preload: taken lanes jump straight
+        // to the join. They must NOT execute the join-side code before
+        // the fall-through lanes finish the guarded region.
+        let mut w = warp();
+        w.branch(0xFFFF_FE00, 5, 1, 5); // lanes ≥9 skip to pc 5 (= rpc)
+        // Fall path (lanes 0..9) executes first.
+        assert_eq!(w.pc(), 1);
+        assert_eq!(w.active_mask(), 0x0000_01FF);
+        // When it reaches the join, everyone re-converges together.
+        w.set_pc(5);
+        assert_eq!(w.pc(), 5);
+        assert_eq!(w.active_mask(), 0xFFFF_FFFF);
+        assert_eq!(w.stack.len(), 1);
+    }
+
+    #[test]
+    fn exit_terminates_warp() {
+        let mut w = warp();
+        assert!(!w.exit_lanes(0x0000_0001));
+        assert_eq!(w.active_mask(), 0xFFFF_FFFE);
+        assert!(w.exit_lanes(0xFFFF_FFFE));
+        assert_eq!(w.state, WarpState::Done);
+    }
+
+    #[test]
+    fn divergent_exit_keeps_other_path_alive() {
+        let mut w = warp();
+        w.branch(0x0000_00FF, 10, 2, 20);
+        // Taken lanes (mask FF) exit.
+        assert!(!w.exit_lanes(0x0000_00FF));
+        // Stack popped to the fall-through path.
+        assert_eq!(w.pc(), 2);
+        assert_eq!(w.active_mask(), 0xFFFF_FF00);
+    }
+
+    #[test]
+    fn registers_read_write() {
+        let mut w = warp();
+        w.write(Reg::f(3), 7, 42);
+        assert_eq!(w.read(Reg::f(3), 7), 42);
+        assert_eq!(w.read(Reg::f(3), 6), 0);
+        w.write_all(Reg::r(1), 9);
+        assert_eq!(w.read(Reg::r(1), 0), 9);
+        assert_eq!(w.read(Reg::r(1), 31), 9);
+    }
+
+    #[test]
+    fn scoreboard_max_of_pending() {
+        let mut w = warp();
+        w.reg_ready.insert(Reg::f(1), 100);
+        w.reg_ready.insert(Reg::r(2), 50);
+        assert_eq!(w.operands_ready_at(&[Reg::f(1)], &[]), 100);
+        assert_eq!(w.operands_ready_at(&[Reg::r(2)], &[Reg::f(1)]), 100);
+        assert_eq!(w.operands_ready_at(&[Reg::r(3)], &[]), 0);
+    }
+
+    #[test]
+    fn track_table_write_invalidates_other_side() {
+        let mut t = TrackTable::default();
+        t.write_fb(Reg::f(1));
+        assert!(t.fb_valid(Reg::f(1)) && !t.nb_valid(Reg::f(1)));
+        t.copy_to_nb(Reg::f(1));
+        assert!(t.fb_valid(Reg::f(1)) && t.nb_valid(Reg::f(1)));
+        t.write_nb(Reg::f(1));
+        assert!(!t.fb_valid(Reg::f(1)) && t.nb_valid(Reg::f(1)));
+    }
+}

@@ -1,0 +1,206 @@
+//! DRAM bank timing state machine.
+//!
+//! Each bank has `row_buffers` independently-activated subarray-group
+//! row buffers (MASA [33]); with one buffer this degenerates to a
+//! conventional bank. Column commands serialize on the bank IO at
+//! `tCCD`; a row-buffer miss pays `tRAS`-constrained PRE + `tRP` + ACT
+//! `tRCD`; data returns `tCL` after the column command. Refresh stalls
+//! the whole bank for `tRFC` every `tREFI`.
+//!
+//! Simplification (documented in DESIGN.md): reads and writes share the
+//! column timing (`tCL`); `tRTP`/write-recovery are folded into `tRAS`
+//! enforcement. At the fidelity of the paper's evaluation (row-hit rate
+//! and bandwidth shape) this is inconsequential.
+
+use crate::config::DramTiming;
+
+/// Outcome class of a column access (drives Fig. 12's miss-rate metric
+/// and PRE/ACT energy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Open row matched: column access only.
+    Hit,
+    /// Buffer empty: ACT + column.
+    Empty,
+    /// Conflict: PRE + ACT + column.
+    Miss,
+}
+
+/// One DRAM bank.
+#[derive(Clone, Debug)]
+pub struct Bank {
+    /// Open row per row-buffer slot.
+    slots: Vec<Option<usize>>,
+    /// Activation time of each slot's open row (tRAS enforcement).
+    slot_act: Vec<u64>,
+    /// Column-IO free time (tCCD serialization).
+    io_free: u64,
+    /// Next scheduled refresh.
+    next_refresh: u64,
+    /// Bank unavailable until (refresh in progress).
+    refresh_busy: u64,
+    /// Refresh events issued.
+    pub refreshes: u64,
+}
+
+impl Bank {
+    pub fn new(row_buffers: usize, timing: &DramTiming) -> Bank {
+        let n = row_buffers.max(1);
+        Bank {
+            slots: vec![None; n],
+            slot_act: vec![0; n],
+            io_free: 0,
+            next_refresh: timing.t_refi,
+            refresh_busy: 0,
+            refreshes: 0,
+        }
+    }
+
+    /// Open row in `slot`, if any.
+    pub fn open_row(&self, slot: usize) -> Option<usize> {
+        self.slots[slot]
+    }
+
+    /// Would an access to (`row`, `slot`) hit right now?
+    pub fn would_hit(&self, row: usize, slot: usize) -> bool {
+        self.slots[slot] == Some(row)
+    }
+
+    /// Earliest cycle at which the bank can accept a column command.
+    pub fn io_free_at(&self) -> u64 {
+        self.io_free.max(self.refresh_busy)
+    }
+
+    /// Perform one column access to `row` via row-buffer `slot` starting
+    /// no earlier than `now`. Returns `(data_ready_cycle, kind)`.
+    pub fn access(&mut self, now: u64, row: usize, slot: usize, t: &DramTiming) -> (u64, AccessKind) {
+        // Refresh: all-bank refresh every tREFI.
+        if now >= self.next_refresh {
+            let start = self.io_free.max(self.next_refresh);
+            self.refresh_busy = start + t.t_rfc;
+            // Refresh closes all row buffers.
+            for s in self.slots.iter_mut() {
+                *s = None;
+            }
+            while self.next_refresh <= now {
+                self.next_refresh += t.t_refi;
+            }
+            self.refreshes += 1;
+        }
+
+        let start = now.max(self.io_free).max(self.refresh_busy);
+        let (col_cmd, kind) = match self.slots[slot] {
+            Some(r) if r == row => (start, AccessKind::Hit),
+            Some(_) => {
+                // PRE may not issue before tRAS has elapsed since ACT.
+                let pre = start.max(self.slot_act[slot] + t.t_ras);
+                let act = pre + t.t_rp;
+                self.slot_act[slot] = act;
+                (act + t.t_rcd, AccessKind::Miss)
+            }
+            None => {
+                self.slot_act[slot] = start;
+                (start + t.t_rcd, AccessKind::Empty)
+            }
+        };
+        self.slots[slot] = Some(row);
+        self.io_free = col_cmd + t.t_ccd;
+        (col_cmd + t.t_cl, kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramTiming;
+
+    fn t() -> DramTiming {
+        DramTiming::default()
+    }
+
+    #[test]
+    fn first_access_is_empty_activation() {
+        let mut b = Bank::new(1, &t());
+        let (ready, kind) = b.access(0, 5, 0, &t());
+        assert_eq!(kind, AccessKind::Empty);
+        assert_eq!(ready, t().t_rcd + t().t_cl);
+        assert_eq!(b.open_row(0), Some(5));
+    }
+
+    #[test]
+    fn same_row_hits_and_serializes_on_tccd() {
+        let mut b = Bank::new(1, &t());
+        b.access(0, 5, 0, &t());
+        let io = b.io_free_at();
+        let (r1, k1) = b.access(0, 5, 0, &t());
+        assert_eq!(k1, AccessKind::Hit);
+        assert_eq!(r1, io + t().t_cl);
+        let (r2, k2) = b.access(0, 5, 0, &t());
+        assert_eq!(k2, AccessKind::Hit);
+        assert_eq!(r2, r1 + t().t_ccd, "column commands pace at tCCD");
+    }
+
+    #[test]
+    fn row_conflict_pays_pre_act() {
+        let tm = t();
+        let mut b = Bank::new(1, &tm);
+        b.access(0, 5, 0, &tm);
+        // Access a different row long after tRAS expired.
+        let now = 200;
+        let (ready, kind) = b.access(now, 9, 0, &tm);
+        assert_eq!(kind, AccessKind::Miss);
+        assert_eq!(ready, now + tm.t_rp + tm.t_rcd + tm.t_cl);
+        assert_eq!(b.open_row(0), Some(9));
+    }
+
+    #[test]
+    fn tras_delays_early_precharge() {
+        let tm = t();
+        let mut b = Bank::new(1, &tm);
+        b.access(0, 5, 0, &tm); // ACT at 0
+        // Conflict immediately: PRE must wait until tRAS.
+        let (ready, kind) = b.access(1, 9, 0, &tm);
+        assert_eq!(kind, AccessKind::Miss);
+        assert_eq!(ready, tm.t_ras + tm.t_rp + tm.t_rcd + tm.t_cl);
+    }
+
+    #[test]
+    fn masa_slots_are_independent() {
+        let tm = t();
+        let mut b = Bank::new(4, &tm);
+        b.access(0, 0, 0, &tm);
+        // Different row in a different slot: no PRE needed (Empty), and
+        // the previously opened row stays open.
+        let (_, kind) = b.access(100, 1, 1, &tm);
+        assert_eq!(kind, AccessKind::Empty);
+        assert_eq!(b.open_row(0), Some(0));
+        assert_eq!(b.open_row(1), Some(1));
+        // Ping-pong between the two rows now hits both ways.
+        let (_, k0) = b.access(200, 0, 0, &tm);
+        let (_, k1) = b.access(201, 1, 1, &tm);
+        assert_eq!((k0, k1), (AccessKind::Hit, AccessKind::Hit));
+    }
+
+    #[test]
+    fn single_buffer_ping_pongs() {
+        let tm = t();
+        let mut b = Bank::new(1, &tm);
+        b.access(0, 0, 0, &tm);
+        let (_, k1) = b.access(100, 1, 0, &tm);
+        let (_, k2) = b.access(200, 0, 0, &tm);
+        assert_eq!(k1, AccessKind::Miss);
+        assert_eq!(k2, AccessKind::Miss, "same two rows keep conflicting");
+    }
+
+    #[test]
+    fn refresh_closes_rows_and_stalls() {
+        let tm = t();
+        let mut b = Bank::new(2, &tm);
+        b.access(0, 3, 0, &tm);
+        let (ready, kind) = b.access(tm.t_refi + 1, 3, 0, &tm);
+        // Refresh fired: row was closed → Empty, delayed by tRFC.
+        assert_eq!(kind, AccessKind::Empty);
+        assert!(ready >= tm.t_refi + tm.t_rfc + tm.t_rcd + tm.t_cl);
+        assert_eq!(b.refreshes, 1);
+    }
+}

@@ -1,0 +1,254 @@
+//! Per-NBU memory controller: FR-FCFS scheduling over the NBU's banks
+//! with an open-page policy (Table II). The controller lives on the DRAM
+//! die next to its banks (§IV-B), so commands never cross the TSVs for
+//! near-bank requests.
+
+use super::bank::{AccessKind, Bank};
+use crate::config::MachineConfig;
+use crate::sim::Stats;
+
+/// One column-granularity DRAM request (bank-IO width, 32 B at the
+/// Table-II 256-bit bank IO).
+#[derive(Clone, Copy, Debug)]
+pub struct DramRequest {
+    /// Caller-assigned completion tag.
+    pub id: u64,
+    /// Bank index local to this NBU.
+    pub bank: usize,
+    /// DRAM row.
+    pub row: usize,
+    /// Row-buffer slot (from `AddrMap::slot_of_row`).
+    pub slot: usize,
+    pub is_write: bool,
+}
+
+#[derive(Clone, Debug)]
+struct Pending {
+    arrival: u64,
+    req: DramRequest,
+}
+
+/// FR-FCFS memory controller over `banks_per_nbu` banks.
+#[derive(Clone, Debug)]
+pub struct MemController {
+    banks: Vec<Bank>,
+    queue: Vec<Pending>,
+    /// (ready_cycle, id) completions not yet collected.
+    done: Vec<(u64, u64)>,
+    timing: crate::config::DramTiming,
+    io_bytes: u64,
+}
+
+impl MemController {
+    pub fn new(cfg: &MachineConfig) -> MemController {
+        MemController {
+            banks: (0..cfg.banks_per_nbu)
+                .map(|_| Bank::new(cfg.row_buffers_per_bank, &cfg.timing))
+                .collect(),
+            queue: Vec::new(),
+            done: Vec::new(),
+            timing: cfg.timing,
+            io_bytes: (cfg.bank_io_bits / 8) as u64,
+        }
+    }
+
+    /// Enqueue a request at cycle `now`.
+    pub fn push(&mut self, now: u64, req: DramRequest) {
+        self.queue.push(Pending { arrival: now, req });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Advance scheduling up to cycle `now`: issue every request whose
+    /// bank can accept a column command, first-ready (row hit) first,
+    /// then oldest. Returns nothing; completions are collected with
+    /// [`MemController::drain_completed`].
+    pub fn advance(&mut self, now: u64, stats: &mut Stats) {
+        loop {
+            // Candidate requests whose bank IO is free at `now`.
+            let mut pick: Option<usize> = None;
+            let mut pick_hit = false;
+            let mut pick_arrival = u64::MAX;
+            for (qi, p) in self.queue.iter().enumerate() {
+                let bank = &self.banks[p.req.bank];
+                if bank.io_free_at() > now {
+                    continue;
+                }
+                let hit = bank.would_hit(p.req.row, p.req.slot);
+                // FR-FCFS: row hits beat older non-hits; ties by age.
+                let better = match (hit, pick_hit) {
+                    (true, false) => true,
+                    (false, true) => false,
+                    _ => p.arrival < pick_arrival,
+                };
+                if pick.is_none() || better {
+                    pick = Some(qi);
+                    pick_hit = hit;
+                    pick_arrival = p.arrival;
+                }
+            }
+            let Some(qi) = pick else { break };
+            let p = self.queue.swap_remove(qi);
+            let bank = &mut self.banks[p.req.bank];
+            let (ready, kind) = bank.access(now, p.req.row, p.req.slot, &self.timing);
+            match kind {
+                AccessKind::Hit => stats.row_hits += 1,
+                AccessKind::Empty => {
+                    stats.row_misses += 1;
+                    stats.dram_acts += 1;
+                }
+                AccessKind::Miss => {
+                    stats.row_misses += 1;
+                    stats.dram_acts += 1;
+                    stats.dram_pres += 1;
+                }
+            }
+            if p.req.is_write {
+                stats.dram_writes += 1;
+            } else {
+                stats.dram_reads += 1;
+            }
+            stats.dram_bytes += self.io_bytes;
+            self.done.push((ready, p.req.id));
+        }
+        // Fold bank refresh counts into stats lazily.
+        let refs: u64 = self.banks.iter().map(|b| b.refreshes).sum();
+        if refs > stats.dram_refs {
+            stats.dram_refs = refs;
+        }
+    }
+
+    /// Collect ids whose data is ready by `now`.
+    pub fn drain_completed(&mut self, now: u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.done.len() {
+            if self.done[i].0 <= now {
+                out.push(self.done.swap_remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Earliest cycle at which anything interesting can happen (used by
+    /// the machine's idle fast-forward).
+    pub fn next_event(&self) -> Option<u64> {
+        let q = self
+            .queue
+            .iter()
+            .map(|p| self.banks[p.req.bank].io_free_at())
+            .min();
+        let d = self.done.iter().map(|(r, _)| *r).min();
+        match (q, d) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Is the controller completely idle?
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.done.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc() -> (MemController, Stats) {
+        (MemController::new(&MachineConfig::scaled()), Stats::default())
+    }
+
+    fn req(id: u64, bank: usize, row: usize, slot: usize) -> DramRequest {
+        DramRequest { id, bank, row, slot, is_write: false }
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let (mut mc, mut st) = mc();
+        mc.push(0, req(1, 0, 0, 0));
+        mc.advance(0, &mut st);
+        assert!(mc.drain_completed(5).is_empty(), "not ready yet");
+        let done = mc.drain_completed(1000);
+        assert_eq!(done, vec![1]);
+        assert!(mc.idle());
+        assert_eq!(st.dram_reads, 1);
+        assert_eq!(st.row_misses, 1, "cold access counts as a miss");
+    }
+
+    #[test]
+    fn frfcfs_prefers_row_hits() {
+        let (mut mc, mut st) = mc();
+        // Open row 0.
+        mc.push(0, req(1, 0, 0, 0));
+        mc.advance(0, &mut st);
+        for _ in 0..100 {
+            mc.advance(100, &mut st);
+        }
+        mc.drain_completed(10_000);
+        // Now queue an older row-1 (conflict) and a newer row-0 (hit).
+        mc.push(200, DramRequest { id: 2, bank: 0, row: 1, slot: 0, is_write: false });
+        mc.push(201, DramRequest { id: 3, bank: 0, row: 0, slot: 0, is_write: false });
+        // One scheduling round at a time: the hit (id 3) goes first.
+        mc.advance(300, &mut st);
+        let first = mc.drain_completed(100_000);
+        assert_eq!(first, vec![3], "row hit bypasses the older conflict");
+        mc.advance(10_000, &mut st);
+        let mut all = mc.drain_completed(100_000);
+        all.extend(first);
+        all.sort_unstable();
+        assert_eq!(all, vec![2, 3]);
+        assert!(st.row_hits >= 1, "the row-0 request must have hit");
+    }
+
+    #[test]
+    fn banks_operate_in_parallel() {
+        let (mut mc, mut st) = mc();
+        mc.push(0, req(1, 0, 0, 0));
+        mc.push(0, req(2, 1, 0, 0));
+        mc.advance(0, &mut st);
+        // Both issued at cycle 0 (different banks) → same ready time.
+        let done_times: Vec<u64> = mc.done.iter().map(|(r, _)| *r).collect();
+        assert_eq!(done_times.len(), 2);
+        assert_eq!(done_times[0], done_times[1]);
+    }
+
+    #[test]
+    fn same_bank_serializes() {
+        let (mut mc, mut st) = mc();
+        mc.push(0, req(1, 0, 0, 0));
+        mc.push(0, req(2, 0, 0, 0));
+        mc.advance(0, &mut st);
+        // Second same-bank request can't issue at cycle 0: the first is
+        // an empty-row activation, so the IO frees at tRCD + tCCD.
+        assert_eq!(mc.pending(), 1);
+        let t = MachineConfig::scaled().timing;
+        mc.advance(t.t_ccd, &mut st);
+        assert_eq!(mc.pending(), 1, "still waiting on the ACT");
+        mc.advance(t.t_rcd + t.t_ccd, &mut st);
+        assert_eq!(mc.pending(), 0);
+    }
+
+    #[test]
+    fn writes_counted_separately() {
+        let (mut mc, mut st) = mc();
+        mc.push(0, DramRequest { id: 1, bank: 0, row: 0, slot: 0, is_write: true });
+        mc.advance(0, &mut st);
+        assert_eq!(st.dram_writes, 1);
+        assert_eq!(st.dram_reads, 0);
+    }
+
+    #[test]
+    fn next_event_guides_fast_forward() {
+        let (mut mc, mut st) = mc();
+        assert_eq!(mc.next_event(), None);
+        mc.push(0, req(1, 0, 0, 0));
+        mc.advance(0, &mut st);
+        let e = mc.next_event().unwrap();
+        assert!(e > 0, "completion is in the future");
+    }
+}

@@ -1,0 +1,10 @@
+//! DRAM substrate: bank timing FSM with multiple activated row-buffers
+//! (MASA, §IV-C) and a per-NBU FR-FCFS open-page memory controller
+//! (Table II: `open_page / FR-FCFS`; the controller sits on the DRAM die,
+//! §IV-B).
+
+pub mod bank;
+pub mod controller;
+
+pub use bank::{AccessKind, Bank};
+pub use controller::{DramRequest, MemController};

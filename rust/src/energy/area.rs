@@ -1,0 +1,142 @@
+//! Area model (Table III): DRAM-die overhead of MPU's near-bank
+//! components, with the conservative 2× DRAM-process penalty already
+//! folded into the per-unit numbers (as in the paper).
+
+use crate::config::MachineConfig;
+
+/// One Table-III row.
+#[derive(Clone, Debug)]
+pub struct AreaRow {
+    pub name: &'static str,
+    pub count: usize,
+    /// mm² per DRAM die for this component class.
+    pub area_mm2: f64,
+    /// Percent of a 96 mm² HBM DRAM die.
+    pub overhead_pct: f64,
+}
+
+/// Table-III per-unit areas (mm², DRAM process, 20 nm), derived from the
+/// paper's totals divided by the per-die instance counts.
+mod unit {
+    pub const SMEM: f64 = 0.84 / 4.0;
+    pub const RF: f64 = 9.71 / 16.0;
+    pub const MEMCTRL: f64 = 0.63 / 16.0;
+    pub const OPC: f64 = 2.43 / 64.0;
+    pub const VALU: f64 = 3.74 / 16.0;
+    pub const LSU_EXT: f64 = 2.43 / 16.0;
+    pub const MULTI_ROWBUF: f64 = 0.01 / 64.0;
+}
+
+/// HBM DRAM die footprint (mm²) [68].
+pub const DRAM_DIE_MM2: f64 = 96.0;
+
+/// Area report for one DRAM die.
+#[derive(Clone, Debug)]
+pub struct AreaReport {
+    pub rows: Vec<AreaRow>,
+}
+
+impl AreaReport {
+    /// Build the report for a machine configuration. In the paper's
+    /// horizontal core structure, 4 cores share one DRAM die (8 procs ×
+    /// 4 dies × 16 cores → 4 cores/die with 4 NBUs each → 16 NBUs/die).
+    pub fn for_config(cfg: &MachineConfig) -> AreaReport {
+        let cores_per_die = 4;
+        let nbus = cores_per_die * cfg.nbus_per_core;
+        let banks = nbus * cfg.banks_per_nbu;
+        let opcs = nbus * 4; // 4 operand collectors per NBU
+        // The near-bank RF is half the far-bank size (§VI-B, thanks to
+        // the Fig.-14 register-location separation); Table III already
+        // reflects the halved size, scale if configured differently.
+        let rf_scale = cfg.nb_rf_bytes as f64 / (16.0 * 1024.0);
+        // Multi-row-buffer support scales with extra row-buffer count.
+        let extra_bufs = cfg.row_buffers_per_bank.saturating_sub(1) as f64 / 3.0;
+
+        let rows = vec![
+            row("Shared Memory", cores_per_die, unit::SMEM * cores_per_die as f64),
+            row("Register File", nbus, unit::RF * rf_scale * nbus as f64),
+            row("Memory Controller", nbus, unit::MEMCTRL * nbus as f64),
+            row("Operand Collector", opcs, unit::OPC * opcs as f64),
+            row("Vector ALU", nbus, unit::VALU * nbus as f64),
+            row("LSU-extension", nbus, unit::LSU_EXT * nbus as f64),
+            row("Multi-row-buffer Support", banks, unit::MULTI_ROWBUF * extra_bufs * banks as f64),
+        ];
+        AreaReport { rows }
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.rows.iter().map(|r| r.area_mm2).sum()
+    }
+
+    pub fn total_overhead_pct(&self) -> f64 {
+        self.total_mm2() / DRAM_DIE_MM2 * 100.0
+    }
+
+    /// Overhead if the *whole* core were placed on the DRAM die instead
+    /// of the hybrid split (§VI-B: ~2× the hybrid overhead).
+    pub fn whole_core_overhead_pct(&self) -> f64 {
+        // Frontend + full-size RF + LSU + I-cache roughly double the
+        // near-bank area (Harmonica synthesis 3.4 mm²/core × 4 cores ×
+        // 2 (DRAM process) on top, with the RF at full size).
+        let full_rf_extra = self.rows[1].area_mm2; // RF doubles
+        let frontend = 3.4 * 4.0 * 2.0 - self.total_mm2() * 0.3;
+        ((self.total_mm2() + full_rf_extra + frontend.max(0.0)) / DRAM_DIE_MM2) * 100.0
+    }
+}
+
+fn row(name: &'static str, count: usize, area: f64) -> AreaRow {
+    AreaRow { name, count, area_mm2: area, overhead_pct: area / DRAM_DIE_MM2 * 100.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_table3_total() {
+        let r = AreaReport::for_config(&MachineConfig::paper());
+        // Table III: total 19.80 mm², 20.62% overhead.
+        assert!((r.total_mm2() - 19.80).abs() < 0.3, "total {}", r.total_mm2());
+        assert!((r.total_overhead_pct() - 20.62).abs() < 0.5, "pct {}", r.total_overhead_pct());
+    }
+
+    #[test]
+    fn individual_rows_match_table3() {
+        let r = AreaReport::for_config(&MachineConfig::paper());
+        let get = |n: &str| r.rows.iter().find(|x| x.name == n).unwrap().area_mm2;
+        assert!((get("Shared Memory") - 0.84).abs() < 0.01);
+        assert!((get("Register File") - 9.71).abs() < 0.01);
+        assert!((get("Vector ALU") - 3.74).abs() < 0.01);
+        assert!((get("Multi-row-buffer Support") - 0.01).abs() < 0.005);
+    }
+
+    #[test]
+    fn full_rf_raises_overhead_toward_30pct() {
+        // §VI-B: without the compiler's register-location separation the
+        // near-bank RF is full-size → overhead ≈ 30.74%.
+        let mut cfg = MachineConfig::paper();
+        cfg.nb_rf_bytes = 32 << 10;
+        let r = AreaReport::for_config(&cfg);
+        assert!(
+            (r.total_overhead_pct() - 30.74).abs() < 1.0,
+            "pct {}",
+            r.total_overhead_pct()
+        );
+    }
+
+    #[test]
+    fn whole_core_costs_roughly_double() {
+        let r = AreaReport::for_config(&MachineConfig::paper());
+        let whole = r.whole_core_overhead_pct();
+        assert!(whole > 1.7 * r.total_overhead_pct(), "whole {} hybrid {}", whole, r.total_overhead_pct());
+    }
+
+    #[test]
+    fn single_row_buffer_has_no_masa_area() {
+        let mut cfg = MachineConfig::paper();
+        cfg.row_buffers_per_bank = 1;
+        let r = AreaReport::for_config(&cfg);
+        let masa = r.rows.iter().find(|x| x.name == "Multi-row-buffer Support").unwrap();
+        assert_eq!(masa.area_mm2, 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Compute-centric GPU baseline (DESIGN.md §2 substitution for the
+//! authors' Tesla V100 measurements): the same SIMT front end as the MPU
+//! model, but with a conventional memory hierarchy — coalesced accesses
+//! go through an L2 model and a shared HBM bandwidth pipe with long
+//! latency, and all data lands in the (far-bank) register file.
+
+pub mod machine;
+
+pub use machine::GpuMachine;

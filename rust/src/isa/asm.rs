@@ -1,0 +1,453 @@
+//! Text assembler for the mini-PTX ISA.
+//!
+//! Grammar (one instruction per line, `;` optional, `//`/`#` comments):
+//!
+//! ```text
+//! LOOP:                               // label
+//! mov.u32       %r1, %tid.x
+//! mad.u32       %r4, %r2, %r3, %r1
+//! setp.ge.s32   %p1, %r4, %r5
+//! @%p1 bra      DONE
+//! ld.global.f32 %f1, [%r6+4]
+//! st.shared.f32 [%r7], %f1
+//! red.global.add.f32 [%r8], %f1
+//! bar.sync
+//! bra           LOOP
+//! DONE:
+//! exit
+//! ```
+
+use super::instr::*;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Assemble mini-PTX text into a resolved instruction vector.
+pub fn assemble(text: &str) -> Result<Vec<Instr>> {
+    let mut instrs: Vec<Instr> = Vec::new();
+    let mut labels: Vec<(String, usize)> = Vec::new();
+    let mut pending: Vec<(usize, String, usize)> = Vec::new(); // (instr idx, label, line no)
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().trim_end_matches(';').trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_suffix(':') {
+            let name = name.trim();
+            if !is_ident(name) {
+                bail!("line {}: bad label `{name}`", lineno + 1);
+            }
+            labels.push((name.to_string(), instrs.len()));
+            continue;
+        }
+        let (instr, target_label) =
+            parse_instr(line).with_context(|| format!("line {}: `{line}`", lineno + 1))?;
+        if let Some(lbl) = target_label {
+            pending.push((instrs.len(), lbl, lineno + 1));
+        }
+        instrs.push(instr);
+    }
+
+    for (idx, lbl, lineno) in pending {
+        let t = labels
+            .iter()
+            .find(|(n, _)| *n == lbl)
+            .map(|(_, i)| *i)
+            .ok_or_else(|| anyhow!("line {lineno}: undefined label `{lbl}`"))?;
+        instrs[idx].target = Some(t);
+    }
+    // A label at end-of-program may point one past the last instruction;
+    // normalize by appending an exit so every target is a valid index.
+    let needs_exit = instrs.iter().any(|i| i.target == Some(instrs.len()))
+        || !matches!(instrs.last().map(|i| i.op), Some(Op::Exit));
+    if needs_exit {
+        instrs.push(Instr {
+            op: Op::Exit,
+            ty: Ty::U32,
+            src_ty: None,
+            dst: None,
+            srcs: vec![],
+            mem: None,
+            space: None,
+            cmp: None,
+            guard: None,
+            target: None,
+            loc: Loc::U,
+        });
+    }
+    Ok(instrs)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let cut = line.find("//").into_iter().chain(line.find('#')).min();
+    match cut {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn is_ident(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_instr(line: &str) -> Result<(Instr, Option<String>)> {
+    let mut rest = line;
+    // Optional guard prefix.
+    let mut guard = None;
+    if let Some(r) = rest.strip_prefix('@') {
+        let (neg, r) = match r.strip_prefix('!') {
+            Some(r) => (true, r),
+            None => (false, r),
+        };
+        let end = r
+            .find(char::is_whitespace)
+            .ok_or_else(|| anyhow!("guard without instruction"))?;
+        let reg = parse_reg(&r[..end])?;
+        if reg.class != RegClass::P {
+            bail!("guard must be a predicate register");
+        }
+        guard = Some((reg, neg));
+        rest = r[end..].trim_start();
+    }
+
+    let (mnemonic, operands) = match rest.find(char::is_whitespace) {
+        Some(i) => (&rest[..i], rest[i..].trim()),
+        None => (rest, ""),
+    };
+
+    let parts: Vec<&str> = mnemonic.split('.').collect();
+    let opname = parts[0];
+    let mut space = None;
+    let mut cmp = None;
+    let mut tys: Vec<Ty> = Vec::new();
+    for p in &parts[1..] {
+        match *p {
+            "global" => space = Some(Space::Global),
+            "shared" => space = Some(Space::Shared),
+            "eq" => cmp = Some(CmpOp::Eq),
+            "ne" => cmp = Some(CmpOp::Ne),
+            "lt" => cmp = Some(CmpOp::Lt),
+            "le" => cmp = Some(CmpOp::Le),
+            "gt" => cmp = Some(CmpOp::Gt),
+            "ge" => cmp = Some(CmpOp::Ge),
+            "s32" => tys.push(Ty::S32),
+            "u32" => tys.push(Ty::U32),
+            "f32" => tys.push(Ty::F32),
+            "pred" => tys.push(Ty::Pred),
+            // Ignored PTX noise modifiers.
+            "lo" | "rn" | "rz" | "rzi" | "sync" | "add" | "wide" | "sat" | "ftz" | "approx" => {}
+            other => bail!("unknown modifier `.{other}` in `{mnemonic}`"),
+        }
+    }
+
+    let op = match opname {
+        "mov" => Op::Mov,
+        "cvt" => Op::Cvt,
+        "add" => Op::Add,
+        "sub" => Op::Sub,
+        "mul" => Op::Mul,
+        "mad" | "fma" => Op::Mad,
+        "div" => Op::Div,
+        "rem" => Op::Rem,
+        "min" => Op::Min,
+        "max" => Op::Max,
+        "and" => Op::And,
+        "or" => Op::Or,
+        "xor" => Op::Xor,
+        "shl" => Op::Shl,
+        "shr" => Op::Shr,
+        "neg" => Op::Neg,
+        "abs" => Op::Abs,
+        "sqrt" => Op::Sqrt,
+        "setp" => Op::Setp,
+        "selp" => Op::Selp,
+        "bra" => Op::Bra,
+        "ld" => Op::Ld,
+        "st" => Op::St,
+        "red" | "atom" => Op::Red,
+        "bar" => Op::Bar,
+        "exit" | "ret" => Op::Exit,
+        other => bail!("unknown opcode `{other}`"),
+    };
+
+    let ty = tys.first().copied().unwrap_or(Ty::U32);
+    let src_ty = tys.get(1).copied();
+
+    let mut instr = Instr {
+        op,
+        ty,
+        src_ty,
+        dst: None,
+        srcs: vec![],
+        mem: None,
+        space,
+        cmp,
+        guard,
+        target: None,
+        loc: Loc::U,
+    };
+
+    match op {
+        Op::Bra => {
+            if !is_ident(operands) {
+                bail!("bra needs a label, got `{operands}`");
+            }
+            return Ok((instr, Some(operands.to_string())));
+        }
+        Op::Bar | Op::Exit => {
+            return Ok((instr, None));
+        }
+        _ => {}
+    }
+
+    let toks = split_operands(operands)?;
+    if toks.is_empty() {
+        bail!("`{opname}` needs operands");
+    }
+
+    match op {
+        Op::Ld => {
+            // ld.space.ty %d, [%a+off]
+            if toks.len() != 2 {
+                bail!("ld expects `%d, [%a+off]`");
+            }
+            instr.dst = Some(parse_reg(&toks[0])?);
+            instr.mem = Some(parse_memref(&toks[1])?);
+            if space.is_none() {
+                bail!("ld needs an address space");
+            }
+        }
+        Op::St | Op::Red => {
+            // st.space.ty [%a+off], %s
+            if toks.len() != 2 {
+                bail!("st/red expect `[%a+off], src`");
+            }
+            instr.mem = Some(parse_memref(&toks[0])?);
+            instr.srcs.push(parse_operand(&toks[1], ty)?);
+            if space.is_none() {
+                bail!("st/red need an address space");
+            }
+        }
+        Op::Setp => {
+            if toks.len() != 3 {
+                bail!("setp expects `%p, a, b`");
+            }
+            if cmp.is_none() {
+                bail!("setp needs a comparison modifier");
+            }
+            instr.dst = Some(parse_reg(&toks[0])?);
+            instr.srcs.push(parse_operand(&toks[1], ty)?);
+            instr.srcs.push(parse_operand(&toks[2], ty)?);
+        }
+        _ => {
+            // Generic: first operand is the destination register.
+            instr.dst = Some(parse_reg(&toks[0])?);
+            let src_ty_eff = src_ty.unwrap_or(ty);
+            for t in &toks[1..] {
+                instr.srcs.push(parse_operand(t, src_ty_eff)?);
+            }
+            let expect = match op {
+                Op::Mov | Op::Cvt | Op::Neg | Op::Abs | Op::Sqrt => 1,
+                Op::Mad => 3,
+                Op::Selp => 3,
+                _ => 2,
+            };
+            if instr.srcs.len() != expect {
+                bail!("`{opname}` expects {expect} source operand(s), got {}", instr.srcs.len());
+            }
+        }
+    }
+
+    Ok((instr, None))
+}
+
+/// Split `a, [%b + 4], c` on top-level commas (commas inside `[...]` kept).
+fn split_operands(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' => {
+                depth = depth.checked_sub(1).ok_or_else(|| anyhow!("unbalanced `]`"))?;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if depth != 0 {
+        bail!("unbalanced `[`");
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    Ok(out)
+}
+
+fn parse_reg(s: &str) -> Result<Reg> {
+    let body = s
+        .strip_prefix('%')
+        .ok_or_else(|| anyhow!("expected register, got `{s}`"))?;
+    let (class, idx) = match body.chars().next() {
+        Some('r') => (RegClass::R, &body[1..]),
+        Some('f') => (RegClass::F, &body[1..]),
+        Some('p') => (RegClass::P, &body[1..]),
+        _ => bail!("bad register `{s}`"),
+    };
+    let idx: u16 = idx.parse().map_err(|_| anyhow!("bad register index `{s}`"))?;
+    Ok(Reg { class, idx })
+}
+
+fn parse_special(s: &str) -> Option<Special> {
+    match s {
+        "%tid.x" => Some(Special::TidX),
+        "%ntid.x" => Some(Special::NTidX),
+        "%ctaid.x" => Some(Special::CtaIdX),
+        "%nctaid.x" => Some(Special::NCtaIdX),
+        _ => None,
+    }
+}
+
+fn parse_operand(s: &str, ty: Ty) -> Result<Operand> {
+    if let Some(sp) = parse_special(s) {
+        return Ok(Operand::Special(sp));
+    }
+    if s.starts_with('%') {
+        return Ok(Operand::Reg(parse_reg(s)?));
+    }
+    if ty == Ty::F32 || s.contains('.') || (s.contains('e') && !s.starts_with("0x")) {
+        let v: f32 = s.parse().map_err(|_| anyhow!("bad float immediate `{s}`"))?;
+        return Ok(Operand::ImmF(v));
+    }
+    let v: i64 = if let Some(hex) = s.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16).map_err(|_| anyhow!("bad hex immediate `{s}`"))?
+    } else if let Some(hex) = s.strip_prefix("-0x") {
+        -i64::from_str_radix(hex, 16).map_err(|_| anyhow!("bad hex immediate `{s}`"))?
+    } else {
+        s.parse().map_err(|_| anyhow!("bad immediate `{s}`"))?
+    };
+    Ok(Operand::ImmI(v as i32))
+}
+
+fn parse_memref(s: &str) -> Result<MemRef> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| anyhow!("expected `[%reg+off]`, got `{s}`"))?
+        .trim();
+    let (reg_s, off) = if let Some(i) = inner.find('+') {
+        (inner[..i].trim(), inner[i + 1..].trim().parse::<i32>().map_err(|_| anyhow!("bad offset in `{s}`"))?)
+    } else if let Some(i) = inner.rfind('-') {
+        if i == 0 {
+            bail!("bad memref `{s}`");
+        }
+        (inner[..i].trim(), -inner[i + 1..].trim().parse::<i32>().map_err(|_| anyhow!("bad offset in `{s}`"))?)
+    } else {
+        (inner, 0)
+    };
+    Ok(MemRef { base: parse_reg(reg_s)?, offset: off })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assembles_a_small_loop() {
+        let src = r#"
+            // strided loop skeleton
+            mov.u32   %r1, %tid.x
+            mov.u32   %r2, %ctaid.x
+            mov.u32   %r3, %ntid.x
+            mad.u32   %r4, %r2, %r3, %r1
+        LOOP:
+            setp.ge.s32 %p1, %r4, %r5
+            @%p1 bra  DONE
+            ld.global.f32 %f1, [%r6+0]
+            st.global.f32 [%r7+0], %f1
+            add.u32   %r4, %r4, %r8
+            bra       LOOP
+        DONE:
+            exit
+        "#;
+        let instrs = assemble(src).unwrap();
+        assert_eq!(instrs.len(), 11);
+        assert_eq!(instrs[0].op, Op::Mov);
+        assert_eq!(instrs[0].srcs, vec![Operand::Special(Special::TidX)]);
+        assert_eq!(instrs[4].op, Op::Setp);
+        assert_eq!(instrs[4].cmp, Some(CmpOp::Ge));
+        assert_eq!(instrs[5].op, Op::Bra);
+        assert_eq!(instrs[5].guard, Some((Reg::p(1), false)));
+        assert_eq!(instrs[5].target, Some(10)); // DONE: -> exit
+        assert_eq!(instrs[9].target, Some(4)); // LOOP:
+        assert_eq!(instrs[6].space, Some(Space::Global));
+        assert_eq!(instrs[6].mem, Some(MemRef { base: Reg::r(6), offset: 0 }));
+    }
+
+    #[test]
+    fn memref_offsets() {
+        let m = parse_memref("[%r3+128]").unwrap();
+        assert_eq!(m, MemRef { base: Reg::r(3), offset: 128 });
+        let m = parse_memref("[%r3-4]").unwrap();
+        assert_eq!(m.offset, -4);
+        let m = parse_memref("[%r3]").unwrap();
+        assert_eq!(m.offset, 0);
+        assert!(parse_memref("%r3").is_err());
+    }
+
+    #[test]
+    fn float_and_int_immediates() {
+        let i = assemble("mov.f32 %f1, 1.5\nexit").unwrap();
+        assert_eq!(i[0].srcs[0], Operand::ImmF(1.5));
+        let i = assemble("mov.u32 %r1, 0x10\nexit").unwrap();
+        assert_eq!(i[0].srcs[0], Operand::ImmI(16));
+        let i = assemble("add.s32 %r1, %r1, -3\nexit").unwrap();
+        assert_eq!(i[0].srcs[1], Operand::ImmI(-3));
+    }
+
+    #[test]
+    fn negated_guard() {
+        let i = assemble("@!%p2 bra OUT\nOUT:\nexit").unwrap();
+        assert_eq!(i[0].guard, Some((Reg::p(2), true)));
+        assert_eq!(i[0].target, Some(1));
+    }
+
+    #[test]
+    fn trailing_label_gets_an_exit() {
+        let i = assemble("bra END\nEND:").unwrap();
+        assert_eq!(i.len(), 2);
+        assert_eq!(i[1].op, Op::Exit);
+        assert_eq!(i[0].target, Some(1));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(assemble("bogus.u32 %r1, %r2").is_err());
+        assert!(assemble("bra NOWHERE").is_err());
+        assert!(assemble("ld.f32 %f1, [%r1]").is_err(), "ld without space");
+        assert!(assemble("setp.s32 %p1, %r1, %r2").is_err(), "setp without cmp");
+        assert!(assemble("@%r1 bra X\nX:").is_err(), "non-predicate guard");
+    }
+
+    #[test]
+    fn cvt_has_two_types() {
+        let i = assemble("cvt.f32.s32 %f1, %r1\nexit").unwrap();
+        assert_eq!(i[0].ty, Ty::F32);
+        assert_eq!(i[0].src_ty, Some(Ty::S32));
+    }
+
+    #[test]
+    fn red_parses_like_st() {
+        let i = assemble("red.global.add.f32 [%r1+0], %f2\nexit").unwrap();
+        assert_eq!(i[0].op, Op::Red);
+        assert_eq!(i[0].mem.unwrap().base, Reg::r(1));
+        assert_eq!(i[0].srcs[0], Operand::Reg(Reg::f(2)));
+    }
+}

@@ -1,0 +1,387 @@
+//! Registers, operands and instructions of the mini-PTX ISA.
+
+use std::fmt;
+
+/// Register class: PTX-style typed virtual register files.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RegClass {
+    /// 32-bit integer / untyped (`%r`).
+    R,
+    /// 32-bit float (`%f`).
+    F,
+    /// Predicate (`%p`).
+    P,
+}
+
+/// A virtual (pre-regalloc) or physical (post-regalloc) register.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg {
+    pub class: RegClass,
+    pub idx: u16,
+}
+
+impl Reg {
+    pub fn r(idx: u16) -> Reg {
+        Reg { class: RegClass::R, idx }
+    }
+    pub fn f(idx: u16) -> Reg {
+        Reg { class: RegClass::F, idx }
+    }
+    pub fn p(idx: u16) -> Reg {
+        Reg { class: RegClass::P, idx }
+    }
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let c = match self.class {
+            RegClass::R => 'r',
+            RegClass::F => 'f',
+            RegClass::P => 'p',
+        };
+        write!(f, "%{}{}", c, self.idx)
+    }
+}
+
+/// Built-in special values (1-D launch geometry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Special {
+    /// `%tid.x` — thread index within the block.
+    TidX,
+    /// `%ntid.x` — block dimension.
+    NTidX,
+    /// `%ctaid.x` — block index within the grid.
+    CtaIdX,
+    /// `%nctaid.x` — grid dimension.
+    NCtaIdX,
+}
+
+/// An instruction operand.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Operand {
+    Reg(Reg),
+    /// Integer immediate (also used for untyped bit patterns).
+    ImmI(i32),
+    /// Float immediate.
+    ImmF(f32),
+    Special(Special),
+}
+
+impl Operand {
+    pub fn as_reg(&self) -> Option<Reg> {
+        match self {
+            Operand::Reg(r) => Some(*r),
+            _ => None,
+        }
+    }
+}
+
+/// Memory reference `[%base + offset]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemRef {
+    pub base: Reg,
+    pub offset: i32,
+}
+
+/// Address space of a memory instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Space {
+    Global,
+    Shared,
+}
+
+/// Operand/result type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ty {
+    S32,
+    U32,
+    F32,
+    Pred,
+}
+
+impl Ty {
+    /// Size in bytes when stored to memory.
+    pub fn bytes(self) -> u32 {
+        4
+    }
+}
+
+/// Comparison operator for `setp`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Opcodes of the mini-PTX ISA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// `mov.ty %d, src`
+    Mov,
+    /// `cvt.dstty.srcty %d, %s` — numeric conversion.
+    Cvt,
+    Add,
+    Sub,
+    Mul,
+    /// Fused multiply-add: `mad.ty %d, %a, %b, %c` (d = a*b + c).
+    Mad,
+    Div,
+    Rem,
+    Min,
+    Max,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Neg,
+    Abs,
+    Sqrt,
+    /// `setp.cmp.ty %p, %a, %b`
+    Setp,
+    /// `selp.ty %d, %a, %b, %p` (d = p ? a : b).
+    Selp,
+    /// `bra LABEL` (optionally guarded).
+    Bra,
+    /// `ld.space.ty %d, [%a+off]`
+    Ld,
+    /// `st.space.ty [%a+off], %s`
+    St,
+    /// `red.space.add.ty [%a+off], %s` — atomic reduction (no return).
+    Red,
+    /// `bar.sync` — block-wide barrier.
+    Bar,
+    /// `exit` — thread termination.
+    Exit,
+}
+
+impl Op {
+    /// Is this an arithmetic/logic op executed on a (near- or far-bank)
+    /// vector ALU?
+    pub fn is_alu(self) -> bool {
+        !matches!(self, Op::Bra | Op::Ld | Op::St | Op::Red | Op::Bar | Op::Exit)
+    }
+
+    /// Long-latency special-function op?
+    pub fn is_sfu(self) -> bool {
+        matches!(self, Op::Div | Op::Rem | Op::Sqrt)
+    }
+}
+
+/// Compiler/hardware location annotation of a register or instruction
+/// (Algorithm 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Loc {
+    /// Unknown (pre-analysis).
+    #[default]
+    U,
+    /// Near-bank.
+    N,
+    /// Far-bank.
+    F,
+    /// Both (register may live in either file).
+    B,
+}
+
+/// One mini-PTX instruction.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub op: Op,
+    /// Primary type (for `cvt` this is the *destination* type).
+    pub ty: Ty,
+    /// Source type for `cvt`.
+    pub src_ty: Option<Ty>,
+    pub dst: Option<Reg>,
+    pub srcs: Vec<Operand>,
+    /// Memory reference for ld/st/red.
+    pub mem: Option<MemRef>,
+    pub space: Option<Space>,
+    pub cmp: Option<CmpOp>,
+    /// Guard predicate `@%p` / `@!%p`: (register, negated).
+    pub guard: Option<(Reg, bool)>,
+    /// Branch target as an instruction index (resolved by the assembler).
+    pub target: Option<usize>,
+    /// Location annotation (filled by the compiler; `Loc::U` otherwise).
+    pub loc: Loc,
+}
+
+impl Instr {
+    /// Source registers in the paper's Algorithm-1 convention: for `st`
+    /// and `red` the *value* operand is the source while the address is
+    /// the "destination" side (PTX writes `st [addr], value`).
+    pub fn src_regs(&self) -> Vec<Reg> {
+        let mut v: Vec<Reg> = self.srcs.iter().filter_map(|o| o.as_reg()).collect();
+        match self.op {
+            Op::Ld => {
+                if let Some(m) = self.mem {
+                    v.push(m.base);
+                }
+            }
+            Op::St | Op::Red => { /* address handled by addr_reg() */ }
+            _ => {}
+        }
+        if let Some((p, _)) = self.guard {
+            v.push(p);
+        }
+        v
+    }
+
+    /// Destination registers (Algorithm-1 convention: none for `st`/`red`;
+    /// their address register is exposed via [`Instr::addr_reg`]).
+    pub fn dst_regs(&self) -> Vec<Reg> {
+        self.dst.into_iter().collect()
+    }
+
+    /// Address base register of a memory instruction.
+    pub fn addr_reg(&self) -> Option<Reg> {
+        self.mem.map(|m| m.base)
+    }
+
+    /// All registers read by the instruction at execution time (address
+    /// registers included — this is the scoreboard's view, not
+    /// Algorithm 1's).
+    pub fn reads(&self) -> Vec<Reg> {
+        let mut v: Vec<Reg> = self.srcs.iter().filter_map(|o| o.as_reg()).collect();
+        if let Some(m) = self.mem {
+            v.push(m.base);
+        }
+        if let Some((p, _)) = self.guard {
+            v.push(p);
+        }
+        v
+    }
+
+    /// All registers written by the instruction.
+    pub fn writes(&self) -> Vec<Reg> {
+        self.dst.into_iter().collect()
+    }
+
+    /// Is this a control-flow instruction?
+    pub fn is_branch(&self) -> bool {
+        matches!(self.op, Op::Bra)
+    }
+
+    /// Is this a global-memory access?
+    pub fn is_global_mem(&self) -> bool {
+        matches!(self.op, Op::Ld | Op::St | Op::Red) && self.space == Some(Space::Global)
+    }
+
+    /// Is this a shared-memory access?
+    pub fn is_shared_mem(&self) -> bool {
+        matches!(self.op, Op::Ld | Op::St | Op::Red) && self.space == Some(Space::Shared)
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let Some((p, neg)) = self.guard {
+            write!(f, "@{}{} ", if neg { "!" } else { "" }, p)?;
+        }
+        let op = format!("{:?}", self.op).to_lowercase();
+        let space = match self.space {
+            Some(Space::Global) => ".global",
+            Some(Space::Shared) => ".shared",
+            None => "",
+        };
+        let cmp = self
+            .cmp
+            .map(|c| format!(".{}", format!("{c:?}").to_lowercase()))
+            .unwrap_or_default();
+        let ty = match self.ty {
+            Ty::S32 => ".s32",
+            Ty::U32 => ".u32",
+            Ty::F32 => ".f32",
+            Ty::Pred => ".pred",
+        };
+        write!(f, "{op}{space}{cmp}{ty}")?;
+        let mut parts: Vec<String> = Vec::new();
+        if matches!(self.op, Op::St | Op::Red) {
+            if let Some(m) = self.mem {
+                parts.push(format!("[{}+{}]", m.base, m.offset));
+            }
+        }
+        if let Some(d) = self.dst {
+            parts.push(d.to_string());
+        }
+        if matches!(self.op, Op::Ld) {
+            if let Some(m) = self.mem {
+                parts.push(format!("[{}+{}]", m.base, m.offset));
+            }
+        }
+        for s in &self.srcs {
+            parts.push(match s {
+                Operand::Reg(r) => r.to_string(),
+                Operand::ImmI(i) => i.to_string(),
+                Operand::ImmF(x) => format!("{x:?}"),
+                Operand::Special(sp) => format!("{sp:?}").to_lowercase(),
+            });
+        }
+        if let Some(t) = self.target {
+            parts.push(format!("-> {t}"));
+        }
+        write!(f, " {}", parts.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st_global(addr: Reg, val: Reg) -> Instr {
+        Instr {
+            op: Op::St,
+            ty: Ty::F32,
+            src_ty: None,
+            dst: None,
+            srcs: vec![Operand::Reg(val)],
+            mem: Some(MemRef { base: addr, offset: 0 }),
+            space: Some(Space::Global),
+            cmp: None,
+            guard: None,
+            target: None,
+            loc: Loc::U,
+        }
+    }
+
+    #[test]
+    fn st_value_is_source_address_is_not() {
+        // Algorithm-1 convention: st.global's SrcRegs is the stored value;
+        // the address register is the "destination-side" operand.
+        let i = st_global(Reg::r(1), Reg::f(2));
+        assert_eq!(i.src_regs(), vec![Reg::f(2)]);
+        assert!(i.dst_regs().is_empty());
+        assert_eq!(i.addr_reg(), Some(Reg::r(1)));
+        // Scoreboard view reads both.
+        let reads = i.reads();
+        assert!(reads.contains(&Reg::f(2)) && reads.contains(&Reg::r(1)));
+    }
+
+    #[test]
+    fn guard_counts_as_read() {
+        let mut i = st_global(Reg::r(1), Reg::f(2));
+        i.guard = Some((Reg::p(0), true));
+        assert!(i.reads().contains(&Reg::p(0)));
+        assert!(i.src_regs().contains(&Reg::p(0)));
+    }
+
+    #[test]
+    fn op_classification() {
+        assert!(Op::Mad.is_alu());
+        assert!(!Op::Ld.is_alu());
+        assert!(Op::Sqrt.is_sfu());
+        assert!(!Op::Add.is_sfu());
+    }
+
+    #[test]
+    fn display_roundtrips_key_fields() {
+        let i = st_global(Reg::r(3), Reg::f(4));
+        let s = i.to_string();
+        assert!(s.contains("st.global.f32"), "{s}");
+        assert!(s.contains("[%r3+0]"), "{s}");
+        assert!(s.contains("%f4"), "{s}");
+    }
+}

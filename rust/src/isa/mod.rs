@@ -1,0 +1,21 @@
+//! The mini-PTX ISA.
+//!
+//! MPU's compiler consumes PTX produced by `nvcc` (§V-B). Reproducing
+//! `nvcc` is out of scope (DESIGN.md §2), so the twelve Table-I workloads
+//! are written directly in a PTX-shaped mini ISA that keeps everything the
+//! paper's backend needs: virtual typed registers, predication, typed
+//! loads/stores with `.global`/`.shared` address spaces, reductions,
+//! barriers, and structured branches.
+//!
+//! Submodules:
+//! * [`instr`] — registers, operands, opcodes, instruction struct;
+//! * [`asm`] — the text assembler;
+//! * [`program`] — assembled kernels and launch configuration.
+
+pub mod instr;
+pub mod asm;
+pub mod program;
+
+pub use asm::assemble;
+pub use instr::{CmpOp, Instr, MemRef, Op, Operand, Reg, RegClass, Space, Special, Ty};
+pub use program::{KernelSource, LaunchConfig};

@@ -1,0 +1,131 @@
+//! Assembled kernels and launch configuration.
+
+use super::instr::{Instr, Reg, RegClass};
+use anyhow::Result;
+
+/// A kernel parameter value passed at launch (CUDA `<<<>>>` arguments).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParamValue {
+    /// 32-bit integer / device pointer.
+    U32(u32),
+    /// 32-bit float scalar.
+    F32(f32),
+}
+
+impl ParamValue {
+    pub fn bits(self) -> u32 {
+        match self {
+            ParamValue::U32(v) => v,
+            ParamValue::F32(v) => v.to_bits(),
+        }
+    }
+}
+
+/// A parsed kernel: name, parameter registers, and assembled instructions.
+///
+/// Parameters are delivered PTX-style: the launch driver writes parameter
+/// `i` into `params[i]` (a far-bank register) before the first instruction
+/// executes — the mini-ISA equivalent of `ld.param`.
+#[derive(Clone, Debug)]
+pub struct KernelSource {
+    pub name: String,
+    pub params: Vec<Reg>,
+    pub instrs: Vec<Instr>,
+}
+
+impl KernelSource {
+    /// Assemble a kernel from mini-PTX text.
+    pub fn assemble(name: &str, params: &[Reg], text: &str) -> Result<KernelSource> {
+        let instrs = super::asm::assemble(text)?;
+        Ok(KernelSource { name: name.to_string(), params: params.to_vec(), instrs })
+    }
+
+    /// Number of virtual registers used, per class (max index + 1).
+    pub fn reg_counts(&self) -> [usize; 3] {
+        let mut counts = [0usize; 3];
+        let mut bump = |r: Reg| {
+            let c = match r.class {
+                RegClass::R => 0,
+                RegClass::F => 1,
+                RegClass::P => 2,
+            };
+            counts[c] = counts[c].max(r.idx as usize + 1);
+        };
+        for p in &self.params {
+            bump(*p);
+        }
+        for i in &self.instrs {
+            for r in i.reads() {
+                bump(r);
+            }
+            for r in i.writes() {
+                bump(r);
+            }
+        }
+        counts
+    }
+}
+
+/// 1-D launch configuration (`<<<grid, block, smem>>>`).
+#[derive(Clone, Copy, Debug)]
+pub struct LaunchConfig {
+    /// Thread blocks in the grid.
+    pub grid: u32,
+    /// Threads per block (multiple of the warp size).
+    pub block: u32,
+    /// Dynamic shared memory per block, bytes.
+    pub smem_bytes: u32,
+}
+
+impl LaunchConfig {
+    pub fn new(grid: u32, block: u32) -> Self {
+        LaunchConfig { grid, block, smem_bytes: 0 }
+    }
+
+    pub fn with_smem(grid: u32, block: u32, smem_bytes: u32) -> Self {
+        LaunchConfig { grid, block, smem_bytes }
+    }
+
+    pub fn total_threads(&self) -> u64 {
+        self.grid as u64 * self.block as u64
+    }
+
+    pub fn warps_per_block(&self, warp_size: usize) -> usize {
+        (self.block as usize).div_ceil(warp_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Reg;
+
+    #[test]
+    fn reg_counts_cover_params_and_instrs() {
+        let k = KernelSource::assemble(
+            "k",
+            &[Reg::r(0), Reg::f(9)],
+            "add.u32 %r5, %r0, 1\nexit",
+        )
+        .unwrap();
+        let c = k.reg_counts();
+        assert_eq!(c[0], 6); // %r0..%r5
+        assert_eq!(c[1], 10); // %f9
+        assert_eq!(c[2], 0);
+    }
+
+    #[test]
+    fn launch_math() {
+        let l = LaunchConfig::new(12, 96);
+        assert_eq!(l.total_threads(), 1152);
+        assert_eq!(l.warps_per_block(32), 3);
+        let l = LaunchConfig::new(1, 33);
+        assert_eq!(l.warps_per_block(32), 2);
+    }
+
+    #[test]
+    fn param_bits() {
+        assert_eq!(ParamValue::U32(7).bits(), 7);
+        assert_eq!(ParamValue::F32(1.0).bits(), 1.0f32.to_bits());
+    }
+}

@@ -1,0 +1,61 @@
+//! # MPU — Memory-centric Processing Unit
+//!
+//! A comprehensive reproduction of *"MPU: Towards Bandwidth-abundant SIMT
+//! Processor via Near-bank Computing"* (Xie, Gu, Ding, Niu, Zheng, Xie;
+//! cs.AR 2021) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate contains, in one coherent framework:
+//!
+//! * a **mini-PTX ISA** and assembler ([`isa`]) in which the paper's twelve
+//!   Table-I workloads are written;
+//! * the **MPU compiler backend** ([`compiler`]): branch re-convergence
+//!   analysis (post-dominators), the paper's Algorithm-1 *location
+//!   annotation* pass, liveness, and graph-coloring register allocation
+//!   with separate near-bank / far-bank physical register pools;
+//! * a **cycle-level functional + timing simulator** of the MPU
+//!   architecture ([`core`], [`dram`], [`mem`], [`noc`]): hybrid
+//!   far-bank/near-bank pipeline with instruction offloading, register
+//!   track table and register move engine, hybrid LSU
+//!   (LSU / LSU-Remote / LSU-Extension), near-bank units, DRAM banks with
+//!   FR-FCFS + open-page + multiple activated row-buffers (MASA), TSV
+//!   buses, a 2D-mesh NoC and near-bank shared memory;
+//! * a **V100-like GPU baseline** and a **PonB**
+//!   (processing-on-base-logic-die) baseline ([`gpu`], `PipelineMode`);
+//! * **energy and area models** with the paper's Table-II/III
+//!   coefficients ([`energy`]);
+//! * the twelve **workloads** with input generators and golden models
+//!   ([`workloads`]);
+//! * a **PJRT runtime bridge** ([`runtime`]) that loads the JAX/Pallas
+//!   AOT-compiled golden models (`artifacts/*.hlo.txt`) and validates the
+//!   simulator's functional output against XLA;
+//! * the **experiment coordinator** ([`coordinator`]) that regenerates
+//!   every figure and table of the paper's evaluation section.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mpu::config::MachineConfig;
+//! use mpu::coordinator::run_workload;
+//! use mpu::workloads::Workload;
+//!
+//! let cfg = MachineConfig::scaled();
+//! let report = run_workload(Workload::Axpy, &cfg).unwrap();
+//! println!("AXPY: {} cycles, {:.1} GB/s", report.cycles, report.dram_gbps());
+//! ```
+
+pub mod config;
+pub mod sim;
+pub mod isa;
+pub mod compiler;
+pub mod mem;
+pub mod dram;
+pub mod noc;
+pub mod core;
+pub mod gpu;
+pub mod energy;
+pub mod workloads;
+pub mod runtime;
+pub mod coordinator;
+
+pub use config::MachineConfig;
+pub use coordinator::{run_workload, RunReport};

@@ -1,0 +1,182 @@
+//! `mpu` — command-line driver for the MPU reproduction.
+//!
+//! Subcommands:
+//!   run <workload> [key=val ...] [--tiny|--paper-scale] [--gpu]
+//!   suite [key=val ...]              run all 12 workloads (MPU vs GPU)
+//!   compile <workload>               show backend annotations
+//!   validate [--tiny]                cross-check vs XLA artifacts
+//!   list                             list workloads (Table I)
+//!   config                           print the Table-II configuration
+//!
+//! The CLI is hand-rolled (no clap in the offline crate set).
+
+use mpu::config::{GpuConfig, MachineConfig};
+use mpu::coordinator::report::{f2, Table};
+use mpu::coordinator::{compile_for, geomean, run_pair, run_workload_gpu_scaled, run_workload_scaled};
+use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
+use mpu::workloads::{prepare, Scale, Workload};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: mpu <run|suite|compile|validate|list|config> [args]\n\
+         \n  mpu run axpy row_buffers_per_bank=2 --gpu\
+         \n  mpu suite offload_policy=hw\
+         \n  mpu compile gemv\
+         \n  mpu validate --tiny\
+         \n  mpu list | mpu config"
+    );
+    std::process::exit(2);
+}
+
+fn parse_cfg(args: &[String]) -> MachineConfig {
+    let mut cfg = if args.iter().any(|a| a == "--paper-scale") {
+        MachineConfig::paper()
+    } else {
+        MachineConfig::scaled()
+    };
+    for a in args {
+        if let Some((k, v)) = a.split_once('=') {
+            if let Err(e) = cfg.set(k, v) {
+                eprintln!("config error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    cfg
+}
+
+fn scale_of(args: &[String]) -> Scale {
+    if args.iter().any(|a| a == "--tiny") {
+        Scale::Tiny
+    } else {
+        Scale::Small
+    }
+}
+
+struct NullDev {
+    top: u64,
+}
+impl mpu::workloads::Device for NullDev {
+    fn alloc_bytes(&mut self, b: usize) -> u64 {
+        let a = self.top;
+        self.top += b as u64;
+        a
+    }
+    fn write_f32(&mut self, _a: u64, _d: &[f32]) {}
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let rest = &args[1..];
+
+    match cmd.as_str() {
+        "list" => {
+            println!("Table-I workloads:");
+            for w in Workload::ALL {
+                println!("  {:<8} smem={}", w.name(), if w.uses_smem() { "yes" } else { "no" });
+            }
+        }
+        "config" => {
+            let cfg = parse_cfg(rest);
+            println!("{cfg:#?}");
+            println!(
+                "\npeak bank BW: {:.0} B/cycle   peak TSV BW: {:.0} B/cycle   ratio {:.1}x",
+                cfg.peak_bank_bytes_per_cycle(),
+                cfg.peak_tsv_bytes_per_cycle(),
+                cfg.peak_bank_bytes_per_cycle() / cfg.peak_tsv_bytes_per_cycle()
+            );
+        }
+        "run" => {
+            let Some(name) = rest.first() else { usage() };
+            let w = Workload::from_name(name).unwrap_or_else(|| usage());
+            let cfg = parse_cfg(&rest[1..]);
+            let scale = scale_of(rest);
+            if rest.iter().any(|a| a == "--gpu") {
+                let g = run_workload_gpu_scaled(w, &GpuConfig::matched(&cfg), &cfg, scale)?;
+                println!(
+                    "GPU {}: {} cycles, correct={} (max_err {:.2e}), {:.1} GB/s, {:.3} mJ",
+                    w.name(),
+                    g.cycles,
+                    g.correct,
+                    g.max_err,
+                    g.dram_gbps(),
+                    g.energy.total() * 1e3
+                );
+            } else {
+                let r = run_workload_scaled(w, &cfg, scale)?;
+                println!(
+                    "MPU {}: {} cycles, correct={} (max_err {:.2e}), near {:.0}%, {:.1} GB/s, rowmiss {:.1}%, {:.3} mJ",
+                    w.name(),
+                    r.cycles,
+                    r.correct,
+                    r.max_err,
+                    r.stats.near_fraction() * 100.0,
+                    r.dram_gbps(),
+                    r.stats.row_miss_rate() * 100.0,
+                    r.energy.total() * 1e3
+                );
+            }
+        }
+        "suite" => {
+            let cfg = parse_cfg(rest);
+            let scale = scale_of(rest);
+            let mut t = Table::new("suite: MPU vs GPU", &["workload", "speedup", "energy_red", "ok"]);
+            let mut sp = Vec::new();
+            for w in Workload::ALL {
+                let p = run_pair(w, &cfg, scale)?;
+                sp.push(p.speedup());
+                t.row(vec![
+                    w.name().into(),
+                    f2(p.speedup()),
+                    f2(p.energy_reduction()),
+                    (p.mpu.correct && p.gpu.correct).to_string(),
+                ]);
+            }
+            t.row(vec!["GEOMEAN".into(), f2(geomean(&sp)), String::new(), String::new()]);
+            t.emit("suite");
+        }
+        "compile" => {
+            let Some(name) = rest.first() else { usage() };
+            let w = Workload::from_name(name).unwrap_or_else(|| usage());
+            let mut dev = NullDev { top: 0 };
+            let p = prepare(w, Scale::Tiny, &mut dev)?;
+            let k = mpu::compiler::compile(&p.kernel)?;
+            for (pc, i) in k.instrs.iter().enumerate() {
+                println!("{pc:>4}  {:?}  {}", i.loc, i);
+            }
+            println!(
+                "\nregisters: N {} / F {} / B {}; near pool {} regs, far pool {} regs",
+                k.loc_stats.near,
+                k.loc_stats.far,
+                k.loc_stats.both,
+                k.pools.near[0] + k.pools.near[1],
+                k.pools.far[0] + k.pools.far[1]
+            );
+        }
+        "validate" => {
+            let cfg = parse_cfg(rest);
+            let scale = scale_of(rest);
+            anyhow::ensure!(artifacts_available(scale), "artifacts missing: run `make artifacts`");
+            let golden = XlaGolden::new()?;
+            for w in Workload::ALL {
+                let mut m = mpu::core::Machine::new(&cfg);
+                let p = prepare(w, scale, &mut m)?;
+                let k = compile_for(&p, &cfg)?;
+                m.launch(k, p.launch, &p.params, p.home_fn())?;
+                m.run()?;
+                let out = m.read_f32s(p.out_addr, p.out_len);
+                let v = validate_against_xla(&golden, &p, scale, &out)?;
+                println!(
+                    "{:>8}: {} (max_err {:.2e})",
+                    w.name(),
+                    if v.passed { "OK" } else { "MISMATCH" },
+                    v.max_err
+                );
+                anyhow::ensure!(v.passed, "{} diverged from the XLA golden", w.name());
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,237 @@
+//! Global-memory address mapping.
+//!
+//! MPU has its own flat device address space (§V-A). Physical placement
+//! interleaves `interleave_bytes`-sized chunks across all banks of the
+//! machine (core-major), so streaming accesses spread over every bank
+//! while a single coalesced warp access stays within one bank chunk.
+//!
+//! Row addresses are additionally interleaved across subarrays when MASA
+//! is enabled (§IV-C): "continuous DRAM row addresses will be mapped to
+//! interleaved subarrays' physical rows".
+
+use crate::config::MachineConfig;
+
+/// Physical coordinates of an address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BankCoord {
+    /// Processor (cube) index.
+    pub proc: usize,
+    /// Core index within the processor.
+    pub core: usize,
+    /// NBU index within the core.
+    pub nbu: usize,
+    /// Bank index behind the NBU's memory controller.
+    pub bank: usize,
+    /// DRAM row within the bank.
+    pub row: usize,
+    /// Byte offset within the row.
+    pub col: usize,
+}
+
+impl BankCoord {
+    /// Flat global core id.
+    pub fn core_global(&self, cfg: &MachineConfig) -> usize {
+        self.proc * cfg.cores_per_proc + self.core
+    }
+}
+
+/// The address map for a machine configuration.
+#[derive(Clone, Debug)]
+pub struct AddrMap {
+    interleave: usize,
+    total_banks: usize,
+    nbus: usize,
+    banks_per_nbu: usize,
+    cores_per_proc: usize,
+    row_bytes: usize,
+    rows_per_bank: usize,
+    row_buffers: usize,
+    subarray_interleave: bool,
+}
+
+impl AddrMap {
+    pub fn new(cfg: &MachineConfig) -> AddrMap {
+        assert!(cfg.row_bytes.is_power_of_two());
+        assert!(cfg.interleave_bytes.is_power_of_two());
+        assert!(cfg.interleave_bytes <= cfg.row_bytes);
+        AddrMap {
+            interleave: cfg.interleave_bytes,
+            total_banks: cfg.total_banks(),
+            nbus: cfg.nbus_per_core,
+            banks_per_nbu: cfg.banks_per_nbu,
+            cores_per_proc: cfg.cores_per_proc,
+            row_bytes: cfg.row_bytes,
+            rows_per_bank: cfg.bank_bytes / cfg.row_bytes,
+            row_buffers: cfg.row_buffers_per_bank,
+            subarray_interleave: cfg.subarray_interleave,
+        }
+    }
+
+    /// Map a global byte address to its physical location.
+    pub fn decode(&self, addr: u64) -> BankCoord {
+        let chunk = addr as usize / self.interleave;
+        let within = addr as usize % self.interleave;
+        let bank_global = chunk % self.total_banks;
+        let bank_local_off = (chunk / self.total_banks) * self.interleave + within;
+
+        let banks_per_core = self.nbus * self.banks_per_nbu;
+        let core_global = bank_global / banks_per_core;
+        let in_core = bank_global % banks_per_core;
+        let nbu = in_core / self.banks_per_nbu;
+        let bank = in_core % self.banks_per_nbu;
+
+        let row = (bank_local_off / self.row_bytes) % self.rows_per_bank.max(1);
+        let col = bank_local_off % self.row_bytes;
+
+        BankCoord {
+            proc: core_global / self.cores_per_proc,
+            core: core_global % self.cores_per_proc,
+            nbu,
+            bank,
+            row,
+            col,
+        }
+    }
+
+    /// Row-buffer slot (subarray group) serving `row` in a bank.
+    ///
+    /// With MASA interleaving, consecutive rows rotate across the
+    /// `row_buffers` independently-activated subarray groups; without it,
+    /// the bank behaves as contiguous subarray groups, so neighbouring
+    /// rows contend for the same buffer (the ping-pong the paper fixes).
+    pub fn slot_of_row(&self, row: usize) -> usize {
+        if self.row_buffers <= 1 {
+            return 0;
+        }
+        if self.subarray_interleave {
+            row % self.row_buffers
+        } else {
+            let group = (self.rows_per_bank / self.row_buffers).max(1);
+            (row / group).min(self.row_buffers - 1)
+        }
+    }
+
+    /// Does `addr..addr+len` stay within a single interleave chunk (and
+    /// therefore a single bank)?
+    pub fn single_bank(&self, addr: u64, len: usize) -> bool {
+        if len == 0 {
+            return true;
+        }
+        (addr as usize / self.interleave) == ((addr as usize + len - 1) / self.interleave)
+    }
+
+    pub fn total_banks(&self) -> usize {
+        self.total_banks
+    }
+
+    pub fn row_bytes(&self) -> usize {
+        self.row_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::prng::{check_cases, Prng};
+
+    fn map() -> (MachineConfig, AddrMap) {
+        let cfg = MachineConfig::scaled();
+        let m = AddrMap::new(&cfg);
+        (cfg, m)
+    }
+
+    #[test]
+    fn consecutive_chunks_hit_consecutive_banks() {
+        let (cfg, m) = map();
+        let a = m.decode(0);
+        let b = m.decode(cfg.interleave_bytes as u64);
+        assert_eq!(a.proc, 0);
+        assert_eq!((a.nbu, a.bank), (0, 0));
+        assert_eq!((b.nbu, b.bank), (0, 1), "next chunk lands in the next bank");
+        // One full sweep of all banks returns to bank 0, next row region.
+        let c = m.decode((cfg.interleave_bytes * cfg.total_banks()) as u64);
+        assert_eq!((c.proc, c.core, c.nbu, c.bank), (0, 0, 0, 0));
+        assert_eq!(c.col, a.col + cfg.interleave_bytes);
+    }
+
+    #[test]
+    fn within_chunk_is_same_bank_different_col() {
+        let (_, m) = map();
+        let a = m.decode(0);
+        let b = m.decode(64);
+        assert_eq!((a.nbu, a.bank, a.row), (b.nbu, b.bank, b.row));
+        assert_eq!(b.col, 64);
+        assert!(m.single_bank(0, 256));
+        assert!(!m.single_bank(0, 257));
+        assert!(m.single_bank(17, 0));
+    }
+
+    #[test]
+    fn masa_interleave_rotates_slots() {
+        let (mut cfg, _) = map();
+        cfg.row_buffers_per_bank = 4;
+        cfg.subarray_interleave = true;
+        let m = AddrMap::new(&cfg);
+        assert_eq!(m.slot_of_row(0), 0);
+        assert_eq!(m.slot_of_row(1), 1);
+        assert_eq!(m.slot_of_row(2), 2);
+        assert_eq!(m.slot_of_row(3), 3);
+        assert_eq!(m.slot_of_row(4), 0);
+    }
+
+    #[test]
+    fn linear_mapping_groups_slots() {
+        let (mut cfg, _) = map();
+        cfg.row_buffers_per_bank = 4;
+        cfg.subarray_interleave = false;
+        let m = AddrMap::new(&cfg);
+        // Neighbouring rows share a slot.
+        assert_eq!(m.slot_of_row(0), m.slot_of_row(1));
+        // Far-apart rows use different slots.
+        let rows = cfg.bank_bytes / cfg.row_bytes;
+        assert_ne!(m.slot_of_row(0), m.slot_of_row(rows - 1));
+    }
+
+    #[test]
+    fn single_row_buffer_always_slot_zero() {
+        let (mut cfg, _) = map();
+        cfg.row_buffers_per_bank = 1;
+        let m = AddrMap::new(&cfg);
+        for row in 0..64 {
+            assert_eq!(m.slot_of_row(row), 0);
+        }
+    }
+
+    #[test]
+    fn decode_is_total_and_in_range_property() {
+        let (cfg, m) = map();
+        check_cases("decode_in_range", 64, |rng: &mut Prng| {
+            let addr = rng.below(cfg.total_mem_bytes() as u64);
+            let c = m.decode(addr);
+            assert!(c.proc < cfg.processors);
+            assert!(c.core < cfg.cores_per_proc);
+            assert!(c.nbu < cfg.nbus_per_core);
+            assert!(c.bank < cfg.banks_per_nbu);
+            assert!(c.row < cfg.bank_bytes / cfg.row_bytes);
+            assert!(c.col < cfg.row_bytes);
+        });
+    }
+
+    #[test]
+    fn distinct_addresses_distinct_cells_property() {
+        // decode() must be injective on (bank, row, col) for addresses in
+        // range — two different addresses never alias the same cell.
+        let (cfg, m) = map();
+        check_cases("decode_injective", 16, |rng: &mut Prng| {
+            let a = rng.below(cfg.total_mem_bytes() as u64) & !3;
+            let b = rng.below(cfg.total_mem_bytes() as u64) & !3;
+            if a == b {
+                return;
+            }
+            let ca = m.decode(a);
+            let cb = m.decode(b);
+            let key = |c: &BankCoord| (c.proc, c.core, c.nbu, c.bank, c.row, c.col);
+            assert_ne!(key(&ca), key(&cb), "aliased cells for {a} vs {b}");
+        });
+    }
+}

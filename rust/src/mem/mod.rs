@@ -1,0 +1,9 @@
+//! Memory-system substrates: the global address layout (DRAM geometry
+//! mapping, §IV-C subarray interleaving) and the near-bank shared memory
+//! (§IV-C).
+
+pub mod layout;
+pub mod smem;
+
+pub use layout::{AddrMap, BankCoord};
+pub use smem::SharedMem;

@@ -1,0 +1,137 @@
+//! Shared-memory model (§IV-C "Near-bank Shared Memory Design").
+//!
+//! One shared memory per core. In the paper's horizontal core structure
+//! it sits on the DRAM die next to all four NBUs; the Fig.-11 baseline
+//! places it on the base logic die instead (`SmemLocation::FarBank`),
+//! which drags every inter-thread communication across the TSVs.
+//!
+//! Functionally it is a flat per-block byte array; timing-wise it is a
+//! 32-bank SRAM: a warp access costs `smem_latency` plus one extra cycle
+//! per bank conflict.
+
+/// Functional + timing model of one thread block's shared memory.
+#[derive(Clone, Debug)]
+pub struct SharedMem {
+    data: Vec<u8>,
+    banks: usize,
+}
+
+impl SharedMem {
+    pub fn new(bytes: usize) -> SharedMem {
+        SharedMem { data: vec![0; bytes], banks: 32 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Read a 32-bit word. Out-of-bounds reads return 0 (the simulator
+    /// flags them separately at the LSU level).
+    pub fn read_u32(&self, addr: u32) -> u32 {
+        let a = addr as usize;
+        if a + 4 > self.data.len() {
+            return 0;
+        }
+        u32::from_le_bytes(self.data[a..a + 4].try_into().unwrap())
+    }
+
+    /// Write a 32-bit word; out-of-bounds writes are dropped.
+    pub fn write_u32(&mut self, addr: u32, val: u32) {
+        let a = addr as usize;
+        if a + 4 > self.data.len() {
+            return;
+        }
+        self.data[a..a + 4].copy_from_slice(&val.to_le_bytes());
+    }
+
+    /// Atomic add (for `red.shared`): returns the old value.
+    pub fn red_add_f32(&mut self, addr: u32, val: f32) -> f32 {
+        let old = f32::from_bits(self.read_u32(addr));
+        self.write_u32(addr, (old + val).to_bits());
+        old
+    }
+
+    /// Atomic integer add.
+    pub fn red_add_u32(&mut self, addr: u32, val: u32) -> u32 {
+        let old = self.read_u32(addr);
+        self.write_u32(addr, old.wrapping_add(val));
+        old
+    }
+
+    /// Bank-conflict serialization factor of a warp's 4-byte accesses:
+    /// the maximum number of distinct addresses mapping to one bank.
+    /// Accesses to the *same* word broadcast (no conflict).
+    pub fn conflict_factor(&self, addrs: &[u32]) -> u64 {
+        let mut per_bank: Vec<Vec<u32>> = vec![Vec::new(); self.banks];
+        for &a in addrs {
+            let word = a / 4;
+            let bank = (word as usize) % self.banks;
+            if !per_bank[bank].contains(&a) {
+                per_bank[bank].push(a);
+            }
+        }
+        per_bank.iter().map(|v| v.len() as u64).max().unwrap_or(0).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_roundtrip() {
+        let mut s = SharedMem::new(1024);
+        s.write_u32(16, 0xDEADBEEF);
+        assert_eq!(s.read_u32(16), 0xDEADBEEF);
+        assert_eq!(s.read_u32(20), 0);
+    }
+
+    #[test]
+    fn out_of_bounds_is_silently_dropped() {
+        let mut s = SharedMem::new(64);
+        s.write_u32(62, 1); // straddles the end
+        assert_eq!(s.read_u32(62), 0);
+        s.write_u32(4096, 7);
+        assert_eq!(s.read_u32(4096), 0);
+    }
+
+    #[test]
+    fn red_add_returns_old() {
+        let mut s = SharedMem::new(64);
+        s.write_u32(0, 5f32.to_bits());
+        let old = s.red_add_f32(0, 2.5);
+        assert_eq!(old, 5.0);
+        assert_eq!(f32::from_bits(s.read_u32(0)), 7.5);
+        assert_eq!(s.red_add_u32(4, 3), 0);
+        assert_eq!(s.read_u32(4), 3);
+    }
+
+    #[test]
+    fn conflict_free_when_strided_by_word() {
+        let s = SharedMem::new(4096);
+        let addrs: Vec<u32> = (0..32).map(|i| i * 4).collect();
+        assert_eq!(s.conflict_factor(&addrs), 1);
+    }
+
+    #[test]
+    fn same_word_broadcasts() {
+        let s = SharedMem::new(4096);
+        let addrs = vec![0u32; 32];
+        assert_eq!(s.conflict_factor(&addrs), 1);
+    }
+
+    #[test]
+    fn power_of_two_stride_conflicts() {
+        let s = SharedMem::new(1 << 16);
+        // Stride of 32 words → all accesses hit bank 0: factor 32.
+        let addrs: Vec<u32> = (0..32).map(|i| i * 32 * 4).collect();
+        assert_eq!(s.conflict_factor(&addrs), 32);
+        // Stride of 2 words → factor 2.
+        let addrs: Vec<u32> = (0..32).map(|i| i * 2 * 4).collect();
+        assert_eq!(s.conflict_factor(&addrs), 2);
+    }
+}

@@ -1,0 +1,131 @@
+//! On-chip 2D-mesh network between a processor's cores (§IV-A, modelled
+//! after BookSim-style per-hop latency + link serialization), and the
+//! off-chip SERDES links between processors (HMC-like, §IV-A).
+//!
+//! Fidelity note (DESIGN.md §2): we model per-source injection-port
+//! serialization plus hop latency on an XY route, not per-link
+//! contention. The paper's remote traffic is a small fraction of total
+//! traffic (Fig. 10: network 4.4% of energy), so port-level contention is
+//! the dominant queueing effect.
+
+use crate::config::MachineConfig;
+use crate::sim::{BandwidthBus, Stats};
+
+/// 2D mesh over the cores of one processor.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    width: usize,
+    hop_latency: u64,
+    /// One injection port per core.
+    ports: Vec<BandwidthBus>,
+}
+
+impl Mesh {
+    pub fn new(cfg: &MachineConfig) -> Mesh {
+        let n = cfg.cores_per_proc;
+        let width = (n as f64).sqrt().ceil() as usize;
+        let link_bytes = cfg.mesh_link_bits as f64 / 8.0;
+        Mesh {
+            width: width.max(1),
+            hop_latency: cfg.mesh_hop_latency,
+            ports: (0..n).map(|_| BandwidthBus::new(link_bytes, 0)).collect(),
+        }
+    }
+
+    /// Manhattan hop count between two cores (XY routing).
+    pub fn hops(&self, from: usize, to: usize) -> u64 {
+        let (fx, fy) = (from % self.width, from / self.width);
+        let (tx, ty) = (to % self.width, to / self.width);
+        (fx.abs_diff(tx) + fy.abs_diff(ty)) as u64
+    }
+
+    /// Send `bytes` from core `from` to core `to` at `now`; returns the
+    /// arrival cycle and accounts mesh traffic.
+    pub fn send(&mut self, now: u64, from: usize, to: usize, bytes: u64, stats: &mut Stats) -> u64 {
+        let hops = self.hops(from, to);
+        stats.mesh_bytes += bytes;
+        stats.mesh_hops += hops * ((bytes + 31) / 32).max(1);
+        let injected = self.ports[from].reserve(now, bytes);
+        injected + hops * self.hop_latency
+    }
+}
+
+/// Off-chip SERDES link between processors (shared per source processor).
+#[derive(Clone, Debug)]
+pub struct OffchipLink {
+    ports: Vec<BandwidthBus>,
+}
+
+impl OffchipLink {
+    pub fn new(cfg: &MachineConfig) -> OffchipLink {
+        let bytes = cfg.offchip_link_bits as f64 / 8.0;
+        OffchipLink {
+            ports: (0..cfg.processors)
+                .map(|_| BandwidthBus::new(bytes, cfg.offchip_latency))
+                .collect(),
+        }
+    }
+
+    /// Send between processors; same-processor sends are free (caller
+    /// should not route them here, but be safe).
+    pub fn send(&mut self, now: u64, from_proc: usize, to_proc: usize, bytes: u64, stats: &mut Stats) -> u64 {
+        if from_proc == to_proc {
+            return now;
+        }
+        stats.offchip_bytes += bytes;
+        self.ports[from_proc].reserve(now, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hops_are_manhattan() {
+        let mut cfg = MachineConfig::scaled();
+        cfg.cores_per_proc = 16; // 4×4 mesh
+        let m = Mesh::new(&cfg);
+        assert_eq!(m.hops(0, 0), 0);
+        assert_eq!(m.hops(0, 3), 3);
+        assert_eq!(m.hops(0, 15), 6);
+        assert_eq!(m.hops(5, 6), 1);
+    }
+
+    #[test]
+    fn send_adds_hop_latency() {
+        let mut cfg = MachineConfig::scaled();
+        cfg.cores_per_proc = 4; // 2×2 mesh
+        let mut m = Mesh::new(&cfg);
+        let mut st = Stats::default();
+        let t_same = m.send(0, 0, 0, 32, &mut st);
+        let t_far = m.send(0, 0, 3, 32, &mut st);
+        assert!(t_far > t_same);
+        // Second send queues one serialization slot behind the first,
+        // then pays 2 hops (2×2 mesh corner-to-corner).
+        assert_eq!(t_far - t_same, 1 + 2 * cfg.mesh_hop_latency);
+        assert_eq!(st.mesh_bytes, 64);
+    }
+
+    #[test]
+    fn injection_port_serializes() {
+        let cfg = MachineConfig::scaled();
+        let mut m = Mesh::new(&cfg);
+        let mut st = Stats::default();
+        let a = m.send(0, 0, 1, 256, &mut st);
+        let b = m.send(0, 0, 1, 256, &mut st);
+        assert!(b > a, "same-port sends queue");
+    }
+
+    #[test]
+    fn offchip_same_proc_is_free() {
+        let cfg = MachineConfig::paper();
+        let mut l = OffchipLink::new(&cfg);
+        let mut st = Stats::default();
+        assert_eq!(l.send(7, 0, 0, 1024, &mut st), 7);
+        assert_eq!(st.offchip_bytes, 0);
+        let t = l.send(7, 0, 1, 1024, &mut st);
+        assert!(t > 7);
+        assert_eq!(st.offchip_bytes, 1024);
+    }
+}

@@ -1,0 +1,9 @@
+//! Interconnect substrates: the per-core TSV bus (§III), the on-chip
+//! 2D-mesh network between cores (§IV-A), and the off-chip SERDES links
+//! between processors.
+
+pub mod tsv;
+pub mod mesh;
+
+pub use mesh::{Mesh, OffchipLink};
+pub use tsv::Tsv;

@@ -1,0 +1,71 @@
+//! TSV (through-silicon-via) bus model.
+//!
+//! Each core owns a 64-bit slice of the stack's 1024 TSVs (Table II),
+//! clocked at 2× the core clock → 16 B per core cycle. Every byte that
+//! moves between a subcore (base logic die) and its NBUs (DRAM die) —
+//! offloaded instructions, register moves, DRAM data for far-bank
+//! consumption, far-bank smem traffic — serializes on this bus. The
+//! whole point of MPU is keeping this narrow pipe out of the data path.
+
+use crate::config::MachineConfig;
+use crate::sim::stats::TsvTraffic;
+use crate::sim::{BandwidthBus, Stats};
+
+/// One core's TSV bus.
+#[derive(Clone, Debug)]
+pub struct Tsv {
+    bus: BandwidthBus,
+}
+
+impl Tsv {
+    pub fn new(cfg: &MachineConfig) -> Tsv {
+        let bytes_per_cycle = (cfg.tsv_bits_per_core as f64 / 8.0) * cfg.tsv_clock_mult as f64;
+        Tsv { bus: BandwidthBus::new(bytes_per_cycle, cfg.tsv_latency) }
+    }
+
+    /// Transfer `bytes` across the TSVs at `now`; records traffic class
+    /// in `stats` and returns the arrival cycle.
+    pub fn transfer(&mut self, now: u64, bytes: u64, class: TsvTraffic, stats: &mut Stats) -> u64 {
+        stats.add_tsv(class, bytes);
+        self.bus.reserve(now, bytes)
+    }
+
+    /// Arrival time if the transfer were issued now (no reservation).
+    pub fn peek(&self, now: u64, bytes: u64) -> u64 {
+        self.bus.peek(now, bytes)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bus.total_bytes
+    }
+
+    pub fn utilization(&self, elapsed: u64) -> f64 {
+        self.bus.utilization(elapsed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_matches_table2() {
+        // 64-bit bus at 2× core clock = 16 B/core-cycle.
+        let cfg = MachineConfig::paper();
+        let tsv = Tsv::new(&cfg);
+        assert_eq!(tsv.bus.bytes_per_cycle, 16.0);
+    }
+
+    #[test]
+    fn transfers_serialize_and_account() {
+        let cfg = MachineConfig::scaled();
+        let mut tsv = Tsv::new(&cfg);
+        let mut st = Stats::default();
+        // A 128-B register move (32 lanes × 4 B).
+        let a = tsv.transfer(0, 128, TsvTraffic::RegMove, &mut st);
+        let b = tsv.transfer(0, 128, TsvTraffic::RegMove, &mut st);
+        assert!(b > a);
+        assert_eq!(st.tsv_bytes[TsvTraffic::RegMove as usize], 256);
+        assert_eq!(tsv.total_bytes(), 256);
+    }
+}

@@ -1,0 +1,115 @@
+//! PJRT runtime bridge: loads the JAX/Pallas AOT artifacts
+//! (`artifacts/<workload>_<scale>.hlo.txt`) and executes them on the XLA
+//! CPU client, providing the *golden functional model* the simulator's
+//! memory image is validated against.
+//!
+//! Python never runs here — `make artifacts` is the only place Python
+//! executes; this module is pure Rust + PJRT (see
+//! /opt/xla-example/load_hlo for the reference wiring).
+
+use crate::workloads::{Prepared, Scale, Workload};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// XLA golden-model executor over the PJRT CPU client.
+pub struct XlaGolden {
+    client: xla::PjRtClient,
+}
+
+impl XlaGolden {
+    pub fn new() -> Result<XlaGolden> {
+        Ok(XlaGolden { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Load an HLO-text artifact, compile it, execute it on flat f32
+    /// inputs, and return the flat f32 output (models return 1-tuples).
+    pub fn run_artifact(&self, path: &Path, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("compiling artifact")?;
+        let literals: Vec<xla::Literal> = inputs.iter().map(|v| xla::Literal::vec1(v)).collect();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Artifact path for a workload/scale.
+pub fn artifact_path(w: Workload, scale: Scale) -> PathBuf {
+    let s = match scale {
+        Scale::Tiny => "tiny",
+        Scale::Small => "small",
+    };
+    // Resolve relative to the crate root so tests and benches agree.
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    Path::new(&root).join("artifacts").join(format!("{}_{}.hlo.txt", w.name(), s))
+}
+
+/// Are the artifacts built? (Tests skip gracefully before
+/// `make artifacts`.)
+pub fn artifacts_available(scale: Scale) -> bool {
+    Workload::ALL.iter().all(|w| artifact_path(*w, scale).exists())
+}
+
+/// Result of cross-validating the simulator against the XLA golden.
+#[derive(Clone, Debug)]
+pub struct Validation {
+    pub workload: Workload,
+    /// max |sim − xla| over the output.
+    pub max_err: f32,
+    /// Number of elements beyond tolerance.
+    pub mismatches: usize,
+    pub passed: bool,
+}
+
+/// Compare a simulator output against the XLA golden for a prepared
+/// problem. `kmeans` gets a tiny mismatch allowance: the argmin over
+/// f32 distances may legitimately differ between fused-mad (simulator)
+/// and XLA orderings on near-ties.
+pub fn validate_against_xla(
+    golden: &XlaGolden,
+    p: &Prepared,
+    scale: Scale,
+    sim_output: &[f32],
+) -> Result<Validation> {
+    let path = artifact_path(p.workload, scale);
+    let xla_out = golden.run_artifact(&path, &p.xla_inputs)?;
+    anyhow::ensure!(
+        xla_out.len() == sim_output.len(),
+        "output length mismatch: xla {} vs sim {}",
+        xla_out.len(),
+        sim_output.len()
+    );
+    let tol = p.tol.max(1e-4);
+    let mut max_err = 0f32;
+    let mut mismatches = 0usize;
+    for (a, b) in sim_output.iter().zip(&xla_out) {
+        let e = (a - b).abs();
+        if e > max_err {
+            max_err = e;
+        }
+        if e > tol {
+            mismatches += 1;
+        }
+    }
+    let allowance = match p.workload {
+        Workload::Kmeans => (sim_output.len() / 2048).max(2),
+        _ => 0,
+    };
+    Ok(Validation { workload: p.workload, max_err, mismatches, passed: mismatches <= allowance })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_paths_are_stable() {
+        let p = artifact_path(Workload::Axpy, Scale::Tiny);
+        assert!(p.to_string_lossy().ends_with("artifacts/axpy_tiny.hlo.txt"));
+        let p = artifact_path(Workload::Nw, Scale::Small);
+        assert!(p.to_string_lossy().ends_with("artifacts/nw_small.hlo.txt"));
+    }
+}

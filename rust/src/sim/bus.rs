@@ -1,0 +1,101 @@
+//! A serialized, bandwidth-limited bus.
+//!
+//! Models the TSV data bus, mesh links and off-chip SERDES links: a
+//! transfer of `bytes` occupies the bus for `ceil(bytes / bytes_per_cycle)`
+//! cycles after any queued predecessors, plus a fixed pipe latency.
+
+/// FIFO bandwidth bus. Transfers are serialized; `reserve` returns the
+/// cycle at which the transfer's data has fully arrived.
+#[derive(Clone, Debug)]
+pub struct BandwidthBus {
+    /// Usable bytes per core cycle.
+    pub bytes_per_cycle: f64,
+    /// Fixed latency added to every transfer (pipeline + flight).
+    pub latency: u64,
+    /// Cycle until which the bus is busy with queued transfers.
+    busy_until: u64,
+    /// Total bytes ever moved (for stats/energy).
+    pub total_bytes: u64,
+    /// Total transfers.
+    pub total_transfers: u64,
+    /// Busy cycles accumulated (for utilization reporting).
+    pub busy_cycles: u64,
+}
+
+impl BandwidthBus {
+    pub fn new(bytes_per_cycle: f64, latency: u64) -> Self {
+        assert!(bytes_per_cycle > 0.0);
+        BandwidthBus { bytes_per_cycle, latency, busy_until: 0, total_bytes: 0, total_transfers: 0, busy_cycles: 0 }
+    }
+
+    /// Number of cycles `bytes` occupies the wire.
+    pub fn serialization_cycles(&self, bytes: u64) -> u64 {
+        ((bytes as f64 / self.bytes_per_cycle).ceil() as u64).max(1)
+    }
+
+    /// Reserve the bus for a `bytes`-sized transfer issued at cycle `now`;
+    /// returns the arrival cycle.
+    pub fn reserve(&mut self, now: u64, bytes: u64) -> u64 {
+        let start = self.busy_until.max(now);
+        let ser = self.serialization_cycles(bytes);
+        self.busy_until = start + ser;
+        self.total_bytes += bytes;
+        self.total_transfers += 1;
+        self.busy_cycles += ser;
+        self.busy_until + self.latency
+    }
+
+    /// Would-be arrival cycle without reserving (for scheduling decisions).
+    pub fn peek(&self, now: u64, bytes: u64) -> u64 {
+        self.busy_until.max(now) + self.serialization_cycles(bytes) + self.latency
+    }
+
+    /// Utilization over `elapsed` cycles.
+    pub fn utilization(&self, elapsed: u64) -> f64 {
+        if elapsed == 0 { 0.0 } else { self.busy_cycles as f64 / elapsed as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_rounds_up() {
+        let bus = BandwidthBus::new(16.0, 0);
+        assert_eq!(bus.serialization_cycles(1), 1);
+        assert_eq!(bus.serialization_cycles(16), 1);
+        assert_eq!(bus.serialization_cycles(17), 2);
+        assert_eq!(bus.serialization_cycles(128), 8);
+    }
+
+    #[test]
+    fn back_to_back_transfers_queue() {
+        let mut bus = BandwidthBus::new(16.0, 2);
+        let a = bus.reserve(0, 128); // 8 cycles wire + 2 latency
+        assert_eq!(a, 10);
+        let b = bus.reserve(0, 128); // queued behind the first
+        assert_eq!(b, 18);
+        // Issued later than busy_until: no queuing.
+        let c = bus.reserve(100, 16);
+        assert_eq!(c, 103);
+        assert_eq!(bus.total_bytes, 272);
+        assert_eq!(bus.total_transfers, 3);
+    }
+
+    #[test]
+    fn peek_does_not_reserve() {
+        let mut bus = BandwidthBus::new(8.0, 1);
+        let p = bus.peek(0, 64);
+        assert_eq!(p, bus.reserve(0, 64));
+        assert!(bus.peek(0, 64) > p);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut bus = BandwidthBus::new(4.0, 0);
+        bus.reserve(0, 40); // 10 busy cycles
+        assert!((bus.utilization(20) - 0.5).abs() < 1e-9);
+        assert_eq!(bus.utilization(0), 0.0);
+    }
+}

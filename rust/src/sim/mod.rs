@@ -1,0 +1,11 @@
+//! Simulation utilities: deterministic PRNG (offline stand-in for
+//! `proptest`/`rand`), statistics counters, and a tiny bandwidth-bus model
+//! shared by the TSV / mesh / off-chip links.
+
+pub mod prng;
+pub mod stats;
+pub mod bus;
+
+pub use bus::BandwidthBus;
+pub use prng::Prng;
+pub use stats::Stats;

@@ -1,0 +1,198 @@
+//! Machine-wide statistics counters.
+//!
+//! Every experiment in §VI is a function of these counters: performance
+//! (cycles), bandwidth utilization (Fig. 1), TSV traffic (Fig. 11),
+//! row-buffer miss rate (Fig. 12), and the energy model inputs
+//! (Figs. 9–10) are all derived from `Stats`.
+
+/// Why bytes crossed the TSVs (used for the Fig. 11 traffic analysis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TsvTraffic {
+    /// Offloaded instruction packets (subcore → NBU) + commit returns.
+    InstrOffload,
+    /// Register move engine transfers (either direction).
+    RegMove,
+    /// DRAM data for far-bank consumption (loads up / stores down).
+    DramData,
+    /// Shared-memory traffic when smem is far-bank (Fig. 11 baseline).
+    Smem,
+    /// DRAM command traffic (addresses for non-offloaded accesses).
+    Command,
+}
+
+/// Flat counter block. All counters are monotonically increasing.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    /// Simulated core cycles to completion.
+    pub cycles: u64,
+
+    // ---- instruction mix ----
+    /// Warp-instructions executed far-bank (on the base logic die).
+    pub instrs_far: u64,
+    /// Warp-instructions executed near-bank (offloaded to NBUs).
+    pub instrs_near: u64,
+    /// Lane-level ALU operations executed (for ALU-utilization).
+    pub alu_lane_ops: u64,
+    /// Warp-instructions that were ld/st.global.
+    pub global_mem_instrs: u64,
+    /// Warp-instructions that were ld/st.shared.
+    pub shared_mem_instrs: u64,
+    /// Barrier instructions.
+    pub barriers: u64,
+    /// Warp-instructions killed by an all-false predicate guard.
+    pub predicated_off: u64,
+
+    // ---- DRAM ----
+    /// Column read accesses (bank-IO width each).
+    pub dram_reads: u64,
+    /// Column write accesses.
+    pub dram_writes: u64,
+    /// Row activations.
+    pub dram_acts: u64,
+    /// Precharges.
+    pub dram_pres: u64,
+    /// Refresh events.
+    pub dram_refs: u64,
+    /// Column accesses that hit an open row-buffer.
+    pub row_hits: u64,
+    /// Column accesses that required PRE+ACT (or ACT on empty).
+    pub row_misses: u64,
+
+    // ---- interconnect ----
+    /// TSV bytes by traffic class: [InstrOffload, RegMove, DramData, Smem, Command].
+    pub tsv_bytes: [u64; 5],
+    /// On-chip mesh bytes moved (remote requests + responses).
+    pub mesh_bytes: u64,
+    /// Mesh hop-traversals (for energy).
+    pub mesh_hops: u64,
+    /// Off-chip (inter-processor) bytes.
+    pub offchip_bytes: u64,
+
+    // ---- storage structure accesses ----
+    /// Far-bank register file 32-bit accesses.
+    pub rf_far_accesses: u64,
+    /// Near-bank register file 32-bit accesses.
+    pub rf_near_accesses: u64,
+    /// Operand-collector operand fetches.
+    pub opc_accesses: u64,
+    /// Shared-memory 32-bit accesses.
+    pub smem_accesses: u64,
+    /// LSU-Extension requests handled.
+    pub lsu_ext_requests: u64,
+    /// Register-move-engine transfers (warp-register granularity).
+    pub reg_moves: u64,
+
+    // ---- GPU-baseline specifics ----
+    /// Bytes served by the L2 model (GPU baseline only).
+    pub l2_bytes: u64,
+    /// Bytes served by DRAM (GPU baseline: HBM; MPU: banks).
+    pub dram_bytes: u64,
+}
+
+impl Stats {
+    /// Record TSV traffic of a class.
+    pub fn add_tsv(&mut self, class: TsvTraffic, bytes: u64) {
+        self.tsv_bytes[class as usize] += bytes;
+    }
+
+    /// Total TSV bytes across classes.
+    pub fn tsv_total_bytes(&self) -> u64 {
+        self.tsv_bytes.iter().sum()
+    }
+
+    /// Total warp instructions.
+    pub fn instrs_total(&self) -> u64 {
+        self.instrs_far + self.instrs_near
+    }
+
+    /// Row-buffer miss rate over all column accesses.
+    pub fn row_miss_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 { 0.0 } else { self.row_misses as f64 / total as f64 }
+    }
+
+    /// Fraction of instructions executed near-bank.
+    pub fn near_fraction(&self) -> f64 {
+        let t = self.instrs_total();
+        if t == 0 { 0.0 } else { self.instrs_near as f64 / t as f64 }
+    }
+
+    /// Achieved DRAM bytes per cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        if self.cycles == 0 { 0.0 } else { self.dram_bytes as f64 / self.cycles as f64 }
+    }
+
+    /// Memory intensity in bytes per warp-instruction (Fig. 8(2) x-axis).
+    pub fn memory_intensity(&self) -> f64 {
+        let t = self.instrs_total();
+        if t == 0 { 0.0 } else { self.dram_bytes as f64 / t as f64 }
+    }
+
+    /// Merge another stats block into this one (cycles take the max:
+    /// blocks merged from parallel components finish at the latest time).
+    pub fn merge(&mut self, o: &Stats) {
+        self.cycles = self.cycles.max(o.cycles);
+        self.instrs_far += o.instrs_far;
+        self.instrs_near += o.instrs_near;
+        self.alu_lane_ops += o.alu_lane_ops;
+        self.global_mem_instrs += o.global_mem_instrs;
+        self.shared_mem_instrs += o.shared_mem_instrs;
+        self.barriers += o.barriers;
+        self.predicated_off += o.predicated_off;
+        self.dram_reads += o.dram_reads;
+        self.dram_writes += o.dram_writes;
+        self.dram_acts += o.dram_acts;
+        self.dram_pres += o.dram_pres;
+        self.dram_refs += o.dram_refs;
+        self.row_hits += o.row_hits;
+        self.row_misses += o.row_misses;
+        for i in 0..5 {
+            self.tsv_bytes[i] += o.tsv_bytes[i];
+        }
+        self.mesh_bytes += o.mesh_bytes;
+        self.mesh_hops += o.mesh_hops;
+        self.offchip_bytes += o.offchip_bytes;
+        self.rf_far_accesses += o.rf_far_accesses;
+        self.rf_near_accesses += o.rf_near_accesses;
+        self.opc_accesses += o.opc_accesses;
+        self.smem_accesses += o.smem_accesses;
+        self.lsu_ext_requests += o.lsu_ext_requests;
+        self.reg_moves += o.reg_moves;
+        self.l2_bytes += o.l2_bytes;
+        self.dram_bytes += o.dram_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsv_classes_accumulate_independently() {
+        let mut s = Stats::default();
+        s.add_tsv(TsvTraffic::RegMove, 128);
+        s.add_tsv(TsvTraffic::DramData, 32);
+        s.add_tsv(TsvTraffic::RegMove, 128);
+        assert_eq!(s.tsv_bytes[TsvTraffic::RegMove as usize], 256);
+        assert_eq!(s.tsv_total_bytes(), 288);
+    }
+
+    #[test]
+    fn rates_handle_zero_denominators() {
+        let s = Stats::default();
+        assert_eq!(s.row_miss_rate(), 0.0);
+        assert_eq!(s.near_fraction(), 0.0);
+        assert_eq!(s.dram_bytes_per_cycle(), 0.0);
+        assert_eq!(s.memory_intensity(), 0.0);
+    }
+
+    #[test]
+    fn merge_takes_max_cycles_and_sums_counts() {
+        let mut a = Stats { cycles: 100, instrs_far: 5, ..Default::default() };
+        let b = Stats { cycles: 80, instrs_far: 7, row_hits: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.cycles, 100);
+        assert_eq!(a.instrs_far, 12);
+        assert_eq!(a.row_hits, 3);
+    }
+}

@@ -1,0 +1,288 @@
+//! Linear-algebra workloads (Table I): AXPY, PR (parallel reduction),
+//! GEMV, TTRANS.
+
+use super::{Device, Prepared, Scale, Workload};
+use crate::isa::program::ParamValue;
+use crate::isa::{KernelSource, LaunchConfig, Reg};
+use crate::sim::Prng;
+use anyhow::Result;
+
+/// AXPY (cuBLAS `saxpy`): `y[i] = α·x[i] + y[i]`, grid-stride loop — the
+/// paper's Listing-1 shape.
+pub fn axpy(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let n: usize = match scale {
+        Scale::Tiny => 4096,
+        Scale::Small => 65536,
+    };
+    let kernel = KernelSource::assemble(
+        "axpy",
+        &[Reg::r(10), Reg::r(11), Reg::f(10), Reg::r(12)],
+        r#"
+            mov.u32   %r1, %tid.x
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            mul.u32   %r9, %nctaid.x, %ntid.x
+        LOOP:
+            setp.ge.s32 %p1, %r3, %r12
+            @%p1 bra  DONE
+            shl.u32   %r4, %r3, 2
+            add.u32   %r5, %r10, %r4
+            add.u32   %r6, %r11, %r4
+            ld.global.f32 %f1, [%r5+0]
+            ld.global.f32 %f2, [%r6+0]
+            mad.f32   %f3, %f1, %f10, %f2
+            st.global.f32 [%r6+0], %f3
+            add.u32   %r3, %r3, %r9
+            bra       LOOP
+        DONE:
+            exit
+        "#,
+    )?;
+    let mut rng = Prng::new(0xA1);
+    let xv = rng.f32_vec(n, -1.0, 1.0);
+    let yv = rng.f32_vec(n, -1.0, 1.0);
+    let alpha = 1.5f32;
+    let x = dev.alloc_bytes(n * 4);
+    let y = dev.alloc_bytes(n * 4);
+    dev.write_f32(x, &xv);
+    dev.write_f32(y, &yv);
+    let golden: Vec<f32> = xv.iter().zip(&yv).map(|(a, b)| alpha * a + b).collect();
+    Ok(Prepared {
+        workload: Workload::Axpy,
+        kernel,
+        launch: LaunchConfig::new(32, 128),
+        params: vec![
+            ParamValue::U32(x as u32),
+            ParamValue::U32(y as u32),
+            ParamValue::F32(alpha),
+            ParamValue::U32(n as u32),
+        ],
+        home: Some((x, 512)),
+        out_addr: y,
+        out_len: n,
+        golden,
+        tol: 1e-5,
+        xla_inputs: vec![xv, yv, vec![alpha]],
+        meta: vec![("n".into(), n as u32)],
+    })
+}
+
+/// PR (CUB-style parallel reduction): grid-stride partial sums, a shared
+/// memory tree reduction per block, and a global atomic accumulate.
+pub fn pr(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let n: usize = match scale {
+        Scale::Tiny => 4096,
+        Scale::Small => 65536,
+    };
+    let kernel = KernelSource::assemble(
+        "pr",
+        &[Reg::r(10), Reg::r(11), Reg::r(12)],
+        r#"
+            mov.u32   %r1, %tid.x
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            mul.u32   %r9, %nctaid.x, %ntid.x
+            mov.f32   %f1, 0.0
+        LOOP:
+            setp.ge.s32 %p1, %r3, %r12
+            @%p1 bra  RED
+            shl.u32   %r4, %r3, 2
+            add.u32   %r5, %r10, %r4
+            ld.global.f32 %f2, [%r5+0]
+            add.f32   %f1, %f1, %f2
+            add.u32   %r3, %r3, %r9
+            bra       LOOP
+        RED:
+            shl.u32   %r6, %r1, 2
+            st.shared.f32 [%r6+0], %f1
+            bar.sync
+            mov.u32   %r7, 64
+        RLOOP:
+            setp.eq.s32 %p2, %r7, 0
+            @%p2 bra  WRITE
+            setp.ge.s32 %p3, %r1, %r7
+            @%p3 bra  SKIP
+            add.u32   %r8, %r1, %r7
+            shl.u32   %r2, %r8, 2
+            ld.shared.f32 %f3, [%r2+0]
+            ld.shared.f32 %f4, [%r6+0]
+            add.f32   %f4, %f4, %f3
+            st.shared.f32 [%r6+0], %f4
+        SKIP:
+            bar.sync
+            shr.u32   %r7, %r7, 1
+            bra       RLOOP
+        WRITE:
+            setp.ne.s32 %p4, %r1, 0
+            @%p4 bra  DONE
+            ld.shared.f32 %f5, [%r6+0]
+            red.global.add.f32 [%r11+0], %f5
+        DONE:
+            exit
+        "#,
+    )?;
+    let mut rng = Prng::new(0xB2);
+    let xv = rng.f32_vec(n, 0.0, 1.0);
+    let x = dev.alloc_bytes(n * 4);
+    let out = dev.alloc_bytes(4);
+    dev.write_f32(x, &xv);
+    dev.write_f32(out, &[0.0]);
+    // Golden: match the device's summation order closely enough —
+    // f32 sum with a tolerance scaled to n.
+    let golden = vec![xv.iter().map(|v| *v as f64).sum::<f64>() as f32];
+    Ok(Prepared {
+        workload: Workload::Pr,
+        kernel,
+        launch: LaunchConfig::with_smem(32, 128, 128 * 4),
+        params: vec![
+            ParamValue::U32(x as u32),
+            ParamValue::U32(out as u32),
+            ParamValue::U32(n as u32),
+        ],
+        home: Some((x, 512)),
+        out_addr: out,
+        out_len: 1,
+        golden,
+        tol: n as f32 * 1e-4,
+        xla_inputs: vec![xv],
+        meta: vec![("n".into(), n as u32)],
+    })
+}
+
+/// GEMV (cuBLAS `sgemv`): `y = A·x` with `A` in column-major `M×N`
+/// layout (the BLAS default) — one thread per row, `x` staged in shared
+/// memory per block.
+pub fn gemv(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let (m, nn): (usize, usize) = match scale {
+        Scale::Tiny => (4096, 16),
+        Scale::Small => (8192, 64),
+    };
+    let kernel = KernelSource::assemble(
+        "gemv",
+        &[Reg::r(10), Reg::r(11), Reg::r(12), Reg::r(13), Reg::r(14)],
+        r#"
+            mov.u32   %r1, %tid.x
+            setp.ge.s32 %p1, %r1, %r14
+            @%p1 bra  XDONE
+            shl.u32   %r4, %r1, 2
+            add.u32   %r5, %r11, %r4
+            ld.global.f32 %f1, [%r5+0]
+            st.shared.f32 [%r4+0], %f1
+        XDONE:
+            bar.sync
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            setp.ge.s32 %p2, %r3, %r13
+            @%p2 bra  DONE
+            mov.f32   %f2, 0.0
+            mov.u32   %r6, 0
+            shl.u32   %r7, %r3, 2
+            add.u32   %r8, %r10, %r7
+            shl.u32   %r9, %r13, 2
+        JLOOP:
+            setp.ge.s32 %p3, %r6, %r14
+            @%p3 bra  STORE
+            ld.global.f32 %f3, [%r8+0]
+            shl.u32   %r2, %r6, 2
+            ld.shared.f32 %f4, [%r2+0]
+            mad.f32   %f2, %f3, %f4, %f2
+            add.u32   %r8, %r8, %r9
+            add.u32   %r6, %r6, 1
+            bra       JLOOP
+        STORE:
+            add.u32   %r21, %r12, %r7
+            st.global.f32 [%r21+0], %f2
+        DONE:
+            exit
+        "#,
+    )?;
+    let mut rng = Prng::new(0xC3);
+    let a = rng.f32_vec(m * nn, -1.0, 1.0); // column-major: a[j*m + i]
+    let xv = rng.f32_vec(nn, -1.0, 1.0);
+    let pa = dev.alloc_bytes(m * nn * 4);
+    let px = dev.alloc_bytes(nn * 4);
+    let py = dev.alloc_bytes(m * 4);
+    dev.write_f32(pa, &a);
+    dev.write_f32(px, &xv);
+    let golden: Vec<f32> = (0..m)
+        .map(|i| (0..nn).map(|j| a[j * m + i] as f64 * xv[j] as f64).sum::<f64>() as f32)
+        .collect();
+    Ok(Prepared {
+        workload: Workload::Gemv,
+        kernel,
+        launch: LaunchConfig::with_smem((m / 128) as u32, 128, nn as u32 * 4),
+        params: vec![
+            ParamValue::U32(pa as u32),
+            ParamValue::U32(px as u32),
+            ParamValue::U32(py as u32),
+            ParamValue::U32(m as u32),
+            ParamValue::U32(nn as u32),
+        ],
+        home: Some((pa, 512)),
+        out_addr: py,
+        out_len: m,
+        golden,
+        tol: 1e-3,
+        xla_inputs: vec![a, xv],
+        meta: vec![("m".into(), m as u32), ("n".into(), nn as u32)],
+    })
+}
+
+/// TTRANS (cuBLAS-style tensor transposition): `out[j·M+i] = in[i·N+j]`.
+/// Coalesced reads, scattered row-buffer-unfriendly writes — the paper's
+/// low-speedup case.
+pub fn ttrans(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let (m, nn): (usize, usize) = match scale {
+        Scale::Tiny => (64, 64),
+        Scale::Small => (128, 128),
+    };
+    let total = m * nn;
+    let kernel = KernelSource::assemble(
+        "ttrans",
+        &[Reg::r(10), Reg::r(11), Reg::r(12), Reg::r(13), Reg::r(14)],
+        r#"
+            mov.u32   %r1, %tid.x
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            setp.ge.s32 %p1, %r3, %r14
+            @%p1 bra  DONE
+            div.u32   %r4, %r3, %r13
+            rem.u32   %r5, %r3, %r13
+            shl.u32   %r6, %r3, 2
+            add.u32   %r6, %r10, %r6
+            ld.global.f32 %f1, [%r6+0]
+            mad.u32   %r7, %r5, %r12, %r4
+            shl.u32   %r7, %r7, 2
+            add.u32   %r7, %r11, %r7
+            st.global.f32 [%r7+0], %f1
+        DONE:
+            exit
+        "#,
+    )?;
+    let mut rng = Prng::new(0xD4);
+    let input = rng.f32_vec(total, -1.0, 1.0);
+    let pin = dev.alloc_bytes(total * 4);
+    let pout = dev.alloc_bytes(total * 4);
+    dev.write_f32(pin, &input);
+    let mut golden = vec![0f32; total];
+    for i in 0..m {
+        for j in 0..nn {
+            golden[j * m + i] = input[i * nn + j];
+        }
+    }
+    Ok(Prepared {
+        workload: Workload::Ttrans,
+        kernel,
+        launch: LaunchConfig::new((total / 128) as u32, 128),
+        params: vec![
+            ParamValue::U32(pin as u32),
+            ParamValue::U32(pout as u32),
+            ParamValue::U32(m as u32),
+            ParamValue::U32(nn as u32),
+            ParamValue::U32(total as u32),
+        ],
+        home: Some((pin, 512)),
+        out_addr: pout,
+        out_len: total,
+        golden,
+        tol: 0.0,
+        xla_inputs: vec![input],
+        meta: vec![("m".into(), m as u32), ("n".into(), nn as u32)],
+    })
+}

@@ -1,0 +1,201 @@
+//! HIST (CUB-style 256-bin histogram) and NW (Rodinia Needleman–Wunsch).
+
+use super::{Device, Prepared, Scale, Workload};
+use crate::isa::program::ParamValue;
+use crate::isa::{KernelSource, LaunchConfig, Reg};
+use crate::sim::Prng;
+use anyhow::Result;
+
+/// HIST: 256-bin histogram with privatized shared-memory bins and a
+/// global atomic flush — the CUB recipe. Bin counts are kept in f32 so
+/// the XLA golden compares exactly.
+pub fn hist(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let n: usize = match scale {
+        Scale::Tiny => 8192,
+        Scale::Small => 65536,
+    };
+    let bins = 256usize;
+    let kernel = KernelSource::assemble(
+        "hist",
+        &[Reg::r(10), Reg::r(11), Reg::r(14)],
+        r#"
+            mov.u32   %r1, %tid.x
+            shl.u32   %r2, %r1, 2
+            mov.f32   %f0, 0.0
+            st.shared.f32 [%r2+0], %f0
+            st.shared.f32 [%r2+512], %f0
+            bar.sync
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            mul.u32   %r9, %nctaid.x, %ntid.x
+        LOOP:
+            setp.ge.s32 %p1, %r3, %r14
+            @%p1 bra  FLUSH
+            shl.u32   %r4, %r3, 2
+            add.u32   %r4, %r10, %r4
+            ld.global.f32 %f1, [%r4+0]
+            cvt.rzi.s32.f32 %r5, %f1
+            shl.u32   %r5, %r5, 2
+            mov.f32   %f2, 1.0
+            red.shared.add.f32 [%r5+0], %f2
+            add.u32   %r3, %r3, %r9
+            bra       LOOP
+        FLUSH:
+            bar.sync
+            ld.shared.f32 %f3, [%r2+0]
+            add.u32   %r6, %r11, %r2
+            red.global.add.f32 [%r6+0], %f3
+            ld.shared.f32 %f4, [%r2+512]
+            add.u32   %r7, %r6, 512
+            red.global.add.f32 [%r7+0], %f4
+            exit
+        "#,
+    )?;
+    let mut rng = Prng::new(0x33);
+    let data: Vec<f32> = (0..n).map(|_| rng.below(bins as u64) as f32).collect();
+    let pdata = dev.alloc_bytes(n * 4);
+    let pbins = dev.alloc_bytes(bins * 4);
+    dev.write_f32(pdata, &data);
+    dev.write_f32(pbins, &vec![0.0; bins]);
+    let mut golden = vec![0f32; bins];
+    for v in &data {
+        golden[*v as usize] += 1.0;
+    }
+    Ok(Prepared {
+        workload: Workload::Hist,
+        kernel,
+        launch: LaunchConfig::with_smem(32, 128, (bins * 4) as u32),
+        params: vec![
+            ParamValue::U32(pdata as u32),
+            ParamValue::U32(pbins as u32),
+            ParamValue::U32(n as u32),
+        ],
+        home: Some((pdata, 512)),
+        out_addr: pbins,
+        out_len: bins,
+        golden,
+        tol: 0.0,
+        xla_inputs: vec![data],
+        meta: vec![("n".into(), n as u32), ("bins".into(), bins as u32)],
+    })
+}
+
+/// NW: Needleman–Wunsch global sequence alignment, anti-diagonal
+/// wavefront with a block barrier between diagonals (match +1,
+/// mismatch −1, gap −1). Single thread block — the long-dependency,
+/// latency-bound workload of the suite (§VI-B: low bandwidth
+/// utilization on both machines).
+pub fn nw(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let n: usize = match scale {
+        Scale::Tiny => 64,
+        Scale::Small => 128,
+    };
+    let rs = n + 1; // row stride of the score matrix
+    let kernel = KernelSource::assemble(
+        "nw",
+        &[Reg::r(10), Reg::r(11), Reg::r(12), Reg::r(13)],
+        r#"
+            mov.u32   %r1, %tid.x
+            add.u32   %r14, %r13, 1           // row stride N+1
+            mov.u32   %r2, 2                  // d = i+j
+        DLOOP:
+            shl.u32   %r3, %r13, 1
+            setp.gt.s32 %p1, %r2, %r3
+            @%p1 bra  END
+            sub.s32   %r4, %r2, %r13
+            max.s32   %r4, %r4, 1             // lo
+            add.s32   %r5, %r2, -1
+            min.s32   %r5, %r5, %r13          // hi
+            add.u32   %r6, %r4, %r1           // i = lo + tid
+            setp.gt.s32 %p2, %r6, %r5
+            @%p2 bra  SYNC
+            sub.u32   %r7, %r2, %r6           // j = d - i
+            add.s32   %r8, %r6, -1
+            shl.u32   %r8, %r8, 2
+            add.u32   %r8, %r10, %r8
+            ld.global.f32 %f1, [%r8+0]        // a[i-1]
+            add.s32   %r9, %r7, -1
+            shl.u32   %r9, %r9, 2
+            add.u32   %r9, %r11, %r9
+            ld.global.f32 %f2, [%r9+0]        // b[j-1]
+            setp.eq.f32 %p3, %f1, %f2
+            selp.f32  %f3, 1.0, -1.0, %p3     // match score
+            add.s32   %r15, %r6, -1
+            mul.u32   %r16, %r15, %r14
+            add.s32   %r17, %r7, -1
+            add.u32   %r18, %r16, %r17
+            shl.u32   %r18, %r18, 2
+            add.u32   %r18, %r12, %r18        // &F[i-1][j-1]
+            ld.global.f32 %f4, [%r18+0]
+            add.f32   %f4, %f4, %f3
+            ld.global.f32 %f5, [%r18+4]       // F[i-1][j]
+            add.f32   %f5, %f5, -1.0
+            shl.u32   %r19, %r14, 2
+            add.u32   %r20, %r18, %r19        // &F[i][j-1]
+            ld.global.f32 %f6, [%r20+0]
+            add.f32   %f6, %f6, -1.0
+            max.f32   %f4, %f4, %f5
+            max.f32   %f4, %f4, %f6
+            st.global.f32 [%r20+4], %f4       // F[i][j]
+        SYNC:
+            bar.sync
+            add.u32   %r2, %r2, 1
+            bra       DLOOP
+        END:
+            exit
+        "#,
+    )?;
+    let mut rng = Prng::new(0x44);
+    // Sequences over a 4-letter alphabet, stored as small floats.
+    let a: Vec<f32> = (0..n).map(|_| rng.below(4) as f32).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.below(4) as f32).collect();
+    let pa = dev.alloc_bytes(n * 4);
+    let pb = dev.alloc_bytes(n * 4);
+    let pf = dev.alloc_bytes(rs * rs * 4);
+    dev.write_f32(pa, &a);
+    dev.write_f32(pb, &b);
+    // Host initializes the borders (the CUDA host code does the same).
+    let mut f0 = vec![0f32; rs * rs];
+    for i in 0..rs {
+        f0[i * rs] = -(i as f32);
+        f0[i] = -(i as f32);
+    }
+    dev.write_f32(pf, &f0);
+    let golden = nw_golden(&a, &b, n);
+    Ok(Prepared {
+        workload: Workload::Nw,
+        kernel,
+        launch: LaunchConfig::new(1, n as u32),
+        params: vec![
+            ParamValue::U32(pa as u32),
+            ParamValue::U32(pb as u32),
+            ParamValue::U32(pf as u32),
+            ParamValue::U32(n as u32),
+        ],
+        home: None,
+        out_addr: pf,
+        out_len: rs * rs,
+        golden,
+        tol: 0.0,
+        xla_inputs: vec![a, b],
+        meta: vec![("n".into(), n as u32)],
+    })
+}
+
+pub(crate) fn nw_golden(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let rs = n + 1;
+    let mut f = vec![0f32; rs * rs];
+    for i in 0..rs {
+        f[i * rs] = -(i as f32);
+        f[i] = -(i as f32);
+    }
+    for i in 1..=n {
+        for j in 1..=n {
+            let s = if a[i - 1] == b[j - 1] { 1.0 } else { -1.0 };
+            let diag = f[(i - 1) * rs + (j - 1)] + s;
+            let up = f[(i - 1) * rs + j] - 1.0;
+            let left = f[i * rs + (j - 1)] - 1.0;
+            f[i * rs + j] = diag.max(up).max(left);
+        }
+    }
+    f
+}

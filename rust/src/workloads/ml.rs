@@ -1,0 +1,198 @@
+//! Machine-learning workloads (Table I): KMEANS (assignment step) and
+//! KNN (Rodinia `nn` distance kernel).
+
+use super::{Device, Prepared, Scale, Workload};
+use crate::isa::program::ParamValue;
+use crate::isa::{KernelSource, LaunchConfig, Reg};
+use crate::sim::Prng;
+use anyhow::Result;
+
+/// KMEANS (Rodinia): the assignment step — for each point, the index of
+/// the nearest centroid (squared Euclidean distance, D=4). Points are
+/// stored column-major (one array per dimension) for coalescing;
+/// centroids are staged in shared memory per block.
+pub fn kmeans(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let d = 4usize;
+    let k = 8usize;
+    let n: usize = match scale {
+        Scale::Tiny => 4096,
+        Scale::Small => 16384,
+    };
+    let kernel = KernelSource::assemble(
+        "kmeans",
+        &[Reg::r(10), Reg::r(11), Reg::r(12), Reg::r(13), Reg::r(14), Reg::r(15)],
+        r#"
+            mov.u32   %r1, %tid.x
+            setp.ge.s32 %p1, %r1, %r15        // KD
+            @%p1 bra  CDONE
+            shl.u32   %r2, %r1, 2
+            add.u32   %r3, %r11, %r2
+            ld.global.f32 %f1, [%r3+0]
+            st.shared.f32 [%r2+0], %f1
+        CDONE:
+            bar.sync
+            mad.u32   %r4, %ctaid.x, %ntid.x, %r1   // i
+            mul.u32   %r20, %nctaid.x, %ntid.x      // grid stride
+        ILOOP:
+            setp.ge.s32 %p2, %r4, %r13              // N
+            @%p2 bra  DONE
+            shl.u32   %r5, %r4, 2
+            add.u32   %r6, %r10, %r5
+            shl.u32   %r7, %r13, 2                  // 4N dim stride
+            ld.global.f32 %f10, [%r6+0]
+            add.u32   %r6, %r6, %r7
+            ld.global.f32 %f11, [%r6+0]
+            add.u32   %r6, %r6, %r7
+            ld.global.f32 %f12, [%r6+0]
+            add.u32   %r6, %r6, %r7
+            ld.global.f32 %f13, [%r6+0]
+            mov.f32   %f20, 1e30
+            mov.u32   %r8, 0
+            mov.u32   %r9, 0
+        KLOOP:
+            setp.ge.s32 %p3, %r9, %r14              // K
+            @%p3 bra  WRITE
+            shl.u32   %r22, %r9, 4                  // k·D·4 (dedicated smem-index reg:
+                                                    // sharing it with an address chain would make it B)
+            ld.shared.f32 %f1, [%r22+0]
+            sub.f32   %f1, %f1, %f10
+            mul.f32   %f2, %f1, %f1
+            ld.shared.f32 %f1, [%r22+4]
+            sub.f32   %f1, %f1, %f11
+            mad.f32   %f2, %f1, %f1, %f2
+            ld.shared.f32 %f1, [%r22+8]
+            sub.f32   %f1, %f1, %f12
+            mad.f32   %f2, %f1, %f1, %f2
+            ld.shared.f32 %f1, [%r22+12]
+            sub.f32   %f1, %f1, %f13
+            mad.f32   %f2, %f1, %f1, %f2
+            setp.lt.f32 %p4, %f2, %f20
+            @%p4 mov.f32 %f20, %f2
+            @%p4 mov.u32 %r8, %r9
+            add.u32   %r9, %r9, 1
+            bra       KLOOP
+        WRITE:
+            cvt.f32.s32 %f3, %r8
+            add.u32   %r21, %r12, %r5
+            st.global.f32 [%r21+0], %f3
+            add.u32   %r4, %r4, %r20
+            bra       ILOOP
+        DONE:
+            exit
+        "#,
+    )?;
+    let mut rng = Prng::new(0x11);
+    let points = rng.f32_vec(n * d, -2.0, 2.0); // [d][n] column-major
+    let cents = rng.f32_vec(k * d, -2.0, 2.0); // [k][d] row-major
+    let pp = dev.alloc_bytes(n * d * 4);
+    let pc = dev.alloc_bytes(k * d * 4);
+    let pa = dev.alloc_bytes(n * 4);
+    dev.write_f32(pp, &points);
+    dev.write_f32(pc, &cents);
+    let mut golden = vec![0f32; n];
+    for i in 0..n {
+        let mut best = f32::INFINITY;
+        let mut arg = 0usize;
+        for kk in 0..k {
+            let mut dist = 0f32;
+            for dd in 0..d {
+                let diff = cents[kk * d + dd] - points[dd * n + i];
+                dist = diff.mul_add(diff, dist);
+            }
+            if dist < best {
+                best = dist;
+                arg = kk;
+            }
+        }
+        golden[i] = arg as f32;
+    }
+    Ok(Prepared {
+        workload: Workload::Kmeans,
+        kernel,
+        // Grid-stride: 4096 threads sweep all N points (total-thread
+        // footprint = one full bank sweep, keeping iterations home).
+        launch: LaunchConfig::with_smem(32, 128, (k * d * 4) as u32),
+        params: vec![
+            ParamValue::U32(pp as u32),
+            ParamValue::U32(pc as u32),
+            ParamValue::U32(pa as u32),
+            ParamValue::U32(n as u32),
+            ParamValue::U32(k as u32),
+            ParamValue::U32((k * d) as u32),
+        ],
+        home: Some((pp, 512)),
+        out_addr: pa,
+        out_len: n,
+        golden,
+        tol: 0.0,
+        xla_inputs: vec![points, cents],
+        meta: vec![("n".into(), n as u32), ("k".into(), k as u32), ("d".into(), d as u32)],
+    })
+}
+
+/// KNN (Rodinia `nn`): Euclidean distance from every record to a query
+/// point — the host then selects the k nearest.
+pub fn knn(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let n: usize = match scale {
+        Scale::Tiny => 4096,
+        Scale::Small => 32768,
+    };
+    let kernel = KernelSource::assemble(
+        "knn",
+        &[Reg::r(10), Reg::r(11), Reg::r(12), Reg::f(10), Reg::f(11), Reg::r(13)],
+        r#"
+            mov.u32   %r1, %tid.x
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            setp.ge.s32 %p1, %r3, %r13
+            @%p1 bra  DONE
+            shl.u32   %r4, %r3, 2
+            add.u32   %r5, %r10, %r4
+            ld.global.f32 %f1, [%r5+0]
+            add.u32   %r6, %r11, %r4
+            ld.global.f32 %f2, [%r6+0]
+            sub.f32   %f1, %f1, %f10
+            sub.f32   %f2, %f2, %f11
+            mul.f32   %f3, %f1, %f1
+            mad.f32   %f3, %f2, %f2, %f3
+            sqrt.f32  %f3, %f3
+            add.u32   %r7, %r12, %r4
+            st.global.f32 [%r7+0], %f3
+        DONE:
+            exit
+        "#,
+    )?;
+    let mut rng = Prng::new(0x22);
+    let lat = rng.f32_vec(n, 0.0, 90.0);
+    let lng = rng.f32_vec(n, 0.0, 180.0);
+    let (qlat, qlng) = (45.0f32, 90.0f32);
+    let plat = dev.alloc_bytes(n * 4);
+    let plng = dev.alloc_bytes(n * 4);
+    let pout = dev.alloc_bytes(n * 4);
+    dev.write_f32(plat, &lat);
+    dev.write_f32(plng, &lng);
+    let golden: Vec<f32> = lat
+        .iter()
+        .zip(&lng)
+        .map(|(a, b)| ((a - qlat) * (a - qlat) + (b - qlng) * (b - qlng)).sqrt())
+        .collect();
+    Ok(Prepared {
+        workload: Workload::Knn,
+        kernel,
+        launch: LaunchConfig::new((n / 128) as u32, 128),
+        params: vec![
+            ParamValue::U32(plat as u32),
+            ParamValue::U32(plng as u32),
+            ParamValue::U32(pout as u32),
+            ParamValue::F32(qlat),
+            ParamValue::F32(qlng),
+            ParamValue::U32(n as u32),
+        ],
+        home: Some((plat, 512)),
+        out_addr: pout,
+        out_len: n,
+        golden,
+        tol: 1e-4,
+        xla_inputs: vec![lat, lng],
+        meta: vec![("n".into(), n as u32)],
+    })
+}

@@ -1,0 +1,217 @@
+//! The benchmark suite (Table I): twelve data-intensive CUDA workloads
+//! re-authored in the mini-PTX ISA, with deterministic input generators,
+//! pure-Rust golden models, and block→core home hints for the runtime's
+//! data-local dispatch (§V-A).
+//!
+//! | Workload | Domain | Description |
+//! |---|---|---|
+//! | BLUR | Image Processing | 3×3 blur |
+//! | CONV | Machine Learning | 3×3 convolution |
+//! | GEMV | Linear Algebra | matrix–vector multiply |
+//! | HIST | Image Processing | 256-bin histogram |
+//! | KMEANS | Machine Learning | k-means assignment step |
+//! | KNN | Machine Learning | k-NN distance kernel |
+//! | TTRANS | Linear Algebra | tensor transposition |
+//! | MAXP | Machine Learning | 2×2 max-pooling |
+//! | NW | Bioinformatics | Needleman–Wunsch alignment |
+//! | UPSAMP | Image Processing | 2× nearest upsample |
+//! | AXPY | Linear Algebra | vector a·x+y |
+//! | PR | Linear Algebra | parallel reduction |
+
+pub mod linalg;
+pub mod stencil;
+pub mod ml;
+pub mod misc;
+
+use crate::isa::program::ParamValue;
+use crate::isa::{KernelSource, LaunchConfig};
+
+/// Device-memory interface the workload builders target — implemented by
+/// both the MPU [`crate::core::Machine`] and the GPU baseline
+/// [`crate::gpu::GpuMachine`], so the *same prepared problem* runs on
+/// both (the Fig. 8 comparison).
+pub trait Device {
+    fn alloc_bytes(&mut self, bytes: usize) -> u64;
+    fn write_f32(&mut self, addr: u64, data: &[f32]);
+}
+
+impl Device for crate::core::Machine {
+    fn alloc_bytes(&mut self, bytes: usize) -> u64 {
+        self.alloc(bytes)
+    }
+    fn write_f32(&mut self, addr: u64, data: &[f32]) {
+        self.write_f32s(addr, data);
+    }
+}
+
+impl Device for crate::gpu::GpuMachine {
+    fn alloc_bytes(&mut self, bytes: usize) -> u64 {
+        self.alloc(bytes)
+    }
+    fn write_f32(&mut self, addr: u64, data: &[f32]) {
+        self.write_f32s(addr, data);
+    }
+}
+
+/// The Table-I workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Workload {
+    Blur,
+    Conv,
+    Gemv,
+    Hist,
+    Kmeans,
+    Knn,
+    Ttrans,
+    Maxp,
+    Nw,
+    Upsamp,
+    Axpy,
+    Pr,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 12] = [
+        Workload::Blur,
+        Workload::Conv,
+        Workload::Gemv,
+        Workload::Hist,
+        Workload::Kmeans,
+        Workload::Knn,
+        Workload::Ttrans,
+        Workload::Maxp,
+        Workload::Nw,
+        Workload::Upsamp,
+        Workload::Axpy,
+        Workload::Pr,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Blur => "blur",
+            Workload::Conv => "conv",
+            Workload::Gemv => "gemv",
+            Workload::Hist => "hist",
+            Workload::Kmeans => "kmeans",
+            Workload::Knn => "knn",
+            Workload::Ttrans => "ttrans",
+            Workload::Maxp => "maxp",
+            Workload::Nw => "nw",
+            Workload::Upsamp => "upsamp",
+            Workload::Axpy => "axpy",
+            Workload::Pr => "pr",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Workload> {
+        Workload::ALL.iter().copied().find(|w| w.name() == s)
+    }
+
+    /// Does the kernel use shared memory (relevant set for Fig. 11)?
+    pub fn uses_smem(&self) -> bool {
+        matches!(
+            self,
+            Workload::Pr | Workload::Gemv | Workload::Hist | Workload::Kmeans | Workload::Conv
+        )
+    }
+}
+
+/// Problem-size scale for the suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Quick: used by unit/integration tests.
+    Tiny,
+    /// Default: used by the benches (DESIGN.md §3 scaled machine).
+    Small,
+}
+
+/// A prepared problem: kernel + launch + device state + golden output.
+pub struct Prepared {
+    pub workload: Workload,
+    pub kernel: KernelSource,
+    pub launch: LaunchConfig,
+    pub params: Vec<ParamValue>,
+    /// Block → home-address dispatch hint: `Some((base, stride))` means
+    /// block `b` homes at `base + b·stride`.
+    pub home: Option<(u64, u64)>,
+    /// Output array (device address, f32 count).
+    pub out_addr: u64,
+    pub out_len: usize,
+    /// Pure-Rust golden output.
+    pub golden: Vec<f32>,
+    /// Comparison tolerance (absolute) vs the golden.
+    pub tol: f32,
+    /// Input arrays in the order the AOT'd XLA golden expects them.
+    pub xla_inputs: Vec<Vec<f32>>,
+    /// Static scalar metadata for the XLA golden (shapes etc.), recorded
+    /// for documentation; the HLO is specialized to these.
+    pub meta: Vec<(String, u32)>,
+}
+
+impl Prepared {
+    /// The home-dispatch closure for [`crate::core::Machine::launch`].
+    pub fn home_fn(&self) -> impl Fn(u32) -> Option<u64> + '_ {
+        let home = self.home;
+        move |b| home.map(|(base, stride)| base + b as u64 * stride)
+    }
+}
+
+/// Build a prepared problem on a device.
+pub fn prepare(w: Workload, scale: Scale, dev: &mut dyn Device) -> anyhow::Result<Prepared> {
+    match w {
+        Workload::Axpy => linalg::axpy(scale, dev),
+        Workload::Pr => linalg::pr(scale, dev),
+        Workload::Gemv => linalg::gemv(scale, dev),
+        Workload::Ttrans => linalg::ttrans(scale, dev),
+        Workload::Blur => stencil::blur(scale, dev),
+        Workload::Conv => stencil::conv(scale, dev),
+        Workload::Maxp => stencil::maxp(scale, dev),
+        Workload::Upsamp => stencil::upsamp(scale, dev),
+        Workload::Kmeans => ml::kmeans(scale, dev),
+        Workload::Knn => ml::knn(scale, dev),
+        Workload::Hist => misc::hist(scale, dev),
+        Workload::Nw => misc::nw(scale, dev),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for w in Workload::ALL {
+            assert_eq!(Workload::from_name(w.name()), Some(w));
+        }
+        assert_eq!(Workload::from_name("nope"), None);
+    }
+
+    #[test]
+    fn twelve_workloads_match_table1() {
+        assert_eq!(Workload::ALL.len(), 12);
+    }
+
+    struct FakeDev {
+        top: u64,
+    }
+    impl Device for FakeDev {
+        fn alloc_bytes(&mut self, bytes: usize) -> u64 {
+            let a = self.top;
+            self.top += bytes as u64;
+            a
+        }
+        fn write_f32(&mut self, _addr: u64, _data: &[f32]) {}
+    }
+
+    #[test]
+    fn all_kernels_assemble_and_compile() {
+        for w in Workload::ALL {
+            let mut dev = FakeDev { top: 0 };
+            let p = prepare(w, Scale::Tiny, &mut dev).unwrap_or_else(|e| panic!("{w:?}: {e}"));
+            let k = crate::compiler::compile(&p.kernel).unwrap_or_else(|e| panic!("{w:?}: {e}"));
+            assert!(!k.instrs.is_empty());
+            assert_eq!(p.params.len(), p.kernel.params.len(), "{w:?} param count");
+            assert_eq!(p.golden.len(), p.out_len, "{w:?} golden length");
+        }
+    }
+}

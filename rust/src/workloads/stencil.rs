@@ -1,0 +1,401 @@
+//! Image-processing / stencil workloads (Table I): BLUR, CONV, MAXP,
+//! UPSAMP.
+//!
+//! Image rows are sized so `W·4` bytes equal a whole bank sweep
+//! (`total_banks × interleave = 16 KiB` on the scaled machine): a pixel's
+//! vertical neighbours then live on the same core, which is exactly the
+//! data placement a near-bank mapping wants (DESIGN.md §3).
+
+use super::{Device, Prepared, Scale, Workload};
+use crate::isa::program::ParamValue;
+use crate::isa::{KernelSource, LaunchConfig, Reg};
+use crate::sim::Prng;
+use anyhow::Result;
+
+fn img_dims(scale: Scale, w: usize) -> (usize, usize) {
+    match scale {
+        Scale::Tiny => (w, 4),
+        Scale::Small => (w, 16),
+    }
+}
+
+/// BLUR (Halide 3×3 blur): clamped-edge 3×3 box filter.
+pub fn blur(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let (w, h) = img_dims(scale, 4096);
+    let n = w * h;
+    let kernel = KernelSource::assemble(
+        "blur",
+        &[Reg::r(10), Reg::r(11), Reg::r(12), Reg::r(13), Reg::r(14)],
+        r#"
+            mov.u32   %r1, %tid.x
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            setp.ge.s32 %p1, %r3, %r14
+            @%p1 bra  DONE
+            div.u32   %r4, %r3, %r12          // y
+            rem.u32   %r5, %r3, %r12          // x
+            add.s32   %r6, %r4, -1
+            max.s32   %r6, %r6, 0             // ym
+            add.s32   %r7, %r4, 1
+            add.s32   %r2, %r13, -1
+            min.s32   %r7, %r7, %r2           // yp
+            add.s32   %r8, %r5, -1
+            max.s32   %r8, %r8, 0             // xm
+            add.s32   %r9, %r5, 1
+            add.s32   %r2, %r12, -1
+            min.s32   %r9, %r9, %r2           // xp
+            mul.u32   %r16, %r6, %r12         // ym*W
+            mul.u32   %r17, %r4, %r12         // y*W
+            mul.u32   %r18, %r7, %r12         // yp*W
+            mov.f32   %f1, 0.0
+            // row ym
+            add.u32   %r19, %r16, %r8
+            shl.u32   %r19, %r19, 2
+            add.u32   %r19, %r10, %r19
+            ld.global.f32 %f2, [%r19+0]
+            add.f32   %f1, %f1, %f2
+            add.u32   %r19, %r16, %r5
+            shl.u32   %r19, %r19, 2
+            add.u32   %r19, %r10, %r19
+            ld.global.f32 %f2, [%r19+0]
+            add.f32   %f1, %f1, %f2
+            add.u32   %r19, %r16, %r9
+            shl.u32   %r19, %r19, 2
+            add.u32   %r19, %r10, %r19
+            ld.global.f32 %f2, [%r19+0]
+            add.f32   %f1, %f1, %f2
+            // row y
+            add.u32   %r19, %r17, %r8
+            shl.u32   %r19, %r19, 2
+            add.u32   %r19, %r10, %r19
+            ld.global.f32 %f2, [%r19+0]
+            add.f32   %f1, %f1, %f2
+            add.u32   %r19, %r17, %r5
+            shl.u32   %r19, %r19, 2
+            add.u32   %r19, %r10, %r19
+            ld.global.f32 %f2, [%r19+0]
+            add.f32   %f1, %f1, %f2
+            add.u32   %r19, %r17, %r9
+            shl.u32   %r19, %r19, 2
+            add.u32   %r19, %r10, %r19
+            ld.global.f32 %f2, [%r19+0]
+            add.f32   %f1, %f1, %f2
+            // row yp
+            add.u32   %r19, %r18, %r8
+            shl.u32   %r19, %r19, 2
+            add.u32   %r19, %r10, %r19
+            ld.global.f32 %f2, [%r19+0]
+            add.f32   %f1, %f1, %f2
+            add.u32   %r19, %r18, %r5
+            shl.u32   %r19, %r19, 2
+            add.u32   %r19, %r10, %r19
+            ld.global.f32 %f2, [%r19+0]
+            add.f32   %f1, %f1, %f2
+            add.u32   %r19, %r18, %r9
+            shl.u32   %r19, %r19, 2
+            add.u32   %r19, %r10, %r19
+            ld.global.f32 %f2, [%r19+0]
+            add.f32   %f1, %f1, %f2
+            mul.f32   %f1, %f1, 0.111111112
+            shl.u32   %r20, %r3, 2
+            add.u32   %r20, %r11, %r20
+            st.global.f32 [%r20+0], %f1
+        DONE:
+            exit
+        "#,
+    )?;
+    let mut rng = Prng::new(0xE5);
+    let img = rng.f32_vec(n, 0.0, 1.0);
+    let pin = dev.alloc_bytes(n * 4);
+    let pout = dev.alloc_bytes(n * 4);
+    dev.write_f32(pin, &img);
+    let golden = blur_golden(&img, w, h);
+    Ok(Prepared {
+        workload: Workload::Blur,
+        kernel,
+        launch: LaunchConfig::new((n / 128) as u32, 128),
+        params: vec![
+            ParamValue::U32(pin as u32),
+            ParamValue::U32(pout as u32),
+            ParamValue::U32(w as u32),
+            ParamValue::U32(h as u32),
+            ParamValue::U32(n as u32),
+        ],
+        home: Some((pin, 512)),
+        out_addr: pout,
+        out_len: n,
+        golden,
+        tol: 1e-5,
+        xla_inputs: vec![img],
+        meta: vec![("w".into(), w as u32), ("h".into(), h as u32)],
+    })
+}
+
+pub(crate) fn blur_golden(img: &[f32], w: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0f32; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let mut s = 0f32;
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let yy = (y as i64 + dy).clamp(0, h as i64 - 1) as usize;
+                    let xx = (x as i64 + dx).clamp(0, w as i64 - 1) as usize;
+                    s += img[yy * w + xx];
+                }
+            }
+            out[y * w + x] = s * 0.111111112;
+        }
+    }
+    out
+}
+
+/// CONV (TensorFlow-style 3×3 convolution, single channel, clamped
+/// edges): the nine weights are staged in shared memory per block.
+pub fn conv(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let (w, h) = img_dims(scale, 4096);
+    let n = w * h;
+    // The nine-tap body is long and repetitive; build it
+    // programmatically to keep the taps consistent.
+    let mut body = String::new();
+    body.push_str(
+        r#"
+            mov.u32   %r1, %tid.x
+            setp.ge.s32 %p2, %r1, 9
+            @%p2 bra  WDONE
+            shl.u32   %r2, %r1, 2
+            add.u32   %r19, %r15, %r2
+            ld.global.f32 %f9, [%r19+0]
+            st.shared.f32 [%r2+0], %f9
+        WDONE:
+            bar.sync
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            setp.ge.s32 %p1, %r3, %r14
+            @%p1 bra  DONE
+            div.u32   %r4, %r3, %r12
+            rem.u32   %r5, %r3, %r12
+            add.s32   %r6, %r4, -1
+            max.s32   %r6, %r6, 0
+            add.s32   %r7, %r4, 1
+            add.s32   %r2, %r13, -1
+            min.s32   %r7, %r7, %r2
+            add.s32   %r8, %r5, -1
+            max.s32   %r8, %r8, 0
+            add.s32   %r9, %r5, 1
+            add.s32   %r2, %r12, -1
+            min.s32   %r9, %r9, %r2
+            mul.u32   %r16, %r6, %r12
+            mul.u32   %r17, %r4, %r12
+            mul.u32   %r18, %r7, %r12
+            mov.f32   %f1, 0.0
+"#,
+    );
+    for (ri, row) in ["%r16", "%r17", "%r18"].iter().enumerate() {
+        for (ci, col) in ["%r8", "%r5", "%r9"].iter().enumerate() {
+            let widx = ri * 3 + ci;
+            body.push_str(&format!(
+                "            add.u32 %r19, {row}, {col}\n\
+                             shl.u32 %r19, %r19, 2\n\
+                             add.u32 %r19, %r10, %r19\n\
+                             ld.global.f32 %f2, [%r19+0]\n\
+                             ld.shared.f32 %f3, [%r21+{off}]\n\
+                             mad.f32 %f1, %f2, %f3, %f1\n",
+                off = widx * 4,
+            ));
+        }
+    }
+    body.push_str(
+        r#"
+            shl.u32   %r20, %r3, 2
+            add.u32   %r20, %r11, %r20
+            st.global.f32 [%r20+0], %f1
+        DONE:
+            exit
+        "#,
+    );
+    // %r21 is a zero base register for the shared-memory weight reads.
+    let body = format!("            mov.u32 %r21, 0\n{body}");
+    let kernel = KernelSource::assemble(
+        "conv",
+        &[Reg::r(10), Reg::r(11), Reg::r(12), Reg::r(13), Reg::r(14), Reg::r(15)],
+        &body,
+    )?;
+
+    let mut rng = Prng::new(0xF6);
+    let img = rng.f32_vec(n, 0.0, 1.0);
+    let wts = rng.f32_vec(9, -0.5, 0.5);
+    let pin = dev.alloc_bytes(n * 4);
+    let pout = dev.alloc_bytes(n * 4);
+    let pw = dev.alloc_bytes(9 * 4);
+    dev.write_f32(pin, &img);
+    dev.write_f32(pw, &wts);
+    let golden = conv_golden(&img, &wts, w, h);
+    Ok(Prepared {
+        workload: Workload::Conv,
+        kernel,
+        launch: LaunchConfig::with_smem((n / 128) as u32, 128, 9 * 4),
+        params: vec![
+            ParamValue::U32(pin as u32),
+            ParamValue::U32(pout as u32),
+            ParamValue::U32(w as u32),
+            ParamValue::U32(h as u32),
+            ParamValue::U32(n as u32),
+            ParamValue::U32(pw as u32),
+        ],
+        home: Some((pin, 512)),
+        out_addr: pout,
+        out_len: n,
+        golden,
+        tol: 1e-4,
+        xla_inputs: vec![img, wts],
+        meta: vec![("w".into(), w as u32), ("h".into(), h as u32)],
+    })
+}
+
+pub(crate) fn conv_golden(img: &[f32], wts: &[f32], w: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0f32; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let mut s = 0f32;
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let yy = (y as i64 + dy).clamp(0, h as i64 - 1) as usize;
+                    let xx = (x as i64 + dx).clamp(0, w as i64 - 1) as usize;
+                    let widx = ((dy + 1) * 3 + (dx + 1)) as usize;
+                    s = img[yy * w + xx].mul_add(wts[widx], s);
+                }
+            }
+            out[y * w + x] = s;
+        }
+    }
+    out
+}
+
+/// MAXP (TensorFlow 2×2 max-pooling, stride 2).
+pub fn maxp(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let (w, h) = img_dims(scale, 4096);
+    let (ow, oh) = (w / 2, h / 2);
+    let n_out = ow * oh;
+    let kernel = KernelSource::assemble(
+        "maxp",
+        &[Reg::r(10), Reg::r(11), Reg::r(12), Reg::r(13), Reg::r(14)],
+        r#"
+            mov.u32   %r1, %tid.x
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            setp.ge.s32 %p1, %r3, %r14
+            @%p1 bra  DONE
+            div.u32   %r4, %r3, %r12          // oy
+            rem.u32   %r5, %r3, %r12          // ox
+            shl.u32   %r6, %r4, 1             // 2*oy
+            shl.u32   %r7, %r5, 1             // 2*ox
+            mad.u32   %r8, %r6, %r13, %r7     // 2oy*W + 2ox
+            shl.u32   %r8, %r8, 2
+            add.u32   %r8, %r10, %r8
+            shl.u32   %r9, %r13, 2            // 4*W
+            ld.global.f32 %f1, [%r8+0]
+            ld.global.f32 %f2, [%r8+4]
+            max.f32   %f1, %f1, %f2
+            add.u32   %r8, %r8, %r9
+            ld.global.f32 %f2, [%r8+0]
+            max.f32   %f1, %f1, %f2
+            ld.global.f32 %f2, [%r8+4]
+            max.f32   %f1, %f1, %f2
+            shl.u32   %r2, %r3, 2
+            add.u32   %r2, %r11, %r2
+            st.global.f32 [%r2+0], %f1
+        DONE:
+            exit
+        "#,
+    )?;
+    let n_in = w * h;
+    let mut rng = Prng::new(0xA7);
+    let img = rng.f32_vec(n_in, -1.0, 1.0);
+    let pin = dev.alloc_bytes(n_in * 4);
+    let pout = dev.alloc_bytes(n_out * 4);
+    dev.write_f32(pin, &img);
+    let mut golden = vec![0f32; n_out];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let b = 2 * oy * w + 2 * ox;
+            golden[oy * ow + ox] = img[b].max(img[b + 1]).max(img[b + w]).max(img[b + w + 1]);
+        }
+    }
+    Ok(Prepared {
+        workload: Workload::Maxp,
+        kernel,
+        launch: LaunchConfig::new((n_out / 128) as u32, 128),
+        params: vec![
+            ParamValue::U32(pin as u32),
+            ParamValue::U32(pout as u32),
+            ParamValue::U32(ow as u32),
+            ParamValue::U32(w as u32),
+            ParamValue::U32(n_out as u32),
+        ],
+        home: Some((pin, 1024)),
+        out_addr: pout,
+        out_len: n_out,
+        golden,
+        tol: 0.0,
+        xla_inputs: vec![img],
+        meta: vec![("w".into(), w as u32), ("h".into(), h as u32)],
+    })
+}
+
+/// UPSAMP (Halide 2× nearest-neighbour upsample).
+pub fn upsamp(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
+    let (w, h) = img_dims(scale, 2048);
+    let (ow, oh) = (w * 2, h * 2);
+    let n_out = ow * oh;
+    let kernel = KernelSource::assemble(
+        "upsamp",
+        &[Reg::r(10), Reg::r(11), Reg::r(12), Reg::r(13), Reg::r(14)],
+        r#"
+            mov.u32   %r1, %tid.x
+            mad.u32   %r3, %ctaid.x, %ntid.x, %r1
+            setp.ge.s32 %p1, %r3, %r14
+            @%p1 bra  DONE
+            div.u32   %r4, %r3, %r12          // oy
+            rem.u32   %r5, %r3, %r12          // ox
+            shr.u32   %r6, %r4, 1             // oy/2
+            shr.u32   %r7, %r5, 1             // ox/2
+            mad.u32   %r8, %r6, %r13, %r7
+            shl.u32   %r8, %r8, 2
+            add.u32   %r8, %r10, %r8
+            ld.global.f32 %f1, [%r8+0]
+            shl.u32   %r2, %r3, 2
+            add.u32   %r2, %r11, %r2
+            st.global.f32 [%r2+0], %f1
+        DONE:
+            exit
+        "#,
+    )?;
+    let n_in = w * h;
+    let mut rng = Prng::new(0xB8);
+    let img = rng.f32_vec(n_in, 0.0, 1.0);
+    let pin = dev.alloc_bytes(n_in * 4);
+    let pout = dev.alloc_bytes(n_out * 4);
+    dev.write_f32(pin, &img);
+    let mut golden = vec![0f32; n_out];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            golden[oy * ow + ox] = img[(oy / 2) * w + ox / 2];
+        }
+    }
+    Ok(Prepared {
+        workload: Workload::Upsamp,
+        kernel,
+        launch: LaunchConfig::new((n_out / 128) as u32, 128),
+        params: vec![
+            ParamValue::U32(pin as u32),
+            ParamValue::U32(pout as u32),
+            ParamValue::U32(ow as u32),
+            ParamValue::U32(w as u32),
+            ParamValue::U32(n_out as u32),
+        ],
+        home: Some((pout, 512)),
+        out_addr: pout,
+        out_len: n_out,
+        golden,
+        tol: 0.0,
+        xla_inputs: vec![img],
+        meta: vec![("w".into(), w as u32), ("h".into(), h as u32)],
+    })
+}

@@ -1,0 +1,190 @@
+//! Property-based tests (deterministic xorshift harness — DESIGN.md §2).
+//!
+//! The strongest property in the repo: the MPU machine and the GPU
+//! baseline are two *independent* timing engines wrapped around the same
+//! functional semantics, so any generated program must produce
+//! bit-identical memory images on both. Plus: simulator determinism,
+//! correctness under random architecture configurations, and stats
+//! accounting invariants.
+
+use mpu::compiler::compile;
+use mpu::config::{GpuConfig, MachineConfig, OffloadPolicy, SchedPolicy, SmemLocation};
+use mpu::core::Machine;
+use mpu::gpu::GpuMachine;
+use mpu::isa::program::ParamValue;
+use mpu::isa::{KernelSource, LaunchConfig, Reg};
+use mpu::sim::prng::{check_cases, Prng};
+use mpu::workloads::{prepare, Scale, Workload};
+
+/// Generate a random straight-line (plus one guarded skip) kernel:
+/// loads two inputs, applies a random ALU chain, stores the result.
+fn random_kernel(rng: &mut Prng) -> String {
+    let fops = ["add.f32", "sub.f32", "mul.f32", "min.f32", "max.f32", "mad.f32"];
+    let iops = ["add.u32", "sub.u32", "and.u32", "or.u32", "xor.u32", "min.s32", "max.s32"];
+    let mut body = String::from(
+        "mov.u32 %r1, %tid.x\n\
+         mad.u32 %r3, %ctaid.x, %ntid.x, %r1\n\
+         setp.ge.s32 %p1, %r3, %r12\n\
+         @%p1 bra DONE\n\
+         shl.u32 %r4, %r3, 2\n\
+         add.u32 %r5, %r10, %r4\n\
+         add.u32 %r6, %r11, %r4\n\
+         ld.global.f32 %f1, [%r5+0]\n\
+         ld.global.f32 %f2, [%r6+0]\n\
+         mov.u32 %r7, %r3\n",
+    );
+    let n_ops = rng.range(2, 9);
+    for _ in 0..n_ops {
+        if rng.chance(0.7) {
+            let op = fops[rng.range(0, fops.len())];
+            let d = rng.range(1, 4);
+            let a = rng.range(1, 4);
+            let b = rng.range(1, 4);
+            if op == "mad.f32" {
+                let c = rng.range(1, 4);
+                body.push_str(&format!("mad.f32 %f{d}, %f{a}, %f{b}, %f{c}\n"));
+            } else {
+                body.push_str(&format!("{op} %f{d}, %f{a}, %f{b}\n"));
+            }
+        } else {
+            let op = iops[rng.range(0, iops.len())];
+            let d = rng.range(7, 9);
+            let a = rng.range(7, 9);
+            body.push_str(&format!("{op} %r{d}, %r{a}, {}\n", rng.below(1000)));
+        }
+    }
+    // Occasionally a guarded extra op (divergence inside the warp).
+    if rng.chance(0.5) {
+        body.push_str("setp.lt.s32 %p2, %r1, 16\n@%p2 mul.f32 %f1, %f1, 2.0\n");
+    }
+    // Fold the int chain in so it can't be dead-coded by accident.
+    body.push_str(
+        "cvt.f32.s32 %f3, %r7\n\
+         add.f32 %f1, %f1, %f3\n\
+         st.global.f32 [%r6+0], %f1\n\
+         DONE:\nexit\n",
+    );
+    body
+}
+
+#[test]
+fn mpu_and_gpu_agree_on_random_programs() {
+    check_cases("mpu_gpu_differential", 24, |rng| {
+        let src = random_kernel(rng);
+        let kernel = KernelSource::assemble(
+            "prop",
+            &[Reg::r(10), Reg::r(11), Reg::r(12)],
+            &src,
+        )
+        .expect("assemble");
+        let k = compile(&kernel).expect("compile");
+
+        let n = 1024usize;
+        let xv = rng.f32_vec(n, -4.0, 4.0);
+        let yv = rng.f32_vec(n, -4.0, 4.0);
+        let launch = LaunchConfig::new(8, 128);
+
+        let cfg = MachineConfig::scaled();
+        let mut m = Machine::new(&cfg);
+        let x = m.alloc(n * 4);
+        let y = m.alloc(n * 4);
+        m.write_f32s(x, &xv);
+        m.write_f32s(y, &yv);
+        let params = vec![
+            ParamValue::U32(x as u32),
+            ParamValue::U32(y as u32),
+            ParamValue::U32(n as u32),
+        ];
+        m.launch(k.clone(), launch, &params, |_| None).unwrap();
+        m.run().unwrap();
+        let out_mpu = m.read_f32s(y, n);
+
+        let gcfg = GpuConfig::matched(&cfg);
+        let mut g = GpuMachine::new(&gcfg);
+        let gx = g.alloc(n * 4);
+        let gy = g.alloc(n * 4);
+        g.write_f32s(gx, &xv);
+        g.write_f32s(gy, &yv);
+        let gparams = vec![
+            ParamValue::U32(gx as u32),
+            ParamValue::U32(gy as u32),
+            ParamValue::U32(n as u32),
+        ];
+        g.launch(k, launch, &gparams).unwrap();
+        g.run().unwrap();
+        let out_gpu = g.read_f32s(gy, n);
+
+        for (i, (a, b)) in out_mpu.iter().zip(&out_gpu).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "MPU/GPU diverge at {i}: {a} vs {b}\nkernel:\n{src}"
+            );
+        }
+    });
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let cfg = MachineConfig::scaled();
+    let a = mpu::coordinator::run_workload_scaled(Workload::Hist, &cfg, Scale::Tiny).unwrap();
+    let b = mpu::coordinator::run_workload_scaled(Workload::Hist, &cfg, Scale::Tiny).unwrap();
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.stats.tsv_total_bytes(), b.stats.tsv_total_bytes());
+    assert_eq!(a.stats.row_hits, b.stats.row_hits);
+    assert_eq!(a.output, b.output);
+}
+
+#[test]
+fn correct_under_random_configurations() {
+    // Routing/batching/state invariant: whatever the architecture knobs,
+    // the functional result never changes.
+    check_cases("random_configs", 12, |rng| {
+        let mut cfg = MachineConfig::scaled();
+        cfg.row_buffers_per_bank = [1, 2, 4][rng.range(0, 3)];
+        cfg.offload_policy = [
+            OffloadPolicy::CompilerAnnotated,
+            OffloadPolicy::HardwareDefault,
+            OffloadPolicy::AllNearBank,
+            OffloadPolicy::AllFarBank,
+        ][rng.range(0, 4)];
+        cfg.smem_location = if rng.chance(0.5) { SmemLocation::NearBank } else { SmemLocation::FarBank };
+        cfg.sched_policy = if rng.chance(0.5) { SchedPolicy::Gto } else { SchedPolicy::RoundRobin };
+        cfg.subarray_interleave = rng.chance(0.5);
+        cfg.max_blocks_per_core = rng.range(2, 9);
+        let w = [Workload::Axpy, Workload::Pr, Workload::Hist, Workload::Knn][rng.range(0, 4)];
+        let r = mpu::coordinator::run_workload_scaled(w, &cfg, Scale::Tiny)
+            .unwrap_or_else(|e| panic!("{w:?} failed under {cfg:?}: {e}"));
+        assert!(r.correct, "{w:?} incorrect under {cfg:?} (max_err {})", r.max_err);
+    });
+}
+
+#[test]
+fn stats_accounting_invariants() {
+    let cfg = MachineConfig::scaled();
+    for w in [Workload::Axpy, Workload::Gemv, Workload::Hist, Workload::Nw] {
+        let mut m = Machine::new(&cfg);
+        let p = prepare(w, Scale::Tiny, &mut m).unwrap();
+        let k = mpu::coordinator::compile_for(&p, &cfg).unwrap();
+        m.launch(k, p.launch, &p.params, p.home_fn()).unwrap();
+        let s = m.run().unwrap();
+        // Every column access is exactly one hit or one miss.
+        assert_eq!(s.row_hits + s.row_misses, s.dram_reads + s.dram_writes, "{w:?}");
+        // DRAM bytes = column accesses × bank-IO width.
+        assert_eq!(s.dram_bytes, (s.dram_reads + s.dram_writes) * 32, "{w:?}");
+        // Activations cannot exceed misses; precharges cannot exceed acts.
+        assert!(s.dram_acts <= s.row_misses, "{w:?}");
+        assert!(s.dram_pres <= s.dram_acts, "{w:?}");
+        // Work happened and finished.
+        assert!(s.instrs_total() > 0 && s.cycles > 0, "{w:?}");
+    }
+}
+
+#[test]
+fn paper_scale_machine_also_runs() {
+    // The full Table-II geometry (8 cubes, 128 cores) boots and computes
+    // correctly on a small problem.
+    let mut cfg = MachineConfig::paper();
+    cfg.bank_bytes = 64 << 10; // keep the functional memory small
+    let r = mpu::coordinator::run_workload_scaled(Workload::Axpy, &cfg, Scale::Tiny).unwrap();
+    assert!(r.correct, "paper-scale axpy incorrect (max_err {})", r.max_err);
+}

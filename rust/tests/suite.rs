@@ -1,0 +1,158 @@
+//! Integration tests: the full Table-I suite runs on both machines and
+//! matches the pure-Rust goldens bit-for-bit (or within stated f32
+//! tolerance); the paper's headline orderings hold on the scaled
+//! machine.
+
+use mpu::config::{MachineConfig, OffloadPolicy, PipelineMode, SmemLocation};
+use mpu::coordinator::{run_pair, run_workload_scaled, geomean};
+use mpu::workloads::{Scale, Workload};
+
+#[test]
+fn all_workloads_correct_on_mpu() {
+    let cfg = MachineConfig::scaled();
+    for w in Workload::ALL {
+        let r = run_workload_scaled(w, &cfg, Scale::Tiny)
+            .unwrap_or_else(|e| panic!("{w:?} failed: {e}"));
+        assert!(
+            r.correct,
+            "{w:?} wrong on MPU: max_err {} (out[0..4]={:?} golden[0..4]={:?})",
+            r.max_err,
+            &r.output[..r.output.len().min(4)],
+            &r.stats.cycles
+        );
+        assert!(r.cycles > 0);
+    }
+}
+
+#[test]
+fn all_workloads_correct_on_gpu() {
+    let cfg = MachineConfig::scaled();
+    let gcfg = mpu::config::GpuConfig::matched(&cfg);
+    for w in Workload::ALL {
+        let r = mpu::coordinator::run_workload_gpu_scaled(w, &gcfg, &cfg, Scale::Tiny)
+            .unwrap_or_else(|e| panic!("{w:?} failed: {e}"));
+        assert!(r.correct, "{w:?} wrong on GPU: max_err {}", r.max_err);
+    }
+}
+
+#[test]
+fn mpu_beats_gpu_on_geomean() {
+    // Fig. 8 shape: MPU wins on the suite geomean (the paper's 3.46×;
+    // our scaled machine should land >1.5× at Tiny scale).
+    let cfg = MachineConfig::scaled();
+    let mut speedups = Vec::new();
+    for w in [Workload::Axpy, Workload::Knn, Workload::Blur, Workload::Maxp, Workload::Gemv] {
+        let p = run_pair(w, &cfg, Scale::Tiny).unwrap();
+        assert!(p.mpu.correct && p.gpu.correct, "{w:?} incorrect");
+        speedups.push(p.speedup());
+    }
+    let g = geomean(&speedups);
+    assert!(g > 1.5, "geomean speedup {g:.2} (per-wl: {speedups:?})");
+}
+
+#[test]
+fn ponb_is_slower_than_hybrid() {
+    // Fig. 13 shape.
+    let hybrid = MachineConfig::scaled();
+    let mut ponb = hybrid.clone();
+    ponb.pipeline_mode = PipelineMode::PonB;
+    let mut ratios = Vec::new();
+    for w in [Workload::Axpy, Workload::Blur, Workload::Knn] {
+        let h = run_workload_scaled(w, &hybrid, Scale::Tiny).unwrap();
+        let p = run_workload_scaled(w, &ponb, Scale::Tiny).unwrap();
+        assert!(h.correct && p.correct);
+        ratios.push(p.cycles as f64 / h.cycles as f64);
+    }
+    let g = geomean(&ratios);
+    assert!(g > 1.2, "hybrid vs PonB geomean {g:.2} ({ratios:?})");
+}
+
+#[test]
+fn near_smem_helps_smem_workloads() {
+    // Fig. 11 shape on smem-heavy workloads. This effect needs the real
+    // problem scale: the far-smem penalty is per-loop-iteration register
+    // movement (loaded values must descend to the base logic die), which
+    // Tiny's single iteration never exposes.
+    let near = MachineConfig::scaled();
+    let mut far = near.clone();
+    far.smem_location = SmemLocation::FarBank;
+    for w in [Workload::Hist, Workload::Pr] {
+        let rn = run_workload_scaled(w, &near, Scale::Small).unwrap();
+        let rf = run_workload_scaled(w, &far, Scale::Small).unwrap();
+        assert!(rn.correct && rf.correct, "{w:?} incorrect");
+        assert!(
+            rn.cycles <= rf.cycles,
+            "{w:?}: near smem {} should not be slower than far {}",
+            rn.cycles,
+            rf.cycles
+        );
+    }
+}
+
+#[test]
+fn more_row_buffers_reduce_miss_rate() {
+    // Fig. 12 shape.
+    let mut c1 = MachineConfig::scaled();
+    c1.row_buffers_per_bank = 1;
+    let mut c4 = MachineConfig::scaled();
+    c4.row_buffers_per_bank = 4;
+    let mut m1 = Vec::new();
+    let mut m4 = Vec::new();
+    for w in [Workload::Axpy, Workload::Knn, Workload::Upsamp] {
+        let r1 = run_workload_scaled(w, &c1, Scale::Tiny).unwrap();
+        let r4 = run_workload_scaled(w, &c4, Scale::Tiny).unwrap();
+        assert!(r1.correct && r4.correct);
+        m1.push(r1.stats.row_miss_rate());
+        m4.push(r4.stats.row_miss_rate());
+    }
+    let a1 = m1.iter().sum::<f64>() / m1.len() as f64;
+    let a4 = m4.iter().sum::<f64>() / m4.len() as f64;
+    assert!(a4 <= a1 + 1e-9, "miss rate should not rise with MASA: {a4:.3} vs {a1:.3}");
+}
+
+#[test]
+fn annotated_policy_beats_naive_policies() {
+    // Fig. 15 shape on AXPY: annotated ≥ hw-default ≥, and both naive
+    // policies are worse than annotated.
+    let mk = |p: OffloadPolicy| {
+        let mut c = MachineConfig::scaled();
+        c.offload_policy = p;
+        c
+    };
+    let w = Workload::Axpy;
+    let ann = run_workload_scaled(w, &mk(OffloadPolicy::CompilerAnnotated), Scale::Tiny).unwrap();
+    let hw = run_workload_scaled(w, &mk(OffloadPolicy::HardwareDefault), Scale::Tiny).unwrap();
+    let all_nb = run_workload_scaled(w, &mk(OffloadPolicy::AllNearBank), Scale::Tiny).unwrap();
+    let all_fb = run_workload_scaled(w, &mk(OffloadPolicy::AllFarBank), Scale::Tiny).unwrap();
+    for r in [&ann, &hw, &all_nb, &all_fb] {
+        assert!(r.correct, "policy run incorrect");
+    }
+    assert!(ann.cycles <= hw.cycles, "annotated {} vs hw {}", ann.cycles, hw.cycles);
+    assert!(ann.cycles <= all_nb.cycles, "annotated {} vs all-nb {}", ann.cycles, all_nb.cycles);
+    assert!(ann.cycles <= all_fb.cycles, "annotated {} vs all-fb {}", ann.cycles, all_fb.cycles);
+}
+
+#[test]
+fn register_locations_separate_cleanly() {
+    // Fig. 14 shape: across the suite most registers get a unique
+    // location and only a small fraction are B.
+    let cfg = MachineConfig::scaled();
+    let mut near = 0usize;
+    let mut far = 0usize;
+    let mut both = 0usize;
+    let mut total = 0usize;
+    for w in Workload::ALL {
+        let r = run_workload_scaled(w, &cfg, Scale::Tiny).unwrap();
+        near += r.loc_stats.near;
+        far += r.loc_stats.far + r.loc_stats.unknown;
+        both += r.loc_stats.both;
+        total += r.loc_stats.total();
+    }
+    let both_frac = both as f64 / total as f64;
+    assert!(near > 0 && far > 0);
+    assert!(both_frac < 0.25, "B fraction too high: {both_frac:.2}");
+    assert!(
+        (near + far) as f64 / total as f64 > 0.75,
+        "most registers should have a unique location"
+    );
+}

@@ -1,0 +1,61 @@
+//! Three-layer end-to-end validation: the Rust simulator's functional
+//! memory image must match the JAX/Pallas AOT-compiled XLA golden models
+//! loaded via PJRT — for every workload in the suite.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise, so `cargo
+//! test` works on a fresh checkout).
+
+use mpu::config::MachineConfig;
+use mpu::core::Machine;
+use mpu::coordinator::compile_for;
+use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
+use mpu::workloads::{prepare, Scale, Workload};
+
+#[test]
+fn simulator_matches_xla_golden_on_all_workloads() {
+    if !artifacts_available(Scale::Tiny) {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let golden = XlaGolden::new().expect("PJRT CPU client");
+    let cfg = MachineConfig::scaled();
+    for w in Workload::ALL {
+        let mut m = Machine::new(&cfg);
+        let p = prepare(w, Scale::Tiny, &mut m).unwrap();
+        let k = compile_for(&p, &cfg).unwrap();
+        m.launch(k, p.launch, &p.params, p.home_fn()).unwrap();
+        m.run().unwrap();
+        let sim_out = m.read_f32s(p.out_addr, p.out_len);
+        let v = validate_against_xla(&golden, &p, Scale::Tiny, &sim_out)
+            .unwrap_or_else(|e| panic!("{w:?}: {e}"));
+        assert!(
+            v.passed,
+            "{w:?}: simulator vs XLA golden diverged (max_err {}, {} mismatches)",
+            v.max_err, v.mismatches
+        );
+        println!("{:>8}: sim == XLA golden (max_err {:.2e})", w.name(), v.max_err);
+    }
+}
+
+#[test]
+fn xla_golden_matches_rust_golden() {
+    // The two independent golden models (pure-Rust and JAX/Pallas→XLA)
+    // agree — triangulating the functional semantics.
+    if !artifacts_available(Scale::Tiny) {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let golden = XlaGolden::new().expect("PJRT CPU client");
+    let cfg = MachineConfig::scaled();
+    for w in Workload::ALL {
+        let mut m = Machine::new(&cfg);
+        let p = prepare(w, Scale::Tiny, &mut m).unwrap();
+        let v = validate_against_xla(&golden, &p, Scale::Tiny, &p.golden)
+            .unwrap_or_else(|e| panic!("{w:?}: {e}"));
+        assert!(
+            v.passed,
+            "{w:?}: rust golden vs XLA golden diverged (max_err {}, {} mismatches)",
+            v.max_err, v.mismatches
+        );
+    }
+}
