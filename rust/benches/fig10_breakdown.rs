@@ -1,22 +1,26 @@
 //! Fig. 10 — MPU energy breakdown, aggregated over the suite.
 //! Paper: ALU 39.82%, OPC+RF 15.47%, DRAM 16.42%, TSV 16.79%,
 //! Network 4.43% (compute + data access + movement = 92.94%).
+//!
+//! Runs through the parallel sweep engine; `--tiny` smoke-runs it.
 
 use mpu::config::MachineConfig;
 use mpu::coordinator::report::{f1pct, Table};
-use mpu::coordinator::run_workload;
+use mpu::coordinator::sweep::{scale_from_args, select, Sweep};
 use mpu::energy::EnergyBreakdown;
 use mpu::workloads::Workload;
 
 fn main() {
+    let scale = scale_from_args();
     let cfg = MachineConfig::scaled();
+    let results = Sweep::new().suite_mpu("mpu", scale, &cfg).run().expect("sweep");
+
     let mut agg = EnergyBreakdown::default();
     let mut per = Table::new(
         "Fig. 10 — per-workload energy shares",
         &["workload", "ALU", "OPC+RF", "DRAM", "SMEM", "TSV", "Network", "Frontend", "LSU-Ext"],
     );
-    for w in Workload::ALL {
-        let r = run_workload(w, &cfg).expect("run");
+    for (w, r) in Workload::ALL.iter().zip(select(&results, "mpu")) {
         let e = r.energy;
         agg.alu += e.alu;
         agg.frontend += e.frontend;

@@ -1,16 +1,28 @@
 //! Fig. 11 — near-bank vs far-bank shared memory.
 //! Paper: mean 1.48× speedup and 1.89× TSV-traffic improvement on
 //! smem-using workloads; non-smem workloads identical.
+//!
+//! Both variants run in one parallel sweep; `--tiny` smoke-runs it.
 
 use mpu::config::{MachineConfig, SmemLocation};
+use mpu::coordinator::geomean;
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::{geomean, run_workload};
+use mpu::coordinator::sweep::{scale_from_args, select, Sweep};
 use mpu::workloads::Workload;
 
 fn main() {
+    let scale = scale_from_args();
     let near = MachineConfig::scaled();
     let mut far = near.clone();
     far.smem_location = SmemLocation::FarBank;
+
+    let results = Sweep::new()
+        .suite_mpu("near", scale, &near)
+        .suite_mpu("far", scale, &far)
+        .run()
+        .expect("sweep");
+    let rn = select(&results, "near");
+    let rf = select(&results, "far");
 
     let mut t = Table::new(
         "Fig. 11 — near vs far smem (paper: 1.48x speedup, 1.89x TSV traffic improvement)",
@@ -18,9 +30,7 @@ fn main() {
     );
     let mut sp = Vec::new();
     let mut ti = Vec::new();
-    for w in Workload::ALL {
-        let rn = run_workload(w, &near).expect("near");
-        let rf = run_workload(w, &far).expect("far");
+    for ((w, rn), rf) in Workload::ALL.iter().zip(&rn).zip(&rf) {
         assert!(rn.correct && rf.correct, "{w:?} incorrect");
         let s = rf.cycles as f64 / rn.cycles.max(1) as f64;
         let tr = rf.stats.tsv_total_bytes() as f64 / rn.stats.tsv_total_bytes().max(1) as f64;

@@ -2,16 +2,33 @@
 //! Paper: speedup 1.10× (2 buffers) / 1.25× (4); row-buffer miss rate
 //! 15.60% → 9.20% → 5.45%. `--no-interleave` ablates the subarray
 //! row-interleaving (DESIGN.md §8).
+//!
+//! All three buffer configurations run in one parallel sweep; `--tiny`
+//! smoke-runs it.
 
 use mpu::config::MachineConfig;
+use mpu::coordinator::geomean;
 use mpu::coordinator::report::{f1pct, f2, Table};
-use mpu::coordinator::{geomean, run_workload};
+use mpu::coordinator::sweep::{scale_from_args, select, Sweep};
 use mpu::workloads::Workload;
 
 fn main() {
     let interleave = !std::env::args().any(|a| a == "--no-interleave");
+    let scale = scale_from_args();
     let mut base = MachineConfig::scaled();
     base.subarray_interleave = interleave;
+
+    let bufs = [1usize, 2, 4];
+    let labels = ["x1", "x2", "x4"];
+    let mut sweep = Sweep::new();
+    for (bufs, label) in bufs.iter().zip(&labels) {
+        let mut cfg = base.clone();
+        cfg.row_buffers_per_bank = *bufs;
+        sweep = sweep.suite_mpu(label, scale, &cfg);
+    }
+    let results = sweep.run().expect("sweep");
+    let per_cfg: Vec<Vec<&mpu::coordinator::RunReport>> =
+        labels.iter().map(|l| select(&results, l)).collect();
 
     let mut per = Table::new(
         "Fig. 12 — per-workload speedup vs 1 row-buffer",
@@ -20,14 +37,12 @@ fn main() {
     let mut sp2 = Vec::new();
     let mut sp4 = Vec::new();
     let mut m = [Vec::new(), Vec::new(), Vec::new()];
-    for w in Workload::ALL {
+    for (wi, w) in Workload::ALL.iter().enumerate() {
         let mut cyc = [0u64; 3];
         let mut miss = [0f64; 3];
-        for (i, bufs) in [1usize, 2, 4].iter().enumerate() {
-            let mut cfg = base.clone();
-            cfg.row_buffers_per_bank = *bufs;
-            let r = run_workload(w, &cfg).expect("run");
-            assert!(r.correct, "{w:?} incorrect at {bufs} buffers");
+        for i in 0..3 {
+            let r = per_cfg[i][wi];
+            assert!(r.correct, "{w:?} incorrect at {} buffers", bufs[i]);
             cyc[i] = r.cycles;
             miss[i] = r.stats.row_miss_rate();
             m[i].push(miss[i]);

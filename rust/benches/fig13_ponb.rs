@@ -1,24 +1,34 @@
 //! Fig. 13 — MPU vs the processing-on-base-logic-die (PonB) baseline.
 //! Paper: mean 1.46× speedup from near-bank instruction offloading.
+//!
+//! Both pipelines run in one parallel sweep; `--tiny` smoke-runs it.
 
 use mpu::config::{MachineConfig, PipelineMode};
+use mpu::coordinator::geomean;
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::{geomean, run_workload};
+use mpu::coordinator::sweep::{scale_from_args, select, Sweep};
 use mpu::workloads::Workload;
 
 fn main() {
+    let scale = scale_from_args();
     let hybrid = MachineConfig::scaled();
     let mut ponb = hybrid.clone();
     ponb.pipeline_mode = PipelineMode::PonB;
+
+    let results = Sweep::new()
+        .suite_mpu("hybrid", scale, &hybrid)
+        .suite_mpu("ponb", scale, &ponb)
+        .run()
+        .expect("sweep");
+    let rh = select(&results, "hybrid");
+    let rp = select(&results, "ponb");
 
     let mut t = Table::new(
         "Fig. 13 — MPU (hybrid) vs PonB (paper mean 1.46x)",
         &["workload", "mpu_cycles", "ponb_cycles", "speedup", "near_frac"],
     );
     let mut sp = Vec::new();
-    for w in Workload::ALL {
-        let h = run_workload(w, &hybrid).expect("hybrid");
-        let p = run_workload(w, &ponb).expect("ponb");
+    for ((w, h), p) in Workload::ALL.iter().zip(&rh).zip(&rp) {
         assert!(h.correct && p.correct, "{w:?} incorrect");
         let s = p.cycles as f64 / h.cycles.max(1) as f64;
         sp.push(s);

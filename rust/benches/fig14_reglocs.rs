@@ -1,23 +1,15 @@
 //! Fig. 14 — static register-location analysis (Algorithm 1).
 //! Paper: 32.5% near-bank-only, 63.7% far-bank-only, 3.8% both.
+//!
+//! Pure compile-time analysis: kernels come from the sweep engine's
+//! shared [`KernelCache`] (no simulation).
 
-use mpu::compiler::compile;
 use mpu::coordinator::report::{f1pct, Table};
-use mpu::workloads::{prepare, Scale, Workload};
-
-struct NullDev {
-    top: u64,
-}
-impl mpu::workloads::Device for NullDev {
-    fn alloc_bytes(&mut self, bytes: usize) -> u64 {
-        let a = self.top;
-        self.top += bytes as u64;
-        a
-    }
-    fn write_f32(&mut self, _a: u64, _d: &[f32]) {}
-}
+use mpu::coordinator::KernelCache;
+use mpu::workloads::Workload;
 
 fn main() {
+    let cache = KernelCache::new();
     let mut t = Table::new(
         "Fig. 14 — register locations (paper mean: N 32.5%, F 63.7%, B 3.8%)",
         &["workload", "near", "far", "both", "nb_regs", "fb_regs"],
@@ -27,9 +19,7 @@ fn main() {
     let mut b = 0usize;
     let mut tot = 0usize;
     for w in Workload::ALL {
-        let mut dev = NullDev { top: 0 };
-        let p = prepare(w, Scale::Tiny, &mut dev).expect("prepare");
-        let k = compile(&p.kernel).expect("compile");
+        let k = cache.get(w, true).expect("compile");
         let s = &k.loc_stats;
         n += s.near;
         f += s.far + s.unknown;

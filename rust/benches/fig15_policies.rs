@@ -1,15 +1,19 @@
 //! Fig. 15 — instruction-location policies, speedup vs GPU.
 //! Paper: annotated 3.45×, hardware-default 1.92×, all-near-bank 1.22×,
 //! all-far-bank 1.78×.
+//!
+//! The GPU reference and all four policy variants run in one parallel
+//! sweep; `--tiny` smoke-runs it.
 
-use mpu::config::{GpuConfig, MachineConfig, OffloadPolicy};
+use mpu::config::{MachineConfig, OffloadPolicy};
+use mpu::coordinator::geomean;
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::{geomean, run_workload, run_workload_gpu};
+use mpu::coordinator::sweep::{scale_from_args, select, Sweep};
 use mpu::workloads::Workload;
 
 fn main() {
+    let scale = scale_from_args();
     let base = MachineConfig::scaled();
-    let gcfg = GpuConfig::matched(&base);
     let policies = [
         ("annotated", OffloadPolicy::CompilerAnnotated),
         ("hw_default", OffloadPolicy::HardwareDefault),
@@ -17,26 +21,27 @@ fn main() {
         ("all_farbank", OffloadPolicy::AllFarBank),
     ];
 
-    // GPU reference cycles per workload.
-    let mut gpu_cycles = Vec::new();
-    for w in Workload::ALL {
-        let g = run_workload_gpu(w, &gcfg, &base).expect("gpu");
-        gpu_cycles.push((w, g.cycles));
+    let mut sweep = Sweep::new().suite_gpu("gpu", scale, &base);
+    for (name, pol) in &policies {
+        let mut cfg = base.clone();
+        cfg.offload_policy = *pol;
+        sweep = sweep.suite_mpu(name, scale, &cfg);
     }
+    let results = sweep.run().expect("sweep");
+    let gpu = select(&results, "gpu");
 
     let mut t = Table::new(
         "Fig. 15 — policy speedups vs GPU (paper: 3.45x / 1.92x / 1.22x / 1.78x)",
         &["workload", "annotated", "hw_default", "all_nearbank", "all_farbank"],
     );
     let mut per_policy: Vec<Vec<f64>> = vec![Vec::new(); policies.len()];
-    let mut rows: Vec<Vec<String>> = Workload::ALL.iter().map(|w| vec![w.name().to_string()]).collect();
-    for (pi, (_, pol)) in policies.iter().enumerate() {
-        let mut cfg = base.clone();
-        cfg.offload_policy = *pol;
-        for (wi, (w, gcyc)) in gpu_cycles.iter().enumerate() {
-            let r = run_workload(*w, &cfg).expect("mpu");
-            assert!(r.correct, "{w:?} incorrect under {pol:?}");
-            let s = *gcyc as f64 / r.cycles.max(1) as f64;
+    let mut rows: Vec<Vec<String>> =
+        Workload::ALL.iter().map(|w| vec![w.name().to_string()]).collect();
+    for (pi, (name, pol)) in policies.iter().enumerate() {
+        let runs = select(&results, name);
+        for (wi, (g, r)) in gpu.iter().zip(&runs).enumerate() {
+            assert!(r.correct, "{:?} incorrect under {pol:?}", r.workload);
+            let s = g.cycles as f64 / r.cycles.max(1) as f64;
             per_policy[pi].push(s);
             rows[wi].push(f2(s));
         }

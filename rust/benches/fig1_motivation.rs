@@ -1,36 +1,38 @@
 //! Fig. 1 — motivation: data-intensive workloads on the GPU baseline
 //! saturate DRAM bandwidth while ALUs idle.
 //! Paper: mean 55.90% DRAM-bandwidth utilization, 2.57% ALU utilization.
+//!
+//! `--tiny` smoke-runs the suite at the test scale.
 
 use mpu::config::{GpuConfig, MachineConfig};
 use mpu::coordinator::report::{f1pct, Table};
-use mpu::gpu::GpuMachine;
-use mpu::workloads::{prepare, Scale, Workload};
+use mpu::coordinator::sweep::{scale_from_args, select, Sweep};
+use mpu::workloads::Workload;
 
 fn main() {
+    let scale = scale_from_args();
     let cfg = MachineConfig::scaled();
     let gcfg = GpuConfig::matched(&cfg);
+    let results = Sweep::new().suite_gpu("gpu", scale, &cfg).run().expect("sweep");
+    let gpu = select(&results, "gpu");
+
+    let lanes = gcfg.total_lanes() as f64;
     let mut t = Table::new(
         "Fig. 1 — GPU bandwidth vs ALU utilization (paper mean: BW 55.9%, ALU 2.57%)",
         &["workload", "bw_util", "alu_util", "B/instr"],
     );
     let mut bw = Vec::new();
     let mut alu = Vec::new();
-    for w in Workload::ALL {
-        let mut g = GpuMachine::new(&gcfg);
-        let p = prepare(w, Scale::Small, &mut g).expect("prepare");
-        let k = mpu::coordinator::compile_for(&p, &cfg).expect("compile");
-        g.launch(k, p.launch, &p.params).expect("launch");
-        let stats = g.run().expect("run");
-        let b = g.bw_utilization();
-        let a = g.alu_utilization();
+    for (w, r) in Workload::ALL.iter().zip(&gpu) {
+        let b = r.stats.bw_utilization(gcfg.hbm_bytes_per_cycle);
+        let a = r.stats.alu_utilization(lanes);
         bw.push(b);
         alu.push(a);
         t.row(vec![
             w.name().into(),
             f1pct(b),
             f1pct(a),
-            format!("{:.2}", stats.memory_intensity()),
+            format!("{:.2}", r.stats.memory_intensity()),
         ]);
     }
     t.row(vec![

@@ -1,13 +1,18 @@
 //! Fig. 8 — MPU vs GPU: (1) per-workload speedup (paper mean 3.46×);
 //! (2) speedup vs memory intensity (B/instr) correlation.
+//!
+//! Runs through the parallel sweep engine; `--tiny` smoke-runs it.
 
 use mpu::config::MachineConfig;
+use mpu::coordinator::geomean;
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::{geomean, run_pair};
-use mpu::workloads::{Scale, Workload};
+use mpu::coordinator::sweep::{run_suite, scale_from_args};
 
 fn main() {
+    let scale = scale_from_args();
     let cfg = MachineConfig::scaled();
+    let pairs = run_suite(&cfg, scale).expect("suite sweep");
+
     let mut t = Table::new(
         "Fig. 8(1) — execution time and speedup vs GPU (paper mean 3.46x)",
         &["workload", "mpu_cycles", "gpu_cycles", "speedup", "mpu_GB/s", "gpu_GB/s"],
@@ -17,8 +22,8 @@ fn main() {
         &["workload", "B/instr", "speedup"],
     );
     let mut speedups = Vec::new();
-    for w in Workload::ALL {
-        let pair = run_pair(w, &cfg, Scale::Small).expect("pair");
+    for pair in &pairs {
+        let w = pair.mpu.workload;
         assert!(pair.mpu.correct, "{w:?} wrong on MPU");
         assert!(pair.gpu.correct, "{w:?} wrong on GPU");
         let s = pair.speedup();

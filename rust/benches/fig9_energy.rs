@@ -1,23 +1,27 @@
 //! Fig. 9 — energy and energy reduction vs GPU (paper mean 2.57×).
+//!
+//! Runs through the parallel sweep engine; `--tiny` smoke-runs it.
 
 use mpu::config::MachineConfig;
+use mpu::coordinator::geomean;
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::{geomean, run_pair};
-use mpu::workloads::{Scale, Workload};
+use mpu::coordinator::sweep::{run_suite, scale_from_args};
 
 fn main() {
+    let scale = scale_from_args();
     let cfg = MachineConfig::scaled();
+    let pairs = run_suite(&cfg, scale).expect("suite sweep");
+
     let mut t = Table::new(
         "Fig. 9 — energy reduction vs GPU (paper mean 2.57x)",
         &["workload", "mpu_mJ", "gpu_mJ", "reduction"],
     );
     let mut reds = Vec::new();
-    for w in Workload::ALL {
-        let pair = run_pair(w, &cfg, Scale::Small).expect("pair");
+    for pair in &pairs {
         let r = pair.energy_reduction();
         reds.push(r);
         t.row(vec![
-            w.name().into(),
+            pair.mpu.workload.name().into(),
             format!("{:.4}", pair.mpu.energy.total() * 1e3),
             format!("{:.4}", pair.gpu.energy.total() * 1e3),
             f2(r),

@@ -1,20 +1,22 @@
 //! Architecture sweep: explore the §VI-C design space on one workload —
 //! row-buffer count × smem placement × offload policy × scheduler —
-//! and print a ranked table.
+//! through the parallel sweep engine, and print a ranked table.
 //!
 //! ```sh
-//! cargo run --release --example arch_sweep [workload]
+//! cargo run --release --example arch_sweep [workload] [--tiny]
 //! ```
 
 use mpu::config::{MachineConfig, OffloadPolicy, SchedPolicy, SmemLocation};
-use mpu::coordinator::run_workload;
+use mpu::coordinator::sweep::{scale_from_args, workload_from_args, Sweep, Target};
 use mpu::workloads::Workload;
 
 fn main() -> anyhow::Result<()> {
-    let name = std::env::args().nth(1).unwrap_or_else(|| "hist".into());
+    let name = workload_from_args("hist");
     let w = Workload::from_name(&name)
         .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?;
-    let mut results: Vec<(String, u64, f64)> = Vec::new();
+    let scale = scale_from_args();
+
+    let mut sweep = Sweep::new();
     for bufs in [1usize, 4] {
         for smem in [SmemLocation::NearBank, SmemLocation::FarBank] {
             for pol in [OffloadPolicy::CompilerAnnotated, OffloadPolicy::AllFarBank] {
@@ -24,8 +26,6 @@ fn main() -> anyhow::Result<()> {
                     cfg.smem_location = smem;
                     cfg.offload_policy = pol;
                     cfg.sched_policy = sched;
-                    let r = run_workload(w, &cfg)?;
-                    anyhow::ensure!(r.correct, "incorrect under sweep point");
                     let label = format!(
                         "rowbuf={bufs} smem={} policy={} sched={}",
                         if smem == SmemLocation::NearBank { "near" } else { "far" },
@@ -35,19 +35,26 @@ fn main() -> anyhow::Result<()> {
                         },
                         if sched == SchedPolicy::Gto { "gto" } else { "rr" },
                     );
-                    results.push((label, r.cycles, r.stats.row_miss_rate()));
+                    sweep = sweep.point(&label, w, scale, Target::Mpu(cfg));
                 }
             }
         }
     }
-    results.sort_by_key(|r| r.1);
+
+    let mut results = sweep.run()?;
+    for r in &results {
+        anyhow::ensure!(r.report.correct, "incorrect under sweep point {}", r.label);
+    }
+    results.sort_by_key(|r| r.report.cycles);
     println!("arch sweep on `{}` (best first):", w.name());
-    let best = results[0].1 as f64;
-    for (label, cycles, miss) in &results {
+    let best = results[0].report.cycles as f64;
+    for r in &results {
         println!(
-            "{cycles:>9} cycles  ({:.2}x vs best)  miss {:>5.1}%  {label}",
-            *cycles as f64 / best,
-            miss * 100.0
+            "{:>9} cycles  ({:.2}x vs best)  miss {:>5.1}%  {}",
+            r.report.cycles,
+            r.report.cycles as f64 / best,
+            r.report.stats.row_miss_rate() * 100.0,
+            r.label
         );
     }
     Ok(())

@@ -2,33 +2,22 @@
 //! assembled mini-PTX, Algorithm-1 location annotations per instruction,
 //! branch re-convergence points, and the register-location breakdown.
 //!
+//! Kernels come from the sweep engine's shared [`KernelCache`].
+//!
 //! ```sh
 //! cargo run --release --example compiler_explorer [workload]
 //! ```
 
-use mpu::compiler::compile;
+use mpu::coordinator::sweep::workload_from_args;
+use mpu::coordinator::KernelCache;
 use mpu::isa::instr::Loc;
-use mpu::workloads::{prepare, Device, Scale, Workload};
-
-struct NullDev {
-    top: u64,
-}
-impl Device for NullDev {
-    fn alloc_bytes(&mut self, bytes: usize) -> u64 {
-        let a = self.top;
-        self.top += bytes as u64;
-        a
-    }
-    fn write_f32(&mut self, _a: u64, _d: &[f32]) {}
-}
+use mpu::workloads::Workload;
 
 fn main() -> anyhow::Result<()> {
-    let name = std::env::args().nth(1).unwrap_or_else(|| "axpy".into());
+    let name = workload_from_args("axpy");
     let w = Workload::from_name(&name)
         .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?;
-    let mut dev = NullDev { top: 0 };
-    let p = prepare(w, Scale::Tiny, &mut dev)?;
-    let k = compile(&p.kernel)?;
+    let k = KernelCache::new().get(w, true)?;
 
     println!("kernel `{}` — {} instructions", k.name, k.instrs.len());
     println!("{:>4}  {:<4} {:<8} instruction", "pc", "loc", "reconv");

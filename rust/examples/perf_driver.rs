@@ -1,0 +1,19 @@
+// Perf driver: simulate the 4 slowest workloads (in parallel through the
+// sweep engine) and report simulator throughput.
+use mpu::config::MachineConfig;
+use mpu::coordinator::sweep::{scale_from_args, Sweep, Target};
+use mpu::workloads::Workload;
+
+fn main() {
+    let cfg = MachineConfig::scaled();
+    let scale = scale_from_args();
+    let t0 = std::time::Instant::now();
+    let results = [Workload::Nw, Workload::Ttrans, Workload::Kmeans, Workload::Blur]
+        .iter()
+        .fold(Sweep::new(), |s, &w| s.point(w.name(), w, scale, Target::Mpu(cfg.clone())))
+        .run()
+        .unwrap();
+    let cycles: u64 = results.iter().map(|r| r.report.cycles).sum();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("simulated {cycles} cycles in {dt:.2}s = {:.2} Mcycles/s", cycles as f64 / dt / 1e6);
+}

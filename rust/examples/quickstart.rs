@@ -1,17 +1,17 @@
-//! Quickstart: run one workload (AXPY by default) on the MPU simulator,
-//! check the result against the pure-Rust golden, and print the key
-//! §VI metrics.
+//! Quickstart: run one workload (AXPY by default) on the MPU simulator
+//! via the sweep engine, check the result against the pure-Rust golden,
+//! and print the key §VI metrics.
 //!
 //! ```sh
-//! cargo run --release --example quickstart [workload]
+//! cargo run --release --example quickstart [workload] [--tiny]
 //! ```
 
 use mpu::config::MachineConfig;
-use mpu::coordinator::run_workload;
+use mpu::coordinator::sweep::{scale_from_args, workload_from_args, Sweep, Target};
 use mpu::workloads::Workload;
 
 fn main() -> anyhow::Result<()> {
-    let name = std::env::args().nth(1).unwrap_or_else(|| "axpy".into());
+    let name = workload_from_args("axpy");
     let w = Workload::from_name(&name)
         .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}` (try: axpy, gemv, blur, ...)"))?;
     let cfg = MachineConfig::scaled();
@@ -23,7 +23,10 @@ fn main() -> anyhow::Result<()> {
         cfg.total_banks(),
         cfg.row_buffers_per_bank
     );
-    let r = run_workload(w, &cfg)?;
+    let results = Sweep::new()
+        .point("mpu", w, scale_from_args(), Target::Mpu(cfg.clone()))
+        .run()?;
+    let r = &results[0].report;
     println!("\nworkload  : {}", w.name());
     println!("correct   : {} (max_err {:.2e})", r.correct, r.max_err);
     println!("cycles    : {}", r.cycles);

@@ -122,7 +122,7 @@ pub fn allocate(
         // (they may be materialized in either file).
         let b_extra: Vec<usize> = nodes
             .iter()
-            .filter(|r| reg_locs.get(r).copied() == Some(Loc::B))
+            .filter(|r| reg_locs.get(*r).copied() == Some(Loc::B))
             .map(|r| colors[r])
             .collect();
         let mut b_colors = b_extra;

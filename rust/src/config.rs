@@ -410,6 +410,12 @@ impl Default for GpuEnergyCoeffs {
 }
 
 impl GpuConfig {
+    /// Total ALU lanes across the chip (the Fig.-1 ALU-utilization
+    /// denominator — single source of truth for machine and benches).
+    pub fn total_lanes(&self) -> usize {
+        self.sms * self.subcores_per_sm * self.warp_size
+    }
+
     /// Baseline matched to an MPU machine config: same SM count as MPU
     /// cores, V100 per-SM bandwidth share (900 GB/s / 80 SMs @ ~1.4 GHz
     /// ≈ 8 B/cycle/SM).

@@ -1,0 +1,181 @@
+//! Stable-schema JSON perf output (`BENCH_suite.json`).
+//!
+//! `cargo run --release -- suite` writes one [`SuiteJson`] document
+//! covering all twelve Table-I workloads on both machines, so every PR
+//! has a perf trajectory to beat. Schema (version 1):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "suite": "table1",
+//!   "scale": "small",
+//!   "geomean_speedup": 3.1,
+//!   "geomean_energy_reduction": 2.4,
+//!   "workloads": [
+//!     { "workload": "axpy", "speedup": 3.4, "energy_reduction": 2.6,
+//!       "mpu": { "machine": "mpu", "cycles": 123, "dram_gbps": 810.0, ... },
+//!       "gpu": { ... } }
+//!   ]
+//! }
+//! ```
+//!
+//! Fields are append-only: tooling that consumes version 1 keys must
+//! keep working across future PRs.
+
+use super::{geomean, PairReport, RunReport};
+use crate::energy::EnergyBreakdown;
+use crate::sim::Stats;
+use crate::workloads::Scale;
+use anyhow::Result;
+use serde::Serialize;
+use std::path::Path;
+
+/// Canonical file name the suite baseline is written to.
+pub const SUITE_JSON: &str = "BENCH_suite.json";
+
+/// Stable lower-case name of a problem scale.
+pub fn scale_name(scale: Scale) -> &'static str {
+    match scale {
+        Scale::Tiny => "tiny",
+        Scale::Small => "small",
+    }
+}
+
+/// Per-machine metrics of one workload run.
+#[derive(Clone, Debug, Serialize)]
+pub struct MachineEntry {
+    pub machine: String,
+    pub cycles: u64,
+    pub dram_gbps: f64,
+    pub energy_j: f64,
+    pub correct: bool,
+    pub max_err: f32,
+    pub near_fraction: f64,
+    pub row_miss_rate: f64,
+    pub energy: EnergyBreakdown,
+    pub stats: Stats,
+}
+
+impl MachineEntry {
+    pub fn from_report(r: &RunReport) -> MachineEntry {
+        MachineEntry {
+            machine: r.machine.to_string(),
+            cycles: r.cycles,
+            dram_gbps: r.dram_gbps(),
+            energy_j: r.energy.total(),
+            correct: r.correct,
+            max_err: r.max_err,
+            near_fraction: r.stats.near_fraction(),
+            row_miss_rate: r.stats.row_miss_rate(),
+            energy: r.energy,
+            stats: r.stats.clone(),
+        }
+    }
+}
+
+/// One workload's MPU/GPU pair.
+#[derive(Clone, Debug, Serialize)]
+pub struct WorkloadEntry {
+    pub workload: String,
+    pub speedup: f64,
+    pub energy_reduction: f64,
+    pub mpu: MachineEntry,
+    pub gpu: MachineEntry,
+}
+
+/// The whole suite document.
+#[derive(Clone, Debug, Serialize)]
+pub struct SuiteJson {
+    pub schema_version: u32,
+    pub suite: String,
+    pub scale: String,
+    pub geomean_speedup: f64,
+    pub geomean_energy_reduction: f64,
+    pub workloads: Vec<WorkloadEntry>,
+}
+
+/// Build the suite document from MPU/GPU pairs.
+pub fn suite_json(scale: Scale, pairs: &[PairReport]) -> SuiteJson {
+    let speedups: Vec<f64> = pairs.iter().map(|p| p.speedup()).collect();
+    let reductions: Vec<f64> = pairs.iter().map(|p| p.energy_reduction()).collect();
+    SuiteJson {
+        schema_version: 1,
+        suite: "table1".to_string(),
+        scale: scale_name(scale).to_string(),
+        geomean_speedup: geomean(&speedups),
+        geomean_energy_reduction: geomean(&reductions),
+        workloads: pairs
+            .iter()
+            .map(|p| WorkloadEntry {
+                workload: p.mpu.workload.name().to_string(),
+                speedup: p.speedup(),
+                energy_reduction: p.energy_reduction(),
+                mpu: MachineEntry::from_report(&p.mpu),
+                gpu: MachineEntry::from_report(&p.gpu),
+            })
+            .collect(),
+    }
+}
+
+/// Serialize and write a suite document (pretty-printed, trailing newline).
+pub fn write_suite_json(path: &Path, doc: &SuiteJson) -> Result<()> {
+    let mut body = serde_json::to_string_pretty(doc)?;
+    body.push('\n');
+    std::fs::write(path, body)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::coordinator::run_pair;
+    use crate::workloads::Workload;
+
+    #[test]
+    fn suite_json_schema_is_stable() {
+        let cfg = MachineConfig::scaled();
+        let pair = run_pair(Workload::Axpy, &cfg, Scale::Tiny).unwrap();
+        let doc = suite_json(Scale::Tiny, &[pair]);
+        assert_eq!(doc.schema_version, 1);
+        assert_eq!(doc.scale, "tiny");
+        assert_eq!(doc.workloads.len(), 1);
+        assert!(doc.geomean_speedup > 0.0);
+        let s = serde_json::to_string(&doc).unwrap();
+        for key in [
+            "schema_version",
+            "suite",
+            "scale",
+            "geomean_speedup",
+            "geomean_energy_reduction",
+            "workloads",
+            "workload",
+            "speedup",
+            "energy_reduction",
+            "machine",
+            "cycles",
+            "dram_gbps",
+            "energy_j",
+            "correct",
+            "near_fraction",
+            "row_miss_rate",
+        ] {
+            assert!(s.contains(&format!("\"{key}\"")), "missing key {key}");
+        }
+    }
+
+    #[test]
+    fn write_emits_valid_json_file() {
+        let cfg = MachineConfig::scaled();
+        let pair = run_pair(Workload::Knn, &cfg, Scale::Tiny).unwrap();
+        let doc = suite_json(Scale::Tiny, &[pair]);
+        let dir = std::env::temp_dir().join("mpu_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(SUITE_JSON);
+        write_suite_json(&path, &doc).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let v: serde_json::Value = serde_json::from_str(&body).unwrap();
+        assert_eq!(v["schema_version"], 1);
+        assert_eq!(v["workloads"][0]["workload"], "knn");
+    }
+}

@@ -2,17 +2,24 @@
 //! and the GPU baseline, validates outputs against the pure-Rust golden
 //! (and, via [`crate::runtime`], the AOT-compiled XLA golden), and
 //! derives every §VI metric the benches report.
+//!
+//! The single-run helpers below are thin wrappers over the parallel
+//! [`sweep`] engine, which compiles each kernel once into a shared cache
+//! and fans independent simulations out across threads; [`bench`] turns
+//! sweep results into the stable-schema `BENCH_suite.json` perf output.
 
+pub mod bench;
 pub mod report;
+pub mod sweep;
 
 use crate::compiler::{compile_with, CompiledKernel, LocStats};
 use crate::config::{GpuConfig, MachineConfig, SmemLocation};
-use crate::core::Machine;
-use crate::energy::{gpu_energy, mpu_energy, EnergyBreakdown};
-use crate::gpu::GpuMachine;
+use crate::energy::EnergyBreakdown;
 use crate::sim::Stats;
-use crate::workloads::{prepare, Prepared, Scale, Workload};
+use crate::workloads::{Prepared, Scale, Workload};
 use anyhow::Result;
+
+pub use sweep::{run_suite, KernelCache, Sweep, SweepResult, Target};
 
 /// Result of one simulated run.
 #[derive(Clone, Debug)]
@@ -27,6 +34,9 @@ pub struct RunReport {
     pub max_err: f32,
     /// Device output (for the XLA cross-check).
     pub output: Vec<f32>,
+    /// Pure-Rust golden the output was checked against (kept so failure
+    /// reports can show both sides).
+    pub golden: Vec<f32>,
     /// Compile-time register-location stats (Fig. 14).
     pub loc_stats: LocStats,
 }
@@ -38,7 +48,7 @@ impl RunReport {
     }
 }
 
-fn check(out: &[f32], golden: &[f32], tol: f32) -> (bool, f32) {
+pub(crate) fn check(out: &[f32], golden: &[f32], tol: f32) -> (bool, f32) {
     let mut max_err = 0f32;
     for (a, b) in out.iter().zip(golden) {
         let e = (a - b).abs();
@@ -61,26 +71,8 @@ pub fn run_workload(w: Workload, cfg: &MachineConfig) -> Result<RunReport> {
 
 /// Run one workload on the MPU machine at a given problem scale.
 pub fn run_workload_scaled(w: Workload, cfg: &MachineConfig, scale: Scale) -> Result<RunReport> {
-    let mut m = Machine::new(cfg);
-    let p = prepare(w, scale, &mut m)?;
-    let kernel = compile_for(&p, cfg)?;
-    let loc_stats = kernel.loc_stats.clone();
-    m.launch(kernel, p.launch, &p.params, p.home_fn())?;
-    let stats = m.run()?;
-    let output = m.read_f32s(p.out_addr, p.out_len);
-    let (correct, max_err) = check(&output, &p.golden, p.tol);
-    let energy = mpu_energy(&stats, &cfg.energy);
-    Ok(RunReport {
-        workload: w,
-        machine: "mpu",
-        cycles: stats.cycles,
-        stats,
-        energy,
-        correct,
-        max_err,
-        output,
-        loc_stats,
-    })
+    let kernel = sweep::compile_kernel(w, cfg.smem_location == SmemLocation::NearBank)?;
+    sweep::run_mpu_with(w, cfg, scale, kernel)
 }
 
 /// Run one workload on the GPU baseline.
@@ -94,26 +86,8 @@ pub fn run_workload_gpu_scaled(
     cfg: &MachineConfig,
     scale: Scale,
 ) -> Result<RunReport> {
-    let mut g = GpuMachine::new(gcfg);
-    let p = prepare(w, scale, &mut g)?;
-    let kernel = compile_for(&p, cfg)?;
-    let loc_stats = kernel.loc_stats.clone();
-    g.launch(kernel, p.launch, &p.params)?;
-    let stats = g.run()?;
-    let output = g.read_f32s(p.out_addr, p.out_len);
-    let (correct, max_err) = check(&output, &p.golden, p.tol);
-    let energy = gpu_energy(&stats, &gcfg.energy);
-    Ok(RunReport {
-        workload: w,
-        machine: "gpu",
-        cycles: stats.cycles,
-        stats,
-        energy,
-        correct,
-        max_err,
-        output,
-        loc_stats,
-    })
+    let kernel = sweep::compile_kernel(w, cfg.smem_location == SmemLocation::NearBank)?;
+    sweep::run_gpu_with(w, gcfg, scale, kernel)
 }
 
 /// MPU-vs-GPU pair for one workload (the Fig. 8 / Fig. 9 primitive).
@@ -167,5 +141,13 @@ mod tests {
         assert!(pair.gpu.correct, "GPU output wrong (max_err {})", pair.gpu.max_err);
         assert!(pair.speedup() > 1.0, "speedup {}", pair.speedup());
         assert!(pair.energy_reduction() > 1.0, "energy red {}", pair.energy_reduction());
+    }
+
+    #[test]
+    fn run_report_carries_golden() {
+        let cfg = MachineConfig::scaled();
+        let r = run_workload_scaled(Workload::Axpy, &cfg, Scale::Tiny).unwrap();
+        assert_eq!(r.golden.len(), r.output.len());
+        assert!(!r.golden.is_empty());
     }
 }

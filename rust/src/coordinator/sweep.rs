@@ -1,0 +1,323 @@
+//! Parallel sweep engine — the repo's hottest path (running experiments)
+//! made parallel and reusable.
+//!
+//! A [`Sweep`] is an ordered set of (variant label × workload × scale ×
+//! target machine) points. [`Sweep::run`] compiles each distinct kernel
+//! once into a shared [`KernelCache`] and fans the independent
+//! simulations out across threads with rayon, returning [`SweepResult`]s
+//! in point order. The CLI, every `fig*` bench and the examples build
+//! their experiments on top of this instead of hand-rolled serial loops.
+
+use super::{check, PairReport, RunReport};
+use crate::compiler::{compile_with, CompiledKernel};
+use crate::config::{GpuConfig, MachineConfig, SmemLocation};
+use crate::core::Machine;
+use crate::energy::{gpu_energy, mpu_energy};
+use crate::gpu::GpuMachine;
+use crate::workloads::{prepare, Scale, SizeOnlyDev, Workload};
+use anyhow::Result;
+use rayon::prelude::*;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Target machine of a sweep point.
+#[derive(Clone, Debug)]
+pub enum Target {
+    /// The MPU machine under a configuration variant.
+    Mpu(MachineConfig),
+    /// The GPU baseline; the `MachineConfig` keeps compilation (shared
+    /// memory placement) consistent with the MPU variant it is compared
+    /// against.
+    Gpu(GpuConfig, MachineConfig),
+}
+
+impl Target {
+    fn smem_near(&self) -> bool {
+        let cfg = match self {
+            Target::Mpu(c) => c,
+            Target::Gpu(_, c) => c,
+        };
+        cfg.smem_location == SmemLocation::NearBank
+    }
+}
+
+/// One simulation of the sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Variant label, e.g. `"mpu"`, `"gpu"`, `"rowbuf=4"`.
+    pub label: String,
+    pub workload: Workload,
+    pub scale: Scale,
+    pub target: Target,
+}
+
+/// Result of one sweep point (returned in point order).
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub label: String,
+    pub scale: Scale,
+    pub report: RunReport,
+}
+
+/// Compile a workload's kernel without touching a real device (the
+/// kernel text depends only on the workload, not the problem scale).
+pub fn compile_kernel(w: Workload, smem_near: bool) -> Result<CompiledKernel> {
+    let mut dev = SizeOnlyDev::default();
+    let p = prepare(w, Scale::Tiny, &mut dev)?;
+    compile_with(&p.kernel, smem_near)
+}
+
+/// Shared compile cache: each (workload, smem placement) kernel is
+/// compiled exactly once per sweep, then cloned to the runners.
+#[derive(Default)]
+pub struct KernelCache {
+    map: Mutex<HashMap<(Workload, bool), CompiledKernel>>,
+}
+
+impl KernelCache {
+    pub fn new() -> KernelCache {
+        KernelCache::default()
+    }
+
+    /// Compiled kernel for a workload under a shared-memory placement.
+    /// Compilation happens under the lock so a cold key is compiled
+    /// exactly once even when a parallel sweep starts on an empty cache
+    /// (compiling is microseconds against the simulations it feeds).
+    pub fn get(&self, w: Workload, smem_near: bool) -> Result<CompiledKernel> {
+        let mut map = self.map.lock().unwrap();
+        if let Some(k) = map.get(&(w, smem_near)) {
+            return Ok(k.clone());
+        }
+        let k = compile_kernel(w, smem_near)?;
+        map.insert((w, smem_near), k.clone());
+        Ok(k)
+    }
+
+    /// Number of distinct kernels compiled so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Run one workload on the MPU machine with an already-compiled kernel.
+pub fn run_mpu_with(
+    w: Workload,
+    cfg: &MachineConfig,
+    scale: Scale,
+    kernel: CompiledKernel,
+) -> Result<RunReport> {
+    let mut m = Machine::new(cfg);
+    let p = prepare(w, scale, &mut m)?;
+    let loc_stats = kernel.loc_stats.clone();
+    m.launch(kernel, p.launch, &p.params, p.home_fn())?;
+    let stats = m.run()?;
+    let output = m.read_f32s(p.out_addr, p.out_len);
+    let (correct, max_err) = check(&output, &p.golden, p.tol);
+    let energy = mpu_energy(&stats, &cfg.energy);
+    Ok(RunReport {
+        workload: w,
+        machine: "mpu",
+        cycles: stats.cycles,
+        stats,
+        energy,
+        correct,
+        max_err,
+        output,
+        golden: p.golden,
+        loc_stats,
+    })
+}
+
+/// Run one workload on the GPU baseline with an already-compiled kernel.
+pub fn run_gpu_with(
+    w: Workload,
+    gcfg: &GpuConfig,
+    scale: Scale,
+    kernel: CompiledKernel,
+) -> Result<RunReport> {
+    let mut g = GpuMachine::new(gcfg);
+    let p = prepare(w, scale, &mut g)?;
+    let loc_stats = kernel.loc_stats.clone();
+    g.launch(kernel, p.launch, &p.params)?;
+    let stats = g.run()?;
+    let output = g.read_f32s(p.out_addr, p.out_len);
+    let (correct, max_err) = check(&output, &p.golden, p.tol);
+    let energy = gpu_energy(&stats, &gcfg.energy);
+    Ok(RunReport {
+        workload: w,
+        machine: "gpu",
+        cycles: stats.cycles,
+        stats,
+        energy,
+        correct,
+        max_err,
+        output,
+        golden: p.golden,
+        loc_stats,
+    })
+}
+
+/// Builder for a set of sweep points.
+#[derive(Default)]
+pub struct Sweep {
+    points: Vec<SweepPoint>,
+    serial: bool,
+}
+
+impl Sweep {
+    pub fn new() -> Sweep {
+        Sweep::default()
+    }
+
+    /// Force serial execution (deterministic profiling, debugging).
+    pub fn serial(mut self) -> Sweep {
+        self.serial = true;
+        self
+    }
+
+    /// Add one point.
+    pub fn point(mut self, label: &str, workload: Workload, scale: Scale, target: Target) -> Sweep {
+        self.points.push(SweepPoint { label: label.to_string(), workload, scale, target });
+        self
+    }
+
+    /// Add all twelve Table-I workloads on an MPU machine variant.
+    pub fn suite_mpu(self, label: &str, scale: Scale, cfg: &MachineConfig) -> Sweep {
+        Workload::ALL
+            .iter()
+            .fold(self, |s, &w| s.point(label, w, scale, Target::Mpu(cfg.clone())))
+    }
+
+    /// Add all twelve workloads on the GPU baseline matched to `cfg`.
+    pub fn suite_gpu(self, label: &str, scale: Scale, cfg: &MachineConfig) -> Sweep {
+        let gcfg = GpuConfig::matched(cfg);
+        Workload::ALL
+            .iter()
+            .fold(self, |s, &w| s.point(label, w, scale, Target::Gpu(gcfg.clone(), cfg.clone())))
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Run every point — in parallel unless [`Sweep::serial`] — compiling
+    /// each distinct kernel once. Results come back in point order; the
+    /// first simulation error aborts the sweep.
+    pub fn run(self) -> Result<Vec<SweepResult>> {
+        let cache = KernelCache::new();
+        let run_one = |pt: &SweepPoint| -> Result<SweepResult> {
+            let kernel = cache.get(pt.workload, pt.target.smem_near())?;
+            let report = match &pt.target {
+                Target::Mpu(cfg) => run_mpu_with(pt.workload, cfg, pt.scale, kernel)?,
+                Target::Gpu(gcfg, _) => run_gpu_with(pt.workload, gcfg, pt.scale, kernel)?,
+            };
+            Ok(SweepResult { label: pt.label.clone(), scale: pt.scale, report })
+        };
+        if self.serial {
+            self.points.iter().map(run_one).collect()
+        } else {
+            self.points.par_iter().map(run_one).collect()
+        }
+    }
+}
+
+/// Reports of one variant, in the order its points were added.
+pub fn select<'a>(results: &'a [SweepResult], label: &str) -> Vec<&'a RunReport> {
+    results.iter().filter(|r| r.label == label).map(|r| &r.report).collect()
+}
+
+/// The full Table-I suite, MPU vs GPU, as pairs — run through the
+/// parallel engine (the Fig. 8/9 and `BENCH_suite.json` primitive).
+pub fn run_suite(cfg: &MachineConfig, scale: Scale) -> Result<Vec<PairReport>> {
+    let results = Sweep::new()
+        .suite_mpu("mpu", scale, cfg)
+        .suite_gpu("gpu", scale, cfg)
+        .run()?;
+    let mut mpu = Vec::new();
+    let mut gpu = Vec::new();
+    for r in results {
+        if r.label == "mpu" {
+            mpu.push(r.report);
+        } else {
+            gpu.push(r.report);
+        }
+    }
+    anyhow::ensure!(mpu.len() == gpu.len(), "unbalanced suite results");
+    Ok(mpu.into_iter().zip(gpu).map(|(m, g)| PairReport { mpu: m, gpu: g }).collect())
+}
+
+/// `--tiny` smoke scale from the CLI args (shared by the benches so the
+/// whole figure suite can be smoke-run in seconds by hand or in CI).
+pub fn scale_from_args() -> Scale {
+    if std::env::args().any(|a| a == "--tiny") {
+        Scale::Tiny
+    } else {
+        Scale::Small
+    }
+}
+
+/// First non-flag CLI argument — the conventional workload-name slot of
+/// the examples — or `default` (shared so flag handling stays in one
+/// place).
+pub fn workload_from_args(default: &str) -> String {
+    std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or_else(|| default.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_cache_compiles_each_variant_once() {
+        let cache = KernelCache::new();
+        let a = cache.get(Workload::Axpy, true).unwrap();
+        let b = cache.get(Workload::Axpy, true).unwrap();
+        assert_eq!(a.instrs.len(), b.instrs.len());
+        assert_eq!(cache.len(), 1);
+        cache.get(Workload::Axpy, false).unwrap();
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn sweep_returns_results_in_point_order() {
+        let cfg = MachineConfig::scaled();
+        let results = Sweep::new()
+            .point("a", Workload::Axpy, Scale::Tiny, Target::Mpu(cfg.clone()))
+            .point("b", Workload::Knn, Scale::Tiny, Target::Mpu(cfg.clone()))
+            .point("g", Workload::Axpy, Scale::Tiny, Target::Gpu(GpuConfig::matched(&cfg), cfg.clone()))
+            .run()
+            .unwrap();
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].label, "a");
+        assert_eq!(results[0].report.workload, Workload::Axpy);
+        assert_eq!(results[1].report.workload, Workload::Knn);
+        assert_eq!(results[2].report.machine, "gpu");
+        assert!(results.iter().all(|r| r.report.correct));
+        let sel = select(&results, "a");
+        assert_eq!(sel.len(), 1);
+        assert_eq!(sel[0].workload, Workload::Axpy);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_single_run() {
+        let cfg = MachineConfig::scaled();
+        let serial = super::super::run_workload_scaled(Workload::Axpy, &cfg, Scale::Tiny).unwrap();
+        let results = Sweep::new()
+            .point("mpu", Workload::Axpy, Scale::Tiny, Target::Mpu(cfg.clone()))
+            .run()
+            .unwrap();
+        assert_eq!(results[0].report.cycles, serial.cycles);
+        assert_eq!(results[0].report.output, serial.output);
+    }
+}

@@ -7,7 +7,10 @@ use crate::config::{EnergyCoeffs, GpuEnergyCoeffs};
 use crate::sim::Stats;
 
 /// Energy breakdown in joules, by the Fig.-10 categories.
-#[derive(Clone, Copy, Debug, Default)]
+///
+/// Serializes with stable field names (part of the `BENCH_suite.json`
+/// schema, see [`crate::coordinator::bench`]).
+#[derive(Clone, Copy, Debug, Default, serde::Serialize)]
 pub struct EnergyBreakdown {
     /// Vector-ALU lane operations.
     pub alu: f64,

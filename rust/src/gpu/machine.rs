@@ -589,19 +589,12 @@ impl GpuMachine {
 
     /// HBM bandwidth utilization over the run (Fig. 1 metric).
     pub fn bw_utilization(&self) -> f64 {
-        if self.stats.cycles == 0 {
-            return 0.0;
-        }
-        self.stats.dram_bytes as f64 / (self.stats.cycles as f64 * self.cfg.hbm_bytes_per_cycle)
+        self.stats.bw_utilization(self.cfg.hbm_bytes_per_cycle)
     }
 
     /// ALU utilization: lane-ops per available lane-cycle (Fig. 1).
     pub fn alu_utilization(&self) -> f64 {
-        if self.stats.cycles == 0 {
-            return 0.0;
-        }
-        let lanes = (self.cfg.sms * self.cfg.subcores_per_sm * self.warp_size) as f64;
-        self.stats.alu_lane_ops as f64 / (self.stats.cycles as f64 * lanes)
+        self.stats.alu_utilization(self.cfg.total_lanes() as f64)
     }
 }
 

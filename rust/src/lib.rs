@@ -29,7 +29,10 @@
 //!   AOT-compiled golden models (`artifacts/*.hlo.txt`) and validates the
 //!   simulator's functional output against XLA;
 //! * the **experiment coordinator** ([`coordinator`]) that regenerates
-//!   every figure and table of the paper's evaluation section.
+//!   every figure and table of the paper's evaluation section, built on
+//!   a **parallel sweep engine** ([`coordinator::sweep`]: shared kernel
+//!   compile cache + rayon fan-out) with a stable-schema JSON perf
+//!   emitter ([`coordinator::bench`], `BENCH_suite.json`).
 //!
 //! ## Quickstart
 //!

@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   run <workload> [key=val ...] [--tiny|--paper-scale] [--gpu]
-//!   suite [key=val ...]              run all 12 workloads (MPU vs GPU)
+//!   suite [key=val ...] [--tiny] [--out FILE]
+//!                                    run all 12 workloads (MPU vs GPU)
+//!                                    through the parallel sweep engine
+//!                                    and write BENCH_suite.json
 //!   compile <workload>               show backend annotations
 //!   validate [--tiny]                cross-check vs XLA artifacts
 //!   list                             list workloads (Table I)
@@ -11,16 +14,19 @@
 //! The CLI is hand-rolled (no clap in the offline crate set).
 
 use mpu::config::{GpuConfig, MachineConfig};
+use mpu::coordinator::bench::{suite_json, write_suite_json, SUITE_JSON};
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::{compile_for, geomean, run_pair, run_workload_gpu_scaled, run_workload_scaled};
+use mpu::coordinator::sweep::{run_suite, Sweep, Target};
+use mpu::coordinator::{compile_for, KernelCache};
 use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
 use mpu::workloads::{prepare, Scale, Workload};
+use std::path::Path;
 
 fn usage() -> ! {
     eprintln!(
         "usage: mpu <run|suite|compile|validate|list|config> [args]\n\
          \n  mpu run axpy row_buffers_per_bank=2 --gpu\
-         \n  mpu suite offload_policy=hw\
+         \n  mpu suite offload_policy=hw --out BENCH_suite.json\
          \n  mpu compile gemv\
          \n  mpu validate --tiny\
          \n  mpu list | mpu config"
@@ -53,16 +59,21 @@ fn scale_of(args: &[String]) -> Scale {
     }
 }
 
-struct NullDev {
-    top: u64,
-}
-impl mpu::workloads::Device for NullDev {
-    fn alloc_bytes(&mut self, b: usize) -> u64 {
-        let a = self.top;
-        self.top += b as u64;
-        a
+/// `--out FILE` value, defaulting to `BENCH_suite.json`.
+fn out_path(args: &[String]) -> String {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--out" {
+            match it.next() {
+                Some(p) => return p.clone(),
+                None => {
+                    eprintln!("--out requires a file path");
+                    std::process::exit(2);
+                }
+            }
+        }
     }
-    fn write_f32(&mut self, _a: u64, _d: &[f32]) {}
+    SUITE_JSON.to_string()
 }
 
 fn main() -> anyhow::Result<()> {
@@ -92,19 +103,26 @@ fn main() -> anyhow::Result<()> {
             let w = Workload::from_name(name).unwrap_or_else(|| usage());
             let cfg = parse_cfg(&rest[1..]);
             let scale = scale_of(rest);
-            if rest.iter().any(|a| a == "--gpu") {
-                let g = run_workload_gpu_scaled(w, &GpuConfig::matched(&cfg), &cfg, scale)?;
+            let on_gpu = rest.iter().any(|a| a == "--gpu");
+            let target = if on_gpu {
+                Target::Gpu(GpuConfig::matched(&cfg), cfg.clone())
+            } else {
+                Target::Mpu(cfg.clone())
+            };
+            let label = if on_gpu { "gpu" } else { "mpu" };
+            let results = Sweep::new().point(label, w, scale, target).run()?;
+            let r = &results[0].report;
+            if on_gpu {
                 println!(
                     "GPU {}: {} cycles, correct={} (max_err {:.2e}), {:.1} GB/s, {:.3} mJ",
                     w.name(),
-                    g.cycles,
-                    g.correct,
-                    g.max_err,
-                    g.dram_gbps(),
-                    g.energy.total() * 1e3
+                    r.cycles,
+                    r.correct,
+                    r.max_err,
+                    r.dram_gbps(),
+                    r.energy.total() * 1e3
                 );
             } else {
-                let r = run_workload_scaled(w, &cfg, scale)?;
                 println!(
                     "MPU {}: {} cycles, correct={} (max_err {:.2e}), near {:.0}%, {:.1} GB/s, rowmiss {:.1}%, {:.3} mJ",
                     w.name(),
@@ -121,27 +139,34 @@ fn main() -> anyhow::Result<()> {
         "suite" => {
             let cfg = parse_cfg(rest);
             let scale = scale_of(rest);
+            let t0 = std::time::Instant::now();
+            let pairs = run_suite(&cfg, scale)?;
             let mut t = Table::new("suite: MPU vs GPU", &["workload", "speedup", "energy_red", "ok"]);
-            let mut sp = Vec::new();
-            for w in Workload::ALL {
-                let p = run_pair(w, &cfg, scale)?;
-                sp.push(p.speedup());
+            for p in &pairs {
                 t.row(vec![
-                    w.name().into(),
+                    p.mpu.workload.name().into(),
                     f2(p.speedup()),
                     f2(p.energy_reduction()),
                     (p.mpu.correct && p.gpu.correct).to_string(),
                 ]);
             }
-            t.row(vec!["GEOMEAN".into(), f2(geomean(&sp)), String::new(), String::new()]);
+            let doc = suite_json(scale, &pairs);
+            t.row(vec!["GEOMEAN".into(), f2(doc.geomean_speedup), f2(doc.geomean_energy_reduction), String::new()]);
             t.emit("suite");
+            let out = out_path(rest);
+            write_suite_json(Path::new(&out), &doc)?;
+            println!(
+                "\nwrote {} ({} workloads, geomean speedup {:.2}x) in {:.1}s",
+                out,
+                doc.workloads.len(),
+                doc.geomean_speedup,
+                t0.elapsed().as_secs_f64()
+            );
         }
         "compile" => {
             let Some(name) = rest.first() else { usage() };
             let w = Workload::from_name(name).unwrap_or_else(|| usage());
-            let mut dev = NullDev { top: 0 };
-            let p = prepare(w, Scale::Tiny, &mut dev)?;
-            let k = mpu::compiler::compile(&p.kernel)?;
+            let k = KernelCache::new().get(w, true)?;
             for (pc, i) in k.instrs.iter().enumerate() {
                 println!("{pc:>4}  {:?}  {}", i.loc, i);
             }

@@ -4,18 +4,27 @@
 //! memory image is validated against.
 //!
 //! Python never runs here — `make artifacts` is the only place Python
-//! executes; this module is pure Rust + PJRT (see
-//! /opt/xla-example/load_hlo for the reference wiring).
+//! executes; this module is pure Rust + PJRT.
+//!
+//! The PJRT client itself sits behind the `xla` cargo feature: the
+//! offline build environment has no PJRT bindings crate, so by default
+//! [`XlaGolden::new`] returns an error and every caller takes its
+//! graceful skip path (the artifacts are absent on a fresh checkout
+//! anyway, and [`artifacts_available`] reports that honestly).
 
 use crate::workloads::{Prepared, Scale, Workload};
-use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::Result;
 use std::path::{Path, PathBuf};
 
 /// XLA golden-model executor over the PJRT CPU client.
 pub struct XlaGolden {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "xla")]
 impl XlaGolden {
     pub fn new() -> Result<XlaGolden> {
         Ok(XlaGolden { client: xla::PjRtClient::cpu()? })
@@ -33,6 +42,18 @@ impl XlaGolden {
         // Lowered with return_tuple=True → unwrap the 1-tuple.
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaGolden {
+    pub fn new() -> Result<XlaGolden> {
+        anyhow::bail!("PJRT/XLA support not built: enable the `xla` cargo feature")
+    }
+
+    /// Stub of the PJRT execution path (the `xla` feature is off).
+    pub fn run_artifact(&self, _path: &Path, _inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        anyhow::bail!("PJRT/XLA support not built: enable the `xla` cargo feature")
     }
 }
 
@@ -111,5 +132,15 @@ mod tests {
         assert!(p.to_string_lossy().ends_with("artifacts/axpy_tiny.hlo.txt"));
         let p = artifact_path(Workload::Nw, Scale::Small);
         assert!(p.to_string_lossy().ends_with("artifacts/nw_small.hlo.txt"));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_client_reports_missing_feature() {
+        let e = match XlaGolden::new() {
+            Ok(_) => panic!("stub PJRT client must not construct"),
+            Err(e) => e,
+        };
+        assert!(e.to_string().contains("xla"), "{e}");
     }
 }

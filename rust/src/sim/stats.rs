@@ -21,7 +21,10 @@ pub enum TsvTraffic {
 }
 
 /// Flat counter block. All counters are monotonically increasing.
-#[derive(Clone, Debug, Default)]
+///
+/// Serializes with stable field names — the counters are part of the
+/// `BENCH_suite.json` schema (see [`crate::coordinator::bench`]).
+#[derive(Clone, Debug, Default, serde::Serialize)]
 pub struct Stats {
     /// Simulated core cycles to completion.
     pub cycles: u64,
@@ -128,6 +131,26 @@ impl Stats {
         if t == 0 { 0.0 } else { self.dram_bytes as f64 / t as f64 }
     }
 
+    /// DRAM-bandwidth utilization against a peak of `peak_bytes_per_cycle`
+    /// (the Fig. 1 metric).
+    pub fn bw_utilization(&self, peak_bytes_per_cycle: f64) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.dram_bytes as f64 / (self.cycles as f64 * peak_bytes_per_cycle)
+        }
+    }
+
+    /// ALU utilization: lane-ops per available lane-cycle across `lanes`
+    /// machine lanes (the Fig. 1 metric).
+    pub fn alu_utilization(&self, lanes: f64) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.alu_lane_ops as f64 / (self.cycles as f64 * lanes)
+        }
+    }
+
     /// Merge another stats block into this one (cycles take the max:
     /// blocks merged from parallel components finish at the latest time).
     pub fn merge(&mut self, o: &Stats) {
@@ -184,6 +207,15 @@ mod tests {
         assert_eq!(s.near_fraction(), 0.0);
         assert_eq!(s.dram_bytes_per_cycle(), 0.0);
         assert_eq!(s.memory_intensity(), 0.0);
+        assert_eq!(s.bw_utilization(8.0), 0.0);
+        assert_eq!(s.alu_utilization(128.0), 0.0);
+    }
+
+    #[test]
+    fn utilizations_divide_by_peak() {
+        let s = Stats { cycles: 100, dram_bytes: 400, alu_lane_ops: 6_400, ..Default::default() };
+        assert!((s.bw_utilization(8.0) - 0.5).abs() < 1e-12);
+        assert!((s.alu_utilization(128.0) - 0.5).abs() < 1e-12);
     }
 
     #[test]

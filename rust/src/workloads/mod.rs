@@ -53,6 +53,23 @@ impl Device for crate::gpu::GpuMachine {
     }
 }
 
+/// A [`Device`] that only tracks allocation sizes — enough to build a
+/// workload's kernel text and host-side inputs (goldens, XLA inputs)
+/// without instantiating a machine.
+#[derive(Debug, Default)]
+pub struct SizeOnlyDev {
+    top: u64,
+}
+
+impl Device for SizeOnlyDev {
+    fn alloc_bytes(&mut self, bytes: usize) -> u64 {
+        let a = self.top;
+        self.top += bytes as u64;
+        a
+    }
+    fn write_f32(&mut self, _addr: u64, _data: &[f32]) {}
+}
+
 /// The Table-I workloads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Workload {

@@ -4,7 +4,9 @@
 //! machine.
 
 use mpu::config::{MachineConfig, OffloadPolicy, PipelineMode, SmemLocation};
-use mpu::coordinator::{run_pair, run_workload_scaled, geomean};
+use mpu::coordinator::bench::{suite_json, write_suite_json, SUITE_JSON};
+use mpu::coordinator::sweep::run_suite;
+use mpu::coordinator::{geomean, run_pair, run_workload_scaled};
 use mpu::workloads::{Scale, Workload};
 
 #[test]
@@ -18,10 +20,44 @@ fn all_workloads_correct_on_mpu() {
             "{w:?} wrong on MPU: max_err {} (out[0..4]={:?} golden[0..4]={:?})",
             r.max_err,
             &r.output[..r.output.len().min(4)],
-            &r.stats.cycles
+            &r.golden[..r.golden.len().min(4)]
         );
         assert!(r.cycles > 0);
     }
+}
+
+#[test]
+fn sweep_suite_tiny_smoke_and_json_baseline() {
+    // The full Table-I suite on both machines through the parallel sweep
+    // engine, in seconds at Tiny scale, plus the stable-schema JSON the
+    // CLI's `suite` subcommand emits as the perf baseline.
+    let cfg = MachineConfig::scaled();
+    let pairs = run_suite(&cfg, Scale::Tiny).unwrap();
+    assert_eq!(pairs.len(), Workload::ALL.len());
+    for (w, p) in Workload::ALL.iter().zip(&pairs) {
+        assert_eq!(p.mpu.workload, *w, "pairing must preserve workload order");
+        assert_eq!(p.gpu.workload, *w);
+        assert!(p.mpu.correct, "{w:?} wrong on MPU (max_err {})", p.mpu.max_err);
+        assert!(p.gpu.correct, "{w:?} wrong on GPU (max_err {})", p.gpu.max_err);
+        assert!(p.speedup() > 0.0);
+    }
+    let doc = suite_json(Scale::Tiny, &pairs);
+    assert_eq!(doc.workloads.len(), 12);
+    // The headline ordering (MPU > GPU) is asserted on the streaming
+    // subset by `mpu_beats_gpu_on_geomean`; here the smoke check is that
+    // the whole-suite geomean is a sane finite number.
+    assert!(
+        doc.geomean_speedup.is_finite() && doc.geomean_speedup > 0.0,
+        "bad suite geomean {}",
+        doc.geomean_speedup
+    );
+    let dir = std::env::temp_dir().join("mpu_suite_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(SUITE_JSON);
+    write_suite_json(&path, &doc).unwrap();
+    let v: serde_json::Value = serde_json::from_str(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(v["schema_version"], 1);
+    assert_eq!(v["workloads"].as_array().unwrap().len(), 12);
 }
 
 #[test]
