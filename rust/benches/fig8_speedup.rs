@@ -1,17 +1,22 @@
 //! Fig. 8 — MPU vs GPU: (1) per-workload speedup (paper mean 3.46×);
-//! (2) speedup vs memory intensity (B/instr) correlation.
+//! (2) speedup vs memory intensity (B/instr) correlation; (3) the two
+//! frontend-sharing extra variants as third/fourth points on the
+//! speedup plot — the ideal-bandwidth roofline ("how far from the
+//! wall") and the PIM-style MPU-no-offload machine.
 //!
 //! Runs through the parallel sweep engine; `--tiny` smoke-runs it.
 
-use mpu::config::MachineConfig;
+use mpu::config::{MachineConfig, MachineKind};
 use mpu::coordinator::geomean;
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::sweep::{run_suite, scale_from_args};
+use mpu::coordinator::sweep::{run_suite, run_suite_kind, scale_from_args};
 
 fn main() {
     let scale = scale_from_args();
     let cfg = MachineConfig::scaled();
     let pairs = run_suite(&cfg, scale).expect("suite sweep");
+    let ideal = run_suite_kind(&cfg, scale, MachineKind::IdealBw).expect("ideal sweep");
+    let nooff = run_suite_kind(&cfg, scale, MachineKind::MpuNoOffload).expect("no-offload sweep");
 
     let mut t = Table::new(
         "Fig. 8(1) — execution time and speedup vs GPU (paper mean 3.46x)",
@@ -21,13 +26,25 @@ fn main() {
         "Fig. 8(2) — memory intensity vs speedup",
         &["workload", "B/instr", "speedup"],
     );
+    let mut t3 = Table::new(
+        "Fig. 8(3) — all machine variants, speedup vs GPU",
+        &["workload", "mpu", "mpu_nooff", "ideal_bw"],
+    );
     let mut speedups = Vec::new();
-    for pair in &pairs {
+    let mut ideal_speedups = Vec::new();
+    let mut nooff_speedups = Vec::new();
+    for (i, pair) in pairs.iter().enumerate() {
         let w = pair.mpu.workload;
         assert!(pair.mpu.correct, "{w:?} wrong on MPU");
         assert!(pair.gpu.correct, "{w:?} wrong on GPU");
+        assert!(ideal[i].correct, "{w:?} wrong on ideal");
+        assert!(nooff[i].correct, "{w:?} wrong on no-offload");
         let s = pair.speedup();
+        let si = pair.gpu.cycles as f64 / ideal[i].cycles.max(1) as f64;
+        let sn = pair.gpu.cycles as f64 / nooff[i].cycles.max(1) as f64;
         speedups.push(s);
+        ideal_speedups.push(si);
+        nooff_speedups.push(sn);
         t.row(vec![
             w.name().into(),
             pair.mpu.cycles.to_string(),
@@ -37,6 +54,7 @@ fn main() {
             f2(pair.gpu.dram_gbps()),
         ]);
         t2.row(vec![w.name().into(), f2(pair.mpu.stats.memory_intensity()), f2(s)]);
+        t3.row(vec![w.name().into(), f2(s), f2(sn), f2(si)]);
     }
     t.row(vec![
         "GEOMEAN".into(),
@@ -46,7 +64,15 @@ fn main() {
         String::new(),
         String::new(),
     ]);
+    t3.row(vec![
+        "GEOMEAN".into(),
+        f2(geomean(&speedups)),
+        f2(geomean(&nooff_speedups)),
+        f2(geomean(&ideal_speedups)),
+    ]);
     t.emit("fig8_speedup");
     t2.emit("fig8_intensity");
-    println!("(paper: mean 3.46x; shape check: MPU wins, streaming kernels win most)");
+    t3.emit("fig8_variants");
+    println!("(paper: mean 3.46x; shape check: MPU wins, streaming kernels win most,");
+    println!(" the ideal-bandwidth roofline bounds everything, no-offload trails the MPU)");
 }

@@ -260,6 +260,18 @@ impl MachineConfig {
         c
     }
 
+    /// The PIM-style "MPU without instruction offload" variant: the same
+    /// near-bank memory system (loads still land in the near-bank RF,
+    /// coalesced accesses still qualify for LSU offload), but every ALU
+    /// instruction is forced onto the base logic die, so far-bank
+    /// compute must pull loaded values up over the TSVs. The third
+    /// column of the Fig.-8-style comparison.
+    pub fn no_offload(&self) -> Self {
+        let mut c = self.clone();
+        c.offload_policy = OffloadPolicy::AllFarBank;
+        c
+    }
+
     /// Total cores in the machine.
     pub fn total_cores(&self) -> usize {
         self.processors * self.cores_per_proc
@@ -409,6 +421,92 @@ impl Default for GpuEnergyCoeffs {
     }
 }
 
+/// Configuration of the ideal-bandwidth roofline machine: the GPU
+/// baseline's SIMT geometry with an infinite-bandwidth, fixed-latency
+/// memory system (every speedup plot's "how far from the wall" column).
+#[derive(Clone, Debug)]
+pub struct IdealConfig {
+    pub sms: usize,
+    pub subcores_per_sm: usize,
+    pub warp_size: usize,
+    pub max_warps_per_subcore: usize,
+    pub max_blocks_per_sm: usize,
+    /// Fixed latency of every global access (core cycles); bandwidth is
+    /// unlimited.
+    pub mem_latency: u64,
+    pub alu_latency: u64,
+    pub sfu_latency: u64,
+    pub smem_latency: u64,
+    pub smem_bytes: usize,
+    pub energy: GpuEnergyCoeffs,
+    pub sched_policy: SchedPolicy,
+    pub max_cycles: u64,
+}
+
+impl IdealConfig {
+    /// Roofline matched to an MPU machine config: same SM count as MPU
+    /// cores, a short fixed memory latency (an L1-hit-class 40 cycles),
+    /// no bandwidth limit. Every *frontend* latency deliberately equals
+    /// the [`GpuConfig::matched`] baseline's, so the ideal-vs-GPU gap
+    /// measures the memory system alone.
+    pub fn matched(mpu: &MachineConfig) -> Self {
+        let gpu = GpuConfig::matched(mpu);
+        IdealConfig {
+            sms: gpu.sms,
+            subcores_per_sm: gpu.subcores_per_sm,
+            warp_size: gpu.warp_size,
+            max_warps_per_subcore: gpu.max_warps_per_subcore,
+            max_blocks_per_sm: gpu.max_blocks_per_sm,
+            mem_latency: 40,
+            alu_latency: gpu.alu_latency,
+            sfu_latency: gpu.sfu_latency,
+            smem_latency: gpu.smem_latency,
+            smem_bytes: gpu.smem_bytes,
+            energy: gpu.energy,
+            sched_policy: gpu.sched_policy,
+            max_cycles: gpu.max_cycles,
+        }
+    }
+
+    /// Total ALU lanes across the machine.
+    pub fn total_lanes(&self) -> usize {
+        self.sms * self.subcores_per_sm * self.warp_size
+    }
+}
+
+/// The machine variants the sweep engine / CLI can target, all built on
+/// the shared SIMT frontend ([`crate::core::frontend`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MachineKind {
+    /// The paper's MPU (hybrid near-bank pipeline).
+    Mpu,
+    /// V100-like compute-centric baseline.
+    Gpu,
+    /// Infinite-bandwidth, fixed-latency roofline.
+    IdealBw,
+    /// MPU memory system with instruction offload forced off (PIM-style).
+    MpuNoOffload,
+}
+
+impl MachineKind {
+    pub const ALL: [MachineKind; 4] =
+        [MachineKind::Mpu, MachineKind::Gpu, MachineKind::IdealBw, MachineKind::MpuNoOffload];
+
+    /// Stable lower-case name (sweep labels, JSON, CLI).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MachineKind::Mpu => "mpu",
+            MachineKind::Gpu => "gpu",
+            MachineKind::IdealBw => "ideal",
+            MachineKind::MpuNoOffload => "mpu_nooff",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<MachineKind> {
+        MachineKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
 impl GpuConfig {
     /// Total ALU lanes across the chip (the Fig.-1 ALU-utilization
     /// denominator — single source of truth for machine and benches).
@@ -492,5 +590,25 @@ mod tests {
         let g = GpuConfig::matched(&m);
         assert_eq!(g.sms, m.total_cores());
         assert!(g.hbm_bytes_per_cycle > 0.0);
+    }
+
+    #[test]
+    fn machine_kinds_roundtrip_and_cover_four_variants() {
+        assert_eq!(MachineKind::ALL.len(), 4);
+        for k in MachineKind::ALL {
+            assert_eq!(MachineKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(MachineKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn ideal_matched_and_no_offload_presets() {
+        let m = MachineConfig::scaled();
+        let i = IdealConfig::matched(&m);
+        assert_eq!(i.sms, m.total_cores());
+        assert!(i.mem_latency > 0);
+        let n = m.no_offload();
+        assert_eq!(n.offload_policy, OffloadPolicy::AllFarBank);
+        assert_eq!(n.pipeline_mode, m.pipeline_mode, "memory system unchanged");
     }
 }

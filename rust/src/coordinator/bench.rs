@@ -83,6 +83,26 @@ pub struct WorkloadEntry {
     pub gpu: MachineEntry,
 }
 
+/// One workload on an extra machine variant, with its speedup relative
+/// to the GPU baseline column of the same document.
+#[derive(Clone, Debug, Serialize)]
+pub struct VariantWorkload {
+    pub workload: String,
+    pub speedup_vs_gpu: f64,
+    pub entry: MachineEntry,
+}
+
+/// One extra machine variant's whole-suite results (schema v1 appendix:
+/// the `variants` key was absent in earlier documents, which consumers
+/// must treat as an empty list).
+#[derive(Clone, Debug, Serialize)]
+pub struct VariantEntry {
+    /// Stable variant name (e.g. `"ideal"`, `"mpu_nooff"`).
+    pub variant: String,
+    pub geomean_speedup_vs_gpu: f64,
+    pub workloads: Vec<VariantWorkload>,
+}
+
 /// The whole suite document.
 #[derive(Clone, Debug, Serialize)]
 pub struct SuiteJson {
@@ -92,12 +112,59 @@ pub struct SuiteJson {
     pub geomean_speedup: f64,
     pub geomean_energy_reduction: f64,
     pub workloads: Vec<WorkloadEntry>,
+    /// Extra machine variants (append-only addition; empty when the
+    /// suite ran without `--variants`).
+    pub variants: Vec<VariantEntry>,
 }
 
 /// Build the suite document from MPU/GPU pairs.
 pub fn suite_json(scale: Scale, pairs: &[PairReport]) -> SuiteJson {
+    suite_json_with_variants(scale, pairs, &[])
+}
+
+/// Build the suite document from MPU/GPU pairs plus any extra machine
+/// variants. Each variant's runs must be in the same workload order as
+/// `pairs` (the `Workload::ALL` convention of the sweep helpers).
+pub fn suite_json_with_variants(
+    scale: Scale,
+    pairs: &[PairReport],
+    variants: &[(String, Vec<RunReport>)],
+) -> SuiteJson {
     let speedups: Vec<f64> = pairs.iter().map(|p| p.speedup()).collect();
     let reductions: Vec<f64> = pairs.iter().map(|p| p.energy_reduction()).collect();
+    let variants = variants
+        .iter()
+        .map(|(name, runs)| {
+            assert_eq!(
+                runs.len(),
+                pairs.len(),
+                "variant `{name}` must cover the same workloads as the MPU/GPU pairs"
+            );
+            let workloads: Vec<VariantWorkload> = runs
+                .iter()
+                .zip(pairs)
+                .map(|(r, p)| {
+                    assert_eq!(r.workload, p.mpu.workload, "variant `{name}` workload order drift");
+                    // Label the entry with the variant name so consumers
+                    // grouping by `machine` never conflate (e.g.) the
+                    // no-offload column with the main MPU column.
+                    let mut entry = MachineEntry::from_report(r);
+                    entry.machine = name.clone();
+                    VariantWorkload {
+                        workload: r.workload.name().to_string(),
+                        speedup_vs_gpu: p.gpu.cycles as f64 / r.cycles.max(1) as f64,
+                        entry,
+                    }
+                })
+                .collect();
+            let sp: Vec<f64> = workloads.iter().map(|w| w.speedup_vs_gpu).collect();
+            VariantEntry {
+                variant: name.clone(),
+                geomean_speedup_vs_gpu: geomean(&sp),
+                workloads,
+            }
+        })
+        .collect();
     SuiteJson {
         schema_version: 1,
         suite: "table1".to_string(),
@@ -114,7 +181,15 @@ pub fn suite_json(scale: Scale, pairs: &[PairReport]) -> SuiteJson {
                 gpu: MachineEntry::from_report(&p.gpu),
             })
             .collect(),
+        variants,
     }
+}
+
+/// Every correctness flag in the document (MPU, GPU and variant
+/// columns) — the CI regression gate's view.
+pub fn all_correct(doc: &SuiteJson) -> bool {
+    doc.workloads.iter().all(|w| w.mpu.correct && w.gpu.correct)
+        && doc.variants.iter().all(|v| v.workloads.iter().all(|w| w.entry.correct))
 }
 
 /// Serialize and write a suite document (pretty-printed, trailing newline).
@@ -160,6 +235,35 @@ mod tests {
             "near_fraction",
             "row_miss_rate",
         ] {
+            assert!(s.contains(&format!("\"{key}\"")), "missing key {key}");
+        }
+    }
+
+    #[test]
+    fn variants_appendix_serializes_and_keeps_schema_v1() {
+        let cfg = MachineConfig::scaled();
+        let pair = run_pair(Workload::Axpy, &cfg, Scale::Tiny).unwrap();
+        let ideal = crate::coordinator::sweep::run_suite_kind(
+            &cfg,
+            Scale::Tiny,
+            crate::config::MachineKind::IdealBw,
+        )
+        .unwrap();
+        // One-workload document: slice the matching ideal run.
+        let axpy_ideal = vec![ideal[Workload::ALL.iter().position(|w| *w == Workload::Axpy).unwrap()].clone()];
+        let doc = suite_json_with_variants(
+            Scale::Tiny,
+            &[pair],
+            &[("ideal".to_string(), axpy_ideal)],
+        );
+        assert_eq!(doc.schema_version, 1);
+        assert_eq!(doc.variants.len(), 1);
+        assert_eq!(doc.variants[0].variant, "ideal");
+        assert_eq!(doc.variants[0].workloads.len(), 1);
+        assert!(doc.variants[0].workloads[0].speedup_vs_gpu > 0.0);
+        assert!(all_correct(&doc));
+        let s = serde_json::to_string(&doc).unwrap();
+        for key in ["variants", "variant", "speedup_vs_gpu", "geomean_speedup_vs_gpu"] {
             assert!(s.contains(&format!("\"{key}\"")), "missing key {key}");
         }
     }

@@ -19,7 +19,7 @@ use crate::sim::Stats;
 use crate::workloads::{Prepared, Scale, Workload};
 use anyhow::Result;
 
-pub use sweep::{run_suite, KernelCache, Sweep, SweepResult, Target};
+pub use sweep::{run_suite, run_suite_kind, KernelCache, SimCache, Sweep, SweepResult, Target};
 
 /// Result of one simulated run.
 #[derive(Clone, Debug)]

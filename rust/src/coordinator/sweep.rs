@@ -1,24 +1,34 @@
 //! Parallel sweep engine — the repo's hottest path (running experiments)
-//! made parallel and reusable.
+//! made parallel, reusable and incremental.
 //!
 //! A [`Sweep`] is an ordered set of (variant label × workload × scale ×
 //! target machine) points. [`Sweep::run`] compiles each distinct kernel
-//! once into a shared [`KernelCache`] and fans the independent
-//! simulations out across threads with rayon, returning [`SweepResult`]s
-//! in point order. The CLI, every `fig*` bench and the examples build
-//! their experiments on top of this instead of hand-rolled serial loops.
+//! once into a shared [`KernelCache`], fans the independent simulations
+//! out across threads with rayon, and returns [`SweepResult`]s in point
+//! order. Because the simulator is deterministic, finished points are
+//! also memoized in a process-wide [`SimCache`] keyed on
+//! `(workload, scale, machine-variant, config-hash)` — repeated `Sweep`
+//! invocations in one process (benches iterating on labels, tests,
+//! long-lived drivers) skip already-simulated points entirely. Use
+//! [`Sweep::fresh`] to force re-simulation.
+//!
+//! The CLI, every `fig*` bench and the examples build their experiments
+//! on top of this instead of hand-rolled serial loops.
 
 use super::{check, PairReport, RunReport};
 use crate::compiler::{compile_with, CompiledKernel};
-use crate::config::{GpuConfig, MachineConfig, SmemLocation};
+use crate::config::{GpuConfig, IdealConfig, MachineConfig, MachineKind, SmemLocation};
 use crate::core::Machine;
 use crate::energy::{gpu_energy, mpu_energy};
-use crate::gpu::GpuMachine;
+use crate::gpu::{GpuMachine, IdealMachine};
 use crate::workloads::{prepare, Scale, SizeOnlyDev, Workload};
 use anyhow::Result;
 use rayon::prelude::*;
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Target machine of a sweep point.
 #[derive(Clone, Debug)]
@@ -29,15 +39,44 @@ pub enum Target {
     /// memory placement) consistent with the MPU variant it is compared
     /// against.
     Gpu(GpuConfig, MachineConfig),
+    /// The ideal-bandwidth roofline machine (same compilation-consistency
+    /// convention as `Gpu`).
+    Ideal(IdealConfig, MachineConfig),
 }
 
 impl Target {
+    /// Build the target for a [`MachineKind`] relative to an MPU
+    /// configuration (the `mpu suite --variants` primitive).
+    pub fn for_kind(kind: MachineKind, cfg: &MachineConfig) -> Target {
+        match kind {
+            MachineKind::Mpu => Target::Mpu(cfg.clone()),
+            MachineKind::Gpu => Target::Gpu(GpuConfig::matched(cfg), cfg.clone()),
+            MachineKind::IdealBw => Target::Ideal(IdealConfig::matched(cfg), cfg.clone()),
+            MachineKind::MpuNoOffload => Target::Mpu(cfg.no_offload()),
+        }
+    }
+
     fn smem_near(&self) -> bool {
         let cfg = match self {
             Target::Mpu(c) => c,
             Target::Gpu(_, c) => c,
+            Target::Ideal(_, c) => c,
         };
         cfg.smem_location == SmemLocation::NearBank
+    }
+
+    /// Stable variant discriminant + configuration fingerprint. The
+    /// fingerprint hashes the full `Debug` rendering of the
+    /// configuration, so any knob change produces a new cache key.
+    fn fingerprint(&self) -> (&'static str, u64) {
+        let (kind, repr) = match self {
+            Target::Mpu(c) => ("mpu", format!("{c:?}")),
+            Target::Gpu(g, c) => ("gpu", format!("{g:?}|{c:?}")),
+            Target::Ideal(i, c) => ("ideal", format!("{i:?}|{c:?}")),
+        };
+        let mut h = DefaultHasher::new();
+        repr.hash(&mut h);
+        (kind, h.finish())
     }
 }
 
@@ -103,6 +142,77 @@ impl KernelCache {
     }
 }
 
+/// Cache key of one simulated point: workload × scale × machine-variant
+/// discriminant × configuration hash.
+type SimKey = (Workload, Scale, &'static str, u64);
+
+/// Process-wide simulation-result cache (first step toward the
+/// ROADMAP's incremental re-runs). The simulator is deterministic, so a
+/// memoized [`RunReport`] is indistinguishable from a fresh run; labels
+/// are *not* part of the key, so the same configuration under two sweep
+/// labels simulates once.
+#[derive(Default)]
+pub struct SimCache {
+    map: Mutex<HashMap<SimKey, RunReport>>,
+    hits: AtomicU64,
+}
+
+impl SimCache {
+    pub fn new() -> SimCache {
+        SimCache::default()
+    }
+
+    /// The process-wide cache used by [`Sweep::run`].
+    pub fn global() -> &'static SimCache {
+        static GLOBAL: OnceLock<SimCache> = OnceLock::new();
+        GLOBAL.get_or_init(SimCache::default)
+    }
+
+    /// Cached points.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache hits served so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Memory bound: cached points beyond this flush the cache (reports
+    /// carry output/golden vectors, so an unbounded config sweep would
+    /// otherwise grow without any reuse to show for it). Large enough
+    /// that a whole 4-variant suite (48 points) plus ablation sweeps
+    /// stay resident.
+    const MAX_ENTRIES: usize = 256;
+
+    /// Return the memoized report for `pt` or simulate it with `run`.
+    /// The lock is not held during simulation; two racing threads on the
+    /// same cold key may both simulate (deterministic, so harmless).
+    pub fn get_or_run(
+        &self,
+        pt: &SweepPoint,
+        run: impl FnOnce() -> Result<RunReport>,
+    ) -> Result<RunReport> {
+        let (kind, cfg_hash) = pt.target.fingerprint();
+        let key: SimKey = (pt.workload, pt.scale, kind, cfg_hash);
+        if let Some(r) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(r.clone());
+        }
+        let r = run()?;
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= Self::MAX_ENTRIES {
+            map.clear();
+        }
+        map.insert(key, r.clone());
+        Ok(r)
+    }
+}
+
 /// Run one workload on the MPU machine with an already-compiled kernel.
 pub fn run_mpu_with(
     w: Workload,
@@ -161,11 +271,46 @@ pub fn run_gpu_with(
     })
 }
 
+/// Run one workload on the ideal-bandwidth roofline machine.
+pub fn run_ideal_with(
+    w: Workload,
+    icfg: &IdealConfig,
+    scale: Scale,
+    kernel: CompiledKernel,
+) -> Result<RunReport> {
+    let mut m = IdealMachine::new(icfg);
+    let p = prepare(w, scale, &mut m)?;
+    let loc_stats = kernel.loc_stats.clone();
+    m.launch(kernel, p.launch, &p.params)?;
+    let stats = m.run()?;
+    let output = m.read_f32s(p.out_addr, p.out_len);
+    let (correct, max_err) = check(&output, &p.golden, p.tol);
+    let energy = gpu_energy(&stats, &icfg.energy);
+    Ok(RunReport {
+        workload: w,
+        machine: "ideal",
+        cycles: stats.cycles,
+        stats,
+        energy,
+        correct,
+        max_err,
+        output,
+        golden: p.golden,
+        loc_stats,
+    })
+}
+
 /// Builder for a set of sweep points.
-#[derive(Default)]
 pub struct Sweep {
     points: Vec<SweepPoint>,
     serial: bool,
+    reuse: bool,
+}
+
+impl Default for Sweep {
+    fn default() -> Sweep {
+        Sweep { points: Vec::new(), serial: false, reuse: true }
+    }
 }
 
 impl Sweep {
@@ -176,6 +321,13 @@ impl Sweep {
     /// Force serial execution (deterministic profiling, debugging).
     pub fn serial(mut self) -> Sweep {
         self.serial = true;
+        self
+    }
+
+    /// Bypass the process-wide [`SimCache`] (e.g. when timing the
+    /// simulator itself).
+    pub fn fresh(mut self) -> Sweep {
+        self.reuse = false;
         self
     }
 
@@ -200,6 +352,15 @@ impl Sweep {
             .fold(self, |s, &w| s.point(label, w, scale, Target::Gpu(gcfg.clone(), cfg.clone())))
     }
 
+    /// Add all twelve workloads on any [`MachineKind`] variant matched
+    /// to `cfg`, labelled with the kind's stable name.
+    pub fn suite_kind(self, kind: MachineKind, scale: Scale, cfg: &MachineConfig) -> Sweep {
+        let target = Target::for_kind(kind, cfg);
+        Workload::ALL
+            .iter()
+            .fold(self, |s, &w| s.point(kind.name(), w, scale, target.clone()))
+    }
+
     pub fn len(&self) -> usize {
         self.points.len()
     }
@@ -209,16 +370,23 @@ impl Sweep {
     }
 
     /// Run every point — in parallel unless [`Sweep::serial`] — compiling
-    /// each distinct kernel once. Results come back in point order; the
-    /// first simulation error aborts the sweep.
-    pub fn run(self) -> Result<Vec<SweepResult>> {
+    /// each distinct kernel once and reusing memoized results from
+    /// `sim_cache`. Results come back in point order; the first
+    /// simulation error aborts the sweep.
+    pub fn run_with_cache(self, sim_cache: &SimCache) -> Result<Vec<SweepResult>> {
         let cache = KernelCache::new();
+        let reuse = self.reuse;
         let run_one = |pt: &SweepPoint| -> Result<SweepResult> {
-            let kernel = cache.get(pt.workload, pt.target.smem_near())?;
-            let report = match &pt.target {
-                Target::Mpu(cfg) => run_mpu_with(pt.workload, cfg, pt.scale, kernel)?,
-                Target::Gpu(gcfg, _) => run_gpu_with(pt.workload, gcfg, pt.scale, kernel)?,
+            let simulate = || -> Result<RunReport> {
+                let kernel = cache.get(pt.workload, pt.target.smem_near())?;
+                match &pt.target {
+                    Target::Mpu(cfg) => run_mpu_with(pt.workload, cfg, pt.scale, kernel),
+                    Target::Gpu(gcfg, _) => run_gpu_with(pt.workload, gcfg, pt.scale, kernel),
+                    Target::Ideal(icfg, _) => run_ideal_with(pt.workload, icfg, pt.scale, kernel),
+                }
             };
+            let report =
+                if reuse { sim_cache.get_or_run(pt, simulate)? } else { simulate()? };
             Ok(SweepResult { label: pt.label.clone(), scale: pt.scale, report })
         };
         if self.serial {
@@ -226,6 +394,12 @@ impl Sweep {
         } else {
             self.points.par_iter().map(run_one).collect()
         }
+    }
+
+    /// Run against the process-wide [`SimCache`].
+    pub fn run(self) -> Result<Vec<SweepResult>> {
+        let cache = SimCache::global();
+        self.run_with_cache(cache)
     }
 }
 
@@ -252,6 +426,13 @@ pub fn run_suite(cfg: &MachineConfig, scale: Scale) -> Result<Vec<PairReport>> {
     }
     anyhow::ensure!(mpu.len() == gpu.len(), "unbalanced suite results");
     Ok(mpu.into_iter().zip(gpu).map(|(m, g)| PairReport { mpu: m, gpu: g }).collect())
+}
+
+/// The full Table-I suite on one [`MachineKind`] variant, in
+/// `Workload::ALL` order.
+pub fn run_suite_kind(cfg: &MachineConfig, scale: Scale, kind: MachineKind) -> Result<Vec<RunReport>> {
+    let results = Sweep::new().suite_kind(kind, scale, cfg).run()?;
+    Ok(results.into_iter().map(|r| r.report).collect())
 }
 
 /// `--tiny` smoke scale from the CLI args (shared by the benches so the
@@ -319,5 +500,73 @@ mod tests {
             .unwrap();
         assert_eq!(results[0].report.cycles, serial.cycles);
         assert_eq!(results[0].report.output, serial.output);
+    }
+
+    #[test]
+    fn sim_cache_skips_repeated_points_and_keys_on_config() {
+        let cache = SimCache::new();
+        let cfg = MachineConfig::scaled();
+        let mk = || {
+            Sweep::new().point("mpu", Workload::Axpy, Scale::Tiny, Target::Mpu(cfg.clone()))
+        };
+        let first = mk().run_with_cache(&cache).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.hits(), 0);
+        // Second invocation in the same process: served from cache,
+        // identical result. A different label does not re-simulate.
+        let again = Sweep::new()
+            .point("relabelled", Workload::Axpy, Scale::Tiny, Target::Mpu(cfg.clone()))
+            .run_with_cache(&cache)
+            .unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(again[0].report.cycles, first[0].report.cycles);
+        assert_eq!(again[0].label, "relabelled");
+        // Any config knob change produces a new key.
+        let mut cfg2 = cfg.clone();
+        cfg2.row_buffers_per_bank = 1;
+        Sweep::new()
+            .point("mpu", Workload::Axpy, Scale::Tiny, Target::Mpu(cfg2))
+            .run_with_cache(&cache)
+            .unwrap();
+        assert_eq!(cache.len(), 2);
+        // A different scale too.
+        Sweep::new()
+            .point("mpu", Workload::Axpy, Scale::Small, Target::Mpu(cfg.clone()))
+            .run_with_cache(&cache)
+            .unwrap();
+        assert_eq!(cache.len(), 3);
+        // `fresh()` bypasses the cache entirely.
+        let before = cache.hits();
+        Sweep::new()
+            .point("mpu", Workload::Axpy, Scale::Tiny, Target::Mpu(cfg.clone()))
+            .fresh()
+            .run_with_cache(&cache)
+            .unwrap();
+        assert_eq!(cache.hits(), before);
+    }
+
+    #[test]
+    fn target_for_kind_covers_all_variants() {
+        let cfg = MachineConfig::scaled();
+        for kind in MachineKind::ALL {
+            let t = Target::for_kind(kind, &cfg);
+            match (kind, &t) {
+                (MachineKind::Mpu, Target::Mpu(c)) => {
+                    assert_eq!(c.offload_policy, cfg.offload_policy)
+                }
+                (MachineKind::MpuNoOffload, Target::Mpu(c)) => {
+                    assert_eq!(c.offload_policy, crate::config::OffloadPolicy::AllFarBank)
+                }
+                (MachineKind::Gpu, Target::Gpu(..)) => {}
+                (MachineKind::IdealBw, Target::Ideal(..)) => {}
+                _ => panic!("{kind:?} mapped to the wrong target"),
+            }
+        }
+        // MPU and MPU-no-offload must not collide in the cache.
+        let (k1, h1) = Target::for_kind(MachineKind::Mpu, &cfg).fingerprint();
+        let (k2, h2) = Target::for_kind(MachineKind::MpuNoOffload, &cfg).fingerprint();
+        assert_eq!(k1, k2);
+        assert_ne!(h1, h2);
     }
 }

@@ -1,0 +1,854 @@
+//! The shared SIMT frontend.
+//!
+//! Every machine in this repo — the MPU, the GPU baseline, and the
+//! roofline variants — executes *identical* SIMT programs and differs
+//! only in its memory system. This module owns everything the machines
+//! used to duplicate: block residency and dispatch, warp scheduling
+//! (GTO / loose round-robin), barrier and exit handling, the scoreboard
+//! view, guard evaluation, functional lane execution (ALU, global and
+//! shared memory), and the idle fast-forward event loop.
+//!
+//! The frontend is generic over two seams:
+//!
+//! * [`MemorySystem`] — the timing model of global memory: where a
+//!   coalesced warp access goes (TSVs + near-bank DRAM controllers +
+//!   mesh for the MPU; an L2 + HBM bandwidth pipe for the GPU; a fixed
+//!   latency for the ideal-bandwidth roofline), how in-flight requests
+//!   advance, and when loads complete back into registers.
+//! * [`OffloadModel`] — the instruction-placement model: the MPU's
+//!   Fig.-3 near/far-bank decision plus register move engine; a no-op
+//!   (everything far-bank) for the compute-centric machines.
+//!
+//! Both traits are implemented by the same backend type so backends can
+//! share state (the MPU's register moves ride its TSV buses).
+
+use super::exec::{alu_lane, operand_value, LaneCtx};
+use super::offload::ExecLoc;
+use super::warp::{Warp, WarpState};
+use crate::compiler::CompiledKernel;
+use crate::config::SchedPolicy;
+use crate::isa::instr::Loc;
+use crate::isa::program::ParamValue;
+use crate::isa::{Instr, LaunchConfig, Op, Reg, Space};
+use crate::mem::SharedMem;
+use crate::sim::Stats;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// Frontend geometry and latency parameters — the subset of a machine
+/// configuration the SIMT pipeline itself needs (memory-system
+/// parameters live in the backend).
+#[derive(Clone, Debug)]
+pub struct FrontendParams {
+    /// SIMT cores (MPU cores / GPU SMs).
+    pub cores: usize,
+    pub subcores_per_core: usize,
+    pub warp_size: usize,
+    pub max_warps_per_subcore: usize,
+    pub max_blocks_per_core: usize,
+    /// Instructions issued per subcore per cycle.
+    pub issue_width: usize,
+    pub smem_bytes: usize,
+    pub sched_policy: SchedPolicy,
+    pub alu_latency: u64,
+    pub sfu_latency: u64,
+    pub opc_latency: u64,
+    pub smem_latency: u64,
+    /// Functional device-memory size in bytes.
+    pub mem_bytes: usize,
+    /// Deadlock safety valve.
+    pub max_cycles: u64,
+}
+
+/// Which register file a completed load's data landed in (drives the
+/// §IV-B1 track-table update; `Untracked` for machines without one).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegPlace {
+    Near,
+    Far,
+    Untracked,
+}
+
+/// A load completion delivered by the memory system: register `dst` of
+/// warp (`core`, `warp`) becomes ready at cycle `ready`.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub core: usize,
+    pub warp: usize,
+    pub dst: Reg,
+    pub ready: u64,
+    pub place: RegPlace,
+}
+
+/// Everything a memory system needs to know about one global-memory
+/// warp access (the functional part has already executed).
+#[derive(Debug)]
+pub struct AccessCtx<'a> {
+    pub core: usize,
+    /// Index of the warp within its core (stable for completion routing).
+    pub warp_index: usize,
+    pub instr: &'a Instr,
+    /// `(lane, byte address)` of every executing lane.
+    pub addrs: &'a [(usize, u64)],
+    /// All `warp_size` lanes executing (Fig. 4 offload qualification).
+    pub full_warp: bool,
+    pub now: u64,
+}
+
+/// The pluggable memory system behind the SIMT frontend.
+pub trait MemorySystem {
+    /// Account timing for one global-memory access. Loads either insert
+    /// the destination's ready time directly into `w.reg_ready`, or
+    /// block it (`u64::MAX`) and complete later via
+    /// [`MemorySystem::drain_completed`]. Stores are fire-and-forget.
+    fn issue_access(&mut self, ctx: &AccessCtx, w: &mut Warp, stats: &mut Stats);
+
+    /// Advance internal state (queued events, DRAM controllers, buses)
+    /// up to cycle `now`.
+    fn advance(&mut self, now: u64, stats: &mut Stats);
+
+    /// Collect load completions; the frontend applies them to the warps.
+    fn drain_completed(&mut self, now: u64, out: &mut Vec<Completion>);
+
+    /// Earliest future cycle at which anything internal happens (idle
+    /// fast-forward hint). `None` when nothing is pending.
+    fn next_event(&self) -> Option<u64>;
+
+    /// No in-flight work (the run loop may terminate).
+    fn idle(&self) -> bool;
+
+    /// Core that should host a block given the runtime's home-address
+    /// dispatch hint; `None` falls back to round-robin.
+    fn home_core(&self, hint: Option<u64>) -> Option<usize> {
+        let _ = hint;
+        None
+    }
+
+    /// Record the register-file placement of a launch parameter.
+    fn seed_param(&self, w: &mut Warp, r: Reg);
+}
+
+/// The instruction-placement model: decides where non-memory
+/// instructions execute and moves registers accordingly. A no-op
+/// (everything far-bank, registers never move) for compute-centric
+/// machines.
+pub trait OffloadModel {
+    /// Decide the execution location of an ALU / shared-memory
+    /// instruction and perform any required register moves. Returns the
+    /// location and the cycle all operands are in place (`>= now`).
+    fn pre_issue(
+        &mut self,
+        core: usize,
+        w: &mut Warp,
+        instr: &Instr,
+        hint: Loc,
+        now: u64,
+        stats: &mut Stats,
+    ) -> (ExecLoc, u64);
+
+    /// Cycle the ALU pipe can start: near-bank execution first sends the
+    /// instruction packet down the TSVs.
+    fn alu_start(&mut self, core: usize, loc: ExecLoc, ready: u64, now: u64, stats: &mut Stats)
+        -> u64;
+
+    /// Retire the destination register at cycle `done` (scoreboard entry
+    /// plus register-file placement).
+    fn retire_dst(&mut self, w: &mut Warp, instr: &Instr, loc: ExecLoc, done: u64);
+}
+
+/// A resident thread block.
+#[derive(Debug)]
+struct BlockState {
+    id: u32,
+    warps_live: usize,
+    at_barrier: usize,
+    smem: SharedMem,
+}
+
+/// Per-core SIMT state (warps, blocks, scheduler bookkeeping).
+struct CoreState {
+    warps: Vec<Warp>,
+    blocks: Vec<BlockState>,
+    /// GTO bookkeeping: last-issued warp per subcore.
+    last_issued: Vec<Option<usize>>,
+    /// RR bookkeeping.
+    rr_next: Vec<usize>,
+    pending_blocks: VecDeque<u32>,
+    /// Live (non-retired) warp indices per subcore — the scheduler scans
+    /// only these; retired warps stay in `warps` so in-flight completion
+    /// indices remain stable.
+    sc_warps: Vec<Vec<usize>>,
+}
+
+/// The shared SIMT frontend, generic over the memory system.
+pub struct SimtFrontend<M: MemorySystem + OffloadModel> {
+    pub params: FrontendParams,
+    pub mem_sys: M,
+    kernel: Option<CompiledKernel>,
+    launch: Option<LaunchConfig>,
+    kparams: Vec<ParamValue>,
+    mem: Vec<u8>,
+    alloc_top: u64,
+    cores: Vec<CoreState>,
+    pub stats: Stats,
+    now: u64,
+    blocks_done: u32,
+}
+
+impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
+    pub fn new(params: FrontendParams, mem_sys: M) -> SimtFrontend<M> {
+        let cores = (0..params.cores)
+            .map(|_| CoreState {
+                warps: Vec::new(),
+                blocks: Vec::new(),
+                last_issued: vec![None; params.subcores_per_core],
+                rr_next: vec![0; params.subcores_per_core],
+                pending_blocks: VecDeque::new(),
+                sc_warps: vec![Vec::new(); params.subcores_per_core],
+            })
+            .collect();
+        let mem = vec![0; params.mem_bytes];
+        SimtFrontend {
+            params,
+            mem_sys,
+            kernel: None,
+            launch: None,
+            kparams: Vec::new(),
+            mem,
+            alloc_top: 0,
+            cores,
+            stats: Stats::default(),
+            now: 0,
+            blocks_done: 0,
+        }
+    }
+
+    // ---------------- device memory API ----------------
+
+    /// Bump-allocate device memory (256-B aligned).
+    pub fn alloc(&mut self, bytes: usize) -> u64 {
+        let base = (self.alloc_top + 255) & !255;
+        self.alloc_top = base + bytes as u64;
+        assert!(
+            (self.alloc_top as usize) <= self.mem.len(),
+            "device OOM: {} > {}",
+            self.alloc_top,
+            self.mem.len()
+        );
+        base
+    }
+
+    pub fn write_mem(&mut self, addr: u64, data: &[u8]) {
+        let a = addr as usize;
+        self.mem[a..a + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read_mem(&self, addr: u64, len: usize) -> &[u8] {
+        &self.mem[addr as usize..addr as usize + len]
+    }
+
+    pub fn write_f32s(&mut self, addr: u64, data: &[f32]) {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.write_mem(addr, &bytes);
+    }
+
+    pub fn read_f32s(&self, addr: u64, n: usize) -> Vec<f32> {
+        self.read_mem(addr, n * 4)
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn write_u32s(&mut self, addr: u64, data: &[u32]) {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.write_mem(addr, &bytes);
+    }
+
+    pub fn read_u32s(&self, addr: u64, n: usize) -> Vec<u32> {
+        self.read_mem(addr, n * 4)
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    fn mem_read_u32(&self, addr: u64) -> u32 {
+        let a = addr as usize;
+        if a + 4 > self.mem.len() {
+            return 0;
+        }
+        u32::from_le_bytes(self.mem[a..a + 4].try_into().unwrap())
+    }
+
+    fn mem_write_u32(&mut self, addr: u64, v: u32) {
+        let a = addr as usize;
+        if a + 4 > self.mem.len() {
+            return;
+        }
+        self.mem[a..a + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    // ---------------- launch ----------------
+
+    /// Launch a kernel. `home_addr(block)` is the runtime's dispatch
+    /// hint: the block is scheduled on the core owning that address
+    /// (§V-A); backends without an address map ignore it and fall back
+    /// to round-robin.
+    pub fn launch(
+        &mut self,
+        kernel: CompiledKernel,
+        launch: LaunchConfig,
+        params: &[ParamValue],
+        home_addr: impl Fn(u32) -> Option<u64>,
+    ) -> Result<()> {
+        let cap =
+            self.params.max_warps_per_subcore * self.params.subcores_per_core * self.params.warp_size;
+        if launch.block as usize > cap {
+            bail!("block size {} exceeds core capacity", launch.block);
+        }
+        if kernel.params.len() != params.len() {
+            bail!("kernel `{}` expects {} params, got {}", kernel.name, kernel.params.len(), params.len());
+        }
+        self.kernel = Some(kernel);
+        self.launch = Some(launch);
+        self.kparams = params.to_vec();
+        let ncores = self.params.cores;
+        for b in 0..launch.grid {
+            let core = self
+                .mem_sys
+                .home_core(home_addr(b))
+                .unwrap_or(b as usize % ncores);
+            self.cores[core].pending_blocks.push_back(b);
+        }
+        for c in 0..ncores {
+            while self.try_dispatch_block(c) {}
+        }
+        Ok(())
+    }
+
+    /// Dispatch the next pending block on core `c` if resources allow.
+    fn try_dispatch_block(&mut self, c: usize) -> bool {
+        let launch = self.launch.unwrap();
+        let kernel = self.kernel.as_ref().unwrap();
+        let core = &mut self.cores[c];
+        if core.blocks.len() >= self.params.max_blocks_per_core {
+            return false;
+        }
+        let warps_per_block = launch.warps_per_block(self.params.warp_size);
+        let live_warps = core.warps.iter().filter(|w| w.state != WarpState::Done).count();
+        if live_warps + warps_per_block
+            > self.params.max_warps_per_subcore * self.params.subcores_per_core
+        {
+            return false;
+        }
+        let Some(b) = core.pending_blocks.pop_front() else {
+            return false;
+        };
+        let reg_counts = kernel.reg_counts;
+        let smem_bytes = (launch.smem_bytes as usize).min(self.params.smem_bytes);
+        core.blocks.push(BlockState {
+            id: b,
+            warps_live: warps_per_block,
+            at_barrier: 0,
+            smem: SharedMem::new(smem_bytes.max(4)),
+        });
+        for wi in 0..warps_per_block {
+            let lanes = (launch.block as usize - wi * self.params.warp_size).min(self.params.warp_size);
+            let subcore = wi % self.params.subcores_per_core;
+            let mut w = Warp::new(b, wi, lanes, subcore, reg_counts, self.params.warp_size);
+            w.ready_at = self.now + 1;
+            // Deliver parameters; the backend records which register
+            // file(s) hold them (the MPU seeds both, saving a per-warp
+            // register move per parameter).
+            for (p, v) in kernel.params.iter().zip(&self.kparams) {
+                w.write_all(*p, v.bits());
+                self.mem_sys.seed_param(&mut w, *p);
+            }
+            core.sc_warps[subcore].push(core.warps.len());
+            core.warps.push(w);
+        }
+        true
+    }
+
+    // ---------------- main loop ----------------
+
+    /// Run to completion; returns final stats.
+    pub fn run(&mut self) -> Result<Stats> {
+        let grid = self.launch.map(|l| l.grid).unwrap_or(0);
+        let mut completions: Vec<Completion> = Vec::new();
+        loop {
+            self.mem_sys.advance(self.now, &mut self.stats);
+            completions.clear();
+            self.mem_sys.drain_completed(self.now, &mut completions);
+            for comp in &completions {
+                let w = &mut self.cores[comp.core].warps[comp.warp];
+                w.reg_ready.insert(comp.dst, comp.ready);
+                match comp.place {
+                    RegPlace::Near => w.track.write_nb(comp.dst),
+                    RegPlace::Far => w.track.write_fb(comp.dst),
+                    RegPlace::Untracked => {}
+                }
+            }
+            let issued = self.issue_all();
+
+            let work_left = self.blocks_done < grid || !self.mem_sys.idle();
+            if !work_left {
+                break;
+            }
+            if self.now >= self.params.max_cycles {
+                bail!("simulation exceeded max_cycles={} (deadlock?)", self.params.max_cycles);
+            }
+            if issued {
+                self.now += 1;
+            } else {
+                match self.next_interesting() {
+                    Some(t) if t > self.now => self.now = t,
+                    _ => self.now += 1,
+                }
+            }
+        }
+        self.stats.cycles = self.now;
+        Ok(self.stats.clone())
+    }
+
+    /// Earliest future cycle where anything can happen.
+    fn next_interesting(&self) -> Option<u64> {
+        let mut best: Option<u64> = self.mem_sys.next_event();
+        let kernel = self.kernel.as_ref().unwrap();
+        for c in &self.cores {
+            for w in c.sc_warps.iter().flatten().map(|&wi| &c.warps[wi]) {
+                if w.state != WarpState::Ready {
+                    continue;
+                }
+                let pc = w.pc();
+                if pc >= kernel.instrs.len() {
+                    continue;
+                }
+                let dep = w.instr_ready_at(&kernel.instrs[pc]);
+                if dep == u64::MAX {
+                    continue; // unblocked by a load completion later
+                }
+                let t = dep.max(w.ready_at);
+                best = Some(best.map_or(t, |b| b.min(t)));
+            }
+        }
+        best
+    }
+
+    /// Try to issue on every subcore of every core; returns whether any
+    /// instruction issued.
+    fn issue_all(&mut self) -> bool {
+        let mut issued_any = false;
+        let ncores = self.cores.len();
+        for c in 0..ncores {
+            for sc in 0..self.params.subcores_per_core {
+                for _ in 0..self.params.issue_width {
+                    if let Some(wi) = self.pick_warp(c, sc) {
+                        self.issue(c, wi);
+                        self.cores[c].last_issued[sc] = Some(wi);
+                        issued_any = true;
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        issued_any
+    }
+
+    /// Scheduler: pick an issueable warp on (core, subcore).
+    fn pick_warp(&self, c: usize, sc: usize) -> Option<usize> {
+        let core = &self.cores[c];
+        let kernel = self.kernel.as_ref().unwrap();
+        let can_issue = |wi: usize| -> bool {
+            let w = &core.warps[wi];
+            if w.state != WarpState::Ready || w.subcore != sc || w.ready_at > self.now {
+                return false;
+            }
+            let pc = w.pc();
+            if pc >= kernel.instrs.len() {
+                return false;
+            }
+            w.instr_ready_at(&kernel.instrs[pc]) <= self.now
+        };
+
+        let live = &core.sc_warps[sc];
+        match self.params.sched_policy {
+            SchedPolicy::Gto => {
+                // Greedy: stick with the last-issued warp.
+                if let Some(last) = core.last_issued[sc] {
+                    if last < core.warps.len() && can_issue(last) {
+                        return Some(last);
+                    }
+                }
+                // Then oldest (dispatch order).
+                live.iter().copied().find(|&wi| can_issue(wi))
+            }
+            SchedPolicy::RoundRobin => {
+                let n = live.len();
+                if n == 0 {
+                    return None;
+                }
+                let start = core.rr_next[sc] % n;
+                (0..n).map(|k| live[(start + k) % n]).find(|&wi| can_issue(wi))
+            }
+        }
+    }
+
+    // ---------------- instruction issue ----------------
+
+    fn issue(&mut self, c: usize, wi: usize) {
+        // Copy out only the per-pc scalars + one instruction — cloning
+        // the whole kernel here dominated the profile (EXPERIMENTS.md
+        // §Perf iteration 1).
+        let pc = self.cores[c].warps[wi].pc();
+        let (instr, reconv_pc, hint) = {
+            let kernel = self.kernel.as_ref().unwrap();
+            (kernel.instrs[pc].clone(), kernel.reconv[pc], kernel.instr_loc(pc))
+        };
+
+        if self.params.sched_policy == SchedPolicy::RoundRobin {
+            let sc = self.cores[c].warps[wi].subcore;
+            let pos = self.cores[c].sc_warps[sc].iter().position(|&x| x == wi).unwrap_or(0);
+            self.cores[c].rr_next[sc] = pos + 1;
+        }
+
+        {
+            let w = &mut self.cores[c].warps[wi];
+            w.ready_at = self.now + 1;
+            w.last_issue = self.now;
+        }
+
+        // Guard evaluation.
+        let (exec_mask, active_mask) = {
+            let w = &self.cores[c].warps[wi];
+            let active = w.active_mask();
+            let mask = match instr.guard {
+                None => active,
+                Some((p, neg)) => {
+                    let mut m = 0u64;
+                    for lane in 0..w.lanes {
+                        if active >> lane & 1 == 1 && (w.read(p, lane) != 0) != neg {
+                            m |= 1 << lane;
+                        }
+                    }
+                    m
+                }
+            };
+            (mask, active)
+        };
+
+        // Control flow first (always on the front pipeline / far-bank).
+        match instr.op {
+            Op::Bra => {
+                self.stats.instrs_far += 1;
+                let target = instr.target.unwrap_or(pc + 1);
+                let rpc = reconv_pc.unwrap_or(usize::MAX);
+                let taken = if instr.guard.is_none() { active_mask } else { exec_mask };
+                self.cores[c].warps[wi].branch(taken, target, pc + 1, rpc);
+                return;
+            }
+            Op::Bar => {
+                self.stats.instrs_far += 1;
+                self.stats.barriers += 1;
+                self.barrier(c, wi, pc);
+                return;
+            }
+            Op::Exit => {
+                self.stats.instrs_far += 1;
+                self.exit(c, wi, active_mask);
+                return;
+            }
+            _ => {}
+        }
+
+        if exec_mask == 0 {
+            self.stats.predicated_off += 1;
+            self.stats.instrs_far += 1;
+            self.cores[c].warps[wi].set_pc(pc + 1);
+            return;
+        }
+
+        match (instr.op, instr.space) {
+            (Op::Ld | Op::St | Op::Red, Some(Space::Global)) => {
+                self.issue_global(c, wi, pc, &instr, exec_mask);
+            }
+            (Op::Ld | Op::St | Op::Red, Some(Space::Shared)) => {
+                self.issue_shared(c, wi, pc, &instr, exec_mask, hint);
+            }
+            _ => {
+                self.issue_alu(c, wi, pc, &instr, exec_mask, hint);
+            }
+        }
+    }
+
+    fn lane_addrs(&self, c: usize, wi: usize, instr: &Instr, exec_mask: u64) -> Vec<(usize, u64)> {
+        let w = &self.cores[c].warps[wi];
+        let m = instr.mem.expect("memory instruction");
+        (0..w.lanes)
+            .filter(|l| exec_mask >> l & 1 == 1)
+            .map(|l| {
+                let base = w.read(m.base, l);
+                (l, (base as i64 + m.offset as i64) as u64)
+            })
+            .collect()
+    }
+
+    fn issue_alu(&mut self, c: usize, wi: usize, pc: usize, instr: &Instr, exec_mask: u64, hint: Loc) {
+        let launch = self.launch.unwrap();
+        let (loc, ready) = self.mem_sys.pre_issue(
+            c,
+            &mut self.cores[c].warps[wi],
+            instr,
+            hint,
+            self.now,
+            &mut self.stats,
+        );
+
+        // Functional execution.
+        let (block, warp_in_block, lanes) = {
+            let w = &self.cores[c].warps[wi];
+            (w.block, w.warp_in_block, w.lanes)
+        };
+        let n_srcs = instr.srcs.len() as u64;
+        for lane in 0..lanes {
+            if exec_mask >> lane & 1 == 0 {
+                continue;
+            }
+            let ctx = LaneCtx {
+                tid: (warp_in_block * self.params.warp_size + lane) as u32,
+                ntid: launch.block,
+                ctaid: block,
+                nctaid: launch.grid,
+            };
+            let w = &self.cores[c].warps[wi];
+            let srcs: Vec<u32> = instr
+                .srcs
+                .iter()
+                .map(|o| operand_value(o, &ctx, &|r| w.read(r, lane)))
+                .collect();
+            let v = alu_lane(instr, &srcs);
+            if let Some(d) = instr.dst {
+                self.cores[c].warps[wi].write(d, lane, v);
+            }
+        }
+
+        // Timing + accounting (uniform in the execution location).
+        match loc {
+            ExecLoc::Near => {
+                self.stats.instrs_near += 1;
+                self.stats.rf_near_accesses += n_srcs + 1;
+            }
+            ExecLoc::Far => {
+                self.stats.instrs_far += 1;
+                self.stats.rf_far_accesses += n_srcs + 1;
+            }
+        }
+        self.stats.opc_accesses += n_srcs;
+        self.stats.alu_lane_ops += exec_mask.count_ones() as u64;
+        let lat = if instr.op.is_sfu() { self.params.sfu_latency } else { self.params.alu_latency };
+        let start = self.mem_sys.alu_start(c, loc, ready, self.now, &mut self.stats);
+        let done = start + self.params.opc_latency + lat;
+
+        self.mem_sys.retire_dst(&mut self.cores[c].warps[wi], instr, loc, done);
+        self.cores[c].warps[wi].set_pc(pc + 1);
+    }
+
+    fn issue_global(&mut self, c: usize, wi: usize, pc: usize, instr: &Instr, exec_mask: u64) {
+        self.stats.global_mem_instrs += 1;
+        let launch = self.launch.unwrap();
+        let addrs = self.lane_addrs(c, wi, instr, exec_mask);
+
+        // Functional execution first (program order per warp).
+        match instr.op {
+            Op::Ld => {
+                let dst = instr.dst.unwrap();
+                let vals: Vec<(usize, u32)> =
+                    addrs.iter().map(|&(l, a)| (l, self.mem_read_u32(a))).collect();
+                let w = &mut self.cores[c].warps[wi];
+                for (l, v) in vals {
+                    w.write(dst, l, v);
+                }
+            }
+            Op::St => {
+                let src = instr.srcs[0];
+                let (block, warp_in_block) = {
+                    let w = &self.cores[c].warps[wi];
+                    (w.block, w.warp_in_block)
+                };
+                for &(l, a) in &addrs {
+                    let ctx = LaneCtx {
+                        tid: (warp_in_block * self.params.warp_size + l) as u32,
+                        ntid: launch.block,
+                        ctaid: block,
+                        nctaid: launch.grid,
+                    };
+                    let w = &self.cores[c].warps[wi];
+                    let v = operand_value(&src, &ctx, &|r| w.read(r, l));
+                    self.mem_write_u32(a, v);
+                }
+            }
+            Op::Red => {
+                // Atomic add (global): sequentialized by simulation.
+                let src = instr.srcs[0];
+                for &(l, a) in &addrs {
+                    let w = &self.cores[c].warps[wi];
+                    let v = match src {
+                        crate::isa::Operand::Reg(r) => w.read(r, l),
+                        o => operand_value(
+                            &o,
+                            &LaneCtx { tid: 0, ntid: 0, ctaid: 0, nctaid: 0 },
+                            &|r| w.read(r, l),
+                        ),
+                    };
+                    let old = self.mem_read_u32(a);
+                    let new = match instr.ty {
+                        crate::isa::Ty::F32 => (f32::from_bits(old) + f32::from_bits(v)).to_bits(),
+                        _ => old.wrapping_add(v),
+                    };
+                    self.mem_write_u32(a, new);
+                }
+            }
+            _ => unreachable!(),
+        }
+
+        // Timing: the memory system owns the whole path.
+        let full_warp = {
+            let w = &self.cores[c].warps[wi];
+            exec_mask.count_ones() as usize == w.lanes && w.lanes == self.params.warp_size
+        };
+        let ctx = AccessCtx { core: c, warp_index: wi, instr, addrs: &addrs, full_warp, now: self.now };
+        self.mem_sys.issue_access(&ctx, &mut self.cores[c].warps[wi], &mut self.stats);
+        self.cores[c].warps[wi].set_pc(pc + 1);
+    }
+
+    fn issue_shared(&mut self, c: usize, wi: usize, pc: usize, instr: &Instr, exec_mask: u64, hint: Loc) {
+        self.stats.shared_mem_instrs += 1;
+        let launch = self.launch.unwrap();
+        let (loc, ready) = self.mem_sys.pre_issue(
+            c,
+            &mut self.cores[c].warps[wi],
+            instr,
+            hint,
+            self.now,
+            &mut self.stats,
+        );
+        let addrs = self.lane_addrs(c, wi, instr, exec_mask);
+        let (block, warp_in_block) = {
+            let w = &self.cores[c].warps[wi];
+            (w.block, w.warp_in_block)
+        };
+        let bslot = self.cores[c].blocks.iter().position(|b| b.id == block).expect("block resident");
+
+        // Functional.
+        match instr.op {
+            Op::Ld => {
+                let dst = instr.dst.unwrap();
+                let vals: Vec<(usize, u32)> = addrs
+                    .iter()
+                    .map(|&(l, a)| (l, self.cores[c].blocks[bslot].smem.read_u32(a as u32)))
+                    .collect();
+                let w = &mut self.cores[c].warps[wi];
+                for (l, v) in vals {
+                    w.write(dst, l, v);
+                }
+            }
+            Op::St | Op::Red => {
+                let src = instr.srcs[0];
+                for &(l, a) in &addrs {
+                    let ctx = LaneCtx {
+                        tid: (warp_in_block * self.params.warp_size + l) as u32,
+                        ntid: launch.block,
+                        ctaid: block,
+                        nctaid: launch.grid,
+                    };
+                    let v = {
+                        let w = &self.cores[c].warps[wi];
+                        operand_value(&src, &ctx, &|r| w.read(r, l))
+                    };
+                    let smem = &mut self.cores[c].blocks[bslot].smem;
+                    if instr.op == Op::St {
+                        smem.write_u32(a as u32, v);
+                    } else if instr.ty == crate::isa::Ty::F32 {
+                        smem.red_add_f32(a as u32, f32::from_bits(v));
+                    } else {
+                        smem.red_add_u32(a as u32, v);
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+
+        // Timing: smem latency + bank-conflict serialization. The data
+        // never crosses the TSVs when the smem and the execution location
+        // coincide (§IV-C) — any placement traffic appears through the
+        // register moves done by `pre_issue`.
+        let a32: Vec<u32> = addrs.iter().map(|&(_, a)| a as u32).collect();
+        let conflicts = self.cores[c].blocks[bslot].smem.conflict_factor(&a32);
+        self.stats.smem_accesses += conflicts;
+        let done = self.now.max(ready) + self.params.smem_latency + (conflicts - 1);
+        match loc {
+            ExecLoc::Near => self.stats.instrs_near += 1,
+            ExecLoc::Far => self.stats.instrs_far += 1,
+        }
+
+        self.mem_sys.retire_dst(&mut self.cores[c].warps[wi], instr, loc, done);
+        self.cores[c].warps[wi].set_pc(pc + 1);
+    }
+
+    fn barrier(&mut self, c: usize, wi: usize, pc: usize) {
+        let block = self.cores[c].warps[wi].block;
+        self.cores[c].warps[wi].set_pc(pc + 1);
+        self.cores[c].warps[wi].state = WarpState::AtBarrier;
+        let bslot = self.cores[c].blocks.iter().position(|b| b.id == block).expect("block resident");
+        self.cores[c].blocks[bslot].at_barrier += 1;
+        if self.cores[c].blocks[bslot].at_barrier >= self.cores[c].blocks[bslot].warps_live {
+            self.cores[c].blocks[bslot].at_barrier = 0;
+            let release = self.now + 1;
+            for w in self.cores[c].warps.iter_mut() {
+                if w.block == block && w.state == WarpState::AtBarrier {
+                    w.state = WarpState::Ready;
+                    w.ready_at = release;
+                }
+            }
+        }
+    }
+
+    fn exit(&mut self, c: usize, wi: usize, mask: u64) {
+        let done = self.cores[c].warps[wi].exit_lanes(mask);
+        if !done {
+            return;
+        }
+        let block = self.cores[c].warps[wi].block;
+        let bslot = self.cores[c].blocks.iter().position(|b| b.id == block).expect("block resident");
+        {
+            let b = &mut self.cores[c].blocks[bslot];
+            b.warps_live -= 1;
+            if b.warps_live > 0 {
+                // A barrier may now be satisfiable with fewer live warps.
+                if b.at_barrier >= b.warps_live {
+                    b.at_barrier = 0;
+                    for w in self.cores[c].warps.iter_mut() {
+                        if w.block == block && w.state == WarpState::AtBarrier {
+                            w.state = WarpState::Ready;
+                            w.ready_at = self.now + 1;
+                        }
+                    }
+                }
+                return;
+            }
+        }
+        // Block finished: retire it and dispatch the next. Done warps
+        // stay in the vector (in-flight completions hold warp indices);
+        // the scheduler scans only the live lists.
+        self.cores[c].blocks.remove(bslot);
+        {
+            let core = &mut self.cores[c];
+            for sc in 0..core.sc_warps.len() {
+                let warps = &core.warps;
+                core.sc_warps[sc].retain(|&wi| warps[wi].block != block);
+            }
+        }
+        self.blocks_done += 1;
+        while self.try_dispatch_block(c) {}
+    }
+}

@@ -1,40 +1,39 @@
-//! The MPU machine: functional + timing simulation of the full system
-//! (§IV). This is where the hybrid pipeline, offload engine, register
-//! move engine, hybrid LSU, NBUs, TSVs, DRAM controllers, mesh and
-//! barriers come together.
+//! The MPU machine: the shared SIMT frontend wrapped around the
+//! near-bank memory system (§IV).
 //!
-//! Execution model: warp-level issue with scoreboard stalls. Each cycle
-//! every subcore may issue one instruction from a ready warp (GTO or RR).
-//! Issued instructions execute *functionally* immediately (so the memory
-//! image is exact and can be checked against the XLA golden model) while
+//! All SIMT mechanics (warp scheduling, barriers, scoreboard, functional
+//! execution) live in [`super::frontend`]; this module contributes the
+//! near-bank backend: instruction offloading and the register move
+//! engine over the TSV buses, the hybrid LSU (local / remote /
+//! LSU-Extension paths), per-NBU FR-FCFS + MASA DRAM controllers, the
+//! 2D mesh and the off-chip links — i.e. everything the paper changes
+//! relative to a compute-centric GPU.
+//!
+//! Execution model: warp-level issue with scoreboard stalls. Issued
+//! instructions execute *functionally* immediately (so the memory image
+//! is exact and can be checked against the XLA golden model) while
 //! their *timing* is tracked through latency reservations on the TSV
-//! buses, DRAM controllers (FR-FCFS + MASA row-buffers), the mesh, and
-//! per-register ready times. Idle stretches are fast-forwarded.
+//! buses, DRAM controllers, the mesh, and per-register ready times.
+//! Idle stretches are fast-forwarded.
 
-use super::exec::{alu_lane, operand_value, LaneCtx};
+use super::frontend::{
+    AccessCtx, Completion, FrontendParams, MemorySystem, OffloadModel, RegPlace, SimtFrontend,
+};
 use super::lsu::{coalesce, WarpAccess};
 use super::offload::{self, ExecLoc, MoveDir};
-use super::warp::{Warp, WarpState};
+use super::warp::Warp;
 use crate::compiler::CompiledKernel;
-use crate::config::{MachineConfig, PipelineMode, SchedPolicy};
+use crate::config::{MachineConfig, PipelineMode};
 use crate::dram::{DramRequest, MemController};
+use crate::isa::instr::Loc;
 use crate::isa::program::ParamValue;
-use crate::isa::{LaunchConfig, Op, Reg, RegClass, Space};
-use crate::mem::{AddrMap, SharedMem};
+use crate::isa::{Instr, LaunchConfig, Op, Reg, RegClass};
+use crate::mem::AddrMap;
 use crate::noc::{Mesh, OffchipLink, Tsv};
 use crate::sim::stats::TsvTraffic;
 use crate::sim::Stats;
-use anyhow::{bail, Result};
-use std::collections::{BinaryHeap, HashMap, VecDeque};
-
-/// A resident thread block.
-#[derive(Debug)]
-struct BlockState {
-    id: u32,
-    warps_live: usize,
-    at_barrier: usize,
-    smem: SharedMem,
-}
+use anyhow::Result;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Simulation events (things that happen at a future cycle on another
 /// component).
@@ -105,32 +104,19 @@ struct ChunkRoute {
     is_write: bool,
 }
 
-struct Core {
-    warps: Vec<Warp>,
-    blocks: Vec<BlockState>,
+/// One core's slice of the memory system: its TSV bus and the NBU DRAM
+/// controllers on its DRAM die.
+struct CoreLink {
     tsv: Tsv,
     controllers: Vec<MemController>,
-    /// GTO bookkeeping: last-issued warp per subcore.
-    last_issued: Vec<Option<usize>>,
-    /// RR bookkeeping.
-    rr_next: Vec<usize>,
-    pending_blocks: VecDeque<u32>,
-    /// Live (non-retired) warp indices per subcore — the scheduler scans
-    /// only these (EXPERIMENTS.md §Perf iteration 3); retired warps stay
-    /// in `warps` so in-flight token indices remain stable.
-    sc_warps: Vec<Vec<usize>>,
 }
 
-/// The simulated MPU machine.
-pub struct Machine {
-    pub cfg: MachineConfig,
-    pub map: AddrMap,
-    kernel: Option<CompiledKernel>,
-    launch: Option<LaunchConfig>,
-    params: Vec<ParamValue>,
-    mem: Vec<u8>,
-    alloc_top: u64,
-    cores: Vec<Core>,
+/// The near-bank memory system (the paper's §IV memory path), pluggable
+/// behind the shared SIMT frontend.
+pub struct NearBankMemory {
+    cfg: MachineConfig,
+    map: AddrMap,
+    links: Vec<CoreLink>,
     mesh: Mesh,
     offchip: OffchipLink,
     events: BinaryHeap<QueuedEvent>,
@@ -138,38 +124,20 @@ pub struct Machine {
     tokens: HashMap<u64, Token>,
     routes: HashMap<u64, ChunkRoute>,
     next_id: u64,
-    pub stats: Stats,
-    now: u64,
-    blocks_done: u32,
-    warp_size: usize,
+    completed: Vec<Completion>,
 }
 
-impl Machine {
-    pub fn new(cfg: &MachineConfig) -> Machine {
-        let map = AddrMap::new(cfg);
-        let cores = (0..cfg.total_cores())
-            .map(|_| Core {
-                warps: Vec::new(),
-                blocks: Vec::new(),
-                tsv: Tsv::new(cfg),
-                controllers: (0..cfg.nbus_per_core).map(|_| MemController::new(cfg)).collect(),
-                last_issued: vec![None; cfg.subcores_per_core],
-                rr_next: vec![0; cfg.subcores_per_core],
-                pending_blocks: VecDeque::new(),
-                sc_warps: vec![Vec::new(); cfg.subcores_per_core],
-            })
-            .collect();
-        // Functional memory: cap to something simulatable.
-        let mem_bytes = cfg.total_mem_bytes().min(256 << 20);
-        Machine {
+impl NearBankMemory {
+    pub fn new(cfg: &MachineConfig) -> NearBankMemory {
+        NearBankMemory {
             cfg: cfg.clone(),
-            map,
-            kernel: None,
-            launch: None,
-            params: Vec::new(),
-            mem: vec![0; mem_bytes],
-            alloc_top: 0,
-            cores,
+            map: AddrMap::new(cfg),
+            links: (0..cfg.total_cores())
+                .map(|_| CoreLink {
+                    tsv: Tsv::new(cfg),
+                    controllers: (0..cfg.nbus_per_core).map(|_| MemController::new(cfg)).collect(),
+                })
+                .collect(),
             mesh: Mesh::new(cfg),
             offchip: OffchipLink::new(cfg),
             events: BinaryHeap::new(),
@@ -177,228 +145,13 @@ impl Machine {
             tokens: HashMap::new(),
             routes: HashMap::new(),
             next_id: 1,
-            stats: Stats::default(),
-            now: 0,
-            blocks_done: 0,
-            warp_size: cfg.warp_size,
+            completed: Vec::new(),
         }
     }
 
-    // ---------------- device memory API ----------------
-
-    /// Bump-allocate device memory (256-B aligned).
-    pub fn alloc(&mut self, bytes: usize) -> u64 {
-        let base = (self.alloc_top + 255) & !255;
-        self.alloc_top = base + bytes as u64;
-        assert!(
-            (self.alloc_top as usize) <= self.mem.len(),
-            "device OOM: {} > {}",
-            self.alloc_top,
-            self.mem.len()
-        );
-        base
-    }
-
-    pub fn write_mem(&mut self, addr: u64, data: &[u8]) {
-        let a = addr as usize;
-        self.mem[a..a + data.len()].copy_from_slice(data);
-    }
-
-    pub fn read_mem(&self, addr: u64, len: usize) -> &[u8] {
-        &self.mem[addr as usize..addr as usize + len]
-    }
-
-    pub fn write_f32s(&mut self, addr: u64, data: &[f32]) {
-        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.write_mem(addr, &bytes);
-    }
-
-    pub fn read_f32s(&self, addr: u64, n: usize) -> Vec<f32> {
-        self.read_mem(addr, n * 4)
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect()
-    }
-
-    pub fn write_u32s(&mut self, addr: u64, data: &[u32]) {
-        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.write_mem(addr, &bytes);
-    }
-
-    pub fn read_u32s(&self, addr: u64, n: usize) -> Vec<u32> {
-        self.read_mem(addr, n * 4)
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-            .collect()
-    }
-
-    fn mem_read_u32(&self, addr: u64) -> u32 {
-        let a = addr as usize;
-        if a + 4 > self.mem.len() {
-            return 0;
-        }
-        u32::from_le_bytes(self.mem[a..a + 4].try_into().unwrap())
-    }
-
-    fn mem_write_u32(&mut self, addr: u64, v: u32) {
-        let a = addr as usize;
-        if a + 4 > self.mem.len() {
-            return;
-        }
-        self.mem[a..a + 4].copy_from_slice(&v.to_le_bytes());
-    }
-
-    // ---------------- launch ----------------
-
-    /// Launch a kernel. `home_addr(block)` is the runtime's dispatch
-    /// hint: the block is scheduled on the core owning that address
-    /// (§V-A: "MPU runtime dispatches the workload of thread blocks to
-    /// MPU cores"); `None` falls back to round-robin.
-    pub fn launch(
-        &mut self,
-        kernel: CompiledKernel,
-        launch: LaunchConfig,
-        params: &[ParamValue],
-        home_addr: impl Fn(u32) -> Option<u64>,
-    ) -> Result<()> {
-        if launch.block as usize > self.cfg.max_warps_per_subcore * self.cfg.subcores_per_core * self.warp_size {
-            bail!("block size {} exceeds core capacity", launch.block);
-        }
-        if kernel.params.len() != params.len() {
-            bail!("kernel `{}` expects {} params, got {}", kernel.name, kernel.params.len(), params.len());
-        }
-        self.kernel = Some(kernel);
-        self.launch = Some(launch);
-        self.params = params.to_vec();
-        let ncores = self.cfg.total_cores();
-        for b in 0..launch.grid {
-            let core = match home_addr(b) {
-                Some(a) => {
-                    let c = self.map.decode(a);
-                    c.proc * self.cfg.cores_per_proc + c.core
-                }
-                None => b as usize % ncores,
-            };
-            self.cores[core].pending_blocks.push_back(b);
-        }
-        for c in 0..ncores {
-            while self.try_dispatch_block(c) {}
-        }
-        Ok(())
-    }
-
-    /// Dispatch the next pending block on core `c` if resources allow.
-    fn try_dispatch_block(&mut self, c: usize) -> bool {
-        let launch = self.launch.unwrap();
-        let kernel = self.kernel.as_ref().unwrap();
-        let core = &mut self.cores[c];
-        if core.blocks.len() >= self.cfg.max_blocks_per_core {
-            return false;
-        }
-        let warps_per_block = launch.warps_per_block(self.warp_size);
-        let live_warps = core.warps.iter().filter(|w| w.state != WarpState::Done).count();
-        if live_warps + warps_per_block > self.cfg.max_warps_per_subcore * self.cfg.subcores_per_core {
-            return false;
-        }
-        let Some(b) = core.pending_blocks.pop_front() else {
-            return false;
-        };
-        let reg_counts = kernel.reg_counts;
-        let smem_bytes = (launch.smem_bytes as usize).min(self.cfg.smem_bytes);
-        core.blocks.push(BlockState {
-            id: b,
-            warps_live: warps_per_block,
-            at_barrier: 0,
-            smem: SharedMem::new(smem_bytes.max(4)),
-        });
-        for wi in 0..warps_per_block {
-            let lanes = (launch.block as usize - wi * self.warp_size).min(self.warp_size);
-            let subcore = wi % self.cfg.subcores_per_core;
-            let mut w = Warp::new(b, wi, lanes, subcore, reg_counts, self.warp_size);
-            w.ready_at = self.now + 1;
-            // Deliver parameters into both register files: the kernel
-            // launch path writes the (uniform) parameter values anyway,
-            // so seeding the near-bank copies costs nothing at runtime
-            // and saves a per-warp register move per parameter.
-            for (p, v) in kernel.params.iter().zip(&self.params) {
-                w.write_all(*p, v.bits());
-                w.track.write_fb(*p);
-                w.track.copy_to_nb(*p);
-            }
-            core.sc_warps[subcore].push(core.warps.len());
-            core.warps.push(w);
-        }
-        true
-    }
-
-    // ---------------- main loop ----------------
-
-    /// Run to completion; returns final stats.
-    pub fn run(&mut self) -> Result<Stats> {
-        let grid = self.launch.map(|l| l.grid).unwrap_or(0);
-        loop {
-            self.process_events();
-            self.advance_memory();
-            let issued = self.issue_all();
-
-            let work_left = self.blocks_done < grid
-                || !self.events.is_empty()
-                || self.cores.iter().any(|c| c.controllers.iter().any(|m| !m.idle()));
-            if !work_left {
-                break;
-            }
-            if self.now >= self.cfg.max_cycles {
-                bail!("simulation exceeded max_cycles={} (deadlock?)", self.cfg.max_cycles);
-            }
-            if issued {
-                self.now += 1;
-            } else {
-                let next = self.next_interesting();
-                match next {
-                    Some(t) if t > self.now => self.now = t,
-                    _ => self.now += 1,
-                }
-            }
-        }
-        self.stats.cycles = self.now;
-        Ok(self.stats.clone())
-    }
-
-    fn push_event(&mut self, at: u64, ev: Event) {
+    fn push_event(&mut self, now: u64, at: u64, ev: Event) {
         self.seq += 1;
-        self.events.push(QueuedEvent { at: at.max(self.now), seq: self.seq, ev });
-    }
-
-    fn process_events(&mut self) {
-        while let Some(top) = self.events.peek() {
-            if top.at > self.now {
-                break;
-            }
-            let q = self.events.pop().unwrap();
-            match q.ev {
-                Event::EnqueueDram { core, nbu, reqs } => {
-                    for r in reqs {
-                        self.cores[core].controllers[nbu].push(self.now, r);
-                    }
-                }
-                Event::TokenCredit { token } => self.credit_token(token, 1),
-            }
-        }
-    }
-
-    fn advance_memory(&mut self) {
-        let ncores = self.cores.len();
-        for c in 0..ncores {
-            for nbu in 0..self.cfg.nbus_per_core {
-                let mut st = std::mem::take(&mut self.stats);
-                self.cores[c].controllers[nbu].advance(self.now, &mut st);
-                self.stats = st;
-                let done = self.cores[c].controllers[nbu].drain_completed(self.now);
-                for id in done {
-                    self.chunk_completed(id);
-                }
-            }
-        }
+        self.events.push(QueuedEvent { at: at.max(now), seq: self.seq, ev });
     }
 
     /// A DRAM column access finished: route its data and credit its
@@ -406,12 +159,10 @@ impl Machine {
     ///
     /// Local loads never lift data over the TSVs in hybrid mode: the
     /// LSU-Extension stores the returned data straight into the
-    /// near-bank register file on the DRAM die (§IV-B2; "the reason to
-    /// load the DRAM data first to the near-bank register file is that
-    /// it can benefit near-bank execution due to the reduction of TSV
-    /// traffic"). Far-bank consumers trigger a lazy register move later.
-    /// PonB lifts every chunk.
-    fn chunk_completed(&mut self, id: u64) {
+    /// near-bank register file on the DRAM die (§IV-B2). Far-bank
+    /// consumers trigger a lazy register move later. PonB lifts every
+    /// chunk.
+    fn chunk_completed(&mut self, id: u64, now: u64, stats: &mut Stats) {
         let Some(route) = self.routes.remove(&id) else {
             return;
         };
@@ -423,42 +174,42 @@ impl Machine {
         if route.service_core == route.home_core {
             if ponb {
                 // Data lifts over the TSVs into the far-bank RF.
-                let up = self.cores[route.service_core].tsv.transfer(
-                    self.now,
+                let up = self.links[route.service_core].tsv.transfer(
+                    now,
                     io_bytes,
                     TsvTraffic::DramData,
-                    &mut self.stats,
+                    stats,
                 );
-                self.push_event(up, Event::TokenCredit { token: route.token });
+                self.push_event(now, up, Event::TokenCredit { token: route.token });
             } else {
-                self.credit_token(route.token, 1);
+                self.credit_token(route.token, 1, now, stats);
             }
             return;
         }
         // Remote chunk: lift at the servicing core, cross the mesh (and
         // the off-chip link if cross-cube), then in hybrid mode descend
         // into the home core's near-bank RF.
-        let up = self.cores[route.service_core].tsv.transfer(
-            self.now,
+        let up = self.links[route.service_core].tsv.transfer(
+            now,
             io_bytes,
             TsvTraffic::DramData,
-            &mut self.stats,
+            stats,
         );
         let (sp, hp) = (
             route.service_core / self.cfg.cores_per_proc,
             route.home_core / self.cfg.cores_per_proc,
         );
-        let mut t = self.mesh.send(up, route.service_core, route.home_core, io_bytes + 8, &mut self.stats);
+        let mut t = self.mesh.send(up, route.service_core, route.home_core, io_bytes + 8, stats);
         if sp != hp {
-            t = self.offchip.send(t, sp, hp, io_bytes + 8, &mut self.stats);
+            t = self.offchip.send(t, sp, hp, io_bytes + 8, stats);
         }
         if !ponb {
-            t = self.cores[route.home_core].tsv.transfer(t, io_bytes, TsvTraffic::RegMove, &mut self.stats);
+            t = self.links[route.home_core].tsv.transfer(t, io_bytes, TsvTraffic::RegMove, stats);
         }
-        self.push_event(t, Event::TokenCredit { token: route.token });
+        self.push_event(now, t, Event::TokenCredit { token: route.token });
     }
 
-    fn credit_token(&mut self, token: u64, n: usize) {
+    fn credit_token(&mut self, token: u64, n: usize, now: u64, stats: &mut Stats) {
         let finalize = {
             let Some(t) = self.tokens.get_mut(&token) else { return };
             t.remaining = t.remaining.saturating_sub(n);
@@ -468,240 +219,43 @@ impl Machine {
             return;
         }
         let t = self.tokens.remove(&token).unwrap();
-        let ready = match t.kind {
+        let (ready, place) = match t.kind {
             TokenKind::OffloadedLoad | TokenKind::PlainLoad => {
                 // LSU-Extension wrote the gathered data into the
                 // near-bank RF (remote chunks already descended the home
-                // TSVs in chunk_completed).
-                self.stats.rf_near_accesses += 1;
-                self.stats.lsu_ext_requests += 1;
-                self.now + 1
+                // TSVs in `chunk_completed`).
+                stats.rf_near_accesses += 1;
+                stats.lsu_ext_requests += 1;
+                (now + 1, RegPlace::Near)
             }
             TokenKind::PonbLoad => {
-                self.stats.rf_far_accesses += 1;
-                self.now + 1
+                stats.rf_far_accesses += 1;
+                (now + 1, RegPlace::Far)
             }
         };
-        let w = &mut self.cores[t.core].warps[t.warp];
-        w.reg_ready.insert(t.dst, ready);
-        match t.kind {
-            TokenKind::PonbLoad => w.track.write_fb(t.dst),
-            _ => w.track.write_nb(t.dst),
-        }
+        self.completed.push(Completion { core: t.core, warp: t.warp, dst: t.dst, ready, place });
     }
 
-    /// Earliest future cycle where anything can happen.
-    fn next_interesting(&self) -> Option<u64> {
-        let mut best: Option<u64> = self.events.peek().map(|e| e.at);
-        let mut fold = |t: Option<u64>| {
-            if let Some(t) = t {
-                best = Some(best.map_or(t, |b| b.min(t)));
-            }
-        };
-        for c in &self.cores {
-            for m in &c.controllers {
-                fold(m.next_event());
-            }
-            let kernel = self.kernel.as_ref().unwrap();
-            for w in c.sc_warps.iter().flatten().map(|&wi| &c.warps[wi]) {
-                if w.state != WarpState::Ready {
-                    continue;
-                }
-                let pc = w.pc();
-                if pc >= kernel.instrs.len() {
-                    continue;
-                }
-                let i = &kernel.instrs[pc];
-                let dep = w.instr_ready_at(i);
-                if dep == u64::MAX {
-                    continue; // unblocked by a token finalize later
-                }
-                fold(Some(dep.max(w.ready_at)));
-            }
-        }
-        best
-    }
-
-    /// Try to issue on every subcore of every core; returns whether any
-    /// instruction issued.
-    fn issue_all(&mut self) -> bool {
-        let mut issued_any = false;
-        let ncores = self.cores.len();
-        for c in 0..ncores {
-            for sc in 0..self.cfg.subcores_per_core {
-                for _ in 0..self.cfg.issue_width {
-                    if let Some(w) = self.pick_warp(c, sc) {
-                        self.issue(c, w);
-                        self.cores[c].last_issued[sc] = Some(w);
-                        issued_any = true;
-                    } else {
-                        break;
-                    }
-                }
-            }
-        }
-        issued_any
-    }
-
-    /// Scheduler: pick an issueable warp on (core, subcore).
-    fn pick_warp(&self, c: usize, sc: usize) -> Option<usize> {
-        let core = &self.cores[c];
-        let kernel = self.kernel.as_ref().unwrap();
-        let can_issue = |wi: usize| -> bool {
-            let w = &core.warps[wi];
-            if w.state != WarpState::Ready || w.subcore != sc || w.ready_at > self.now {
-                return false;
-            }
-            let pc = w.pc();
-            if pc >= kernel.instrs.len() {
-                return false;
-            }
-            let i = &kernel.instrs[pc];
-            w.instr_ready_at(i) <= self.now
-        };
-
-        let live = &core.sc_warps[sc];
-        match self.cfg.sched_policy {
-            SchedPolicy::Gto => {
-                // Greedy: stick with the last-issued warp.
-                if let Some(last) = core.last_issued[sc] {
-                    if last < core.warps.len() && can_issue(last) {
-                        return Some(last);
-                    }
-                }
-                // Then oldest (dispatch order).
-                live.iter().copied().find(|&wi| can_issue(wi))
-            }
-            SchedPolicy::RoundRobin => {
-                let n = live.len();
-                if n == 0 {
-                    return None;
-                }
-                let start = core.rr_next[sc] % n;
-                (0..n).map(|k| live[(start + k) % n]).find(|&wi| can_issue(wi))
-            }
-        }
-    }
-
-    // ---------------- instruction issue ----------------
-
-    fn issue(&mut self, c: usize, wi: usize) {
-        // Copy out only the per-pc scalars + one instruction — cloning
-        // the whole kernel here dominated the profile (EXPERIMENTS.md
-        // §Perf iteration 1).
-        let launch = self.launch.unwrap();
-        let pc = self.cores[c].warps[wi].pc();
-        let (instr, reconv_pc, hint) = {
-            let kernel = self.kernel.as_ref().unwrap();
-            (kernel.instrs[pc].clone(), kernel.reconv[pc], kernel.instr_loc(pc))
-        };
-
-        if self.cfg.sched_policy == SchedPolicy::RoundRobin {
-            let sc = self.cores[c].warps[wi].subcore;
-            let pos = self.cores[c].sc_warps[sc].iter().position(|&x| x == wi).unwrap_or(0);
-            self.cores[c].rr_next[sc] = pos + 1;
-        }
-
-        {
-            let w = &mut self.cores[c].warps[wi];
-            w.ready_at = self.now + 1;
-            w.last_issue = self.now;
-        }
-
-        // Guard evaluation.
-        let (exec_mask, active_mask) = {
-            let w = &self.cores[c].warps[wi];
-            let active = w.active_mask();
-            let mask = match instr.guard {
-                None => active,
-                Some((p, neg)) => {
-                    let mut m = 0u64;
-                    for lane in 0..w.lanes {
-                        if active >> lane & 1 == 1 {
-                            let v = w.read(p, lane) != 0;
-                            if v != neg {
-                                m |= 1 << lane;
-                            }
-                        }
-                    }
-                    m
-                }
-            };
-            (mask, active)
-        };
-
-        // Control flow first (always far-bank).
-        match instr.op {
-            Op::Bra => {
-                self.stats.instrs_far += 1;
-                let target = instr.target.unwrap_or(pc + 1);
-                let rpc = reconv_pc.unwrap_or(usize::MAX);
-                let w = &mut self.cores[c].warps[wi];
-                if instr.guard.is_none() {
-                    w.branch(active_mask, target, pc + 1, rpc);
-                } else {
-                    w.branch(exec_mask, target, pc + 1, rpc);
-                }
-                return;
-            }
-            Op::Bar => {
-                self.stats.instrs_far += 1;
-                self.stats.barriers += 1;
-                self.barrier(c, wi, pc);
-                return;
-            }
-            Op::Exit => {
-                self.stats.instrs_far += 1;
-                self.exit(c, wi, active_mask);
-                return;
-            }
-            _ => {}
-        }
-
-        if exec_mask == 0 {
-            self.stats.predicated_off += 1;
-            self.stats.instrs_far += 1;
-            let w = &mut self.cores[c].warps[wi];
-            w.set_pc(pc + 1);
-            return;
-        }
-
-        // Location decision (Fig. 3 step 1).
-        let loc = {
-            let w = &self.cores[c].warps[wi];
-            offload::instr_location(&instr, hint, &self.cfg, &w.track)
-        };
-
-        match (instr.op, instr.space) {
-            (Op::Ld | Op::St | Op::Red, Some(Space::Global)) => {
-                self.issue_global_mem(c, wi, pc, &instr, exec_mask);
-            }
-            (Op::Ld | Op::St | Op::Red, Some(Space::Shared)) => {
-                self.issue_shared_mem(c, wi, pc, &instr, exec_mask, loc, launch);
-            }
-            _ => {
-                self.issue_alu(c, wi, pc, &instr, exec_mask, loc);
-            }
-        }
-    }
-
-    /// Execute register moves required before running at `loc`; returns
-    /// the cycle all moved registers have arrived.
-    fn do_moves(&mut self, c: usize, wi: usize, required: &[(Reg, ExecLoc)]) -> u64 {
-        let moves = {
-            let w = &self.cores[c].warps[wi];
-            offload::plan_moves(required, &w.track)
-        };
-        let warp_bytes = (self.warp_size * 4) as u64;
-        let mut ready = self.now;
+    /// Execute register moves required before running at a location;
+    /// returns the cycle all moved registers have arrived.
+    fn do_moves(
+        &mut self,
+        c: usize,
+        w: &mut Warp,
+        required: &[(Reg, ExecLoc)],
+        now: u64,
+        stats: &mut Stats,
+    ) -> u64 {
+        let moves = offload::plan_moves(required, &w.track);
+        let warp_bytes = (self.cfg.warp_size * 4) as u64;
+        let mut ready = now;
         for (r, dir) in moves {
-            let dep = self.cores[c].warps[wi].reg_ready.get(r);
-            let start = self.now.max(dep);
-            let arr = self.cores[c].tsv.transfer(start, warp_bytes, TsvTraffic::RegMove, &mut self.stats);
-            self.stats.reg_moves += 1;
-            self.stats.rf_near_accesses += 1;
-            self.stats.rf_far_accesses += 1;
-            let w = &mut self.cores[c].warps[wi];
+            let dep = w.reg_ready.get(r);
+            let start = now.max(dep);
+            let arr = self.links[c].tsv.transfer(start, warp_bytes, TsvTraffic::RegMove, stats);
+            stats.reg_moves += 1;
+            stats.rf_near_accesses += 1;
+            stats.rf_far_accesses += 1;
             match dir {
                 MoveDir::ToNb => w.track.copy_to_nb(r),
                 MoveDir::ToFb => w.track.copy_to_fb(r),
@@ -710,7 +264,6 @@ impl Machine {
         }
         // Registers valid in neither file materialize where needed.
         for (r, want) in required {
-            let w = &mut self.cores[c].warps[wi];
             if !w.track.nb_valid(*r) && !w.track.fb_valid(*r) {
                 match want {
                     ExecLoc::Near => w.track.copy_to_nb(*r),
@@ -720,162 +273,21 @@ impl Machine {
         }
         ready
     }
+}
 
-    fn issue_alu(&mut self, c: usize, wi: usize, pc: usize, instr: &crate::isa::Instr, exec_mask: u64, loc: ExecLoc) {
-        let required = offload::required_reg_locs(instr, loc, &self.cfg);
-        let moves_done = self.do_moves(c, wi, &required);
-
-        // Functional execution.
-        let (block, warp_in_block, lanes) = {
-            let w = &self.cores[c].warps[wi];
-            (w.block, w.warp_in_block, w.lanes)
-        };
-        let launch = self.launch.unwrap();
-        let n_srcs = instr.srcs.len() as u64;
-        for lane in 0..lanes {
-            if exec_mask >> lane & 1 == 0 {
-                continue;
-            }
-            let ctx = LaneCtx {
-                tid: (warp_in_block * self.warp_size + lane) as u32,
-                ntid: launch.block,
-                ctaid: block,
-                nctaid: launch.grid,
-            };
-            let w = &self.cores[c].warps[wi];
-            let srcs: Vec<u32> = instr
-                .srcs
-                .iter()
-                .map(|o| operand_value(o, &ctx, &|r| w.read(r, lane)))
-                .collect();
-            let v = alu_lane(instr, &srcs);
-            let w = &mut self.cores[c].warps[wi];
-            if let Some(d) = instr.dst {
-                w.write(d, lane, v);
-            }
-        }
-
-        // Timing + accounting.
-        let lat = if instr.op.is_sfu() { self.cfg.sfu_latency } else { self.cfg.alu_latency };
-        let start = match loc {
-            ExecLoc::Near => {
-                self.stats.instrs_near += 1;
-                self.stats.rf_near_accesses += n_srcs + 1;
-                // Instruction packet down the TSVs.
-                let arr = self.cores[c].tsv.transfer(
-                    self.now,
-                    self.cfg.offload_packet_bytes,
-                    TsvTraffic::InstrOffload,
-                    &mut self.stats,
-                );
-                arr.max(moves_done)
-            }
-            ExecLoc::Far => {
-                self.stats.instrs_far += 1;
-                self.stats.rf_far_accesses += n_srcs + 1;
-                self.now.max(moves_done)
-            }
-        };
-        self.stats.opc_accesses += n_srcs;
-        self.stats.alu_lane_ops += exec_mask.count_ones() as u64;
-        let done = start + self.cfg.opc_latency + lat;
-
-        let w = &mut self.cores[c].warps[wi];
-        if let Some((d, where_)) = offload::dst_location(instr, loc, &self.cfg) {
-            w.reg_ready.insert(d, done);
-            match where_ {
-                ExecLoc::Near => w.track.write_nb(d),
-                ExecLoc::Far => w.track.write_fb(d),
-            }
-        }
-        w.set_pc(pc + 1);
-    }
-
-    fn lane_addrs(&self, c: usize, wi: usize, instr: &crate::isa::Instr, exec_mask: u64) -> Vec<(usize, u64)> {
-        let w = &self.cores[c].warps[wi];
-        let m = instr.mem.expect("memory instruction");
-        (0..w.lanes)
-            .filter(|l| exec_mask >> l & 1 == 1)
-            .map(|l| {
-                let base = w.read(m.base, l);
-                (l, (base as i64 + m.offset as i64) as u64)
-            })
-            .collect()
-    }
-
-    fn issue_global_mem(&mut self, c: usize, wi: usize, pc: usize, instr: &crate::isa::Instr, exec_mask: u64) {
-        self.stats.global_mem_instrs += 1;
-        let addrs = self.lane_addrs(c, wi, instr, exec_mask);
-        let ponb = self.cfg.pipeline_mode == PipelineMode::PonB;
-
-        // Functional execution first (program order per warp).
-        match instr.op {
-            Op::Ld => {
-                let dst = instr.dst.unwrap();
-                let vals: Vec<(usize, u32)> =
-                    addrs.iter().map(|&(l, a)| (l, self.mem_read_u32(a))).collect();
-                let w = &mut self.cores[c].warps[wi];
-                for (l, v) in vals {
-                    w.write(dst, l, v);
-                }
-            }
-            Op::St => {
-                let src = instr.srcs[0];
-                let launch = self.launch.unwrap();
-                let (block, warp_in_block) = {
-                    let w = &self.cores[c].warps[wi];
-                    (w.block, w.warp_in_block)
-                };
-                for &(l, a) in &addrs {
-                    let ctx = LaneCtx {
-                        tid: (warp_in_block * self.warp_size + l) as u32,
-                        ntid: launch.block,
-                        ctaid: block,
-                        nctaid: launch.grid,
-                    };
-                    let w = &self.cores[c].warps[wi];
-                    let v = operand_value(&src, &ctx, &|r| w.read(r, l));
-                    self.mem_write_u32(a, v);
-                }
-            }
-            Op::Red => {
-                // Atomic add (global): sequentialized by simulation.
-                let src = instr.srcs[0];
-                for &(l, a) in &addrs {
-                    let w = &self.cores[c].warps[wi];
-                    let v = match src {
-                        crate::isa::Operand::Reg(r) => w.read(r, l),
-                        o => operand_value(
-                            &o,
-                            &LaneCtx { tid: 0, ntid: 0, ctaid: 0, nctaid: 0 },
-                            &|r| w.read(r, l),
-                        ),
-                    };
-                    let old = self.mem_read_u32(a);
-                    let new = match instr.ty {
-                        crate::isa::Ty::F32 => (f32::from_bits(old) + f32::from_bits(v)).to_bits(),
-                        _ => old.wrapping_add(v),
-                    };
-                    self.mem_write_u32(a, new);
-                }
-            }
-            _ => unreachable!(),
-        }
-
-        // ---- timing ----
+impl MemorySystem for NearBankMemory {
+    fn issue_access(&mut self, ctx: &AccessCtx, w: &mut Warp, stats: &mut Stats) {
+        let (c, wi, instr, now) = (ctx.core, ctx.warp_index, ctx.instr, ctx.now);
         let io_bytes = (self.cfg.bank_io_bits / 8) as u64;
+        let ponb = self.cfg.pipeline_mode == PipelineMode::PonB;
         let wa: WarpAccess = coalesce(
-            &addrs.iter().map(|&(_, a)| a).collect::<Vec<_>>(),
+            &ctx.addrs.iter().map(|&(_, a)| a).collect::<Vec<_>>(),
             &self.map,
             io_bytes,
             self.cfg.cores_per_proc,
         );
         let is_write = matches!(instr.op, Op::St | Op::Red);
-        let full_warp = {
-            let w = &self.cores[c].warps[wi];
-            exec_mask.count_ones() as usize == w.lanes && w.lanes == self.warp_size
-        };
-        let offloadable = !ponb && wa.offloadable(full_warp, c);
+        let offloadable = !ponb && wa.offloadable(ctx.full_warp, c);
 
         // Address register must be far-bank (LSU); store data stays in
         // the near-bank RF in hybrid mode (value registers are N by
@@ -892,19 +304,19 @@ impl Machine {
                 }
             }
         }
-        let moves_done = self.do_moves(c, wi, &required);
+        let moves_done = self.do_moves(c, w, &required, now, stats);
 
         if offloadable {
-            self.stats.instrs_near += 1;
+            stats.instrs_near += 1;
         } else {
-            self.stats.instrs_far += 1;
+            stats.instrs_far += 1;
         }
-        self.stats.rf_far_accesses += 1; // address operand read
+        stats.rf_far_accesses += 1; // address operand read
         if is_write {
             if ponb {
-                self.stats.rf_far_accesses += 1;
+                stats.rf_far_accesses += 1;
             } else {
-                self.stats.rf_near_accesses += 1;
+                stats.rf_near_accesses += 1;
             }
         }
 
@@ -926,7 +338,7 @@ impl Machine {
                 Token { remaining: wa.chunks.len(), core: c, warp: wi, dst: instr.dst.unwrap(), kind },
             );
             // Block the destination until the token finalizes.
-            self.cores[c].warps[wi].reg_ready.insert(instr.dst.unwrap(), u64::MAX);
+            w.reg_ready.insert(instr.dst.unwrap(), u64::MAX);
             id
         };
 
@@ -941,7 +353,7 @@ impl Machine {
                 cmd_bytes += local.len() as u64 * io_bytes;
                 class = TsvTraffic::DramData;
             }
-            let arr = self.cores[c].tsv.transfer(self.now.max(moves_done), cmd_bytes, class, &mut self.stats);
+            let arr = self.links[c].tsv.transfer(now.max(moves_done), cmd_bytes, class, stats);
             let mut per_nbu: HashMap<usize, Vec<DramRequest>> = HashMap::new();
             for &ci in &local {
                 let ch = wa.chunks[ci];
@@ -957,7 +369,7 @@ impl Machine {
                 });
             }
             for (nbu, reqs) in per_nbu {
-                self.push_event(arr, Event::EnqueueDram { core: c, nbu, reqs });
+                self.push_event(now, arr, Event::EnqueueDram { core: c, nbu, reqs });
             }
         }
 
@@ -974,22 +386,22 @@ impl Machine {
             for (rc, cis) in per_core {
                 let data_bytes = if is_write { io_bytes } else { 0 };
                 let req_bytes = cis.len() as u64 * (8 + data_bytes);
-                let mut t = self.now.max(moves_done);
+                let mut t = now.max(moves_done);
                 if is_write && !ponb {
                     // Store data: NB RF → base logic die.
-                    t = self.cores[c].tsv.transfer(t, cis.len() as u64 * io_bytes, TsvTraffic::DramData, &mut self.stats);
+                    t = self.links[c].tsv.transfer(t, cis.len() as u64 * io_bytes, TsvTraffic::DramData, stats);
                 }
-                t = self.mesh.send(t, c, rc, req_bytes, &mut self.stats);
+                t = self.mesh.send(t, c, rc, req_bytes, stats);
                 let rproc = rc / self.cfg.cores_per_proc;
                 if rproc != my_proc {
-                    t = self.offchip.send(t, my_proc, rproc, req_bytes, &mut self.stats);
+                    t = self.offchip.send(t, my_proc, rproc, req_bytes, stats);
                 }
                 // At the remote core: TSV command (+ data) down, then DRAM.
-                let arr2 = self.cores[rc].tsv.transfer(
+                let arr2 = self.links[rc].tsv.transfer(
                     t,
                     cis.len() as u64 * (8 + data_bytes),
                     if is_write { TsvTraffic::DramData } else { TsvTraffic::Command },
-                    &mut self.stats,
+                    stats,
                 );
                 let mut per_nbu: HashMap<usize, Vec<DramRequest>> = HashMap::new();
                 for ci in cis {
@@ -1006,87 +418,114 @@ impl Machine {
                     });
                 }
                 for (nbu, reqs) in per_nbu {
-                    self.push_event(arr2, Event::EnqueueDram { core: rc, nbu, reqs });
+                    self.push_event(now, arr2, Event::EnqueueDram { core: rc, nbu, reqs });
                 }
             }
         }
-
-        self.cores[c].warps[wi].set_pc(pc + 1);
     }
 
-    fn issue_shared_mem(
-        &mut self,
-        c: usize,
-        wi: usize,
-        pc: usize,
-        instr: &crate::isa::Instr,
-        exec_mask: u64,
-        loc: ExecLoc,
-        launch: LaunchConfig,
-    ) {
-        self.stats.shared_mem_instrs += 1;
-        let required = offload::required_reg_locs(instr, loc, &self.cfg);
-        let moves_done = self.do_moves(c, wi, &required);
-        let addrs = self.lane_addrs(c, wi, instr, exec_mask);
-        let (block, warp_in_block) = {
-            let w = &self.cores[c].warps[wi];
-            (w.block, w.warp_in_block)
-        };
-        let bslot = self.cores[c].blocks.iter().position(|b| b.id == block).expect("block resident");
-
-        // Functional.
-        match instr.op {
-            Op::Ld => {
-                let dst = instr.dst.unwrap();
-                let vals: Vec<(usize, u32)> = addrs
-                    .iter()
-                    .map(|&(l, a)| (l, self.cores[c].blocks[bslot].smem.read_u32(a as u32)))
-                    .collect();
-                let w = &mut self.cores[c].warps[wi];
-                for (l, v) in vals {
-                    w.write(dst, l, v);
-                }
+    fn advance(&mut self, now: u64, stats: &mut Stats) {
+        // Deliver due events first (same order as the pre-refactor
+        // machine: events, then controller scheduling).
+        while let Some(top) = self.events.peek() {
+            if top.at > now {
+                break;
             }
-            Op::St | Op::Red => {
-                let src = instr.srcs[0];
-                for &(l, a) in &addrs {
-                    let ctx = LaneCtx {
-                        tid: (warp_in_block * self.warp_size + l) as u32,
-                        ntid: launch.block,
-                        ctaid: block,
-                        nctaid: launch.grid,
-                    };
-                    let v = {
-                        let w = &self.cores[c].warps[wi];
-                        operand_value(&src, &ctx, &|r| w.read(r, l))
-                    };
-                    let smem = &mut self.cores[c].blocks[bslot].smem;
-                    if instr.op == Op::St {
-                        smem.write_u32(a as u32, v);
-                    } else if instr.ty == crate::isa::Ty::F32 {
-                        smem.red_add_f32(a as u32, f32::from_bits(v));
-                    } else {
-                        smem.red_add_u32(a as u32, v);
+            let q = self.events.pop().unwrap();
+            match q.ev {
+                Event::EnqueueDram { core, nbu, reqs } => {
+                    for r in reqs {
+                        self.links[core].controllers[nbu].push(now, r);
                     }
                 }
+                Event::TokenCredit { token } => self.credit_token(token, 1, now, stats),
             }
-            _ => unreachable!(),
         }
+        for c in 0..self.links.len() {
+            for nbu in 0..self.cfg.nbus_per_core {
+                self.links[c].controllers[nbu].advance(now, stats);
+                let done = self.links[c].controllers[nbu].drain_completed(now);
+                for id in done {
+                    self.chunk_completed(id, now, stats);
+                }
+            }
+        }
+    }
 
-        // Timing: smem latency + bank-conflict serialization. The data
-        // never crosses the TSVs when the smem and the execution location
-        // coincide (that's the whole §IV-C argument) — the ablation's
-        // traffic appears through the register moves above.
-        let a32: Vec<u32> = addrs.iter().map(|&(_, a)| a as u32).collect();
-        let conflicts = self.cores[c].blocks[bslot].smem.conflict_factor(&a32);
-        self.stats.smem_accesses += conflicts;
-        let done = self.now.max(moves_done) + self.cfg.smem_latency + (conflicts - 1);
+    fn drain_completed(&mut self, _now: u64, out: &mut Vec<Completion>) {
+        out.append(&mut self.completed);
+    }
+
+    fn next_event(&self) -> Option<u64> {
+        let mut best: Option<u64> = self.events.peek().map(|e| e.at);
+        for l in &self.links {
+            for m in &l.controllers {
+                if let Some(t) = m.next_event() {
+                    best = Some(best.map_or(t, |b| b.min(t)));
+                }
+            }
+        }
+        best
+    }
+
+    fn idle(&self) -> bool {
+        self.events.is_empty()
+            && self.completed.is_empty()
+            && self.links.iter().all(|l| l.controllers.iter().all(|m| m.idle()))
+    }
+
+    fn home_core(&self, hint: Option<u64>) -> Option<usize> {
+        hint.map(|a| {
+            let c = self.map.decode(a);
+            c.proc * self.cfg.cores_per_proc + c.core
+        })
+    }
+
+    fn seed_param(&self, w: &mut Warp, r: Reg) {
+        // The launch path writes the (uniform) parameter values into
+        // both register files: seeding the near-bank copies costs
+        // nothing at runtime and saves a per-warp register move per
+        // parameter.
+        w.track.write_fb(r);
+        w.track.copy_to_nb(r);
+    }
+}
+
+impl OffloadModel for NearBankMemory {
+    fn pre_issue(
+        &mut self,
+        core: usize,
+        w: &mut Warp,
+        instr: &Instr,
+        hint: Loc,
+        now: u64,
+        stats: &mut Stats,
+    ) -> (ExecLoc, u64) {
+        // Fig. 3 step 1: location decision; step 2: source-register
+        // locations; step 3: register movement.
+        let loc = offload::instr_location(instr, hint, &self.cfg, &w.track);
+        let required = offload::required_reg_locs(instr, loc, &self.cfg);
+        let ready = self.do_moves(core, w, &required, now, stats);
+        (loc, ready)
+    }
+
+    fn alu_start(&mut self, core: usize, loc: ExecLoc, ready: u64, now: u64, stats: &mut Stats) -> u64 {
         match loc {
-            ExecLoc::Near => self.stats.instrs_near += 1,
-            ExecLoc::Far => self.stats.instrs_far += 1,
+            ExecLoc::Near => {
+                // Instruction packet down the TSVs.
+                let arr = self.links[core].tsv.transfer(
+                    now,
+                    self.cfg.offload_packet_bytes,
+                    TsvTraffic::InstrOffload,
+                    stats,
+                );
+                arr.max(ready)
+            }
+            ExecLoc::Far => now.max(ready),
         }
+    }
 
-        let w = &mut self.cores[c].warps[wi];
+    fn retire_dst(&mut self, w: &mut Warp, instr: &Instr, loc: ExecLoc, done: u64) {
         if let Some((d, where_)) = offload::dst_location(instr, loc, &self.cfg) {
             w.reg_ready.insert(d, done);
             match where_ {
@@ -1094,64 +533,89 @@ impl Machine {
                 ExecLoc::Far => w.track.write_fb(d),
             }
         }
-        w.set_pc(pc + 1);
+    }
+}
+
+/// The simulated MPU machine: shared SIMT frontend + near-bank backend.
+pub struct Machine {
+    pub cfg: MachineConfig,
+    fe: SimtFrontend<NearBankMemory>,
+}
+
+impl FrontendParams {
+    /// Frontend parameters of an MPU machine configuration.
+    pub fn for_mpu(cfg: &MachineConfig) -> FrontendParams {
+        FrontendParams {
+            cores: cfg.total_cores(),
+            subcores_per_core: cfg.subcores_per_core,
+            warp_size: cfg.warp_size,
+            max_warps_per_subcore: cfg.max_warps_per_subcore,
+            max_blocks_per_core: cfg.max_blocks_per_core,
+            issue_width: cfg.issue_width,
+            smem_bytes: cfg.smem_bytes,
+            sched_policy: cfg.sched_policy,
+            alu_latency: cfg.alu_latency,
+            sfu_latency: cfg.sfu_latency,
+            opc_latency: cfg.opc_latency,
+            smem_latency: cfg.smem_latency,
+            // Functional memory: cap to something simulatable.
+            mem_bytes: cfg.total_mem_bytes().min(256 << 20),
+            max_cycles: cfg.max_cycles,
+        }
+    }
+}
+
+impl Machine {
+    pub fn new(cfg: &MachineConfig) -> Machine {
+        Machine {
+            cfg: cfg.clone(),
+            fe: SimtFrontend::new(FrontendParams::for_mpu(cfg), NearBankMemory::new(cfg)),
+        }
     }
 
-    fn barrier(&mut self, c: usize, wi: usize, pc: usize) {
-        let block = self.cores[c].warps[wi].block;
-        self.cores[c].warps[wi].set_pc(pc + 1);
-        self.cores[c].warps[wi].state = WarpState::AtBarrier;
-        let bslot = self.cores[c].blocks.iter().position(|b| b.id == block).expect("block resident");
-        self.cores[c].blocks[bslot].at_barrier += 1;
-        if self.cores[c].blocks[bslot].at_barrier >= self.cores[c].blocks[bslot].warps_live {
-            self.cores[c].blocks[bslot].at_barrier = 0;
-            let release = self.now + 1;
-            for w in self.cores[c].warps.iter_mut() {
-                if w.block == block && w.state == WarpState::AtBarrier {
-                    w.state = WarpState::Ready;
-                    w.ready_at = release;
-                }
-            }
-        }
+    // Device-memory API (delegated to the frontend).
+    pub fn alloc(&mut self, bytes: usize) -> u64 {
+        self.fe.alloc(bytes)
+    }
+    pub fn write_mem(&mut self, addr: u64, data: &[u8]) {
+        self.fe.write_mem(addr, data)
+    }
+    pub fn read_mem(&self, addr: u64, len: usize) -> &[u8] {
+        self.fe.read_mem(addr, len)
+    }
+    pub fn write_f32s(&mut self, addr: u64, data: &[f32]) {
+        self.fe.write_f32s(addr, data)
+    }
+    pub fn read_f32s(&self, addr: u64, n: usize) -> Vec<f32> {
+        self.fe.read_f32s(addr, n)
+    }
+    pub fn write_u32s(&mut self, addr: u64, data: &[u32]) {
+        self.fe.write_u32s(addr, data)
+    }
+    pub fn read_u32s(&self, addr: u64, n: usize) -> Vec<u32> {
+        self.fe.read_u32s(addr, n)
     }
 
-    fn exit(&mut self, c: usize, wi: usize, mask: u64) {
-        let done = self.cores[c].warps[wi].exit_lanes(mask);
-        if !done {
-            return;
-        }
-        let block = self.cores[c].warps[wi].block;
-        let bslot = self.cores[c].blocks.iter().position(|b| b.id == block).expect("block resident");
-        {
-            let b = &mut self.cores[c].blocks[bslot];
-            b.warps_live -= 1;
-            if b.warps_live > 0 {
-                // A barrier may now be satisfiable with fewer live warps.
-                if b.at_barrier >= b.warps_live {
-                    b.at_barrier = 0;
-                    for w in self.cores[c].warps.iter_mut() {
-                        if w.block == block && w.state == WarpState::AtBarrier {
-                            w.state = WarpState::Ready;
-                            w.ready_at = self.now + 1;
-                        }
-                    }
-                }
-                return;
-            }
-        }
-        // Block finished: retire it and dispatch the next. Done warps
-        // stay in the vector (in-flight tokens hold warp indices); the
-        // scheduler scans only the live lists.
-        self.cores[c].blocks.remove(bslot);
-        {
-            let core = &mut self.cores[c];
-            for sc in 0..core.sc_warps.len() {
-                let warps = &core.warps;
-                core.sc_warps[sc].retain(|&wi| warps[wi].block != block);
-            }
-        }
-        self.blocks_done += 1;
-        while self.try_dispatch_block(c) {}
+    /// Launch a kernel; `home_addr(block)` is the §V-A data-local
+    /// dispatch hint.
+    pub fn launch(
+        &mut self,
+        kernel: CompiledKernel,
+        launch: LaunchConfig,
+        params: &[ParamValue],
+        home_addr: impl Fn(u32) -> Option<u64>,
+    ) -> Result<()> {
+        self.fe.launch(kernel, launch, params, home_addr)
+    }
+
+    /// Run to completion; returns final stats.
+    pub fn run(&mut self) -> Result<Stats> {
+        self.fe.run()
+    }
+
+    /// Statistics accumulated so far.
+    pub fn stats(&self) -> &Stats {
+        &self.fe.stats
     }
 }
 
@@ -1280,6 +744,20 @@ mod tests {
             hybrid.cycles,
             ponb.cycles
         );
+    }
+
+    #[test]
+    fn no_offload_variant_runs_all_far_bank() {
+        // The PIM-style variant: near-bank banks, offload forced off.
+        let cfg = MachineConfig::scaled().no_offload();
+        let (got, stats, want) = run_axpy(&cfg, 2048);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6);
+        }
+        // ALU work never offloads; only the hardware-mandated near-bank
+        // paths (coalesced-access LSU offload, near smem) remain.
+        assert!(stats.near_fraction() < 0.5, "near fraction {}", stats.near_fraction());
+        assert!(stats.reg_moves > 0, "far-bank compute must pull loaded values up");
     }
 
     #[test]

@@ -3,18 +3,26 @@
 //! * [`exec`] — functional per-lane execution of the mini-PTX ISA;
 //! * [`warp`] — warp state: registers, SIMT stack, scoreboard, and the
 //!   §IV-B1 register track table;
+//! * [`frontend`] — the *shared* SIMT frontend (block dispatch, warp
+//!   scheduling, barriers, functional issue, fast-forward event loop),
+//!   generic over a pluggable [`frontend::MemorySystem`] +
+//!   [`frontend::OffloadModel`] backend — every machine in the repo
+//!   (MPU, GPU, roofline variants) is this frontend plus a backend;
 //! * [`offload`] — the Fig.-3 instruction-offload decision and register
 //!   move planning;
 //! * [`lsu`] — LSU front half: range check, coalescing, and the Fig.-4
 //!   near-bank-offload qualification;
-//! * [`machine`] — the assembled machine: cores, subcores, NBUs, TSVs,
-//!   DRAM controllers, mesh, barriers, and the timing main loop.
+//! * [`machine`] — the near-bank backend (TSVs, FR-FCFS + MASA DRAM
+//!   controllers, mesh, track table, register move engine) and the
+//!   assembled MPU [`Machine`].
 
 pub mod exec;
+pub mod frontend;
 pub mod warp;
 pub mod offload;
 pub mod lsu;
 pub mod machine;
 
-pub use machine::Machine;
+pub use frontend::{FrontendParams, MemorySystem, OffloadModel, SimtFrontend};
+pub use machine::{Machine, NearBankMemory};
 pub use offload::ExecLoc;

@@ -193,6 +193,105 @@ mod tests {
     }
 
     #[test]
+    fn masa_hit_miss_conflict_timing_across_buffer_counts() {
+        // The §IV-C MASA semantics for every supported buffer count:
+        // a hit costs tCL after the IO frees; an empty slot costs
+        // tRCD + tCL; a conflict costs tRP + tRCD + tCL (plus any tRAS
+        // residue). The per-access timing must not depend on how many
+        // *other* slots exist.
+        let tm = t();
+        for bufs in [1usize, 2, 4] {
+            let mut b = Bank::new(bufs, &tm);
+            // Cold activation in slot 0.
+            let (r0, k0) = b.access(0, 10, 0, &tm);
+            assert_eq!(k0, AccessKind::Empty, "bufs={bufs}");
+            assert_eq!(r0, tm.t_rcd + tm.t_cl, "bufs={bufs}");
+            // Hit in slot 0, long after the IO freed.
+            let (r1, k1) = b.access(1000, 10, 0, &tm);
+            assert_eq!(k1, AccessKind::Hit, "bufs={bufs}");
+            assert_eq!(r1, 1000 + tm.t_cl, "bufs={bufs}");
+            // Conflict in slot 0 (tRAS long expired).
+            let (r2, k2) = b.access(2000, 11, 0, &tm);
+            assert_eq!(k2, AccessKind::Miss, "bufs={bufs}");
+            assert_eq!(r2, 2000 + tm.t_rp + tm.t_rcd + tm.t_cl, "bufs={bufs}");
+        }
+    }
+
+    #[test]
+    fn masa_would_hit_and_open_row_track_slots_independently() {
+        let tm = t();
+        for bufs in [2usize, 4] {
+            let mut b = Bank::new(bufs, &tm);
+            for slot in 0..bufs {
+                assert_eq!(b.open_row(slot), None, "bufs={bufs} slot={slot}");
+                assert!(!b.would_hit(slot + 100, slot));
+            }
+            // Open row `7 + slot` in each slot (all before tREFI so no
+            // refresh closes them mid-test).
+            for slot in 0..bufs {
+                b.access(100 * (slot as u64 + 1), 7 + slot, slot, &tm);
+            }
+            for slot in 0..bufs {
+                assert_eq!(b.open_row(slot), Some(7 + slot), "bufs={bufs} slot={slot}");
+                assert!(b.would_hit(7 + slot, slot), "bufs={bufs} slot={slot}");
+                assert!(!b.would_hit(7 + slot, (slot + 1) % bufs), "row is open in its own slot only");
+            }
+            // A conflict in slot 0 must leave the other slots' rows open.
+            b.access(1000, 99, 0, &tm);
+            assert_eq!(b.open_row(0), Some(99), "bufs={bufs}");
+            for slot in 1..bufs {
+                assert_eq!(b.open_row(slot), Some(7 + slot), "bufs={bufs} slot={slot}");
+            }
+        }
+    }
+
+    #[test]
+    fn masa_two_buffers_fix_two_row_pingpong_but_not_three() {
+        let tm = t();
+        // Two rows alternating over 2 buffers (each to its own slot):
+        // everything after the activations hits.
+        let mut b2 = Bank::new(2, &tm);
+        b2.access(0, 0, 0, &tm);
+        b2.access(100, 1, 1, &tm);
+        let mut t_hit = 1000;
+        for i in 0..6 {
+            let (_, k) = b2.access(t_hit, i % 2, i % 2, &tm);
+            assert_eq!(k, AccessKind::Hit, "iteration {i}");
+            t_hit += 100; // stay well below tREFI
+        }
+        // Three rows sharing one slot of the same bank keep conflicting
+        // even though a second (idle) buffer exists.
+        let mut b = Bank::new(2, &tm);
+        b.access(0, 0, 0, &tm);
+        let mut t_miss = 200;
+        let mut misses = 0;
+        for i in 1..7 {
+            let (_, k) = b.access(t_miss, i % 3, 0, &tm);
+            if k == AccessKind::Miss {
+                misses += 1;
+            }
+            t_miss += 100;
+        }
+        assert_eq!(misses, 6, "slot-mapped rows cannot borrow the idle buffer");
+    }
+
+    #[test]
+    fn masa_io_serialization_is_shared_across_slots() {
+        // MASA multiplies row buffers, not column IO: back-to-back hits
+        // to two different slots still pace at tCCD on the shared bus.
+        let tm = t();
+        let mut b = Bank::new(4, &tm);
+        b.access(0, 0, 0, &tm);
+        b.access(500, 1, 1, &tm);
+        let io = b.io_free_at();
+        let (r0, k0) = b.access(1000, 0, 0, &tm);
+        let (r1, k1) = b.access(1000, 1, 1, &tm);
+        assert!(io <= 1000);
+        assert_eq!((k0, k1), (AccessKind::Hit, AccessKind::Hit));
+        assert_eq!(r1, r0 + tm.t_ccd, "column commands share one IO bus");
+    }
+
+    #[test]
     fn refresh_closes_rows_and_stalls() {
         let tm = t();
         let mut b = Bank::new(2, &tm);

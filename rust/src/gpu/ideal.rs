@@ -1,0 +1,226 @@
+//! The ideal-bandwidth roofline machine.
+//!
+//! Same shared SIMT frontend, with a memory system that has *infinite
+//! bandwidth*: every global access completes after a fixed pipe latency
+//! regardless of how many requests are in flight. No contention, no
+//! row-buffer behaviour, no interconnect serialization.
+//!
+//! This is the "how far from the wall are we" column of every speedup
+//! plot: the gap between any real machine (MPU or GPU) and this variant
+//! is exactly the cost of its memory system, because everything else —
+//! scheduler, scoreboard, ALU latencies, functional semantics — is the
+//! same frontend code.
+
+use crate::compiler::CompiledKernel;
+use crate::config::IdealConfig;
+use crate::core::frontend::{
+    AccessCtx, Completion, FrontendParams, MemorySystem, OffloadModel, SimtFrontend,
+};
+use crate::core::warp::Warp;
+use crate::core::ExecLoc;
+use crate::isa::instr::Loc;
+use crate::isa::program::ParamValue;
+use crate::isa::{Instr, LaunchConfig, Op, Reg};
+use crate::sim::Stats;
+use anyhow::Result;
+
+/// Fixed-latency, infinite-bandwidth memory system.
+pub struct IdealMemory {
+    cfg: IdealConfig,
+}
+
+impl IdealMemory {
+    pub fn new(cfg: &IdealConfig) -> IdealMemory {
+        IdealMemory { cfg: cfg.clone() }
+    }
+}
+
+impl MemorySystem for IdealMemory {
+    fn issue_access(&mut self, ctx: &AccessCtx, w: &mut Warp, stats: &mut Stats) {
+        stats.instrs_far += 1;
+        // Account the same 32-B sectors as the GPU baseline so achieved
+        // bandwidth (`dram_gbps`) stays comparable — the pipe just never
+        // saturates.
+        let mut sectors: Vec<u64> = ctx.addrs.iter().map(|&(_, a)| a & !31).collect();
+        sectors.sort_unstable();
+        sectors.dedup();
+        let is_write = matches!(ctx.instr.op, Op::St | Op::Red);
+        for _ in &sectors {
+            stats.dram_bytes += 32;
+            if is_write {
+                stats.dram_writes += 1;
+            } else {
+                stats.dram_reads += 1;
+            }
+        }
+        stats.rf_far_accesses += 2;
+        if let Some(d) = ctx.instr.dst {
+            w.reg_ready.insert(d, ctx.now + self.cfg.mem_latency + 1);
+        }
+    }
+
+    fn advance(&mut self, _now: u64, _stats: &mut Stats) {}
+
+    fn drain_completed(&mut self, _now: u64, _out: &mut Vec<Completion>) {}
+
+    fn next_event(&self) -> Option<u64> {
+        None
+    }
+
+    fn idle(&self) -> bool {
+        true
+    }
+
+    fn seed_param(&self, w: &mut Warp, r: Reg) {
+        w.track.write_fb(r);
+    }
+}
+
+impl OffloadModel for IdealMemory {
+    fn pre_issue(
+        &mut self,
+        _core: usize,
+        _w: &mut Warp,
+        _instr: &Instr,
+        _hint: Loc,
+        now: u64,
+        _stats: &mut Stats,
+    ) -> (ExecLoc, u64) {
+        (ExecLoc::Far, now)
+    }
+
+    fn alu_start(&mut self, _core: usize, _loc: ExecLoc, ready: u64, now: u64, _stats: &mut Stats) -> u64 {
+        now.max(ready)
+    }
+
+    fn retire_dst(&mut self, w: &mut Warp, instr: &Instr, _loc: ExecLoc, done: u64) {
+        if let Some(d) = instr.dst {
+            w.reg_ready.insert(d, done);
+        }
+    }
+}
+
+/// The roofline machine: shared SIMT frontend + ideal memory.
+pub struct IdealMachine {
+    pub cfg: IdealConfig,
+    fe: SimtFrontend<IdealMemory>,
+}
+
+impl FrontendParams {
+    /// Frontend parameters of the ideal-bandwidth roofline machine.
+    pub fn for_ideal(cfg: &IdealConfig) -> FrontendParams {
+        FrontendParams {
+            cores: cfg.sms,
+            subcores_per_core: cfg.subcores_per_sm,
+            warp_size: cfg.warp_size,
+            max_warps_per_subcore: cfg.max_warps_per_subcore,
+            max_blocks_per_core: cfg.max_blocks_per_sm,
+            issue_width: 1,
+            smem_bytes: cfg.smem_bytes,
+            sched_policy: cfg.sched_policy,
+            alu_latency: cfg.alu_latency,
+            sfu_latency: cfg.sfu_latency,
+            opc_latency: 2,
+            smem_latency: cfg.smem_latency,
+            mem_bytes: 256 << 20,
+            max_cycles: cfg.max_cycles,
+        }
+    }
+}
+
+impl IdealMachine {
+    pub fn new(cfg: &IdealConfig) -> IdealMachine {
+        IdealMachine {
+            cfg: cfg.clone(),
+            fe: SimtFrontend::new(FrontendParams::for_ideal(cfg), IdealMemory::new(cfg)),
+        }
+    }
+
+    pub fn alloc(&mut self, bytes: usize) -> u64 {
+        self.fe.alloc(bytes)
+    }
+    pub fn write_f32s(&mut self, addr: u64, data: &[f32]) {
+        self.fe.write_f32s(addr, data)
+    }
+    pub fn read_f32s(&self, addr: u64, n: usize) -> Vec<f32> {
+        self.fe.read_f32s(addr, n)
+    }
+    pub fn write_u32s(&mut self, addr: u64, data: &[u32]) {
+        self.fe.write_u32s(addr, data)
+    }
+    pub fn read_u32s(&self, addr: u64, n: usize) -> Vec<u32> {
+        self.fe.read_u32s(addr, n)
+    }
+
+    pub fn launch(
+        &mut self,
+        kernel: CompiledKernel,
+        launch: LaunchConfig,
+        params: &[ParamValue],
+    ) -> Result<()> {
+        self.fe.launch(kernel, launch, params, |_| None)
+    }
+
+    pub fn run(&mut self) -> Result<Stats> {
+        self.fe.run()
+    }
+
+    /// Statistics accumulated so far.
+    pub fn stats(&self) -> &Stats {
+        &self.fe.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::config::{GpuConfig, MachineConfig};
+    use crate::coordinator::sweep::compile_kernel;
+    use crate::workloads::{prepare, Scale, Workload};
+
+    #[test]
+    fn ideal_machine_runs_axpy_correctly_and_fast() {
+        let mpu_cfg = MachineConfig::scaled();
+        let icfg = IdealConfig::matched(&mpu_cfg);
+        let mut m = IdealMachine::new(&icfg);
+        let p = prepare(Workload::Axpy, Scale::Tiny, &mut m).unwrap();
+        let k = compile(&p.kernel).unwrap();
+        m.launch(k, p.launch, &p.params).unwrap();
+        let stats = m.run().unwrap();
+        let out = m.read_f32s(p.out_addr, p.out_len);
+        for (i, (a, b)) in out.iter().zip(&p.golden).enumerate() {
+            assert!((a - b).abs() <= p.tol, "at {i}: {a} vs {b}");
+        }
+        assert!(stats.cycles > 0);
+        assert!(stats.dram_bytes > 0);
+    }
+
+    #[test]
+    fn ideal_is_a_roofline_for_the_gpu() {
+        // With the same frontend geometry and a latency no worse than an
+        // L2 hit, the infinite-bandwidth machine bounds the GPU baseline
+        // from below on a streaming kernel.
+        let mpu_cfg = MachineConfig::scaled();
+        let gcfg = GpuConfig::matched(&mpu_cfg);
+        let icfg = IdealConfig::matched(&mpu_cfg);
+        let kernel = compile_kernel(Workload::Axpy, true).unwrap();
+
+        let mut g = crate::gpu::GpuMachine::new(&gcfg);
+        let pg = prepare(Workload::Axpy, Scale::Tiny, &mut g).unwrap();
+        g.launch(kernel.clone(), pg.launch, &pg.params).unwrap();
+        let gs = g.run().unwrap();
+
+        let mut i = IdealMachine::new(&icfg);
+        let pi = prepare(Workload::Axpy, Scale::Tiny, &mut i).unwrap();
+        i.launch(kernel, pi.launch, &pi.params).unwrap();
+        let is = i.run().unwrap();
+
+        assert!(
+            is.cycles <= gs.cycles,
+            "ideal {} must not be slower than GPU {}",
+            is.cycles,
+            gs.cycles
+        );
+    }
+}

@@ -1,133 +1,169 @@
 //! The GPU baseline machine.
 //!
-//! Keeps the MPU model's SIMT semantics (same compiled kernels, same
-//! functional execution, same warp scheduler) and swaps the memory
-//! system: a chip-wide HBM bandwidth pipe (V100 per-SM share) with
-//! ~400-cycle latency behind a flat-hit-rate L2. No TSVs, no offloading,
-//! no track table — every value lives in the SM register file.
+//! The *same* shared SIMT frontend as the MPU (same compiled kernels,
+//! same functional execution, same warp scheduler — see
+//! [`crate::core::frontend`]) with the memory system swapped: a
+//! chip-wide HBM bandwidth pipe (V100 per-SM share) with ~400-cycle
+//! latency behind a flat-hit-rate L2. No TSVs, no offloading, no track
+//! table — every value lives in the SM register file.
 //!
 //! This is exactly the comparison the paper makes: identical programs,
 //! compute-centric vs near-bank memory systems.
 
 use crate::compiler::CompiledKernel;
-use crate::config::{GpuConfig, SchedPolicy};
-use crate::core::exec::{alu_lane, operand_value, LaneCtx};
-use crate::core::warp::{Warp, WarpState};
+use crate::config::GpuConfig;
+use crate::core::frontend::{
+    AccessCtx, Completion, FrontendParams, MemorySystem, OffloadModel, SimtFrontend,
+};
+use crate::core::warp::Warp;
+use crate::core::ExecLoc;
+use crate::isa::instr::Loc;
 use crate::isa::program::ParamValue;
-use crate::isa::{LaunchConfig, Op, Space};
-use crate::mem::SharedMem;
+use crate::isa::{Instr, LaunchConfig, Op, Reg};
 use crate::sim::{BandwidthBus, Prng, Stats};
-use anyhow::{bail, Result};
-use std::collections::VecDeque;
+use anyhow::Result;
 
-#[derive(Debug)]
-struct BlockState {
-    id: u32,
-    warps_live: usize,
-    at_barrier: usize,
-    smem: SharedMem,
-}
-
-struct Sm {
-    warps: Vec<Warp>,
-    blocks: Vec<BlockState>,
-    last_issued: Vec<Option<usize>>,
-    rr_next: Vec<usize>,
-    pending_blocks: VecDeque<u32>,
-    /// Live warp indices per subcore (scheduler scans only these).
-    sc_warps: Vec<Vec<usize>>,
-}
-
-/// The simulated GPU.
-pub struct GpuMachine {
-    pub cfg: GpuConfig,
-    kernel: Option<CompiledKernel>,
-    launch: Option<LaunchConfig>,
-    params: Vec<ParamValue>,
-    mem: Vec<u8>,
-    alloc_top: u64,
-    sms: Vec<Sm>,
+/// The compute-centric memory system: coalesced 32-B sectors through a
+/// flat-hit-rate L2 in front of a single chip-wide HBM bandwidth pipe.
+pub struct HbmMemory {
+    cfg: GpuConfig,
     hbm: BandwidthBus,
     l2_rng: Prng,
-    pub stats: Stats,
-    now: u64,
-    blocks_done: u32,
-    warp_size: usize,
+}
+
+impl HbmMemory {
+    pub fn new(cfg: &GpuConfig) -> HbmMemory {
+        HbmMemory {
+            cfg: cfg.clone(),
+            hbm: BandwidthBus::new(cfg.hbm_bytes_per_cycle, cfg.mem_latency),
+            l2_rng: Prng::new(0xD1CE),
+        }
+    }
+}
+
+impl MemorySystem for HbmMemory {
+    fn issue_access(&mut self, ctx: &AccessCtx, w: &mut Warp, stats: &mut Stats) {
+        stats.instrs_far += 1;
+        // Coalesce into 32-B sectors; L2 hits skip the HBM pipe.
+        let mut sectors: Vec<u64> = ctx.addrs.iter().map(|&(_, a)| a & !31).collect();
+        sectors.sort_unstable();
+        sectors.dedup();
+        let is_write = matches!(ctx.instr.op, Op::St | Op::Red);
+        let mut done = ctx.now;
+        for _ in &sectors {
+            let hit = self.l2_rng.chance(self.cfg.l2_hit_rate);
+            let t = if hit && !is_write {
+                stats.l2_bytes += 32;
+                ctx.now + self.cfg.l2_latency
+            } else {
+                stats.dram_bytes += 32;
+                if is_write {
+                    stats.dram_writes += 1;
+                } else {
+                    stats.dram_reads += 1;
+                }
+                self.hbm.reserve(ctx.now, 32)
+            };
+            done = done.max(t);
+        }
+        stats.rf_far_accesses += 2;
+        if let Some(d) = ctx.instr.dst {
+            w.reg_ready.insert(d, done + 1);
+        }
+    }
+
+    fn advance(&mut self, _now: u64, _stats: &mut Stats) {}
+
+    fn drain_completed(&mut self, _now: u64, _out: &mut Vec<Completion>) {}
+
+    fn next_event(&self) -> Option<u64> {
+        None
+    }
+
+    fn idle(&self) -> bool {
+        true
+    }
+
+    fn seed_param(&self, w: &mut Warp, r: Reg) {
+        w.track.write_fb(r);
+    }
+}
+
+impl OffloadModel for HbmMemory {
+    fn pre_issue(
+        &mut self,
+        _core: usize,
+        _w: &mut Warp,
+        _instr: &Instr,
+        _hint: Loc,
+        now: u64,
+        _stats: &mut Stats,
+    ) -> (ExecLoc, u64) {
+        // No near-bank units: everything executes on the SM.
+        (ExecLoc::Far, now)
+    }
+
+    fn alu_start(&mut self, _core: usize, _loc: ExecLoc, ready: u64, now: u64, _stats: &mut Stats) -> u64 {
+        now.max(ready)
+    }
+
+    fn retire_dst(&mut self, w: &mut Warp, instr: &Instr, _loc: ExecLoc, done: u64) {
+        if let Some(d) = instr.dst {
+            w.reg_ready.insert(d, done);
+        }
+    }
+}
+
+/// The simulated GPU: shared SIMT frontend + HBM-pipe backend.
+pub struct GpuMachine {
+    pub cfg: GpuConfig,
+    fe: SimtFrontend<HbmMemory>,
+}
+
+impl FrontendParams {
+    /// Frontend parameters of a GPU baseline configuration.
+    pub fn for_gpu(cfg: &GpuConfig) -> FrontendParams {
+        FrontendParams {
+            cores: cfg.sms,
+            subcores_per_core: cfg.subcores_per_sm,
+            warp_size: cfg.warp_size,
+            max_warps_per_subcore: cfg.max_warps_per_subcore,
+            max_blocks_per_core: cfg.max_blocks_per_sm,
+            issue_width: 1,
+            smem_bytes: cfg.smem_bytes,
+            sched_policy: cfg.sched_policy,
+            alu_latency: cfg.alu_latency,
+            sfu_latency: cfg.sfu_latency,
+            opc_latency: 2,
+            smem_latency: cfg.smem_latency,
+            mem_bytes: 256 << 20,
+            max_cycles: cfg.max_cycles,
+        }
+    }
 }
 
 impl GpuMachine {
     pub fn new(cfg: &GpuConfig) -> GpuMachine {
         GpuMachine {
             cfg: cfg.clone(),
-            kernel: None,
-            launch: None,
-            params: Vec::new(),
-            mem: vec![0; 256 << 20],
-            alloc_top: 0,
-            sms: (0..cfg.sms)
-                .map(|_| Sm {
-                    warps: Vec::new(),
-                    blocks: Vec::new(),
-                    last_issued: vec![None; cfg.subcores_per_sm],
-                    rr_next: vec![0; cfg.subcores_per_sm],
-                    pending_blocks: VecDeque::new(),
-                    sc_warps: vec![Vec::new(); cfg.subcores_per_sm],
-                })
-                .collect(),
-            hbm: BandwidthBus::new(cfg.hbm_bytes_per_cycle, cfg.mem_latency),
-            l2_rng: Prng::new(0xD1CE),
-            stats: Stats::default(),
-            now: 0,
-            blocks_done: 0,
-            warp_size: cfg.warp_size,
+            fe: SimtFrontend::new(FrontendParams::for_gpu(cfg), HbmMemory::new(cfg)),
         }
     }
 
     pub fn alloc(&mut self, bytes: usize) -> u64 {
-        let base = (self.alloc_top + 255) & !255;
-        self.alloc_top = base + bytes as u64;
-        assert!((self.alloc_top as usize) <= self.mem.len(), "GPU device OOM");
-        base
+        self.fe.alloc(bytes)
     }
-
     pub fn write_f32s(&mut self, addr: u64, data: &[f32]) {
-        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.mem[addr as usize..addr as usize + bytes.len()].copy_from_slice(&bytes);
+        self.fe.write_f32s(addr, data)
     }
-
-    pub fn write_u32s(&mut self, addr: u64, data: &[u32]) {
-        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.mem[addr as usize..addr as usize + bytes.len()].copy_from_slice(&bytes);
-    }
-
     pub fn read_f32s(&self, addr: u64, n: usize) -> Vec<f32> {
-        self.mem[addr as usize..addr as usize + 4 * n]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect()
+        self.fe.read_f32s(addr, n)
     }
-
+    pub fn write_u32s(&mut self, addr: u64, data: &[u32]) {
+        self.fe.write_u32s(addr, data)
+    }
     pub fn read_u32s(&self, addr: u64, n: usize) -> Vec<u32> {
-        self.mem[addr as usize..addr as usize + 4 * n]
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-            .collect()
-    }
-
-    fn mem_read_u32(&self, addr: u64) -> u32 {
-        let a = addr as usize;
-        if a + 4 > self.mem.len() {
-            return 0;
-        }
-        u32::from_le_bytes(self.mem[a..a + 4].try_into().unwrap())
-    }
-
-    fn mem_write_u32(&mut self, addr: u64, v: u32) {
-        let a = addr as usize;
-        if a + 4 > self.mem.len() {
-            return;
-        }
-        self.mem[a..a + 4].copy_from_slice(&v.to_le_bytes());
+        self.fe.read_u32s(addr, n)
     }
 
     pub fn launch(
@@ -136,465 +172,26 @@ impl GpuMachine {
         launch: LaunchConfig,
         params: &[ParamValue],
     ) -> Result<()> {
-        if kernel.params.len() != params.len() {
-            bail!("param count mismatch");
-        }
-        self.kernel = Some(kernel);
-        self.launch = Some(launch);
-        self.params = params.to_vec();
-        let n = self.sms.len();
-        for b in 0..launch.grid {
-            self.sms[b as usize % n].pending_blocks.push_back(b);
-        }
-        for s in 0..n {
-            while self.try_dispatch(s) {}
-        }
-        Ok(())
-    }
-
-    fn try_dispatch(&mut self, s: usize) -> bool {
-        let launch = self.launch.unwrap();
-        let kernel = self.kernel.as_ref().unwrap();
-        let sm = &mut self.sms[s];
-        if sm.blocks.len() >= self.cfg.max_blocks_per_sm {
-            return false;
-        }
-        let wpb = launch.warps_per_block(self.warp_size);
-        let live = sm.warps.iter().filter(|w| w.state != WarpState::Done).count();
-        if live + wpb > self.cfg.max_warps_per_subcore * self.cfg.subcores_per_sm {
-            return false;
-        }
-        let Some(b) = sm.pending_blocks.pop_front() else { return false };
-        sm.blocks.push(BlockState {
-            id: b,
-            warps_live: wpb,
-            at_barrier: 0,
-            smem: SharedMem::new((launch.smem_bytes as usize).min(self.cfg.smem_bytes).max(4)),
-        });
-        for wi in 0..wpb {
-            let lanes = (launch.block as usize - wi * self.warp_size).min(self.warp_size);
-            let sc = wi % self.cfg.subcores_per_sm;
-            let mut w = Warp::new(b, wi, lanes, sc, kernel.reg_counts, self.warp_size);
-            w.ready_at = self.now + 1;
-            for (p, v) in kernel.params.iter().zip(&self.params) {
-                w.write_all(*p, v.bits());
-                w.track.write_fb(*p);
-            }
-            sm.sc_warps[sc].push(sm.warps.len());
-            sm.warps.push(w);
-        }
-        true
+        self.fe.launch(kernel, launch, params, |_| None)
     }
 
     pub fn run(&mut self) -> Result<Stats> {
-        let grid = self.launch.map(|l| l.grid).unwrap_or(0);
-        loop {
-            let issued = self.issue_all();
-            if self.blocks_done >= grid {
-                break;
-            }
-            if self.now >= self.cfg.max_cycles {
-                bail!("GPU simulation exceeded max_cycles (deadlock?)");
-            }
-            if issued {
-                self.now += 1;
-            } else {
-                match self.next_interesting() {
-                    Some(t) if t > self.now => self.now = t,
-                    _ => self.now += 1,
-                }
-            }
-        }
-        self.stats.cycles = self.now;
-        Ok(self.stats.clone())
+        self.fe.run()
     }
 
-    fn next_interesting(&self) -> Option<u64> {
-        let kernel = self.kernel.as_ref().unwrap();
-        let mut best: Option<u64> = None;
-        for sm in &self.sms {
-            for w in sm.sc_warps.iter().flatten().map(|&wi| &sm.warps[wi]) {
-                if w.state != WarpState::Ready {
-                    continue;
-                }
-                let pc = w.pc();
-                if pc >= kernel.instrs.len() {
-                    continue;
-                }
-                let i = &kernel.instrs[pc];
-                let dep = w.instr_ready_at(i);
-                if dep == u64::MAX {
-                    continue;
-                }
-                let t = dep.max(w.ready_at);
-                best = Some(best.map_or(t, |b: u64| b.min(t)));
-            }
-        }
-        best
-    }
-
-    fn issue_all(&mut self) -> bool {
-        let mut any = false;
-        for s in 0..self.sms.len() {
-            for sc in 0..self.cfg.subcores_per_sm {
-                if let Some(wi) = self.pick_warp(s, sc) {
-                    self.issue(s, wi);
-                    self.sms[s].last_issued[sc] = Some(wi);
-                    any = true;
-                }
-            }
-        }
-        any
-    }
-
-    fn pick_warp(&self, s: usize, sc: usize) -> Option<usize> {
-        let sm = &self.sms[s];
-        let kernel = self.kernel.as_ref().unwrap();
-        let can = |wi: usize| {
-            let w = &sm.warps[wi];
-            if w.state != WarpState::Ready || w.subcore != sc || w.ready_at > self.now {
-                return false;
-            }
-            let pc = w.pc();
-            if pc >= kernel.instrs.len() {
-                return false;
-            }
-            let i = &kernel.instrs[pc];
-            w.instr_ready_at(i) <= self.now
-        };
-        let live = &sm.sc_warps[sc];
-        match self.cfg.sched_policy {
-            SchedPolicy::Gto => {
-                if let Some(last) = sm.last_issued[sc] {
-                    if last < sm.warps.len() && can(last) {
-                        return Some(last);
-                    }
-                }
-                live.iter().copied().find(|&wi| can(wi))
-            }
-            SchedPolicy::RoundRobin => {
-                let n = live.len();
-                if n == 0 {
-                    return None;
-                }
-                let start = sm.rr_next[sc] % n;
-                (0..n).map(|k| live[(start + k) % n]).find(|&wi| can(wi))
-            }
-        }
-    }
-
-    fn issue(&mut self, s: usize, wi: usize) {
-        let launch = self.launch.unwrap();
-        let pc = self.sms[s].warps[wi].pc();
-        let (instr, reconv_pc) = {
-            let kernel = self.kernel.as_ref().unwrap();
-            (kernel.instrs[pc].clone(), kernel.reconv[pc])
-        };
-        if self.cfg.sched_policy == SchedPolicy::RoundRobin {
-            let sc = self.sms[s].warps[wi].subcore;
-            let pos = self.sms[s].sc_warps[sc].iter().position(|&x| x == wi).unwrap_or(0);
-            self.sms[s].rr_next[sc] = pos + 1;
-        }
-        {
-            let w = &mut self.sms[s].warps[wi];
-            w.ready_at = self.now + 1;
-            w.last_issue = self.now;
-        }
-
-        let (exec_mask, active_mask) = {
-            let w = &self.sms[s].warps[wi];
-            let active = w.active_mask();
-            let m = match instr.guard {
-                None => active,
-                Some((p, neg)) => {
-                    let mut m = 0u64;
-                    for lane in 0..w.lanes {
-                        if active >> lane & 1 == 1 && (w.read(p, lane) != 0) != neg {
-                            m |= 1 << lane;
-                        }
-                    }
-                    m
-                }
-            };
-            (m, active)
-        };
-
-        self.stats.instrs_far += 1;
-        match instr.op {
-            Op::Bra => {
-                let target = instr.target.unwrap_or(pc + 1);
-                let rpc = reconv_pc.unwrap_or(usize::MAX);
-                let w = &mut self.sms[s].warps[wi];
-                let taken = if instr.guard.is_none() { active_mask } else { exec_mask };
-                w.branch(taken, target, pc + 1, rpc);
-                return;
-            }
-            Op::Bar => {
-                self.stats.barriers += 1;
-                self.barrier(s, wi, pc);
-                return;
-            }
-            Op::Exit => {
-                self.exit(s, wi, active_mask);
-                return;
-            }
-            _ => {}
-        }
-        if exec_mask == 0 {
-            self.stats.predicated_off += 1;
-            self.sms[s].warps[wi].set_pc(pc + 1);
-            return;
-        }
-
-        match (instr.op, instr.space) {
-            (Op::Ld | Op::St | Op::Red, Some(Space::Global)) => {
-                self.issue_global(s, wi, pc, &instr, exec_mask, launch)
-            }
-            (Op::Ld | Op::St | Op::Red, Some(Space::Shared)) => {
-                self.issue_shared(s, wi, pc, &instr, exec_mask, launch)
-            }
-            _ => self.issue_alu(s, wi, pc, &instr, exec_mask, launch),
-        }
-    }
-
-    fn issue_alu(&mut self, s: usize, wi: usize, pc: usize, instr: &crate::isa::Instr, exec_mask: u64, launch: LaunchConfig) {
-        let (block, wib, lanes) = {
-            let w = &self.sms[s].warps[wi];
-            (w.block, w.warp_in_block, w.lanes)
-        };
-        for lane in 0..lanes {
-            if exec_mask >> lane & 1 == 0 {
-                continue;
-            }
-            let ctx = LaneCtx {
-                tid: (wib * self.warp_size + lane) as u32,
-                ntid: launch.block,
-                ctaid: block,
-                nctaid: launch.grid,
-            };
-            let w = &self.sms[s].warps[wi];
-            let srcs: Vec<u32> = instr.srcs.iter().map(|o| operand_value(o, &ctx, &|r| w.read(r, lane))).collect();
-            let v = alu_lane(instr, &srcs);
-            if let Some(d) = instr.dst {
-                self.sms[s].warps[wi].write(d, lane, v);
-            }
-        }
-        let lat = if instr.op.is_sfu() { self.cfg.sfu_latency } else { self.cfg.alu_latency };
-        self.stats.alu_lane_ops += exec_mask.count_ones() as u64;
-        self.stats.rf_far_accesses += instr.srcs.len() as u64 + 1;
-        self.stats.opc_accesses += instr.srcs.len() as u64;
-        let w = &mut self.sms[s].warps[wi];
-        if let Some(d) = instr.dst {
-            w.reg_ready.insert(d, self.now + 2 + lat);
-        }
-        w.set_pc(pc + 1);
-    }
-
-    fn issue_global(&mut self, s: usize, wi: usize, pc: usize, instr: &crate::isa::Instr, exec_mask: u64, launch: LaunchConfig) {
-        self.stats.global_mem_instrs += 1;
-        let m = instr.mem.unwrap();
-        let (block, wib, lanes) = {
-            let w = &self.sms[s].warps[wi];
-            (w.block, w.warp_in_block, w.lanes)
-        };
-        let addrs: Vec<(usize, u64)> = (0..lanes)
-            .filter(|l| exec_mask >> l & 1 == 1)
-            .map(|l| {
-                let w = &self.sms[s].warps[wi];
-                (l, (w.read(m.base, l) as i64 + m.offset as i64) as u64)
-            })
-            .collect();
-
-        // Functional.
-        match instr.op {
-            Op::Ld => {
-                let dst = instr.dst.unwrap();
-                let vals: Vec<(usize, u32)> = addrs.iter().map(|&(l, a)| (l, self.mem_read_u32(a))).collect();
-                for (l, v) in vals {
-                    self.sms[s].warps[wi].write(dst, l, v);
-                }
-            }
-            Op::St | Op::Red => {
-                let src = instr.srcs[0];
-                for &(l, a) in &addrs {
-                    let ctx = LaneCtx {
-                        tid: (wib * self.warp_size + l) as u32,
-                        ntid: launch.block,
-                        ctaid: block,
-                        nctaid: launch.grid,
-                    };
-                    let v = {
-                        let w = &self.sms[s].warps[wi];
-                        operand_value(&src, &ctx, &|r| w.read(r, l))
-                    };
-                    if instr.op == Op::St {
-                        self.mem_write_u32(a, v);
-                    } else {
-                        let old = self.mem_read_u32(a);
-                        let new = if instr.ty == crate::isa::Ty::F32 {
-                            (f32::from_bits(old) + f32::from_bits(v)).to_bits()
-                        } else {
-                            old.wrapping_add(v)
-                        };
-                        self.mem_write_u32(a, new);
-                    }
-                }
-            }
-            _ => unreachable!(),
-        }
-
-        // Timing: coalesce into 32-B sectors; L2 hits skip the HBM pipe.
-        let mut sectors: Vec<u64> = addrs.iter().map(|&(_, a)| a & !31).collect();
-        sectors.sort_unstable();
-        sectors.dedup();
-        let is_write = matches!(instr.op, Op::St | Op::Red);
-        let mut done = self.now;
-        for _ in &sectors {
-            let hit = self.l2_rng.chance(self.cfg.l2_hit_rate);
-            let t = if hit && !is_write {
-                self.stats.l2_bytes += 32;
-                self.now + self.cfg.l2_latency
-            } else {
-                self.stats.dram_bytes += 32;
-                if is_write {
-                    self.stats.dram_writes += 1;
-                } else {
-                    self.stats.dram_reads += 1;
-                }
-                self.hbm.reserve(self.now, 32)
-            };
-            done = done.max(t);
-        }
-        self.stats.rf_far_accesses += 2;
-        let w = &mut self.sms[s].warps[wi];
-        if let Some(d) = instr.dst {
-            w.reg_ready.insert(d, done + 1);
-        }
-        w.set_pc(pc + 1);
-    }
-
-    fn issue_shared(&mut self, s: usize, wi: usize, pc: usize, instr: &crate::isa::Instr, exec_mask: u64, launch: LaunchConfig) {
-        self.stats.shared_mem_instrs += 1;
-        let m = instr.mem.unwrap();
-        let (block, wib, lanes) = {
-            let w = &self.sms[s].warps[wi];
-            (w.block, w.warp_in_block, w.lanes)
-        };
-        let bslot = self.sms[s].blocks.iter().position(|b| b.id == block).expect("block resident");
-        let addrs: Vec<(usize, u64)> = (0..lanes)
-            .filter(|l| exec_mask >> l & 1 == 1)
-            .map(|l| {
-                let w = &self.sms[s].warps[wi];
-                (l, (w.read(m.base, l) as i64 + m.offset as i64) as u64)
-            })
-            .collect();
-        match instr.op {
-            Op::Ld => {
-                let dst = instr.dst.unwrap();
-                let vals: Vec<(usize, u32)> = addrs
-                    .iter()
-                    .map(|&(l, a)| (l, self.sms[s].blocks[bslot].smem.read_u32(a as u32)))
-                    .collect();
-                for (l, v) in vals {
-                    self.sms[s].warps[wi].write(dst, l, v);
-                }
-            }
-            Op::St | Op::Red => {
-                let src = instr.srcs[0];
-                for &(l, a) in &addrs {
-                    let ctx = LaneCtx {
-                        tid: (wib * self.warp_size + l) as u32,
-                        ntid: launch.block,
-                        ctaid: block,
-                        nctaid: launch.grid,
-                    };
-                    let v = {
-                        let w = &self.sms[s].warps[wi];
-                        operand_value(&src, &ctx, &|r| w.read(r, l))
-                    };
-                    let smem = &mut self.sms[s].blocks[bslot].smem;
-                    if instr.op == Op::St {
-                        smem.write_u32(a as u32, v);
-                    } else if instr.ty == crate::isa::Ty::F32 {
-                        smem.red_add_f32(a as u32, f32::from_bits(v));
-                    } else {
-                        smem.red_add_u32(a as u32, v);
-                    }
-                }
-            }
-            _ => unreachable!(),
-        }
-        let a32: Vec<u32> = addrs.iter().map(|&(_, a)| a as u32).collect();
-        let conflicts = self.sms[s].blocks[bslot].smem.conflict_factor(&a32);
-        self.stats.smem_accesses += conflicts;
-        let done = self.now + self.cfg.smem_latency + (conflicts - 1);
-        let w = &mut self.sms[s].warps[wi];
-        if let Some(d) = instr.dst {
-            w.reg_ready.insert(d, done);
-        }
-        w.set_pc(pc + 1);
-    }
-
-    fn barrier(&mut self, s: usize, wi: usize, pc: usize) {
-        let block = self.sms[s].warps[wi].block;
-        self.sms[s].warps[wi].set_pc(pc + 1);
-        self.sms[s].warps[wi].state = WarpState::AtBarrier;
-        let bslot = self.sms[s].blocks.iter().position(|b| b.id == block).expect("block resident");
-        self.sms[s].blocks[bslot].at_barrier += 1;
-        if self.sms[s].blocks[bslot].at_barrier >= self.sms[s].blocks[bslot].warps_live {
-            self.sms[s].blocks[bslot].at_barrier = 0;
-            for w in self.sms[s].warps.iter_mut() {
-                if w.block == block && w.state == WarpState::AtBarrier {
-                    w.state = WarpState::Ready;
-                    w.ready_at = self.now + 1;
-                }
-            }
-        }
-    }
-
-    fn exit(&mut self, s: usize, wi: usize, mask: u64) {
-        let done = self.sms[s].warps[wi].exit_lanes(mask);
-        if !done {
-            return;
-        }
-        let block = self.sms[s].warps[wi].block;
-        let bslot = self.sms[s].blocks.iter().position(|b| b.id == block).expect("block resident");
-        {
-            let b = &mut self.sms[s].blocks[bslot];
-            b.warps_live -= 1;
-            if b.warps_live > 0 {
-                if b.at_barrier >= b.warps_live {
-                    b.at_barrier = 0;
-                    for w in self.sms[s].warps.iter_mut() {
-                        if w.block == block && w.state == WarpState::AtBarrier {
-                            w.state = WarpState::Ready;
-                            w.ready_at = self.now + 1;
-                        }
-                    }
-                }
-                return;
-            }
-        }
-        self.sms[s].blocks.remove(bslot);
-        {
-            let sm = &mut self.sms[s];
-            for sc in 0..sm.sc_warps.len() {
-                let warps = &sm.warps;
-                sm.sc_warps[sc].retain(|&wi| warps[wi].block != block);
-            }
-        }
-        self.blocks_done += 1;
-        while self.try_dispatch(s) {}
+    /// Statistics accumulated so far.
+    pub fn stats(&self) -> &Stats {
+        &self.fe.stats
     }
 
     /// HBM bandwidth utilization over the run (Fig. 1 metric).
     pub fn bw_utilization(&self) -> f64 {
-        self.stats.bw_utilization(self.cfg.hbm_bytes_per_cycle)
+        self.fe.stats.bw_utilization(self.cfg.hbm_bytes_per_cycle)
     }
 
     /// ALU utilization: lane-ops per available lane-cycle (Fig. 1).
     pub fn alu_utilization(&self) -> f64 {
-        self.stats.alu_utilization(self.cfg.total_lanes() as f64)
+        self.fe.stats.alu_utilization(self.cfg.total_lanes() as f64)
     }
 }
 
@@ -680,8 +277,9 @@ mod tests {
         let x = m.alloc(n * 4);
         let y = m.alloc(n * 4);
         let xv: Vec<f32> = (0..n).map(|i| (i % 31) as f32).collect();
+        let yv = vec![0.5f32; n];
         m.write_f32s(x, &xv);
-        m.write_f32s(y, &vec![0.5; n]);
+        m.write_f32s(y, &yv);
         m.launch(
             k.clone(),
             crate::isa::LaunchConfig::new(32, 128),
@@ -701,7 +299,7 @@ mod tests {
         let gx = g.alloc(n * 4);
         let gy = g.alloc(n * 4);
         g.write_f32s(gx, &xv);
-        g.write_f32s(gy, &vec![0.5; n]);
+        g.write_f32s(gy, &yv);
         g.launch(
             k,
             crate::isa::LaunchConfig::new(32, 128),

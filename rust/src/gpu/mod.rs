@@ -1,9 +1,12 @@
-//! Compute-centric GPU baseline (DESIGN.md §2 substitution for the
-//! authors' Tesla V100 measurements): the same SIMT front end as the MPU
-//! model, but with a conventional memory hierarchy — coalesced accesses
-//! go through an L2 model and a shared HBM bandwidth pipe with long
-//! latency, and all data lands in the (far-bank) register file.
+//! Compute-centric baselines built on the shared SIMT frontend
+//! ([`crate::core::frontend`]): the V100-like GPU (DESIGN.md §2
+//! substitution for the authors' Tesla V100 measurements) with an L2 +
+//! HBM bandwidth-pipe memory system, and the ideal-bandwidth roofline
+//! machine (infinite bandwidth, fixed latency) that bounds every real
+//! memory system from below.
 
+pub mod ideal;
 pub mod machine;
 
+pub use ideal::IdealMachine;
 pub use machine::GpuMachine;

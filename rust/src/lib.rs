@@ -12,6 +12,11 @@
 //!   analysis (post-dominators), the paper's Algorithm-1 *location
 //!   annotation* pass, liveness, and graph-coloring register allocation
 //!   with separate near-bank / far-bank physical register pools;
+//! * a **shared SIMT frontend** ([`core::frontend`]): one implementation
+//!   of block dispatch, warp scheduling, barriers, scoreboard and
+//!   functional execution, generic over a pluggable
+//!   `MemorySystem` + `OffloadModel` backend — every machine below is
+//!   this frontend plus a memory system;
 //! * a **cycle-level functional + timing simulator** of the MPU
 //!   architecture ([`core`], [`dram`], [`mem`], [`noc`]): hybrid
 //!   far-bank/near-bank pipeline with instruction offloading, register
@@ -19,8 +24,10 @@
 //!   (LSU / LSU-Remote / LSU-Extension), near-bank units, DRAM banks with
 //!   FR-FCFS + open-page + multiple activated row-buffers (MASA), TSV
 //!   buses, a 2D-mesh NoC and near-bank shared memory;
-//! * a **V100-like GPU baseline** and a **PonB**
-//!   (processing-on-base-logic-die) baseline ([`gpu`], `PipelineMode`);
+//! * a **V100-like GPU baseline**, an **ideal-bandwidth roofline**
+//!   machine, a PIM-style **MPU-no-offload** preset and a **PonB**
+//!   (processing-on-base-logic-die) baseline ([`gpu`], `MachineKind`,
+//!   `PipelineMode`);
 //! * **energy and area models** with the paper's Table-II/III
 //!   coefficients ([`energy`]);
 //! * the twelve **workloads** with input generators and golden models

@@ -1,11 +1,18 @@
 //! `mpu` — command-line driver for the MPU reproduction.
 //!
 //! Subcommands:
-//!   run <workload> [key=val ...] [--tiny|--paper-scale] [--gpu]
-//!   suite [key=val ...] [--tiny] [--out FILE]
-//!                                    run all 12 workloads (MPU vs GPU)
-//!                                    through the parallel sweep engine
-//!                                    and write BENCH_suite.json
+//!   run <workload> [key=val ...] [--tiny|--paper-scale]
+//!       [--machine mpu|gpu|ideal|mpu_nooff | --gpu]
+//!   suite [key=val ...] [--tiny] [--out FILE] [--variants] [--strict]
+//!                                    run all 12 workloads (MPU vs GPU,
+//!                                    plus the ideal-bandwidth roofline
+//!                                    and MPU-no-offload variants with
+//!                                    --variants) through the parallel
+//!                                    sweep engine and write
+//!                                    BENCH_suite.json; --strict exits
+//!                                    non-zero on any incorrect run
+//!   check-json <file>                validate a BENCH_suite.json against
+//!                                    schema v1 + correctness (CI gate)
 //!   compile <workload>               show backend annotations
 //!   validate [--tiny]                cross-check vs XLA artifacts
 //!   list                             list workloads (Table I)
@@ -13,10 +20,12 @@
 //!
 //! The CLI is hand-rolled (no clap in the offline crate set).
 
-use mpu::config::{GpuConfig, MachineConfig};
-use mpu::coordinator::bench::{suite_json, write_suite_json, SUITE_JSON};
+use mpu::config::{MachineConfig, MachineKind};
+use mpu::coordinator::bench::{
+    all_correct, suite_json_with_variants, write_suite_json, SUITE_JSON,
+};
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::sweep::{run_suite, Sweep, Target};
+use mpu::coordinator::sweep::{run_suite, run_suite_kind, Sweep, Target};
 use mpu::coordinator::{compile_for, KernelCache};
 use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
 use mpu::workloads::{prepare, Scale, Workload};
@@ -24,9 +33,11 @@ use std::path::Path;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mpu <run|suite|compile|validate|list|config> [args]\n\
-         \n  mpu run axpy row_buffers_per_bank=2 --gpu\
+        "usage: mpu <run|suite|check-json|compile|validate|list|config> [args]\n\
+         \n  mpu run axpy row_buffers_per_bank=2 --machine ideal\
          \n  mpu suite offload_policy=hw --out BENCH_suite.json\
+         \n  mpu suite --tiny --variants --strict\
+         \n  mpu check-json BENCH_suite.json\
          \n  mpu compile gemv\
          \n  mpu validate --tiny\
          \n  mpu list | mpu config"
@@ -103,28 +114,39 @@ fn main() -> anyhow::Result<()> {
             let w = Workload::from_name(name).unwrap_or_else(|| usage());
             let cfg = parse_cfg(&rest[1..]);
             let scale = scale_of(rest);
-            let on_gpu = rest.iter().any(|a| a == "--gpu");
-            let target = if on_gpu {
-                Target::Gpu(GpuConfig::matched(&cfg), cfg.clone())
-            } else {
-                Target::Mpu(cfg.clone())
-            };
-            let label = if on_gpu { "gpu" } else { "mpu" };
-            let results = Sweep::new().point(label, w, scale, target).run()?;
+            // `--machine <kind>` selects any frontend variant; `--gpu`
+            // stays as a shorthand for `--machine gpu`.
+            let mut kind = MachineKind::Mpu;
+            if rest.iter().any(|a| a == "--gpu") {
+                kind = MachineKind::Gpu;
+            }
+            let mut it = rest.iter();
+            while let Some(a) = it.next() {
+                if a == "--machine" {
+                    let Some(k) = it.next().and_then(|v| MachineKind::from_name(v)) else {
+                        eprintln!("--machine needs one of: mpu gpu ideal mpu_nooff");
+                        std::process::exit(2);
+                    };
+                    kind = k;
+                }
+            }
+            let target = Target::for_kind(kind, &cfg);
+            let results = Sweep::new().point(kind.name(), w, scale, target).run()?;
             let r = &results[0].report;
-            if on_gpu {
-                println!(
-                    "GPU {}: {} cycles, correct={} (max_err {:.2e}), {:.1} GB/s, {:.3} mJ",
+            match kind {
+                MachineKind::Gpu | MachineKind::IdealBw => println!(
+                    "{} {}: {} cycles, correct={} (max_err {:.2e}), {:.1} GB/s, {:.3} mJ",
+                    kind.name().to_uppercase(),
                     w.name(),
                     r.cycles,
                     r.correct,
                     r.max_err,
                     r.dram_gbps(),
                     r.energy.total() * 1e3
-                );
-            } else {
-                println!(
-                    "MPU {}: {} cycles, correct={} (max_err {:.2e}), near {:.0}%, {:.1} GB/s, rowmiss {:.1}%, {:.3} mJ",
+                ),
+                MachineKind::Mpu | MachineKind::MpuNoOffload => println!(
+                    "{} {}: {} cycles, correct={} (max_err {:.2e}), near {:.0}%, {:.1} GB/s, rowmiss {:.1}%, {:.3} mJ",
+                    kind.name().to_uppercase(),
                     w.name(),
                     r.cycles,
                     r.correct,
@@ -133,14 +155,24 @@ fn main() -> anyhow::Result<()> {
                     r.dram_gbps(),
                     r.stats.row_miss_rate() * 100.0,
                     r.energy.total() * 1e3
-                );
+                ),
             }
         }
         "suite" => {
             let cfg = parse_cfg(rest);
             let scale = scale_of(rest);
+            let with_variants = rest.iter().any(|a| a == "--variants");
+            let strict = rest.iter().any(|a| a == "--strict");
             let t0 = std::time::Instant::now();
             let pairs = run_suite(&cfg, scale)?;
+            let mut variants: Vec<(String, Vec<mpu::RunReport>)> = Vec::new();
+            if with_variants {
+                for kind in [MachineKind::IdealBw, MachineKind::MpuNoOffload] {
+                    let runs = run_suite_kind(&cfg, scale, kind)?;
+                    variants.push((kind.name().to_string(), runs));
+                }
+            }
+            let doc = suite_json_with_variants(scale, &pairs, &variants);
             let mut t = Table::new("suite: MPU vs GPU", &["workload", "speedup", "energy_red", "ok"]);
             for p in &pairs {
                 t.row(vec![
@@ -150,18 +182,70 @@ fn main() -> anyhow::Result<()> {
                     (p.mpu.correct && p.gpu.correct).to_string(),
                 ]);
             }
-            let doc = suite_json(scale, &pairs);
             t.row(vec!["GEOMEAN".into(), f2(doc.geomean_speedup), f2(doc.geomean_energy_reduction), String::new()]);
             t.emit("suite");
+            for v in &doc.variants {
+                println!(
+                    "variant {:<10} geomean speedup vs GPU: {:.2}x",
+                    v.variant, v.geomean_speedup_vs_gpu
+                );
+            }
             let out = out_path(rest);
             write_suite_json(Path::new(&out), &doc)?;
             println!(
-                "\nwrote {} ({} workloads, geomean speedup {:.2}x) in {:.1}s",
+                "\nwrote {} ({} workloads, {} extra variants, geomean speedup {:.2}x) in {:.1}s",
                 out,
                 doc.workloads.len(),
+                doc.variants.len(),
                 doc.geomean_speedup,
                 t0.elapsed().as_secs_f64()
             );
+            if strict {
+                anyhow::ensure!(all_correct(&doc), "suite has incorrect runs (see table above)");
+            }
+        }
+        "check-json" => {
+            let Some(path) = rest.first() else { usage() };
+            let body = std::fs::read_to_string(path)?;
+            let v: serde_json::Value = serde_json::from_str(&body)?;
+            anyhow::ensure!(v["schema_version"] == 1, "schema_version must be 1");
+            for key in ["suite", "scale", "geomean_speedup", "geomean_energy_reduction"] {
+                anyhow::ensure!(!v[key].is_null(), "missing key `{key}`");
+            }
+            let workloads = v["workloads"].as_array().ok_or_else(|| anyhow::anyhow!("missing workloads"))?;
+            anyhow::ensure!(
+                workloads.len() == Workload::ALL.len(),
+                "expected {} workloads, found {}",
+                Workload::ALL.len(),
+                workloads.len()
+            );
+            let mut checked = 0usize;
+            for w in workloads {
+                for col in ["mpu", "gpu"] {
+                    anyhow::ensure!(
+                        w[col]["correct"] == true,
+                        "workload {} incorrect on {}",
+                        w["workload"],
+                        col
+                    );
+                    checked += 1;
+                }
+            }
+            if let Some(variants) = v["variants"].as_array() {
+                for var in variants {
+                    let Some(ws) = var["workloads"].as_array() else { continue };
+                    for w in ws {
+                        anyhow::ensure!(
+                            w["entry"]["correct"] == true,
+                            "workload {} incorrect on variant {}",
+                            w["workload"],
+                            var["variant"]
+                        );
+                        checked += 1;
+                    }
+                }
+            }
+            println!("{path}: schema v1 OK, {checked} machine runs all correct");
         }
         "compile" => {
             let Some(name) = rest.first() else { usage() };

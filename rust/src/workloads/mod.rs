@@ -53,6 +53,15 @@ impl Device for crate::gpu::GpuMachine {
     }
 }
 
+impl Device for crate::gpu::IdealMachine {
+    fn alloc_bytes(&mut self, bytes: usize) -> u64 {
+        self.alloc(bytes)
+    }
+    fn write_f32(&mut self, addr: u64, data: &[f32]) {
+        self.write_f32s(addr, data);
+    }
+}
+
 /// A [`Device`] that only tracks allocation sizes — enough to build a
 /// workload's kernel text and host-side inputs (goldens, XLA inputs)
 /// without instantiating a machine.
@@ -134,7 +143,7 @@ impl Workload {
 }
 
 /// Problem-size scale for the suite.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Scale {
     /// Quick: used by unit/integration tests.
     Tiny,

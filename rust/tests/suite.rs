@@ -3,9 +3,9 @@
 //! tolerance); the paper's headline orderings hold on the scaled
 //! machine.
 
-use mpu::config::{MachineConfig, OffloadPolicy, PipelineMode, SmemLocation};
-use mpu::coordinator::bench::{suite_json, write_suite_json, SUITE_JSON};
-use mpu::coordinator::sweep::run_suite;
+use mpu::config::{MachineConfig, MachineKind, OffloadPolicy, PipelineMode, SmemLocation};
+use mpu::coordinator::bench::{all_correct, suite_json, suite_json_with_variants, write_suite_json, SUITE_JSON};
+use mpu::coordinator::sweep::{run_suite, run_suite_kind, Sweep};
 use mpu::coordinator::{geomean, run_pair, run_workload_scaled};
 use mpu::workloads::{Scale, Workload};
 
@@ -58,6 +58,82 @@ fn sweep_suite_tiny_smoke_and_json_baseline() {
     let v: serde_json::Value = serde_json::from_str(&std::fs::read_to_string(&path).unwrap()).unwrap();
     assert_eq!(v["schema_version"], 1);
     assert_eq!(v["workloads"].as_array().unwrap().len(), 12);
+}
+
+#[test]
+fn all_variants_produce_bit_identical_outputs() {
+    // The shared-frontend extraction makes any functional divergence
+    // between machines a refactor bug — lock it in: for every Table-I
+    // workload at Tiny scale, the MPU, GPU, ideal-bandwidth and
+    // MPU-no-offload machines produce bit-identical golden output
+    // slices (they run the same functional frontend; only timing may
+    // differ).
+    let cfg = MachineConfig::scaled();
+    let mut sweep = Sweep::new();
+    for kind in MachineKind::ALL {
+        sweep = sweep.suite_kind(kind, Scale::Tiny, &cfg);
+    }
+    let results = sweep.run().unwrap();
+    let n = Workload::ALL.len();
+    assert_eq!(results.len(), MachineKind::ALL.len() * n);
+    let (mpu, rest) = results.split_at(n);
+    for chunk in rest.chunks(n) {
+        for (base, r) in mpu.iter().zip(chunk) {
+            assert_eq!(base.report.workload, r.report.workload, "suite order must match");
+            assert!(r.report.correct, "{:?} incorrect on `{}`", r.report.workload, r.label);
+            // PR accumulates random f32 partial sums through a single
+            // global atomic: the accumulation *order* is scheduling- and
+            // therefore timing-dependent, so different memory systems
+            // legitimately round differently. Every other workload's
+            // functional result is order-independent (stencils and
+            // copies write disjoint addresses; HIST's f32 atomics add
+            // exact small integers) and must match bit-for-bit.
+            if r.report.workload == Workload::Pr {
+                continue;
+            }
+            let a: Vec<u32> = base.report.output.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = r.report.output.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                a, b,
+                "variant `{}` diverges bit-wise from MPU on {:?}",
+                r.label, r.report.workload
+            );
+        }
+    }
+}
+
+#[test]
+fn suite_json_with_four_variants_validates() {
+    // `mpu suite --variants` in miniature: MPU + GPU pairs plus the two
+    // extra machine variants, all in one schema-v1 document.
+    let cfg = MachineConfig::scaled();
+    let pairs = run_suite(&cfg, Scale::Tiny).unwrap();
+    let ideal = run_suite_kind(&cfg, Scale::Tiny, MachineKind::IdealBw).unwrap();
+    let nooff = run_suite_kind(&cfg, Scale::Tiny, MachineKind::MpuNoOffload).unwrap();
+    let doc = suite_json_with_variants(
+        Scale::Tiny,
+        &pairs,
+        &[("ideal".to_string(), ideal), ("mpu_nooff".to_string(), nooff)],
+    );
+    assert_eq!(doc.schema_version, 1);
+    assert_eq!(doc.variants.len(), 2);
+    assert_eq!(doc.variants[0].variant, "ideal");
+    assert_eq!(doc.variants[1].variant, "mpu_nooff");
+    for v in &doc.variants {
+        assert_eq!(v.workloads.len(), Workload::ALL.len());
+        assert!(v.geomean_speedup_vs_gpu > 0.0);
+    }
+    assert!(all_correct(&doc), "all four machine columns must be correct");
+    // The roofline never loses to the bandwidth-limited GPU on geomean.
+    assert!(
+        doc.variants[0].geomean_speedup_vs_gpu >= 1.0,
+        "ideal-bandwidth geomean vs GPU {}",
+        doc.variants[0].geomean_speedup_vs_gpu
+    );
+    let s = serde_json::to_string(&doc).unwrap();
+    for key in ["variants", "variant", "speedup_vs_gpu", "geomean_speedup_vs_gpu"] {
+        assert!(s.contains(&format!("\"{key}\"")), "missing key {key}");
+    }
 }
 
 #[test]
