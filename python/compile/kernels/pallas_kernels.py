@@ -52,10 +52,11 @@ def axpy(x, y, alpha):
 
 
 def pr(x):
-    """Two-stage reduction: per-strip partial sums in the kernel, final
-    sum in the surrounding jax (mirrors the CUDA block-tree + atomic)."""
+    """Two-stage reduction to (32,) per-block partials: 128-wide strip
+    sums in the kernel, then strip s = k*32 + b folds into block b
+    (mirrors the CUDA fixed-order block tree writing partials[b])."""
     n = x.shape[0]
-    bs, grid = _strip_grid(n)
+    grid = n // 128
 
     def kernel(x_ref, o_ref):
         o_ref[...] = jnp.sum(x_ref[...])[None]
@@ -64,11 +65,11 @@ def pr(x):
         kernel,
         out_shape=jax.ShapeDtypeStruct((grid,), jnp.float32),
         grid=(grid,),
-        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        in_specs=[pl.BlockSpec((128,), lambda i: (i,))],
         out_specs=pl.BlockSpec((1,), lambda i: (i,)),
         interpret=_INTERPRET,
     )(x)
-    return jnp.sum(partial)[None]
+    return jnp.sum(partial.reshape(-1, 32), axis=0)
 
 
 def gemv(a_t, x, m, n):

@@ -26,7 +26,10 @@ use anyhow::Result;
 use std::collections::HashMap;
 
 /// Output of the location-annotation stage, per kernel (Fig. 14).
-#[derive(Clone, Debug, Default)]
+/// Serde participates in the on-disk result store
+/// ([`crate::coordinator::store`]).
+#[derive(Clone, Debug, Default, serde::Serialize, serde::Deserialize)]
+#[serde(default)]
 pub struct LocStats {
     pub near: usize,
     pub far: usize,

@@ -507,6 +507,42 @@ impl MachineKind {
     }
 }
 
+/// Defaults for the sweep service (`mpu serve` / `submit` / `status`),
+/// overridable by environment and then by CLI flags.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Daemon listen / client connect address (`MPU_ADDR`).
+    pub addr: String,
+    /// On-disk result-store root (`MPU_STORE_DIR`); `None` disables the
+    /// persistent tier.
+    pub store_dir: Option<std::path::PathBuf>,
+    /// Store size cap in bytes (`MPU_STORE_MAX_MB`).
+    pub store_max_bytes: u64,
+}
+
+impl ServeConfig {
+    pub const DEFAULT_ADDR: &'static str = "127.0.0.1:7117";
+    pub const DEFAULT_STORE_DIR: &'static str = ".mpu-store";
+    pub const DEFAULT_STORE_MAX_MB: u64 = 512;
+
+    /// Built-in defaults with environment overrides applied.
+    pub fn from_env() -> ServeConfig {
+        let addr =
+            std::env::var("MPU_ADDR").unwrap_or_else(|_| Self::DEFAULT_ADDR.to_string());
+        let store_dir = std::env::var("MPU_STORE_DIR")
+            .unwrap_or_else(|_| Self::DEFAULT_STORE_DIR.to_string());
+        let max_mb = std::env::var("MPU_STORE_MAX_MB")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(Self::DEFAULT_STORE_MAX_MB);
+        ServeConfig {
+            addr,
+            store_dir: Some(std::path::PathBuf::from(store_dir)),
+            store_max_bytes: max_mb * 1024 * 1024,
+        }
+    }
+}
+
 impl GpuConfig {
     /// Total ALU lanes across the chip (the Fig.-1 ALU-utilization
     /// denominator — single source of truth for machine and benches).

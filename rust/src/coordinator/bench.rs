@@ -35,9 +35,33 @@ pub const SUITE_JSON: &str = "BENCH_suite.json";
 
 /// Stable lower-case name of a problem scale.
 pub fn scale_name(scale: Scale) -> &'static str {
-    match scale {
-        Scale::Tiny => "tiny",
-        Scale::Small => "small",
+    scale.name()
+}
+
+/// Cache/store counters of the run that produced a suite document
+/// (append-only schema-v1 addition under the `stats` key; absent in
+/// documents from older producers and from library callers).
+#[derive(Clone, Debug, Serialize)]
+pub struct SuiteStats {
+    /// Points resident in the in-process `SimCache`.
+    pub sim_cache_entries: usize,
+    /// Memory-tier hits served during this process.
+    pub sim_cache_hits: u64,
+    /// On-disk-store hits served during this process.
+    pub sim_cache_disk_hits: u64,
+    /// Persistent store counters (absent when no store is attached).
+    pub store: Option<crate::coordinator::store::StoreStats>,
+}
+
+impl SuiteStats {
+    /// Snapshot a [`SimCache`]'s two tiers.
+    pub fn from_cache(cache: &crate::coordinator::SimCache) -> SuiteStats {
+        SuiteStats {
+            sim_cache_entries: cache.len(),
+            sim_cache_hits: cache.hits(),
+            sim_cache_disk_hits: cache.disk_hits(),
+            store: cache.store().map(|s| s.stats()),
+        }
     }
 }
 
@@ -115,6 +139,11 @@ pub struct SuiteJson {
     /// Extra machine variants (append-only addition; empty when the
     /// suite ran without `--variants`).
     pub variants: Vec<VariantEntry>,
+    /// Cache/store counters of the producing run (append-only addition;
+    /// omitted entirely when not captured, so older documents stay
+    /// byte-identical).
+    #[serde(skip_serializing_if = "Option::is_none")]
+    pub stats: Option<SuiteStats>,
 }
 
 /// Build the suite document from MPU/GPU pairs.
@@ -182,6 +211,7 @@ pub fn suite_json_with_variants(
             })
             .collect(),
         variants,
+        stats: None,
     }
 }
 

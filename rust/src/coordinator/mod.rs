@@ -7,9 +7,16 @@
 //! [`sweep`] engine, which compiles each kernel once into a shared cache
 //! and fans independent simulations out across threads; [`bench`] turns
 //! sweep results into the stable-schema `BENCH_suite.json` perf output.
+//! The [`service`] module makes the engine resident (`mpu serve`): a
+//! priority job queue with cross-request in-flight dedup behind a JSONL
+//! TCP [`proto`]col, backed by the persistent content-addressed result
+//! [`store`] that sits under [`SimCache`] as its second tier.
 
 pub mod bench;
+pub mod proto;
 pub mod report;
+pub mod service;
+pub mod store;
 pub mod sweep;
 
 use crate::compiler::{compile_with, CompiledKernel, LocStats};
@@ -19,6 +26,8 @@ use crate::sim::Stats;
 use crate::workloads::{Prepared, Scale, Workload};
 use anyhow::Result;
 
+pub use service::{Service, SweepServer};
+pub use store::{DiskStore, StoreConfig};
 pub use sweep::{run_suite, run_suite_kind, KernelCache, SimCache, Sweep, SweepResult, Target};
 
 /// Result of one simulated run.

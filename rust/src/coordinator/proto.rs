@@ -1,0 +1,297 @@
+//! JSONL request/response protocol of the sweep service.
+//!
+//! One JSON object per line in both directions, over a local TCP socket
+//! (std-only). A connection may carry any number of requests; every
+//! request gets exactly one response line.
+//!
+//! ```text
+//! -> {"cmd":"ping"}
+//! <- {"resp":"pong","proto_version":1}
+//! -> {"cmd":"submit","suite":true,"scale":"tiny","variants":["mpu","gpu"]}
+//! <- {"resp":"done","points":24,"simulated":24,...,"results":[...]}
+//! -> {"cmd":"status"}
+//! <- {"resp":"status","requests":1,...}
+//! -> {"cmd":"shutdown"}
+//! <- {"resp":"bye"}
+//! ```
+//!
+//! Fields are append-only once released, mirroring the
+//! `BENCH_suite.json` schema discipline.
+
+use crate::config::{MachineConfig, MachineKind};
+use crate::coordinator::sweep::{SweepPoint, Target};
+use crate::workloads::{Scale, Workload};
+use anyhow::{anyhow, Context, Result};
+use serde::{Deserialize, Serialize};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+/// Protocol version; a server rejects nothing by version yet, but
+/// reports it in `pong`/`status` so clients can detect skew.
+pub const PROTO_VERSION: u32 = 1;
+
+/// A client request (one per line).
+#[derive(Clone, Debug, Serialize, Deserialize)]
+#[serde(tag = "cmd", rename_all = "snake_case")]
+pub enum Request {
+    /// Liveness check.
+    Ping,
+    /// Daemon + store counters.
+    Status,
+    /// Run a batch of sweep points and return their results.
+    Submit(SubmitRequest),
+    /// Stop the daemon: drains submits already executing (their clients
+    /// still get results), responds `bye`, then stops accepting.
+    Shutdown,
+}
+
+/// A batch of sweep points: `{workloads | suite} × variants` under one
+/// machine configuration.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct SubmitRequest {
+    /// Run the whole Table-I suite (overrides `workloads`).
+    #[serde(default)]
+    pub suite: bool,
+    /// Explicit workload names (ignored when `suite` is set).
+    #[serde(default)]
+    pub workloads: Vec<String>,
+    /// Problem scale name (`"tiny"` | `"small"`).
+    #[serde(default = "default_scale")]
+    pub scale: String,
+    /// Machine-variant names ([`MachineKind`]); default `["mpu","gpu"]`.
+    #[serde(default = "default_variants")]
+    pub variants: Vec<String>,
+    /// Configuration knob overrides, applied to the scaled machine in
+    /// order (`MachineConfig::set` key/value pairs).
+    #[serde(default)]
+    pub config: Vec<(String, String)>,
+    /// Scheduling priority: higher runs first across queued requests.
+    #[serde(default)]
+    pub priority: i32,
+    /// Force re-simulation, bypassing every cache tier.
+    #[serde(default)]
+    pub fresh: bool,
+}
+
+fn default_scale() -> String {
+    "small".to_string()
+}
+
+fn default_variants() -> Vec<String> {
+    vec!["mpu".to_string(), "gpu".to_string()]
+}
+
+impl SubmitRequest {
+    /// Expand into concrete sweep points (variant-major, each variant in
+    /// workload order) — the server-side entry to the sweep engine.
+    pub fn points(&self) -> Result<Vec<SweepPoint>> {
+        let mut cfg = MachineConfig::scaled();
+        for (k, v) in &self.config {
+            cfg.set(k, v).map_err(|e| anyhow!("config error: {e}"))?;
+        }
+        let scale = Scale::from_name(&self.scale)
+            .ok_or_else(|| anyhow!("unknown scale `{}` (tiny|small)", self.scale))?;
+        let workloads: Vec<Workload> = if self.suite {
+            Workload::ALL.to_vec()
+        } else {
+            self.workloads
+                .iter()
+                .map(|n| {
+                    Workload::from_name(n).ok_or_else(|| anyhow!("unknown workload `{n}`"))
+                })
+                .collect::<Result<_>>()?
+        };
+        anyhow::ensure!(!workloads.is_empty(), "no workloads requested");
+        anyhow::ensure!(!self.variants.is_empty(), "no variants requested");
+        let mut points = Vec::with_capacity(workloads.len() * self.variants.len());
+        for name in &self.variants {
+            let kind = MachineKind::from_name(name)
+                .ok_or_else(|| anyhow!("unknown machine variant `{name}`"))?;
+            let target = Target::for_kind(kind, &cfg);
+            for &w in &workloads {
+                points.push(SweepPoint {
+                    label: kind.name().to_string(),
+                    workload: w,
+                    scale,
+                    target: target.clone(),
+                });
+            }
+        }
+        Ok(points)
+    }
+}
+
+/// A server response (one per request).
+#[derive(Clone, Debug, Serialize, Deserialize)]
+#[serde(tag = "resp", rename_all = "snake_case")]
+pub enum Response {
+    Pong { proto_version: u32 },
+    Error { message: String },
+    Status(StatusBody),
+    Done(SubmitReply),
+    Bye,
+}
+
+/// Result of one submitted batch.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct SubmitReply {
+    /// Points in the batch.
+    pub points: usize,
+    /// Points this request actually simulated (cold everywhere).
+    pub simulated: usize,
+    /// Served from the in-process memory tier.
+    pub mem_hits: usize,
+    /// Served from the persistent on-disk store.
+    pub disk_hits: usize,
+    /// Coalesced onto an identical point already in flight for another
+    /// request.
+    pub deduped: usize,
+    pub elapsed_ms: u64,
+    /// Per-point summaries, in request (variant-major) order.
+    pub results: Vec<PointSummary>,
+}
+
+impl SubmitReply {
+    /// Points served without re-simulation.
+    pub fn cached(&self) -> usize {
+        self.mem_hits + self.disk_hits + self.deduped
+    }
+}
+
+/// One point's result summary (the full `RunReport` stays server-side;
+/// suite JSON remains the vehicle for complete stats).
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct PointSummary {
+    pub label: String,
+    pub workload: String,
+    pub scale: String,
+    pub machine: String,
+    pub cycles: u64,
+    pub correct: bool,
+    pub max_err: f32,
+    pub dram_gbps: f64,
+    pub energy_j: f64,
+    /// Which tier served it: `sim` | `mem` | `disk` | `dedup`.
+    pub source: String,
+}
+
+/// Daemon counters for `mpu status`.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct StatusBody {
+    pub proto_version: u32,
+    pub uptime_ms: u64,
+    /// Submit requests served.
+    pub requests: u64,
+    /// Points across all submits.
+    pub points: u64,
+    pub simulated: u64,
+    pub mem_hits: u64,
+    pub disk_hits: u64,
+    pub dedup_waits: u64,
+    /// Distinct kernels compiled since start.
+    pub kernels_compiled: usize,
+    /// Entries resident in the memory tier.
+    pub mem_entries: usize,
+    /// On-disk store counters (absent when the daemon runs storeless).
+    pub store: Option<super::store::StoreStats>,
+}
+
+/// Send one request and read one response over a fresh connection.
+pub fn request(addr: &str, req: &Request) -> Result<Response> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to mpu serve at {addr}"))?;
+    let mut w = BufWriter::new(stream.try_clone()?);
+    let line = serde_json::to_string(req)?;
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    anyhow::ensure!(!reply.trim().is_empty(), "server closed the connection without replying");
+    serde_json::from_str(&reply).context("malformed response line")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_round_trip_as_jsonl() {
+        let req = Request::Submit(SubmitRequest {
+            suite: true,
+            workloads: vec![],
+            scale: "tiny".into(),
+            variants: vec!["mpu".into(), "gpu".into()],
+            config: vec![("row_buffers_per_bank".into(), "2".into())],
+            priority: 3,
+            fresh: false,
+        });
+        let line = serde_json::to_string(&req).unwrap();
+        assert!(!line.contains('\n'), "one request must fit one line");
+        assert!(line.contains("\"cmd\":\"submit\""));
+        let back: Request = serde_json::from_str(&line).unwrap();
+        match back {
+            Request::Submit(s) => {
+                assert!(s.suite);
+                assert_eq!(s.priority, 3);
+                assert_eq!(s.variants.len(), 2);
+            }
+            other => panic!("round-trip changed the variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_defaults_fill_in() {
+        let s: Request = serde_json::from_str(r#"{"cmd":"submit","workloads":["axpy"]}"#).unwrap();
+        match s {
+            Request::Submit(s) => {
+                assert_eq!(s.scale, "small");
+                assert_eq!(s.variants, vec!["mpu".to_string(), "gpu".to_string()]);
+                assert_eq!(s.priority, 0);
+                assert!(!s.fresh && !s.suite);
+            }
+            other => panic!("expected submit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn points_expand_variant_major() {
+        let s = SubmitRequest {
+            suite: false,
+            workloads: vec!["axpy".into(), "knn".into()],
+            scale: "tiny".into(),
+            variants: vec!["mpu".into(), "ideal".into()],
+            config: vec![],
+            priority: 0,
+            fresh: false,
+        };
+        let pts = s.points().unwrap();
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].label, "mpu");
+        assert_eq!(pts[0].workload, Workload::Axpy);
+        assert_eq!(pts[2].label, "ideal");
+        assert_eq!(pts[3].workload, Workload::Knn);
+    }
+
+    #[test]
+    fn bad_names_are_rejected() {
+        let mut s = SubmitRequest {
+            suite: false,
+            workloads: vec!["nope".into()],
+            scale: "tiny".into(),
+            variants: vec!["mpu".into()],
+            config: vec![],
+            priority: 0,
+            fresh: false,
+        };
+        assert!(s.points().is_err());
+        s.workloads = vec!["axpy".into()];
+        s.scale = "huge".into();
+        assert!(s.points().is_err());
+        s.scale = "tiny".into();
+        s.variants = vec!["tpu".into()];
+        assert!(s.points().is_err());
+        s.variants = vec![];
+        assert!(s.points().is_err());
+    }
+}

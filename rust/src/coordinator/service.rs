@@ -1,0 +1,552 @@
+//! The sweep service: a resident job queue + batch scheduler over the
+//! sweep engine, and the TCP server that exposes it (`mpu serve`).
+//!
+//! Scheduling model:
+//! - Every submitted batch becomes a [`Job`]; its points go into one
+//!   global priority queue (higher [`SubmitRequest::priority`] first,
+//!   FIFO within a priority). Within a batch, points are enqueued
+//!   grouped by kernel (workload × smem placement) so the shared
+//!   [`KernelCache`] sees consecutive same-kernel points.
+//! - Each queued point gets one `rayon::spawn` task on the existing
+//!   global pool; every task pops the *best* queued point, not "its
+//!   own", which is what makes priorities effective.
+//! - Identical points from different requests are deduplicated while in
+//!   flight: the first claimant simulates, later ones wait on the same
+//!   [`Flight`] and share the result. Completed points are served by
+//!   the two-tier [`SimCache`] (memory + optional on-disk store).
+
+use super::proto::{
+    PointSummary, Request, Response, StatusBody, SubmitReply, SubmitRequest, PROTO_VERSION,
+};
+use super::store::DiskStore;
+use super::sweep::{CacheTier, KernelCache, SimCache, SweepPoint};
+use super::RunReport;
+use anyhow::{anyhow, Result};
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::{BinaryHeap, HashMap};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Which path produced a point's result, from the submitting request's
+/// point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PointSource {
+    /// This request ran the simulation.
+    Simulated,
+    /// Memory-tier hit.
+    MemHit,
+    /// On-disk store hit.
+    DiskHit,
+    /// Coalesced onto another request's in-flight simulation.
+    Dedup,
+}
+
+impl PointSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PointSource::Simulated => "sim",
+            PointSource::MemHit => "mem",
+            PointSource::DiskHit => "disk",
+            PointSource::Dedup => "dedup",
+        }
+    }
+}
+
+/// One finished point of a job.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    pub point: SweepPoint,
+    pub report: RunReport,
+    pub source: PointSource,
+}
+
+/// An in-flight simulation another request can wait on.
+struct Flight {
+    done: Mutex<Option<Result<RunReport, String>>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn publish(&self, res: Result<RunReport, String>) {
+        *self.done.lock().unwrap() = Some(res);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<RunReport> {
+        let mut g = self.done.lock().unwrap();
+        while g.is_none() {
+            g = self.cv.wait(g).unwrap();
+        }
+        match g.as_ref().unwrap() {
+            Ok(r) => Ok(r.clone()),
+            Err(e) => Err(anyhow!("deduplicated simulation failed: {e}")),
+        }
+    }
+}
+
+/// A submitted batch: points, their slots, and a completion latch.
+pub struct Job {
+    points: Vec<SweepPoint>,
+    fresh: bool,
+    slots: Mutex<Vec<Option<Result<(RunReport, PointSource), String>>>>,
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    fn new(points: Vec<SweepPoint>, fresh: bool) -> Job {
+        let n = points.len();
+        Job {
+            points,
+            fresh,
+            slots: Mutex::new(vec![None; n]),
+            remaining: Mutex::new(n),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    fn record(&self, idx: usize, res: Result<(RunReport, PointSource), String>) {
+        self.slots.lock().unwrap()[idx] = Some(res);
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Block until every point finished; the first failed point fails
+    /// the whole batch.
+    pub fn wait(&self) -> Result<Vec<PointResult>> {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.done_cv.wait(rem).unwrap();
+        }
+        drop(rem);
+        let slots = std::mem::take(&mut *self.slots.lock().unwrap());
+        let mut out = Vec::with_capacity(self.points.len());
+        for (pt, slot) in self.points.iter().zip(slots) {
+            match slot.expect("finished job with an empty slot") {
+                Ok((report, source)) => {
+                    out.push(PointResult { point: pt.clone(), report, source })
+                }
+                Err(e) => anyhow::bail!("{} [{}]: {e}", pt.workload.name(), pt.label),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Queue entry: higher priority first, then submission order. `idx`
+/// points into `job.points`.
+struct QueuedPoint {
+    priority: i32,
+    seq: u64,
+    idx: usize,
+    job: Arc<Job>,
+}
+
+impl PartialEq for QueuedPoint {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for QueuedPoint {}
+impl PartialOrd for QueuedPoint {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedPoint {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // Max-heap: greatest priority wins; within a priority the
+        // earliest seq wins (so invert the seq ordering).
+        self.priority.cmp(&other.priority).then(other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Default)]
+struct ServiceCounters {
+    requests: AtomicU64,
+    points: AtomicU64,
+    simulated: AtomicU64,
+    mem_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    dedup_waits: AtomicU64,
+}
+
+/// The resident sweep service. One instance per daemon; shared across
+/// connections behind an `Arc`.
+pub struct Service {
+    cache: SimCache,
+    kernels: KernelCache,
+    inflight: Mutex<HashMap<String, Arc<Flight>>>,
+    queue: Mutex<BinaryHeap<QueuedPoint>>,
+    seq: AtomicU64,
+    counters: ServiceCounters,
+    started: Instant,
+    /// Submits currently executing (the graceful-shutdown drain latch).
+    active: Mutex<u64>,
+    idle_cv: Condvar,
+}
+
+impl Service {
+    /// Build a service; `store` becomes the persistent tier under the
+    /// service's [`SimCache`].
+    pub fn new(store: Option<DiskStore>) -> Service {
+        let cache = SimCache::new();
+        if let Some(s) = store {
+            cache.attach_store(Arc::new(s));
+        }
+        Service {
+            cache,
+            kernels: KernelCache::new(),
+            inflight: Mutex::new(HashMap::new()),
+            queue: Mutex::new(BinaryHeap::new()),
+            seq: AtomicU64::new(0),
+            counters: ServiceCounters::default(),
+            started: Instant::now(),
+            active: Mutex::new(0),
+            idle_cv: Condvar::new(),
+        }
+    }
+
+    /// Block until no submit is executing — the shutdown path drains
+    /// in-flight batches so their clients get results, not a dead
+    /// socket.
+    pub fn wait_idle(&self) {
+        let mut n = self.active.lock().unwrap();
+        while *n > 0 {
+            n = self.idle_cv.wait(n).unwrap();
+        }
+    }
+
+    /// The service's two-tier cache (tests introspect it).
+    pub fn cache(&self) -> &SimCache {
+        &self.cache
+    }
+
+    /// Enqueue a batch and fan its points out on the rayon pool.
+    pub fn submit(self: &Arc<Self>, points: Vec<SweepPoint>, priority: i32, fresh: bool) -> Arc<Job> {
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        self.counters.points.fetch_add(points.len() as u64, Ordering::Relaxed);
+        let job = Arc::new(Job::new(points, fresh));
+        // Enqueue grouped by kernel so same-kernel points pop
+        // consecutively (KernelCache compiles once either way; grouping
+        // keeps the compile fully off the tail points' critical path).
+        let mut order: Vec<usize> = (0..job.points.len()).collect();
+        order.sort_by_key(|&i| {
+            let p = &job.points[i];
+            (p.workload.name(), p.target.smem_near(), i)
+        });
+        let n = order.len();
+        {
+            let mut q = self.queue.lock().unwrap();
+            for idx in order {
+                let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+                q.push(QueuedPoint { priority, seq, idx, job: job.clone() });
+            }
+        }
+        for _ in 0..n {
+            let svc = self.clone();
+            rayon::spawn(move || svc.drain_one());
+        }
+        job
+    }
+
+    /// Expand a protocol request, run it, and summarize — the server's
+    /// submit path, also used directly by tests.
+    pub fn run_request(self: &Arc<Self>, req: &SubmitRequest) -> Result<SubmitReply> {
+        let t0 = Instant::now();
+        let points = req.points()?;
+        let total = points.len();
+        *self.active.lock().unwrap() += 1;
+        let waited = {
+            let job = self.submit(points, req.priority, req.fresh);
+            job.wait()
+        };
+        {
+            let mut n = self.active.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                self.idle_cv.notify_all();
+            }
+        }
+        let results = waited?;
+        let count = |s: PointSource| results.iter().filter(|r| r.source == s).count();
+        Ok(SubmitReply {
+            points: total,
+            simulated: count(PointSource::Simulated),
+            mem_hits: count(PointSource::MemHit),
+            disk_hits: count(PointSource::DiskHit),
+            deduped: count(PointSource::Dedup),
+            elapsed_ms: t0.elapsed().as_millis() as u64,
+            results: results
+                .iter()
+                .map(|r| PointSummary {
+                    label: r.point.label.clone(),
+                    workload: r.point.workload.name().to_string(),
+                    scale: r.point.scale.name().to_string(),
+                    machine: r.report.machine.to_string(),
+                    cycles: r.report.cycles,
+                    correct: r.report.correct,
+                    max_err: r.report.max_err,
+                    dram_gbps: r.report.dram_gbps(),
+                    energy_j: r.report.energy.total(),
+                    source: r.source.name().to_string(),
+                })
+                .collect(),
+        })
+    }
+
+    /// Daemon counter snapshot.
+    pub fn status(&self) -> StatusBody {
+        StatusBody {
+            proto_version: PROTO_VERSION,
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+            requests: self.counters.requests.load(Ordering::Relaxed),
+            points: self.counters.points.load(Ordering::Relaxed),
+            simulated: self.counters.simulated.load(Ordering::Relaxed),
+            mem_hits: self.counters.mem_hits.load(Ordering::Relaxed),
+            disk_hits: self.counters.disk_hits.load(Ordering::Relaxed),
+            dedup_waits: self.counters.dedup_waits.load(Ordering::Relaxed),
+            kernels_compiled: self.kernels.len(),
+            mem_entries: self.cache.len(),
+            store: self.cache.store().map(|s| s.stats()),
+        }
+    }
+
+    fn drain_one(self: Arc<Self>) {
+        let qp = self.queue.lock().unwrap().pop();
+        let Some(qp) = qp else { return };
+        let pt = &qp.job.points[qp.idx];
+        let res = match self.run_point(pt, qp.job.fresh) {
+            Ok((report, source)) => {
+                let ctr = match source {
+                    PointSource::Simulated => &self.counters.simulated,
+                    PointSource::MemHit => &self.counters.mem_hits,
+                    PointSource::DiskHit => &self.counters.disk_hits,
+                    PointSource::Dedup => &self.counters.dedup_waits,
+                };
+                ctr.fetch_add(1, Ordering::Relaxed);
+                Ok((report, source))
+            }
+            Err(e) => Err(e.to_string()),
+        };
+        qp.job.record(qp.idx, res);
+    }
+
+    /// Run one point through dedup + the two-tier cache.
+    fn run_point(&self, pt: &SweepPoint, fresh: bool) -> Result<(RunReport, PointSource)> {
+        let simulate = || pt.simulate(&self.kernels);
+        if fresh {
+            // Forced re-simulation repairs both tiers: the fresh result
+            // overwrites whatever the memory map and the store held.
+            let r = simulate()?;
+            self.cache.put(pt, &r);
+            return Ok((r, PointSource::Simulated));
+        }
+        let key = pt.cache_key();
+        enum Claim {
+            Owner(Arc<Flight>),
+            Waiter(Arc<Flight>),
+        }
+        let claim = {
+            let mut inflight = self.inflight.lock().unwrap();
+            match inflight.get(&key) {
+                Some(f) => Claim::Waiter(f.clone()),
+                None => {
+                    let f = Arc::new(Flight::new());
+                    inflight.insert(key.clone(), f.clone());
+                    Claim::Owner(f)
+                }
+            }
+        };
+        match claim {
+            Claim::Owner(flight) => {
+                let res = self.cache.get_or_run_traced(pt, simulate);
+                flight.publish(match &res {
+                    Ok((r, _)) => Ok(r.clone()),
+                    Err(e) => Err(e.to_string()),
+                });
+                self.inflight.lock().unwrap().remove(&key);
+                res.map(|(r, tier)| {
+                    let source = match tier {
+                        CacheTier::Memory => PointSource::MemHit,
+                        CacheTier::Disk => PointSource::DiskHit,
+                        CacheTier::Simulated => PointSource::Simulated,
+                    };
+                    (r, source)
+                })
+            }
+            Claim::Waiter(flight) => flight.wait().map(|r| (r, PointSource::Dedup)),
+        }
+    }
+}
+
+/// The TCP front of a [`Service`]: bind first (so tests can learn the
+/// ephemeral port), then [`SweepServer::run`] the accept loop until a
+/// `shutdown` request.
+pub struct SweepServer {
+    listener: TcpListener,
+    svc: Arc<Service>,
+    stop: Arc<AtomicBool>,
+}
+
+impl SweepServer {
+    pub fn bind(svc: Arc<Service>, addr: &str) -> Result<SweepServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("binding mpu serve to {addr}: {e}"))?;
+        Ok(SweepServer { listener, svc, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// Bound address (resolves `:0` test binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has a local addr")
+    }
+
+    /// Accept loop: one thread per connection, any number of JSONL
+    /// requests per connection. Returns after a `shutdown` request.
+    pub fn run(self) -> Result<()> {
+        let addr = self.addr();
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let svc = self.svc.clone();
+            let stop = self.stop.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(svc, stream, stop, addr);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    svc: Arc<Service>,
+    stream: TcpStream,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match serde_json::from_str::<Request>(&line) {
+            Err(e) => Response::Error { message: format!("bad request line: {e}") },
+            Ok(Request::Ping) => Response::Pong { proto_version: PROTO_VERSION },
+            Ok(Request::Status) => Response::Status(svc.status()),
+            Ok(Request::Submit(req)) => match svc.run_request(&req) {
+                Ok(reply) => Response::Done(reply),
+                Err(e) => Response::Error { message: e.to_string() },
+            },
+            Ok(Request::Shutdown) => {
+                // Drain batches still executing on other connections so
+                // their clients get results, then stop accepting.
+                svc.wait_idle();
+                write_line(&mut writer, &Response::Bye)?;
+                stop.store(true, Ordering::SeqCst);
+                // Wake the accept loop so it observes the stop flag.
+                let _ = TcpStream::connect(addr);
+                return Ok(());
+            }
+        };
+        write_line(&mut writer, &resp)?;
+    }
+    Ok(())
+}
+
+fn write_line(writer: &mut BufWriter<TcpStream>, resp: &Response) -> std::io::Result<()> {
+    let body = serde_json::to_string(resp).expect("responses always serialize");
+    writer.write_all(body.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::coordinator::sweep::Target;
+    use crate::workloads::{Scale, Workload};
+
+    #[test]
+    fn queue_orders_by_priority_then_fifo() {
+        let cfg = MachineConfig::scaled();
+        let job = Arc::new(Job::new(
+            vec![SweepPoint {
+                label: "mpu".into(),
+                workload: Workload::Axpy,
+                scale: Scale::Tiny,
+                target: Target::Mpu(cfg),
+            }],
+            false,
+        ));
+        let mut heap = BinaryHeap::new();
+        for (priority, seq) in [(0, 0u64), (5, 1), (5, 2), (-1, 3), (0, 4)] {
+            heap.push(QueuedPoint { priority, seq, idx: 0, job: job.clone() });
+        }
+        let popped: Vec<(i32, u64)> =
+            std::iter::from_fn(|| heap.pop().map(|q| (q.priority, q.seq))).collect();
+        assert_eq!(popped, vec![(5, 1), (5, 2), (0, 0), (0, 4), (-1, 3)]);
+    }
+
+    #[test]
+    fn service_counts_simulations_and_mem_hits() {
+        let svc = Arc::new(Service::new(None));
+        let req = SubmitRequest {
+            suite: false,
+            workloads: vec!["axpy".into()],
+            scale: "tiny".into(),
+            variants: vec!["mpu".into()],
+            config: vec![],
+            priority: 0,
+            fresh: false,
+        };
+        let first = svc.run_request(&req).unwrap();
+        assert_eq!(first.points, 1);
+        assert_eq!(first.simulated, 1);
+        assert_eq!(first.cached(), 0);
+        assert!(first.results[0].correct);
+        assert_eq!(first.results[0].source, "sim");
+        let second = svc.run_request(&req).unwrap();
+        assert_eq!(second.simulated, 0);
+        assert_eq!(second.mem_hits, 1);
+        assert_eq!(second.results[0].cycles, first.results[0].cycles);
+        let status = svc.status();
+        assert_eq!(status.requests, 2);
+        assert_eq!(status.points, 2);
+        assert_eq!(status.simulated, 1);
+        assert_eq!(status.mem_hits, 1);
+        assert!(status.store.is_none());
+    }
+
+    #[test]
+    fn fresh_requests_bypass_every_tier() {
+        let svc = Arc::new(Service::new(None));
+        let mut req = SubmitRequest {
+            suite: false,
+            workloads: vec!["axpy".into()],
+            scale: "tiny".into(),
+            variants: vec!["mpu".into()],
+            config: vec![],
+            priority: 0,
+            fresh: false,
+        };
+        svc.run_request(&req).unwrap();
+        req.fresh = true;
+        let again = svc.run_request(&req).unwrap();
+        assert_eq!(again.simulated, 1, "fresh must re-simulate");
+    }
+}

@@ -1,0 +1,463 @@
+//! Persistent on-disk simulation-result store — the second cache tier
+//! under [`super::sweep::SimCache`].
+//!
+//! Layout (all JSON, std-only):
+//!
+//! ```text
+//! <root>/index.json            # schema version, logical clock, LRU book-keeping
+//! <root>/entries/<key>.json    # one StoredEntry per simulated point
+//! ```
+//!
+//! Keys are the content-addressed SimCache keys
+//! (`<workload>-<scale>-<variant>-<confighash>`), so any configuration
+//! knob change produces a new entry and identical points collapse to one
+//! file across processes, CLI invocations and daemon restarts.
+//!
+//! Robustness rules:
+//! - Every write is tmp-file + atomic rename.
+//! - A corrupt or schema-mismatched entry is dropped (file removed,
+//!   counted in `corrupt_dropped`) and treated as a miss — never an error.
+//! - A missing or corrupt index is rebuilt by scanning `entries/`.
+//! - The store is bounded: once `total bytes > max_bytes`, entries are
+//!   evicted least-recently-*accessed* first (loads refresh recency).
+//!
+//! One writer (the `mpu serve` daemon) is the intended steady state;
+//! concurrent multi-process writers are safe for entry files (atomic
+//! rename) but may lose index recency updates, which only perturbs LRU
+//! order, never correctness.
+//!
+//! Known limitation: the `<confighash>` key component hashes the
+//! configuration's `Debug` rendering with `DefaultHasher`, so adding a
+//! config field — or a std hasher change across Rust releases — shifts
+//! every key. That is *safe* (cold restart, old entries age out under
+//! the LRU cap) but silently forfeits warmth; a stable serialized key
+//! is the upgrade path if it starts to matter (tracked in ROADMAP).
+
+use super::RunReport;
+use crate::workloads::{Scale, Workload};
+use anyhow::{Context, Result};
+use serde::{Deserialize, Serialize};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Version of the on-disk entry/index schema. Bumping it invalidates
+/// every existing entry (they are dropped on load, not migrated).
+pub const STORE_SCHEMA_VERSION: u32 = 1;
+
+/// Configuration of a [`DiskStore`].
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Root directory (created if missing).
+    pub root: PathBuf,
+    /// Size cap over entry-file bytes; least-recently-accessed entries
+    /// are evicted once exceeded.
+    pub max_bytes: u64,
+}
+
+impl StoreConfig {
+    pub fn new(root: impl Into<PathBuf>) -> StoreConfig {
+        StoreConfig { root: root.into(), max_bytes: 512 * 1024 * 1024 }
+    }
+
+    pub fn max_bytes(mut self, max_bytes: u64) -> StoreConfig {
+        self.max_bytes = max_bytes;
+        self
+    }
+}
+
+/// Counter snapshot of a store (serialized into `mpu status` and the
+/// suite JSON `stats` appendix).
+#[derive(Clone, Debug, Default, Serialize, Deserialize)]
+#[serde(default)]
+pub struct StoreStats {
+    pub entries: usize,
+    pub bytes: u64,
+    pub max_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries dropped because they were unreadable or carried a stale
+    /// schema version.
+    pub corrupt_dropped: u64,
+}
+
+/// One serialized simulation result. A mirror of [`RunReport`] with
+/// owned strings so it round-trips through serde.
+#[derive(Serialize, Deserialize)]
+struct StoredEntry {
+    schema_version: u32,
+    key: String,
+    workload: String,
+    scale: String,
+    machine: String,
+    cycles: u64,
+    stats: crate::sim::Stats,
+    energy: crate::energy::EnergyBreakdown,
+    correct: bool,
+    max_err: f32,
+    output: Vec<f32>,
+    golden: Vec<f32>,
+    loc_stats: crate::compiler::LocStats,
+}
+
+/// `machine` strings are `&'static str` in [`RunReport`]; map the known
+/// values back (anything else means a foreign/corrupt entry).
+fn machine_static(s: &str) -> Option<&'static str> {
+    match s {
+        "mpu" => Some("mpu"),
+        "gpu" => Some("gpu"),
+        "ideal" => Some("ideal"),
+        _ => None,
+    }
+}
+
+impl StoredEntry {
+    fn from_report(key: &str, scale: Scale, r: &RunReport) -> StoredEntry {
+        StoredEntry {
+            schema_version: STORE_SCHEMA_VERSION,
+            key: key.to_string(),
+            workload: r.workload.name().to_string(),
+            scale: scale.name().to_string(),
+            machine: r.machine.to_string(),
+            cycles: r.cycles,
+            stats: r.stats.clone(),
+            energy: r.energy,
+            correct: r.correct,
+            max_err: r.max_err,
+            output: r.output.clone(),
+            golden: r.golden.clone(),
+            loc_stats: r.loc_stats.clone(),
+        }
+    }
+
+    fn into_report(self, key: &str) -> Option<RunReport> {
+        if self.schema_version != STORE_SCHEMA_VERSION || self.key != key {
+            return None;
+        }
+        let workload = Workload::from_name(&self.workload)?;
+        Scale::from_name(&self.scale)?;
+        let machine = machine_static(&self.machine)?;
+        Some(RunReport {
+            workload,
+            machine,
+            cycles: self.cycles,
+            stats: self.stats,
+            energy: self.energy,
+            correct: self.correct,
+            max_err: self.max_err,
+            output: self.output,
+            golden: self.golden,
+            loc_stats: self.loc_stats,
+        })
+    }
+}
+
+#[derive(Serialize, Deserialize, Default)]
+struct IndexEntry {
+    bytes: u64,
+    /// Logical-clock timestamp of the last load *or* store (LRU order).
+    last_access: u64,
+}
+
+#[derive(Serialize, Deserialize, Default)]
+struct Index {
+    schema_version: u32,
+    /// Monotonic logical clock; persisted so recency survives restarts.
+    clock: u64,
+    entries: BTreeMap<String, IndexEntry>,
+}
+
+/// The persistent result store. All operations are infallible from the
+/// caller's perspective (a broken disk degrades to misses); `open` is
+/// the only fallible step.
+pub struct DiskStore {
+    root: PathBuf,
+    max_bytes: u64,
+    index: Mutex<Index>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    corrupt_dropped: AtomicU64,
+}
+
+impl DiskStore {
+    /// Open (or create) a store rooted at `cfg.root`.
+    pub fn open(cfg: StoreConfig) -> Result<DiskStore> {
+        let entries_dir = cfg.root.join("entries");
+        std::fs::create_dir_all(&entries_dir)
+            .with_context(|| format!("creating store dir {}", entries_dir.display()))?;
+        let store = DiskStore {
+            root: cfg.root,
+            max_bytes: cfg.max_bytes,
+            index: Mutex::new(Index { schema_version: STORE_SCHEMA_VERSION, ..Index::default() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            corrupt_dropped: AtomicU64::new(0),
+        };
+        let loaded = std::fs::read_to_string(store.index_path())
+            .ok()
+            .and_then(|body| serde_json::from_str::<Index>(&body).ok())
+            .filter(|ix| ix.schema_version == STORE_SCHEMA_VERSION);
+        let index = match loaded {
+            Some(ix) => ix,
+            // Missing/corrupt/stale index: rebuild from the entry files
+            // (recency resets; entry-level schema checks still apply on
+            // load, so a stale-schema tree degrades to misses).
+            None => store.rebuild_index()?,
+        };
+        *store.index.lock().unwrap() = index;
+        Ok(store)
+    }
+
+    fn index_path(&self) -> PathBuf {
+        self.root.join("index.json")
+    }
+
+    fn entry_path(&self, key: &str) -> PathBuf {
+        self.root.join("entries").join(format!("{key}.json"))
+    }
+
+    fn rebuild_index(&self) -> Result<Index> {
+        let mut ix = Index { schema_version: STORE_SCHEMA_VERSION, ..Index::default() };
+        let dir = self.root.join("entries");
+        let mut names: Vec<(String, u64)> = Vec::new();
+        for ent in std::fs::read_dir(&dir)? {
+            let ent = ent?;
+            let name = ent.file_name().to_string_lossy().into_owned();
+            if let Some(key) = name.strip_suffix(".json") {
+                let bytes = ent.metadata().map(|m| m.len()).unwrap_or(0);
+                names.push((key.to_string(), bytes));
+            }
+        }
+        names.sort();
+        for (key, bytes) in names {
+            ix.clock += 1;
+            ix.entries.insert(key, IndexEntry { bytes, last_access: ix.clock });
+        }
+        Ok(ix)
+    }
+
+    /// Persist the index (best effort — an unwritable index only costs
+    /// recency on the next open).
+    fn persist_index(&self, ix: &Index) {
+        if let Ok(body) = serde_json::to_string(ix) {
+            let _ = atomic_write(&self.index_path(), body.as_bytes());
+        }
+    }
+
+    /// Load a result by key. `None` is a miss (absent, corrupt, or stale
+    /// schema; the latter two also remove the file).
+    pub fn load(&self, key: &str) -> Option<RunReport> {
+        let path = self.entry_path(key);
+        let body = match std::fs::read_to_string(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                // Drop a dangling index entry so sizes stay truthful
+                // (persisted lazily: next store() or Drop).
+                self.index.lock().unwrap().entries.remove(key);
+                return None;
+            }
+        };
+        let report = serde_json::from_str::<StoredEntry>(&body)
+            .ok()
+            .and_then(|e| e.into_report(key));
+        match report {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                // Recency bump is in-memory only: rewriting index.json
+                // on every hit would serialize O(entries) JSON per load
+                // across all workers. store()/Drop persist it; losing a
+                // crash-window of recency only perturbs LRU order.
+                let mut ix = self.index.lock().unwrap();
+                ix.clock += 1;
+                let clock = ix.clock;
+                let bytes = body.len() as u64;
+                ix.entries.insert(key.to_string(), IndexEntry { bytes, last_access: clock });
+                Some(r)
+            }
+            None => {
+                // Corrupt or schema-stale: recover by dropping it.
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.corrupt_dropped.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&path);
+                self.index.lock().unwrap().entries.remove(key);
+                None
+            }
+        }
+    }
+
+    /// Store a result under a key (best effort; failures degrade to a
+    /// future miss). Evicts least-recently-accessed entries if the cap
+    /// is exceeded.
+    pub fn store(&self, key: &str, scale: Scale, report: &RunReport) {
+        let entry = StoredEntry::from_report(key, scale, report);
+        let Ok(body) = serde_json::to_string(&entry) else { return };
+        if atomic_write(&self.entry_path(key), body.as_bytes()).is_err() {
+            return;
+        }
+        let mut ix = self.index.lock().unwrap();
+        ix.clock += 1;
+        let clock = ix.clock;
+        ix.entries
+            .insert(key.to_string(), IndexEntry { bytes: body.len() as u64, last_access: clock });
+        self.evict_over_cap(&mut ix);
+        self.persist_index(&ix);
+    }
+
+    /// Evict LRU entries until under the byte cap. The most recently
+    /// accessed entry always survives, even if it alone exceeds the cap.
+    fn evict_over_cap(&self, ix: &mut Index) {
+        loop {
+            let total: u64 = ix.entries.values().map(|e| e.bytes).sum();
+            if total <= self.max_bytes || ix.entries.len() <= 1 {
+                return;
+            }
+            let victim = ix
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_access)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { return };
+            ix.entries.remove(&victim);
+            let _ = std::fs::remove_file(self.entry_path(&victim));
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Number of entries currently indexed.
+    pub fn len(&self) -> usize {
+        self.index.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total indexed entry bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.index.lock().unwrap().entries.values().map(|e| e.bytes).sum()
+    }
+
+    /// Root directory of the store.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            entries: self.len(),
+            bytes: self.total_bytes(),
+            max_bytes: self.max_bytes,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            corrupt_dropped: self.corrupt_dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for DiskStore {
+    /// Persist the final recency state (loads only bump it in memory).
+    fn drop(&mut self) {
+        let ix = self.index.lock().unwrap();
+        self.persist_index(&ix);
+    }
+}
+
+/// Write via tmp file + rename so readers never observe a torn file.
+fn atomic_write(path: &Path, body: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, body)?;
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::coordinator::run_workload_scaled;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("mpu_store_unit")
+            .join(format!("{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_report() -> RunReport {
+        let cfg = MachineConfig::scaled();
+        run_workload_scaled(Workload::Axpy, &cfg, Scale::Tiny).unwrap()
+    }
+
+    #[test]
+    fn round_trip_preserves_the_report() {
+        let store = DiskStore::open(StoreConfig::new(tmp_root("rt"))).unwrap();
+        let r = sample_report();
+        store.store("axpy-tiny-mpu-0000000000000000", Scale::Tiny, &r);
+        let back = store.load("axpy-tiny-mpu-0000000000000000").unwrap();
+        assert_eq!(back.workload, r.workload);
+        assert_eq!(back.machine, r.machine);
+        assert_eq!(back.cycles, r.cycles);
+        assert_eq!(back.stats.cycles, r.stats.cycles);
+        assert_eq!(back.correct, r.correct);
+        let a: Vec<u32> = back.output.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = r.output.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "stored output must round-trip bit-exactly");
+        assert_eq!(store.stats().hits, 1);
+        assert_eq!(store.stats().entries, 1);
+    }
+
+    #[test]
+    fn absent_key_is_a_miss() {
+        let store = DiskStore::open(StoreConfig::new(tmp_root("miss"))).unwrap();
+        assert!(store.load("nope-tiny-mpu-0000000000000000").is_none());
+        assert_eq!(store.stats().misses, 1);
+        assert_eq!(store.stats().hits, 0);
+    }
+
+    #[test]
+    fn lru_eviction_by_last_access_under_byte_cap() {
+        let r = sample_report();
+        let root = tmp_root("lru");
+        // Measure one entry, then cap the store at ~2.5 entries.
+        let probe = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+        probe.store("k0", Scale::Tiny, &r);
+        let one = probe.total_bytes();
+        assert!(one > 0);
+        drop(probe);
+        let _ = std::fs::remove_dir_all(&root);
+
+        let store =
+            DiskStore::open(StoreConfig::new(root).max_bytes(one * 5 / 2)).unwrap();
+        store.store("k0", Scale::Tiny, &r);
+        store.store("k1", Scale::Tiny, &r);
+        // Touch k0 so k1 becomes the LRU victim.
+        assert!(store.load("k0").is_some());
+        store.store("k2", Scale::Tiny, &r);
+        assert_eq!(store.stats().evictions, 1);
+        assert!(store.load("k1").is_none(), "LRU entry k1 should be evicted");
+        assert!(store.load("k0").is_some());
+        assert!(store.load("k2").is_some());
+    }
+
+    #[test]
+    fn index_rebuilds_after_deletion() {
+        let root = tmp_root("reix");
+        let r = sample_report();
+        {
+            let store = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+            store.store("ka", Scale::Tiny, &r);
+            store.store("kb", Scale::Tiny, &r);
+        }
+        std::fs::remove_file(root.join("index.json")).unwrap();
+        let store = DiskStore::open(StoreConfig::new(root)).unwrap();
+        assert_eq!(store.len(), 2, "index should rebuild from entries/");
+        assert!(store.load("ka").is_some());
+    }
+}

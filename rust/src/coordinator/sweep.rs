@@ -15,6 +15,7 @@
 //! The CLI, every `fig*` bench and the examples build their experiments
 //! on top of this instead of hand-rolled serial loops.
 
+use super::store::DiskStore;
 use super::{check, PairReport, RunReport};
 use crate::compiler::{compile_with, CompiledKernel};
 use crate::config::{GpuConfig, IdealConfig, MachineConfig, MachineKind, SmemLocation};
@@ -28,7 +29,7 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Target machine of a sweep point.
 #[derive(Clone, Debug)]
@@ -56,7 +57,9 @@ impl Target {
         }
     }
 
-    fn smem_near(&self) -> bool {
+    /// Whether this target compiles kernels for near-bank shared memory
+    /// (the kernel-cache key alongside the workload).
+    pub fn smem_near(&self) -> bool {
         let cfg = match self {
             Target::Mpu(c) => c,
             Target::Gpu(_, c) => c,
@@ -88,6 +91,29 @@ pub struct SweepPoint {
     pub workload: Workload,
     pub scale: Scale,
     pub target: Target,
+}
+
+impl SweepPoint {
+    /// Stable content-addressed cache key of this point — the string
+    /// form of the [`SimCache`] key, used as the on-disk store's entry
+    /// name and the sweep service's dedup key. Labels are *not* part of
+    /// it: two labels over the same configuration share one entry.
+    pub fn cache_key(&self) -> String {
+        let (kind, cfg_hash) = self.target.fingerprint();
+        format!("{}-{}-{}-{:016x}", self.workload.name(), self.scale.name(), kind, cfg_hash)
+    }
+
+    /// Compile (through `cache`) and simulate this point — the single
+    /// target-dispatch site shared by [`Sweep::run_with_cache`] and the
+    /// sweep service.
+    pub fn simulate(&self, cache: &KernelCache) -> Result<RunReport> {
+        let kernel = cache.get(self.workload, self.target.smem_near())?;
+        match &self.target {
+            Target::Mpu(cfg) => run_mpu_with(self.workload, cfg, self.scale, kernel),
+            Target::Gpu(gcfg, _) => run_gpu_with(self.workload, gcfg, self.scale, kernel),
+            Target::Ideal(icfg, _) => run_ideal_with(self.workload, icfg, self.scale, kernel),
+        }
+    }
 }
 
 /// Result of one sweep point (returned in point order).
@@ -146,15 +172,34 @@ impl KernelCache {
 /// discriminant × configuration hash.
 type SimKey = (Workload, Scale, &'static str, u64);
 
-/// Process-wide simulation-result cache (first step toward the
-/// ROADMAP's incremental re-runs). The simulator is deterministic, so a
-/// memoized [`RunReport`] is indistinguishable from a fresh run; labels
-/// are *not* part of the key, so the same configuration under two sweep
+/// Which tier served a point (see [`SimCache::get_or_run_traced`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheTier {
+    /// In-process memoization hit.
+    Memory,
+    /// Served from the persistent on-disk store.
+    Disk,
+    /// Actually simulated.
+    Simulated,
+}
+
+/// Process-wide simulation-result cache (the ROADMAP's incremental
+/// re-runs). The simulator is deterministic, so a memoized
+/// [`RunReport`] is indistinguishable from a fresh run; labels are
+/// *not* part of the key, so the same configuration under two sweep
 /// labels simulates once.
+///
+/// Two tiers: the in-process map, and — once a [`DiskStore`] is
+/// attached — the persistent on-disk store, which survives process
+/// restarts (warm results in milliseconds across CLI invocations and
+/// daemon restarts). Disk hits are promoted into the memory tier;
+/// simulations are written through to both.
 #[derive(Default)]
 pub struct SimCache {
     map: Mutex<HashMap<SimKey, RunReport>>,
     hits: AtomicU64,
+    disk_hits: AtomicU64,
+    disk: OnceLock<Arc<DiskStore>>,
 }
 
 impl SimCache {
@@ -177,9 +222,25 @@ impl SimCache {
         self.len() == 0
     }
 
-    /// Cache hits served so far.
+    /// Memory-tier cache hits served so far.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Disk-tier hits served so far (0 when no store is attached).
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    /// Attach the persistent on-disk tier. First attachment wins;
+    /// returns `false` (and drops `store`) if one was already attached.
+    pub fn attach_store(&self, store: Arc<DiskStore>) -> bool {
+        self.disk.set(store).is_ok()
+    }
+
+    /// The attached on-disk tier, if any.
+    pub fn store(&self) -> Option<&Arc<DiskStore>> {
+        self.disk.get()
     }
 
     /// Memory bound: cached points beyond this flush the cache (reports
@@ -197,19 +258,56 @@ impl SimCache {
         pt: &SweepPoint,
         run: impl FnOnce() -> Result<RunReport>,
     ) -> Result<RunReport> {
+        self.get_or_run_traced(pt, run).map(|(r, _)| r)
+    }
+
+    /// [`SimCache::get_or_run`] plus which tier served the point —
+    /// memory, the attached on-disk store, or a fresh simulation. The
+    /// sweep service uses the trace to report re-simulation counts.
+    pub fn get_or_run_traced(
+        &self,
+        pt: &SweepPoint,
+        run: impl FnOnce() -> Result<RunReport>,
+    ) -> Result<(RunReport, CacheTier)> {
         let (kind, cfg_hash) = pt.target.fingerprint();
         let key: SimKey = (pt.workload, pt.scale, kind, cfg_hash);
         if let Some(r) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(r.clone());
+            return Ok((r.clone(), CacheTier::Memory));
+        }
+        if let Some(store) = self.disk.get() {
+            if let Some(r) = store.load(&pt.cache_key()) {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                self.insert(key, r.clone());
+                return Ok((r, CacheTier::Disk));
+            }
         }
         let r = run()?;
+        self.insert(key, r.clone());
+        if let Some(store) = self.disk.get() {
+            store.store(&pt.cache_key(), pt.scale, &r);
+        }
+        Ok((r, CacheTier::Simulated))
+    }
+
+    /// Force-publish a freshly simulated report into both tiers,
+    /// overwriting whatever they held (the `fresh` refresh path: a
+    /// forced re-simulation must repair a stale persistent entry, not
+    /// leave it in place).
+    pub fn put(&self, pt: &SweepPoint, r: &RunReport) {
+        let (kind, cfg_hash) = pt.target.fingerprint();
+        self.insert((pt.workload, pt.scale, kind, cfg_hash), r.clone());
+        if let Some(store) = self.disk.get() {
+            store.store(&pt.cache_key(), pt.scale, r);
+        }
+    }
+
+    fn insert(&self, key: SimKey, r: RunReport) {
         let mut map = self.map.lock().unwrap();
         if map.len() >= Self::MAX_ENTRIES {
             map.clear();
         }
-        map.insert(key, r.clone());
-        Ok(r)
+        map.insert(key, r);
     }
 }
 
@@ -377,14 +475,7 @@ impl Sweep {
         let cache = KernelCache::new();
         let reuse = self.reuse;
         let run_one = |pt: &SweepPoint| -> Result<SweepResult> {
-            let simulate = || -> Result<RunReport> {
-                let kernel = cache.get(pt.workload, pt.target.smem_near())?;
-                match &pt.target {
-                    Target::Mpu(cfg) => run_mpu_with(pt.workload, cfg, pt.scale, kernel),
-                    Target::Gpu(gcfg, _) => run_gpu_with(pt.workload, gcfg, pt.scale, kernel),
-                    Target::Ideal(icfg, _) => run_ideal_with(pt.workload, icfg, pt.scale, kernel),
-                }
-            };
+            let simulate = || pt.simulate(&cache);
             let report =
                 if reuse { sim_cache.get_or_run(pt, simulate)? } else { simulate()? };
             Ok(SweepResult { label: pt.label.clone(), scale: pt.scale, report })

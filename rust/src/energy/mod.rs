@@ -9,8 +9,10 @@ use crate::sim::Stats;
 /// Energy breakdown in joules, by the Fig.-10 categories.
 ///
 /// Serializes with stable field names (part of the `BENCH_suite.json`
-/// schema, see [`crate::coordinator::bench`]).
-#[derive(Clone, Copy, Debug, Default, serde::Serialize)]
+/// schema, see [`crate::coordinator::bench`], and of the on-disk result
+/// store, see [`crate::coordinator::store`]).
+#[derive(Clone, Copy, Debug, Default, serde::Serialize, serde::Deserialize)]
+#[serde(default)]
 pub struct EnergyBreakdown {
     /// Vector-ALU lane operations.
     pub alu: f64,

@@ -39,7 +39,13 @@
 //!   every figure and table of the paper's evaluation section, built on
 //!   a **parallel sweep engine** ([`coordinator::sweep`]: shared kernel
 //!   compile cache + rayon fan-out) with a stable-schema JSON perf
-//!   emitter ([`coordinator::bench`], `BENCH_suite.json`).
+//!   emitter ([`coordinator::bench`], `BENCH_suite.json`);
+//! * the **sweep service** ([`coordinator::service`]): a long-running
+//!   daemon (`mpu serve`) with a priority job queue, cross-request
+//!   in-flight dedup, a JSONL-over-TCP protocol
+//!   ([`coordinator::proto`]) and a persistent content-addressed
+//!   on-disk result store ([`coordinator::store`]) as the second tier
+//!   under the sweep engine's `SimCache`.
 //!
 //! ## Quickstart
 //!

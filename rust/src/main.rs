@@ -4,15 +4,29 @@
 //!   run <workload> [key=val ...] [--tiny|--paper-scale]
 //!       [--machine mpu|gpu|ideal|mpu_nooff | --gpu]
 //!   suite [key=val ...] [--tiny] [--out FILE] [--variants] [--strict]
-//!                                    run all 12 workloads (MPU vs GPU,
+//!         [--store DIR]              run all 12 workloads (MPU vs GPU,
 //!                                    plus the ideal-bandwidth roofline
 //!                                    and MPU-no-offload variants with
 //!                                    --variants) through the parallel
 //!                                    sweep engine and write
 //!                                    BENCH_suite.json; --strict exits
-//!                                    non-zero on any incorrect run
+//!                                    non-zero on any incorrect run;
+//!                                    --store reuses/feeds the on-disk
+//!                                    result store
 //!   check-json <file>                validate a BENCH_suite.json against
 //!                                    schema v1 + correctness (CI gate)
+//!   check-json --compare <old> <new> additionally diff per-workload
+//!                                    cycles; exits non-zero on any >5%
+//!                                    cycle regression vs the baseline
+//!   serve [--addr A] [--store DIR] [--store-max-mb N] [--no-store]
+//!                                    long-running sweep daemon (JSONL
+//!                                    over TCP) with the persistent
+//!                                    on-disk result store
+//!   submit [suite|<workload>...] [--tiny] [--variants a,b] [--priority N]
+//!          [--fresh] [--strict] [--addr A] [key=val ...]
+//!                                    submit a batch to the daemon
+//!   status [--addr A]                daemon + store counters
+//!   shutdown [--addr A]              stop the daemon
 //!   compile <workload>               show backend annotations
 //!   validate [--tiny]                cross-check vs XLA artifacts
 //!   list                             list workloads (Table I)
@@ -20,24 +34,30 @@
 //!
 //! The CLI is hand-rolled (no clap in the offline crate set).
 
-use mpu::config::{MachineConfig, MachineKind};
+use mpu::config::{MachineConfig, MachineKind, ServeConfig};
 use mpu::coordinator::bench::{
-    all_correct, suite_json_with_variants, write_suite_json, SUITE_JSON,
+    all_correct, suite_json_with_variants, write_suite_json, SuiteStats, SUITE_JSON,
 };
+use mpu::coordinator::proto::{self, Request, Response, SubmitRequest};
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::sweep::{run_suite, run_suite_kind, Sweep, Target};
-use mpu::coordinator::{compile_for, KernelCache};
+use mpu::coordinator::sweep::{run_suite, run_suite_kind, SimCache, Sweep, Target};
+use mpu::coordinator::{compile_for, DiskStore, KernelCache, Service, StoreConfig, SweepServer};
 use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
 use mpu::workloads::{prepare, Scale, Workload};
 use std::path::Path;
+use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mpu <run|suite|check-json|compile|validate|list|config> [args]\n\
+        "usage: mpu <run|suite|check-json|serve|submit|status|shutdown|compile|validate|list|config> [args]\n\
          \n  mpu run axpy row_buffers_per_bank=2 --machine ideal\
          \n  mpu suite offload_policy=hw --out BENCH_suite.json\
          \n  mpu suite --tiny --variants --strict\
          \n  mpu check-json BENCH_suite.json\
+         \n  mpu check-json --compare baselines/BENCH_suite.small.json BENCH_suite.json\
+         \n  mpu serve --addr 127.0.0.1:7117 --store .mpu-store\
+         \n  mpu submit suite --tiny --variants mpu,gpu\
+         \n  mpu status | mpu shutdown\
          \n  mpu compile gemv\
          \n  mpu validate --tiny\
          \n  mpu list | mpu config"
@@ -70,21 +90,136 @@ fn scale_of(args: &[String]) -> Scale {
     }
 }
 
-/// `--out FILE` value, defaulting to `BENCH_suite.json`.
-fn out_path(args: &[String]) -> String {
+/// Value of a `--flag VALUE` pair, if present.
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
     let mut it = args.iter();
     while let Some(a) = it.next() {
-        if a == "--out" {
+        if a == flag {
             match it.next() {
-                Some(p) => return p.clone(),
+                Some(v) => return Some(v.clone()),
                 None => {
-                    eprintln!("--out requires a file path");
+                    eprintln!("{flag} requires a value");
                     std::process::exit(2);
                 }
             }
         }
     }
-    SUITE_JSON.to_string()
+    None
+}
+
+/// `--out FILE` value, defaulting to `BENCH_suite.json`.
+fn out_path(args: &[String]) -> String {
+    flag_value(args, "--out").unwrap_or_else(|| SUITE_JSON.to_string())
+}
+
+/// Positional arguments: everything that is not a `--flag` (or its
+/// value) and not a `key=val` configuration pair.
+fn positionals(args: &[String]) -> Vec<String> {
+    const VALUE_FLAGS: [&str; 7] =
+        ["--variants", "--priority", "--addr", "--out", "--store", "--store-max-mb", "--machine"];
+    let mut out = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if VALUE_FLAGS.contains(&a.as_str()) {
+            it.next();
+        } else if !a.starts_with("--") && !a.contains('=') {
+            out.push(a.clone());
+        }
+    }
+    out
+}
+
+/// Daemon address: `--addr`, else `MPU_ADDR`, else the built-in default.
+fn addr_of(args: &[String]) -> String {
+    flag_value(args, "--addr").unwrap_or_else(|| ServeConfig::from_env().addr)
+}
+
+/// Send one request to the daemon; protocol errors exit non-zero.
+fn daemon_request(addr: &str, req: &Request) -> anyhow::Result<Response> {
+    match proto::request(addr, req)? {
+        Response::Error { message } => anyhow::bail!("server error: {message}"),
+        resp => Ok(resp),
+    }
+}
+
+/// `check-json --compare` gate: per-workload MPU/GPU cycle deltas, >5%
+/// regressions fail.
+fn compare_docs(old_path: &str, new_path: &str) -> anyhow::Result<()> {
+    const REGRESSION_PCT: f64 = 5.0;
+    let load = |p: &str| -> anyhow::Result<serde_json::Value> {
+        Ok(serde_json::from_str(&std::fs::read_to_string(p)?)?)
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    anyhow::ensure!(
+        old["scale"] == new["scale"],
+        "scale mismatch: baseline is {} but candidate is {}",
+        old["scale"],
+        new["scale"]
+    );
+    let by_name = |doc: &serde_json::Value| -> Vec<(String, u64, u64)> {
+        doc["workloads"]
+            .as_array()
+            .map(|ws| {
+                ws.iter()
+                    .filter_map(|w| {
+                        Some((
+                            w["workload"].as_str()?.to_string(),
+                            w["mpu"]["cycles"].as_u64()?,
+                            w["gpu"]["cycles"].as_u64()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let old_ws = by_name(&old);
+    let new_ws = by_name(&new);
+    anyhow::ensure!(!old_ws.is_empty(), "baseline {old_path} has no workload cycles");
+    anyhow::ensure!(!new_ws.is_empty(), "candidate {new_path} has no workload cycles");
+    let mut t = Table::new(
+        "cycle deltas vs baseline (positive = slower)",
+        &["workload", "mpu Δ%", "gpu Δ%"],
+    );
+    let mut regressions: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+    for (name, new_mpu, new_gpu) in &new_ws {
+        let Some((_, old_mpu, old_gpu)) = old_ws.iter().find(|(n, _, _)| n == name) else {
+            t.row(vec![name.clone(), "(new)".into(), "(new)".into()]);
+            continue;
+        };
+        let delta = |old_c: u64, new_c: u64| {
+            (new_c as f64 - old_c as f64) / (old_c as f64).max(1.0) * 100.0
+        };
+        let dm = delta(*old_mpu, *new_mpu);
+        let dg = delta(*old_gpu, *new_gpu);
+        t.row(vec![name.clone(), format!("{dm:+.2}"), format!("{dg:+.2}")]);
+        compared += 1;
+        if dm > REGRESSION_PCT {
+            regressions.push(format!("{name} mpu cycles {old_mpu} -> {new_mpu} ({dm:+.2}%)"));
+        }
+        if dg > REGRESSION_PCT {
+            regressions.push(format!("{name} gpu cycles {old_gpu} -> {new_gpu} ({dg:+.2}%)"));
+        }
+    }
+    for (name, _, _) in &old_ws {
+        if !new_ws.iter().any(|(n, _, _)| n == name) {
+            regressions.push(format!("{name} present in baseline but missing from candidate"));
+        }
+    }
+    t.emit("compare");
+    if let (Some(og), Some(ng)) =
+        (old["geomean_speedup"].as_f64(), new["geomean_speedup"].as_f64())
+    {
+        println!("geomean speedup: baseline {og:.3} -> candidate {ng:.3}");
+    }
+    println!("compared {compared} workloads against {old_path}");
+    anyhow::ensure!(
+        regressions.is_empty(),
+        "cycle regressions over {REGRESSION_PCT}%:\n  {}",
+        regressions.join("\n  ")
+    );
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -163,6 +298,12 @@ fn main() -> anyhow::Result<()> {
             let scale = scale_of(rest);
             let with_variants = rest.iter().any(|a| a == "--variants");
             let strict = rest.iter().any(|a| a == "--strict");
+            // Optional persistent tier: repeated suite invocations (any
+            // process) skip already-simulated points via the store.
+            if let Some(dir) = flag_value(rest, "--store") {
+                let store = DiskStore::open(StoreConfig::new(dir))?;
+                SimCache::global().attach_store(Arc::new(store));
+            }
             let t0 = std::time::Instant::now();
             let pairs = run_suite(&cfg, scale)?;
             let mut variants: Vec<(String, Vec<mpu::RunReport>)> = Vec::new();
@@ -172,7 +313,8 @@ fn main() -> anyhow::Result<()> {
                     variants.push((kind.name().to_string(), runs));
                 }
             }
-            let doc = suite_json_with_variants(scale, &pairs, &variants);
+            let mut doc = suite_json_with_variants(scale, &pairs, &variants);
+            doc.stats = Some(SuiteStats::from_cache(SimCache::global()));
             let mut t = Table::new("suite: MPU vs GPU", &["workload", "speedup", "energy_red", "ok"]);
             for p in &pairs {
                 t.row(vec![
@@ -203,6 +345,14 @@ fn main() -> anyhow::Result<()> {
             if strict {
                 anyhow::ensure!(all_correct(&doc), "suite has incorrect runs (see table above)");
             }
+        }
+        "check-json" if rest.first().map(|a| a == "--compare").unwrap_or(false) => {
+            let (Some(old), Some(new)) = (rest.get(1), rest.get(2)) else {
+                eprintln!("check-json --compare needs <baseline> <candidate>");
+                std::process::exit(2);
+            };
+            compare_docs(old, new)?;
+            println!("{new}: no cycle regressions over 5% vs {old}");
         }
         "check-json" => {
             let Some(path) = rest.first() else { usage() };
@@ -246,6 +396,149 @@ fn main() -> anyhow::Result<()> {
                 }
             }
             println!("{path}: schema v1 OK, {checked} machine runs all correct");
+        }
+        "serve" => {
+            let env = ServeConfig::from_env();
+            let addr = flag_value(rest, "--addr").unwrap_or(env.addr);
+            let no_store = rest.iter().any(|a| a == "--no-store");
+            let store_dir = flag_value(rest, "--store")
+                .map(std::path::PathBuf::from)
+                .or(env.store_dir)
+                .filter(|_| !no_store);
+            let max_mb = flag_value(rest, "--store-max-mb")
+                .map(|v| {
+                    v.parse::<u64>().unwrap_or_else(|_| {
+                        eprintln!("--store-max-mb needs an integer, got `{v}`");
+                        std::process::exit(2);
+                    })
+                })
+                .map(|mb| mb * 1024 * 1024)
+                .unwrap_or(env.store_max_bytes);
+            let store = match &store_dir {
+                Some(dir) => Some(DiskStore::open(StoreConfig::new(dir).max_bytes(max_mb))?),
+                None => None,
+            };
+            let svc = Arc::new(Service::new(store));
+            let server = SweepServer::bind(svc, &addr)?;
+            match store_dir {
+                Some(dir) => println!(
+                    "mpu serve: listening on {} (store {}, cap {} MiB)",
+                    server.addr(),
+                    dir.display(),
+                    max_mb / (1024 * 1024)
+                ),
+                None => println!("mpu serve: listening on {} (no store)", server.addr()),
+            }
+            server.run()?;
+            println!("mpu serve: shut down");
+        }
+        "submit" => {
+            let addr = addr_of(rest);
+            let mut suite = false;
+            let mut workloads: Vec<String> = Vec::new();
+            for a in positionals(rest) {
+                if a == "suite" {
+                    suite = true;
+                } else {
+                    workloads.push(a);
+                }
+            }
+            let variants = flag_value(rest, "--variants")
+                .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+                .unwrap_or_else(|| vec!["mpu".to_string(), "gpu".to_string()]);
+            let priority = flag_value(rest, "--priority")
+                .map(|v| {
+                    v.parse::<i32>().unwrap_or_else(|_| {
+                        eprintln!("--priority needs an integer, got `{v}`");
+                        std::process::exit(2);
+                    })
+                })
+                .unwrap_or(0);
+            let config: Vec<(String, String)> = rest
+                .iter()
+                .filter_map(|a| a.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
+                .collect();
+            let req = SubmitRequest {
+                suite,
+                workloads,
+                scale: scale_of(rest).name().to_string(),
+                variants,
+                config,
+                priority,
+                fresh: rest.iter().any(|a| a == "--fresh"),
+            };
+            let Response::Done(reply) = daemon_request(&addr, &Request::Submit(req))? else {
+                anyhow::bail!("unexpected response to submit");
+            };
+            let mut t =
+                Table::new("submitted batch", &["label", "workload", "cycles", "ok", "source"]);
+            for r in &reply.results {
+                t.row(vec![
+                    r.label.clone(),
+                    r.workload.clone(),
+                    r.cycles.to_string(),
+                    r.correct.to_string(),
+                    r.source.clone(),
+                ]);
+            }
+            t.emit("submit");
+            // Stable machine-greppable summary (the CI smoke gate parses
+            // `simulated=` and `disk=`).
+            println!(
+                "submit: points={} simulated={} cached={} (mem={} disk={} dedup={}) in {}ms",
+                reply.points,
+                reply.simulated,
+                reply.cached(),
+                reply.mem_hits,
+                reply.disk_hits,
+                reply.deduped,
+                reply.elapsed_ms
+            );
+            if rest.iter().any(|a| a == "--strict") {
+                let bad: Vec<&str> = reply
+                    .results
+                    .iter()
+                    .filter(|r| !r.correct)
+                    .map(|r| r.workload.as_str())
+                    .collect();
+                anyhow::ensure!(bad.is_empty(), "incorrect runs: {}", bad.join(", "));
+            }
+        }
+        "status" => {
+            let addr = addr_of(rest);
+            let Response::Status(s) = daemon_request(&addr, &Request::Status)? else {
+                anyhow::bail!("unexpected response to status");
+            };
+            println!("mpu daemon at {addr} (proto v{})", s.proto_version);
+            println!("  uptime          {:.1}s", s.uptime_ms as f64 / 1e3);
+            println!("  requests        {}", s.requests);
+            println!("  points          {}", s.points);
+            println!("  simulated       {}", s.simulated);
+            println!("  mem hits        {}", s.mem_hits);
+            println!("  disk hits       {}", s.disk_hits);
+            println!("  dedup waits     {}", s.dedup_waits);
+            println!("  kernels         {}", s.kernels_compiled);
+            println!("  mem entries     {}", s.mem_entries);
+            match &s.store {
+                Some(st) => println!(
+                    "  store           {} entries, {}/{} KiB, hits={} misses={} evictions={} corrupt_dropped={}",
+                    st.entries,
+                    st.bytes / 1024,
+                    st.max_bytes / 1024,
+                    st.hits,
+                    st.misses,
+                    st.evictions,
+                    st.corrupt_dropped
+                ),
+                None => println!("  store           (none)"),
+            }
+        }
+        "shutdown" => {
+            let addr = addr_of(rest);
+            let Response::Bye = daemon_request(&addr, &Request::Shutdown)? else {
+                anyhow::bail!("unexpected response to shutdown");
+            };
+            println!("mpu daemon at {addr} stopped");
         }
         "compile" => {
             let Some(name) = rest.first() else { usage() };

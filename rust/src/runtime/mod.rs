@@ -103,7 +103,13 @@ pub fn validate_against_xla(
         xla_out.len(),
         sim_output.len()
     );
-    let tol = p.tol.max(1e-4);
+    // Floor the tolerance at a relative slack scaled to the golden's
+    // magnitude: XLA is free to reassociate reductions, so outputs that
+    // are large sums (e.g. PR's per-block partials, whose device-vs-host
+    // tolerance is exact-zero) differ from the simulator by a few ulps
+    // of the *sum*, not of 1.0.
+    let max_mag = xla_out.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let tol = p.tol.max(1e-4).max(1e-5 * max_mag);
     let mut max_err = 0f32;
     let mut mismatches = 0usize;
     for (a, b) in sim_output.iter().zip(&xla_out) {

@@ -23,8 +23,11 @@ pub enum TsvTraffic {
 /// Flat counter block. All counters are monotonically increasing.
 ///
 /// Serializes with stable field names — the counters are part of the
-/// `BENCH_suite.json` schema (see [`crate::coordinator::bench`]).
-#[derive(Clone, Debug, Default, serde::Serialize)]
+/// `BENCH_suite.json` schema (see [`crate::coordinator::bench`]) and of
+/// the on-disk result store (see [`crate::coordinator::store`]); fields
+/// added later default to zero when older entries are deserialized.
+#[derive(Clone, Debug, Default, serde::Serialize, serde::Deserialize)]
+#[serde(default)]
 pub struct Stats {
     /// Simulated core cycles to completion.
     pub cycles: u64,

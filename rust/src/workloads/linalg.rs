@@ -66,13 +66,20 @@ pub fn axpy(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
     })
 }
 
-/// PR (CUB-style parallel reduction): grid-stride partial sums, a shared
-/// memory tree reduction per block, and a global atomic accumulate.
+/// PR (CUB-style parallel reduction): grid-stride partial sums and a
+/// fixed-order shared-memory tree reduction per block. Each block writes
+/// its partial into a distinct `partials[ctaid]` slot instead of a
+/// single-accumulator global f32 atomic: every addition now happens in a
+/// schedule-independent order (sequential per thread, then the pairwise
+/// tree between barriers), so the output is bit-identical across machine
+/// variants and the host golden reproduces it exactly.
 pub fn pr(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
     let n: usize = match scale {
         Scale::Tiny => 4096,
         Scale::Small => 65536,
     };
+    const BLOCKS: usize = 32;
+    const THREADS: usize = 128;
     let kernel = KernelSource::assemble(
         "pr",
         &[Reg::r(10), Reg::r(11), Reg::r(12)],
@@ -114,7 +121,10 @@ pub fn pr(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
             setp.ne.s32 %p4, %r1, 0
             @%p4 bra  DONE
             ld.shared.f32 %f5, [%r6+0]
-            red.global.add.f32 [%r11+0], %f5
+            mov.u32   %r2, %ctaid.x
+            shl.u32   %r2, %r2, 2
+            add.u32   %r2, %r11, %r2
+            st.global.f32 [%r2+0], %f5
         DONE:
             exit
         "#,
@@ -122,16 +132,38 @@ pub fn pr(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
     let mut rng = Prng::new(0xB2);
     let xv = rng.f32_vec(n, 0.0, 1.0);
     let x = dev.alloc_bytes(n * 4);
-    let out = dev.alloc_bytes(4);
+    let out = dev.alloc_bytes(BLOCKS * 4);
     dev.write_f32(x, &xv);
-    dev.write_f32(out, &[0.0]);
-    // Golden: match the device's summation order closely enough —
-    // f32 sum with a tolerance scaled to n.
-    let golden = vec![xv.iter().map(|v| *v as f64).sum::<f64>() as f32];
+    dev.write_f32(out, &vec![0.0; BLOCKS]);
+    // Golden: replay the device's exact f32 addition order — per-thread
+    // grid-stride accumulation, then the pairwise tree (threads `t < off`
+    // add slot `t + off`, barrier, halve `off`). Bit-exact, so tol = 0.
+    let stride = BLOCKS * THREADS;
+    let mut golden = vec![0f32; BLOCKS];
+    for (b, out_slot) in golden.iter_mut().enumerate() {
+        let mut sm = [0f32; THREADS];
+        for (t, slot) in sm.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            let mut i = b * THREADS + t;
+            while i < n {
+                acc += xv[i];
+                i += stride;
+            }
+            *slot = acc;
+        }
+        let mut off = THREADS / 2;
+        while off > 0 {
+            for t in 0..off {
+                sm[t] += sm[t + off];
+            }
+            off /= 2;
+        }
+        *out_slot = sm[0];
+    }
     Ok(Prepared {
         workload: Workload::Pr,
         kernel,
-        launch: LaunchConfig::with_smem(32, 128, 128 * 4),
+        launch: LaunchConfig::with_smem(BLOCKS as u32, THREADS as u32, (THREADS * 4) as u32),
         params: vec![
             ParamValue::U32(x as u32),
             ParamValue::U32(out as u32),
@@ -139,11 +171,11 @@ pub fn pr(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
         ],
         home: Some((x, 512)),
         out_addr: out,
-        out_len: 1,
+        out_len: BLOCKS,
         golden,
-        tol: n as f32 * 1e-4,
+        tol: 0.0,
         xla_inputs: vec![xv],
-        meta: vec![("n".into(), n as u32)],
+        meta: vec![("n".into(), n as u32), ("blocks".into(), BLOCKS as u32)],
     })
 }
 

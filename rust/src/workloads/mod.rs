@@ -151,6 +151,23 @@ pub enum Scale {
     Small,
 }
 
+impl Scale {
+    pub const ALL: [Scale; 2] = [Scale::Tiny, Scale::Small];
+
+    /// Stable lower-case name (part of the `BENCH_suite.json` schema and
+    /// the sweep-service protocol/store keys).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scale::Tiny => "tiny",
+            Scale::Small => "small",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Scale> {
+        Scale::ALL.iter().copied().find(|x| x.name() == s)
+    }
+}
+
 /// A prepared problem: kernel + launch + device state + golden output.
 pub struct Prepared {
     pub workload: Workload,

@@ -1,0 +1,220 @@
+//! Integration tests of the sweep service and its persistent result
+//! store: cross-process round-trips, corrupt-entry recovery, schema
+//! invalidation, concurrent-submit dedup, and the warm-restart
+//! acceptance path (second identical batch re-simulates nothing).
+
+use mpu::config::MachineConfig;
+use mpu::coordinator::proto::{self, Request, Response, SubmitRequest};
+use mpu::coordinator::store::STORE_SCHEMA_VERSION;
+use mpu::coordinator::sweep::{SweepPoint, Target};
+use mpu::coordinator::{run_workload_scaled, DiskStore, Service, StoreConfig, SweepServer};
+use mpu::workloads::{Scale, Workload};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("mpu_service_test")
+        .join(format!("{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn axpy_key() -> String {
+    let cfg = MachineConfig::scaled();
+    SweepPoint {
+        label: "mpu".into(),
+        workload: Workload::Axpy,
+        scale: Scale::Tiny,
+        target: Target::Mpu(cfg),
+    }
+    .cache_key()
+}
+
+fn submit_axpy(priority: i32) -> SubmitRequest {
+    SubmitRequest {
+        suite: false,
+        workloads: vec!["axpy".into()],
+        scale: "tiny".into(),
+        variants: vec!["mpu".into()],
+        config: vec![],
+        priority,
+        fresh: false,
+    }
+}
+
+#[test]
+fn store_round_trip_across_two_processes() {
+    // Two independent `DiskStore` opens share no in-memory state — the
+    // same situation as two CLI invocations or a daemon restart (the CI
+    // daemon-smoke job exercises the literal two-process path).
+    let root = tmp_root("two_proc");
+    let key = axpy_key();
+    let r = run_workload_scaled(Workload::Axpy, &MachineConfig::scaled(), Scale::Tiny).unwrap();
+    {
+        let writer = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+        writer.store(&key, Scale::Tiny, &r);
+        assert_eq!(writer.stats().entries, 1);
+    }
+    let reader = DiskStore::open(StoreConfig::new(root)).unwrap();
+    let back = reader.load(&key).expect("fresh open must see the persisted entry");
+    assert_eq!(back.cycles, r.cycles);
+    assert_eq!(back.workload, Workload::Axpy);
+    let a: Vec<u32> = back.output.iter().map(|v| v.to_bits()).collect();
+    let b: Vec<u32> = r.output.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(a, b, "output must survive the disk round-trip bit-exactly");
+    assert_eq!(reader.stats().hits, 1);
+}
+
+#[test]
+fn corrupt_entry_recovers_as_a_miss() {
+    let root = tmp_root("corrupt");
+    let key = axpy_key();
+    let r = run_workload_scaled(Workload::Axpy, &MachineConfig::scaled(), Scale::Tiny).unwrap();
+    let store = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+    store.store(&key, Scale::Tiny, &r);
+    let entry_path = root.join("entries").join(format!("{key}.json"));
+    std::fs::write(&entry_path, b"{ this is not json").unwrap();
+    assert!(store.load(&key).is_none(), "corrupt entry must read as a miss");
+    let stats = store.stats();
+    assert_eq!(stats.corrupt_dropped, 1);
+    assert_eq!(stats.misses, 1);
+    assert!(!entry_path.exists(), "corrupt entry file must be removed");
+    // The store keeps working: re-store, re-load.
+    store.store(&key, Scale::Tiny, &r);
+    assert!(store.load(&key).is_some());
+}
+
+#[test]
+fn stale_schema_version_invalidates_the_entry() {
+    let root = tmp_root("schema");
+    let key = axpy_key();
+    let r = run_workload_scaled(Workload::Axpy, &MachineConfig::scaled(), Scale::Tiny).unwrap();
+    let store = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+    store.store(&key, Scale::Tiny, &r);
+    // Rewrite the entry with a bumped schema version (otherwise intact).
+    let entry_path = root.join("entries").join(format!("{key}.json"));
+    let mut v: serde_json::Value =
+        serde_json::from_str(&std::fs::read_to_string(&entry_path).unwrap()).unwrap();
+    assert_eq!(v["schema_version"], STORE_SCHEMA_VERSION);
+    v["schema_version"] = serde_json::json!(STORE_SCHEMA_VERSION + 1);
+    std::fs::write(&entry_path, serde_json::to_string(&v).unwrap()).unwrap();
+    assert!(store.load(&key).is_none(), "future-schema entry must be dropped, not trusted");
+    assert_eq!(store.stats().corrupt_dropped, 1);
+    assert!(!entry_path.exists());
+}
+
+#[test]
+fn service_restart_serves_everything_from_disk() {
+    // The acceptance criterion in miniature: a second service instance
+    // (fresh memory tier) over the same store re-simulates nothing.
+    let root = tmp_root("restart");
+    let req = SubmitRequest {
+        suite: false,
+        workloads: vec!["axpy".into(), "knn".into(), "blur".into()],
+        scale: "tiny".into(),
+        variants: vec!["mpu".into(), "gpu".into()],
+        config: vec![],
+        priority: 0,
+        fresh: false,
+    };
+    let first = {
+        let store = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+        let svc = Arc::new(Service::new(Some(store)));
+        svc.run_request(&req).unwrap()
+    };
+    assert_eq!(first.points, 6);
+    assert_eq!(first.simulated, 6);
+    let second = {
+        let store = DiskStore::open(StoreConfig::new(root)).unwrap();
+        let svc = Arc::new(Service::new(Some(store)));
+        svc.run_request(&req).unwrap()
+    };
+    assert_eq!(second.simulated, 0, "warm restart must re-simulate nothing");
+    assert_eq!(second.disk_hits, 6, "all points must come from the on-disk store");
+    for (a, b) in first.results.iter().zip(&second.results) {
+        assert_eq!(a.workload, b.workload);
+        assert_eq!(a.cycles, b.cycles, "{} cycles must match across tiers", a.workload);
+        assert!(b.correct);
+    }
+}
+
+#[test]
+fn concurrent_submits_dedup_to_one_simulation() {
+    // Two clients request the same point over TCP at the same time: the
+    // in-flight table must collapse them onto one simulation (the loser
+    // either waits on the flight or hits the memory tier).
+    let svc = Arc::new(Service::new(None));
+    let server = SweepServer::bind(svc, "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    let clients: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                match proto::request(&addr, &Request::Submit(submit_axpy(0))).unwrap() {
+                    Response::Done(reply) => reply,
+                    other => panic!("expected done, got {other:?}"),
+                }
+            })
+        })
+        .collect();
+    let replies: Vec<_> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    let simulated: usize = replies.iter().map(|r| r.simulated).sum();
+    let total: usize = replies.iter().map(|r| r.points).sum();
+    assert_eq!(total, 2);
+    assert_eq!(simulated, 1, "identical concurrent submits must simulate exactly once");
+    assert_eq!(replies[0].results[0].cycles, replies[1].results[0].cycles);
+    for r in &replies {
+        assert!(r.results[0].correct);
+    }
+
+    // Status over the wire reflects both requests, then shut down.
+    match proto::request(&addr, &Request::Status).unwrap() {
+        Response::Status(s) => {
+            assert_eq!(s.requests, 2);
+            assert_eq!(s.points, 2);
+            assert_eq!(s.simulated, 1);
+            assert_eq!(s.mem_hits + s.dedup_waits, 1);
+            assert!(s.store.is_none());
+        }
+        other => panic!("expected status, got {other:?}"),
+    }
+    match proto::request(&addr, &Request::Shutdown).unwrap() {
+        Response::Bye => {}
+        other => panic!("expected bye, got {other:?}"),
+    }
+    server_thread.join().unwrap();
+}
+
+#[test]
+fn ping_and_bad_requests_over_the_wire() {
+    let svc = Arc::new(Service::new(None));
+    let server = SweepServer::bind(svc, "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    match proto::request(&addr, &Request::Ping).unwrap() {
+        Response::Pong { proto_version } => assert_eq!(proto_version, proto::PROTO_VERSION),
+        other => panic!("expected pong, got {other:?}"),
+    }
+    // An unknown workload is a protocol-level error, not a dead server.
+    let mut bad = submit_axpy(0);
+    bad.workloads = vec!["bogus".into()];
+    match proto::request(&addr, &Request::Submit(bad)).unwrap() {
+        Response::Error { message } => assert!(message.contains("bogus"), "got: {message}"),
+        other => panic!("expected error, got {other:?}"),
+    }
+    // The same connection-per-request model still works afterwards.
+    match proto::request(&addr, &Request::Submit(submit_axpy(7))).unwrap() {
+        Response::Done(reply) => assert_eq!(reply.points, 1),
+        other => panic!("expected done, got {other:?}"),
+    }
+    match proto::request(&addr, &Request::Shutdown).unwrap() {
+        Response::Bye => {}
+        other => panic!("expected bye, got {other:?}"),
+    }
+    server_thread.join().unwrap();
+}

@@ -81,16 +81,10 @@ fn all_variants_produce_bit_identical_outputs() {
         for (base, r) in mpu.iter().zip(chunk) {
             assert_eq!(base.report.workload, r.report.workload, "suite order must match");
             assert!(r.report.correct, "{:?} incorrect on `{}`", r.report.workload, r.label);
-            // PR accumulates random f32 partial sums through a single
-            // global atomic: the accumulation *order* is scheduling- and
-            // therefore timing-dependent, so different memory systems
-            // legitimately round differently. Every other workload's
-            // functional result is order-independent (stencils and
-            // copies write disjoint addresses; HIST's f32 atomics add
-            // exact small integers) and must match bit-for-bit.
-            if r.report.workload == Workload::Pr {
-                continue;
-            }
+            // Every workload — including PR since its single-accumulator
+            // f32 atomic was replaced by a fixed-order pairwise
+            // reduction into per-block slots — is functionally
+            // order-independent, so all machines must match bit-for-bit.
             let a: Vec<u32> = base.report.output.iter().map(|v| v.to_bits()).collect();
             let b: Vec<u32> = r.report.output.iter().map(|v| v.to_bits()).collect();
             assert_eq!(
