@@ -3,7 +3,7 @@
 //! DESIGN.md §3).
 
 /// Where instructions may execute (paper §IV-B, §VI-C/D ablations).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, serde::Serialize)]
 pub enum PipelineMode {
     /// Full MPU hybrid pipeline with instruction offloading (the paper).
     Hybrid,
@@ -13,7 +13,7 @@ pub enum PipelineMode {
 }
 
 /// Instruction-location policy used at issue time (Fig. 15).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, serde::Serialize)]
 pub enum OffloadPolicy {
     /// Use the compiler's Algorithm-1 annotations (the paper's proposal).
     CompilerAnnotated,
@@ -27,7 +27,7 @@ pub enum OffloadPolicy {
 }
 
 /// Shared-memory placement (Fig. 11 ablation; §IV-C).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, serde::Serialize)]
 pub enum SmemLocation {
     /// Near-bank shared memory on the DRAM die (horizontal core
     /// structure; the paper's design).
@@ -38,7 +38,7 @@ pub enum SmemLocation {
 
 /// Warp scheduling discipline (GTO is the paper's implicit default; RR is
 /// an extension ablation).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, serde::Serialize)]
 pub enum SchedPolicy {
     /// Greedy-then-oldest.
     Gto,
@@ -48,7 +48,7 @@ pub enum SchedPolicy {
 
 /// DRAM timing parameters, in memory-controller cycles (Table II row
 /// `tRCD/tCCD/tRTP/tRP/tRAS/tRFC/tREFI`).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, serde::Serialize)]
 pub struct DramTiming {
     pub t_rcd: u64,
     pub t_ccd: u64,
@@ -70,7 +70,7 @@ impl Default for DramTiming {
 
 /// Per-access / per-bit energy coefficients in joules (Table II rows
 /// `RD,WR/PRE,ACT/REF/RF/SMEM` and `TSV / (on)off-chip bus`).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, serde::Serialize)]
 pub struct EnergyCoeffs {
     /// DRAM read or write, J per 256-bit column access.
     pub dram_rdwr: f64,
@@ -118,7 +118,7 @@ impl Default for EnergyCoeffs {
 }
 
 /// Full machine configuration (Table II + ablation knobs).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, serde::Serialize)]
 pub struct MachineConfig {
     // ---- geometry ----
     /// Number of 3D-stacked processors (cubes).
@@ -358,7 +358,7 @@ impl MachineConfig {
 /// 900 GB/s of HBM2, ~400-cycle memory latency) but is instantiated with
 /// the same number of SMs as the MPU config has cores so runtimes compare
 /// one-to-one.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, serde::Serialize)]
 pub struct GpuConfig {
     /// Streaming multiprocessors.
     pub sms: usize,
@@ -386,7 +386,7 @@ pub struct GpuConfig {
 /// GPU baseline energy coefficients: the long compute-centric data path
 /// (HBM cell → TSV → off-chip PHY → L2 → crossbar → L1 → RF), per §VI-B's
 /// narrative, built from the same Table-II primitives.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, serde::Serialize)]
 pub struct GpuEnergyCoeffs {
     /// DRAM cell read/write, J per 256-bit access (same cell energy).
     pub dram_rdwr: f64,
@@ -424,7 +424,7 @@ impl Default for GpuEnergyCoeffs {
 /// Configuration of the ideal-bandwidth roofline machine: the GPU
 /// baseline's SIMT geometry with an infinite-bandwidth, fixed-latency
 /// memory system (every speedup plot's "how far from the wall" column).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, serde::Serialize)]
 pub struct IdealConfig {
     pub sms: usize,
     pub subcores_per_sm: usize,

@@ -22,6 +22,7 @@
 //! Fields are append-only: tooling that consumes version 1 keys must
 //! keep working across future PRs.
 
+use super::sweep::SweepResult;
 use super::{geomean, PairReport, RunReport};
 use crate::energy::EnergyBreakdown;
 use crate::sim::Stats;
@@ -32,6 +33,10 @@ use std::path::Path;
 
 /// Canonical file name the suite baseline is written to.
 pub const SUITE_JSON: &str = "BENCH_suite.json";
+
+/// Canonical file name of the simulator-throughput report
+/// (`mpu suite --perf`).
+pub const SIMPERF_JSON: &str = "BENCH_simperf.json";
 
 /// Stable lower-case name of a problem scale.
 pub fn scale_name(scale: Scale) -> &'static str {
@@ -51,6 +56,15 @@ pub struct SuiteStats {
     pub sim_cache_disk_hits: u64,
     /// Persistent store counters (absent when no store is attached).
     pub store: Option<crate::coordinator::store::StoreStats>,
+    /// Total wall-clock ms spent simulating the runs in this document
+    /// (append-only v1 addition; cache hits count the original
+    /// simulation's cost).
+    pub sim_wall_ms: f64,
+    /// Total simulated cycles across the document's runs.
+    pub sim_cycles_total: u64,
+    /// Aggregate simulator throughput: `sim_cycles_total` per
+    /// wall-clock second.
+    pub sim_cycles_per_sec: f64,
 }
 
 impl SuiteStats {
@@ -61,7 +75,17 @@ impl SuiteStats {
             sim_cache_hits: cache.hits(),
             sim_cache_disk_hits: cache.disk_hits(),
             store: cache.store().map(|s| s.stats()),
+            sim_wall_ms: 0.0,
+            sim_cycles_total: 0,
+            sim_cycles_per_sec: 0.0,
         }
+    }
+
+    /// Fold one run's simulator-throughput numbers into the appendix.
+    pub fn record_run(&mut self, r: &RunReport) {
+        self.sim_wall_ms += r.sim_wall_ms;
+        self.sim_cycles_total += r.cycles;
+        self.sim_cycles_per_sec = super::sim_rate(self.sim_cycles_total, self.sim_wall_ms);
     }
 }
 
@@ -76,6 +100,11 @@ pub struct MachineEntry {
     pub max_err: f32,
     pub near_fraction: f64,
     pub row_miss_rate: f64,
+    /// Simulator wall-time of the producing run (append-only v1
+    /// addition; zero in documents from older producers).
+    pub sim_wall_ms: f64,
+    /// Simulated cycles per wall-second of the producing run.
+    pub sim_cycles_per_sec: f64,
     pub energy: EnergyBreakdown,
     pub stats: Stats,
 }
@@ -91,6 +120,8 @@ impl MachineEntry {
             max_err: r.max_err,
             near_fraction: r.stats.near_fraction(),
             row_miss_rate: r.stats.row_miss_rate(),
+            sim_wall_ms: r.sim_wall_ms,
+            sim_cycles_per_sec: r.sim_cycles_per_sec,
             energy: r.energy,
             stats: r.stats.clone(),
         }
@@ -230,6 +261,92 @@ pub fn write_suite_json(path: &Path, doc: &SuiteJson) -> Result<()> {
     Ok(())
 }
 
+// ---------------- simulator-throughput report (`--perf`) ----------------
+
+/// How the `BENCH_simperf.json` timings were taken — recorded in the
+/// file so numbers are only ever compared like-for-like across PRs.
+#[derive(Clone, Debug, Serialize)]
+pub struct SimperfMethodology {
+    /// What the per-point timer brackets.
+    pub timer: String,
+    /// Points ran one at a time (no rayon contention in the numbers).
+    pub serial: bool,
+    /// Caches/stores bypassed: every point was actually simulated.
+    pub fresh: bool,
+    pub os: String,
+    pub arch: String,
+    /// Parallelism available on the producing host (context for the
+    /// serial numbers).
+    pub host_threads: usize,
+}
+
+/// One (machine variant × workload) throughput sample.
+#[derive(Clone, Debug, Serialize)]
+pub struct SimperfPoint {
+    pub variant: String,
+    pub workload: String,
+    pub cycles: u64,
+    pub wall_ms: f64,
+    pub cycles_per_sec: f64,
+}
+
+/// The `BENCH_simperf.json` document (`mpu suite --perf`): wall-ms and
+/// simulated-cycles-per-second for every (variant × workload) point, so
+/// every PR has a measurable simulator-speed number to move. Schema
+/// version 1; fields are append-only like the suite document's.
+#[derive(Clone, Debug, Serialize)]
+pub struct SimperfJson {
+    pub schema_version: u32,
+    pub suite: String,
+    pub scale: String,
+    pub methodology: SimperfMethodology,
+    pub total_wall_ms: f64,
+    pub geomean_cycles_per_sec: f64,
+    pub points: Vec<SimperfPoint>,
+}
+
+/// Build the throughput document from sweep results (one per
+/// variant × workload, labels are the variant names).
+pub fn simperf_json(scale: Scale, results: &[SweepResult], serial: bool, fresh: bool) -> SimperfJson {
+    let points: Vec<SimperfPoint> = results
+        .iter()
+        .map(|r| SimperfPoint {
+            variant: r.label.clone(),
+            workload: r.report.workload.name().to_string(),
+            cycles: r.report.cycles,
+            wall_ms: r.report.sim_wall_ms,
+            cycles_per_sec: r.report.sim_cycles_per_sec,
+        })
+        .collect();
+    let total_wall_ms = points.iter().map(|p| p.wall_ms).sum();
+    let cps: Vec<f64> = points.iter().map(|p| p.cycles_per_sec).collect();
+    SimperfJson {
+        schema_version: 1,
+        suite: "simperf".to_string(),
+        scale: scale_name(scale).to_string(),
+        methodology: SimperfMethodology {
+            timer: "std::time::Instant around SimtFrontend::run only (prepare/compile/check excluded)"
+                .to_string(),
+            serial,
+            fresh,
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            host_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        },
+        total_wall_ms,
+        geomean_cycles_per_sec: geomean(&cps),
+        points,
+    }
+}
+
+/// Serialize and write a throughput document.
+pub fn write_simperf_json(path: &Path, doc: &SimperfJson) -> Result<()> {
+    let mut body = serde_json::to_string_pretty(doc)?;
+    body.push('\n');
+    std::fs::write(path, body)?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,6 +411,66 @@ mod tests {
         assert!(all_correct(&doc));
         let s = serde_json::to_string(&doc).unwrap();
         for key in ["variants", "variant", "speedup_vs_gpu", "geomean_speedup_vs_gpu"] {
+            assert!(s.contains(&format!("\"{key}\"")), "missing key {key}");
+        }
+    }
+
+    #[test]
+    fn simperf_json_schema_is_stable() {
+        let cfg = MachineConfig::scaled();
+        let results = crate::coordinator::Sweep::new()
+            .point(
+                "mpu",
+                Workload::Axpy,
+                Scale::Tiny,
+                crate::coordinator::Target::Mpu(cfg.clone()),
+            )
+            .fresh()
+            .run()
+            .unwrap();
+        let doc = simperf_json(Scale::Tiny, &results, true, true);
+        assert_eq!(doc.schema_version, 1);
+        assert_eq!(doc.suite, "simperf");
+        assert_eq!(doc.scale, "tiny");
+        assert_eq!(doc.points.len(), 1);
+        assert_eq!(doc.points[0].variant, "mpu");
+        assert_eq!(doc.points[0].workload, "axpy");
+        assert!(doc.points[0].wall_ms >= 0.0);
+        assert!(doc.total_wall_ms >= doc.points[0].wall_ms);
+        let s = serde_json::to_string(&doc).unwrap();
+        for key in [
+            "schema_version",
+            "methodology",
+            "timer",
+            "serial",
+            "fresh",
+            "host_threads",
+            "total_wall_ms",
+            "geomean_cycles_per_sec",
+            "points",
+            "wall_ms",
+            "cycles_per_sec",
+        ] {
+            assert!(s.contains(&format!("\"{key}\"")), "missing key {key}");
+        }
+    }
+
+    #[test]
+    fn machine_entry_and_stats_carry_sim_throughput() {
+        // The suite JSON's per-machine columns and `stats` appendix now
+        // carry the simulator-throughput fields (append-only, schema v1
+        // preserved).
+        let cfg = MachineConfig::scaled();
+        let pair = run_pair(Workload::Axpy, &cfg, Scale::Tiny).unwrap();
+        let mut stats = SuiteStats::from_cache(crate::coordinator::SimCache::global());
+        stats.record_run(&pair.mpu);
+        stats.record_run(&pair.gpu);
+        assert_eq!(stats.sim_cycles_total, pair.mpu.cycles + pair.gpu.cycles);
+        let mut doc = suite_json(Scale::Tiny, &[pair]);
+        doc.stats = Some(stats);
+        assert_eq!(doc.schema_version, 1);
+        let s = serde_json::to_string(&doc).unwrap();
+        for key in ["sim_wall_ms", "sim_cycles_per_sec", "sim_cycles_total"] {
             assert!(s.contains(&format!("\"{key}\"")), "missing key {key}");
         }
     }

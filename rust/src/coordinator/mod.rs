@@ -36,6 +36,14 @@ pub struct RunReport {
     pub workload: Workload,
     pub machine: &'static str,
     pub cycles: u64,
+    /// Wall-clock milliseconds the producing simulation took
+    /// (`SimtFrontend::run` only — prepare/compile/check excluded).
+    /// Cache and store hits return the original simulation's cost.
+    pub sim_wall_ms: f64,
+    /// Simulated cycles per wall-clock second of the producing
+    /// simulation — the simulator-throughput metric `BENCH_simperf.json`
+    /// tracks across PRs.
+    pub sim_cycles_per_sec: f64,
     pub stats: Stats,
     pub energy: EnergyBreakdown,
     /// Output matched the pure-Rust golden within tolerance.
@@ -54,6 +62,16 @@ impl RunReport {
     /// Achieved DRAM bandwidth in GB/s at the 1 GHz core clock.
     pub fn dram_gbps(&self) -> f64 {
         self.stats.dram_bytes_per_cycle() // bytes/cycle × 1 GHz = GB/s
+    }
+}
+
+/// Simulated cycles per wall-clock second (0 when no wall time was
+/// observed, e.g. a sub-resolution run).
+pub(crate) fn sim_rate(cycles: u64, wall_ms: f64) -> f64 {
+    if wall_ms > 0.0 {
+        cycles as f64 / (wall_ms / 1e3)
+    } else {
+        0.0
     }
 }
 

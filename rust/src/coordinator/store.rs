@@ -26,12 +26,12 @@
 //! rename) but may lose index recency updates, which only perturbs LRU
 //! order, never correctness.
 //!
-//! Known limitation: the `<confighash>` key component hashes the
-//! configuration's `Debug` rendering with `DefaultHasher`, so adding a
-//! config field — or a std hasher change across Rust releases — shifts
-//! every key. That is *safe* (cold restart, old entries age out under
-//! the LRU cap) but silently forfeits warmth; a stable serialized key
-//! is the upgrade path if it starts to matter (tracked in ROADMAP).
+//! The `<confighash>` key component is a stable FNV-1a over the
+//! serde-serialized configuration (see `Target::fingerprint`), so keys
+//! survive Rust releases and std hasher changes; only an actual
+//! configuration-shape or value change moves an entry's key. (Schema
+//! v2; the former `DefaultHasher`-over-`Debug` fingerprint went cold —
+//! safely, but silently — on toolchain updates.)
 
 use super::RunReport;
 use crate::workloads::{Scale, Workload};
@@ -44,7 +44,12 @@ use std::sync::Mutex;
 
 /// Version of the on-disk entry/index schema. Bumping it invalidates
 /// every existing entry (they are dropped on load, not migrated).
-pub const STORE_SCHEMA_VERSION: u32 = 1;
+///
+/// v2: stable serde-based config fingerprints in the keys (entries
+/// written under the old `DefaultHasher` keys would never be read
+/// again) plus the simulator-throughput fields (`sim_wall_ms`,
+/// `sim_cycles_per_sec`).
+pub const STORE_SCHEMA_VERSION: u32 = 2;
 
 /// Configuration of a [`DiskStore`].
 #[derive(Clone, Debug)]
@@ -93,6 +98,10 @@ struct StoredEntry {
     scale: String,
     machine: String,
     cycles: u64,
+    #[serde(default)]
+    sim_wall_ms: f64,
+    #[serde(default)]
+    sim_cycles_per_sec: f64,
     stats: crate::sim::Stats,
     energy: crate::energy::EnergyBreakdown,
     correct: bool,
@@ -122,6 +131,8 @@ impl StoredEntry {
             scale: scale.name().to_string(),
             machine: r.machine.to_string(),
             cycles: r.cycles,
+            sim_wall_ms: r.sim_wall_ms,
+            sim_cycles_per_sec: r.sim_cycles_per_sec,
             stats: r.stats.clone(),
             energy: r.energy,
             correct: r.correct,
@@ -143,6 +154,8 @@ impl StoredEntry {
             workload,
             machine,
             cycles: self.cycles,
+            sim_wall_ms: self.sim_wall_ms,
+            sim_cycles_per_sec: self.sim_cycles_per_sec,
             stats: self.stats,
             energy: self.energy,
             correct: self.correct,
@@ -409,6 +422,8 @@ mod tests {
         let a: Vec<u32> = back.output.iter().map(|v| v.to_bits()).collect();
         let b: Vec<u32> = r.output.iter().map(|v| v.to_bits()).collect();
         assert_eq!(a, b, "stored output must round-trip bit-exactly");
+        assert!(back.sim_wall_ms >= 0.0);
+        assert_eq!(back.sim_cycles_per_sec, r.sim_cycles_per_sec);
         assert_eq!(store.stats().hits, 1);
         assert_eq!(store.stats().entries, 1);
     }

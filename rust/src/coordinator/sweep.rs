@@ -25,11 +25,28 @@ use crate::gpu::{GpuMachine, IdealMachine};
 use crate::workloads::{prepare, Scale, SizeOnlyDev, Workload};
 use anyhow::Result;
 use rayon::prelude::*;
-use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Stable 64-bit FNV-1a. The configuration fingerprints feed the
+/// on-disk result store's keys, so they must not depend on the std
+/// hasher (which is allowed to change between Rust releases and is
+/// randomized in some configurations).
+fn stable_hash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Canonical serialization a configuration is fingerprinted through.
+fn ser_cfg<T: serde::Serialize>(v: &T) -> String {
+    serde_json::to_string(v).expect("machine configurations serialize")
+}
 
 /// Target machine of a sweep point.
 #[derive(Clone, Debug)]
@@ -68,18 +85,20 @@ impl Target {
         cfg.smem_location == SmemLocation::NearBank
     }
 
-    /// Stable variant discriminant + configuration fingerprint. The
-    /// fingerprint hashes the full `Debug` rendering of the
-    /// configuration, so any knob change produces a new cache key.
+    /// Stable variant discriminant + configuration fingerprint: FNV-1a
+    /// over the serde-JSON rendering of the configuration(s). Field
+    /// names are part of the serialization, so adding or changing any
+    /// knob still produces a new cache key, while — unlike the former
+    /// `DefaultHasher`-over-`Debug` fingerprint — the key no longer
+    /// shifts with std hasher or `Debug`-format changes across Rust
+    /// releases (the ROADMAP's "store entries silently go cold" item).
     fn fingerprint(&self) -> (&'static str, u64) {
         let (kind, repr) = match self {
-            Target::Mpu(c) => ("mpu", format!("{c:?}")),
-            Target::Gpu(g, c) => ("gpu", format!("{g:?}|{c:?}")),
-            Target::Ideal(i, c) => ("ideal", format!("{i:?}|{c:?}")),
+            Target::Mpu(c) => ("mpu", ser_cfg(c)),
+            Target::Gpu(g, c) => ("gpu", format!("{}|{}", ser_cfg(g), ser_cfg(c))),
+            Target::Ideal(i, c) => ("ideal", format!("{}|{}", ser_cfg(i), ser_cfg(c))),
         };
-        let mut h = DefaultHasher::new();
-        repr.hash(&mut h);
-        (kind, h.finish())
+        (kind, stable_hash(&repr))
     }
 }
 
@@ -322,7 +341,9 @@ pub fn run_mpu_with(
     let p = prepare(w, scale, &mut m)?;
     let loc_stats = kernel.loc_stats.clone();
     m.launch(kernel, p.launch, &p.params, p.home_fn())?;
+    let t0 = Instant::now();
     let stats = m.run()?;
+    let sim_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     let output = m.read_f32s(p.out_addr, p.out_len);
     let (correct, max_err) = check(&output, &p.golden, p.tol);
     let energy = mpu_energy(&stats, &cfg.energy);
@@ -330,6 +351,8 @@ pub fn run_mpu_with(
         workload: w,
         machine: "mpu",
         cycles: stats.cycles,
+        sim_cycles_per_sec: super::sim_rate(stats.cycles, sim_wall_ms),
+        sim_wall_ms,
         stats,
         energy,
         correct,
@@ -351,7 +374,9 @@ pub fn run_gpu_with(
     let p = prepare(w, scale, &mut g)?;
     let loc_stats = kernel.loc_stats.clone();
     g.launch(kernel, p.launch, &p.params)?;
+    let t0 = Instant::now();
     let stats = g.run()?;
+    let sim_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     let output = g.read_f32s(p.out_addr, p.out_len);
     let (correct, max_err) = check(&output, &p.golden, p.tol);
     let energy = gpu_energy(&stats, &gcfg.energy);
@@ -359,6 +384,8 @@ pub fn run_gpu_with(
         workload: w,
         machine: "gpu",
         cycles: stats.cycles,
+        sim_cycles_per_sec: super::sim_rate(stats.cycles, sim_wall_ms),
+        sim_wall_ms,
         stats,
         energy,
         correct,
@@ -380,7 +407,9 @@ pub fn run_ideal_with(
     let p = prepare(w, scale, &mut m)?;
     let loc_stats = kernel.loc_stats.clone();
     m.launch(kernel, p.launch, &p.params)?;
+    let t0 = Instant::now();
     let stats = m.run()?;
+    let sim_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     let output = m.read_f32s(p.out_addr, p.out_len);
     let (correct, max_err) = check(&output, &p.golden, p.tol);
     let energy = gpu_energy(&stats, &icfg.energy);
@@ -388,6 +417,8 @@ pub fn run_ideal_with(
         workload: w,
         machine: "ideal",
         cycles: stats.cycles,
+        sim_cycles_per_sec: super::sim_rate(stats.cycles, sim_wall_ms),
+        sim_wall_ms,
         stats,
         energy,
         correct,
@@ -635,6 +666,31 @@ mod tests {
             .run_with_cache(&cache)
             .unwrap();
         assert_eq!(cache.hits(), before);
+    }
+
+    #[test]
+    fn config_fingerprint_is_stable_and_serde_based() {
+        // FNV-1a known vectors: the store key must never move with a
+        // Rust release (the old DefaultHasher fingerprint did).
+        assert_eq!(stable_hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(stable_hash("a"), 0xaf63_dc4c_8601_ec8c);
+        // Same config → same fingerprint across independent clones.
+        let cfg = MachineConfig::scaled();
+        let a = Target::Mpu(cfg.clone()).fingerprint();
+        let b = Target::Mpu(cfg.clone()).fingerprint();
+        assert_eq!(a, b);
+        // Any knob change moves the key (serde includes field names and
+        // values).
+        let mut cfg2 = cfg.clone();
+        cfg2.row_buffers_per_bank = 1;
+        assert_ne!(a.1, Target::Mpu(cfg2).fingerprint().1);
+        // The GPU/ideal fingerprints also cover the compilation-side
+        // MachineConfig they are matched to.
+        let mut smem_far = cfg.clone();
+        smem_far.smem_location = crate::config::SmemLocation::FarBank;
+        let g1 = Target::for_kind(MachineKind::Gpu, &cfg).fingerprint();
+        let g2 = Target::for_kind(MachineKind::Gpu, &smem_far).fingerprint();
+        assert_ne!(g1.1, g2.1);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! used to duplicate: block residency and dispatch, warp scheduling
 //! (GTO / loose round-robin), barrier and exit handling, the scoreboard
 //! view, guard evaluation, functional lane execution (ALU, global and
-//! shared memory), and the idle fast-forward event loop.
+//! shared memory), and the event-driven run loop.
 //!
 //! The frontend is generic over two seams:
 //!
@@ -21,6 +21,31 @@
 //!
 //! Both traits are implemented by the same backend type so backends can
 //! share state (the MPU's register moves ride its TSV buses).
+//!
+//! # The event-driven run loop
+//!
+//! [`SimtFrontend::run`] is event-driven rather than per-cycle polled:
+//!
+//! * Every warp carries an exact cached wake-up time
+//!   ([`Warp::wake_at`]), refreshed on each state transition (issue,
+//!   barrier arrive/release, load completion, `ready_at` expiry, block
+//!   dispatch). The scheduler reads only this cache; a lazy min-heap of
+//!   wake times makes idle fast-forward O(log warps) instead of an
+//!   O(cores × warps) rescan, and a per-(core, subcore) lower bound
+//!   lets `issue_all` skip subcores with nothing runnable.
+//! * [`MemorySystem::advance`] is only called on cycles where
+//!   [`MemorySystem::next_event`] shows due work (backends must make
+//!   `advance` a no-op otherwise — see the trait contract).
+//! * Stretches where only the memory system is active are batched
+//!   through [`MemorySystem::advance_to`]: the backend hops between its
+//!   own internal event times without re-entering the scheduler,
+//!   stopping early as soon as a load completion becomes collectable so
+//!   the woken warp is scheduled at exactly the same cycle as before.
+//!
+//! All of this is cycle-for-cycle and stat-for-stat identical to the
+//! retained per-cycle reference loop [`SimtFrontend::run_reference`]
+//! (the equivalence tests assert it), which is kept as the timing
+//! oracle for future scheduler work.
 
 use super::exec::{alu_lane, operand_value, LaneCtx};
 use super::offload::ExecLoc;
@@ -33,7 +58,8 @@ use crate::isa::{Instr, LaunchConfig, Op, Reg, Space};
 use crate::mem::SharedMem;
 use crate::sim::Stats;
 use anyhow::{bail, Result};
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Frontend geometry and latency parameters — the subset of a machine
 /// configuration the SIMT pipeline itself needs (memory-system
@@ -96,6 +122,17 @@ pub struct AccessCtx<'a> {
 }
 
 /// The pluggable memory system behind the SIMT frontend.
+///
+/// # Timing contract (event-driven loop)
+///
+/// The frontend calls [`MemorySystem::advance`] only on cycles where
+/// [`MemorySystem::next_event`] is `Some(t)` with `t <= now`, so
+/// `next_event` must cover *every* cycle at which `advance` would do
+/// work (equivalently: `advance(now)` must be a no-op whenever
+/// `next_event() > now`). Backends that deliver load completions
+/// asynchronously (via [`MemorySystem::drain_completed`]) must also
+/// override [`MemorySystem::completions_pending`] — it bounds how far
+/// [`MemorySystem::advance_to`] may run ahead of the scheduler.
 pub trait MemorySystem {
     /// Account timing for one global-memory access. Loads either insert
     /// the destination's ready time directly into `w.reg_ready`, or
@@ -104,10 +141,15 @@ pub trait MemorySystem {
     fn issue_access(&mut self, ctx: &AccessCtx, w: &mut Warp, stats: &mut Stats);
 
     /// Advance internal state (queued events, DRAM controllers, buses)
-    /// up to cycle `now`.
+    /// up to cycle `now`. Must be a no-op when
+    /// [`MemorySystem::next_event`] is later than `now` (the frontend
+    /// skips the call in that case).
     fn advance(&mut self, now: u64, stats: &mut Stats);
 
     /// Collect load completions; the frontend applies them to the warps.
+    /// Must not change [`MemorySystem::next_event`]'s value: the run
+    /// loop reuses a pre-drain `next_event` probe on iterations where
+    /// `advance` was skipped and nothing issued.
     fn drain_completed(&mut self, now: u64, out: &mut Vec<Completion>);
 
     /// Earliest future cycle at which anything internal happens (idle
@@ -116,6 +158,45 @@ pub trait MemorySystem {
 
     /// No in-flight work (the run loop may terminate).
     fn idle(&self) -> bool;
+
+    /// Batched fast-forward: advance internal state through every
+    /// internal event at a cycle `<= target`, in order, exactly as if
+    /// [`MemorySystem::advance`] were called at each event time — but
+    /// stop after the first cycle that makes a load completion
+    /// collectable (the frontend must observe it before scheduling
+    /// anything later). Returns the last event cycle processed (the
+    /// early-stop cycle when a completion is pending), or `target` when
+    /// no internal event was due at all.
+    ///
+    /// The default implementation is correct for any backend that obeys
+    /// the `next_event`/`advance`/`completions_pending` contract;
+    /// purely synchronous backends (no internal events — the HBM pipe,
+    /// the roofline) inherit a no-op. Backends with real event queues
+    /// make this loop fast by keeping `next_event` cheap — the
+    /// near-bank backend's DRAM controllers cache their next-event
+    /// times so each hop is O(controllers), not a queue rescan.
+    fn advance_to(&mut self, target: u64, stats: &mut Stats) -> u64 {
+        let mut reached = target;
+        while let Some(t) = self.next_event() {
+            if t > target {
+                break;
+            }
+            self.advance(t, stats);
+            reached = t;
+            if self.completions_pending() {
+                break;
+            }
+        }
+        reached
+    }
+
+    /// Whether load completions are waiting to be collected by
+    /// [`MemorySystem::drain_completed`]. Backends that complete loads
+    /// asynchronously MUST override this; the default (`false`) is only
+    /// correct for backends whose loads resolve at issue time.
+    fn completions_pending(&self) -> bool {
+        false
+    }
 
     /// Core that should host a block given the runtime's home-address
     /// dispatch hint; `None` falls back to round-robin.
@@ -178,6 +259,25 @@ struct CoreState {
     /// only these; retired warps stay in `warps` so in-flight completion
     /// indices remain stable.
     sc_warps: Vec<Vec<usize>>,
+    /// Lower bound on the minimum `wake_at` of this subcore's live
+    /// warps. `issue_all` skips the whole subcore while the bound is in
+    /// the future; a failed scan tightens it to the exact minimum, and
+    /// `refresh_wake` lowers it whenever a warp's wake time drops. Lower
+    /// bounds are always safe (a stale-low bound only costs a scan that
+    /// finds nothing), so correctness never depends on tightening.
+    sc_min_wake: Vec<u64>,
+}
+
+/// Reusable hot-path buffers: the run loop drains completions and the
+/// issue paths gather lane addresses/values/operands through these
+/// instead of allocating per iteration.
+#[derive(Default)]
+struct Scratch {
+    completions: Vec<Completion>,
+    addrs: Vec<(usize, u64)>,
+    vals: Vec<(usize, u32)>,
+    srcs: Vec<u32>,
+    a32: Vec<u32>,
 }
 
 /// The shared SIMT frontend, generic over the memory system.
@@ -186,13 +286,24 @@ pub struct SimtFrontend<M: MemorySystem + OffloadModel> {
     pub mem_sys: M,
     kernel: Option<CompiledKernel>,
     launch: Option<LaunchConfig>,
-    kparams: Vec<ParamValue>,
+    /// `(param register, value bits)` pairs delivered to every warp at
+    /// dispatch — invariant per launch, precomputed so block dispatch
+    /// allocates nothing.
+    param_seed: Vec<(Reg, u32)>,
     mem: Vec<u8>,
     alloc_top: u64,
     cores: Vec<CoreState>,
     pub stats: Stats,
     now: u64,
     blocks_done: u32,
+    /// Lazy min-heap of `(wake_at, core, warp)` — entries are hints;
+    /// one whose wake time no longer matches the warp's cached value is
+    /// stale and discarded on sight.
+    wake_heap: BinaryHeap<Reverse<(u64, u32, u32)>>,
+    /// Heap size that triggers a rebuild (the lazy heap retains one
+    /// entry per wake refresh until it surfaces).
+    wake_heap_cap: usize,
+    scratch: Scratch,
 }
 
 impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
@@ -205,6 +316,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
                 rr_next: vec![0; params.subcores_per_core],
                 pending_blocks: VecDeque::new(),
                 sc_warps: vec![Vec::new(); params.subcores_per_core],
+                sc_min_wake: vec![u64::MAX; params.subcores_per_core],
             })
             .collect();
         let mem = vec![0; params.mem_bytes];
@@ -213,13 +325,16 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             mem_sys,
             kernel: None,
             launch: None,
-            kparams: Vec::new(),
+            param_seed: Vec::new(),
             mem,
             alloc_top: 0,
             cores,
             stats: Stats::default(),
             now: 0,
             blocks_done: 0,
+            wake_heap: BinaryHeap::new(),
+            wake_heap_cap: 1024,
+            scratch: Scratch::default(),
         }
     }
 
@@ -310,7 +425,15 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         }
         self.kernel = Some(kernel);
         self.launch = Some(launch);
-        self.kparams = params.to_vec();
+        self.param_seed = self
+            .kernel
+            .as_ref()
+            .unwrap()
+            .params
+            .iter()
+            .copied()
+            .zip(params.iter().map(|v| v.bits()))
+            .collect();
         let ncores = self.params.cores;
         for b in 0..launch.grid {
             let core = self
@@ -328,24 +451,23 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
     /// Dispatch the next pending block on core `c` if resources allow.
     fn try_dispatch_block(&mut self, c: usize) -> bool {
         let launch = self.launch.unwrap();
-        let kernel = self.kernel.as_ref().unwrap();
-        let core = &mut self.cores[c];
-        if core.blocks.len() >= self.params.max_blocks_per_core {
+        if self.cores[c].blocks.len() >= self.params.max_blocks_per_core {
             return false;
         }
         let warps_per_block = launch.warps_per_block(self.params.warp_size);
-        let live_warps = core.warps.iter().filter(|w| w.state != WarpState::Done).count();
+        let live_warps =
+            self.cores[c].warps.iter().filter(|w| w.state != WarpState::Done).count();
         if live_warps + warps_per_block
             > self.params.max_warps_per_subcore * self.params.subcores_per_core
         {
             return false;
         }
-        let Some(b) = core.pending_blocks.pop_front() else {
+        let Some(b) = self.cores[c].pending_blocks.pop_front() else {
             return false;
         };
-        let reg_counts = kernel.reg_counts;
+        let reg_counts = self.kernel.as_ref().unwrap().reg_counts;
         let smem_bytes = (launch.smem_bytes as usize).min(self.params.smem_bytes);
-        core.blocks.push(BlockState {
+        self.cores[c].blocks.push(BlockState {
             id: b,
             warps_live: warps_per_block,
             at_barrier: 0,
@@ -359,27 +481,108 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             // Deliver parameters; the backend records which register
             // file(s) hold them (the MPU seeds both, saving a per-warp
             // register move per parameter).
-            for (p, v) in kernel.params.iter().zip(&self.kparams) {
-                w.write_all(*p, v.bits());
-                self.mem_sys.seed_param(&mut w, *p);
+            for pi in 0..self.param_seed.len() {
+                let (p, bits) = self.param_seed[pi];
+                w.write_all(p, bits);
+                self.mem_sys.seed_param(&mut w, p);
             }
-            core.sc_warps[subcore].push(core.warps.len());
-            core.warps.push(w);
+            let widx = self.cores[c].warps.len();
+            self.cores[c].sc_warps[subcore].push(widx);
+            self.cores[c].warps.push(w);
+            self.refresh_wake(c, widx);
         }
         true
     }
 
-    // ---------------- main loop ----------------
+    // ---------------- wake bookkeeping ----------------
 
-    /// Run to completion; returns final stats.
-    pub fn run(&mut self) -> Result<Stats> {
-        let grid = self.launch.map(|l| l.grid).unwrap_or(0);
-        let mut completions: Vec<Completion> = Vec::new();
-        loop {
-            self.mem_sys.advance(self.now, &mut self.stats);
-            completions.clear();
-            self.mem_sys.drain_completed(self.now, &mut completions);
-            for comp in &completions {
+    /// Recompute the cached wake-up time of warp `(c, wi)` after any
+    /// transition that affects its issueability (issue, barrier
+    /// arrive/release, load completion, block dispatch). `wake_at` is
+    /// exact: `u64::MAX` while the warp cannot issue without a further
+    /// event, otherwise the earliest cycle `pick_warp` may select it.
+    fn refresh_wake(&mut self, c: usize, wi: usize) {
+        let (wake, sc) = {
+            let kernel = self.kernel.as_ref().unwrap();
+            let w = &self.cores[c].warps[wi];
+            let wake = if w.state != WarpState::Ready {
+                u64::MAX
+            } else {
+                let pc = w.pc();
+                if pc >= kernel.instrs.len() {
+                    u64::MAX
+                } else {
+                    let dep = w.instr_ready_at(&kernel.instrs[pc]);
+                    if dep == u64::MAX {
+                        u64::MAX // unblocked by a load completion later
+                    } else {
+                        dep.max(w.ready_at)
+                    }
+                }
+            };
+            (wake, w.subcore)
+        };
+        self.cores[c].warps[wi].wake_at = wake;
+        if wake != u64::MAX {
+            self.wake_heap.push(Reverse((wake, c as u32, wi as u32)));
+            if wake < self.cores[c].sc_min_wake[sc] {
+                self.cores[c].sc_min_wake[sc] = wake;
+            }
+            if self.wake_heap.len() >= self.wake_heap_cap {
+                self.rebuild_wake_heap();
+            }
+        }
+    }
+
+    /// The lazy heap accumulates one entry per wake refresh; rebuild it
+    /// from live warp state once stale entries dominate.
+    fn rebuild_wake_heap(&mut self) {
+        self.wake_heap.clear();
+        let mut live = 0usize;
+        for (c, core) in self.cores.iter().enumerate() {
+            for &wi in core.sc_warps.iter().flatten() {
+                live += 1;
+                let wake = core.warps[wi].wake_at;
+                if wake != u64::MAX {
+                    self.wake_heap.push(Reverse((wake, c as u32, wi as u32)));
+                }
+            }
+        }
+        self.wake_heap_cap = (live * 8).max(1024);
+    }
+
+    /// Earliest wake-up among live warps, from the lazy heap (stale
+    /// entries — warps whose wake time moved since they were pushed —
+    /// are discarded on sight). `None` when every warp is blocked on a
+    /// memory completion, at a barrier, or retired.
+    fn next_warp_wake(&mut self) -> Option<u64> {
+        while let Some(&Reverse((t, c, wi))) = self.wake_heap.peek() {
+            if self.cores[c as usize].warps[wi as usize].wake_at == t {
+                return Some(t);
+            }
+            self.wake_heap.pop();
+        }
+        None
+    }
+
+    /// After a scan found nothing issueable, reset the subcore's wake
+    /// lower bound to the exact minimum so subsequent cycles skip the
+    /// scan entirely until something can actually run.
+    fn tighten_sc_min(&mut self, c: usize, sc: usize) {
+        let core = &self.cores[c];
+        let min = core.sc_warps[sc]
+            .iter()
+            .map(|&wi| core.warps[wi].wake_at)
+            .min()
+            .unwrap_or(u64::MAX);
+        self.cores[c].sc_min_wake[sc] = min;
+    }
+
+    /// Apply drained load completions to their warps (scoreboard entry
+    /// plus §IV-B1 track-table placement) and wake them.
+    fn apply_completions(&mut self, completions: &[Completion]) {
+        for comp in completions {
+            {
                 let w = &mut self.cores[comp.core].warps[comp.warp];
                 w.reg_ready.insert(comp.dst, comp.ready);
                 match comp.place {
@@ -388,6 +591,34 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
                     RegPlace::Untracked => {}
                 }
             }
+            self.refresh_wake(comp.core, comp.warp);
+        }
+    }
+
+    // ---------------- main loop ----------------
+
+    /// Run to completion; returns final stats.
+    ///
+    /// Event-driven: `advance` runs only on cycles with memory work
+    /// due, idle stretches jump through the warp wake-up heap, and
+    /// memory-only stretches are batched through
+    /// [`MemorySystem::advance_to`]. Cycle-for-cycle identical to
+    /// [`SimtFrontend::run_reference`].
+    pub fn run(&mut self) -> Result<Stats> {
+        let grid = self.launch.map(|l| l.grid).unwrap_or(0);
+        let mut completions = std::mem::take(&mut self.scratch.completions);
+        loop {
+            // Memory work due this cycle? (`advance` is a no-op when the
+            // backend's next event is still in the future — the trait
+            // contract the backends uphold.)
+            let mem_next = self.mem_sys.next_event();
+            let advanced = mem_next.is_some_and(|t| t <= self.now);
+            if advanced {
+                self.mem_sys.advance(self.now, &mut self.stats);
+            }
+            completions.clear();
+            self.mem_sys.drain_completed(self.now, &mut completions);
+            self.apply_completions(&completions);
             let issued = self.issue_all();
 
             let work_left = self.blocks_done < grid || !self.mem_sys.idle();
@@ -395,23 +626,108 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
                 break;
             }
             if self.now >= self.params.max_cycles {
+                self.scratch.completions = completions;
                 bail!("simulation exceeded max_cycles={} (deadlock?)", self.params.max_cycles);
             }
             if issued {
                 self.now += 1;
             } else {
-                match self.next_interesting() {
+                // The loop-top `next_event` is still current unless this
+                // iteration advanced the memory system or issued an
+                // access (nothing issued here, and drains don't touch
+                // event state) — skip the per-controller recompute then.
+                let mem_next = if advanced { self.mem_sys.next_event() } else { mem_next };
+                self.fast_forward(mem_next);
+            }
+        }
+        self.stats.cycles = self.now;
+        self.scratch.completions = completions;
+        Ok(self.stats.clone())
+    }
+
+    /// Nothing issued at `now`: jump to the next cycle anything can
+    /// happen. Pure-memory stretches (the long DRAM stalls of
+    /// memory-bound kernels) are handed to the backend in one
+    /// `advance_to` call instead of being re-polled per event.
+    /// `mem_next` is the backend's current `next_event()` (passed in so
+    /// the run loop can reuse its loop-top probe when still valid).
+    fn fast_forward(&mut self, mem_next: Option<u64>) {
+        let wake = self.next_warp_wake();
+        let next = match (wake, mem_next) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        match next {
+            Some(t) if t > self.now => {
+                let mem_only = match (mem_next, wake) {
+                    (Some(m), Some(w)) => m < w,
+                    (Some(_), None) => true,
+                    _ => false,
+                };
+                if mem_only {
+                    // No warp can issue before `wake` (or ever): let the
+                    // backend burn through its own event chain up to the
+                    // cycle before, stopping early at the first load
+                    // completion. Clamped to the max_cycles valve —
+                    // beyond it the loop degrades to the old
+                    // one-event-per-iteration jumps — and `.max(t)`
+                    // keeps time monotonic in the degenerate cases.
+                    let cap = wake
+                        .map(|w| w - 1)
+                        .unwrap_or(u64::MAX)
+                        .min(self.params.max_cycles)
+                        .max(t);
+                    self.now = self.mem_sys.advance_to(cap, &mut self.stats).max(t);
+                } else {
+                    self.now = t;
+                }
+            }
+            _ => self.now += 1,
+        }
+    }
+
+    /// The pre-event-driven per-cycle loop, kept verbatim as the timing
+    /// oracle: `run` must match it cycle-for-cycle and stat-for-stat
+    /// (asserted by the equivalence tests). It recomputes issueability
+    /// from first principles every cycle and polls the memory system
+    /// unconditionally, so it shares none of the event-driven caches'
+    /// failure modes.
+    pub fn run_reference(&mut self) -> Result<Stats> {
+        let grid = self.launch.map(|l| l.grid).unwrap_or(0);
+        let mut completions = std::mem::take(&mut self.scratch.completions);
+        loop {
+            self.mem_sys.advance(self.now, &mut self.stats);
+            completions.clear();
+            self.mem_sys.drain_completed(self.now, &mut completions);
+            self.apply_completions(&completions);
+            let issued = self.issue_all_scan();
+
+            let work_left = self.blocks_done < grid || !self.mem_sys.idle();
+            if !work_left {
+                break;
+            }
+            if self.now >= self.params.max_cycles {
+                self.scratch.completions = completions;
+                bail!("simulation exceeded max_cycles={} (deadlock?)", self.params.max_cycles);
+            }
+            if issued {
+                self.now += 1;
+            } else {
+                match self.next_interesting_scan() {
                     Some(t) if t > self.now => self.now = t,
                     _ => self.now += 1,
                 }
             }
         }
         self.stats.cycles = self.now;
+        self.scratch.completions = completions;
         Ok(self.stats.clone())
     }
 
-    /// Earliest future cycle where anything can happen.
-    fn next_interesting(&self) -> Option<u64> {
+    /// Earliest future cycle where anything can happen — the
+    /// O(cores × warps) rescan the event-driven loop replaced; kept for
+    /// [`SimtFrontend::run_reference`].
+    fn next_interesting_scan(&self) -> Option<u64> {
         let mut best: Option<u64> = self.mem_sys.next_event();
         let kernel = self.kernel.as_ref().unwrap();
         for c in &self.cores {
@@ -435,14 +751,40 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
     }
 
     /// Try to issue on every subcore of every core; returns whether any
-    /// instruction issued.
+    /// instruction issued. Subcores whose wake lower bound is in the
+    /// future are skipped without scanning their warps.
     fn issue_all(&mut self) -> bool {
         let mut issued_any = false;
         let ncores = self.cores.len();
         for c in 0..ncores {
             for sc in 0..self.params.subcores_per_core {
+                if self.cores[c].sc_min_wake[sc] > self.now {
+                    continue; // lower bound: nothing here can issue yet
+                }
                 for _ in 0..self.params.issue_width {
                     if let Some(wi) = self.pick_warp(c, sc) {
+                        self.issue(c, wi);
+                        self.cores[c].last_issued[sc] = Some(wi);
+                        issued_any = true;
+                    } else {
+                        self.tighten_sc_min(c, sc);
+                        break;
+                    }
+                }
+            }
+        }
+        issued_any
+    }
+
+    /// Reference issue pass used by `run_reference`: full scan, no wake
+    /// gating.
+    fn issue_all_scan(&mut self) -> bool {
+        let mut issued_any = false;
+        let ncores = self.cores.len();
+        for c in 0..ncores {
+            for sc in 0..self.params.subcores_per_core {
+                for _ in 0..self.params.issue_width {
+                    if let Some(wi) = self.pick_warp_scan(c, sc) {
                         self.issue(c, wi);
                         self.cores[c].last_issued[sc] = Some(wi);
                         issued_any = true;
@@ -455,20 +797,13 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         issued_any
     }
 
-    /// Scheduler: pick an issueable warp on (core, subcore).
+    /// Scheduler: pick an issueable warp on (core, subcore). Reads only
+    /// the cached wake times (`refresh_wake` keeps them exact).
     fn pick_warp(&self, c: usize, sc: usize) -> Option<usize> {
         let core = &self.cores[c];
-        let kernel = self.kernel.as_ref().unwrap();
         let can_issue = |wi: usize| -> bool {
             let w = &core.warps[wi];
-            if w.state != WarpState::Ready || w.subcore != sc || w.ready_at > self.now {
-                return false;
-            }
-            let pc = w.pc();
-            if pc >= kernel.instrs.len() {
-                return false;
-            }
-            w.instr_ready_at(&kernel.instrs[pc]) <= self.now
+            w.subcore == sc && w.wake_at <= self.now
         };
 
         let live = &core.sc_warps[sc];
@@ -494,9 +829,57 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         }
     }
 
+    /// Reference scheduler (same policy as `pick_warp`, recomputing
+    /// issueability from warp state + scoreboard instead of the cached
+    /// wake times) — `run_reference` only.
+    fn pick_warp_scan(&self, c: usize, sc: usize) -> Option<usize> {
+        let core = &self.cores[c];
+        let kernel = self.kernel.as_ref().unwrap();
+        let can_issue = |wi: usize| -> bool {
+            let w = &core.warps[wi];
+            if w.state != WarpState::Ready || w.subcore != sc || w.ready_at > self.now {
+                return false;
+            }
+            let pc = w.pc();
+            if pc >= kernel.instrs.len() {
+                return false;
+            }
+            w.instr_ready_at(&kernel.instrs[pc]) <= self.now
+        };
+
+        let live = &core.sc_warps[sc];
+        match self.params.sched_policy {
+            SchedPolicy::Gto => {
+                if let Some(last) = core.last_issued[sc] {
+                    if last < core.warps.len() && can_issue(last) {
+                        return Some(last);
+                    }
+                }
+                live.iter().copied().find(|&wi| can_issue(wi))
+            }
+            SchedPolicy::RoundRobin => {
+                let n = live.len();
+                if n == 0 {
+                    return None;
+                }
+                let start = core.rr_next[sc] % n;
+                (0..n).map(|k| live[(start + k) % n]).find(|&wi| can_issue(wi))
+            }
+        }
+    }
+
     // ---------------- instruction issue ----------------
 
     fn issue(&mut self, c: usize, wi: usize) {
+        self.issue_inner(c, wi);
+        // Every path through issue changes the warp's pc, ready time,
+        // scoreboard or state — recompute its wake time once here.
+        // (Barrier release and block dispatch refresh the *other*
+        // affected warps where they happen.)
+        self.refresh_wake(c, wi);
+    }
+
+    fn issue_inner(&mut self, c: usize, wi: usize) {
         // Copy out only the per-pc scalars + one instruction — cloning
         // the whole kernel here dominated the profile (EXPERIMENTS.md
         // §Perf iteration 1).
@@ -581,16 +964,20 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         }
     }
 
-    fn lane_addrs(&self, c: usize, wi: usize, instr: &Instr, exec_mask: u64) -> Vec<(usize, u64)> {
+    /// Gather `(lane, byte address)` of every executing lane into the
+    /// reusable scratch buffer (caller returns it via `self.scratch`).
+    fn fill_lane_addrs(&mut self, c: usize, wi: usize, instr: &Instr, exec_mask: u64) -> Vec<(usize, u64)> {
+        let mut addrs = std::mem::take(&mut self.scratch.addrs);
+        addrs.clear();
         let w = &self.cores[c].warps[wi];
         let m = instr.mem.expect("memory instruction");
-        (0..w.lanes)
-            .filter(|l| exec_mask >> l & 1 == 1)
-            .map(|l| {
+        for l in 0..w.lanes {
+            if exec_mask >> l & 1 == 1 {
                 let base = w.read(m.base, l);
-                (l, (base as i64 + m.offset as i64) as u64)
-            })
-            .collect()
+                addrs.push((l, (base as i64 + m.offset as i64) as u64));
+            }
+        }
+        addrs
     }
 
     fn issue_alu(&mut self, c: usize, wi: usize, pc: usize, instr: &Instr, exec_mask: u64, hint: Loc) {
@@ -610,6 +997,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             (w.block, w.warp_in_block, w.lanes)
         };
         let n_srcs = instr.srcs.len() as u64;
+        let mut srcs = std::mem::take(&mut self.scratch.srcs);
         for lane in 0..lanes {
             if exec_mask >> lane & 1 == 0 {
                 continue;
@@ -620,17 +1008,20 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
                 ctaid: block,
                 nctaid: launch.grid,
             };
-            let w = &self.cores[c].warps[wi];
-            let srcs: Vec<u32> = instr
-                .srcs
-                .iter()
-                .map(|o| operand_value(o, &ctx, &|r| w.read(r, lane)))
-                .collect();
+            srcs.clear();
+            {
+                let w = &self.cores[c].warps[wi];
+                for o in &instr.srcs {
+                    srcs.push(operand_value(o, &ctx, &|r| w.read(r, lane)));
+                }
+            }
             let v = alu_lane(instr, &srcs);
             if let Some(d) = instr.dst {
                 self.cores[c].warps[wi].write(d, lane, v);
             }
         }
+        srcs.clear();
+        self.scratch.srcs = srcs;
 
         // Timing + accounting (uniform in the execution location).
         match loc {
@@ -656,18 +1047,21 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
     fn issue_global(&mut self, c: usize, wi: usize, pc: usize, instr: &Instr, exec_mask: u64) {
         self.stats.global_mem_instrs += 1;
         let launch = self.launch.unwrap();
-        let addrs = self.lane_addrs(c, wi, instr, exec_mask);
+        let addrs = self.fill_lane_addrs(c, wi, instr, exec_mask);
 
         // Functional execution first (program order per warp).
         match instr.op {
             Op::Ld => {
                 let dst = instr.dst.unwrap();
-                let vals: Vec<(usize, u32)> =
-                    addrs.iter().map(|&(l, a)| (l, self.mem_read_u32(a))).collect();
+                let mut vals = std::mem::take(&mut self.scratch.vals);
+                vals.clear();
+                vals.extend(addrs.iter().map(|&(l, a)| (l, self.mem_read_u32(a))));
                 let w = &mut self.cores[c].warps[wi];
-                for (l, v) in vals {
+                for &(l, v) in &vals {
                     w.write(dst, l, v);
                 }
+                vals.clear();
+                self.scratch.vals = vals;
             }
             Op::St => {
                 let src = instr.srcs[0];
@@ -719,6 +1113,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         let ctx = AccessCtx { core: c, warp_index: wi, instr, addrs: &addrs, full_warp, now: self.now };
         self.mem_sys.issue_access(&ctx, &mut self.cores[c].warps[wi], &mut self.stats);
         self.cores[c].warps[wi].set_pc(pc + 1);
+        self.scratch.addrs = addrs;
     }
 
     fn issue_shared(&mut self, c: usize, wi: usize, pc: usize, instr: &Instr, exec_mask: u64, hint: Loc) {
@@ -732,7 +1127,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             self.now,
             &mut self.stats,
         );
-        let addrs = self.lane_addrs(c, wi, instr, exec_mask);
+        let addrs = self.fill_lane_addrs(c, wi, instr, exec_mask);
         let (block, warp_in_block) = {
             let w = &self.cores[c].warps[wi];
             (w.block, w.warp_in_block)
@@ -743,14 +1138,19 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         match instr.op {
             Op::Ld => {
                 let dst = instr.dst.unwrap();
-                let vals: Vec<(usize, u32)> = addrs
-                    .iter()
-                    .map(|&(l, a)| (l, self.cores[c].blocks[bslot].smem.read_u32(a as u32)))
-                    .collect();
+                let mut vals = std::mem::take(&mut self.scratch.vals);
+                vals.clear();
+                vals.extend(
+                    addrs
+                        .iter()
+                        .map(|&(l, a)| (l, self.cores[c].blocks[bslot].smem.read_u32(a as u32))),
+                );
                 let w = &mut self.cores[c].warps[wi];
-                for (l, v) in vals {
+                for &(l, v) in &vals {
                     w.write(dst, l, v);
                 }
+                vals.clear();
+                self.scratch.vals = vals;
             }
             Op::St | Op::Red => {
                 let src = instr.srcs[0];
@@ -782,8 +1182,12 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         // never crosses the TSVs when the smem and the execution location
         // coincide (§IV-C) — any placement traffic appears through the
         // register moves done by `pre_issue`.
-        let a32: Vec<u32> = addrs.iter().map(|&(_, a)| a as u32).collect();
+        let mut a32 = std::mem::take(&mut self.scratch.a32);
+        a32.clear();
+        a32.extend(addrs.iter().map(|&(_, a)| a as u32));
         let conflicts = self.cores[c].blocks[bslot].smem.conflict_factor(&a32);
+        a32.clear();
+        self.scratch.a32 = a32;
         self.stats.smem_accesses += conflicts;
         let done = self.now.max(ready) + self.params.smem_latency + (conflicts - 1);
         match loc {
@@ -793,6 +1197,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
 
         self.mem_sys.retire_dst(&mut self.cores[c].warps[wi], instr, loc, done);
         self.cores[c].warps[wi].set_pc(pc + 1);
+        self.scratch.addrs = addrs;
     }
 
     fn barrier(&mut self, c: usize, wi: usize, pc: usize) {
@@ -800,15 +1205,36 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         self.cores[c].warps[wi].set_pc(pc + 1);
         self.cores[c].warps[wi].state = WarpState::AtBarrier;
         let bslot = self.cores[c].blocks.iter().position(|b| b.id == block).expect("block resident");
-        self.cores[c].blocks[bslot].at_barrier += 1;
-        if self.cores[c].blocks[bslot].at_barrier >= self.cores[c].blocks[bslot].warps_live {
-            self.cores[c].blocks[bslot].at_barrier = 0;
-            let release = self.now + 1;
-            for w in self.cores[c].warps.iter_mut() {
+        let release = {
+            let b = &mut self.cores[c].blocks[bslot];
+            b.at_barrier += 1;
+            if b.at_barrier >= b.warps_live {
+                b.at_barrier = 0;
+                true
+            } else {
+                false
+            }
+        };
+        if release {
+            self.release_barrier(c, block, self.now + 1);
+        }
+    }
+
+    /// Wake every warp of `block` waiting at the barrier.
+    fn release_barrier(&mut self, c: usize, block: u32, release: u64) {
+        for wi in 0..self.cores[c].warps.len() {
+            let released = {
+                let w = &mut self.cores[c].warps[wi];
                 if w.block == block && w.state == WarpState::AtBarrier {
                     w.state = WarpState::Ready;
                     w.ready_at = release;
+                    true
+                } else {
+                    false
                 }
+            };
+            if released {
+                self.refresh_wake(c, wi);
             }
         }
     }
@@ -820,22 +1246,31 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         }
         let block = self.cores[c].warps[wi].block;
         let bslot = self.cores[c].blocks.iter().position(|b| b.id == block).expect("block resident");
-        {
+        enum After {
+            Finished,
+            Release,
+            Nothing,
+        }
+        let after = {
             let b = &mut self.cores[c].blocks[bslot];
             b.warps_live -= 1;
-            if b.warps_live > 0 {
+            if b.warps_live == 0 {
+                After::Finished
+            } else if b.at_barrier >= b.warps_live {
                 // A barrier may now be satisfiable with fewer live warps.
-                if b.at_barrier >= b.warps_live {
-                    b.at_barrier = 0;
-                    for w in self.cores[c].warps.iter_mut() {
-                        if w.block == block && w.state == WarpState::AtBarrier {
-                            w.state = WarpState::Ready;
-                            w.ready_at = self.now + 1;
-                        }
-                    }
-                }
+                b.at_barrier = 0;
+                After::Release
+            } else {
+                After::Nothing
+            }
+        };
+        match after {
+            After::Release => {
+                self.release_barrier(c, block, self.now + 1);
                 return;
             }
+            After::Nothing => return,
+            After::Finished => {}
         }
         // Block finished: retire it and dispatch the next. Done warps
         // stay in the vector (in-flight completions hold warp indices);
@@ -845,7 +1280,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             let core = &mut self.cores[c];
             for sc in 0..core.sc_warps.len() {
                 let warps = &core.warps;
-                core.sc_warps[sc].retain(|&wi| warps[wi].block != block);
+                core.sc_warps[sc].retain(|&wj| warps[wj].block != block);
             }
         }
         self.blocks_done += 1;

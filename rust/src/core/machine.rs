@@ -457,6 +457,8 @@ impl MemorySystem for NearBankMemory {
     }
 
     fn next_event(&self) -> Option<u64> {
+        // Controllers cache their own next-event time, so this is one
+        // O(1) read per controller rather than a queue rescan.
         let mut best: Option<u64> = self.events.peek().map(|e| e.at);
         for l in &self.links {
             for m in &l.controllers {
@@ -468,10 +470,28 @@ impl MemorySystem for NearBankMemory {
         best
     }
 
+    // `advance_to` is inherited: the default trait loop hops directly
+    // between this backend's internal event times — queued
+    // TSV/mesh/off-chip events and the FR-FCFS+MASA controllers' own
+    // (cached, O(1)) next-event times — performing exactly what
+    // `advance(t)` would have done at each cycle, and `completions_pending`
+    // below makes it stop at the first cycle that produces a load
+    // completion so the frontend wakes the owning warp at exactly the
+    // same cycle as the per-cycle reference loop.
+
+    fn completions_pending(&self) -> bool {
+        !self.completed.is_empty()
+    }
+
     fn idle(&self) -> bool {
-        self.events.is_empty()
-            && self.completed.is_empty()
-            && self.links.iter().all(|l| l.controllers.iter().all(|m| m.idle()))
+        // `routes` covers every in-flight DRAM chunk (whether it is
+        // still inside a queued `EnqueueDram` event, a controller's
+        // queue, or its un-drained done list), and `events` covers the
+        // token credits that outlive their chunks — so this O(1) check
+        // is equivalent to scanning every controller, without paying
+        // O(cores × NBUs) on the run loop's per-iteration termination
+        // test.
+        self.events.is_empty() && self.completed.is_empty() && self.routes.is_empty()
     }
 
     fn home_core(&self, hint: Option<u64>) -> Option<usize> {
@@ -611,6 +631,12 @@ impl Machine {
     /// Run to completion; returns final stats.
     pub fn run(&mut self) -> Result<Stats> {
         self.fe.run()
+    }
+
+    /// Run with the per-cycle reference loop (the event-driven `run`'s
+    /// timing oracle; see `SimtFrontend::run_reference`).
+    pub fn run_reference(&mut self) -> Result<Stats> {
+        self.fe.run_reference()
     }
 
     /// Statistics accumulated so far.
@@ -792,6 +818,46 @@ mod tests {
             let w = 2.0 * i as f32 + 1.0;
             assert!((g - w).abs() < 1e-5, "at {i}: {g} vs {w}");
         }
+    }
+
+    #[test]
+    fn event_driven_loop_matches_reference_on_axpy() {
+        // The event-driven run loop (wake heap + gated advance +
+        // batched advance_to) must be indistinguishable from the
+        // per-cycle reference loop: same cycles, same stats, same
+        // memory image.
+        let cfg = MachineConfig::scaled();
+        let k = compile(&axpy_kernel()).unwrap();
+        let n = 4096usize;
+        let mut runs = Vec::new();
+        for reference in [false, true] {
+            let mut m = Machine::new(&cfg);
+            let x = m.alloc(n * 4);
+            let y = m.alloc(n * 4);
+            let mut rng = crate::sim::Prng::new(7);
+            let xv = rng.f32_vec(n, -1.0, 1.0);
+            let yv = rng.f32_vec(n, -1.0, 1.0);
+            m.write_f32s(x, &xv);
+            m.write_f32s(y, &yv);
+            m.launch(
+                k.clone(),
+                LaunchConfig::new(32, 128),
+                &[
+                    ParamValue::U32(x as u32),
+                    ParamValue::U32(y as u32),
+                    ParamValue::F32(1.5),
+                    ParamValue::U32(n as u32),
+                ],
+                |b| Some(x + b as u64 * 128 * 4),
+            )
+            .unwrap();
+            let stats = if reference { m.run_reference().unwrap() } else { m.run().unwrap() };
+            let out: Vec<u32> = m.read_f32s(y, n).iter().map(|v| v.to_bits()).collect();
+            runs.push((stats, out));
+        }
+        let (fast, slow) = (&runs[0], &runs[1]);
+        assert_eq!(fast.0, slow.0, "event-driven stats diverge from the reference loop");
+        assert_eq!(fast.1, slow.1, "memory image diverges from the reference loop");
     }
 
     #[test]

@@ -109,6 +109,13 @@ pub struct Warp {
     pub stack: Vec<SimtEntry>,
     /// Cycle at which the warp may next issue.
     pub ready_at: u64,
+    /// Cached earliest cycle the scheduler may select this warp
+    /// (`max(ready_at, current-instruction operand readiness)`), or
+    /// `u64::MAX` while it cannot issue without a further event (at a
+    /// barrier, retired, or an operand blocked on an in-flight load).
+    /// Maintained by the frontend's `refresh_wake` on every transition;
+    /// the event-driven scheduler and its wake-up heap read only this.
+    pub wake_at: u64,
     /// Cycle of last issue (GTO greedy bookkeeping).
     pub last_issue: u64,
     /// Pending-write completion times (scoreboard).
@@ -137,6 +144,7 @@ impl Warp {
             state: WarpState::Ready,
             stack: vec![SimtEntry { pc: 0, mask: full, rpc: usize::MAX }],
             ready_at: 0,
+            wake_at: u64::MAX,
             last_issue: 0,
             reg_ready: RegReady::new(reg_counts),
             track: TrackTable::default(),

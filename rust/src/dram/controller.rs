@@ -37,6 +37,11 @@ pub struct MemController {
     done: Vec<(u64, u64)>,
     timing: crate::config::DramTiming,
     io_bytes: u64,
+    /// Cached [`MemController::next_event`] value, kept exact across
+    /// `push`/`advance`/`drain_completed` so the machine's event loop
+    /// can jump between controller event times in O(1) per controller
+    /// instead of rescanning every queue each frontend cycle.
+    next_at: Option<u64>,
 }
 
 impl MemController {
@@ -49,12 +54,17 @@ impl MemController {
             done: Vec::new(),
             timing: cfg.timing,
             io_bytes: (cfg.bank_io_bits / 8) as u64,
+            next_at: None,
         }
     }
 
     /// Enqueue a request at cycle `now`.
     pub fn push(&mut self, now: u64, req: DramRequest) {
+        // Folding the new request's bank-IO time keeps the cache exact:
+        // no other queue entry changed.
+        let free = self.banks[req.bank].io_free_at();
         self.queue.push(Pending { arrival: now, req });
+        self.next_at = Some(self.next_at.map_or(free, |t| t.min(free)));
     }
 
     pub fn pending(&self) -> usize {
@@ -118,6 +128,7 @@ impl MemController {
         if refs > stats.dram_refs {
             stats.dram_refs = refs;
         }
+        self.recompute_next();
     }
 
     /// Collect ids whose data is ready by `now`.
@@ -131,22 +142,30 @@ impl MemController {
                 i += 1;
             }
         }
+        if !out.is_empty() {
+            self.recompute_next();
+        }
         out
     }
 
     /// Earliest cycle at which anything interesting can happen (used by
-    /// the machine's idle fast-forward).
+    /// the machine's idle fast-forward and batched `advance_to`). O(1):
+    /// reads the cache maintained by the mutating operations.
     pub fn next_event(&self) -> Option<u64> {
+        self.next_at
+    }
+
+    fn recompute_next(&mut self) {
         let q = self
             .queue
             .iter()
             .map(|p| self.banks[p.req.bank].io_free_at())
             .min();
         let d = self.done.iter().map(|(r, _)| *r).min();
-        match (q, d) {
+        self.next_at = match (q, d) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
-        }
+        };
     }
 
     /// Is the controller completely idle?
@@ -250,5 +269,36 @@ mod tests {
         mc.advance(0, &mut st);
         let e = mc.next_event().unwrap();
         assert!(e > 0, "completion is in the future");
+    }
+
+    #[test]
+    fn cached_next_event_stays_exact() {
+        // The O(1) cache must equal the from-scratch computation after
+        // every mutating operation (the event-driven machine loop leans
+        // on this being exact, not just a lower bound).
+        let expect = |mc: &MemController| -> Option<u64> {
+            let q = mc.queue.iter().map(|p| mc.banks[p.req.bank].io_free_at()).min();
+            let d = mc.done.iter().map(|(r, _)| *r).min();
+            match (q, d) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            }
+        };
+        let (mut mc, mut st) = mc();
+        assert_eq!(mc.next_event(), expect(&mc));
+        mc.push(0, req(1, 0, 0, 0));
+        mc.push(0, req(2, 0, 1, 0));
+        mc.push(0, req(3, 1, 0, 0));
+        assert_eq!(mc.next_event(), expect(&mc));
+        let mut guard = 0;
+        while let Some(t) = mc.next_event() {
+            mc.advance(t, &mut st);
+            assert_eq!(mc.next_event(), expect(&mc));
+            let drained = mc.drain_completed(t);
+            assert_eq!(mc.next_event(), expect(&mc), "after draining {drained:?}");
+            guard += 1;
+            assert!(guard < 1000, "controller failed to drain");
+        }
+        assert!(mc.idle());
     }
 }

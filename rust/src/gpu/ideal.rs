@@ -165,6 +165,12 @@ impl IdealMachine {
         self.fe.run()
     }
 
+    /// Run with the per-cycle reference loop (the event-driven `run`'s
+    /// timing oracle; see `SimtFrontend::run_reference`).
+    pub fn run_reference(&mut self) -> Result<Stats> {
+        self.fe.run_reference()
+    }
+
     /// Statistics accumulated so far.
     pub fn stats(&self) -> &Stats {
         &self.fe.stats

@@ -77,6 +77,10 @@ impl MemorySystem for HbmMemory {
     fn drain_completed(&mut self, _now: u64, _out: &mut Vec<Completion>) {}
 
     fn next_event(&self) -> Option<u64> {
+        // The HBM pipe is fully synchronous: bandwidth reservations are
+        // made at issue time and loads resolve into `reg_ready`
+        // directly, so there is never internal work to advance (and the
+        // inherited `advance_to` is a no-op returning `target`).
         None
     }
 
@@ -177,6 +181,12 @@ impl GpuMachine {
 
     pub fn run(&mut self) -> Result<Stats> {
         self.fe.run()
+    }
+
+    /// Run with the per-cycle reference loop (the event-driven `run`'s
+    /// timing oracle; see `SimtFrontend::run_reference`).
+    pub fn run_reference(&mut self) -> Result<Stats> {
+        self.fe.run_reference()
     }
 
     /// Statistics accumulated so far.

@@ -14,9 +14,11 @@
 //!   with separate near-bank / far-bank physical register pools;
 //! * a **shared SIMT frontend** ([`core::frontend`]): one implementation
 //!   of block dispatch, warp scheduling, barriers, scoreboard and
-//!   functional execution, generic over a pluggable
-//!   `MemorySystem` + `OffloadModel` backend — every machine below is
-//!   this frontend plus a memory system;
+//!   functional execution behind an **event-driven run loop** (warp
+//!   wake-up heap + batched `advance_to` memory fast-forward, with the
+//!   per-cycle reference loop retained as the timing oracle), generic
+//!   over a pluggable `MemorySystem` + `OffloadModel` backend — every
+//!   machine below is this frontend plus a memory system;
 //! * a **cycle-level functional + timing simulator** of the MPU
 //!   architecture ([`core`], [`dram`], [`mem`], [`noc`]): hybrid
 //!   far-bank/near-bank pipeline with instruction offloading, register

@@ -4,7 +4,7 @@
 //!   run <workload> [key=val ...] [--tiny|--paper-scale]
 //!       [--machine mpu|gpu|ideal|mpu_nooff | --gpu]
 //!   suite [key=val ...] [--tiny] [--out FILE] [--variants] [--strict]
-//!         [--store DIR]              run all 12 workloads (MPU vs GPU,
+//!         [--store DIR] [--perf]     run all 12 workloads (MPU vs GPU,
 //!                                    plus the ideal-bandwidth roofline
 //!                                    and MPU-no-offload variants with
 //!                                    --variants) through the parallel
@@ -12,7 +12,18 @@
 //!                                    BENCH_suite.json; --strict exits
 //!                                    non-zero on any incorrect run;
 //!                                    --store reuses/feeds the on-disk
-//!                                    result store
+//!                                    result store; --perf additionally
+//!                                    re-simulates every variant ×
+//!                                    workload fresh + serially and
+//!                                    writes the simulator-throughput
+//!                                    report BENCH_simperf.json
+//!   cycles [--tiny] [--out FILE] [--check FILE]
+//!                                    golden per-workload cycle counts
+//!                                    for all four machine variants
+//!                                    (one simulation pass serves both
+//!                                    flags); --check fails on ANY
+//!                                    exact-cycle drift vs the given
+//!                                    golden file
 //!   check-json <file>                validate a BENCH_suite.json against
 //!                                    schema v1 + correctness (CI gate)
 //!   check-json --compare <old> <new> additionally diff per-workload
@@ -36,7 +47,8 @@
 
 use mpu::config::{MachineConfig, MachineKind, ServeConfig};
 use mpu::coordinator::bench::{
-    all_correct, suite_json_with_variants, write_suite_json, SuiteStats, SUITE_JSON,
+    all_correct, simperf_json, suite_json_with_variants, write_simperf_json, write_suite_json,
+    SuiteStats, SIMPERF_JSON, SUITE_JSON,
 };
 use mpu::coordinator::proto::{self, Request, Response, SubmitRequest};
 use mpu::coordinator::report::{f2, Table};
@@ -49,10 +61,12 @@ use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mpu <run|suite|check-json|serve|submit|status|shutdown|compile|validate|list|config> [args]\n\
+        "usage: mpu <run|suite|cycles|check-json|serve|submit|status|shutdown|compile|validate|list|config> [args]\n\
          \n  mpu run axpy row_buffers_per_bank=2 --machine ideal\
          \n  mpu suite offload_policy=hw --out BENCH_suite.json\
-         \n  mpu suite --tiny --variants --strict\
+         \n  mpu suite --tiny --variants --strict --perf\
+         \n  mpu cycles --tiny --out CYCLES_tiny.json\
+         \n  mpu cycles --tiny --check baselines/CYCLES_tiny.json\
          \n  mpu check-json BENCH_suite.json\
          \n  mpu check-json --compare baselines/BENCH_suite.small.json BENCH_suite.json\
          \n  mpu serve --addr 127.0.0.1:7117 --store .mpu-store\
@@ -314,7 +328,17 @@ fn main() -> anyhow::Result<()> {
                 }
             }
             let mut doc = suite_json_with_variants(scale, &pairs, &variants);
-            doc.stats = Some(SuiteStats::from_cache(SimCache::global()));
+            let mut suite_stats = SuiteStats::from_cache(SimCache::global());
+            for p in &pairs {
+                suite_stats.record_run(&p.mpu);
+                suite_stats.record_run(&p.gpu);
+            }
+            for (_, runs) in &variants {
+                for r in runs {
+                    suite_stats.record_run(r);
+                }
+            }
+            doc.stats = Some(suite_stats);
             let mut t = Table::new("suite: MPU vs GPU", &["workload", "speedup", "energy_red", "ok"]);
             for p in &pairs {
                 t.row(vec![
@@ -344,6 +368,136 @@ fn main() -> anyhow::Result<()> {
             );
             if strict {
                 anyhow::ensure!(all_correct(&doc), "suite has incorrect runs (see table above)");
+            }
+            if rest.iter().any(|a| a == "--perf") {
+                // Simulator-throughput harness: re-simulate every
+                // (variant × workload) point fresh and serially —
+                // bypassing the caches and the rayon pool — so the
+                // wall-times measure the simulator's hot loop itself.
+                let mut sw = Sweep::new();
+                for kind in MachineKind::ALL {
+                    sw = sw.suite_kind(kind, scale, &cfg);
+                }
+                let t0 = std::time::Instant::now();
+                let results = sw.fresh().serial().run()?;
+                let perf = simperf_json(scale, &results, true, true);
+                let mut t = Table::new(
+                    "simulator throughput (fresh, serial)",
+                    &["variant", "workload", "cycles", "wall_ms", "Mcyc/s"],
+                );
+                for p in &perf.points {
+                    t.row(vec![
+                        p.variant.clone(),
+                        p.workload.clone(),
+                        p.cycles.to_string(),
+                        format!("{:.2}", p.wall_ms),
+                        format!("{:.2}", p.cycles_per_sec / 1e6),
+                    ]);
+                }
+                t.emit("simperf");
+                write_simperf_json(Path::new(SIMPERF_JSON), &perf)?;
+                println!(
+                    "wrote {} ({} points, sim {:.0} ms / harness {:.0} ms, geomean {:.2} Mcycles/s)",
+                    SIMPERF_JSON,
+                    perf.points.len(),
+                    perf.total_wall_ms,
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    perf.geomean_cycles_per_sec / 1e6
+                );
+            }
+        }
+        "cycles" => {
+            // Golden cycle counts: exact per-workload cycles for every
+            // machine variant — the timing contract the event-driven
+            // simulator core must preserve. One simulation pass feeds
+            // both flags: `--out` writes the golden, `--check` fails on
+            // ANY drift vs an existing one (no tolerance: cycle counts
+            // are deterministic). With neither flag, writes the default
+            // file name.
+            let cfg = parse_cfg(rest);
+            let scale = scale_of(rest);
+            let mut variants = serde_json::Map::new();
+            for kind in MachineKind::ALL {
+                let runs = run_suite_kind(&cfg, scale, kind)?;
+                let mut per = serde_json::Map::new();
+                for r in &runs {
+                    per.insert(r.workload.name().to_string(), serde_json::json!(r.cycles));
+                }
+                variants.insert(kind.name().to_string(), serde_json::Value::Object(per));
+            }
+            let doc = serde_json::json!({
+                "schema_version": 1,
+                "suite": "cycles",
+                "scale": scale.name(),
+                "variants": serde_json::Value::Object(variants),
+            });
+            // One simulation pass serves both flags: write first (so a
+            // drift failure still leaves the candidate file around for
+            // committing/diffing), then check. With neither flag, write
+            // the default name.
+            let check = flag_value(rest, "--check");
+            let out = match (flag_value(rest, "--out"), check.is_some()) {
+                (Some(o), _) => Some(o),
+                (None, false) => Some(format!("CYCLES_{}.json", scale.name())),
+                (None, true) => None,
+            };
+            if let Some(out) = &out {
+                let mut body = serde_json::to_string_pretty(&doc)?;
+                body.push('\n');
+                std::fs::write(out, body)?;
+                let n: usize = doc["variants"]
+                    .as_object()
+                    .unwrap()
+                    .values()
+                    .map(|v| v.as_object().unwrap().len())
+                    .sum();
+                println!("wrote {out} ({n} (variant × workload) cycle counts at {} scale)", scale.name());
+            }
+            if let Some(golden_path) = check {
+                let want: serde_json::Value =
+                    serde_json::from_str(&std::fs::read_to_string(&golden_path)?)?;
+                anyhow::ensure!(
+                    want["scale"] == doc["scale"],
+                    "scale mismatch: golden is {} but this run is {}",
+                    want["scale"],
+                    doc["scale"]
+                );
+                let mut drifts: Vec<String> = Vec::new();
+                let empty = serde_json::Map::new();
+                let want_vars = want["variants"].as_object().unwrap_or(&empty);
+                let got_vars = doc["variants"].as_object().unwrap();
+                for (variant, got_wls) in got_vars {
+                    let Some(want_wls) = want_vars.get(variant).and_then(|v| v.as_object()) else {
+                        drifts.push(format!("variant `{variant}` missing from golden"));
+                        continue;
+                    };
+                    for (wl, got) in got_wls.as_object().unwrap() {
+                        match want_wls.get(wl) {
+                            Some(want_c) if want_c == got => {}
+                            Some(want_c) => drifts.push(format!(
+                                "{variant}/{wl}: golden {want_c} vs {got}"
+                            )),
+                            None => drifts.push(format!("{variant}/{wl}: missing from golden")),
+                        }
+                    }
+                    for wl in want_wls.keys() {
+                        if !got_wls.as_object().unwrap().contains_key(wl) {
+                            drifts.push(format!("{variant}/{wl}: in golden but not simulated"));
+                        }
+                    }
+                }
+                for variant in want_vars.keys() {
+                    if !got_vars.contains_key(variant) {
+                        drifts.push(format!("variant `{variant}` in golden but not simulated"));
+                    }
+                }
+                anyhow::ensure!(
+                    drifts.is_empty(),
+                    "cycle-count drift vs {golden_path} (timing is a contract — if the change is intentional, refresh the golden and say so in the PR):\n  {}",
+                    drifts.join("\n  ")
+                );
+                let n: usize = got_vars.values().map(|v| v.as_object().unwrap().len()).sum();
+                println!("{golden_path}: {n} (variant × workload) cycle counts exactly match");
             }
         }
         "check-json" if rest.first().map(|a| a == "--compare").unwrap_or(false) => {

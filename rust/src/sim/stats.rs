@@ -26,7 +26,7 @@ pub enum TsvTraffic {
 /// `BENCH_suite.json` schema (see [`crate::coordinator::bench`]) and of
 /// the on-disk result store (see [`crate::coordinator::store`]); fields
 /// added later default to zero when older entries are deserialized.
-#[derive(Clone, Debug, Default, serde::Serialize, serde::Deserialize)]
+#[derive(Clone, Debug, Default, PartialEq, Eq, serde::Serialize, serde::Deserialize)]
 #[serde(default)]
 pub struct Stats {
     /// Simulated core cycles to completion.
