@@ -518,6 +518,11 @@ pub struct ServeConfig {
     pub store_dir: Option<std::path::PathBuf>,
     /// Store size cap in bytes (`MPU_STORE_MAX_MB`).
     pub store_max_bytes: u64,
+    /// Worker daemon addresses (`MPU_WORKERS`, comma-separated). When
+    /// non-empty, `mpu serve` runs as a federation coordinator and
+    /// `mpu submit` fans out client-side instead of talking to one
+    /// daemon.
+    pub workers: Vec<String>,
 }
 
 impl ServeConfig {
@@ -535,11 +540,20 @@ impl ServeConfig {
             .ok()
             .and_then(|v| v.parse::<u64>().ok())
             .unwrap_or(Self::DEFAULT_STORE_MAX_MB);
+        let workers = std::env::var("MPU_WORKERS")
+            .map(|v| Self::parse_workers(&v))
+            .unwrap_or_default();
         ServeConfig {
             addr,
             store_dir: Some(std::path::PathBuf::from(store_dir)),
             store_max_bytes: max_mb * 1024 * 1024,
+            workers,
         }
+    }
+
+    /// Split a comma-separated worker list, dropping empty segments.
+    pub fn parse_workers(s: &str) -> Vec<String> {
+        s.split(',').map(|w| w.trim().to_string()).filter(|w| !w.is_empty()).collect()
     }
 }
 

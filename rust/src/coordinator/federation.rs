@@ -1,0 +1,550 @@
+//! Multi-daemon sweep federation: shard one batch across worker
+//! daemons by consistent hashing, merge the streamed results back into
+//! point order, and survive worker deaths by redistributing their
+//! unfinished points.
+//!
+//! Topology: any number of `mpu serve` **workers** (each a full local
+//! [`Service`](super::service::Service) with its own two-tier
+//! cache/store), fronted either by a client-side [`Federation`]
+//! (`mpu submit --workers a,b,c`) or by a resident [`Coordinator`]
+//! daemon (`mpu serve --workers a,b,c`) that speaks the same JSONL
+//! protocol to its own clients.
+//!
+//! Sharding: each point maps onto a hash ring by the stable FNV-1a of
+//! its content-addressed store key (`SweepPoint::cache_key`), with
+//! [`VNODES`] virtual nodes per worker hashed from the worker address.
+//! Consistent hashing means a worker-set change only remaps the points
+//! of the workers that changed — the rest of the fleet keeps its warm
+//! stores. Workers run their shares concurrently and stream results
+//! back (`stream` + `point_specs` + `return_reports`, protocol v2);
+//! the federation records each completed point as it arrives, so when
+//! a worker dies mid-batch only its *unfinished* points are
+//! repartitioned over the survivors on the next round.
+
+use super::proto::{
+    self, PointSpec, PointSummary, ProgressBody, Request, Response, ResultBody, StatusBody,
+    StreamOutcome, SubmitReply, SubmitRequest, WireReport, WorkerStatus, PROTO_MAJOR,
+    PROTO_VERSION,
+};
+use super::service::{write_line, PointSource};
+use super::sweep::stable_hash;
+use super::RunReport;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::io::BufWriter;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Virtual nodes per worker on the hash ring. Enough that a small
+/// fleet's shares stay balanced (the imbalance of a 2-worker ring is a
+/// few percent, not a coin flip).
+pub const VNODES: usize = 64;
+
+/// Liveness-probe / handshake timeout.
+const PROBE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// An incremental federation event, forwarded to the submitting
+/// client: one merged `result` per completed point (indices in the
+/// *original* batch order) and a monotonically increasing `progress`.
+pub enum FedEvent<'a> {
+    Result {
+        index: usize,
+        summary: &'a PointSummary,
+        report: Option<&'a WireReport>,
+    },
+    Progress {
+        completed: usize,
+        total: usize,
+        elapsed_ms: u64,
+    },
+}
+
+/// A merged federated reply: the protocol reply (point order) plus the
+/// full reports when the request asked for them (`return_reports`).
+pub struct FedReply {
+    pub reply: SubmitReply,
+    /// One entry per point, `Some` only when `return_reports` was set
+    /// and the worker's report reconstructed cleanly.
+    pub reports: Vec<Option<RunReport>>,
+}
+
+/// A fixed set of worker daemons a batch can be sharded across.
+pub struct Federation {
+    workers: Vec<String>,
+}
+
+/// Shared mutable state of one federated submit: the merge slots and
+/// the caller's event sink, behind one lock so events are emitted in a
+/// consistent order across worker threads.
+struct Merge<F> {
+    summaries: Vec<Option<PointSummary>>,
+    reports: Vec<Option<WireReport>>,
+    completed: usize,
+    on_event: F,
+}
+
+impl Federation {
+    pub fn new(workers: Vec<String>) -> Result<Federation> {
+        let workers: Vec<String> =
+            workers.into_iter().map(|w| w.trim().to_string()).filter(|w| !w.is_empty()).collect();
+        anyhow::ensure!(!workers.is_empty(), "a federation needs at least one worker address");
+        Ok(Federation { workers })
+    }
+
+    pub fn workers(&self) -> &[String] {
+        &self.workers
+    }
+
+    /// Handshake with every reachable worker; a *live* worker that
+    /// rejects the handshake (protocol-major skew, pre-v2 server) or
+    /// lacks the `point_specs`/`stream` features is a hard error — it
+    /// would corrupt batches. Only an unreachable worker is tolerated:
+    /// submits route around dead workers anyway.
+    pub fn handshake(&self) -> Result<usize> {
+        let mut reachable = 0;
+        for addr in &self.workers {
+            match proto::hello(addr, PROBE_TIMEOUT) {
+                Ok(proto::HelloOutcome::Compatible { proto_version, proto_major, features }) => {
+                    anyhow::ensure!(
+                        proto_major == PROTO_MAJOR,
+                        "worker {addr} speaks protocol major {proto_major}, coordinator \
+                         speaks {PROTO_MAJOR}"
+                    );
+                    for need in ["stream", "point_specs"] {
+                        anyhow::ensure!(
+                            features.iter().any(|f| f == need),
+                            "worker {addr} (proto v{proto_version}) lacks the `{need}` \
+                             feature a coordinator requires — upgrade it"
+                        );
+                    }
+                    reachable += 1;
+                }
+                Ok(proto::HelloOutcome::Rejected(msg)) => {
+                    anyhow::bail!("worker {addr} rejected the handshake: {msg}")
+                }
+                Err(_) => continue,
+            }
+        }
+        Ok(reachable)
+    }
+
+    /// The hash ring over a set of worker indices.
+    fn ring(&self, alive: &[usize]) -> Vec<(u64, usize)> {
+        let mut ring = Vec::with_capacity(alive.len() * VNODES);
+        for &wi in alive {
+            for v in 0..VNODES {
+                ring.push((stable_hash(&format!("{}#{v}", self.workers[wi])), wi));
+            }
+        }
+        ring.sort_unstable();
+        ring
+    }
+
+    /// Partition `pending` (indices into `keys`) across the `alive`
+    /// workers by consistent hashing on the stable store key. Returns
+    /// `(worker index, point indices)` shares, sorted by worker.
+    pub fn partition(
+        &self,
+        keys: &[String],
+        pending: &[usize],
+        alive: &[usize],
+    ) -> Vec<(usize, Vec<usize>)> {
+        let ring = self.ring(alive);
+        let mut shares: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &pi in pending {
+            let h = stable_hash(&keys[pi]);
+            let at = ring.partition_point(|&(pos, _)| pos < h);
+            let (_, wi) = ring[at % ring.len()];
+            shares.entry(wi).or_default().push(pi);
+        }
+        let mut out: Vec<(usize, Vec<usize>)> = shares.into_iter().collect();
+        out.sort();
+        out
+    }
+
+    /// Shard a batch across the fleet, streaming merged events as
+    /// points complete. Points of a worker that dies mid-batch are
+    /// repartitioned across the survivors (their already-streamed
+    /// results are kept); the submit fails only when a worker rejects
+    /// the batch outright (a config error fails everywhere) or no
+    /// alive worker remains.
+    pub fn submit_streamed(
+        &self,
+        req: &SubmitRequest,
+        on_event: impl FnMut(FedEvent<'_>) + Send,
+    ) -> Result<FedReply> {
+        let points = req.points()?;
+        let total = points.len();
+        let keys: Vec<String> = points.iter().map(|p| p.cache_key()).collect();
+        let specs: Vec<PointSpec> = points
+            .iter()
+            .map(|p| PointSpec { workload: p.workload.name().to_string(), variant: p.label.clone() })
+            .collect();
+        let t0 = Instant::now();
+        let merge = Mutex::new(Merge {
+            summaries: vec![None; total],
+            reports: vec![None; total],
+            completed: 0,
+            on_event,
+        });
+        let mut alive: Vec<bool> = vec![true; self.workers.len()];
+        loop {
+            let pending: Vec<usize> = {
+                let m = merge.lock().unwrap();
+                (0..total).filter(|&i| m.summaries[i].is_none()).collect()
+            };
+            if pending.is_empty() {
+                break;
+            }
+            let alive_idx: Vec<usize> =
+                (0..alive.len()).filter(|&i| alive[i]).collect();
+            anyhow::ensure!(
+                !alive_idx.is_empty(),
+                "every worker died with {} of {total} points unfinished",
+                pending.len()
+            );
+            let shares = self.partition(&keys, &pending, &alive_idx);
+            let outcomes: Vec<(usize, Result<StreamOutcome>)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = shares
+                    .iter()
+                    .map(|(wi, share)| {
+                        let wi = *wi;
+                        let addr = self.workers[wi].as_str();
+                        let share = share.clone();
+                        let wreq = SubmitRequest {
+                            scale: req.scale.clone(),
+                            config: req.config.clone(),
+                            priority: req.priority,
+                            fresh: req.fresh,
+                            point_specs: share.iter().map(|&i| specs[i].clone()).collect(),
+                            return_reports: req.return_reports,
+                            stream: true,
+                            suite: false,
+                            workloads: vec![],
+                            variants: vec![],
+                        };
+                        let merge = &merge;
+                        scope.spawn(move || {
+                            let res = proto::submit_streamed(addr, &wreq, |resp| {
+                                let Response::Result(body) = resp else { return };
+                                // The worker's indices address its share.
+                                let Some(&global) = share.get(body.index) else { return };
+                                let mut guard = merge.lock().unwrap();
+                                let m = &mut *guard;
+                                if m.summaries[global].is_some() {
+                                    return;
+                                }
+                                m.summaries[global] = Some(body.point.clone());
+                                m.reports[global] = body.report.clone();
+                                m.completed += 1;
+                                let completed = m.completed;
+                                let summary = m.summaries[global].as_ref().unwrap();
+                                let report = m.reports[global].as_ref();
+                                (m.on_event)(FedEvent::Result { index: global, summary, report });
+                                (m.on_event)(FedEvent::Progress {
+                                    completed,
+                                    total,
+                                    elapsed_ms: t0.elapsed().as_millis() as u64,
+                                });
+                            });
+                            (wi, res)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker thread panicked")).collect()
+            });
+            let mut lost_worker = false;
+            for (wi, res) in outcomes {
+                match res {
+                    Ok(StreamOutcome::Done(_)) => {}
+                    // A rejected batch (unknown workload, bad config) is
+                    // fatal: the same request fails on every worker.
+                    Ok(StreamOutcome::ServerError(msg)) => {
+                        anyhow::bail!("worker {} rejected the batch: {msg}", self.workers[wi])
+                    }
+                    // Transport death: mark dead, redistribute next round.
+                    Err(_) => {
+                        alive[wi] = false;
+                        lost_worker = true;
+                    }
+                }
+            }
+            let still_pending = {
+                let m = merge.lock().unwrap();
+                (0..total).filter(|&i| m.summaries[i].is_none()).count()
+            };
+            if still_pending > 0 && !lost_worker {
+                anyhow::bail!(
+                    "workers reported done but {still_pending} of {total} points never \
+                     arrived (protocol skew?)"
+                );
+            }
+        }
+        let m = merge.into_inner().unwrap();
+        let summaries: Vec<PointSummary> =
+            m.summaries.into_iter().map(|s| s.expect("merged batch has empty slot")).collect();
+        let count = |want: PointSource| {
+            summaries
+                .iter()
+                .filter(|s| PointSource::from_name(&s.source) == Some(want))
+                .count()
+        };
+        let reply = SubmitReply {
+            points: total,
+            simulated: count(PointSource::Simulated),
+            mem_hits: count(PointSource::MemHit),
+            disk_hits: count(PointSource::DiskHit),
+            deduped: count(PointSource::Dedup),
+            elapsed_ms: t0.elapsed().as_millis() as u64,
+            results: summaries,
+        };
+        Ok(FedReply {
+            reply,
+            reports: m.reports.into_iter().map(|r| r.and_then(|w| w.into_report())).collect(),
+        })
+    }
+
+    /// Blocking federated submit (no event forwarding).
+    pub fn submit(&self, req: &SubmitRequest) -> Result<FedReply> {
+        self.submit_streamed(req, |_| {})
+    }
+
+    /// Probe every worker's `status` — the coordinator's per-worker
+    /// liveness view. Probes run concurrently so a fleet of dead
+    /// workers costs one probe timeout, not one per worker.
+    pub fn worker_statuses(&self) -> Vec<WorkerStatus> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .workers
+                .iter()
+                .map(|addr| {
+                    scope.spawn(move || {
+                        match proto::request_with_timeout(addr, &Request::Status, PROBE_TIMEOUT) {
+                            Ok(Response::Status(s)) => WorkerStatus {
+                                addr: addr.clone(),
+                                alive: true,
+                                proto_version: s.proto_version,
+                                points: s.points,
+                                simulated: s.simulated,
+                                queue_depth: s.queue_depth,
+                                inflight: s.inflight,
+                            },
+                            _ => WorkerStatus {
+                                addr: addr.clone(),
+                                alive: false,
+                                proto_version: 0,
+                                points: 0,
+                                simulated: 0,
+                                queue_depth: 0,
+                                inflight: 0,
+                            },
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("status probe panicked")).collect()
+        })
+    }
+}
+
+/// The resident coordinator daemon (`mpu serve --workers ...`): the
+/// same JSONL server surface as a local daemon, but submits are
+/// federated across the worker fleet instead of simulated in-process.
+pub struct Coordinator {
+    fed: Federation,
+    started: Instant,
+    requests: AtomicU64,
+    points: AtomicU64,
+    active: Mutex<u64>,
+    idle_cv: Condvar,
+}
+
+impl Coordinator {
+    pub fn new(fed: Federation) -> Coordinator {
+        Coordinator {
+            fed,
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            points: AtomicU64::new(0),
+            active: Mutex::new(0),
+            idle_cv: Condvar::new(),
+        }
+    }
+
+    pub fn federation(&self) -> &Federation {
+        &self.fed
+    }
+
+    /// Drain latch for graceful shutdown (mirror of
+    /// [`Service::wait_idle`](super::service::Service::wait_idle)).
+    pub fn wait_idle(&self) {
+        let mut n = self.active.lock().unwrap();
+        while *n > 0 {
+            n = self.idle_cv.wait(n).unwrap();
+        }
+    }
+
+    /// Coordinator status: own request counters plus a per-worker
+    /// liveness table and fleet-aggregated queue/in-flight depths.
+    pub fn status(&self) -> StatusBody {
+        let workers = self.fed.worker_statuses();
+        let sum = |f: fn(&WorkerStatus) -> u64| workers.iter().filter(|w| w.alive).map(f).sum();
+        StatusBody {
+            proto_version: PROTO_VERSION,
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+            requests: self.requests.load(Ordering::Relaxed),
+            points: self.points.load(Ordering::Relaxed),
+            simulated: sum(|w| w.simulated),
+            mem_hits: 0,
+            disk_hits: 0,
+            dedup_waits: 0,
+            kernels_compiled: 0,
+            mem_entries: 0,
+            store: None,
+            proto_major: PROTO_MAJOR,
+            queue_depth: workers.iter().filter(|w| w.alive).map(|w| w.queue_depth).sum(),
+            inflight: workers.iter().filter(|w| w.alive).map(|w| w.inflight).sum(),
+            active_requests: *self.active.lock().unwrap(),
+            workers: Some(workers),
+        }
+    }
+
+    /// Serve one submit from a coordinator connection: federate it,
+    /// forwarding merged `result`/`progress` records when the client
+    /// asked to stream, then write the terminal `done`/`error`.
+    pub fn serve_submit(
+        &self,
+        req: &SubmitRequest,
+        writer: &mut BufWriter<TcpStream>,
+    ) -> std::io::Result<()> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        *self.active.lock().unwrap() += 1;
+        let stream = req.stream;
+        let want_reports = req.return_reports;
+        let mut io_err: Option<std::io::Error> = None;
+        let res = self.fed.submit_streamed(req, |ev| {
+            if !stream || io_err.is_some() {
+                return;
+            }
+            let resp = match ev {
+                FedEvent::Result { index, summary, report } => Response::Result(ResultBody {
+                    index,
+                    point: summary.clone(),
+                    report: if want_reports { report.cloned() } else { None },
+                }),
+                FedEvent::Progress { completed, total, elapsed_ms } => {
+                    Response::Progress(ProgressBody { completed, total, elapsed_ms })
+                }
+            };
+            if let Err(e) = write_line(writer, &resp) {
+                io_err = Some(e);
+            }
+        });
+        {
+            let mut n = self.active.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                self.idle_cv.notify_all();
+            }
+        }
+        if let Some(e) = io_err {
+            return Err(e);
+        }
+        let resp = match res {
+            Ok(fr) => {
+                self.points.fetch_add(fr.reply.points as u64, Ordering::Relaxed);
+                Response::Done(fr.reply)
+            }
+            Err(e) => Response::Error { message: e.to_string() },
+        };
+        write_line(writer, &resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fed(addrs: &[&str]) -> Federation {
+        Federation::new(addrs.iter().map(|a| a.to_string()).collect()).unwrap()
+    }
+
+    fn keys(n: usize) -> Vec<String> {
+        // Shaped like real store keys.
+        (0..n).map(|i| format!("wl{i}-tiny-mpu-{i:016x}")).collect()
+    }
+
+    #[test]
+    fn empty_federation_is_rejected() {
+        assert!(Federation::new(vec![]).is_err());
+        assert!(Federation::new(vec!["  ".into(), "".into()]).is_err());
+        let f = Federation::new(vec![" 127.0.0.1:1 ".into()]).unwrap();
+        assert_eq!(f.workers(), ["127.0.0.1:1"]);
+    }
+
+    #[test]
+    fn partition_covers_all_points_disjointly() {
+        let f = fed(&["127.0.0.1:7201", "127.0.0.1:7202", "127.0.0.1:7203"]);
+        let ks = keys(64);
+        let pending: Vec<usize> = (0..ks.len()).collect();
+        let shares = f.partition(&ks, &pending, &[0, 1, 2]);
+        let mut seen: Vec<usize> = shares.iter().flat_map(|(_, pts)| pts.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, pending, "every point assigned exactly once");
+        // Deterministic: the same inputs give the same shares.
+        assert_eq!(f.partition(&ks, &pending, &[0, 1, 2]), shares);
+    }
+
+    #[test]
+    fn removing_a_worker_only_remaps_its_share() {
+        let f = fed(&["127.0.0.1:7201", "127.0.0.1:7202", "127.0.0.1:7203"]);
+        let ks = keys(96);
+        let pending: Vec<usize> = (0..ks.len()).collect();
+        let owner_of = |shares: &Vec<(usize, Vec<usize>)>| {
+            let mut owner = vec![usize::MAX; ks.len()];
+            for (wi, pts) in shares {
+                for &p in pts {
+                    owner[p] = *wi;
+                }
+            }
+            owner
+        };
+        let full = owner_of(&f.partition(&ks, &pending, &[0, 1, 2]));
+        let reduced = owner_of(&f.partition(&ks, &pending, &[0, 2]));
+        for (p, (&a, &b)) in full.iter().zip(&reduced).enumerate() {
+            if a != 1 {
+                assert_eq!(a, b, "point {p} moved although its worker survived");
+            } else {
+                assert!(b == 0 || b == 2, "dead worker's point must land on a survivor");
+            }
+        }
+        // The dead worker's share actually existed (the ring is balanced
+        // enough that 96 keys never all miss one of three workers).
+        assert!(full.iter().any(|&w| w == 1));
+    }
+
+    #[test]
+    fn two_worker_shares_are_nonempty_for_the_tiny_suite() {
+        // The shard-smoke CI job asserts both workers simulate a
+        // nonempty share of the 24-point tiny suite; pin that property
+        // here with the real cache keys.
+        use crate::coordinator::proto::SubmitRequest;
+        let req = SubmitRequest {
+            suite: true,
+            scale: "tiny".into(),
+            variants: vec!["mpu".into(), "gpu".into()],
+            ..SubmitRequest::default()
+        };
+        let points = req.points().unwrap();
+        let ks: Vec<String> = points.iter().map(|p| p.cache_key()).collect();
+        let pending: Vec<usize> = (0..ks.len()).collect();
+        let f = fed(&["127.0.0.1:7201", "127.0.0.1:7202"]);
+        let shares = f.partition(&ks, &pending, &[0, 1]);
+        assert_eq!(shares.len(), 2, "both workers must get a share: {shares:?}");
+        assert!(shares.iter().all(|(_, pts)| !pts.is_empty()));
+        let total: usize = shares.iter().map(|(_, pts)| pts.len()).sum();
+        assert_eq!(total, 24);
+    }
+}

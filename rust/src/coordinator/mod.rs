@@ -10,9 +10,14 @@
 //! The [`service`] module makes the engine resident (`mpu serve`): a
 //! priority job queue with cross-request in-flight dedup behind a JSONL
 //! TCP [`proto`]col, backed by the persistent content-addressed result
-//! [`store`] that sits under [`SimCache`] as its second tier.
+//! [`store`] that sits under [`SimCache`] as its second tier. The
+//! [`federation`] module scales the service past one machine: a
+//! coordinator shards batches across worker daemons by consistent
+//! hashing on the stable store keys, merges their streamed results,
+//! and redistributes the points of workers that die mid-batch.
 
 pub mod bench;
+pub mod federation;
 pub mod proto;
 pub mod report;
 pub mod service;
@@ -26,8 +31,9 @@ use crate::sim::Stats;
 use crate::workloads::{Prepared, Scale, Workload};
 use anyhow::Result;
 
+pub use federation::{Coordinator, FedEvent, FedReply, Federation};
 pub use service::{Service, SweepServer};
-pub use store::{DiskStore, StoreConfig};
+pub use store::{DiskStore, GcOptions, GcReport, StoreConfig};
 pub use sweep::{run_suite, run_suite_kind, KernelCache, SimCache, Sweep, SweepResult, Target};
 
 /// Result of one simulated run.

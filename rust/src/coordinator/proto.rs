@@ -2,13 +2,23 @@
 //!
 //! One JSON object per line in both directions, over a local TCP socket
 //! (std-only). A connection may carry any number of requests; every
-//! request gets exactly one response line.
+//! request gets exactly one response line — except a **streamed**
+//! submit (`"stream":true`, protocol v2), which gets incremental
+//! `progress`/`result` records and a terminal `done` (or `error`)
+//! record:
 //!
 //! ```text
 //! -> {"cmd":"ping"}
-//! <- {"resp":"pong","proto_version":1}
+//! <- {"resp":"pong","proto_version":2}
+//! -> {"cmd":"hello","proto_version":2,"proto_major":1}
+//! <- {"resp":"hello","proto_version":2,"proto_major":1,"features":[...]}
 //! -> {"cmd":"submit","suite":true,"scale":"tiny","variants":["mpu","gpu"]}
 //! <- {"resp":"done","points":24,"simulated":24,...,"results":[...]}
+//! -> {"cmd":"submit","suite":true,"scale":"tiny","stream":true}
+//! <- {"resp":"result","index":0,"point":{...}}
+//! <- {"resp":"progress","completed":1,"total":24,"elapsed_ms":12}
+//! <- ...
+//! <- {"resp":"done","points":24,...,"results":[...]}
 //! -> {"cmd":"status"}
 //! <- {"resp":"status","requests":1,...}
 //! -> {"cmd":"shutdown"}
@@ -16,19 +26,46 @@
 //! ```
 //!
 //! Fields are append-only once released, mirroring the
-//! `BENCH_suite.json` schema discipline.
+//! `BENCH_suite.json` schema discipline: a v1 client's blocking
+//! `submit` keeps working against a v2 server (the new request fields
+//! all default off), and a v2 client talking to a v1 server sees the
+//! old single-reply behaviour. The explicit [`Request::Hello`]
+//! handshake exists for the cases serde defaults cannot paper over: a
+//! **major**-version mismatch is rejected with a clear error instead of
+//! being silently misinterpreted, and the `features` list tells a
+//! coordinator whether a worker understands `point_specs` streaming.
 
 use crate::config::{MachineConfig, MachineKind};
 use crate::coordinator::sweep::{SweepPoint, Target};
+use crate::coordinator::RunReport;
 use crate::workloads::{Scale, Workload};
 use anyhow::{anyhow, Context, Result};
 use serde::{Deserialize, Serialize};
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
-/// Protocol version; a server rejects nothing by version yet, but
-/// reports it in `pong`/`status` so clients can detect skew.
-pub const PROTO_VERSION: u32 = 1;
+/// Protocol feature level. v2 adds the `hello` handshake, streamed
+/// submits (`stream`), explicit per-point batches (`point_specs`),
+/// full-report transfer (`return_reports` + `result.report`) and the
+/// queue/worker fields of `status`. All v2 additions are append-only,
+/// so v1 and v2 share [`PROTO_MAJOR`] 1.
+pub const PROTO_VERSION: u32 = 2;
+
+/// Compatibility epoch. Bumped only when a change cannot be expressed
+/// append-only; a server rejects a `hello` from a different major with
+/// a clear error instead of misinterpreting its requests.
+pub const PROTO_MAJOR: u32 = 1;
+
+/// Wire-protocol feature names reported in the `hello` response (a
+/// coordinator requires `point_specs` + `stream` from its workers).
+/// Only capabilities with an actual protocol surface belong here —
+/// the list is append-only once released.
+pub const FEATURES: [&str; 3] = ["stream", "point_specs", "return_reports"];
+
+fn default_proto_major() -> u32 {
+    PROTO_MAJOR
+}
 
 /// A client request (one per line).
 #[derive(Clone, Debug, Serialize, Deserialize)]
@@ -36,6 +73,13 @@ pub const PROTO_VERSION: u32 = 1;
 pub enum Request {
     /// Liveness check.
     Ping,
+    /// Version/feature handshake (v2). Optional before `submit`; a
+    /// major mismatch is rejected here so skewed clients fail loudly.
+    Hello {
+        proto_version: u32,
+        #[serde(default = "default_proto_major")]
+        proto_major: u32,
+    },
     /// Daemon + store counters.
     Status,
     /// Run a batch of sweep points and return their results.
@@ -45,8 +89,8 @@ pub enum Request {
     Shutdown,
 }
 
-/// A batch of sweep points: `{workloads | suite} × variants` under one
-/// machine configuration.
+/// A batch of sweep points: `{workloads | suite | point_specs} ×
+/// variants` under one machine configuration.
 #[derive(Clone, Debug, Serialize, Deserialize)]
 pub struct SubmitRequest {
     /// Run the whole Table-I suite (overrides `workloads`).
@@ -71,6 +115,49 @@ pub struct SubmitRequest {
     /// Force re-simulation, bypassing every cache tier.
     #[serde(default)]
     pub fresh: bool,
+    /// Stream incremental `progress`/`result` records per completed
+    /// point before the terminal `done` (v2; defaults off, so v1
+    /// clients keep the single blocking reply).
+    #[serde(default)]
+    pub stream: bool,
+    /// Explicit (workload × variant) points, overriding the
+    /// `{workloads|suite} × variants` cross product (v2). This is how a
+    /// coordinator ships each worker exactly its consistent-hash share,
+    /// which is not expressible as a cross product.
+    #[serde(default)]
+    pub point_specs: Vec<PointSpec>,
+    /// Attach the full serialized report to each streamed `result`
+    /// record (v2; coordinators use it to merge byte-identical
+    /// results).
+    #[serde(default)]
+    pub return_reports: bool,
+}
+
+impl Default for SubmitRequest {
+    /// The serde defaults: a blocking `{mpu,gpu} × workloads` submit at
+    /// Small scale (what a bare `{"cmd":"submit"}` line means).
+    fn default() -> SubmitRequest {
+        SubmitRequest {
+            suite: false,
+            workloads: vec![],
+            scale: default_scale(),
+            variants: default_variants(),
+            config: vec![],
+            priority: 0,
+            fresh: false,
+            stream: false,
+            point_specs: vec![],
+            return_reports: false,
+        }
+    }
+}
+
+/// One explicit sweep point of a `point_specs` batch (scale and config
+/// come from the enclosing request).
+#[derive(Clone, Debug, PartialEq, Eq, Serialize, Deserialize)]
+pub struct PointSpec {
+    pub workload: String,
+    pub variant: String,
 }
 
 fn default_scale() -> String {
@@ -82,8 +169,10 @@ fn default_variants() -> Vec<String> {
 }
 
 impl SubmitRequest {
-    /// Expand into concrete sweep points (variant-major, each variant in
-    /// workload order) — the server-side entry to the sweep engine.
+    /// Expand into concrete sweep points — the server-side entry to the
+    /// sweep engine. `point_specs` (when present) wins; otherwise the
+    /// `{workloads|suite} × variants` cross product expands
+    /// variant-major, each variant in workload order.
     pub fn points(&self) -> Result<Vec<SweepPoint>> {
         let mut cfg = MachineConfig::scaled();
         for (k, v) in &self.config {
@@ -91,6 +180,22 @@ impl SubmitRequest {
         }
         let scale = Scale::from_name(&self.scale)
             .ok_or_else(|| anyhow!("unknown scale `{}` (tiny|small)", self.scale))?;
+        if !self.point_specs.is_empty() {
+            let mut points = Vec::with_capacity(self.point_specs.len());
+            for spec in &self.point_specs {
+                let w = Workload::from_name(&spec.workload)
+                    .ok_or_else(|| anyhow!("unknown workload `{}`", spec.workload))?;
+                let kind = MachineKind::from_name(&spec.variant)
+                    .ok_or_else(|| anyhow!("unknown machine variant `{}`", spec.variant))?;
+                points.push(SweepPoint {
+                    label: kind.name().to_string(),
+                    workload: w,
+                    scale,
+                    target: Target::for_kind(kind, &cfg),
+                });
+            }
+            return Ok(points);
+        }
         let workloads: Vec<Workload> = if self.suite {
             Workload::ALL.to_vec()
         } else {
@@ -121,15 +226,52 @@ impl SubmitRequest {
     }
 }
 
-/// A server response (one per request).
+/// A server response. Blocking requests get exactly one; a streamed
+/// submit gets `result`/`progress` records and a terminal
+/// `done`/`error`.
 #[derive(Clone, Debug, Serialize, Deserialize)]
 #[serde(tag = "resp", rename_all = "snake_case")]
 pub enum Response {
-    Pong { proto_version: u32 },
-    Error { message: String },
+    Pong {
+        proto_version: u32,
+    },
+    /// Handshake reply (v2).
+    Hello {
+        proto_version: u32,
+        proto_major: u32,
+        features: Vec<String>,
+    },
+    Error {
+        message: String,
+    },
     Status(StatusBody),
+    /// Streamed: one completed point (v2).
+    Result(ResultBody),
+    /// Streamed: running completion count (v2).
+    Progress(ProgressBody),
     Done(SubmitReply),
     Bye,
+}
+
+/// One streamed completed point.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct ResultBody {
+    /// Index into the submitted batch's point order.
+    pub index: usize,
+    pub point: PointSummary,
+    /// Full serialized report, present when the request set
+    /// `return_reports`.
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub report: Option<WireReport>,
+}
+
+/// Streamed completion counter; `completed` is monotonically
+/// increasing and reaches `total` exactly at the terminal record.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct ProgressBody {
+    pub completed: usize,
+    pub total: usize,
+    pub elapsed_ms: u64,
 }
 
 /// Result of one submitted batch.
@@ -158,8 +300,9 @@ impl SubmitReply {
     }
 }
 
-/// One point's result summary (the full `RunReport` stays server-side;
-/// suite JSON remains the vehicle for complete stats).
+/// One point's result summary (the full `RunReport` stays server-side
+/// unless `return_reports` streams it; suite JSON remains the vehicle
+/// for complete stats).
 #[derive(Clone, Debug, Serialize, Deserialize)]
 pub struct PointSummary {
     pub label: String,
@@ -175,7 +318,74 @@ pub struct PointSummary {
     pub source: String,
 }
 
-/// Daemon counters for `mpu status`.
+/// A full [`RunReport`] in wire form (owned strings so it round-trips
+/// through serde; the on-disk store's entry body is the same shape plus
+/// key/schema fields). Coordinators merge these so a federated submit
+/// returns byte-identical reports to a single-daemon one.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct WireReport {
+    pub workload: String,
+    pub scale: String,
+    pub machine: String,
+    pub cycles: u64,
+    #[serde(default)]
+    pub sim_wall_ms: f64,
+    #[serde(default)]
+    pub sim_cycles_per_sec: f64,
+    pub stats: crate::sim::Stats,
+    pub energy: crate::energy::EnergyBreakdown,
+    pub correct: bool,
+    pub max_err: f32,
+    pub output: Vec<f32>,
+    pub golden: Vec<f32>,
+    pub loc_stats: crate::compiler::LocStats,
+}
+
+impl WireReport {
+    pub fn from_report(scale: Scale, r: &RunReport) -> WireReport {
+        WireReport {
+            workload: r.workload.name().to_string(),
+            scale: scale.name().to_string(),
+            machine: r.machine.to_string(),
+            cycles: r.cycles,
+            sim_wall_ms: r.sim_wall_ms,
+            sim_cycles_per_sec: r.sim_cycles_per_sec,
+            stats: r.stats.clone(),
+            energy: r.energy,
+            correct: r.correct,
+            max_err: r.max_err,
+            output: r.output.clone(),
+            golden: r.golden.clone(),
+            loc_stats: r.loc_stats.clone(),
+        }
+    }
+
+    /// Reconstruct the in-memory report; `None` when the workload,
+    /// scale or machine name is foreign (a skewed peer).
+    pub fn into_report(self) -> Option<RunReport> {
+        let workload = Workload::from_name(&self.workload)?;
+        Scale::from_name(&self.scale)?;
+        let machine = super::store::machine_static(&self.machine)?;
+        Some(RunReport {
+            workload,
+            machine,
+            cycles: self.cycles,
+            sim_wall_ms: self.sim_wall_ms,
+            sim_cycles_per_sec: self.sim_cycles_per_sec,
+            stats: self.stats,
+            energy: self.energy,
+            correct: self.correct,
+            max_err: self.max_err,
+            output: self.output,
+            golden: self.golden,
+            loc_stats: self.loc_stats,
+        })
+    }
+}
+
+/// Daemon counters for `mpu status`. The queue/in-flight/worker fields
+/// are v2 append-only additions (defaulted so v2 clients parse v1
+/// replies).
 #[derive(Clone, Debug, Serialize, Deserialize)]
 pub struct StatusBody {
     pub proto_version: u32,
@@ -194,12 +404,66 @@ pub struct StatusBody {
     pub mem_entries: usize,
     /// On-disk store counters (absent when the daemon runs storeless).
     pub store: Option<super::store::StoreStats>,
+    /// Compatibility epoch (v2; 0 from a v1 server).
+    #[serde(default)]
+    pub proto_major: u32,
+    /// Points queued but not yet claimed by a runner (v2).
+    #[serde(default)]
+    pub queue_depth: usize,
+    /// Simulations currently executing or awaited by a dedup waiter
+    /// (v2).
+    #[serde(default)]
+    pub inflight: usize,
+    /// Submit requests currently executing (v2).
+    #[serde(default)]
+    pub active_requests: u64,
+    /// Per-worker liveness, present only from a coordinator (v2).
+    #[serde(default)]
+    pub workers: Option<Vec<WorkerStatus>>,
+}
+
+/// One worker's liveness row in a coordinator's `status` reply.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct WorkerStatus {
+    pub addr: String,
+    pub alive: bool,
+    /// The worker's protocol version (0 when unreachable).
+    #[serde(default)]
+    pub proto_version: u32,
+    /// Worker-side lifetime counters (0 when unreachable).
+    #[serde(default)]
+    pub points: u64,
+    #[serde(default)]
+    pub simulated: u64,
+    #[serde(default)]
+    pub queue_depth: usize,
+    #[serde(default)]
+    pub inflight: usize,
 }
 
 /// Send one request and read one response over a fresh connection.
 pub fn request(addr: &str, req: &Request) -> Result<Response> {
     let stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting to mpu serve at {addr}"))?;
+    request_over(stream, req)
+}
+
+/// [`request`] with connect/read/write timeouts — the coordinator's
+/// liveness probes must not hang on a half-dead worker.
+pub fn request_with_timeout(addr: &str, req: &Request, timeout: Duration) -> Result<Response> {
+    let sa = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("{addr} resolves to no address"))?;
+    let stream = TcpStream::connect_timeout(&sa, timeout)
+        .with_context(|| format!("connecting to mpu serve at {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    request_over(stream, req)
+}
+
+fn request_over(stream: TcpStream, req: &Request) -> Result<Response> {
     let mut w = BufWriter::new(stream.try_clone()?);
     let line = serde_json::to_string(req)?;
     w.write_all(line.as_bytes())?;
@@ -211,20 +475,98 @@ pub fn request(addr: &str, req: &Request) -> Result<Response> {
     serde_json::from_str(&reply).context("malformed response line")
 }
 
+/// Outcome of a [`hello`] handshake against a *reachable* server —
+/// kept separate from transport failures (`Err`) because the two must
+/// be handled differently: a rejection means version skew and is
+/// fatal, an unreachable peer is merely dead and can be routed around.
+#[derive(Debug)]
+pub enum HelloOutcome {
+    Compatible {
+        proto_version: u32,
+        proto_major: u32,
+        features: Vec<String>,
+    },
+    /// The server answered but rejected the handshake (major-version
+    /// mismatch) or does not speak `hello` at all (a pre-v2 server
+    /// replies with a bad-request error).
+    Rejected(String),
+}
+
+/// Handshake with a server. `Err` is transport-level (unreachable);
+/// [`HelloOutcome::Rejected`] is a live server refusing our version.
+pub fn hello(addr: &str, timeout: Duration) -> Result<HelloOutcome> {
+    let req = Request::Hello { proto_version: PROTO_VERSION, proto_major: PROTO_MAJOR };
+    match request_with_timeout(addr, &req, timeout)? {
+        Response::Hello { proto_version, proto_major, features } => {
+            Ok(HelloOutcome::Compatible { proto_version, proto_major, features })
+        }
+        Response::Error { message } => Ok(HelloOutcome::Rejected(message)),
+        other => Ok(HelloOutcome::Rejected(format!("unexpected hello reply: {other:?}"))),
+    }
+}
+
+/// Terminal outcome of a streamed submit, separating "the server
+/// rejected the batch" (fatal for the whole federation — a config
+/// error fails everywhere) from transport errors (`Err`, which a
+/// coordinator treats as a dead worker and redistributes).
+#[derive(Debug)]
+pub enum StreamOutcome {
+    Done(SubmitReply),
+    ServerError(String),
+}
+
+/// Submit with `stream` forced on, invoking `on_event` for every
+/// incremental `result`/`progress` record. Returns when the terminal
+/// `done`/`error` record arrives; a connection that drops mid-stream is
+/// an `Err` (the events already delivered remain valid — that is what
+/// lets a coordinator keep a dead worker's completed points).
+pub fn submit_streamed(
+    addr: &str,
+    req: &SubmitRequest,
+    mut on_event: impl FnMut(&Response),
+) -> Result<StreamOutcome> {
+    let mut req = req.clone();
+    req.stream = true;
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to mpu serve at {addr}"))?;
+    let mut w = BufWriter::new(stream.try_clone()?);
+    let line = serde_json::to_string(&Request::Submit(req))?;
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp: Response = serde_json::from_str(&line).context("malformed stream record")?;
+        match resp {
+            Response::Done(reply) => return Ok(StreamOutcome::Done(reply)),
+            Response::Error { message } => return Ok(StreamOutcome::ServerError(message)),
+            other => on_event(&other),
+        }
+    }
+    anyhow::bail!("{addr}: connection closed before the terminal done record")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn plain_submit() -> SubmitRequest {
+        SubmitRequest { scale: "tiny".into(), variants: vec![], ..SubmitRequest::default() }
+    }
 
     #[test]
     fn requests_round_trip_as_jsonl() {
         let req = Request::Submit(SubmitRequest {
             suite: true,
-            workloads: vec![],
             scale: "tiny".into(),
-            variants: vec!["mpu".into(), "gpu".into()],
             config: vec![("row_buffers_per_bank".into(), "2".into())],
             priority: 3,
-            fresh: false,
+            stream: true,
+            ..SubmitRequest::default()
         });
         let line = serde_json::to_string(&req).unwrap();
         assert!(!line.contains('\n'), "one request must fit one line");
@@ -235,13 +577,16 @@ mod tests {
                 assert!(s.suite);
                 assert_eq!(s.priority, 3);
                 assert_eq!(s.variants.len(), 2);
+                assert!(s.stream);
             }
             other => panic!("round-trip changed the variant: {other:?}"),
         }
     }
 
     #[test]
-    fn submit_defaults_fill_in() {
+    fn v1_submit_lines_still_parse_with_v2_defaults_off() {
+        // A v1 client predates stream/point_specs/return_reports; its
+        // raw line must parse into the blocking defaults.
         let s: Request = serde_json::from_str(r#"{"cmd":"submit","workloads":["axpy"]}"#).unwrap();
         match s {
             Request::Submit(s) => {
@@ -249,22 +594,39 @@ mod tests {
                 assert_eq!(s.variants, vec!["mpu".to_string(), "gpu".to_string()]);
                 assert_eq!(s.priority, 0);
                 assert!(!s.fresh && !s.suite);
+                assert!(!s.stream, "v1 lines must stay blocking");
+                assert!(s.point_specs.is_empty());
+                assert!(!s.return_reports);
             }
             other => panic!("expected submit, got {other:?}"),
         }
     }
 
     #[test]
-    fn points_expand_variant_major() {
-        let s = SubmitRequest {
-            suite: false,
-            workloads: vec!["axpy".into(), "knn".into()],
-            scale: "tiny".into(),
-            variants: vec!["mpu".into(), "ideal".into()],
-            config: vec![],
-            priority: 0,
-            fresh: false,
+    fn hello_round_trips_and_defaults_major() {
+        let line = r#"{"cmd":"hello","proto_version":2}"#;
+        match serde_json::from_str::<Request>(line).unwrap() {
+            Request::Hello { proto_version, proto_major } => {
+                assert_eq!(proto_version, 2);
+                assert_eq!(proto_major, PROTO_MAJOR);
+            }
+            other => panic!("expected hello, got {other:?}"),
+        }
+        let resp = Response::Hello {
+            proto_version: PROTO_VERSION,
+            proto_major: PROTO_MAJOR,
+            features: FEATURES.iter().map(|f| f.to_string()).collect(),
         };
+        let body = serde_json::to_string(&resp).unwrap();
+        assert!(body.contains("\"resp\":\"hello\""));
+        assert!(body.contains("point_specs"));
+    }
+
+    #[test]
+    fn points_expand_variant_major() {
+        let mut s = plain_submit();
+        s.workloads = vec!["axpy".into(), "knn".into()];
+        s.variants = vec!["mpu".into(), "ideal".into()];
         let pts = s.points().unwrap();
         assert_eq!(pts.len(), 4);
         assert_eq!(pts[0].label, "mpu");
@@ -274,16 +636,31 @@ mod tests {
     }
 
     #[test]
+    fn point_specs_override_the_cross_product() {
+        let mut s = plain_submit();
+        // The cross-product fields are stale/empty; point_specs wins.
+        s.workloads = vec!["axpy".into()];
+        s.variants = vec!["gpu".into()];
+        s.point_specs = vec![
+            PointSpec { workload: "knn".into(), variant: "mpu".into() },
+            PointSpec { workload: "axpy".into(), variant: "ideal".into() },
+        ];
+        let pts = s.points().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].workload, Workload::Knn);
+        assert_eq!(pts[0].label, "mpu");
+        assert_eq!(pts[1].workload, Workload::Axpy);
+        assert_eq!(pts[1].label, "ideal");
+        // A bogus spec is rejected like any other name.
+        s.point_specs.push(PointSpec { workload: "nope".into(), variant: "mpu".into() });
+        assert!(s.points().is_err());
+    }
+
+    #[test]
     fn bad_names_are_rejected() {
-        let mut s = SubmitRequest {
-            suite: false,
-            workloads: vec!["nope".into()],
-            scale: "tiny".into(),
-            variants: vec!["mpu".into()],
-            config: vec![],
-            priority: 0,
-            fresh: false,
-        };
+        let mut s = plain_submit();
+        s.workloads = vec!["nope".into()];
+        s.variants = vec!["mpu".into()];
         assert!(s.points().is_err());
         s.workloads = vec!["axpy".into()];
         s.scale = "huge".into();
@@ -293,5 +670,46 @@ mod tests {
         assert!(s.points().is_err());
         s.variants = vec![];
         assert!(s.points().is_err());
+    }
+
+    #[test]
+    fn status_body_v1_reply_parses_with_defaults() {
+        // A v1 server's status reply lacks every v2 field; a v2 client
+        // must still parse it (append-only discipline).
+        let v1 = r#"{"resp":"status","proto_version":1,"uptime_ms":5,"requests":1,
+            "points":2,"simulated":2,"mem_hits":0,"disk_hits":0,"dedup_waits":0,
+            "kernels_compiled":1,"mem_entries":2,"store":null}"#;
+        match serde_json::from_str::<Response>(v1).unwrap() {
+            Response::Status(s) => {
+                assert_eq!(s.proto_version, 1);
+                assert_eq!(s.proto_major, 0, "v1 reply defaults major to 0");
+                assert_eq!(s.queue_depth, 0);
+                assert_eq!(s.inflight, 0);
+                assert!(s.workers.is_none());
+            }
+            other => panic!("expected status, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wire_report_round_trips() {
+        let cfg = MachineConfig::scaled();
+        let r = crate::coordinator::run_workload_scaled(Workload::Axpy, &cfg, Scale::Tiny)
+            .unwrap();
+        let wire = WireReport::from_report(Scale::Tiny, &r);
+        let body = serde_json::to_string(&wire).unwrap();
+        let back: WireReport = serde_json::from_str(&body).unwrap();
+        let rr = back.into_report().expect("known names reconstruct");
+        assert_eq!(rr.workload, r.workload);
+        assert_eq!(rr.machine, r.machine);
+        assert_eq!(rr.cycles, r.cycles);
+        assert_eq!(rr.stats, r.stats);
+        let a: Vec<u32> = rr.output.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = r.output.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "outputs must survive the wire bit-exactly");
+        // Foreign machine names are rejected, not trusted.
+        let mut alien = WireReport::from_report(Scale::Tiny, &r);
+        alien.machine = "tpu".into();
+        assert!(alien.into_report().is_none());
     }
 }

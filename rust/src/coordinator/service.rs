@@ -14,9 +14,19 @@
 //!   flight: the first claimant simulates, later ones wait on the same
 //!   [`Flight`] and share the result. Completed points are served by
 //!   the two-tier [`SimCache`] (memory + optional on-disk store).
+//!
+//! A streamed submit (`"stream":true`) walks the job's completion
+//! order as points finish, emitting `result`/`progress` records before
+//! the terminal `done` — long Small-scale batches report as they go
+//! instead of blocking silently. The same [`SweepServer`] can also
+//! front a [`Coordinator`](super::federation::Coordinator)
+//! ([`ServeMode::Federated`]): submits are then partitioned across
+//! worker daemons instead of simulated locally.
 
+use super::federation::Coordinator;
 use super::proto::{
-    PointSummary, Request, Response, StatusBody, SubmitReply, SubmitRequest, PROTO_VERSION,
+    PointSummary, ProgressBody, Request, Response, ResultBody, StatusBody, SubmitReply,
+    SubmitRequest, WireReport, FEATURES, PROTO_MAJOR, PROTO_VERSION,
 };
 use super::store::DiskStore;
 use super::sweep::{CacheTier, KernelCache, SimCache, SweepPoint};
@@ -53,6 +63,18 @@ impl PointSource {
             PointSource::Dedup => "dedup",
         }
     }
+
+    /// Inverse of [`PointSource::name`] (the wire form a coordinator
+    /// reads back from worker summaries).
+    pub fn from_name(s: &str) -> Option<PointSource> {
+        match s {
+            "sim" => Some(PointSource::Simulated),
+            "mem" => Some(PointSource::MemHit),
+            "disk" => Some(PointSource::DiskHit),
+            "dedup" => Some(PointSource::Dedup),
+            _ => None,
+        }
+    }
 }
 
 /// One finished point of a job.
@@ -61,6 +83,23 @@ pub struct PointResult {
     pub point: SweepPoint,
     pub report: RunReport,
     pub source: PointSource,
+}
+
+/// Build the wire summary of one finished point (shared by the
+/// blocking reply, the streamed `result` records and the federation).
+pub fn summarize(point: &SweepPoint, report: &RunReport, source: PointSource) -> PointSummary {
+    PointSummary {
+        label: point.label.clone(),
+        workload: point.workload.name().to_string(),
+        scale: point.scale.name().to_string(),
+        machine: report.machine.to_string(),
+        cycles: report.cycles,
+        correct: report.correct,
+        max_err: report.max_err,
+        dram_gbps: report.dram_gbps(),
+        energy_j: report.energy.total(),
+        source: source.name().to_string(),
+    }
 }
 
 /// An in-flight simulation another request can wait on.
@@ -91,12 +130,17 @@ impl Flight {
     }
 }
 
-/// A submitted batch: points, their slots, and a completion latch.
+type Slot = Option<Result<(RunReport, PointSource), String>>;
+
+/// A submitted batch: points, their result slots, and the completion
+/// order (which is what a streamed submit walks).
 pub struct Job {
     points: Vec<SweepPoint>,
     fresh: bool,
-    slots: Mutex<Vec<Option<Result<(RunReport, PointSource), String>>>>,
-    remaining: Mutex<usize>,
+    slots: Mutex<Vec<Slot>>,
+    /// Indices of finished points, in completion order. Guarded by its
+    /// own mutex, paired with `done_cv`.
+    finished: Mutex<Vec<usize>>,
     done_cv: Condvar,
 }
 
@@ -107,29 +151,61 @@ impl Job {
             points,
             fresh,
             slots: Mutex::new(vec![None; n]),
-            remaining: Mutex::new(n),
+            finished: Mutex::new(Vec::with_capacity(n)),
             done_cv: Condvar::new(),
         }
     }
 
     fn record(&self, idx: usize, res: Result<(RunReport, PointSource), String>) {
         self.slots.lock().unwrap()[idx] = Some(res);
-        let mut rem = self.remaining.lock().unwrap();
-        *rem -= 1;
-        if *rem == 0 {
-            self.done_cv.notify_all();
+        let mut fin = self.finished.lock().unwrap();
+        fin.push(idx);
+        self.done_cv.notify_all();
+    }
+
+    /// Points in the batch.
+    pub fn total(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Finished points so far.
+    pub fn completed(&self) -> usize {
+        self.finished.lock().unwrap().len()
+    }
+
+    /// The point at a batch index.
+    pub fn point(&self, idx: usize) -> &SweepPoint {
+        &self.points[idx]
+    }
+
+    /// A finished point's result (`None` while still pending).
+    pub fn peek(&self, idx: usize) -> Slot {
+        self.slots.lock().unwrap()[idx].clone()
+    }
+
+    /// Block until more than `seen` points have finished (or the job is
+    /// fully done) and return the indices finished since `seen`, in
+    /// completion order. Returns empty once `seen == total`.
+    pub fn wait_past(&self, seen: usize) -> Vec<usize> {
+        let mut fin = self.finished.lock().unwrap();
+        while fin.len() <= seen && fin.len() < self.points.len() {
+            fin = self.done_cv.wait(fin).unwrap();
         }
+        fin[seen..].to_vec()
     }
 
     /// Block until every point finished; the first failed point fails
-    /// the whole batch.
+    /// the whole batch. Idempotent: slots are cloned, not consumed, so
+    /// a streamed submit can peek results first and still build the
+    /// terminal reply from here.
     pub fn wait(&self) -> Result<Vec<PointResult>> {
-        let mut rem = self.remaining.lock().unwrap();
-        while *rem > 0 {
-            rem = self.done_cv.wait(rem).unwrap();
+        {
+            let mut fin = self.finished.lock().unwrap();
+            while fin.len() < self.points.len() {
+                fin = self.done_cv.wait(fin).unwrap();
+            }
         }
-        drop(rem);
-        let slots = std::mem::take(&mut *self.slots.lock().unwrap());
+        let slots = self.slots.lock().unwrap().clone();
         let mut out = Vec::with_capacity(self.points.len());
         for (pt, slot) in self.points.iter().zip(slots) {
             match slot.expect("finished job with an empty slot") {
@@ -196,6 +272,53 @@ pub struct Service {
     idle_cv: Condvar,
 }
 
+/// A submit in execution: the job plus the RAII active-count guard the
+/// graceful-shutdown drain waits on. Dropping it (reply sent, client
+/// gone, error) releases the drain latch.
+pub struct ActiveRequest {
+    svc: Arc<Service>,
+    job: Arc<Job>,
+    started: Instant,
+}
+
+impl ActiveRequest {
+    pub fn job(&self) -> &Arc<Job> {
+        &self.job
+    }
+
+    pub fn elapsed_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Block until the batch finishes and build the blocking reply.
+    pub fn wait_reply(&self) -> Result<SubmitReply> {
+        let results = self.job.wait()?;
+        let count = |s: PointSource| results.iter().filter(|r| r.source == s).count();
+        Ok(SubmitReply {
+            points: results.len(),
+            simulated: count(PointSource::Simulated),
+            mem_hits: count(PointSource::MemHit),
+            disk_hits: count(PointSource::DiskHit),
+            deduped: count(PointSource::Dedup),
+            elapsed_ms: self.elapsed_ms(),
+            results: results
+                .iter()
+                .map(|r| summarize(&r.point, &r.report, r.source))
+                .collect(),
+        })
+    }
+}
+
+impl Drop for ActiveRequest {
+    fn drop(&mut self) {
+        let mut n = self.svc.active.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.svc.idle_cv.notify_all();
+        }
+    }
+}
+
 impl Service {
     /// Build a service; `store` becomes the persistent tier under the
     /// service's [`SimCache`].
@@ -260,49 +383,36 @@ impl Service {
         job
     }
 
-    /// Expand a protocol request, run it, and summarize — the server's
-    /// submit path, also used directly by tests.
-    pub fn run_request(self: &Arc<Self>, req: &SubmitRequest) -> Result<SubmitReply> {
-        let t0 = Instant::now();
+    /// Expand a protocol request and start it executing; the returned
+    /// [`ActiveRequest`] holds the drain latch and exposes the job for
+    /// incremental (streamed) consumption.
+    pub fn begin_request(self: &Arc<Self>, req: &SubmitRequest) -> Result<ActiveRequest> {
         let points = req.points()?;
-        let total = points.len();
         *self.active.lock().unwrap() += 1;
-        let waited = {
-            let job = self.submit(points, req.priority, req.fresh);
-            job.wait()
-        };
-        {
-            let mut n = self.active.lock().unwrap();
-            *n -= 1;
-            if *n == 0 {
-                self.idle_cv.notify_all();
-            }
-        }
-        let results = waited?;
-        let count = |s: PointSource| results.iter().filter(|r| r.source == s).count();
-        Ok(SubmitReply {
-            points: total,
-            simulated: count(PointSource::Simulated),
-            mem_hits: count(PointSource::MemHit),
-            disk_hits: count(PointSource::DiskHit),
-            deduped: count(PointSource::Dedup),
-            elapsed_ms: t0.elapsed().as_millis() as u64,
-            results: results
-                .iter()
-                .map(|r| PointSummary {
-                    label: r.point.label.clone(),
-                    workload: r.point.workload.name().to_string(),
-                    scale: r.point.scale.name().to_string(),
-                    machine: r.report.machine.to_string(),
-                    cycles: r.report.cycles,
-                    correct: r.report.correct,
-                    max_err: r.report.max_err,
-                    dram_gbps: r.report.dram_gbps(),
-                    energy_j: r.report.energy.total(),
-                    source: r.source.name().to_string(),
-                })
-                .collect(),
-        })
+        let started = Instant::now();
+        let job = self.submit(points, req.priority, req.fresh);
+        Ok(ActiveRequest { svc: self.clone(), job, started })
+    }
+
+    /// Expand a protocol request, run it to completion, and summarize —
+    /// the blocking submit path, also used directly by tests.
+    pub fn run_request(self: &Arc<Self>, req: &SubmitRequest) -> Result<SubmitReply> {
+        self.begin_request(req)?.wait_reply()
+    }
+
+    /// Points queued but not yet claimed by a runner.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Simulations currently in flight (dedup table size).
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.lock().unwrap().len()
+    }
+
+    /// Submit requests currently executing.
+    pub fn active_requests(&self) -> u64 {
+        *self.active.lock().unwrap()
     }
 
     /// Daemon counter snapshot.
@@ -319,6 +429,11 @@ impl Service {
             kernels_compiled: self.kernels.len(),
             mem_entries: self.cache.len(),
             store: self.cache.store().map(|s| s.stats()),
+            proto_major: PROTO_MAJOR,
+            queue_depth: self.queue_depth(),
+            inflight: self.inflight_len(),
+            active_requests: self.active_requests(),
+            workers: None,
         }
     }
 
@@ -390,20 +505,54 @@ impl Service {
     }
 }
 
-/// The TCP front of a [`Service`]: bind first (so tests can learn the
-/// ephemeral port), then [`SweepServer::run`] the accept loop until a
-/// `shutdown` request.
+/// What a [`SweepServer`] fronts: a local simulating [`Service`], or a
+/// [`Coordinator`] that shards submits across worker daemons.
+#[derive(Clone)]
+pub enum ServeMode {
+    Local(Arc<Service>),
+    Federated(Arc<Coordinator>),
+}
+
+impl ServeMode {
+    fn status(&self) -> StatusBody {
+        match self {
+            ServeMode::Local(svc) => svc.status(),
+            ServeMode::Federated(co) => co.status(),
+        }
+    }
+
+    fn wait_idle(&self) {
+        match self {
+            ServeMode::Local(svc) => svc.wait_idle(),
+            ServeMode::Federated(co) => co.wait_idle(),
+        }
+    }
+}
+
+/// The TCP front of a [`Service`] or [`Coordinator`]: bind first (so
+/// tests can learn the ephemeral port), then [`SweepServer::run`] the
+/// accept loop until a `shutdown` request.
 pub struct SweepServer {
     listener: TcpListener,
-    svc: Arc<Service>,
+    mode: ServeMode,
     stop: Arc<AtomicBool>,
 }
 
 impl SweepServer {
+    /// Bind a local (simulating) daemon.
     pub fn bind(svc: Arc<Service>, addr: &str) -> Result<SweepServer> {
+        SweepServer::bind_mode(ServeMode::Local(svc), addr)
+    }
+
+    /// Bind a coordinator daemon fronting a worker fleet.
+    pub fn bind_coordinator(co: Arc<Coordinator>, addr: &str) -> Result<SweepServer> {
+        SweepServer::bind_mode(ServeMode::Federated(co), addr)
+    }
+
+    pub fn bind_mode(mode: ServeMode, addr: &str) -> Result<SweepServer> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow!("binding mpu serve to {addr}: {e}"))?;
-        Ok(SweepServer { listener, svc, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(SweepServer { listener, mode, stop: Arc::new(AtomicBool::new(false)) })
     }
 
     /// Bound address (resolves `:0` test binds).
@@ -420,10 +569,10 @@ impl SweepServer {
                 break;
             }
             let Ok(stream) = stream else { continue };
-            let svc = self.svc.clone();
+            let mode = self.mode.clone();
             let stop = self.stop.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(svc, stream, stop, addr);
+                let _ = handle_conn(mode, stream, stop, addr);
             });
         }
         Ok(())
@@ -431,7 +580,7 @@ impl SweepServer {
 }
 
 fn handle_conn(
-    svc: Arc<Service>,
+    mode: ServeMode,
     stream: TcpStream,
     stop: Arc<AtomicBool>,
     addr: SocketAddr,
@@ -443,31 +592,138 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match serde_json::from_str::<Request>(&line) {
-            Err(e) => Response::Error { message: format!("bad request line: {e}") },
-            Ok(Request::Ping) => Response::Pong { proto_version: PROTO_VERSION },
-            Ok(Request::Status) => Response::Status(svc.status()),
-            Ok(Request::Submit(req)) => match svc.run_request(&req) {
-                Ok(reply) => Response::Done(reply),
-                Err(e) => Response::Error { message: e.to_string() },
+        let req = match serde_json::from_str::<Request>(&line) {
+            Err(e) => {
+                write_line(&mut writer, &Response::Error { message: format!("bad request line: {e}") })?;
+                continue;
+            }
+            Ok(req) => req,
+        };
+        match req {
+            Request::Ping => write_line(&mut writer, &Response::Pong { proto_version: PROTO_VERSION })?,
+            Request::Hello { proto_version, proto_major } => {
+                let resp = if proto_major != PROTO_MAJOR {
+                    Response::Error {
+                        message: format!(
+                            "protocol major mismatch: client speaks v{proto_version} \
+                             (major {proto_major}), this server speaks v{PROTO_VERSION} \
+                             (major {PROTO_MAJOR}) — upgrade the older side"
+                        ),
+                    }
+                } else {
+                    Response::Hello {
+                        proto_version: PROTO_VERSION,
+                        proto_major: PROTO_MAJOR,
+                        features: FEATURES.iter().map(|f| f.to_string()).collect(),
+                    }
+                };
+                write_line(&mut writer, &resp)?;
+            }
+            Request::Status => write_line(&mut writer, &Response::Status(mode.status()))?,
+            Request::Submit(req) => match &mode {
+                ServeMode::Local(svc) => {
+                    if req.stream {
+                        stream_submit_local(svc, &req, &mut writer)?;
+                    } else {
+                        let resp = match svc.run_request(&req) {
+                            Ok(reply) => Response::Done(reply),
+                            Err(e) => Response::Error { message: e.to_string() },
+                        };
+                        write_line(&mut writer, &resp)?;
+                    }
+                }
+                ServeMode::Federated(co) => {
+                    co.serve_submit(&req, &mut writer)?;
+                }
             },
-            Ok(Request::Shutdown) => {
+            Request::Shutdown => {
                 // Drain batches still executing on other connections so
                 // their clients get results, then stop accepting.
-                svc.wait_idle();
+                mode.wait_idle();
                 write_line(&mut writer, &Response::Bye)?;
                 stop.store(true, Ordering::SeqCst);
                 // Wake the accept loop so it observes the stop flag.
                 let _ = TcpStream::connect(addr);
                 return Ok(());
             }
-        };
-        write_line(&mut writer, &resp)?;
+        }
     }
     Ok(())
 }
 
-fn write_line(writer: &mut BufWriter<TcpStream>, resp: &Response) -> std::io::Result<()> {
+/// Serve one streamed submit from the local service: emit a `result`
+/// record per completed point (in completion order) and a `progress`
+/// record per wake-up, then the terminal `done`/`error`.
+fn stream_submit_local(
+    svc: &Arc<Service>,
+    req: &SubmitRequest,
+    writer: &mut BufWriter<TcpStream>,
+) -> std::io::Result<()> {
+    let ar = match svc.begin_request(req) {
+        Ok(ar) => ar,
+        Err(e) => return write_line(writer, &Response::Error { message: e.to_string() }),
+    };
+    let total = ar.job().total();
+    // The terminal reply is assembled from the summaries accumulated
+    // while streaming — no second full-report clone of every slot.
+    let mut summaries: Vec<Option<PointSummary>> = vec![None; total];
+    let mut failed = false;
+    let mut seen = 0usize;
+    while seen < total {
+        let newly = ar.job().wait_past(seen);
+        for &idx in &newly {
+            match ar.job().peek(idx) {
+                Some(Ok((report, source))) => {
+                    let pt = ar.job().point(idx);
+                    let summary = summarize(pt, &report, source);
+                    let body = ResultBody {
+                        index: idx,
+                        point: summary.clone(),
+                        report: req
+                            .return_reports
+                            .then(|| WireReport::from_report(pt.scale, &report)),
+                    };
+                    write_line(writer, &Response::Result(body))?;
+                    summaries[idx] = Some(summary);
+                }
+                // Failed points carry no result record; the terminal
+                // error reports them (blocking semantics fail the
+                // whole batch).
+                Some(Err(_)) => failed = true,
+                None => {}
+            }
+        }
+        seen += newly.len();
+        let progress =
+            ProgressBody { completed: seen, total, elapsed_ms: ar.elapsed_ms() };
+        write_line(writer, &Response::Progress(progress))?;
+    }
+    let resp = if failed {
+        match ar.wait_reply() {
+            Ok(reply) => Response::Done(reply),
+            Err(e) => Response::Error { message: e.to_string() },
+        }
+    } else {
+        let results: Vec<PointSummary> =
+            summaries.into_iter().map(|s| s.expect("streamed batch complete")).collect();
+        let count = |src: &str| results.iter().filter(|r| r.source == src).count();
+        Response::Done(SubmitReply {
+            points: total,
+            simulated: count("sim"),
+            mem_hits: count("mem"),
+            disk_hits: count("disk"),
+            deduped: count("dedup"),
+            elapsed_ms: ar.elapsed_ms(),
+            results,
+        })
+    };
+    write_line(writer, &resp)
+}
+
+pub(crate) fn write_line(
+    writer: &mut BufWriter<TcpStream>,
+    resp: &Response,
+) -> std::io::Result<()> {
     let body = serde_json::to_string(resp).expect("responses always serialize");
     writer.write_all(body.as_bytes())?;
     writer.write_all(b"\n")?;
@@ -480,6 +736,15 @@ mod tests {
     use crate::config::MachineConfig;
     use crate::coordinator::sweep::Target;
     use crate::workloads::{Scale, Workload};
+
+    fn axpy_req() -> SubmitRequest {
+        SubmitRequest {
+            workloads: vec!["axpy".into()],
+            scale: "tiny".into(),
+            variants: vec!["mpu".into()],
+            ..SubmitRequest::default()
+        }
+    }
 
     #[test]
     fn queue_orders_by_priority_then_fifo() {
@@ -505,15 +770,7 @@ mod tests {
     #[test]
     fn service_counts_simulations_and_mem_hits() {
         let svc = Arc::new(Service::new(None));
-        let req = SubmitRequest {
-            suite: false,
-            workloads: vec!["axpy".into()],
-            scale: "tiny".into(),
-            variants: vec!["mpu".into()],
-            config: vec![],
-            priority: 0,
-            fresh: false,
-        };
+        let req = axpy_req();
         let first = svc.run_request(&req).unwrap();
         assert_eq!(first.points, 1);
         assert_eq!(first.simulated, 1);
@@ -530,23 +787,72 @@ mod tests {
         assert_eq!(status.simulated, 1);
         assert_eq!(status.mem_hits, 1);
         assert!(status.store.is_none());
+        // The busy-daemon fields are quiescent here but present.
+        assert_eq!(status.proto_major, PROTO_MAJOR);
+        assert_eq!(status.queue_depth, 0);
+        assert_eq!(status.inflight, 0);
+        assert_eq!(status.active_requests, 0);
+        assert!(status.workers.is_none());
     }
 
     #[test]
     fn fresh_requests_bypass_every_tier() {
         let svc = Arc::new(Service::new(None));
-        let mut req = SubmitRequest {
-            suite: false,
-            workloads: vec!["axpy".into()],
-            scale: "tiny".into(),
-            variants: vec!["mpu".into()],
-            config: vec![],
-            priority: 0,
-            fresh: false,
-        };
+        let mut req = axpy_req();
         svc.run_request(&req).unwrap();
         req.fresh = true;
         let again = svc.run_request(&req).unwrap();
         assert_eq!(again.simulated, 1, "fresh must re-simulate");
+    }
+
+    #[test]
+    fn job_completion_order_and_incremental_waits() {
+        // Drive a Job by hand: record results out of point order and
+        // check the streamed-walk primitives see them incrementally.
+        let cfg = MachineConfig::scaled();
+        let mk = |w| SweepPoint {
+            label: "mpu".into(),
+            workload: w,
+            scale: Scale::Tiny,
+            target: Target::Mpu(cfg.clone()),
+        };
+        let job = Job::new(vec![mk(Workload::Axpy), mk(Workload::Knn)], false);
+        assert_eq!(job.total(), 2);
+        assert_eq!(job.completed(), 0);
+        assert!(job.peek(0).is_none());
+        let r = crate::coordinator::run_workload_scaled(
+            Workload::Axpy,
+            &cfg,
+            Scale::Tiny,
+        )
+        .unwrap();
+        job.record(1, Ok((r.clone(), PointSource::Simulated)));
+        assert_eq!(job.completed(), 1);
+        let newly = job.wait_past(0);
+        assert_eq!(newly, vec![1], "completion order, not point order");
+        assert!(job.peek(1).unwrap().is_ok());
+        job.record(0, Ok((r, PointSource::MemHit)));
+        let newly = job.wait_past(1);
+        assert_eq!(newly, vec![0]);
+        assert!(job.wait_past(2).is_empty(), "past the end returns empty");
+        // wait() is idempotent over cloned slots.
+        let results = job.wait().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].source, PointSource::MemHit);
+        assert_eq!(results[1].source, PointSource::Simulated);
+        assert_eq!(job.wait().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn point_source_names_round_trip() {
+        for s in [
+            PointSource::Simulated,
+            PointSource::MemHit,
+            PointSource::DiskHit,
+            PointSource::Dedup,
+        ] {
+            assert_eq!(PointSource::from_name(s.name()), Some(s));
+        }
+        assert_eq!(PointSource::from_name("warp-drive"), None);
     }
 }

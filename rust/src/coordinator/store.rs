@@ -33,14 +33,16 @@
 //! v2; the former `DefaultHasher`-over-`Debug` fingerprint went cold —
 //! safely, but silently — on toolchain updates.)
 
+use super::proto::WireReport;
 use super::RunReport;
-use crate::workloads::{Scale, Workload};
+use crate::workloads::Scale;
 use anyhow::{Context, Result};
 use serde::{Deserialize, Serialize};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, SystemTime};
 
 /// Version of the on-disk entry/index schema. Bumping it invalidates
 /// every existing entry (they are dropped on load, not migrated).
@@ -88,32 +90,53 @@ pub struct StoreStats {
     pub corrupt_dropped: u64,
 }
 
-/// One serialized simulation result. A mirror of [`RunReport`] with
-/// owned strings so it round-trips through serde.
+/// Knobs of an explicit GC pass (`mpu store gc`): age-based expiry
+/// rides alongside the byte cap, and every pass eagerly drops
+/// schema-stale/corrupt entries and compacts the index.
+#[derive(Clone, Debug, Default)]
+pub struct GcOptions {
+    /// Drop entries whose file modification time is older than this.
+    pub max_age: Option<Duration>,
+    /// Byte-cap override for this pass (default: the store's cap).
+    pub max_bytes: Option<u64>,
+}
+
+/// What one GC pass did.
+#[derive(Clone, Debug, Default)]
+pub struct GcReport {
+    /// Entry files scanned.
+    pub scanned: usize,
+    /// Unreadable, unparseable, mis-keyed or schema-stale entries
+    /// dropped eagerly (a plain load would have dropped them lazily on
+    /// first touch; GC sweeps them all at once).
+    pub stale_dropped: usize,
+    /// Entries past [`GcOptions::max_age`].
+    pub expired: usize,
+    /// LRU evictions needed to get under the byte cap.
+    pub evicted: usize,
+    /// Index rows whose entry file had vanished (compacted away).
+    pub dangling_dropped: usize,
+    /// Surviving entries / bytes after the pass.
+    pub kept: usize,
+    pub kept_bytes: u64,
+}
+
+/// One serialized simulation result: the shared serde mirror of
+/// [`RunReport`] ([`WireReport`], flattened so the on-disk JSON shape
+/// is unchanged) plus the store's own key/schema envelope. One mirror
+/// to maintain — the wire and store schemas cannot silently diverge.
 #[derive(Serialize, Deserialize)]
 struct StoredEntry {
     schema_version: u32,
     key: String,
-    workload: String,
-    scale: String,
-    machine: String,
-    cycles: u64,
-    #[serde(default)]
-    sim_wall_ms: f64,
-    #[serde(default)]
-    sim_cycles_per_sec: f64,
-    stats: crate::sim::Stats,
-    energy: crate::energy::EnergyBreakdown,
-    correct: bool,
-    max_err: f32,
-    output: Vec<f32>,
-    golden: Vec<f32>,
-    loc_stats: crate::compiler::LocStats,
+    #[serde(flatten)]
+    body: WireReport,
 }
 
 /// `machine` strings are `&'static str` in [`RunReport`]; map the known
-/// values back (anything else means a foreign/corrupt entry).
-fn machine_static(s: &str) -> Option<&'static str> {
+/// values back (anything else means a foreign/corrupt entry). Shared
+/// with the wire-report decoding in [`super::proto`].
+pub(crate) fn machine_static(s: &str) -> Option<&'static str> {
     match s {
         "mpu" => Some("mpu"),
         "gpu" => Some("gpu"),
@@ -127,19 +150,7 @@ impl StoredEntry {
         StoredEntry {
             schema_version: STORE_SCHEMA_VERSION,
             key: key.to_string(),
-            workload: r.workload.name().to_string(),
-            scale: scale.name().to_string(),
-            machine: r.machine.to_string(),
-            cycles: r.cycles,
-            sim_wall_ms: r.sim_wall_ms,
-            sim_cycles_per_sec: r.sim_cycles_per_sec,
-            stats: r.stats.clone(),
-            energy: r.energy,
-            correct: r.correct,
-            max_err: r.max_err,
-            output: r.output.clone(),
-            golden: r.golden.clone(),
-            loc_stats: r.loc_stats.clone(),
+            body: WireReport::from_report(scale, r),
         }
     }
 
@@ -147,23 +158,9 @@ impl StoredEntry {
         if self.schema_version != STORE_SCHEMA_VERSION || self.key != key {
             return None;
         }
-        let workload = Workload::from_name(&self.workload)?;
-        Scale::from_name(&self.scale)?;
-        let machine = machine_static(&self.machine)?;
-        Some(RunReport {
-            workload,
-            machine,
-            cycles: self.cycles,
-            sim_wall_ms: self.sim_wall_ms,
-            sim_cycles_per_sec: self.sim_cycles_per_sec,
-            stats: self.stats,
-            energy: self.energy,
-            correct: self.correct,
-            max_err: self.max_err,
-            output: self.output,
-            golden: self.golden,
-            loc_stats: self.loc_stats,
-        })
+        // Name validation (workload/scale/machine) lives in the shared
+        // wire mirror.
+        self.body.into_report()
     }
 }
 
@@ -324,21 +321,116 @@ impl DiskStore {
     /// Evict LRU entries until under the byte cap. The most recently
     /// accessed entry always survives, even if it alone exceeds the cap.
     fn evict_over_cap(&self, ix: &mut Index) {
+        self.evict_to_cap(ix, self.max_bytes);
+    }
+
+    /// [`DiskStore::evict_over_cap`] against an explicit cap; returns
+    /// the number of evictions.
+    fn evict_to_cap(&self, ix: &mut Index, cap: u64) -> usize {
+        let mut evicted = 0;
         loop {
             let total: u64 = ix.entries.values().map(|e| e.bytes).sum();
-            if total <= self.max_bytes || ix.entries.len() <= 1 {
-                return;
+            if total <= cap || ix.entries.len() <= 1 {
+                return evicted;
             }
             let victim = ix
                 .entries
                 .iter()
                 .min_by_key(|(_, e)| e.last_access)
                 .map(|(k, _)| k.clone());
-            let Some(victim) = victim else { return };
+            let Some(victim) = victim else { return evicted };
             ix.entries.remove(&victim);
             let _ = std::fs::remove_file(self.entry_path(&victim));
             self.evictions.fetch_add(1, Ordering::Relaxed);
+            evicted += 1;
         }
+    }
+
+    /// One full garbage-collection / compaction pass — the "beyond
+    /// LRU" maintenance the resident daemon's write path never does:
+    ///
+    /// 1. scan `entries/` (the files are the truth, not the index);
+    /// 2. eagerly drop corrupt, mis-keyed and schema-stale entries
+    ///    (a plain `load` drops them lazily, one miss at a time);
+    /// 3. drop entries older than [`GcOptions::max_age`] (file mtime);
+    /// 4. LRU-evict down to the byte cap (recency carried over from
+    ///    the index for known keys);
+    /// 5. rewrite a compacted `index.json` (dangling rows gone, byte
+    ///    counts recomputed).
+    pub fn gc(&self, opts: &GcOptions) -> Result<GcReport> {
+        let mut report = GcReport::default();
+        let dir = self.root.join("entries");
+        let now = SystemTime::now();
+        let mut ix = self.index.lock().unwrap();
+        let mut file_keys: std::collections::HashSet<String> = std::collections::HashSet::new();
+        let mut survivors: Vec<(String, u64)> = Vec::new();
+        for ent in std::fs::read_dir(&dir)? {
+            let ent = ent?;
+            let name = ent.file_name().to_string_lossy().into_owned();
+            let Some(key) = name.strip_suffix(".json") else { continue };
+            let path = ent.path();
+            report.scanned += 1;
+            file_keys.insert(key.to_string());
+            let parsed = std::fs::read_to_string(&path)
+                .ok()
+                .map(|body| {
+                    let bytes = body.len() as u64;
+                    let intact = serde_json::from_str::<StoredEntry>(&body)
+                        .map(|e| e.schema_version == STORE_SCHEMA_VERSION && e.key == key)
+                        .unwrap_or(false);
+                    (bytes, intact)
+                });
+            let Some((bytes, intact)) = parsed else {
+                let _ = std::fs::remove_file(&path);
+                report.stale_dropped += 1;
+                self.corrupt_dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
+            if !intact {
+                let _ = std::fs::remove_file(&path);
+                report.stale_dropped += 1;
+                self.corrupt_dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            if let Some(max_age) = opts.max_age {
+                let age = std::fs::metadata(&path)
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|mtime| now.duration_since(mtime).ok());
+                // An unreadable mtime never expires an entry.
+                if age.map(|a| a >= max_age).unwrap_or(false) {
+                    let _ = std::fs::remove_file(&path);
+                    report.expired += 1;
+                    continue;
+                }
+            }
+            survivors.push((key.to_string(), bytes));
+        }
+        report.dangling_dropped =
+            ix.entries.keys().filter(|k| !file_keys.contains(*k)).count();
+        // Rebuild the index from the survivors, carrying recency over
+        // for keys the old index knew (unknown files get fresh clocks,
+        // i.e. most-recent — they are someone's live writes).
+        survivors.sort();
+        let mut entries = BTreeMap::new();
+        let mut clock = ix.clock;
+        for (key, bytes) in survivors {
+            let last_access = match ix.entries.get(&key) {
+                Some(e) => e.last_access,
+                None => {
+                    clock += 1;
+                    clock
+                }
+            };
+            entries.insert(key, IndexEntry { bytes, last_access });
+        }
+        ix.clock = clock;
+        ix.entries = entries;
+        report.evicted = self.evict_to_cap(&mut ix, opts.max_bytes.unwrap_or(self.max_bytes));
+        report.kept = ix.entries.len();
+        report.kept_bytes = ix.entries.values().map(|e| e.bytes).sum();
+        self.persist_index(&ix);
+        Ok(report)
     }
 
     /// Number of entries currently indexed.
@@ -394,6 +486,7 @@ mod tests {
     use super::*;
     use crate::config::MachineConfig;
     use crate::coordinator::run_workload_scaled;
+    use crate::workloads::Workload;
 
     fn tmp_root(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir()
@@ -459,6 +552,72 @@ mod tests {
         assert!(store.load("k1").is_none(), "LRU entry k1 should be evicted");
         assert!(store.load("k0").is_some());
         assert!(store.load("k2").is_some());
+    }
+
+    #[test]
+    fn gc_drops_stale_schema_eagerly_and_compacts_the_index() {
+        let root = tmp_root("gc_stale");
+        let r = sample_report();
+        let store = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+        store.store("ka", Scale::Tiny, &r);
+        store.store("kb", Scale::Tiny, &r);
+        store.store("kc", Scale::Tiny, &r);
+        // kb goes schema-stale; kc's file vanishes behind the index's
+        // back (a crashed writer / manual deletion).
+        let kb = root.join("entries").join("kb.json");
+        let mut v: serde_json::Value =
+            serde_json::from_str(&std::fs::read_to_string(&kb).unwrap()).unwrap();
+        v["schema_version"] = serde_json::json!(STORE_SCHEMA_VERSION + 1);
+        std::fs::write(&kb, serde_json::to_string(&v).unwrap()).unwrap();
+        std::fs::remove_file(root.join("entries").join("kc.json")).unwrap();
+
+        let report = store.gc(&GcOptions::default()).unwrap();
+        assert_eq!(report.scanned, 2, "kc's file is gone before the scan");
+        assert_eq!(report.stale_dropped, 1, "kb dropped eagerly");
+        assert_eq!(report.dangling_dropped, 1, "kc compacted out of the index");
+        assert_eq!(report.expired, 0);
+        assert_eq!(report.kept, 1);
+        assert!(!kb.exists());
+        assert_eq!(store.len(), 1);
+        assert!(store.load("ka").is_some());
+        // The compacted index survives a fresh open.
+        drop(store);
+        let again = DiskStore::open(StoreConfig::new(root)).unwrap();
+        assert_eq!(again.len(), 1);
+    }
+
+    #[test]
+    fn gc_age_expiry_and_byte_cap() {
+        let root = tmp_root("gc_age");
+        let r = sample_report();
+        let store = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+        store.store("ka", Scale::Tiny, &r);
+        store.store("kb", Scale::Tiny, &r);
+        // A generous max_age keeps everything (the files are seconds
+        // old at most).
+        let report = store
+            .gc(&GcOptions { max_age: Some(Duration::from_secs(3600)), max_bytes: None })
+            .unwrap();
+        assert_eq!(report.expired, 0);
+        assert_eq!(report.kept, 2);
+        // max_age zero expires every entry regardless of the cap.
+        let report =
+            store.gc(&GcOptions { max_age: Some(Duration::ZERO), max_bytes: None }).unwrap();
+        assert_eq!(report.expired, 2);
+        assert_eq!(report.kept, 0);
+        assert_eq!(store.len(), 0);
+        // Byte-cap override: three entries, cap sized for ~one. The
+        // most recently accessed entry always survives.
+        store.store("k0", Scale::Tiny, &r);
+        store.store("k1", Scale::Tiny, &r);
+        store.store("k2", Scale::Tiny, &r);
+        let one = store.total_bytes() / 3;
+        let report = store
+            .gc(&GcOptions { max_age: None, max_bytes: Some(one * 3 / 2) })
+            .unwrap();
+        assert_eq!(report.evicted, 2, "LRU pair evicted under the pass cap");
+        assert_eq!(report.kept, 1);
+        assert!(store.load("k2").is_some(), "most recent entry survives");
     }
 
     #[test]

@@ -33,8 +33,10 @@ use std::time::Instant;
 /// Stable 64-bit FNV-1a. The configuration fingerprints feed the
 /// on-disk result store's keys, so they must not depend on the std
 /// hasher (which is allowed to change between Rust releases and is
-/// randomized in some configurations).
-fn stable_hash(s: &str) -> u64 {
+/// randomized in some configurations). The federation's consistent-hash
+/// ring ([`super::federation`]) reuses it so point placement is stable
+/// across processes and releases too.
+pub fn stable_hash(s: &str) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in s.as_bytes() {
         h ^= *b as u64;

@@ -44,10 +44,16 @@
 //!   emitter ([`coordinator::bench`], `BENCH_suite.json`);
 //! * the **sweep service** ([`coordinator::service`]): a long-running
 //!   daemon (`mpu serve`) with a priority job queue, cross-request
-//!   in-flight dedup, a JSONL-over-TCP protocol
-//!   ([`coordinator::proto`]) and a persistent content-addressed
-//!   on-disk result store ([`coordinator::store`]) as the second tier
-//!   under the sweep engine's `SimCache`.
+//!   in-flight dedup, a JSONL-over-TCP protocol with streamed submits
+//!   and a version handshake ([`coordinator::proto`]) and a persistent
+//!   content-addressed on-disk result store ([`coordinator::store`],
+//!   with `mpu store gc` compaction) as the second tier under the
+//!   sweep engine's `SimCache`;
+//! * the **sweep federation** ([`coordinator::federation`]): shard one
+//!   batch across many worker daemons by consistent hashing on the
+//!   stable store keys (`mpu serve --workers` / `mpu submit
+//!   --workers`), merge the streamed results back into point order,
+//!   and redistribute a dead worker's unfinished points mid-batch.
 //!
 //! ## Quickstart
 //!

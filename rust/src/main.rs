@@ -30,13 +30,35 @@
 //!                                    cycles; exits non-zero on any >5%
 //!                                    cycle regression vs the baseline
 //!   serve [--addr A] [--store DIR] [--store-max-mb N] [--no-store]
+//!         [--workers H:P,H:P,...]
 //!                                    long-running sweep daemon (JSONL
 //!                                    over TCP) with the persistent
-//!                                    on-disk result store
+//!                                    on-disk result store; with
+//!                                    --workers (or MPU_WORKERS) it
+//!                                    runs as a federation coordinator
+//!                                    that shards submits across the
+//!                                    worker daemons by consistent
+//!                                    hashing and merges their
+//!                                    streamed results
 //!   submit [suite|<workload>...] [--tiny] [--variants a,b] [--priority N]
-//!          [--fresh] [--strict] [--addr A] [key=val ...]
-//!                                    submit a batch to the daemon
-//!   status [--addr A]                daemon + store counters
+//!          [--fresh] [--strict] [--stream] [--addr A]
+//!          [--workers H:P,...] [key=val ...]
+//!                                    submit a batch to the daemon;
+//!                                    --stream prints progress as
+//!                                    points complete; --workers fans
+//!                                    the batch out client-side across
+//!                                    a worker fleet
+//!   status [--addr A]                daemon + store counters (adds
+//!                                    queue depth, in-flight count and
+//!                                    per-worker liveness against a
+//!                                    busy daemon / coordinator)
+//!   store {stats|gc} [--store DIR] [--max-age-days D] [--max-mb N]
+//!                                    inspect or garbage-collect the
+//!                                    on-disk result store: gc drops
+//!                                    schema-stale entries eagerly,
+//!                                    expires entries older than D
+//!                                    days, LRU-evicts to the byte cap
+//!                                    and compacts index.json
 //!   shutdown [--addr A]              stop the daemon
 //!   compile <workload>               show backend annotations
 //!   validate [--tiny]                cross-check vs XLA artifacts
@@ -50,10 +72,13 @@ use mpu::coordinator::bench::{
     all_correct, simperf_json, suite_json_with_variants, write_simperf_json, write_suite_json,
     SuiteStats, SIMPERF_JSON, SUITE_JSON,
 };
-use mpu::coordinator::proto::{self, Request, Response, SubmitRequest};
+use mpu::coordinator::proto::{self, Request, Response, StreamOutcome, SubmitRequest};
 use mpu::coordinator::report::{f2, Table};
 use mpu::coordinator::sweep::{run_suite, run_suite_kind, SimCache, Sweep, Target};
-use mpu::coordinator::{compile_for, DiskStore, KernelCache, Service, StoreConfig, SweepServer};
+use mpu::coordinator::{
+    compile_for, Coordinator, DiskStore, FedEvent, Federation, GcOptions, KernelCache, Service,
+    StoreConfig, SweepServer,
+};
 use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
 use mpu::workloads::{prepare, Scale, Workload};
 use std::path::Path;
@@ -61,7 +86,7 @@ use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mpu <run|suite|cycles|check-json|serve|submit|status|shutdown|compile|validate|list|config> [args]\n\
+        "usage: mpu <run|suite|cycles|check-json|serve|submit|status|shutdown|store|compile|validate|list|config> [args]\n\
          \n  mpu run axpy row_buffers_per_bank=2 --machine ideal\
          \n  mpu suite offload_policy=hw --out BENCH_suite.json\
          \n  mpu suite --tiny --variants --strict --perf\
@@ -70,8 +95,11 @@ fn usage() -> ! {
          \n  mpu check-json BENCH_suite.json\
          \n  mpu check-json --compare baselines/BENCH_suite.small.json BENCH_suite.json\
          \n  mpu serve --addr 127.0.0.1:7117 --store .mpu-store\
-         \n  mpu submit suite --tiny --variants mpu,gpu\
+         \n  mpu serve --addr 127.0.0.1:7200 --workers 127.0.0.1:7201,127.0.0.1:7202\
+         \n  mpu submit suite --tiny --variants mpu,gpu --stream\
+         \n  mpu submit suite --tiny --workers 127.0.0.1:7201,127.0.0.1:7202\
          \n  mpu status | mpu shutdown\
+         \n  mpu store stats | mpu store gc --max-age-days 30\
          \n  mpu compile gemv\
          \n  mpu validate --tiny\
          \n  mpu list | mpu config"
@@ -129,8 +157,18 @@ fn out_path(args: &[String]) -> String {
 /// Positional arguments: everything that is not a `--flag` (or its
 /// value) and not a `key=val` configuration pair.
 fn positionals(args: &[String]) -> Vec<String> {
-    const VALUE_FLAGS: [&str; 7] =
-        ["--variants", "--priority", "--addr", "--out", "--store", "--store-max-mb", "--machine"];
+    const VALUE_FLAGS: [&str; 10] = [
+        "--variants",
+        "--priority",
+        "--addr",
+        "--out",
+        "--store",
+        "--store-max-mb",
+        "--machine",
+        "--workers",
+        "--max-age-days",
+        "--max-mb",
+    ];
     let mut out = Vec::new();
     let mut it = args.iter();
     while let Some(a) = it.next() {
@@ -554,6 +592,26 @@ fn main() -> anyhow::Result<()> {
         "serve" => {
             let env = ServeConfig::from_env();
             let addr = flag_value(rest, "--addr").unwrap_or(env.addr);
+            let workers = flag_value(rest, "--workers")
+                .map(|v| ServeConfig::parse_workers(&v))
+                .unwrap_or(env.workers);
+            if !workers.is_empty() {
+                // Coordinator mode: no local simulation — submits are
+                // sharded across the worker daemons by consistent
+                // hashing on the stable store keys.
+                let fed = Federation::new(workers)?;
+                let reachable = fed.handshake()?;
+                let n = fed.workers().len();
+                let co = Arc::new(Coordinator::new(fed));
+                let server = SweepServer::bind_coordinator(co, &addr)?;
+                println!(
+                    "mpu serve: coordinating {n} workers ({reachable} reachable) on {}",
+                    server.addr()
+                );
+                server.run()?;
+                println!("mpu serve: shut down");
+                return Ok(());
+            }
             let no_store = rest.iter().any(|a| a == "--no-store");
             let store_dir = flag_value(rest, "--store")
                 .map(std::path::PathBuf::from)
@@ -612,6 +670,7 @@ fn main() -> anyhow::Result<()> {
                 .iter()
                 .filter_map(|a| a.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
                 .collect();
+            let stream = rest.iter().any(|a| a == "--stream");
             let req = SubmitRequest {
                 suite,
                 workloads,
@@ -620,9 +679,49 @@ fn main() -> anyhow::Result<()> {
                 config,
                 priority,
                 fresh: rest.iter().any(|a| a == "--fresh"),
+                stream,
+                ..SubmitRequest::default()
             };
-            let Response::Done(reply) = daemon_request(&addr, &Request::Submit(req))? else {
-                anyhow::bail!("unexpected response to submit");
+            // Precedence: an explicit --workers federates; an explicit
+            // --addr talks to that daemon (even with MPU_WORKERS set —
+            // the addressed daemon may itself be the coordinator); only
+            // with neither flag does MPU_WORKERS federate client-side.
+            let fed_workers = match flag_value(rest, "--workers") {
+                Some(v) => ServeConfig::parse_workers(&v),
+                None if flag_value(rest, "--addr").is_none() => ServeConfig::from_env().workers,
+                None => vec![],
+            };
+            let reply = if !fed_workers.is_empty() {
+                // Client-side federation (--workers or MPU_WORKERS):
+                // shard the batch across the worker fleet directly, no
+                // coordinator daemon needed.
+                let fed = Federation::new(fed_workers)?;
+                fed.handshake()?;
+                let fr = fed.submit_streamed(&req, |ev| {
+                    if stream {
+                        if let FedEvent::Progress { completed, total, elapsed_ms } = ev {
+                            eprintln!("progress: {completed}/{total} ({elapsed_ms} ms)");
+                        }
+                    }
+                })?;
+                fr.reply
+            } else if stream {
+                match proto::submit_streamed(&addr, &req, |resp| {
+                    if let Response::Progress(p) = resp {
+                        eprintln!(
+                            "progress: {}/{} ({} ms)",
+                            p.completed, p.total, p.elapsed_ms
+                        );
+                    }
+                })? {
+                    StreamOutcome::Done(reply) => reply,
+                    StreamOutcome::ServerError(m) => anyhow::bail!("server error: {m}"),
+                }
+            } else {
+                let Response::Done(reply) = daemon_request(&addr, &Request::Submit(req))? else {
+                    anyhow::bail!("unexpected response to submit");
+                };
+                reply
             };
             let mut t =
                 Table::new("submitted batch", &["label", "workload", "cycles", "ok", "source"]);
@@ -673,6 +772,9 @@ fn main() -> anyhow::Result<()> {
             println!("  dedup waits     {}", s.dedup_waits);
             println!("  kernels         {}", s.kernels_compiled);
             println!("  mem entries     {}", s.mem_entries);
+            println!("  queue depth     {}", s.queue_depth);
+            println!("  in flight       {}", s.inflight);
+            println!("  active submits  {}", s.active_requests);
             match &s.store {
                 Some(st) => println!(
                     "  store           {} entries, {}/{} KiB, hits={} misses={} evictions={} corrupt_dropped={}",
@@ -686,6 +788,19 @@ fn main() -> anyhow::Result<()> {
                 ),
                 None => println!("  store           (none)"),
             }
+            if let Some(workers) = &s.workers {
+                println!("  workers ({}):", workers.len());
+                for w in workers {
+                    if w.alive {
+                        println!(
+                            "    {:<21} alive  proto v{}  points={} simulated={} queue={} inflight={}",
+                            w.addr, w.proto_version, w.points, w.simulated, w.queue_depth, w.inflight
+                        );
+                    } else {
+                        println!("    {:<21} DEAD", w.addr);
+                    }
+                }
+            }
         }
         "shutdown" => {
             let addr = addr_of(rest);
@@ -693,6 +808,78 @@ fn main() -> anyhow::Result<()> {
                 anyhow::bail!("unexpected response to shutdown");
             };
             println!("mpu daemon at {addr} stopped");
+        }
+        "store" => {
+            // Daemonless store maintenance: stats + the beyond-LRU GC
+            // (eager schema sweeps, age expiry, index compaction).
+            let env = ServeConfig::from_env();
+            let Some(action) = rest.first().map(|s| s.as_str()) else {
+                eprintln!("mpu store needs an action: stats | gc");
+                std::process::exit(2);
+            };
+            let dir = flag_value(rest, "--store")
+                .map(std::path::PathBuf::from)
+                .or(env.store_dir)
+                .expect("store dir always defaults");
+            let store =
+                DiskStore::open(StoreConfig::new(dir.clone()).max_bytes(env.store_max_bytes))?;
+            match action {
+                "stats" => {
+                    let st = store.stats();
+                    println!(
+                        "store {}: entries={} bytes={} KiB (cap {} KiB)",
+                        dir.display(),
+                        st.entries,
+                        st.bytes / 1024,
+                        st.max_bytes / 1024
+                    );
+                    println!(
+                        "  hits={} misses={} evictions={} corrupt_dropped={}",
+                        st.hits, st.misses, st.evictions, st.corrupt_dropped
+                    );
+                }
+                "gc" => {
+                    let max_age = flag_value(rest, "--max-age-days").map(|v| {
+                        // 100 years caps the product well under the
+                        // Duration::from_secs_f64 panic threshold.
+                        let days = v
+                            .parse::<f64>()
+                            .ok()
+                            .filter(|d| d.is_finite() && (0.0..=36_500.0).contains(d))
+                            .unwrap_or_else(|| {
+                                eprintln!(
+                                    "--max-age-days needs a number in [0, 36500], got `{v}`"
+                                );
+                                std::process::exit(2);
+                            });
+                        std::time::Duration::from_secs_f64(days * 86_400.0)
+                    });
+                    let max_bytes = flag_value(rest, "--max-mb").map(|v| {
+                        let mb = v.parse::<u64>().unwrap_or_else(|_| {
+                            eprintln!("--max-mb needs an integer, got `{v}`");
+                            std::process::exit(2);
+                        });
+                        mb * 1024 * 1024
+                    });
+                    let rep = store.gc(&GcOptions { max_age, max_bytes })?;
+                    println!(
+                        "store gc {}: scanned={} stale_dropped={} expired={} evicted={} \
+                         dangling_dropped={} kept={} ({} KiB)",
+                        dir.display(),
+                        rep.scanned,
+                        rep.stale_dropped,
+                        rep.expired,
+                        rep.evicted,
+                        rep.dangling_dropped,
+                        rep.kept,
+                        rep.kept_bytes / 1024
+                    );
+                }
+                other => {
+                    eprintln!("unknown store action `{other}` (stats | gc)");
+                    std::process::exit(2);
+                }
+            }
         }
         "compile" => {
             let Some(name) = rest.first() else { usage() };

@@ -1,14 +1,23 @@
 //! Integration tests of the sweep service and its persistent result
 //! store: cross-process round-trips, corrupt-entry recovery, schema
-//! invalidation, concurrent-submit dedup, and the warm-restart
-//! acceptance path (second identical batch re-simulates nothing).
+//! invalidation, concurrent-submit dedup, the warm-restart acceptance
+//! path (second identical batch re-simulates nothing), protocol-version
+//! skew, streamed submits, and the multi-daemon federation (sharded
+//! batches merge byte-identical to a single daemon's, dead workers'
+//! points redistribute).
 
 use mpu::config::MachineConfig;
-use mpu::coordinator::proto::{self, Request, Response, SubmitRequest};
+use mpu::coordinator::proto::{
+    self, Request, Response, StreamOutcome, SubmitRequest, WireReport, PROTO_MAJOR, PROTO_VERSION,
+};
 use mpu::coordinator::store::STORE_SCHEMA_VERSION;
 use mpu::coordinator::sweep::{SweepPoint, Target};
-use mpu::coordinator::{run_workload_scaled, DiskStore, Service, StoreConfig, SweepServer};
+use mpu::coordinator::{
+    run_workload_scaled, Coordinator, DiskStore, FedEvent, Federation, Service, StoreConfig,
+    SweepServer,
+};
 use mpu::workloads::{Scale, Workload};
+use mpu::RunReport;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -18,6 +27,30 @@ fn tmp_root(tag: &str) -> PathBuf {
         .join(format!("{tag}_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     dir
+}
+
+/// Spawn a storeless in-process worker daemon; returns its address and
+/// the accept-loop thread (joined after a `shutdown` request).
+fn spawn_worker() -> (String, std::thread::JoinHandle<()>) {
+    let svc = Arc::new(Service::new(None));
+    let server = SweepServer::bind(svc, "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+fn shutdown(addr: &str) {
+    match proto::request(addr, &Request::Shutdown).unwrap() {
+        Response::Bye => {}
+        other => panic!("expected bye, got {other:?}"),
+    }
+}
+
+fn status_of(addr: &str) -> proto::StatusBody {
+    match proto::request(addr, &Request::Status).unwrap() {
+        Response::Status(s) => s,
+        other => panic!("expected status, got {other:?}"),
+    }
 }
 
 fn axpy_key() -> String {
@@ -33,13 +66,11 @@ fn axpy_key() -> String {
 
 fn submit_axpy(priority: i32) -> SubmitRequest {
     SubmitRequest {
-        suite: false,
         workloads: vec!["axpy".into()],
         scale: "tiny".into(),
         variants: vec!["mpu".into()],
-        config: vec![],
         priority,
-        fresh: false,
+        ..SubmitRequest::default()
     }
 }
 
@@ -110,13 +141,10 @@ fn service_restart_serves_everything_from_disk() {
     // (fresh memory tier) over the same store re-simulates nothing.
     let root = tmp_root("restart");
     let req = SubmitRequest {
-        suite: false,
         workloads: vec!["axpy".into(), "knn".into(), "blur".into()],
         scale: "tiny".into(),
         variants: vec!["mpu".into(), "gpu".into()],
-        config: vec![],
-        priority: 0,
-        fresh: false,
+        ..SubmitRequest::default()
     };
     let first = {
         let store = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
@@ -217,4 +245,278 @@ fn ping_and_bad_requests_over_the_wire() {
         other => panic!("expected bye, got {other:?}"),
     }
     server_thread.join().unwrap();
+}
+
+#[test]
+fn v1_blocking_submit_still_works_against_a_v2_server() {
+    // Simulate an old client byte-for-byte: a raw v1 submit line with
+    // none of the v2 fields must still get a single blocking `done`.
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, handle) = spawn_worker();
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream
+        .write_all(b"{\"cmd\":\"submit\",\"workloads\":[\"axpy\"],\"scale\":\"tiny\",\"variants\":[\"mpu\"]}\n")
+        .unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let v: serde_json::Value = serde_json::from_str(&line).unwrap();
+    assert_eq!(v["resp"], "done", "v1 submit must get exactly one blocking done: {line}");
+    assert_eq!(v["points"], 1);
+    assert_eq!(v["results"][0]["correct"], true);
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn mismatched_major_handshake_is_rejected_with_a_clear_error() {
+    let (addr, handle) = spawn_worker();
+    let skewed = Request::Hello { proto_version: 99, proto_major: PROTO_MAJOR + 1 };
+    match proto::request(&addr, &skewed).unwrap() {
+        Response::Error { message } => {
+            assert!(message.contains("major"), "error must name the mismatch: {message}");
+            assert!(
+                message.contains(&format!("{}", PROTO_MAJOR + 1)),
+                "error must carry the client's major: {message}"
+            );
+        }
+        other => panic!("expected a rejection, got {other:?}"),
+    }
+    // A matching handshake reports version + the federation features.
+    match proto::hello(&addr, std::time::Duration::from_secs(2)).unwrap() {
+        proto::HelloOutcome::Compatible { proto_version, proto_major, features } => {
+            assert_eq!(proto_version, PROTO_VERSION);
+            assert_eq!(proto_major, PROTO_MAJOR);
+            for need in ["stream", "point_specs"] {
+                assert!(
+                    features.iter().any(|f| f == need),
+                    "missing feature {need}: {features:?}"
+                );
+            }
+        }
+        other => panic!("matching handshake must be compatible, got {other:?}"),
+    }
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn streamed_submit_is_monotonic_and_its_done_matches_the_blocking_reply() {
+    let (addr, handle) = spawn_worker();
+    let req = SubmitRequest {
+        workloads: vec!["axpy".into(), "knn".into(), "blur".into()],
+        scale: "tiny".into(),
+        variants: vec!["mpu".into()],
+        ..SubmitRequest::default()
+    };
+    let Response::Done(blocking) =
+        proto::request(&addr, &Request::Submit(req.clone())).unwrap()
+    else {
+        panic!("expected done");
+    };
+    let mut progress: Vec<(usize, usize)> = Vec::new();
+    let mut result_records = 0usize;
+    let outcome = proto::submit_streamed(&addr, &req, |resp| match resp {
+        Response::Progress(p) => progress.push((p.completed, p.total)),
+        Response::Result(_) => result_records += 1,
+        other => panic!("unexpected stream record: {other:?}"),
+    })
+    .unwrap();
+    let done = match outcome {
+        StreamOutcome::Done(done) => done,
+        other => panic!("streamed submit must end in done, got {other:?}"),
+    };
+    assert_eq!(result_records, 3, "one result record per point");
+    assert!(!progress.is_empty());
+    assert!(
+        progress.windows(2).all(|w| w[0].0 < w[1].0),
+        "completed must increase monotonically: {progress:?}"
+    );
+    assert_eq!(progress.last().unwrap(), &(3, 3));
+    // The terminal record equals the blocking reply, point for point
+    // (sources differ: the second run is cache-warm).
+    assert_eq!(done.points, blocking.points);
+    assert_eq!(done.simulated, 0, "second run must be served from cache");
+    assert_eq!(done.results.len(), blocking.results.len());
+    for (a, b) in blocking.results.iter().zip(&done.results) {
+        assert_eq!(a.workload, b.workload);
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.correct, b.correct);
+    }
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn federated_tiny_suite_is_bit_identical_to_a_single_daemon() {
+    // The acceptance criterion: the tiny suite sharded across two
+    // in-process workers merges byte-identical to a single-daemon
+    // submit — same point order, same stats, same output bits — with
+    // each point simulated exactly once across the fleet.
+    let req = SubmitRequest {
+        suite: true,
+        scale: "tiny".into(),
+        variants: vec!["mpu".into(), "gpu".into()],
+        return_reports: true,
+        ..SubmitRequest::default()
+    };
+    // Single daemon, with full reports via the job API.
+    let solo = Arc::new(Service::new(None));
+    let active = solo.begin_request(&req).unwrap();
+    let solo_results = active.job().wait().unwrap();
+    let solo_reply = active.wait_reply().unwrap();
+    drop(active);
+    assert_eq!(solo_reply.points, 24);
+
+    // Two-worker federation.
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let fed = Federation::new(vec![a1.clone(), a2.clone()]).unwrap();
+    assert_eq!(fed.handshake().unwrap(), 2, "both workers reachable and compatible");
+    let mut progress: Vec<usize> = Vec::new();
+    let fr = fed
+        .submit_streamed(&req, |ev| {
+            if let FedEvent::Progress { completed, .. } = ev {
+                progress.push(completed);
+            }
+        })
+        .unwrap();
+    assert_eq!(fr.reply.points, 24);
+    assert_eq!(fr.reply.simulated, 24, "every point simulated exactly once across the fleet");
+    assert_eq!(fr.reply.cached(), 0);
+    assert!(
+        progress.windows(2).all(|w| w[0] < w[1]) && progress.last() == Some(&24),
+        "merged progress must be monotonic to 24: {progress:?}"
+    );
+
+    // Same order, same summaries.
+    assert_eq!(fr.reply.results.len(), solo_reply.results.len());
+    for (a, b) in solo_reply.results.iter().zip(&fr.reply.results) {
+        assert_eq!(a.workload, b.workload, "merged results must keep point order");
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.cycles, b.cycles);
+        assert!(b.correct);
+    }
+    // Byte-identical full reports (wall-clock fields are the one
+    // legitimately nondeterministic part — zero them on both sides).
+    let canon = |r: &RunReport| {
+        let mut c = r.clone();
+        c.sim_wall_ms = 0.0;
+        c.sim_cycles_per_sec = 0.0;
+        serde_json::to_string(&WireReport::from_report(Scale::Tiny, &c)).unwrap()
+    };
+    assert_eq!(fr.reports.len(), 24);
+    for (solo_point, fed_report) in solo_results.iter().zip(&fr.reports) {
+        let fed_report = fed_report.as_ref().expect("return_reports streams every report");
+        assert_eq!(
+            canon(&solo_point.report),
+            canon(fed_report),
+            "{} [{}] diverged across the federation",
+            solo_point.point.workload.name(),
+            solo_point.point.label
+        );
+    }
+
+    // Disjoint nonempty shares: worker counters account for all 24.
+    let s1 = status_of(&a1);
+    let s2 = status_of(&a2);
+    assert_eq!(s1.simulated + s2.simulated, 24, "no point simulated twice");
+    assert!(s1.simulated > 0 && s2.simulated > 0, "both workers must own a share");
+
+    // Resubmit through the federation: in-flight + store dedup hold
+    // across workers (here: each worker's memory tier).
+    let again = fed.submit(&req).unwrap();
+    assert_eq!(again.reply.simulated, 0, "warm resubmit must re-simulate nothing");
+    assert_eq!(again.reply.mem_hits, 24);
+
+    shutdown(&a1);
+    shutdown(&a2);
+    h1.join().unwrap();
+    h2.join().unwrap();
+}
+
+#[test]
+fn dead_worker_points_redistribute_to_survivors() {
+    let (live, handle) = spawn_worker();
+    // A dead worker: grab a free port, then close the listener.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = l.local_addr().unwrap().to_string();
+        drop(l);
+        a
+    };
+    let fed = Federation::new(vec![live.clone(), dead]).unwrap();
+    let req = SubmitRequest {
+        suite: true,
+        scale: "tiny".into(),
+        variants: vec!["mpu".into(), "gpu".into()],
+        ..SubmitRequest::default()
+    };
+    // Both workers own a nonempty share of the 24 keys (pinned by the
+    // partition unit tests), so the dead worker's share genuinely gets
+    // redistributed to the survivor.
+    let fr = fed.submit(&req).unwrap();
+    assert_eq!(fr.reply.points, 24);
+    assert_eq!(fr.reply.simulated, 24);
+    assert!(fr.reply.results.iter().all(|r| r.correct));
+    let s = status_of(&live);
+    assert_eq!(s.simulated, 24, "the survivor picked up the dead worker's share");
+    shutdown(&live);
+    handle.join().unwrap();
+}
+
+#[test]
+fn coordinator_daemon_federates_submits_and_reports_worker_liveness() {
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let fed = Federation::new(vec![a1.clone(), a2.clone()]).unwrap();
+    let co = Arc::new(Coordinator::new(fed));
+    let server = SweepServer::bind_coordinator(co, "127.0.0.1:0").unwrap();
+    let caddr = server.addr().to_string();
+    let ch = std::thread::spawn(move || server.run().unwrap());
+
+    let req = SubmitRequest {
+        suite: true,
+        scale: "tiny".into(),
+        variants: vec!["mpu".into()],
+        ..SubmitRequest::default()
+    };
+    let Response::Done(reply) = proto::request(&caddr, &Request::Submit(req)).unwrap() else {
+        panic!("expected done from the coordinator");
+    };
+    assert_eq!(reply.points, 12);
+    assert_eq!(reply.simulated, 12);
+    assert!(reply.results.iter().all(|r| r.correct));
+
+    let s = status_of(&caddr);
+    assert_eq!(s.requests, 1);
+    assert_eq!(s.points, 12);
+    let workers = s.workers.expect("coordinator status must list workers");
+    assert_eq!(workers.len(), 2);
+    assert!(workers.iter().all(|w| w.alive && w.proto_version == PROTO_VERSION));
+    assert_eq!(workers.iter().map(|w| w.simulated).sum::<u64>(), 12);
+
+    // Kill one worker: the coordinator's liveness view updates and a
+    // resubmit still completes (redistributed to the survivor).
+    shutdown(&a2);
+    h2.join().unwrap();
+    let s = status_of(&caddr);
+    let workers = s.workers.unwrap();
+    assert_eq!(workers.iter().filter(|w| w.alive).count(), 1);
+    let req2 = SubmitRequest {
+        suite: true,
+        scale: "tiny".into(),
+        variants: vec!["mpu".into()],
+        ..SubmitRequest::default()
+    };
+    let Response::Done(reply2) = proto::request(&caddr, &Request::Submit(req2)).unwrap() else {
+        panic!("expected done after a worker died");
+    };
+    assert_eq!(reply2.points, 12);
+    assert!(reply2.results.iter().all(|r| r.correct));
+
+    shutdown(&caddr);
+    ch.join().unwrap();
+    shutdown(&a1);
+    h1.join().unwrap();
 }
