@@ -1,0 +1,476 @@
+//! Affine value abstraction: every integer register is tracked as
+//! `c + Σ coefᵢ·symᵢ` over a small symbol alphabet where only `tid` is
+//! per-lane — everything else (ctaid, parameters, φ-values of uniform
+//! joins, opaque uniform expressions) is uniform across the
+//! simultaneously-active lanes. Addresses that stay affine in tid give
+//! exact static access-pattern predictions: global coalescing class and
+//! shared-memory bank-conflict degree.
+//!
+//! Divergence interplay: a value join is only uniform if the merging
+//! lanes all arrived the same way. Joins at the *reconvergence block* of
+//! a divergent branch (and guarded writes under a divergent predicate)
+//! mix lanes from different paths, so mismatched values go to ⊤
+//! (`Varying`) there; everywhere else a mismatch with equal tid
+//! coefficient canonicalizes to a φ-symbol, which keeps loop-carried
+//! induction variables (grid-stride `i += stride`) precise.
+
+use super::dataflow::{self, Analysis};
+use super::divergence::DivergenceInfo;
+use crate::compiler::cfg::Cfg;
+use crate::isa::instr::Special;
+use crate::isa::{Instr, LaunchConfig, Op, Operand, Reg, RegClass, Ty};
+use std::collections::BTreeMap;
+
+/// Symbolic atom. Everything except [`Sym::Tid`] is uniform across the
+/// simultaneously-active lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Sym {
+    /// `%tid.x` — the only per-lane atom.
+    Tid,
+    /// `%ctaid.x` — uniform within a block.
+    CtaId,
+    /// Opaque uniform kernel parameter (e.g. a float scalar).
+    Param(Reg),
+    /// φ-value of `reg` at the head of `block` (uniform join).
+    Phi(usize, Reg),
+    /// Uniform but otherwise unknown value produced at `pc`.
+    Expr(usize),
+    /// Uniform value chosen by the uniformly-guarded write at `pc`.
+    Sel(usize),
+}
+
+/// Abstract value: an affine form or ⊤.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AffVal {
+    /// `c + Σ coefᵢ·symᵢ` (zero coefficients are never stored).
+    Lin { c: i64, terms: BTreeMap<Sym, i64> },
+    /// Not affine in tid / possibly distinct per lane.
+    Varying,
+}
+
+impl AffVal {
+    pub fn constant(c: i64) -> AffVal {
+        AffVal::Lin { c, terms: BTreeMap::new() }
+    }
+
+    pub fn sym(s: Sym) -> AffVal {
+        AffVal::Lin { c: 0, terms: BTreeMap::from([(s, 1)]) }
+    }
+
+    /// Coefficient of `tid` — `None` when the value is not affine.
+    pub fn tid_coef(&self) -> Option<i64> {
+        match self {
+            AffVal::Lin { terms, .. } => Some(terms.get(&Sym::Tid).copied().unwrap_or(0)),
+            AffVal::Varying => None,
+        }
+    }
+
+    /// Affine with no tid term: identical across active lanes.
+    pub fn is_uniform(&self) -> bool {
+        self.tid_coef() == Some(0)
+    }
+
+    pub fn add(&self, other: &AffVal) -> AffVal {
+        let (AffVal::Lin { c: ca, terms: ta }, AffVal::Lin { c: cb, terms: tb }) = (self, other)
+        else {
+            return AffVal::Varying;
+        };
+        let Some(c) = ca.checked_add(*cb) else { return AffVal::Varying };
+        let mut terms = ta.clone();
+        for (s, k) in tb {
+            let e = terms.entry(*s).or_insert(0);
+            let Some(v) = e.checked_add(*k) else { return AffVal::Varying };
+            *e = v;
+        }
+        terms.retain(|_, k| *k != 0);
+        AffVal::Lin { c, terms }
+    }
+
+    pub fn scale(&self, f: i64) -> AffVal {
+        let AffVal::Lin { c, terms } = self else { return AffVal::Varying };
+        let Some(c) = c.checked_mul(f) else { return AffVal::Varying };
+        let mut out = BTreeMap::new();
+        for (s, k) in terms {
+            let Some(v) = k.checked_mul(f) else { return AffVal::Varying };
+            if v != 0 {
+                out.insert(*s, v);
+            }
+        }
+        AffVal::Lin { c, terms: out }
+    }
+
+    pub fn sub(&self, other: &AffVal) -> AffVal {
+        self.add(&other.scale(-1))
+    }
+
+    /// The constant value, if the expression is a plain constant.
+    pub fn as_const(&self) -> Option<i64> {
+        match self {
+            AffVal::Lin { c, terms } if terms.is_empty() => Some(*c),
+            _ => None,
+        }
+    }
+}
+
+/// Abstract register environment (predicates are not tracked here).
+pub type Env = BTreeMap<Reg, AffVal>;
+
+/// The affine dataflow analysis. Needs the divergence result to decide
+/// which joins are uniform.
+pub struct AffineAnalysis<'a> {
+    pub launch: LaunchConfig,
+    /// Parameter registers with their concrete value when known
+    /// (pointers/sizes) — `None` binds an opaque uniform symbol.
+    pub params: Vec<(Reg, Option<i64>)>,
+    pub div: &'a DivergenceInfo,
+}
+
+/// Affine value of an operand under an environment (`pc` keys the fresh
+/// uniform symbol a float immediate becomes).
+pub fn operand_affine(o: &Operand, env: &Env, launch: &LaunchConfig, pc: usize) -> AffVal {
+    match o {
+        Operand::Reg(r) => env.get(r).cloned().unwrap_or(AffVal::Varying),
+        Operand::ImmI(v) => AffVal::constant(*v as i64),
+        // Opaque but uniform; only ever feeds uniform float results.
+        Operand::ImmF(_) => AffVal::sym(Sym::Expr(pc)),
+        Operand::Special(Special::TidX) => AffVal::sym(Sym::Tid),
+        Operand::Special(Special::NTidX) => AffVal::constant(launch.block as i64),
+        Operand::Special(Special::CtaIdX) => AffVal::sym(Sym::CtaId),
+        Operand::Special(Special::NCtaIdX) => AffVal::constant(launch.grid as i64),
+    }
+}
+
+impl AffineAnalysis<'_> {
+    fn operand(&self, pc: usize, o: &Operand, env: &Env) -> AffVal {
+        operand_affine(o, env, &self.launch, pc)
+    }
+
+    /// Value produced by the instruction at `pc` (ignoring its guard).
+    fn eval(&self, pc: usize, i: &Instr, env: &Env) -> AffVal {
+        let ov: Vec<AffVal> = i.srcs.iter().map(|o| self.operand(pc, o, env)).collect();
+        let int = i.ty != Ty::F32;
+        match i.op {
+            // Exact integer linear arithmetic.
+            Op::Mov => ov[0].clone(),
+            Op::Add if int => ov[0].add(&ov[1]),
+            Op::Sub if int => ov[0].sub(&ov[1]),
+            Op::Neg if int => ov[0].scale(-1),
+            Op::Mul if int => match (ov[0].as_const(), ov[1].as_const()) {
+                (Some(a), _) => ov[1].scale(a),
+                (_, Some(b)) => ov[0].scale(b),
+                _ => self.opaque(pc, &ov, i, env),
+            },
+            Op::Mad if int => {
+                let prod = match (ov[0].as_const(), ov[1].as_const()) {
+                    (Some(a), _) => ov[1].scale(a),
+                    (_, Some(b)) => ov[0].scale(b),
+                    _ => return self.opaque(pc, &ov, i, env),
+                };
+                prod.add(&ov[2])
+            }
+            Op::Shl if int => match ov[1].as_const() {
+                Some(k) if (0..=30).contains(&k) => ov[0].scale(1i64 << k),
+                _ => self.opaque(pc, &ov, i, env),
+            },
+            // Everything else: uniform-in → uniform-out, otherwise ⊤.
+            _ => self.opaque(pc, &ov, i, env),
+        }
+    }
+
+    /// Non-linear op: the result is a fresh uniform symbol iff every
+    /// input (including a load's address) is uniform.
+    fn opaque(&self, pc: usize, ov: &[AffVal], i: &Instr, env: &Env) -> AffVal {
+        let mut uniform = ov.iter().all(|v| v.is_uniform());
+        if let Some(m) = i.mem {
+            let base = env.get(&m.base).cloned().unwrap_or(AffVal::Varying);
+            uniform &= base.is_uniform();
+        }
+        if uniform {
+            AffVal::sym(Sym::Expr(pc))
+        } else {
+            AffVal::Varying
+        }
+    }
+
+    fn join_val(&self, a: &AffVal, b: &AffVal, block: usize, reg: Reg) -> AffVal {
+        if a == b {
+            return a.clone();
+        }
+        // Reconvergence of a divergent branch: lanes from different paths
+        // are simultaneously active — a mismatch is per-lane.
+        if self.div.divergent_join_blocks.contains(&block) {
+            return AffVal::Varying;
+        }
+        match (a.tid_coef(), b.tid_coef()) {
+            (Some(ka), Some(kb)) if ka == kb => {
+                let mut terms = BTreeMap::from([(Sym::Phi(block, reg), 1)]);
+                if ka != 0 {
+                    terms.insert(Sym::Tid, ka);
+                }
+                AffVal::Lin { c: 0, terms }
+            }
+            _ => AffVal::Varying,
+        }
+    }
+}
+
+impl Analysis for AffineAnalysis<'_> {
+    type Fact = Env;
+
+    fn boundary(&self) -> Env {
+        self.params
+            .iter()
+            .map(|&(r, v)| {
+                let val = match v {
+                    Some(c) => AffVal::constant(c),
+                    None => AffVal::sym(Sym::Param(r)),
+                };
+                (r, val)
+            })
+            .collect()
+    }
+
+    fn join(&self, a: &Env, b: &Env, block: usize) -> Env {
+        let mut out = Env::new();
+        for r in a.keys().chain(b.keys()) {
+            if out.contains_key(r) {
+                continue;
+            }
+            let v = match (a.get(r), b.get(r)) {
+                (Some(x), Some(y)) => self.join_val(x, y, block, *r),
+                // Defined on one path only: unknown on the other.
+                _ => AffVal::Varying,
+            };
+            out.insert(*r, v);
+        }
+        out
+    }
+
+    fn transfer(&self, pc: usize, i: &Instr, env: &mut Env) {
+        let Some(d) = i.dst else { return };
+        if d.class == RegClass::P {
+            return;
+        }
+        let val = self.eval(pc, i, env);
+        let new = match i.guard {
+            None => val,
+            Some(_) => match env.get(&d) {
+                // Partial write over an unassigned register.
+                None => AffVal::Varying,
+                Some(old) if *old == val => val,
+                Some(old) => {
+                    if self.div.guard_divergent(pc, i) {
+                        AffVal::Varying
+                    } else {
+                        // Uniform guard: all active lanes pick the same
+                        // side; the choice is a fresh uniform value.
+                        match (old.tid_coef(), val.tid_coef()) {
+                            (Some(ka), Some(kb)) if ka == kb => {
+                                let mut terms = BTreeMap::from([(Sym::Sel(pc), 1)]);
+                                if ka != 0 {
+                                    terms.insert(Sym::Tid, ka);
+                                }
+                                AffVal::Lin { c: 0, terms }
+                            }
+                            _ => AffVal::Varying,
+                        }
+                    }
+                }
+            },
+        };
+        env.insert(d, new);
+    }
+}
+
+/// Run the affine analysis; returns the environment immediately before
+/// each pc (`None` = unreachable).
+pub fn analyze(
+    instrs: &[Instr],
+    cfg: &Cfg,
+    launch: LaunchConfig,
+    params: &[(Reg, Option<i64>)],
+    div: &DivergenceInfo,
+) -> Vec<Option<Env>> {
+    let a = AffineAnalysis { launch, params: params.to_vec(), div };
+    let sol = dataflow::solve(&a, cfg, instrs);
+    dataflow::facts_before(&a, cfg, instrs, &sol)
+}
+
+/// The abstract address of the memory access at `pc`, if reachable.
+pub fn access_addr(instrs: &[Instr], envs: &[Option<Env>], pc: usize) -> Option<AffVal> {
+    let m = instrs[pc].mem?;
+    let env = envs[pc].as_ref()?;
+    let base = env.get(&m.base).cloned().unwrap_or(AffVal::Varying);
+    Some(base.add(&AffVal::constant(m.offset as i64)))
+}
+
+/// Static classification of a global access by its per-lane address
+/// footprint (consecutive tids).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, serde::Serialize)]
+#[serde(rename_all = "lowercase")]
+pub enum AccessClass {
+    /// Same address for every lane.
+    Uniform,
+    /// Byte stride 4 between consecutive lanes — one row burst per warp.
+    Coalesced,
+    /// Constant non-unit stride (bytes between consecutive lanes).
+    Strided,
+    /// Not affine in tid — per-lane scatter/gather.
+    Gather,
+}
+
+impl std::fmt::Display for AccessClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            AccessClass::Uniform => "uniform",
+            AccessClass::Coalesced => "coalesced",
+            AccessClass::Strided => "strided",
+            AccessClass::Gather => "gather",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Classify a global access address; the second component is the byte
+/// stride between consecutive lanes when affine.
+pub fn classify_global(addr: &AffVal) -> (AccessClass, Option<i64>) {
+    match addr.tid_coef() {
+        None => (AccessClass::Gather, None),
+        Some(0) => (AccessClass::Uniform, Some(0)),
+        Some(4) => (AccessClass::Coalesced, Some(4)),
+        Some(k) => (AccessClass::Strided, Some(k)),
+    }
+}
+
+/// Predicted full-warp bank-conflict degree of a shared access
+/// (32 banks, word-interleaved — matches
+/// [`crate::mem::smem::SharedMem::conflict_factor`]). `None` when the
+/// address is non-affine or not word-strided.
+pub fn smem_conflict_degree(addr: &AffVal, warp_size: usize) -> Option<u64> {
+    let k = addr.tid_coef()?;
+    if k == 0 {
+        return Some(1); // broadcast (same-word accesses coalesce)
+    }
+    if k % 4 != 0 {
+        return None;
+    }
+    let s = (k / 4).unsigned_abs();
+    let banks = 32u64;
+    let mut degree = gcd(s, banks);
+    // A warp narrower than the bank count cannot conflict more than
+    // lanes-per-bank times.
+    degree = degree.min(warp_size as u64);
+    Some(degree.max(1))
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::KernelSource;
+
+    fn analyze_src(body: &str, params: &[(Reg, Option<i64>)]) -> (Vec<Instr>, Vec<Option<Env>>) {
+        let regs: Vec<Reg> = params.iter().map(|&(r, _)| r).collect();
+        let k = KernelSource::assemble("t", &regs, body).unwrap();
+        let cfg = Cfg::build(&k.instrs);
+        let div = super::super::divergence::analyze(&k.instrs, &cfg);
+        let envs = analyze(&k.instrs, &cfg, LaunchConfig::new(4, 128), params, &div);
+        (k.instrs, envs)
+    }
+
+    #[test]
+    fn coalesced_chain_is_tid_affine() {
+        let (instrs, envs) = analyze_src(
+            "mov.u32 %r1, %tid.x\n\
+             mad.u32 %r3, %ctaid.x, %ntid.x, %r1\n\
+             shl.u32 %r4, %r3, 2\n\
+             add.u32 %r5, %r10, %r4\n\
+             ld.global.f32 %f1, [%r5+0]\n\
+             exit\n",
+            &[(Reg::r(10), Some(4096))],
+        );
+        let addr = access_addr(&instrs, &envs, 4).unwrap();
+        assert_eq!(addr.tid_coef(), Some(4));
+        assert_eq!(classify_global(&addr).0, AccessClass::Coalesced);
+    }
+
+    #[test]
+    fn division_breaks_affinity_into_gather() {
+        let (instrs, envs) = analyze_src(
+            "mov.u32 %r1, %tid.x\n\
+             div.u32 %r2, %r1, 3\n\
+             shl.u32 %r3, %r2, 2\n\
+             add.u32 %r4, %r10, %r3\n\
+             ld.global.f32 %f1, [%r4+0]\n\
+             exit\n",
+            &[(Reg::r(10), Some(0))],
+        );
+        let addr = access_addr(&instrs, &envs, 4).unwrap();
+        assert_eq!(classify_global(&addr).0, AccessClass::Gather);
+    }
+
+    #[test]
+    fn grid_stride_loop_keeps_induction_variable_affine() {
+        // i = ctaid*ntid + tid; loop { ...; i += nctaid*ntid } — the φ at
+        // the loop head must keep tid coefficient 1.
+        let (instrs, envs) = analyze_src(
+            "mov.u32 %r1, %tid.x\n\
+             mad.u32 %r3, %ctaid.x, %ntid.x, %r1\n\
+             mul.u32 %r9, %nctaid.x, %ntid.x\n\
+             LOOP:\n\
+             setp.ge.s32 %p1, %r3, %r11\n\
+             @%p1 bra DONE\n\
+             shl.u32 %r4, %r3, 2\n\
+             add.u32 %r5, %r10, %r4\n\
+             ld.global.f32 %f1, [%r5+0]\n\
+             add.u32 %r3, %r3, %r9\n\
+             bra LOOP\n\
+             DONE:\nexit\n",
+            &[(Reg::r(10), Some(0)), (Reg::r(11), Some(1 << 20))],
+        );
+        let addr = access_addr(&instrs, &envs, 7).unwrap();
+        assert_eq!(classify_global(&addr).0, AccessClass::Coalesced);
+    }
+
+    #[test]
+    fn divergent_merge_goes_varying() {
+        // r2 = tid<16 ? 1 : 2, merged at the reconvergence point.
+        let (instrs, envs) = analyze_src(
+            "mov.u32 %r1, %tid.x\n\
+             setp.lt.s32 %p1, %r1, 16\n\
+             @%p1 bra A\n\
+             mov.u32 %r2, 1\n\
+             bra B\n\
+             A:\n\
+             mov.u32 %r2, 2\n\
+             B:\n\
+             shl.u32 %r3, %r2, 2\n\
+             add.u32 %r4, %r10, %r3\n\
+             ld.global.f32 %f1, [%r4+0]\n\
+             exit\n",
+            &[(Reg::r(10), Some(0))],
+        );
+        let addr = access_addr(&instrs, &envs, 9).unwrap();
+        assert_eq!(addr, AffVal::Varying);
+    }
+
+    #[test]
+    fn conflict_degree_by_word_stride() {
+        let lin = |k: i64| AffVal::Lin {
+            c: 0,
+            terms: BTreeMap::from([(Sym::Tid, k), (Sym::CtaId, 64)]),
+        };
+        assert_eq!(smem_conflict_degree(&lin(4), 32), Some(1)); // stride-1 words
+        assert_eq!(smem_conflict_degree(&lin(8), 32), Some(2));
+        assert_eq!(smem_conflict_degree(&lin(128), 32), Some(32)); // stride-32 words
+        assert_eq!(smem_conflict_degree(&AffVal::constant(12), 32), Some(1)); // broadcast
+        assert_eq!(smem_conflict_degree(&AffVal::Varying, 32), None);
+    }
+}

@@ -1,0 +1,248 @@
+//! A generic monotone dataflow framework over the compiler's basic-block
+//! graph ([`crate::compiler::cfg::Cfg`]).
+//!
+//! An analysis supplies a join-semilattice of facts plus a per-instruction
+//! transfer function; [`solve`] runs worklist fixpoint iteration and
+//! returns the fact at every block boundary. Facts for *unvisited*
+//! (unreachable) blocks stay `None`, which keeps the solver agnostic to
+//! whether the analysis is a may- (union) or must- (intersection)
+//! analysis: joins only ever combine facts that actually flowed somewhere.
+
+use crate::compiler::cfg::Cfg;
+use crate::isa::Instr;
+
+/// Direction of fact propagation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Backward,
+}
+
+/// A monotone dataflow analysis. `Fact` is the lattice element; `join`
+/// must be commutative, associative and idempotent, and `transfer` must
+/// be monotone w.r.t. the order induced by `join` for the fixpoint to be
+/// the least (most precise) solution.
+pub trait Analysis {
+    type Fact: Clone + PartialEq;
+
+    fn direction(&self) -> Direction {
+        Direction::Forward
+    }
+
+    /// Fact at the boundary: entry of the entry block (forward) or exit
+    /// of every exit-reaching block (backward).
+    fn boundary(&self) -> Self::Fact;
+
+    /// Combine two facts at a confluence point. `block` is the index of
+    /// the block whose head (forward) / tail (backward) joins them —
+    /// analyses that canonicalize at joins (φ-insertion) key on it.
+    fn join(&self, a: &Self::Fact, b: &Self::Fact, block: usize) -> Self::Fact;
+
+    /// Push a fact across one instruction (in program order for forward
+    /// analyses, reverse order for backward ones).
+    fn transfer(&self, pc: usize, instr: &Instr, fact: &mut Self::Fact);
+
+    /// Optional refinement of the fact flowing along the CFG edge
+    /// `from → to` (block indices). Used for branch-assumption facts.
+    fn edge(&self, _from: usize, _to: usize, fact: Self::Fact) -> Self::Fact {
+        fact
+    }
+}
+
+/// Fixpoint solution. Indexed by block: `inp[b]` is the fact at the
+/// block's *input* boundary (entry for forward, exit for backward) and
+/// `out[b]` at its output boundary. `None` means the block was never
+/// reached by any fact (unreachable code).
+pub struct Solution<F> {
+    pub inp: Vec<Option<F>>,
+    pub out: Vec<Option<F>>,
+    /// Number of block-transfer applications until the fixpoint.
+    pub iterations: usize,
+}
+
+/// Apply an analysis' transfer function across a whole block.
+pub fn block_transfer<A: Analysis>(
+    a: &A,
+    cfg: &Cfg,
+    instrs: &[Instr],
+    block: usize,
+    mut fact: A::Fact,
+) -> A::Fact {
+    let b = &cfg.blocks[block];
+    match a.direction() {
+        Direction::Forward => {
+            for pc in b.start..b.end {
+                a.transfer(pc, &instrs[pc], &mut fact);
+            }
+        }
+        Direction::Backward => {
+            for pc in (b.start..b.end).rev() {
+                a.transfer(pc, &instrs[pc], &mut fact);
+            }
+        }
+    }
+    fact
+}
+
+/// Worklist fixpoint iteration. Panics if the analysis fails to converge
+/// within a generous bound (a non-monotone transfer or an infinite-height
+/// lattice) — the property tests pin that shipped analyses stay far under
+/// the bound.
+pub fn solve<A: Analysis>(a: &A, cfg: &Cfg, instrs: &[Instr]) -> Solution<A::Fact> {
+    let n = cfg.blocks.len();
+    let fwd = a.direction() == Direction::Forward;
+    // Predecessor edges in the direction of propagation.
+    let preds: Vec<Vec<usize>> = (0..n)
+        .map(|b| {
+            if fwd {
+                cfg.blocks[b].preds.clone()
+            } else {
+                cfg.blocks[b].succs.clone()
+            }
+        })
+        .collect();
+    let succs: Vec<Vec<usize>> = (0..n)
+        .map(|b| {
+            if fwd {
+                cfg.blocks[b].succs.clone()
+            } else {
+                cfg.blocks[b].preds.clone()
+            }
+        })
+        .collect();
+    // Boundary blocks: the entry block (forward) / blocks with no
+    // successors in program order (backward).
+    let boundary_blocks: Vec<usize> = if fwd {
+        vec![0]
+    } else {
+        (0..n).filter(|&b| cfg.blocks[b].succs.is_empty()).collect()
+    };
+
+    let mut inp: Vec<Option<A::Fact>> = vec![None; n];
+    let mut out: Vec<Option<A::Fact>> = vec![None; n];
+    let mut work: Vec<usize> = Vec::new();
+    let mut queued = vec![false; n];
+    for &b in &boundary_blocks {
+        inp[b] = Some(a.boundary());
+        work.push(b);
+        queued[b] = true;
+    }
+
+    let mut iterations = 0usize;
+    let cap = 64 * n.max(1) + 256;
+    while let Some(b) = work.pop() {
+        queued[b] = false;
+        iterations += 1;
+        assert!(
+            iterations <= cap,
+            "dataflow solver failed to converge after {iterations} block transfers \
+             ({n} blocks) — non-monotone transfer function?"
+        );
+        // Recompute the input fact from predecessors (+ boundary).
+        let mut acc: Option<A::Fact> = if boundary_blocks.contains(&b) {
+            Some(a.boundary())
+        } else {
+            None
+        };
+        for &p in &preds[b] {
+            if let Some(f) = &out[p] {
+                let f = a.edge(p, b, f.clone());
+                acc = Some(match acc {
+                    None => f,
+                    Some(cur) => a.join(&cur, &f, b),
+                });
+            }
+        }
+        let Some(in_fact) = acc else { continue };
+        let new_out = block_transfer(a, cfg, instrs, b, in_fact.clone());
+        inp[b] = Some(in_fact);
+        if out[b].as_ref() != Some(&new_out) {
+            out[b] = Some(new_out);
+            for &s in &succs[b] {
+                if !queued[s] {
+                    work.push(s);
+                    queued[s] = true;
+                }
+            }
+        }
+    }
+
+    Solution { inp, out, iterations }
+}
+
+/// For a *forward* analysis: the fact holding immediately **before** each
+/// instruction executes. `None` for unreachable instructions.
+pub fn facts_before<A: Analysis>(
+    a: &A,
+    cfg: &Cfg,
+    instrs: &[Instr],
+    sol: &Solution<A::Fact>,
+) -> Vec<Option<A::Fact>> {
+    assert_eq!(a.direction(), Direction::Forward);
+    let mut per_pc: Vec<Option<A::Fact>> = vec![None; instrs.len()];
+    for (bi, b) in cfg.blocks.iter().enumerate() {
+        let Some(start) = sol.inp[bi].clone() else { continue };
+        let mut fact = start;
+        for pc in b.start..b.end {
+            per_pc[pc] = Some(fact.clone());
+            a.transfer(pc, &instrs[pc], &mut fact);
+        }
+    }
+    per_pc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{KernelSource, Reg};
+    use std::collections::BTreeSet;
+
+    /// A toy backward liveness analysis, to exercise the backward path.
+    struct Live;
+    impl Analysis for Live {
+        type Fact = BTreeSet<Reg>;
+        fn direction(&self) -> Direction {
+            Direction::Backward
+        }
+        fn boundary(&self) -> Self::Fact {
+            BTreeSet::new()
+        }
+        fn join(&self, a: &Self::Fact, b: &Self::Fact, _block: usize) -> Self::Fact {
+            a.union(b).cloned().collect()
+        }
+        fn transfer(&self, _pc: usize, i: &Instr, fact: &mut Self::Fact) {
+            for d in i.writes() {
+                fact.remove(&d);
+            }
+            for r in i.reads() {
+                fact.insert(r);
+            }
+        }
+    }
+
+    #[test]
+    fn backward_liveness_on_a_diamond() {
+        let k = KernelSource::assemble(
+            "t",
+            &[Reg::r(10)],
+            "mov.u32 %r1, %tid.x\n\
+             setp.lt.s32 %p1, %r1, 4\n\
+             @%p1 bra A\n\
+             mov.u32 %r2, 1\n\
+             bra B\n\
+             A:\n\
+             mov.u32 %r2, 2\n\
+             B:\n\
+             add.u32 %r3, %r2, %r10\n\
+             exit\n",
+        )
+        .unwrap();
+        let cfg = Cfg::build(&k.instrs);
+        let sol = solve(&Live, &cfg, &k.instrs);
+        // At entry of the join block B, %r2 and %r10 are live.
+        let bi = cfg.block_of[k.instrs.len() - 2]; // the add
+        let live_in = sol.out[bi].as_ref().unwrap();
+        assert!(live_in.contains(&Reg::r(2)) && live_in.contains(&Reg::r(10)));
+        assert!(!live_in.contains(&Reg::r(3)));
+    }
+}

@@ -1,0 +1,157 @@
+//! Reaching definitions (may) and definite assignment (must), plus the
+//! uninitialized-register-use check built on the latter.
+
+use super::dataflow::{self, Analysis};
+use crate::compiler::cfg::Cfg;
+use crate::isa::{Instr, Reg};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Sentinel "definition pc" for kernel parameters (defined before entry).
+pub const PARAM_DEF: usize = usize::MAX;
+
+/// Reaching definitions: for each register, the set of definition pcs
+/// that may reach a program point. A *guarded* definition generates
+/// without killing (it writes only its active lanes).
+pub struct ReachingDefs {
+    pub params: Vec<Reg>,
+}
+
+impl Analysis for ReachingDefs {
+    type Fact = BTreeMap<Reg, BTreeSet<usize>>;
+
+    fn boundary(&self) -> Self::Fact {
+        self.params.iter().map(|&r| (r, BTreeSet::from([PARAM_DEF]))).collect()
+    }
+
+    fn join(&self, a: &Self::Fact, b: &Self::Fact, _block: usize) -> Self::Fact {
+        let mut out = a.clone();
+        for (r, defs) in b {
+            out.entry(*r).or_default().extend(defs.iter().copied());
+        }
+        out
+    }
+
+    fn transfer(&self, pc: usize, i: &Instr, fact: &mut Self::Fact) {
+        if let Some(d) = i.dst {
+            if i.guard.is_none() {
+                fact.insert(d, BTreeSet::from([pc]));
+            } else {
+                fact.entry(d).or_default().insert(pc);
+            }
+        }
+    }
+}
+
+/// Compute reaching definitions immediately before each pc.
+pub fn reaching_before(
+    instrs: &[Instr],
+    cfg: &Cfg,
+    params: &[Reg],
+) -> Vec<Option<BTreeMap<Reg, BTreeSet<usize>>>> {
+    let a = ReachingDefs { params: params.to_vec() };
+    let sol = dataflow::solve(&a, cfg, instrs);
+    dataflow::facts_before(&a, cfg, instrs, &sol)
+}
+
+/// Definite assignment: registers assigned on *every* path from entry.
+/// Guarded writes do not definitely assign (inactive lanes keep whatever
+/// was there before).
+pub struct DefiniteAssign {
+    pub params: Vec<Reg>,
+}
+
+impl Analysis for DefiniteAssign {
+    type Fact = BTreeSet<Reg>;
+
+    fn boundary(&self) -> Self::Fact {
+        self.params.iter().copied().collect()
+    }
+
+    fn join(&self, a: &Self::Fact, b: &Self::Fact, _block: usize) -> Self::Fact {
+        a.intersection(b).copied().collect()
+    }
+
+    fn transfer(&self, _pc: usize, i: &Instr, fact: &mut Self::Fact) {
+        if i.guard.is_none() {
+            if let Some(d) = i.dst {
+                fact.insert(d);
+            }
+        }
+    }
+}
+
+/// Registers read at a pc where some path from entry never assigned them.
+/// Returns `(pc, reg)` pairs in program order.
+pub fn check_uninit(instrs: &[Instr], cfg: &Cfg, params: &[Reg]) -> Vec<(usize, Reg)> {
+    let a = DefiniteAssign { params: params.to_vec() };
+    let sol = dataflow::solve(&a, cfg, instrs);
+    let before = dataflow::facts_before(&a, cfg, instrs, &sol);
+    let mut out = Vec::new();
+    for (pc, i) in instrs.iter().enumerate() {
+        let Some(assigned) = &before[pc] else { continue };
+        let mut seen = BTreeSet::new();
+        for r in i.reads() {
+            if !assigned.contains(&r) && seen.insert(r) {
+                out.push((pc, r));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::KernelSource;
+
+    fn build(body: &str) -> (Vec<Instr>, Cfg) {
+        let k = KernelSource::assemble("t", &[Reg::r(10)], body).unwrap();
+        let cfg = Cfg::build(&k.instrs);
+        (k.instrs, cfg)
+    }
+
+    #[test]
+    fn reports_read_before_any_write() {
+        let (instrs, cfg) = build("add.u32 %r2, %r1, 1\nexit\n");
+        let u = check_uninit(&instrs, &cfg, &[Reg::r(10)]);
+        assert_eq!(u, vec![(0, Reg::r(1))]);
+    }
+
+    #[test]
+    fn params_and_straightline_defs_are_initialized() {
+        let (instrs, cfg) = build(
+            "mov.u32 %r1, %tid.x\n\
+             add.u32 %r2, %r1, %r10\n\
+             exit\n",
+        );
+        assert!(check_uninit(&instrs, &cfg, &[Reg::r(10)]).is_empty());
+    }
+
+    #[test]
+    fn guarded_write_does_not_definitely_assign() {
+        let (instrs, cfg) = build(
+            "mov.u32 %r1, %tid.x\n\
+             setp.lt.s32 %p1, %r1, 4\n\
+             @%p1 mov.u32 %r2, 1\n\
+             add.u32 %r3, %r2, 1\n\
+             exit\n",
+        );
+        let u = check_uninit(&instrs, &cfg, &[Reg::r(10)]);
+        assert_eq!(u, vec![(3, Reg::r(2))]);
+    }
+
+    #[test]
+    fn guarded_def_reaches_without_killing() {
+        let (instrs, cfg) = build(
+            "mov.u32 %r2, 0\n\
+             mov.u32 %r1, %tid.x\n\
+             setp.lt.s32 %p1, %r1, 4\n\
+             @%p1 mov.u32 %r2, 1\n\
+             add.u32 %r3, %r2, 1\n\
+             exit\n",
+        );
+        let rd = reaching_before(&instrs, &cfg, &[Reg::r(10)]);
+        let defs = &rd[4].as_ref().unwrap()[&Reg::r(2)];
+        assert_eq!(defs, &BTreeSet::from([0, 3]), "both defs reach the read");
+    }
+}

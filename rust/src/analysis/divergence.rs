@@ -1,0 +1,267 @@
+//! Divergence analysis: tid-taint through def-use chains, plus the
+//! barrier-divergence check.
+//!
+//! Data dependence: any value computed from `%tid.x` is *divergent*
+//! (per-lane). Sync dependence: a value defined inside the influence
+//! region of a divergent branch and still live at the branch's
+//! reconvergence point is divergent too — after reconvergence,
+//! previously-split lanes are simultaneously active with values from
+//! different paths. The two rules iterate to a fixpoint (the divergent
+//! branch set only grows).
+//!
+//! A `bar.sync` strictly inside the influence region of a divergent
+//! branch is the classic CUDA deadlock class: some lanes of the block
+//! arrive at the barrier while sibling lanes are parked on the other
+//! side of the branch.
+
+use super::dataflow::{self, Analysis};
+use crate::compiler::cfg::Cfg;
+use crate::compiler::liveness::Liveness;
+use crate::compiler::postdom;
+use crate::isa::instr::Special;
+use crate::isa::{Instr, Op, Operand, Reg};
+use std::collections::BTreeSet;
+
+struct Taint<'a> {
+    /// pcs whose definitions are forcibly divergent (sync dependence).
+    forced: &'a BTreeSet<usize>,
+}
+
+impl Analysis for Taint<'_> {
+    type Fact = BTreeSet<Reg>;
+
+    fn boundary(&self) -> Self::Fact {
+        BTreeSet::new() // parameters are uniform
+    }
+
+    fn join(&self, a: &Self::Fact, b: &Self::Fact, _block: usize) -> Self::Fact {
+        a.union(b).cloned().collect()
+    }
+
+    fn transfer(&self, pc: usize, i: &Instr, fact: &mut Self::Fact) {
+        let tainted = i.reads().iter().any(|r| fact.contains(r))
+            || i.srcs.iter().any(|o| matches!(o, Operand::Special(Special::TidX)))
+            || self.forced.contains(&pc);
+        if let Some(d) = i.dst {
+            if tainted {
+                fact.insert(d);
+            } else if i.guard.is_none() {
+                // A guarded write is partial: inactive lanes keep the old
+                // (possibly divergent) value, so it does not clean `d`.
+                fact.remove(&d);
+            }
+        }
+    }
+}
+
+/// Result of the divergence fixpoint.
+pub struct DivergenceInfo {
+    /// Tainted-register set immediately before each pc (`None` =
+    /// unreachable instruction).
+    pub taint_before: Vec<Option<BTreeSet<Reg>>>,
+    /// pcs of branches whose guard predicate is tid-dependent.
+    pub divergent_branches: Vec<usize>,
+    /// Blocks that are the reconvergence point of some divergent branch:
+    /// value joins there mix lanes that took different paths.
+    pub divergent_join_blocks: BTreeSet<usize>,
+    /// Reconvergence pc per instruction (branches only).
+    pub reconv: Vec<Option<usize>>,
+}
+
+impl DivergenceInfo {
+    /// Is the guard predicate of the instruction at `pc` divergent?
+    pub fn guard_divergent(&self, pc: usize, i: &Instr) -> bool {
+        match (i.guard, &self.taint_before[pc]) {
+            (Some((p, _)), Some(t)) => t.contains(&p),
+            _ => false,
+        }
+    }
+}
+
+/// Blocks reachable from the successors of the branch at `br` without
+/// entering the reconvergence block — the branch's influence region.
+fn influence_region(cfg: &Cfg, br: usize, reconv_pc: Option<usize>) -> BTreeSet<usize> {
+    let stop = reconv_pc.map(|pc| cfg.block_of[pc]);
+    let mut seen = BTreeSet::new();
+    let mut work: Vec<usize> = cfg.blocks[cfg.block_of[br]]
+        .succs
+        .iter()
+        .copied()
+        .filter(|b| Some(*b) != stop)
+        .collect();
+    while let Some(b) = work.pop() {
+        if !seen.insert(b) {
+            continue;
+        }
+        for &s in &cfg.blocks[b].succs {
+            if Some(s) != stop && !seen.contains(&s) {
+                work.push(s);
+            }
+        }
+    }
+    seen
+}
+
+/// Run the taint + sync-dependence fixpoint.
+pub fn analyze(instrs: &[Instr], cfg: &Cfg) -> DivergenceInfo {
+    let reconv = postdom::reconvergence_points(instrs, cfg);
+    let live = Liveness::compute(instrs, cfg);
+    let mut forced: BTreeSet<usize> = BTreeSet::new();
+    loop {
+        let t = Taint { forced: &forced };
+        let sol = dataflow::solve(&t, cfg, instrs);
+        let before = dataflow::facts_before(&t, cfg, instrs, &sol);
+        let divergent: Vec<usize> = instrs
+            .iter()
+            .enumerate()
+            .filter(|(pc, i)| {
+                i.op == Op::Bra
+                    && matches!((i.guard, &before[*pc]),
+                        (Some((p, _)), Some(f)) if f.contains(&p))
+            })
+            .map(|(pc, _)| pc)
+            .collect();
+
+        // Sync dependence: defs inside a divergent region that survive to
+        // the reconvergence point become divergent.
+        let mut new_forced = forced.clone();
+        for &br in &divergent {
+            let Some(rpc) = reconv[br] else { continue };
+            let region = influence_region(cfg, br, Some(rpc));
+            for &b in &region {
+                let blk = &cfg.blocks[b];
+                for pc in blk.start..blk.end {
+                    if let Some(d) = instrs[pc].dst {
+                        if live.live_in[rpc].contains(&d) {
+                            new_forced.insert(pc);
+                        }
+                    }
+                }
+            }
+        }
+        if new_forced == forced {
+            let divergent_join_blocks = divergent
+                .iter()
+                .filter_map(|&br| reconv[br].map(|pc| cfg.block_of[pc]))
+                .collect();
+            return DivergenceInfo {
+                taint_before: before,
+                divergent_branches: divergent,
+                divergent_join_blocks,
+                reconv,
+            };
+        }
+        forced = new_forced;
+    }
+}
+
+/// Barrier-divergence check: every `bar.sync` strictly inside the
+/// influence region of a divergent branch. Returns `(bar_pc, branch_pc)`
+/// pairs, at most one per barrier.
+pub fn barrier_divergence(
+    instrs: &[Instr],
+    cfg: &Cfg,
+    info: &DivergenceInfo,
+) -> Vec<(usize, usize)> {
+    let mut flagged: BTreeSet<usize> = BTreeSet::new();
+    let mut out = Vec::new();
+    for &br in &info.divergent_branches {
+        let region = influence_region(cfg, br, info.reconv[br]);
+        for &b in &region {
+            let blk = &cfg.blocks[b];
+            for pc in blk.start..blk.end {
+                if instrs[pc].op == Op::Bar && flagged.insert(pc) {
+                    out.push((pc, br));
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{KernelSource, Reg};
+
+    fn build(body: &str) -> (Vec<Instr>, Cfg) {
+        let k = KernelSource::assemble("t", &[Reg::r(10)], body).unwrap();
+        let cfg = Cfg::build(&k.instrs);
+        (k.instrs, cfg)
+    }
+
+    #[test]
+    fn tid_taints_through_def_use() {
+        let (instrs, cfg) = build(
+            "mov.u32 %r1, %tid.x\n\
+             add.u32 %r2, %r1, 4\n\
+             setp.lt.s32 %p1, %r2, %r10\n\
+             @%p1 bra DONE\n\
+             mov.u32 %r3, 7\n\
+             DONE:\nexit\n",
+        );
+        let info = analyze(&instrs, &cfg);
+        assert_eq!(info.divergent_branches, vec![3]);
+        // %r3 = 7 is uniform even inside the divergent region (dead at
+        // reconvergence).
+        let t = info.taint_before[5].as_ref().unwrap();
+        assert!(!t.contains(&Reg::r(3)));
+    }
+
+    #[test]
+    fn uniform_branch_is_not_divergent() {
+        let (instrs, cfg) = build(
+            "mov.u32 %r1, %ctaid.x\n\
+             setp.lt.s32 %p1, %r1, %r10\n\
+             @%p1 bra DONE\n\
+             bar.sync\n\
+             DONE:\nexit\n",
+        );
+        let info = analyze(&instrs, &cfg);
+        assert!(info.divergent_branches.is_empty());
+        assert!(barrier_divergence(&instrs, &cfg, &info).is_empty());
+    }
+
+    #[test]
+    fn sync_dependence_taints_merged_values() {
+        // r2 is 1 or 2 depending on tid — uniform on each path, divergent
+        // after the merge.
+        let (instrs, cfg) = build(
+            "mov.u32 %r1, %tid.x\n\
+             setp.lt.s32 %p1, %r1, 16\n\
+             @%p1 bra A\n\
+             mov.u32 %r2, 1\n\
+             bra B\n\
+             A:\n\
+             mov.u32 %r2, 2\n\
+             B:\n\
+             setp.eq.s32 %p2, %r2, 1\n\
+             @%p2 bra DONE\n\
+             bar.sync\n\
+             DONE:\nexit\n",
+        );
+        let info = analyze(&instrs, &cfg);
+        // Both the tid branch and the merged-value branch are divergent,
+        // and the barrier under the second is flagged.
+        assert!(info.divergent_branches.contains(&2));
+        assert!(info.divergent_branches.contains(&8));
+        let bars = barrier_divergence(&instrs, &cfg, &info);
+        assert_eq!(bars.len(), 1);
+        assert_eq!(instrs[bars[0].0].op, Op::Bar);
+    }
+
+    #[test]
+    fn barrier_under_divergent_guard_is_flagged() {
+        let (instrs, cfg) = build(
+            "mov.u32 %r1, %tid.x\n\
+             setp.lt.s32 %p1, %r1, 16\n\
+             @%p1 bra DONE\n\
+             bar.sync\n\
+             DONE:\nexit\n",
+        );
+        let info = analyze(&instrs, &cfg);
+        let bars = barrier_divergence(&instrs, &cfg, &info);
+        assert_eq!(bars, vec![(3, 2)]);
+    }
+}

@@ -1,0 +1,396 @@
+//! Static analysis of mini-PTX kernels (`mpu lint`).
+//!
+//! A generic monotone dataflow framework ([`dataflow`]) over the
+//! compiler's CFG, with five passes:
+//!
+//! | code | severity | pass | finding |
+//! |------|----------|------|---------|
+//! | E001 | error | uninit | register read on a path that never assigned it |
+//! | E002 | error | barrier | `bar.sync` inside divergent control flow (deadlock class) |
+//! | E003 | error | race | same-interval shared-memory W→R / W→W overlap |
+//! | W004 | warning | access | predicted shared-memory bank-conflict degree ≥ 2 |
+//! | I005 | info | divergence | branch guarded by a tid-dependent predicate |
+//! | I006 | info | access | global access classification (coalesced/strided/…) |
+//! | I007 | info | access | shared access classification / predicted degree |
+//!
+//! Shipped workload kernels must stay free of errors and warnings
+//! (`mpu lint --deny warnings` gates CI), and the affine access
+//! predictions are validated against dynamically observed address traces
+//! from the simulator (tier-1 test).
+
+pub mod affine;
+pub mod dataflow;
+pub mod defs;
+pub mod divergence;
+pub mod race;
+
+use crate::compiler::cfg::Cfg;
+use crate::isa::program::ParamValue;
+use crate::isa::{KernelSource, LaunchConfig, Op, Reg, Space};
+use crate::workloads::{self, Prepared, Scale, SizeOnlyDev, Workload};
+use affine::AccessClass;
+use anyhow::Result;
+use serde::Serialize;
+use std::collections::BTreeMap;
+
+/// Diagnostic severity. `Error` always fails `mpu lint`; `Warning` fails
+/// under `--deny warnings`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Serialize)]
+#[serde(rename_all = "lowercase")]
+pub enum Severity {
+    Error,
+    Warning,
+    Info,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Info => "info",
+        })
+    }
+}
+
+/// One structured lint finding.
+#[derive(Clone, Debug, Serialize)]
+pub struct Diagnostic {
+    pub kernel: String,
+    /// Pass name: `uninit` | `divergence` | `barrier` | `race` | `access`.
+    pub pass: String,
+    /// Stable code (`E001`…): errors E, warnings W, infos I.
+    pub code: String,
+    pub severity: Severity,
+    pub pc: usize,
+    /// Rendered instruction at `pc`.
+    pub instr: String,
+    pub message: String,
+}
+
+/// Static prediction for one memory access.
+#[derive(Clone, Debug, Serialize)]
+pub struct AccessRecord {
+    pub pc: usize,
+    /// `global` | `shared`.
+    pub space: String,
+    /// `ld` | `st` | `red`.
+    pub op: String,
+    pub class: AccessClass,
+    /// Byte stride between consecutive lanes, when affine.
+    pub stride: Option<i64>,
+    /// Predicted full-warp bank-conflict degree (shared accesses only).
+    pub conflict_degree: Option<u64>,
+}
+
+/// Lint result for one kernel.
+#[derive(Clone, Debug, Serialize)]
+pub struct KernelLint {
+    pub kernel: String,
+    pub diagnostics: Vec<Diagnostic>,
+    pub accesses: Vec<AccessRecord>,
+}
+
+impl KernelLint {
+    pub fn count(&self, s: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == s).count()
+    }
+}
+
+/// Launch-time context the analyses are seeded with: concrete launch
+/// geometry and parameter values make the affine predictions exact.
+#[derive(Clone, Debug)]
+pub struct LintCtx {
+    pub launch: LaunchConfig,
+    /// Parameter registers with concrete integer values where known.
+    pub params: Vec<(Reg, Option<i64>)>,
+    pub warp_size: usize,
+}
+
+impl LintCtx {
+    /// Context of a prepared workload (pointers and sizes become concrete
+    /// constants; float scalars stay opaque uniform symbols).
+    pub fn from_prepared(p: &Prepared, warp_size: usize) -> LintCtx {
+        let params = p
+            .kernel
+            .params
+            .iter()
+            .zip(&p.params)
+            .map(|(&r, v)| {
+                let c = match v {
+                    ParamValue::U32(x) => Some(*x as i64),
+                    ParamValue::F32(_) => None,
+                };
+                (r, c)
+            })
+            .collect();
+        LintCtx { launch: p.launch, params, warp_size }
+    }
+
+    pub fn param_regs(&self) -> Vec<Reg> {
+        self.params.iter().map(|&(r, _)| r).collect()
+    }
+}
+
+fn space_name(s: Option<Space>) -> &'static str {
+    match s {
+        Some(Space::Global) => "global",
+        Some(Space::Shared) => "shared",
+        None => "",
+    }
+}
+
+/// Run all five passes over a kernel.
+pub fn lint_kernel(kernel: &KernelSource, ctx: &LintCtx) -> KernelLint {
+    let instrs = &kernel.instrs;
+    let cfg = Cfg::build(instrs);
+    let params = ctx.param_regs();
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let diag = |pc: usize, pass: &str, code: &str, severity: Severity, message: String| Diagnostic {
+        kernel: kernel.name.clone(),
+        pass: pass.into(),
+        code: code.into(),
+        severity,
+        pc,
+        instr: instrs[pc].to_string(),
+        message,
+    };
+
+    // Pass 1: reaching definitions / uninitialized use.
+    for (pc, r) in defs::check_uninit(instrs, &cfg, &params) {
+        diags.push(diag(
+            pc,
+            "uninit",
+            "E001",
+            Severity::Error,
+            format!("register {r} is read here but some path from kernel entry never assigns it"),
+        ));
+    }
+
+    // Pass 2: divergence (tid taint).
+    let div = divergence::analyze(instrs, &cfg);
+    for &br in &div.divergent_branches {
+        diags.push(diag(
+            br,
+            "divergence",
+            "I005",
+            Severity::Info,
+            "branch guard is tid-dependent: the warp may diverge here".into(),
+        ));
+    }
+
+    // Pass 3: barrier divergence.
+    for (bar, br) in divergence::barrier_divergence(instrs, &cfg, &div) {
+        diags.push(diag(
+            bar,
+            "barrier",
+            "E002",
+            Severity::Error,
+            format!(
+                "bar.sync sits inside the divergent region of the branch at pc {br}: \
+                 lanes that took the other path may never arrive (deadlock)"
+            ),
+        ));
+    }
+
+    // Pass 5 machinery (affine envs) also backs pass 4.
+    let envs = affine::analyze(instrs, &cfg, ctx.launch, &ctx.params, &div);
+
+    // Pass 4: shared-memory races.
+    for f in race::find_races(instrs, &cfg, &envs, &ctx.launch, &params) {
+        diags.push(diag(f.write_pc, "race", "E003", Severity::Error, f.message));
+    }
+
+    // Pass 5: access patterns.
+    let mut accesses = Vec::new();
+    for (pc, i) in instrs.iter().enumerate() {
+        if !matches!(i.op, Op::Ld | Op::St | Op::Red) || i.mem.is_none() {
+            continue;
+        }
+        let Some(addr) = affine::access_addr(instrs, &envs, pc) else { continue };
+        let op = format!("{:?}", i.op).to_lowercase();
+        let (class, stride) = affine::classify_global(&addr);
+        if i.space == Some(Space::Shared) {
+            let degree = affine::smem_conflict_degree(&addr, ctx.warp_size);
+            match degree {
+                Some(d) if d >= 2 => diags.push(diag(
+                    pc,
+                    "access",
+                    "W004",
+                    Severity::Warning,
+                    format!(
+                        "shared {op} with lane stride {} bytes: predicted {d}-way \
+                         bank conflict per full warp",
+                        stride.unwrap_or(0)
+                    ),
+                )),
+                _ => diags.push(diag(
+                    pc,
+                    "access",
+                    "I007",
+                    Severity::Info,
+                    match (degree, &addr) {
+                        (Some(1), a) if a.is_uniform() => {
+                            format!("shared {op} is a broadcast (uniform address)")
+                        }
+                        (Some(1), _) => format!("shared {op} is conflict-free"),
+                        _ => format!("shared {op} address defies static bank prediction"),
+                    },
+                )),
+            }
+            accesses.push(AccessRecord {
+                pc,
+                space: "shared".into(),
+                op,
+                class,
+                stride,
+                conflict_degree: degree,
+            });
+        } else {
+            let detail = match class {
+                AccessClass::Uniform => "all lanes touch one address".to_string(),
+                AccessClass::Coalesced => "one contiguous burst per warp".to_string(),
+                AccessClass::Strided => {
+                    format!("constant lane stride of {} bytes", stride.unwrap_or(0))
+                }
+                AccessClass::Gather => "address is not affine in tid".to_string(),
+            };
+            diags.push(diag(
+                pc,
+                "access",
+                "I006",
+                Severity::Info,
+                format!("global {op} classified {class}: {detail}"),
+            ));
+            accesses.push(AccessRecord {
+                pc,
+                space: space_name(i.space).into(),
+                op,
+                class,
+                stride,
+                conflict_degree: None,
+            });
+        }
+    }
+
+    diags.sort_by_key(|d| (d.pc, d.code.clone()));
+    KernelLint { kernel: kernel.name.clone(), diagnostics: diags, accesses }
+}
+
+/// Lint result for one prepared workload.
+#[derive(Clone, Debug, Serialize)]
+pub struct WorkloadLint {
+    pub workload: String,
+    #[serde(flatten)]
+    pub lint: KernelLint,
+}
+
+/// Prepare (size-only, no machine) and lint one Table-I workload.
+pub fn lint_workload(w: Workload, scale: Scale, warp_size: usize) -> Result<WorkloadLint> {
+    let mut dev = SizeOnlyDev::default();
+    let p = workloads::prepare(w, scale, &mut dev)?;
+    let ctx = LintCtx::from_prepared(&p, warp_size);
+    Ok(WorkloadLint { workload: w.name().into(), lint: lint_kernel(&p.kernel, &ctx) })
+}
+
+/// Whole-suite lint report (the `mpu lint --json` schema, v1).
+#[derive(Clone, Debug, Serialize)]
+pub struct LintReport {
+    pub schema_version: u32,
+    pub scale: String,
+    pub errors: usize,
+    pub warnings: usize,
+    pub infos: usize,
+    pub workloads: Vec<WorkloadLint>,
+}
+
+impl LintReport {
+    pub fn new(scale: Scale, workloads: Vec<WorkloadLint>) -> LintReport {
+        let count = |s: Severity| workloads.iter().map(|w| w.lint.count(s)).sum();
+        LintReport {
+            schema_version: 1,
+            scale: scale.name().into(),
+            errors: count(Severity::Error),
+            warnings: count(Severity::Warning),
+            infos: count(Severity::Info),
+            workloads,
+        }
+    }
+}
+
+/// Per-workload appendix entry for `BENCH_suite.json`: diagnostic counts
+/// plus the dominant predicted global-access class.
+#[derive(Clone, Debug, Serialize)]
+pub struct WorkloadLintSummary {
+    pub workload: String,
+    pub errors: usize,
+    pub warnings: usize,
+    pub infos: usize,
+    /// Dominant predicted class over global accesses (ties resolve to the
+    /// worse class; `none` without global accesses).
+    pub coalescing: String,
+    /// Global access count per predicted class.
+    pub global_classes: BTreeMap<String, usize>,
+}
+
+impl WorkloadLintSummary {
+    pub fn from_lint(w: &WorkloadLint) -> WorkloadLintSummary {
+        let mut global_classes: BTreeMap<String, usize> = BTreeMap::new();
+        for a in w.lint.accesses.iter().filter(|a| a.space == "global") {
+            *global_classes.entry(a.class.to_string()).or_insert(0) += 1;
+        }
+        // Worst-first precedence breaks ties.
+        let order = ["gather", "strided", "uniform", "coalesced"];
+        let coalescing = order
+            .iter()
+            .filter_map(|&k| global_classes.get(k).map(|&n| (k, n)))
+            .max_by_key(|&(k, n)| (n, std::cmp::Reverse(order.iter().position(|&o| o == k))))
+            .map(|(k, _)| k.to_string())
+            .unwrap_or_else(|| "none".into());
+        WorkloadLintSummary {
+            workload: w.workload.clone(),
+            errors: w.lint.count(Severity::Error),
+            warnings: w.lint.count(Severity::Warning),
+            infos: w.lint.count(Severity::Info),
+            coalescing,
+            global_classes,
+        }
+    }
+}
+
+/// Lint every workload in `list` (used by the suite appendix — analysis
+/// failures degrade to an empty appendix rather than failing the bench).
+pub fn suite_lint_summaries(list: &[Workload], scale: Scale, warp_size: usize) -> Vec<WorkloadLintSummary> {
+    list.iter()
+        .filter_map(|&w| lint_workload(w, scale, warp_size).ok())
+        .map(|wl| WorkloadLintSummary::from_lint(&wl))
+        .collect()
+}
+
+pub use affine::{classify_global, smem_conflict_degree};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shipped_kernels_lint_clean_spot_check() {
+        let wl = lint_workload(Workload::Axpy, Scale::Tiny, 32).unwrap();
+        assert_eq!(wl.lint.count(Severity::Error), 0, "{:#?}", wl.lint.diagnostics);
+        assert_eq!(wl.lint.count(Severity::Warning), 0, "{:#?}", wl.lint.diagnostics);
+        // axpy: two loads + one store, all coalesced.
+        let s = WorkloadLintSummary::from_lint(&wl);
+        assert_eq!(s.coalescing, "coalesced");
+        assert_eq!(s.global_classes.get("coalesced"), Some(&3));
+    }
+
+    #[test]
+    fn report_serializes_with_stable_keys() {
+        let wl = lint_workload(Workload::Knn, Scale::Tiny, 32).unwrap();
+        let rep = LintReport::new(Scale::Tiny, vec![wl]);
+        let js = serde_json::to_string(&rep).unwrap();
+        for key in ["schema_version", "workloads", "diagnostics", "accesses", "severity", "code"] {
+            assert!(js.contains(key), "missing {key} in {js}");
+        }
+    }
+}

@@ -1,0 +1,554 @@
+//! Shared-memory race detection.
+//!
+//! Two shared accesses can race when (1) at least one is a store, (2) no
+//! `bar.sync` necessarily separates them — i.e. they sit in the same
+//! *barrier interval* (a barrier-free CFG path connects them, or they
+//! are the same store executed by two threads), and (3) their tid-affine
+//! addresses can coincide for two *distinct* threads of the block.
+//!
+//! Overlap is decided exactly on the affine abstraction: the two thread
+//! ids become variables `t1 ≠ t2` in `[0, block)`, the address equality
+//! and every provable branch/guard assumption become linear constraints
+//! over them (uniform symbols are shared), and Fourier–Motzkin
+//! elimination decides rational feasibility. Uniform symbols are treated
+//! as interval-invariant, which is exact when every loop carrying a
+//! shared access crosses a barrier per iteration (true of the shipped
+//! kernels); `red` atomics are exempt by design.
+
+use super::affine::{access_addr, operand_affine, AffVal, Env, Sym};
+use super::dataflow::{self, Analysis};
+use super::defs::{self, PARAM_DEF};
+use crate::compiler::cfg::Cfg;
+use crate::isa::instr::{CmpOp, Space};
+use crate::isa::{Instr, LaunchConfig, Op, Reg, RegClass, Ty};
+use std::collections::BTreeMap;
+
+/// Must-hold predicate values, propagated from conditional-branch edges
+/// (`@%p bra T`: `p` is true on the taken edge, false on the
+/// fall-through) until the predicate is redefined.
+struct Assume<'a> {
+    cfg: &'a Cfg,
+    instrs: &'a [Instr],
+}
+
+impl Analysis for Assume<'_> {
+    type Fact = BTreeMap<Reg, bool>;
+
+    fn boundary(&self) -> Self::Fact {
+        BTreeMap::new()
+    }
+
+    fn join(&self, a: &Self::Fact, b: &Self::Fact, _block: usize) -> Self::Fact {
+        a.iter().filter(|(r, v)| b.get(*r) == Some(v)).map(|(r, v)| (*r, *v)).collect()
+    }
+
+    fn transfer(&self, _pc: usize, i: &Instr, fact: &mut Self::Fact) {
+        if let Some(d) = i.dst {
+            if d.class == RegClass::P {
+                fact.remove(&d);
+            }
+        }
+    }
+
+    fn edge(&self, from: usize, to: usize, mut fact: Self::Fact) -> Self::Fact {
+        let blk = &self.cfg.blocks[from];
+        if blk.end == blk.start {
+            return fact;
+        }
+        let last = &self.instrs[blk.end - 1];
+        if last.op != Op::Bra {
+            return fact;
+        }
+        let (Some((p, neg)), Some(t)) = (last.guard, last.target) else { return fact };
+        if t >= self.instrs.len() {
+            return fact;
+        }
+        let taken = self.cfg.block_of[t];
+        let fall = if blk.end < self.instrs.len() {
+            Some(self.cfg.block_of[blk.end])
+        } else {
+            None
+        };
+        if Some(taken) == fall {
+            return fact;
+        }
+        if to == taken {
+            fact.insert(p, !neg);
+        } else if Some(to) == fall {
+            fact.insert(p, neg);
+        }
+        fact
+    }
+}
+
+/// Per-pc successor lists with barriers removed: a `bar.sync` has no
+/// outgoing edges, so reachability in this graph is exactly
+/// "a barrier-free path exists".
+pub fn barrier_free_succs(instrs: &[Instr]) -> Vec<Vec<usize>> {
+    let n = instrs.len();
+    (0..n)
+        .map(|pc| {
+            let i = &instrs[pc];
+            let mut s = Vec::new();
+            match i.op {
+                Op::Exit | Op::Bar => {}
+                Op::Bra => {
+                    if let Some(t) = i.target {
+                        if t < n {
+                            s.push(t);
+                        }
+                    }
+                    if i.guard.is_some() && pc + 1 < n {
+                        s.push(pc + 1);
+                    }
+                }
+                _ => {
+                    if pc + 1 < n {
+                        s.push(pc + 1);
+                    }
+                }
+            }
+            s
+        })
+        .collect()
+}
+
+/// Does a (non-empty) barrier-free path lead from `from` to `to`?
+pub fn barrier_free_reachable(succs: &[Vec<usize>], from: usize, to: usize) -> bool {
+    let mut seen = vec![false; succs.len()];
+    let mut work: Vec<usize> = succs[from].clone();
+    while let Some(pc) = work.pop() {
+        if pc == to {
+            return true;
+        }
+        if seen[pc] {
+            continue;
+        }
+        seen[pc] = true;
+        work.extend(succs[pc].iter().copied());
+    }
+    false
+}
+
+// ---- rational feasibility via Fourier–Motzkin elimination ----
+
+/// Solver variable: the two thread ids plus the shared uniform symbols.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Var {
+    T1,
+    T2,
+    S(Sym),
+}
+
+/// Linear constraint `Σ coefᵢ·varᵢ + c ≤ 0`.
+#[derive(Clone, Debug)]
+struct Con {
+    terms: BTreeMap<Var, i128>,
+    c: i128,
+}
+
+impl Con {
+    /// Translate an affine value into `expr ≤ 0`, binding `tid` to `t`.
+    fn from_aff(v: &AffVal, t: Var) -> Option<Con> {
+        let AffVal::Lin { c, terms } = v else { return None };
+        let mut out = BTreeMap::new();
+        for (s, k) in terms {
+            let var = if *s == Sym::Tid { t } else { Var::S(*s) };
+            *out.entry(var).or_insert(0) += *k as i128;
+        }
+        out.retain(|_, k| *k != 0);
+        Some(Con { terms: out, c: *c as i128 })
+    }
+
+    fn shift(mut self, d: i128) -> Con {
+        self.c += d;
+        self
+    }
+
+    fn negated(&self) -> Con {
+        // ¬(e ≤ 0) ⇔ -e + 1 ≤ 0 over the integers.
+        Con {
+            terms: self.terms.iter().map(|(v, k)| (*v, -k)).collect(),
+            c: 1 - self.c,
+        }
+    }
+}
+
+/// Rational feasibility of a conjunction of linear constraints. Answers
+/// conservatively `true` (may be satisfiable) on overflow or blow-up.
+fn feasible(mut cons: Vec<Con>) -> bool {
+    const MAX_CONS: usize = 4096;
+    loop {
+        // Constant constraints decide immediately.
+        cons.retain(|c| !(c.terms.is_empty() && c.c <= 0));
+        if cons.iter().any(|c| c.terms.is_empty() && c.c > 0) {
+            return false;
+        }
+        let Some(&v) = cons.iter().flat_map(|c| c.terms.keys()).next() else {
+            return true; // no variables left, all constants hold
+        };
+        let (with, mut rest): (Vec<Con>, Vec<Con>) =
+            cons.into_iter().partition(|c| c.terms.contains_key(&v));
+        let (uppers, lowers): (Vec<Con>, Vec<Con>) =
+            with.into_iter().partition(|c| c.terms[&v] > 0);
+        for u in &uppers {
+            for l in &lowers {
+                let cu = u.terms[&v]; // > 0
+                let cl = -l.terms[&v]; // > 0
+                let mut terms: BTreeMap<Var, i128> = BTreeMap::new();
+                let mut c = match (u.c.checked_mul(cl), l.c.checked_mul(cu)) {
+                    (Some(a), Some(b)) => match a.checked_add(b) {
+                        Some(x) => x,
+                        None => return true,
+                    },
+                    _ => return true,
+                };
+                for (src, f) in [(u, cl), (l, cu)] {
+                    for (&var, &k) in &src.terms {
+                        if var == v {
+                            continue;
+                        }
+                        let Some(kf) = k.checked_mul(f) else { return true };
+                        *terms.entry(var).or_insert(0) += kf;
+                    }
+                }
+                terms.retain(|_, k| *k != 0);
+                // Keep coefficients small.
+                let g = terms.values().fold(0i128, |g, k| gcd(g, k.unsigned_abs() as i128));
+                if g > 1 && c.unsigned_abs() as i128 % g == 0 {
+                    for k in terms.values_mut() {
+                        *k /= g;
+                    }
+                    c /= g;
+                }
+                rest.push(Con { terms, c });
+            }
+        }
+        if rest.len() > MAX_CONS {
+            return true;
+        }
+        cons = rest;
+    }
+}
+
+fn gcd(a: i128, b: i128) -> i128 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Resolve an assumed predicate value `p = val` into linear constraints,
+/// via the unique reaching `setp` definition evaluated in the affine
+/// environment at the definition site. `None` when nothing provable.
+fn pred_constraints(
+    p: Reg,
+    val: bool,
+    pc: usize,
+    t: Var,
+    instrs: &[Instr],
+    launch: &LaunchConfig,
+    envs: &[Option<Env>],
+    rdefs: &[Option<BTreeMap<Reg, std::collections::BTreeSet<usize>>>],
+) -> Option<Vec<Con>> {
+    let defs = rdefs[pc].as_ref()?.get(&p)?;
+    if defs.len() != 1 {
+        return None;
+    }
+    let d = *defs.iter().next()?;
+    if d == PARAM_DEF {
+        return None;
+    }
+    let i = &instrs[d];
+    if i.op != Op::Setp || i.guard.is_some() || !matches!(i.ty, Ty::S32 | Ty::U32) {
+        return None;
+    }
+    let env = envs[d].as_ref()?;
+    let a = operand_affine(&i.srcs[0], env, launch, d);
+    let b = operand_affine(&i.srcs[1], env, launch, d);
+    let diff = a.sub(&b);
+    let base = Con::from_aff(&diff, t)?; // a - b ≤ 0 template
+    let cmp = i.cmp?;
+    let make = |cmp: CmpOp| -> Option<Vec<Con>> {
+        match cmp {
+            CmpOp::Lt => Some(vec![base.clone().shift(1)]), // a-b+1 ≤ 0
+            CmpOp::Le => Some(vec![base.clone()]),
+            CmpOp::Gt => Some(vec![base.negated()]), // ¬(a-b ≤ 0) ⇔ b-a+1 ≤ 0
+            CmpOp::Ge => Some(vec![base.clone().shift(1).negated()]), // ¬(a < b) ⇔ b-a ≤ 0
+            CmpOp::Eq => Some(vec![base.clone(), base.clone().shift(1).negated()]),
+            CmpOp::Ne => None, // disjunctive
+        }
+    };
+    let effective = if val {
+        cmp
+    } else {
+        match cmp {
+            CmpOp::Eq => CmpOp::Ne,
+            CmpOp::Ne => CmpOp::Eq,
+            CmpOp::Lt => CmpOp::Ge,
+            CmpOp::Le => CmpOp::Gt,
+            CmpOp::Gt => CmpOp::Le,
+            CmpOp::Ge => CmpOp::Lt,
+        }
+    };
+    make(effective)
+}
+
+/// One potential race between two shared-memory accesses.
+#[derive(Clone, Debug)]
+pub struct RaceFinding {
+    /// pc of the store side.
+    pub write_pc: usize,
+    /// pc of the other access (equal to `write_pc` for a self W-W race).
+    pub other_pc: usize,
+    pub message: String,
+}
+
+/// Find shared-memory races. `envs` is the affine environment before
+/// each pc (from [`super::affine::analyze`]).
+pub fn find_races(
+    instrs: &[Instr],
+    cfg: &Cfg,
+    envs: &[Option<Env>],
+    launch: &LaunchConfig,
+    params: &[Reg],
+) -> Vec<RaceFinding> {
+    let rdefs = defs::reaching_before(instrs, cfg, params);
+    let asm = Assume { cfg, instrs };
+    let sol = dataflow::solve(&asm, cfg, instrs);
+    let assume = dataflow::facts_before(&asm, cfg, instrs, &sol);
+    let bf = barrier_free_succs(instrs);
+
+    // `red` atomics are exempt: the reduction unit serializes them.
+    let accs: Vec<usize> = instrs
+        .iter()
+        .enumerate()
+        .filter(|(_, i)| {
+            matches!(i.op, Op::St | Op::Ld) && i.space == Some(Space::Shared)
+        })
+        .map(|(pc, _)| pc)
+        .collect();
+
+    // All constraints a thread `t` executing the access at `pc` obeys:
+    // the block bound plus every provable branch/guard assumption.
+    let thread_cons = |pc: usize, t: Var| -> Vec<Con> {
+        let mut cons = vec![
+            // 0 ≤ t ≤ block-1
+            Con { terms: BTreeMap::from([(t, -1)]), c: 0 },
+            Con { terms: BTreeMap::from([(t, 1)]), c: -(launch.block as i128 - 1) },
+        ];
+        let mut facts: Vec<(Reg, bool)> = assume[pc]
+            .as_ref()
+            .map(|f| f.iter().map(|(r, v)| (*r, *v)).collect())
+            .unwrap_or_default();
+        if let Some((p, neg)) = instrs[pc].guard {
+            facts.push((p, !neg));
+        }
+        for (p, v) in facts {
+            if let Some(cs) = pred_constraints(p, v, pc, t, instrs, launch, envs, &rdefs) {
+                cons.extend(cs);
+            }
+        }
+        cons
+    };
+
+    let mut out = Vec::new();
+    for (ia, &a) in accs.iter().enumerate() {
+        for &b in &accs[ia..] {
+            let wa = instrs[a].op == Op::St;
+            let wb = instrs[b].op == Op::St;
+            if !(wa || wb) {
+                continue;
+            }
+            if a == b {
+                if !wa {
+                    continue; // same load twice never races
+                }
+            } else if !(barrier_free_reachable(&bf, a, b) || barrier_free_reachable(&bf, b, a)) {
+                continue; // a barrier always separates them
+            }
+            let (Some(addr_a), Some(addr_b)) =
+                (access_addr(instrs, envs, a), access_addr(instrs, envs, b))
+            else {
+                continue; // unreachable code cannot race
+            };
+            let write_pc = if wa { a } else { b };
+            let other_pc = if wa { b } else { a };
+            let (ca, cb) = (Con::from_aff(&addr_a, Var::T1), Con::from_aff(&addr_b, Var::T2));
+            let (Some(ca), Some(cb)) = (ca, cb) else {
+                out.push(RaceFinding {
+                    write_pc,
+                    other_pc,
+                    message: format!(
+                        "shared access at pc {} has a non-affine address; cannot prove it \
+                         disjoint from the store at pc {} in the same barrier interval",
+                        if addr_a == AffVal::Varying { a } else { b },
+                        write_pc
+                    ),
+                });
+                continue;
+            };
+            let mut cons = Vec::new();
+            cons.extend(thread_cons(a, Var::T1));
+            cons.extend(thread_cons(b, Var::T2));
+            // addr_a(t1) = addr_b(t2): both differences ≤ 0.
+            let eq = Con {
+                terms: {
+                    let mut m = ca.terms.clone();
+                    for (v, k) in &cb.terms {
+                        *m.entry(*v).or_insert(0) -= k;
+                    }
+                    m.retain(|_, k| *k != 0);
+                    m
+                },
+                c: ca.c - cb.c,
+            };
+            let eq_neg = Con {
+                terms: eq.terms.iter().map(|(v, k)| (*v, -k)).collect(),
+                c: -eq.c,
+            };
+            cons.push(eq);
+            cons.push(eq_neg);
+            // Distinct threads: t1 < t2 or t2 < t1.
+            let lt = |x: Var, y: Var| Con {
+                terms: BTreeMap::from([(x, 1), (y, -1)]),
+                c: 1,
+            };
+            let mut c1 = cons.clone();
+            c1.push(lt(Var::T1, Var::T2));
+            let mut c2 = cons;
+            c2.push(lt(Var::T2, Var::T1));
+            if feasible(c1) || feasible(c2) {
+                out.push(RaceFinding {
+                    write_pc,
+                    other_pc,
+                    message: format!(
+                        "two distinct threads of a {}-thread block may touch the same \
+                         shared address (store at pc {}, {} at pc {}) with no barrier \
+                         in between",
+                        launch.block,
+                        write_pc,
+                        if other_pc == write_pc || instrs[other_pc].op == Op::St {
+                            "store"
+                        } else {
+                            "load"
+                        },
+                        other_pc
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::KernelSource;
+
+    fn races(body: &str, launch: LaunchConfig) -> Vec<RaceFinding> {
+        let params = [Reg::r(10)];
+        let k = KernelSource::assemble("t", &params, body).unwrap();
+        let cfg = Cfg::build(&k.instrs);
+        let div = super::super::divergence::analyze(&k.instrs, &cfg);
+        let pv: Vec<(Reg, Option<i64>)> = params.iter().map(|&r| (r, Some(0))).collect();
+        let envs = super::super::affine::analyze(&k.instrs, &cfg, launch, &pv, &div);
+        find_races(&k.instrs, &cfg, &envs, &launch, &params)
+    }
+
+    #[test]
+    fn per_thread_slots_do_not_race() {
+        let r = races(
+            "mov.u32 %r1, %tid.x\n\
+             shl.u32 %r2, %r1, 2\n\
+             cvt.f32.s32 %f1, %r1\n\
+             st.shared.f32 [%r2+0], %f1\n\
+             ld.shared.f32 %f2, [%r2+0]\n\
+             exit\n",
+            LaunchConfig::with_smem(1, 64, 256),
+        );
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn neighbor_read_without_barrier_races() {
+        let r = races(
+            "mov.u32 %r1, %tid.x\n\
+             shl.u32 %r2, %r1, 2\n\
+             cvt.f32.s32 %f1, %r1\n\
+             st.shared.f32 [%r2+0], %f1\n\
+             ld.shared.f32 %f2, [%r2+4]\n\
+             exit\n",
+            LaunchConfig::with_smem(1, 64, 260),
+        );
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert_eq!((r[0].write_pc, r[0].other_pc), (3, 4));
+    }
+
+    #[test]
+    fn barrier_separates_the_pair() {
+        let r = races(
+            "mov.u32 %r1, %tid.x\n\
+             shl.u32 %r2, %r1, 2\n\
+             cvt.f32.s32 %f1, %r1\n\
+             st.shared.f32 [%r2+0], %f1\n\
+             bar.sync\n\
+             ld.shared.f32 %f2, [%r2+4]\n\
+             exit\n",
+            LaunchConfig::with_smem(1, 64, 260),
+        );
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn branch_assumptions_prove_tree_reduction_clean() {
+        // The PageRank-style reduction step: read [t+off], accumulate into
+        // [t], guarded by t < off — provably disjoint.
+        let r = races(
+            "mov.u32 %r1, %tid.x\n\
+             shl.u32 %r6, %r1, 2\n\
+             cvt.f32.s32 %f1, %r1\n\
+             st.shared.f32 [%r6+0], %f1\n\
+             bar.sync\n\
+             mov.u32 %r7, 32\n\
+             setp.ge.s32 %p3, %r1, %r7\n\
+             @%p3 bra SKIP\n\
+             add.u32 %r8, %r1, %r7\n\
+             shl.u32 %r2, %r8, 2\n\
+             ld.shared.f32 %f3, [%r2+0]\n\
+             ld.shared.f32 %f4, [%r6+0]\n\
+             add.f32 %f4, %f4, %f3\n\
+             st.shared.f32 [%r6+0], %f4\n\
+             SKIP:\n\
+             exit\n",
+            LaunchConfig::with_smem(1, 64, 256),
+        );
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn same_uniform_slot_write_write_races() {
+        let r = races(
+            "mov.f32 %f1, 1.0\n\
+             st.shared.f32 [%r10+0], %f1\n\
+             exit\n",
+            LaunchConfig::with_smem(1, 64, 64),
+        );
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert_eq!((r[0].write_pc, r[0].other_pc), (1, 1));
+    }
+
+    #[test]
+    fn red_atomics_are_exempt() {
+        let r = races(
+            "mov.u32 %r1, 0\n\
+             mov.f32 %f1, 1.0\n\
+             red.shared.add.f32 [%r1+0], %f1\n\
+             exit\n",
+            LaunchConfig::with_smem(1, 64, 64),
+        );
+        assert!(r.is_empty(), "{r:?}");
+    }
+}

@@ -317,7 +317,7 @@ mod tests {
         // conflict → B. With bidirectional propagation the intermediate
         // regs of the mixed chain (%r2, %r3) also become B.
         assert_eq!(l[&Reg::f(1)], Loc::B);
-        assert!(stats.both >= 1 && stats.both <= 3, "both = {}", stats.both);
+        assert!((1..=3).contains(&stats.both), "both = {}", stats.both);
     }
 
     #[test]

@@ -24,9 +24,10 @@
 
 use super::sweep::SweepResult;
 use super::{geomean, PairReport, RunReport};
+use crate::analysis::WorkloadLintSummary;
 use crate::energy::EnergyBreakdown;
 use crate::sim::Stats;
-use crate::workloads::Scale;
+use crate::workloads::{Scale, Workload};
 use anyhow::Result;
 use serde::Serialize;
 use std::path::Path;
@@ -175,6 +176,11 @@ pub struct SuiteJson {
     /// byte-identical).
     #[serde(skip_serializing_if = "Option::is_none")]
     pub stats: Option<SuiteStats>,
+    /// Static-lint appendix (append-only addition): per-workload
+    /// diagnostic counts and the dominant predicted global-access class
+    /// from `mpu lint`. Empty when a workload failed to lint.
+    #[serde(skip_serializing_if = "Vec::is_empty")]
+    pub lint: Vec<WorkloadLintSummary>,
 }
 
 /// Build the suite document from MPU/GPU pairs.
@@ -243,6 +249,11 @@ pub fn suite_json_with_variants(
             .collect(),
         variants,
         stats: None,
+        lint: {
+            let wls: Vec<Workload> = pairs.iter().map(|p| p.mpu.workload).collect();
+            let warp = crate::config::MachineConfig::scaled().warp_size;
+            crate::analysis::suite_lint_summaries(&wls, scale, warp)
+        },
     }
 }
 
@@ -382,6 +393,16 @@ mod tests {
             "near_fraction",
             "row_miss_rate",
         ] {
+            assert!(s.contains(&format!("\"{key}\"")), "missing key {key}");
+        }
+        // Static-lint appendix: one entry per workload in the document,
+        // with counts and the dominant predicted coalescing class.
+        assert_eq!(doc.lint.len(), 1);
+        assert_eq!(doc.lint[0].workload, "axpy");
+        assert_eq!(doc.lint[0].errors, 0);
+        assert_eq!(doc.lint[0].warnings, 0);
+        assert_eq!(doc.lint[0].coalescing, "coalesced");
+        for key in ["lint", "coalescing", "global_classes"] {
             assert!(s.contains(&format!("\"{key}\"")), "missing key {key}");
         }
     }

@@ -268,6 +268,26 @@ struct CoreState {
     sc_min_wake: Vec<u64>,
 }
 
+/// One dynamically observed memory access — a (warp, instruction)
+/// issue — captured when address tracing is enabled
+/// ([`SimtFrontend::enable_mem_trace`]). The static analysis
+/// ([`crate::analysis`]) is validated against these records.
+#[derive(Clone, Debug)]
+pub struct MemTraceRec {
+    /// pc of the memory instruction (source pcs == compiled pcs; the
+    /// compiler preserves instruction count).
+    pub pc: usize,
+    pub space: Space,
+    /// `(tid within block, byte address)` per executing lane, in lane
+    /// order.
+    pub lanes: Vec<(u32, u64)>,
+    /// Bank-conflict serialization factor (shared accesses; 1 for
+    /// global ones).
+    pub conflicts: u64,
+    /// All `warp_size` lanes executed.
+    pub full_warp: bool,
+}
+
 /// Reusable hot-path buffers: the run loop drains completions and the
 /// issue paths gather lane addresses/values/operands through these
 /// instead of allocating per iteration.
@@ -304,6 +324,8 @@ pub struct SimtFrontend<M: MemorySystem + OffloadModel> {
     /// entry per wake refresh until it surfaces).
     wake_heap_cap: usize,
     scratch: Scratch,
+    /// Address trace, recorded only when enabled (zero cost otherwise).
+    mem_trace: Option<Vec<MemTraceRec>>,
 }
 
 impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
@@ -335,7 +357,46 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             wake_heap: BinaryHeap::new(),
             wake_heap_cap: 1024,
             scratch: Scratch::default(),
+            mem_trace: None,
         }
+    }
+
+    /// Start recording every warp memory access into an address trace.
+    pub fn enable_mem_trace(&mut self) {
+        self.mem_trace = Some(Vec::new());
+    }
+
+    /// Take the recorded address trace (and stop recording).
+    pub fn take_mem_trace(&mut self) -> Option<Vec<MemTraceRec>> {
+        self.mem_trace.take()
+    }
+
+    /// Append one record to the address trace, if enabled.
+    fn record_mem_trace(
+        &mut self,
+        c: usize,
+        wi: usize,
+        pc: usize,
+        instr: &Instr,
+        addrs: &[(usize, u64)],
+        conflicts: u64,
+    ) {
+        if self.mem_trace.is_none() {
+            return;
+        }
+        let ws = self.params.warp_size;
+        let (warp_in_block, lanes) = {
+            let w = &self.cores[c].warps[wi];
+            (w.warp_in_block, w.lanes)
+        };
+        let rec = MemTraceRec {
+            pc,
+            space: instr.space.expect("memory instruction"),
+            lanes: addrs.iter().map(|&(l, a)| ((warp_in_block * ws + l) as u32, a)).collect(),
+            conflicts,
+            full_warp: addrs.len() == lanes && lanes == ws,
+        };
+        self.mem_trace.as_mut().expect("checked above").push(rec);
     }
 
     // ---------------- device memory API ----------------
@@ -1048,6 +1109,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         self.stats.global_mem_instrs += 1;
         let launch = self.launch.unwrap();
         let addrs = self.fill_lane_addrs(c, wi, instr, exec_mask);
+        self.record_mem_trace(c, wi, pc, instr, &addrs, 1);
 
         // Functional execution first (program order per warp).
         match instr.op {
@@ -1188,6 +1250,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         let conflicts = self.cores[c].blocks[bslot].smem.conflict_factor(&a32);
         a32.clear();
         self.scratch.a32 = a32;
+        self.record_mem_trace(c, wi, pc, instr, &addrs, conflicts);
         self.stats.smem_accesses += conflicts;
         let done = self.now.max(ready) + self.params.smem_latency + (conflicts - 1);
         match loc {

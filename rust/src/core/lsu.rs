@@ -157,7 +157,7 @@ mod tests {
         assert!(!wa.offloadable(false, home), "divergent warp");
         assert!(!wa.offloadable(true, home + 1), "wrong core");
         // Broadcast (non-contiguous) never offloads.
-        let wb = coalesce(&vec![0u64; 32], &m, 32, cfg.cores_per_proc);
+        let wb = coalesce(&[0u64; 32], &m, 32, cfg.cores_per_proc);
         assert!(!wb.offloadable(true, wb.chunks[0].core_global));
     }
 

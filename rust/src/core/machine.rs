@@ -643,6 +643,17 @@ impl Machine {
     pub fn stats(&self) -> &Stats {
         &self.fe.stats
     }
+
+    /// Record every warp memory access into an address trace (for
+    /// validating the static analysis; see [`crate::analysis`]).
+    pub fn enable_mem_trace(&mut self) {
+        self.fe.enable_mem_trace()
+    }
+
+    /// Take the recorded address trace (and stop recording).
+    pub fn take_mem_trace(&mut self) -> Option<Vec<crate::core::frontend::MemTraceRec>> {
+        self.fe.take_mem_trace()
+    }
 }
 
 #[cfg(test)]

@@ -56,6 +56,24 @@ pub enum Special {
     NCtaIdX,
 }
 
+impl Special {
+    /// The PTX spelling (also accepted back by the assembler).
+    pub fn name(self) -> &'static str {
+        match self {
+            Special::TidX => "%tid.x",
+            Special::NTidX => "%ntid.x",
+            Special::CtaIdX => "%ctaid.x",
+            Special::NCtaIdX => "%nctaid.x",
+        }
+    }
+}
+
+impl fmt::Display for Special {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// An instruction operand.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Operand {
@@ -210,24 +228,34 @@ pub struct Instr {
 }
 
 impl Instr {
-    /// Source registers in the paper's Algorithm-1 convention: for `st`
-    /// and `red` the *value* operand is the source while the address is
-    /// the "destination" side (PTX writes `st [addr], value`).
-    pub fn src_regs(&self) -> Vec<Reg> {
+    /// Registers read by the instruction. Both register-set views
+    /// ([`Instr::src_regs`] and [`Instr::reads`]) are projections of this
+    /// one helper so they cannot drift: the only difference is whether the
+    /// `st`/`red` address register counts as a source (scoreboard view) or
+    /// as the "destination side" (Algorithm-1 convention).
+    fn read_regs(&self, algorithm1: bool) -> Vec<Reg> {
         let mut v: Vec<Reg> = self.srcs.iter().filter_map(|o| o.as_reg()).collect();
-        match self.op {
-            Op::Ld => {
-                if let Some(m) = self.mem {
-                    v.push(m.base);
-                }
+        let addr_is_src = match self.op {
+            Op::St | Op::Red => !algorithm1,
+            _ => true,
+        };
+        if addr_is_src {
+            if let Some(m) = self.mem {
+                v.push(m.base);
             }
-            Op::St | Op::Red => { /* address handled by addr_reg() */ }
-            _ => {}
         }
         if let Some((p, _)) = self.guard {
             v.push(p);
         }
         v
+    }
+
+    /// Source registers in the paper's Algorithm-1 convention: for `st`
+    /// and `red` the *value* operand is the source while the address is
+    /// the "destination" side (PTX writes `st [addr], value`), exposed via
+    /// [`Instr::addr_reg`].
+    pub fn src_regs(&self) -> Vec<Reg> {
+        self.read_regs(true)
     }
 
     /// Destination registers (Algorithm-1 convention: none for `st`/`red`;
@@ -245,14 +273,7 @@ impl Instr {
     /// registers included — this is the scoreboard's view, not
     /// Algorithm 1's).
     pub fn reads(&self) -> Vec<Reg> {
-        let mut v: Vec<Reg> = self.srcs.iter().filter_map(|o| o.as_reg()).collect();
-        if let Some(m) = self.mem {
-            v.push(m.base);
-        }
-        if let Some((p, _)) = self.guard {
-            v.push(p);
-        }
-        v
+        self.read_regs(false)
     }
 
     /// All registers written by the instruction.
@@ -317,7 +338,7 @@ impl fmt::Display for Instr {
                 Operand::Reg(r) => r.to_string(),
                 Operand::ImmI(i) => i.to_string(),
                 Operand::ImmF(x) => format!("{x:?}"),
-                Operand::Special(sp) => format!("{sp:?}").to_lowercase(),
+                Operand::Special(sp) => sp.name().to_string(),
             });
         }
         if let Some(t) = self.target {
@@ -383,5 +404,55 @@ mod tests {
         assert!(s.contains("st.global.f32"), "{s}");
         assert!(s.contains("[%r3+0]"), "{s}");
         assert!(s.contains("%f4"), "{s}");
+    }
+
+    #[test]
+    fn special_operands_display_as_ptx() {
+        let i = Instr {
+            op: Op::Mov,
+            ty: Ty::U32,
+            src_ty: None,
+            dst: Some(Reg::r(1)),
+            srcs: vec![Operand::Special(Special::TidX)],
+            mem: None,
+            space: None,
+            cmp: None,
+            guard: None,
+            target: None,
+            loc: Loc::U,
+        };
+        let s = i.to_string();
+        assert!(s.contains("%tid.x"), "{s}");
+        assert_eq!(Special::NTidX.name(), "%ntid.x");
+        assert_eq!(Special::CtaIdX.name(), "%ctaid.x");
+        assert_eq!(Special::NCtaIdX.name(), "%nctaid.x");
+    }
+
+    #[test]
+    fn st_red_address_asymmetry_between_views() {
+        // For st AND red: Algorithm 1 sees only the value (+ guard) as
+        // sources, while the scoreboard also reads the address register.
+        for op in [Op::St, Op::Red] {
+            let mut i = st_global(Reg::r(1), Reg::f(2));
+            i.op = op;
+            assert_eq!(i.src_regs(), vec![Reg::f(2)], "{op:?}");
+            assert_eq!(i.reads(), vec![Reg::f(2), Reg::r(1)], "{op:?}");
+        }
+        // For ld the address is a source in both views.
+        let ld = Instr {
+            op: Op::Ld,
+            ty: Ty::F32,
+            src_ty: None,
+            dst: Some(Reg::f(2)),
+            srcs: vec![],
+            mem: Some(MemRef { base: Reg::r(1), offset: 0 }),
+            space: Some(Space::Global),
+            cmp: None,
+            guard: None,
+            target: None,
+            loc: Loc::U,
+        };
+        assert_eq!(ld.src_regs(), vec![Reg::r(1)]);
+        assert_eq!(ld.reads(), vec![Reg::r(1)]);
     }
 }

@@ -12,6 +12,11 @@
 //!   analysis (post-dominators), the paper's Algorithm-1 *location
 //!   annotation* pass, liveness, and graph-coloring register allocation
 //!   with separate near-bank / far-bank physical register pools;
+//! * a **static kernel analyzer** ([`analysis`], `mpu lint`): a generic
+//!   monotone dataflow framework over the compiler's CFG with
+//!   uninitialized-use, divergence, barrier-divergence, shared-memory
+//!   race, and memory-access-pattern passes, validated against the
+//!   simulator's dynamically observed address traces;
 //! * a **shared SIMT frontend** ([`core::frontend`]): one implementation
 //!   of block dispatch, warp scheduling, barriers, scoreboard and
 //!   functional execution behind an **event-driven run loop** (warp
@@ -71,6 +76,7 @@ pub mod config;
 pub mod sim;
 pub mod isa;
 pub mod compiler;
+pub mod analysis;
 pub mod mem;
 pub mod dram;
 pub mod noc;

@@ -24,6 +24,14 @@
 //!                                    flags); --check fails on ANY
 //!                                    exact-cycle drift vs the given
 //!                                    golden file
+//!   lint [--workload W] [--machine K] [--tiny] [--json] [--out FILE]
+//!        [--deny warnings]           static kernel analysis (uninit /
+//!                                    divergence / barrier / race /
+//!                                    access-pattern passes) over the
+//!                                    Table-I workloads; exits non-zero
+//!                                    on errors (and on warnings with
+//!                                    --deny warnings); --json prints
+//!                                    the structured report
 //!   check-json <file>                validate a BENCH_suite.json against
 //!                                    schema v1 + correctness (CI gate)
 //!   check-json --compare <old> <new> additionally diff per-workload
@@ -79,6 +87,7 @@ use mpu::coordinator::{
     compile_for, Coordinator, DiskStore, FedEvent, Federation, GcOptions, KernelCache, Service,
     StoreConfig, SweepServer,
 };
+use mpu::analysis::{lint_workload, LintReport};
 use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
 use mpu::workloads::{prepare, Scale, Workload};
 use std::path::Path;
@@ -86,8 +95,10 @@ use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mpu <run|suite|cycles|check-json|serve|submit|status|shutdown|store|compile|validate|list|config> [args]\n\
+        "usage: mpu <run|suite|cycles|lint|check-json|serve|submit|status|shutdown|store|compile|validate|list|config> [args]\n\
          \n  mpu run axpy row_buffers_per_bank=2 --machine ideal\
+         \n  mpu lint --deny warnings --json --out LINT_report.json\
+         \n  mpu lint --workload gemv\
          \n  mpu suite offload_policy=hw --out BENCH_suite.json\
          \n  mpu suite --tiny --variants --strict --perf\
          \n  mpu cycles --tiny --out CYCLES_tiny.json\
@@ -157,7 +168,7 @@ fn out_path(args: &[String]) -> String {
 /// Positional arguments: everything that is not a `--flag` (or its
 /// value) and not a `key=val` configuration pair.
 fn positionals(args: &[String]) -> Vec<String> {
-    const VALUE_FLAGS: [&str; 10] = [
+    const VALUE_FLAGS: [&str; 12] = [
         "--variants",
         "--priority",
         "--addr",
@@ -168,6 +179,8 @@ fn positionals(args: &[String]) -> Vec<String> {
         "--workers",
         "--max-age-days",
         "--max-mb",
+        "--workload",
+        "--deny",
     ];
     let mut out = Vec::new();
     let mut it = args.iter();
@@ -536,6 +549,72 @@ fn main() -> anyhow::Result<()> {
                 );
                 let n: usize = got_vars.values().map(|v| v.as_object().unwrap().len()).sum();
                 println!("{golden_path}: {n} (variant × workload) cycle counts exactly match");
+            }
+        }
+        "lint" => {
+            // Static kernel analysis over the Table-I workloads (or one
+            // of them with --workload). Errors always fail; warnings fail
+            // under `--deny warnings`.
+            let cfg = parse_cfg(rest);
+            let scale = scale_of(rest);
+            if let Some(k) = flag_value(rest, "--machine") {
+                // Linting is machine-independent (all variants share the
+                // warp size), but validate the name for CLI consistency.
+                if MachineKind::from_name(&k).is_none() {
+                    eprintln!("--machine needs one of: mpu gpu ideal mpu_nooff");
+                    std::process::exit(2);
+                }
+            }
+            let deny_warnings = match flag_value(rest, "--deny").as_deref() {
+                None => false,
+                Some("warnings") => true,
+                Some(other) => {
+                    eprintln!("--deny only supports `warnings`, got `{other}`");
+                    std::process::exit(2);
+                }
+            };
+            let which: Vec<Workload> = match flag_value(rest, "--workload") {
+                Some(name) => {
+                    vec![Workload::from_name(&name).unwrap_or_else(|| {
+                        eprintln!("unknown workload `{name}` (see `mpu list`)");
+                        std::process::exit(2);
+                    })]
+                }
+                None => Workload::ALL.to_vec(),
+            };
+            let mut wls = Vec::new();
+            for w in which {
+                wls.push(lint_workload(w, scale, cfg.warp_size)?);
+            }
+            let report = LintReport::new(scale, wls);
+            let json = rest.iter().any(|a| a == "--json");
+            if json {
+                println!("{}", serde_json::to_string_pretty(&report)?);
+            } else {
+                for wl in &report.workloads {
+                    for d in &wl.lint.diagnostics {
+                        println!(
+                            "{}:{}: {}[{}] {}\n    {}",
+                            wl.lint.kernel, d.pc, d.severity, d.code, d.message, d.instr
+                        );
+                    }
+                }
+                println!(
+                    "lint: {} workload(s), {} error(s), {} warning(s), {} info(s)",
+                    report.workloads.len(),
+                    report.errors,
+                    report.warnings,
+                    report.infos
+                );
+            }
+            if let Some(out) = flag_value(rest, "--out") {
+                let mut body = serde_json::to_string_pretty(&report)?;
+                body.push('\n');
+                std::fs::write(&out, body)?;
+                println!("wrote {out}");
+            }
+            if report.errors > 0 || (deny_warnings && report.warnings > 0) {
+                std::process::exit(1);
             }
         }
         "check-json" if rest.first().map(|a| a == "--compare").unwrap_or(false) => {

@@ -1,0 +1,239 @@
+//! Deliberately-misbehaving fixture kernels, one per `mpu lint`
+//! diagnostic code.
+//!
+//! These are **not** part of the workload suite: each one exists to prove
+//! a lint diagnostic live (the lint tests assert each fixture triggers
+//! exactly its code) and, for the two error classes with dynamic
+//! consequences, to demonstrate the misbehavior on the simulator:
+//! the barrier-divergence fixture deadlocks under the reference run loop,
+//! and the shared-memory race fixture produces a different output than
+//! its barrier-fixed twin.
+
+use crate::isa::{KernelSource, LaunchConfig, Reg};
+
+/// A fixture kernel plus the launch/parameter context to lint it under.
+pub struct Fixture {
+    pub name: &'static str,
+    /// The diagnostic code this fixture exists to trigger.
+    pub expect_code: &'static str,
+    pub kernel: KernelSource,
+    pub launch: LaunchConfig,
+    /// Parameter registers with placeholder concrete values for linting
+    /// (tests running on a machine substitute real device addresses).
+    pub params: Vec<(Reg, Option<i64>)>,
+}
+
+fn asm(name: &'static str, params: &[Reg], body: &str) -> KernelSource {
+    KernelSource::assemble(name, params, body).expect("fixture kernel must assemble")
+}
+
+/// E001: `%f1` is stored to global memory but never assigned.
+pub fn uninit_use() -> Fixture {
+    let p = Reg::r(10);
+    Fixture {
+        name: "fix_uninit",
+        expect_code: "E001",
+        kernel: asm(
+            "fix_uninit",
+            &[p],
+            "mov.u32 %r1, %tid.x\n\
+             shl.u32 %r2, %r1, 2\n\
+             add.u32 %r3, %r10, %r2\n\
+             st.global.f32 [%r3+0], %f1\n\
+             exit\n",
+        ),
+        launch: LaunchConfig::new(1, 32),
+        params: vec![(p, Some(4096))],
+    }
+}
+
+/// E002: a `bar.sync` only the lower warp reaches — the upper warp spins
+/// on a shared flag that is set only *after* the barrier, so the block
+/// deadlocks (the reference run loop hits `max_cycles`).
+pub fn barrier_divergence() -> Fixture {
+    Fixture {
+        name: "fix_bar_div",
+        expect_code: "E002",
+        kernel: asm(
+            "fix_bar_div",
+            &[],
+            "mov.u32 %r1, %tid.x\n\
+             mov.u32 %r2, 0\n\
+             setp.lt.s32 %p1, %r1, 32\n\
+             @!%p1 bra SPIN\n\
+             bar.sync\n\
+             mov.u32 %r4, 1\n\
+             red.shared.add.u32 [%r2+0], %r4\n\
+             bra DONE\n\
+             SPIN:\n\
+             ld.shared.u32 %r3, [%r2+0]\n\
+             setp.eq.s32 %p2, %r3, 0\n\
+             @%p2 bra SPIN\n\
+             DONE:\n\
+             exit\n",
+        ),
+        launch: LaunchConfig::with_smem(1, 64, 64),
+        params: vec![],
+    }
+}
+
+fn smem_race_body(with_barrier: bool) -> String {
+    // Every thread stores `t+2` into its own slot, then reads its right
+    // neighbor's slot. The upper warp is delayed by a long uniform loop,
+    // so without a barrier thread 31 reads slot 32 before warp 1 has
+    // written it.
+    format!(
+        "mov.u32 %r1, %tid.x\n\
+         shl.u32 %r2, %r1, 2\n\
+         setp.lt.s32 %p1, %r1, 32\n\
+         @%p1 bra STORE\n\
+         mov.u32 %r5, 0\n\
+         DELAY:\n\
+         add.u32 %r5, %r5, 1\n\
+         setp.lt.s32 %p2, %r5, 200\n\
+         @%p2 bra DELAY\n\
+         STORE:\n\
+         add.u32 %r4, %r1, 2\n\
+         cvt.f32.s32 %f1, %r4\n\
+         st.shared.f32 [%r2+0], %f1\n\
+         {}\
+         ld.shared.f32 %f2, [%r2+4]\n\
+         add.u32 %r3, %r10, %r2\n\
+         st.global.f32 [%r3+0], %f2\n\
+         exit\n",
+        if with_barrier { "bar.sync\n" } else { "" }
+    )
+}
+
+/// E003: store to `smem[4t]`, read `smem[4t+4]` with no barrier between
+/// — thread `t` races with thread `t+1` across the warp boundary.
+pub fn smem_race() -> Fixture {
+    let p = Reg::r(10);
+    Fixture {
+        name: "fix_smem_race",
+        expect_code: "E003",
+        kernel: asm("fix_smem_race", &[p], &smem_race_body(false)),
+        launch: LaunchConfig::with_smem(1, 64, 260),
+        params: vec![(p, Some(4096))],
+    }
+}
+
+/// The barrier-fixed twin of [`smem_race`] — lints clean and gives the
+/// deterministic output the race test compares against.
+pub fn smem_race_fixed() -> Fixture {
+    let p = Reg::r(10);
+    Fixture {
+        name: "fix_smem_race_fixed",
+        expect_code: "",
+        kernel: asm("fix_smem_race_fixed", &[p], &smem_race_body(true)),
+        launch: LaunchConfig::with_smem(1, 64, 260),
+        params: vec![(p, Some(4096))],
+    }
+}
+
+/// W004: shared accesses with a 128-byte lane stride — all 32 lanes hit
+/// bank 0 (predicted and observed 32-way conflict).
+pub fn bank_conflict() -> Fixture {
+    let p = Reg::r(10);
+    Fixture {
+        name: "fix_bank_conflict",
+        expect_code: "W004",
+        kernel: asm(
+            "fix_bank_conflict",
+            &[p],
+            "mov.u32 %r1, %tid.x\n\
+             shl.u32 %r2, %r1, 7\n\
+             cvt.f32.s32 %f1, %r1\n\
+             st.shared.f32 [%r2+0], %f1\n\
+             bar.sync\n\
+             ld.shared.f32 %f2, [%r2+0]\n\
+             shl.u32 %r4, %r1, 2\n\
+             add.u32 %r3, %r10, %r4\n\
+             st.global.f32 [%r3+0], %f2\n\
+             exit\n",
+        ),
+        launch: LaunchConfig::with_smem(1, 32, 4096),
+        params: vec![(p, Some(4096))],
+    }
+}
+
+/// I005: a tid-dependent branch (and nothing else of note).
+pub fn divergent_branch() -> Fixture {
+    Fixture {
+        name: "fix_div_branch",
+        expect_code: "I005",
+        kernel: asm(
+            "fix_div_branch",
+            &[],
+            "mov.u32 %r1, %tid.x\n\
+             setp.lt.s32 %p1, %r1, 7\n\
+             @%p1 bra SKIP\n\
+             mov.u32 %r2, 1\n\
+             SKIP:\n\
+             exit\n",
+        ),
+        launch: LaunchConfig::new(1, 32),
+        params: vec![],
+    }
+}
+
+/// I006: a strided global load (8-byte lane stride) next to a coalesced
+/// store.
+pub fn strided_global() -> Fixture {
+    let (pin, pout) = (Reg::r(10), Reg::r(11));
+    Fixture {
+        name: "fix_strided",
+        expect_code: "I006",
+        kernel: asm(
+            "fix_strided",
+            &[pin, pout],
+            "mov.u32 %r1, %tid.x\n\
+             shl.u32 %r2, %r1, 3\n\
+             add.u32 %r3, %r10, %r2\n\
+             ld.global.f32 %f1, [%r3+0]\n\
+             shl.u32 %r4, %r1, 2\n\
+             add.u32 %r5, %r11, %r4\n\
+             st.global.f32 [%r5+0], %f1\n\
+             exit\n",
+        ),
+        launch: LaunchConfig::new(1, 32),
+        params: vec![(pin, Some(4096)), (pout, Some(8192))],
+    }
+}
+
+/// I007: conflict-free per-thread shared slots with a proper barrier.
+pub fn smem_clean() -> Fixture {
+    let p = Reg::r(10);
+    Fixture {
+        name: "fix_smem_clean",
+        expect_code: "I007",
+        kernel: asm(
+            "fix_smem_clean",
+            &[p],
+            "mov.u32 %r1, %tid.x\n\
+             shl.u32 %r2, %r1, 2\n\
+             cvt.f32.s32 %f1, %r1\n\
+             st.shared.f32 [%r2+0], %f1\n\
+             bar.sync\n\
+             ld.shared.f32 %f2, [%r2+0]\n\
+             add.u32 %r3, %r10, %r2\n\
+             st.global.f32 [%r3+0], %f2\n\
+             exit\n",
+        ),
+        launch: LaunchConfig::with_smem(1, 32, 128),
+        params: vec![(p, Some(4096))],
+    }
+}
+
+/// All diagnostic fixtures, one per code (the fixed race twin excluded).
+pub fn fixtures() -> Vec<Fixture> {
+    vec![
+        uninit_use(),
+        barrier_divergence(),
+        smem_race(),
+        bank_conflict(),
+        divergent_branch(),
+        strided_global(),
+        smem_clean(),
+    ]
+}

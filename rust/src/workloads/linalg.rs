@@ -134,7 +134,7 @@ pub fn pr(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
     let x = dev.alloc_bytes(n * 4);
     let out = dev.alloc_bytes(BLOCKS * 4);
     dev.write_f32(x, &xv);
-    dev.write_f32(out, &vec![0.0; BLOCKS]);
+    dev.write_f32(out, &[0.0; BLOCKS]);
     // Golden: replay the device's exact f32 addition order — per-thread
     // grid-stride accumulation, then the pairwise tree (threads `t < off`
     // add slot `t + off`, barrier, halve `off`). Bit-exact, so tol = 0.

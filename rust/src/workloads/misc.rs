@@ -55,7 +55,8 @@ pub fn hist(scale: Scale, dev: &mut dyn Device) -> Result<Prepared> {
     let pdata = dev.alloc_bytes(n * 4);
     let pbins = dev.alloc_bytes(bins * 4);
     dev.write_f32(pdata, &data);
-    dev.write_f32(pbins, &vec![0.0; bins]);
+    let zero_bins = vec![0.0; bins];
+    dev.write_f32(pbins, &zero_bins);
     let mut golden = vec![0f32; bins];
     for v in &data {
         golden[*v as usize] += 1.0;

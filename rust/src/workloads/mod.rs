@@ -22,6 +22,7 @@ pub mod linalg;
 pub mod stencil;
 pub mod ml;
 pub mod misc;
+pub mod fixtures;
 
 use crate::isa::program::ParamValue;
 use crate::isa::{KernelSource, LaunchConfig};

@@ -7,14 +7,19 @@
 //! correctness under random architecture configurations, and stats
 //! accounting invariants.
 
+use mpu::analysis::dataflow::{self, Analysis};
+use mpu::analysis::defs::ReachingDefs;
+use mpu::analysis::race;
+use mpu::compiler::cfg::Cfg;
 use mpu::compiler::compile;
 use mpu::config::{GpuConfig, MachineConfig, OffloadPolicy, SchedPolicy, SmemLocation};
 use mpu::core::Machine;
 use mpu::gpu::GpuMachine;
 use mpu::isa::program::ParamValue;
-use mpu::isa::{KernelSource, LaunchConfig, Reg};
+use mpu::isa::{KernelSource, LaunchConfig, Op, Reg};
 use mpu::sim::prng::{check_cases, Prng};
 use mpu::workloads::{prepare, Scale, Workload};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Generate a random straight-line (plus one guarded skip) kernel:
 /// loads two inputs, applies a random ALU chain, stores the result.
@@ -177,6 +182,212 @@ fn stats_accounting_invariants() {
         // Work happened and finished.
         assert!(s.instrs_total() > 0 && s.cycles > 0, "{w:?}");
     }
+}
+
+/// Random branchy kernel for the static-analysis properties: labeled
+/// segments with conditional/unconditional branches in any direction,
+/// occasional barriers and guarded writes. These kernels are only ever
+/// *solved*, never executed, so loops need no termination guarantee.
+fn random_cfg_kernel(rng: &mut Prng) -> KernelSource {
+    let n = rng.range(3, 8);
+    let target = |t: usize| if t == n { "END".to_string() } else { format!("L{t}") };
+    let mut body = String::from("mov.u32 %r1, %tid.x\nmov.u32 %r2, 0\n");
+    for s in 0..n {
+        body.push_str(&format!("L{s}:\n"));
+        for _ in 0..rng.range(0, 3) {
+            let d = rng.range(2, 6);
+            let a = rng.range(2, 6);
+            body.push_str(&format!("add.u32 %r{d}, %r{a}, {}\n", rng.below(64)));
+        }
+        if rng.chance(0.25) {
+            body.push_str("bar.sync\n");
+        }
+        match rng.range(0, 4) {
+            0 => {
+                // Conditional branch anywhere (self loops and backedges
+                // included).
+                let t = rng.range(0, n + 1);
+                body.push_str(&format!("setp.lt.s32 %p1, %r1, {}\n", rng.below(32)));
+                body.push_str(&format!("@%p1 bra {}\n", target(t)));
+            }
+            1 => {
+                // Unconditional forward branch (keeps some blocks
+                // unreachable, which the solver must tolerate).
+                let t = rng.range(s + 1, n + 1);
+                body.push_str(&format!("bra {}\n", target(t)));
+            }
+            _ => {}
+        }
+    }
+    body.push_str("END:\nexit\n");
+    KernelSource::assemble("prop_cfg", &[Reg::r(10)], &body).expect("assemble")
+}
+
+type RdFact = BTreeMap<Reg, BTreeSet<usize>>;
+
+/// Pointwise-subset order of reaching-defs facts (missing key = empty).
+fn rd_leq(a: &RdFact, b: &RdFact) -> bool {
+    a.iter().all(|(r, da)| da.is_empty() || b.get(r).is_some_and(|db| da.is_subset(db)))
+}
+
+#[test]
+fn dataflow_solver_reaches_a_true_fixpoint_on_random_cfgs() {
+    check_cases("dataflow_fixpoint", 40, |rng| {
+        let k = random_cfg_kernel(rng);
+        let cfg = Cfg::build(&k.instrs);
+        let a = ReachingDefs { params: vec![Reg::r(10)] };
+        let sol = dataflow::solve(&a, &cfg, &k.instrs);
+        // Termination well under the solver's own panic bound.
+        assert!(sol.iterations <= 64 * cfg.blocks.len().max(1) + 256);
+        // The solution is a genuine fixpoint: every block's input is the
+        // join of its predecessors' outputs and every output is
+        // transfer(input); reachability of inp/out agrees.
+        for b in 0..cfg.blocks.len() {
+            let mut acc = if b == 0 { Some(a.boundary()) } else { None };
+            for &p in &cfg.blocks[b].preds {
+                if let Some(f) = &sol.out[p] {
+                    let f = a.edge(p, b, f.clone());
+                    acc = Some(match acc {
+                        None => f,
+                        Some(cur) => a.join(&cur, &f, b),
+                    });
+                }
+            }
+            assert_eq!(acc, sol.inp[b], "block {b}: input is not the join of its preds");
+            match (&sol.inp[b], &sol.out[b]) {
+                (Some(i), Some(o)) => assert_eq!(
+                    &dataflow::block_transfer(&a, &cfg, &k.instrs, b, i.clone()),
+                    o,
+                    "block {b}: output is not transfer(input)"
+                ),
+                (None, None) => {}
+                _ => panic!("block {b}: inp/out reachability disagree"),
+            }
+        }
+    });
+}
+
+#[test]
+fn reaching_defs_transfer_is_monotone() {
+    check_cases("rd_monotone", 40, |rng| {
+        let k = random_cfg_kernel(rng);
+        let cfg = Cfg::build(&k.instrs);
+        let a = ReachingDefs { params: vec![Reg::r(10)] };
+        let n = k.instrs.len();
+        // A random fact pair small ⊑ big.
+        let mut big: RdFact = BTreeMap::new();
+        let mut small: RdFact = BTreeMap::new();
+        for idx in 1..6 {
+            let defs: BTreeSet<usize> =
+                (0..rng.range(0, 4)).map(|_| rng.below(n as u64) as usize).collect();
+            let sub: BTreeSet<usize> = defs.iter().copied().filter(|_| rng.chance(0.5)).collect();
+            if !defs.is_empty() {
+                big.insert(Reg::r(idx), defs);
+            }
+            if !sub.is_empty() {
+                small.insert(Reg::r(idx), sub);
+            }
+        }
+        assert!(rd_leq(&small, &big), "generator invariant");
+        // Transfer across a random block preserves the order.
+        let b = rng.range(0, cfg.blocks.len());
+        let ts = dataflow::block_transfer(&a, &cfg, &k.instrs, b, small.clone());
+        let tb = dataflow::block_transfer(&a, &cfg, &k.instrs, b, big.clone());
+        assert!(rd_leq(&ts, &tb), "transfer not monotone on block {b}:\n{ts:?}\nvs\n{tb:?}");
+        // Join is an upper bound and idempotent.
+        let j = a.join(&small, &big, b);
+        assert!(rd_leq(&small, &j) && rd_leq(&big, &j), "join is not an upper bound");
+        assert_eq!(a.join(&j, &j, b), j, "join is not idempotent");
+    });
+}
+
+#[test]
+fn barrier_free_reachability_matches_brute_force() {
+    // Straight-line kernels have a closed form: pc j is barrier-free
+    // reachable from pc i iff i precedes j and no barrier (or exit) sits
+    // in between — checked exhaustively in both directions.
+    check_cases("barrier_intervals_straightline", 24, |rng| {
+        let mut body = String::new();
+        for _ in 0..rng.range(4, 12) {
+            if rng.chance(0.3) {
+                body.push_str("bar.sync\n");
+            } else {
+                body.push_str("add.u32 %r2, %r2, 1\n");
+            }
+        }
+        body.push_str("exit\n");
+        let k = KernelSource::assemble("prop_bar", &[Reg::r(10)], &body).expect("assemble");
+        let succs = race::barrier_free_succs(&k.instrs);
+        let n = k.instrs.len();
+        for i in 0..n {
+            for j in 0..n {
+                let got = race::barrier_free_reachable(&succs, i, j);
+                let want = j > i
+                    && !matches!(k.instrs[i].op, Op::Bar | Op::Exit)
+                    && (i + 1..j).all(|m| !matches!(k.instrs[m].op, Op::Bar | Op::Exit));
+                assert_eq!(got, want, "straight-line pair ({i},{j})");
+            }
+        }
+    });
+    // Branchy kernels: soundness against brute-force random walks over
+    // the *full* control-flow successor relation (computed here,
+    // independently of the analysis) — any walked segment that crosses
+    // no barrier must be reachable in the barrier-free graph.
+    check_cases("barrier_intervals_walks", 24, |rng| {
+        let k = random_cfg_kernel(rng);
+        let instrs = &k.instrs;
+        let succs = race::barrier_free_succs(instrs);
+        let n = instrs.len();
+        let full = |pc: usize| -> Vec<usize> {
+            let i = &instrs[pc];
+            match i.op {
+                Op::Exit => vec![],
+                Op::Bra => {
+                    let mut v = Vec::new();
+                    if let Some(t) = i.target {
+                        if t < n {
+                            v.push(t);
+                        }
+                    }
+                    if i.guard.is_some() && pc + 1 < n {
+                        v.push(pc + 1);
+                    }
+                    v
+                }
+                _ => {
+                    if pc + 1 < n {
+                        vec![pc + 1]
+                    } else {
+                        vec![]
+                    }
+                }
+            }
+        };
+        let mut walk = vec![0usize];
+        for _ in 0..64 {
+            let s = full(*walk.last().unwrap());
+            if s.is_empty() {
+                break;
+            }
+            walk.push(s[rng.range(0, s.len())]);
+        }
+        for i in 0..walk.len() {
+            for j in i + 1..walk.len() {
+                let start_ok = instrs[walk[i]].op != Op::Bar;
+                let interior_ok = walk[i + 1..j].iter().all(|&pc| instrs[pc].op != Op::Bar);
+                if start_ok && interior_ok {
+                    assert!(
+                        race::barrier_free_reachable(&succs, walk[i], walk[j]),
+                        "walked {:?} without a barrier, but the analysis calls {} -> {} \
+                         unreachable",
+                        &walk[i..=j],
+                        walk[i],
+                        walk[j]
+                    );
+                }
+            }
+        }
+    });
 }
 
 #[test]
