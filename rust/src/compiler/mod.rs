@@ -20,10 +20,13 @@ pub mod location;
 pub mod liveness;
 pub mod regalloc;
 
+use crate::isa::decoded::{decode_program, MacroOp};
 use crate::isa::instr::Loc;
 use crate::isa::{Instr, KernelSource, Reg};
 use anyhow::Result;
 use std::collections::HashMap;
+use std::ops::Deref;
+use std::sync::Arc;
 
 /// Output of the location-annotation stage, per kernel (Fig. 14).
 /// Serde participates in the on-disk result store
@@ -100,6 +103,49 @@ impl CompiledKernel {
             Loc::U => Loc::F,
             l => l,
         }
+    }
+}
+
+/// A compiled kernel plus its pre-decoded [`MacroOp`] program — the form
+/// the simulator executes. Decoding happens once, here (kernel-cache
+/// time); the issue path then copies fixed-size `MacroOp`s off `ops`
+/// without touching the `Instr` heap representation. `Deref`s to
+/// [`CompiledKernel`] so analysis consumers keep their `Instr` view.
+#[derive(Clone, Debug)]
+pub struct DecodedKernel {
+    pub compiled: CompiledKernel,
+    /// `ops[pc]` is the decoded form of `compiled.instrs[pc]`.
+    pub ops: Vec<MacroOp>,
+}
+
+impl DecodedKernel {
+    pub fn new(compiled: CompiledKernel) -> DecodedKernel {
+        let ops = decode_program(&compiled.instrs, &compiled.reconv, |pc| {
+            compiled.instr_loc(pc)
+        });
+        DecodedKernel { compiled, ops }
+    }
+}
+
+impl Deref for DecodedKernel {
+    type Target = CompiledKernel;
+    fn deref(&self) -> &CompiledKernel {
+        &self.compiled
+    }
+}
+
+impl From<CompiledKernel> for DecodedKernel {
+    fn from(k: CompiledKernel) -> DecodedKernel {
+        DecodedKernel::new(k)
+    }
+}
+
+/// Launch sites pass `CompiledKernel` by value; the machines share the
+/// decoded form behind an `Arc` (the kernel cache hands the same decode
+/// to every sweep point).
+impl From<CompiledKernel> for Arc<DecodedKernel> {
+    fn from(k: CompiledKernel) -> Arc<DecodedKernel> {
+        Arc::new(DecodedKernel::new(k))
     }
 }
 

@@ -289,6 +289,10 @@ pub struct SimperfMethodology {
     /// Parallelism available on the producing host (context for the
     /// serial numbers).
     pub host_threads: usize,
+    /// Timed passes per point; each `wall_ms` is the median of this
+    /// many runs after one untimed warmup pass (append-only v1
+    /// addition; 1 in documents from older producers).
+    pub repeat: usize,
 }
 
 /// One (machine variant × workload) throughput sample.
@@ -319,6 +323,19 @@ pub struct SimperfJson {
 /// Build the throughput document from sweep results (one per
 /// variant × workload, labels are the variant names).
 pub fn simperf_json(scale: Scale, results: &[SweepResult], serial: bool, fresh: bool) -> SimperfJson {
+    simperf_json_repeated(scale, results, serial, fresh, 1)
+}
+
+/// [`simperf_json`] with the timed-pass count recorded in the
+/// methodology (`mpu suite --perf --repeat N`): the caller has already
+/// folded the median wall-ms of `repeat` passes into each result.
+pub fn simperf_json_repeated(
+    scale: Scale,
+    results: &[SweepResult],
+    serial: bool,
+    fresh: bool,
+    repeat: usize,
+) -> SimperfJson {
     let points: Vec<SimperfPoint> = results
         .iter()
         .map(|r| SimperfPoint {
@@ -343,6 +360,7 @@ pub fn simperf_json(scale: Scale, results: &[SweepResult], serial: bool, fresh: 
             os: std::env::consts::OS.to_string(),
             arch: std::env::consts::ARCH.to_string(),
             host_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            repeat: repeat.max(1),
         },
         total_wall_ms,
         geomean_cycles_per_sec: geomean(&cps),
@@ -458,6 +476,9 @@ mod tests {
         assert_eq!(doc.points[0].workload, "axpy");
         assert!(doc.points[0].wall_ms >= 0.0);
         assert!(doc.total_wall_ms >= doc.points[0].wall_ms);
+        assert_eq!(doc.methodology.repeat, 1);
+        let repeated = simperf_json_repeated(Scale::Tiny, &results, true, true, 5);
+        assert_eq!(repeated.methodology.repeat, 5);
         let s = serde_json::to_string(&doc).unwrap();
         for key in [
             "schema_version",
@@ -466,6 +487,7 @@ mod tests {
             "serial",
             "fresh",
             "host_threads",
+            "repeat",
             "total_wall_ms",
             "geomean_cycles_per_sec",
             "points",

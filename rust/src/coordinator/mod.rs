@@ -105,7 +105,7 @@ pub fn run_workload(w: Workload, cfg: &MachineConfig) -> Result<RunReport> {
 /// Run one workload on the MPU machine at a given problem scale.
 pub fn run_workload_scaled(w: Workload, cfg: &MachineConfig, scale: Scale) -> Result<RunReport> {
     let kernel = sweep::compile_kernel(w, cfg.smem_location == SmemLocation::NearBank)?;
-    sweep::run_mpu_with(w, cfg, scale, kernel)
+    sweep::run_mpu_with(w, cfg, scale, kernel, 1)
 }
 
 /// Run one workload on the GPU baseline.
@@ -120,7 +120,7 @@ pub fn run_workload_gpu_scaled(
     scale: Scale,
 ) -> Result<RunReport> {
     let kernel = sweep::compile_kernel(w, cfg.smem_location == SmemLocation::NearBank)?;
-    sweep::run_gpu_with(w, gcfg, scale, kernel)
+    sweep::run_gpu_with(w, gcfg, scale, kernel, 1)
 }
 
 /// MPU-vs-GPU pair for one workload (the Fig. 8 / Fig. 9 primitive).

@@ -17,7 +17,7 @@
 
 use super::store::DiskStore;
 use super::{check, PairReport, RunReport};
-use crate::compiler::{compile_with, CompiledKernel};
+use crate::compiler::{compile_with, DecodedKernel};
 use crate::config::{GpuConfig, IdealConfig, MachineConfig, MachineKind, SmemLocation};
 use crate::core::Machine;
 use crate::energy::{gpu_energy, mpu_energy};
@@ -128,11 +128,20 @@ impl SweepPoint {
     /// target-dispatch site shared by [`Sweep::run_with_cache`] and the
     /// sweep service.
     pub fn simulate(&self, cache: &KernelCache) -> Result<RunReport> {
+        self.simulate_with_threads(cache, 1)
+    }
+
+    /// [`SweepPoint::simulate`] with the machine's issue phase sharded
+    /// across `threads` workers (bit-identical results for any value —
+    /// the sim cache can stay keyed on configuration alone).
+    pub fn simulate_with_threads(&self, cache: &KernelCache, threads: usize) -> Result<RunReport> {
         let kernel = cache.get(self.workload, self.target.smem_near())?;
         match &self.target {
-            Target::Mpu(cfg) => run_mpu_with(self.workload, cfg, self.scale, kernel),
-            Target::Gpu(gcfg, _) => run_gpu_with(self.workload, gcfg, self.scale, kernel),
-            Target::Ideal(icfg, _) => run_ideal_with(self.workload, icfg, self.scale, kernel),
+            Target::Mpu(cfg) => run_mpu_with(self.workload, cfg, self.scale, kernel, threads),
+            Target::Gpu(gcfg, _) => run_gpu_with(self.workload, gcfg, self.scale, kernel, threads),
+            Target::Ideal(icfg, _) => {
+                run_ideal_with(self.workload, icfg, self.scale, kernel, threads)
+            }
         }
     }
 }
@@ -146,18 +155,20 @@ pub struct SweepResult {
 }
 
 /// Compile a workload's kernel without touching a real device (the
-/// kernel text depends only on the workload, not the problem scale).
-pub fn compile_kernel(w: Workload, smem_near: bool) -> Result<CompiledKernel> {
+/// kernel text depends only on the workload, not the problem scale),
+/// pre-decoded into its macro-op form.
+pub fn compile_kernel(w: Workload, smem_near: bool) -> Result<Arc<DecodedKernel>> {
     let mut dev = SizeOnlyDev::default();
     let p = prepare(w, Scale::Tiny, &mut dev)?;
-    compile_with(&p.kernel, smem_near)
+    Ok(Arc::new(DecodedKernel::new(compile_with(&p.kernel, smem_near)?)))
 }
 
 /// Shared compile cache: each (workload, smem placement) kernel is
-/// compiled exactly once per sweep, then cloned to the runners.
+/// compiled *and decoded* exactly once per sweep; runners borrow the
+/// same macro-op array through the `Arc`.
 #[derive(Default)]
 pub struct KernelCache {
-    map: Mutex<HashMap<(Workload, bool), CompiledKernel>>,
+    map: Mutex<HashMap<(Workload, bool), Arc<DecodedKernel>>>,
 }
 
 impl KernelCache {
@@ -165,17 +176,17 @@ impl KernelCache {
         KernelCache::default()
     }
 
-    /// Compiled kernel for a workload under a shared-memory placement.
+    /// Decoded kernel for a workload under a shared-memory placement.
     /// Compilation happens under the lock so a cold key is compiled
     /// exactly once even when a parallel sweep starts on an empty cache
     /// (compiling is microseconds against the simulations it feeds).
-    pub fn get(&self, w: Workload, smem_near: bool) -> Result<CompiledKernel> {
+    pub fn get(&self, w: Workload, smem_near: bool) -> Result<Arc<DecodedKernel>> {
         let mut map = self.map.lock().unwrap();
         if let Some(k) = map.get(&(w, smem_near)) {
-            return Ok(k.clone());
+            return Ok(Arc::clone(k));
         }
         let k = compile_kernel(w, smem_near)?;
-        map.insert((w, smem_near), k.clone());
+        map.insert((w, smem_near), Arc::clone(&k));
         Ok(k)
     }
 
@@ -332,14 +343,16 @@ impl SimCache {
     }
 }
 
-/// Run one workload on the MPU machine with an already-compiled kernel.
+/// Run one workload on the MPU machine with an already-decoded kernel.
 pub fn run_mpu_with(
     w: Workload,
     cfg: &MachineConfig,
     scale: Scale,
-    kernel: CompiledKernel,
+    kernel: Arc<DecodedKernel>,
+    threads: usize,
 ) -> Result<RunReport> {
     let mut m = Machine::new(cfg);
+    m.set_threads(threads);
     let p = prepare(w, scale, &mut m)?;
     let loc_stats = kernel.loc_stats.clone();
     m.launch(kernel, p.launch, &p.params, p.home_fn())?;
@@ -365,14 +378,16 @@ pub fn run_mpu_with(
     })
 }
 
-/// Run one workload on the GPU baseline with an already-compiled kernel.
+/// Run one workload on the GPU baseline with an already-decoded kernel.
 pub fn run_gpu_with(
     w: Workload,
     gcfg: &GpuConfig,
     scale: Scale,
-    kernel: CompiledKernel,
+    kernel: Arc<DecodedKernel>,
+    threads: usize,
 ) -> Result<RunReport> {
     let mut g = GpuMachine::new(gcfg);
+    g.set_threads(threads);
     let p = prepare(w, scale, &mut g)?;
     let loc_stats = kernel.loc_stats.clone();
     g.launch(kernel, p.launch, &p.params)?;
@@ -403,9 +418,11 @@ pub fn run_ideal_with(
     w: Workload,
     icfg: &IdealConfig,
     scale: Scale,
-    kernel: CompiledKernel,
+    kernel: Arc<DecodedKernel>,
+    threads: usize,
 ) -> Result<RunReport> {
     let mut m = IdealMachine::new(icfg);
+    m.set_threads(threads);
     let p = prepare(w, scale, &mut m)?;
     let loc_stats = kernel.loc_stats.clone();
     m.launch(kernel, p.launch, &p.params)?;
@@ -436,11 +453,12 @@ pub struct Sweep {
     points: Vec<SweepPoint>,
     serial: bool,
     reuse: bool,
+    threads: usize,
 }
 
 impl Default for Sweep {
     fn default() -> Sweep {
-        Sweep { points: Vec::new(), serial: false, reuse: true }
+        Sweep { points: Vec::new(), serial: false, reuse: true, threads: 1 }
     }
 }
 
@@ -452,6 +470,14 @@ impl Sweep {
     /// Force serial execution (deterministic profiling, debugging).
     pub fn serial(mut self) -> Sweep {
         self.serial = true;
+        self
+    }
+
+    /// Shard each machine's issue phase across `n` worker threads
+    /// (results are bit-identical for any value — see
+    /// `SimtFrontend::set_threads` — so this composes with the caches).
+    pub fn threads(mut self, n: usize) -> Sweep {
+        self.threads = n.max(1);
         self
     }
 
@@ -507,8 +533,9 @@ impl Sweep {
     pub fn run_with_cache(self, sim_cache: &SimCache) -> Result<Vec<SweepResult>> {
         let cache = KernelCache::new();
         let reuse = self.reuse;
+        let threads = self.threads;
         let run_one = |pt: &SweepPoint| -> Result<SweepResult> {
-            let simulate = || pt.simulate(&cache);
+            let simulate = || pt.simulate_with_threads(&cache, threads);
             let report =
                 if reuse { sim_cache.get_or_run(pt, simulate)? } else { simulate()? };
             Ok(SweepResult { label: pt.label.clone(), scale: pt.scale, report })
@@ -535,9 +562,20 @@ pub fn select<'a>(results: &'a [SweepResult], label: &str) -> Vec<&'a RunReport>
 /// The full Table-I suite, MPU vs GPU, as pairs — run through the
 /// parallel engine (the Fig. 8/9 and `BENCH_suite.json` primitive).
 pub fn run_suite(cfg: &MachineConfig, scale: Scale) -> Result<Vec<PairReport>> {
+    run_suite_threaded(cfg, scale, 1)
+}
+
+/// [`run_suite`] with each machine's issue phase sharded across
+/// `threads` workers (bit-identical results for any value).
+pub fn run_suite_threaded(
+    cfg: &MachineConfig,
+    scale: Scale,
+    threads: usize,
+) -> Result<Vec<PairReport>> {
     let results = Sweep::new()
         .suite_mpu("mpu", scale, cfg)
         .suite_gpu("gpu", scale, cfg)
+        .threads(threads)
         .run()?;
     let mut mpu = Vec::new();
     let mut gpu = Vec::new();
@@ -555,7 +593,17 @@ pub fn run_suite(cfg: &MachineConfig, scale: Scale) -> Result<Vec<PairReport>> {
 /// The full Table-I suite on one [`MachineKind`] variant, in
 /// `Workload::ALL` order.
 pub fn run_suite_kind(cfg: &MachineConfig, scale: Scale, kind: MachineKind) -> Result<Vec<RunReport>> {
-    let results = Sweep::new().suite_kind(kind, scale, cfg).run()?;
+    run_suite_kind_threaded(cfg, scale, kind, 1)
+}
+
+/// [`run_suite_kind`] with per-machine issue-phase sharding.
+pub fn run_suite_kind_threaded(
+    cfg: &MachineConfig,
+    scale: Scale,
+    kind: MachineKind,
+    threads: usize,
+) -> Result<Vec<RunReport>> {
+    let results = Sweep::new().suite_kind(kind, scale, cfg).threads(threads).run()?;
     Ok(results.into_iter().map(|r| r.report).collect())
 }
 

@@ -4,7 +4,7 @@
 //! hardware computes, so the simulator's memory image can be validated
 //! bit-for-bit against the JAX/Pallas golden models.
 
-use crate::isa::{CmpOp, Instr, Op, Operand, Special, Ty};
+use crate::isa::{CmpOp, Instr, Op, Operand, Slot, Special, Ty};
 
 /// Lane context: per-thread special values.
 #[derive(Clone, Copy, Debug)]
@@ -30,17 +30,38 @@ pub fn operand_value(op: &Operand, ctx: &LaneCtx, read: &impl Fn(crate::isa::Reg
     }
 }
 
+/// Evaluate a pre-decoded operand slot for one lane: the [`MacroOp`]
+/// path's twin of [`operand_value`], with the immediate bits inlined.
+///
+/// [`MacroOp`]: crate::isa::MacroOp
+#[inline]
+pub fn slot_value(slot: Slot, ctx: &LaneCtx, read: &impl Fn(crate::isa::Reg) -> u32) -> u32 {
+    match slot {
+        Slot::Reg(r) => read(r),
+        Slot::Imm(bits) => bits,
+        Slot::Tid => ctx.tid,
+        Slot::NTid => ctx.ntid,
+        Slot::CtaId => ctx.ctaid,
+        Slot::NCtaId => ctx.nctaid,
+    }
+}
+
 /// Execute an ALU-class instruction for one lane. `srcs` are the already
 /// evaluated source bit patterns. Returns the destination bit pattern.
-pub fn alu_lane(instr: &Instr, srcs: &[u32]) -> u32 {
+/// Semantics are keyed entirely off `(op, ty, src_ty, cmp)` so both the
+/// `Instr` interpreter and the decoded [`MacroOp`] path share one
+/// implementation ([`alu_lane`] is the `Instr` wrapper).
+///
+/// [`MacroOp`]: crate::isa::MacroOp
+#[inline]
+pub fn alu_eval(op: Op, ty: Ty, src_ty: Ty, cmp: Option<CmpOp>, srcs: &[u32]) -> u32 {
     let f = |i: usize| f32::from_bits(srcs[i]);
     let s = |i: usize| srcs[i] as i32;
     let u = |i: usize| srcs[i];
-    match instr.op {
+    match op {
         Op::Mov => srcs[0],
         Op::Cvt => {
-            let from = instr.src_ty.unwrap_or(instr.ty);
-            match (instr.ty, from) {
+            match (ty, src_ty) {
                 (Ty::F32, Ty::S32) => (s(0) as f32).to_bits(),
                 (Ty::F32, Ty::U32) => (u(0) as f32).to_bits(),
                 (Ty::S32, Ty::F32) => (f(0) as i32) as u32,
@@ -48,25 +69,25 @@ pub fn alu_lane(instr: &Instr, srcs: &[u32]) -> u32 {
                 _ => srcs[0],
             }
         }
-        Op::Add => match instr.ty {
+        Op::Add => match ty {
             Ty::F32 => (f(0) + f(1)).to_bits(),
             _ => u(0).wrapping_add(u(1)),
         },
-        Op::Sub => match instr.ty {
+        Op::Sub => match ty {
             Ty::F32 => (f(0) - f(1)).to_bits(),
             _ => u(0).wrapping_sub(u(1)),
         },
-        Op::Mul => match instr.ty {
+        Op::Mul => match ty {
             Ty::F32 => (f(0) * f(1)).to_bits(),
             Ty::S32 => (s(0).wrapping_mul(s(1))) as u32,
             _ => u(0).wrapping_mul(u(1)),
         },
-        Op::Mad => match instr.ty {
+        Op::Mad => match ty {
             Ty::F32 => (f(0) * f(1) + f(2)).to_bits(),
             Ty::S32 => (s(0).wrapping_mul(s(1)).wrapping_add(s(2))) as u32,
             _ => u(0).wrapping_mul(u(1)).wrapping_add(u(2)),
         },
-        Op::Div => match instr.ty {
+        Op::Div => match ty {
             Ty::F32 => (f(0) / f(1)).to_bits(),
             Ty::S32 => {
                 if s(1) == 0 { 0 } else { (s(0).wrapping_div(s(1))) as u32 }
@@ -75,7 +96,7 @@ pub fn alu_lane(instr: &Instr, srcs: &[u32]) -> u32 {
                 if u(1) == 0 { 0 } else { u(0) / u(1) }
             }
         },
-        Op::Rem => match instr.ty {
+        Op::Rem => match ty {
             Ty::F32 => (f(0) % f(1)).to_bits(),
             Ty::S32 => {
                 if s(1) == 0 { 0 } else { (s(0).wrapping_rem(s(1))) as u32 }
@@ -84,12 +105,12 @@ pub fn alu_lane(instr: &Instr, srcs: &[u32]) -> u32 {
                 if u(1) == 0 { 0 } else { u(0) % u(1) }
             }
         },
-        Op::Min => match instr.ty {
+        Op::Min => match ty {
             Ty::F32 => f(0).min(f(1)).to_bits(),
             Ty::S32 => s(0).min(s(1)) as u32,
             _ => u(0).min(u(1)),
         },
-        Op::Max => match instr.ty {
+        Op::Max => match ty {
             Ty::F32 => f(0).max(f(1)).to_bits(),
             Ty::S32 => s(0).max(s(1)) as u32,
             _ => u(0).max(u(1)),
@@ -98,22 +119,22 @@ pub fn alu_lane(instr: &Instr, srcs: &[u32]) -> u32 {
         Op::Or => u(0) | u(1),
         Op::Xor => u(0) ^ u(1),
         Op::Shl => u(0).wrapping_shl(u(1) & 31),
-        Op::Shr => match instr.ty {
+        Op::Shr => match ty {
             Ty::S32 => (s(0).wrapping_shr(u(1) & 31)) as u32,
             _ => u(0).wrapping_shr(u(1) & 31),
         },
-        Op::Neg => match instr.ty {
+        Op::Neg => match ty {
             Ty::F32 => (-f(0)).to_bits(),
             _ => (s(0).wrapping_neg()) as u32,
         },
-        Op::Abs => match instr.ty {
+        Op::Abs => match ty {
             Ty::F32 => f(0).abs().to_bits(),
             _ => (s(0).wrapping_abs()) as u32,
         },
         Op::Sqrt => f(0).sqrt().to_bits(),
         Op::Setp => {
-            let c = instr.cmp.expect("setp has cmp");
-            let t = match instr.ty {
+            let c = cmp.expect("setp has cmp");
+            let t = match ty {
                 Ty::F32 => cmp_f32(c, f(0), f(1)),
                 Ty::S32 => cmp_i(c, s(0) as i64, s(1) as i64),
                 _ => cmp_i(c, u(0) as i64, u(1) as i64),
@@ -127,8 +148,14 @@ pub fn alu_lane(instr: &Instr, srcs: &[u32]) -> u32 {
                 srcs[1]
             }
         }
-        _ => panic!("alu_lane called on non-ALU op {:?}", instr.op),
+        _ => panic!("alu_eval called on non-ALU op {op:?}"),
     }
+}
+
+/// [`alu_eval`] over the `Instr` representation (analysis/reference use;
+/// the hot path goes through the decoded form directly).
+pub fn alu_lane(instr: &Instr, srcs: &[u32]) -> u32 {
+    alu_eval(instr.op, instr.ty, instr.src_ty.unwrap_or(instr.ty), instr.cmp, srcs)
 }
 
 fn cmp_f32(c: CmpOp, a: f32, b: f32) -> bool {

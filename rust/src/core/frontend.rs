@@ -46,20 +46,49 @@
 //! retained per-cycle reference loop [`SimtFrontend::run_reference`]
 //! (the equivalence tests assert it), which is kept as the timing
 //! oracle for future scheduler work.
+//!
+//! # The decoded issue path
+//!
+//! The frontend executes the kernel's pre-decoded [`MacroOp`] program
+//! (shared behind an `Arc` — the kernel cache decodes once and every
+//! machine borrows the same array). Issue copies one fixed-size,
+//! pointer-free `MacroOp` off the array and dispatches on its
+//! pre-resolved class — no `Instr` clone, no operand-enum walks, no
+//! allocation. The *reference* loop deliberately keeps scanning the
+//! original `Instr` view ([`Warp::instr_ready_at`]), so the tier-1
+//! `run ≡ run_reference` equivalence suite cross-checks the decode on
+//! every workload.
+//!
+//! # Deterministic core-sharded issue (`--threads N`)
+//!
+//! With [`FrontendParams::threads`] > 1 (GTO scheduling), each cycle's
+//! issue pass runs in two phases: a read-only *plan* phase shards cores
+//! across a thread pool and computes, per core, exactly the warp picks
+//! the serial scan would make; a serial *apply* phase then replays the
+//! picks in fixed core/subcore/slot order. This is byte-identical to
+//! the serial loop because nothing issued at cycle `now` can enable a
+//! new issue at `now`: an issued warp's next wake is `now + 1` or
+//! later, barrier releases and block dispatches set `ready_at = now +
+//! 1`, completions are only applied between cycles, and all scheduling
+//! state is core-local — so per-core plans are a pure function of
+//! cycle-top state, and the fixed-order merge touches the memory
+//! system, stats and functional memory in exactly the serial order.
 
-use super::exec::{alu_lane, operand_value, LaneCtx};
+use super::exec::{alu_eval, slot_value, LaneCtx};
 use super::offload::ExecLoc;
 use super::warp::{Warp, WarpState};
-use crate::compiler::CompiledKernel;
+use crate::compiler::DecodedKernel;
 use crate::config::SchedPolicy;
 use crate::isa::instr::Loc;
 use crate::isa::program::ParamValue;
-use crate::isa::{Instr, LaunchConfig, Op, Reg, Space};
+use crate::isa::{LaunchConfig, MacroOp, Op, OpClass, Reg, Slot, Space};
 use crate::mem::SharedMem;
 use crate::sim::Stats;
 use anyhow::{bail, Result};
+use rayon::prelude::*;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 /// Frontend geometry and latency parameters — the subset of a machine
 /// configuration the SIMT pipeline itself needs (memory-system
@@ -84,6 +113,9 @@ pub struct FrontendParams {
     pub mem_bytes: usize,
     /// Deadlock safety valve.
     pub max_cycles: u64,
+    /// Issue-phase worker threads (`1` = serial). `run()` output is
+    /// byte-identical for any value — see the module docs.
+    pub threads: usize,
 }
 
 /// Which register file a completed load's data landed in (drives the
@@ -113,7 +145,7 @@ pub struct AccessCtx<'a> {
     pub core: usize,
     /// Index of the warp within its core (stable for completion routing).
     pub warp_index: usize,
-    pub instr: &'a Instr,
+    pub instr: &'a MacroOp,
     /// `(lane, byte address)` of every executing lane.
     pub addrs: &'a [(usize, u64)],
     /// All `warp_size` lanes executing (Fig. 4 offload qualification).
@@ -221,7 +253,7 @@ pub trait OffloadModel {
         &mut self,
         core: usize,
         w: &mut Warp,
-        instr: &Instr,
+        instr: &MacroOp,
         hint: Loc,
         now: u64,
         stats: &mut Stats,
@@ -234,7 +266,7 @@ pub trait OffloadModel {
 
     /// Retire the destination register at cycle `done` (scoreboard entry
     /// plus register-file placement).
-    fn retire_dst(&mut self, w: &mut Warp, instr: &Instr, loc: ExecLoc, done: u64);
+    fn retire_dst(&mut self, w: &mut Warp, instr: &MacroOp, loc: ExecLoc, done: u64);
 }
 
 /// A resident thread block.
@@ -300,11 +332,25 @@ struct Scratch {
     a32: Vec<u32>,
 }
 
+/// One core's planned issue work for the current cycle (the read-only
+/// phase of the sharded issue pass). Buffers are reused across cycles.
+#[derive(Clone, Default)]
+struct CorePlan {
+    /// `(subcore, warp)` picks in serial scan order.
+    picks: Vec<(usize, usize)>,
+    /// Subcores whose pick loop ended on a failed scan (the apply phase
+    /// tightens their wake lower bound, like the serial loop does).
+    tighten: Vec<usize>,
+}
+
 /// The shared SIMT frontend, generic over the memory system.
 pub struct SimtFrontend<M: MemorySystem + OffloadModel> {
     pub params: FrontendParams,
     pub mem_sys: M,
-    kernel: Option<CompiledKernel>,
+    /// The decoded kernel, shared with the cache that decoded it. The
+    /// issue path reads `kernel.ops`; the reference loop reads
+    /// `kernel.instrs` (see the module docs).
+    kernel: Option<Arc<DecodedKernel>>,
     launch: Option<LaunchConfig>,
     /// `(param register, value bits)` pairs delivered to every warp at
     /// dispatch — invariant per launch, precomputed so block dispatch
@@ -324,6 +370,9 @@ pub struct SimtFrontend<M: MemorySystem + OffloadModel> {
     /// entry per wake refresh until it surfaces).
     wake_heap_cap: usize,
     scratch: Scratch,
+    /// Per-core issue plans for the sharded issue pass (empty unless
+    /// `params.threads > 1`).
+    plans: Vec<CorePlan>,
     /// Address trace, recorded only when enabled (zero cost otherwise).
     mem_trace: Option<Vec<MemTraceRec>>,
 }
@@ -357,8 +406,16 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             wake_heap: BinaryHeap::new(),
             wake_heap_cap: 1024,
             scratch: Scratch::default(),
+            plans: Vec::new(),
             mem_trace: None,
         }
+    }
+
+    /// Shard cores across `n` worker threads during the issue phase
+    /// (`n <= 1` keeps the serial path; either way `run()` output is
+    /// byte-identical — see the module docs).
+    pub fn set_threads(&mut self, n: usize) {
+        self.params.threads = n.max(1);
     }
 
     /// Start recording every warp memory access into an address trace.
@@ -377,7 +434,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         c: usize,
         wi: usize,
         pc: usize,
-        instr: &Instr,
+        space: Space,
         addrs: &[(usize, u64)],
         conflicts: u64,
     ) {
@@ -391,7 +448,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         };
         let rec = MemTraceRec {
             pc,
-            space: instr.space.expect("memory instruction"),
+            space,
             lanes: addrs.iter().map(|&(l, a)| ((warp_in_block * ws + l) as u32, a)).collect(),
             conflicts,
             full_warp: addrs.len() == lanes && lanes == ws,
@@ -471,11 +528,12 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
     /// to round-robin.
     pub fn launch(
         &mut self,
-        kernel: CompiledKernel,
+        kernel: impl Into<Arc<DecodedKernel>>,
         launch: LaunchConfig,
         params: &[ParamValue],
         home_addr: impl Fn(u32) -> Option<u64>,
     ) -> Result<()> {
+        let kernel: Arc<DecodedKernel> = kernel.into();
         let cap =
             self.params.max_warps_per_subcore * self.params.subcores_per_core * self.params.warp_size;
         if launch.block as usize > cap {
@@ -570,10 +628,10 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
                 u64::MAX
             } else {
                 let pc = w.pc();
-                if pc >= kernel.instrs.len() {
+                if pc >= kernel.ops.len() {
                     u64::MAX
                 } else {
-                    let dep = w.instr_ready_at(&kernel.instrs[pc]);
+                    let dep = w.macro_ready_at(&kernel.ops[pc]);
                     if dep == u64::MAX {
                         u64::MAX // unblocked by a load completion later
                     } else {
@@ -680,7 +738,11 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             completions.clear();
             self.mem_sys.drain_completed(self.now, &mut completions);
             self.apply_completions(&completions);
-            let issued = self.issue_all();
+            let issued = if self.params.threads > 1 {
+                self.issue_all_parallel()
+            } else {
+                self.issue_all()
+            };
 
             let work_left = self.blocks_done < grid || !self.mem_sys.idle();
             if !work_left {
@@ -837,6 +899,62 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         issued_any
     }
 
+    /// Two-phase sharded issue pass (`params.threads > 1`): plan
+    /// read-only in parallel, apply serially in fixed order — see the
+    /// module docs for why the result is byte-identical to
+    /// [`SimtFrontend::issue_all`]. Falls back to the serial scan under
+    /// round-robin scheduling, where a plan computed against cycle-top
+    /// state can diverge: mid-cycle block retirement shrinks
+    /// `sc_warps`, shifting the rotation base `rr_next % n` for later
+    /// picks in the same cycle.
+    fn issue_all_parallel(&mut self) -> bool {
+        if self.params.sched_policy != SchedPolicy::Gto {
+            return self.issue_all();
+        }
+        let ncores = self.cores.len();
+        if ncores == 0 {
+            return false;
+        }
+        let mut plans = std::mem::take(&mut self.plans);
+        plans.resize_with(ncores, CorePlan::default);
+
+        // Phase A: read-only planning, cores sharded across the pool.
+        let threads = self.params.threads.min(ncores).max(1);
+        let chunk = ncores.div_ceil(threads);
+        {
+            let params = &self.params;
+            let cores = &self.cores;
+            let now = self.now;
+            plans.par_chunks_mut(chunk).enumerate().for_each(|(t, ps)| {
+                for (i, plan) in ps.iter_mut().enumerate() {
+                    plan_core(params, &cores[t * chunk + i], now, plan);
+                }
+            });
+        }
+
+        // Phase B: serial apply in core/subcore/slot order — exactly
+        // the mutation sequence the serial loop performs, interleaving
+        // each subcore's issues with its wake-bound tightening.
+        let mut issued_any = false;
+        for c in 0..ncores {
+            let mut next = 0;
+            for sc in 0..self.params.subcores_per_core {
+                while next < plans[c].picks.len() && plans[c].picks[next].0 == sc {
+                    let wi = plans[c].picks[next].1;
+                    next += 1;
+                    self.issue(c, wi);
+                    self.cores[c].last_issued[sc] = Some(wi);
+                    issued_any = true;
+                }
+                if plans[c].tighten.contains(&sc) {
+                    self.tighten_sc_min(c, sc);
+                }
+            }
+        }
+        self.plans = plans;
+        issued_any
+    }
+
     /// Reference issue pass used by `run_reference`: full scan, no wake
     /// gating.
     fn issue_all_scan(&mut self) -> bool {
@@ -941,14 +1059,12 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
     }
 
     fn issue_inner(&mut self, c: usize, wi: usize) {
-        // Copy out only the per-pc scalars + one instruction — cloning
-        // the whole kernel here dominated the profile (EXPERIMENTS.md
-        // §Perf iteration 1).
+        // One `Copy` out of the pre-decoded array — no clones, no
+        // allocation, no per-issue operand interpretation (the `Instr`
+        // clone that preceded this dominated the profile; see
+        // EXPERIMENTS.md §Perf iteration 1 and ISSUE.md PR 7).
         let pc = self.cores[c].warps[wi].pc();
-        let (instr, reconv_pc, hint) = {
-            let kernel = self.kernel.as_ref().unwrap();
-            (kernel.instrs[pc].clone(), kernel.reconv[pc], kernel.instr_loc(pc))
-        };
+        let mop = self.kernel.as_ref().unwrap().ops[pc];
 
         if self.params.sched_policy == SchedPolicy::RoundRobin {
             let sc = self.cores[c].warps[wi].subcore;
@@ -966,7 +1082,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         let (exec_mask, active_mask) = {
             let w = &self.cores[c].warps[wi];
             let active = w.active_mask();
-            let mask = match instr.guard {
+            let mask = match mop.guard {
                 None => active,
                 Some((p, neg)) => {
                     let mut m = 0u64;
@@ -982,22 +1098,22 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         };
 
         // Control flow first (always on the front pipeline / far-bank).
-        match instr.op {
-            Op::Bra => {
+        // The dispatch class was resolved at decode time: one jump, no
+        // nested `(op, space)` matching.
+        match mop.class {
+            OpClass::Branch => {
                 self.stats.instrs_far += 1;
-                let target = instr.target.unwrap_or(pc + 1);
-                let rpc = reconv_pc.unwrap_or(usize::MAX);
-                let taken = if instr.guard.is_none() { active_mask } else { exec_mask };
-                self.cores[c].warps[wi].branch(taken, target, pc + 1, rpc);
+                let taken = if mop.guard.is_none() { active_mask } else { exec_mask };
+                self.cores[c].warps[wi].branch(taken, mop.target, pc + 1, mop.reconv);
                 return;
             }
-            Op::Bar => {
+            OpClass::Bar => {
                 self.stats.instrs_far += 1;
                 self.stats.barriers += 1;
                 self.barrier(c, wi, pc);
                 return;
             }
-            Op::Exit => {
+            OpClass::Exit => {
                 self.stats.instrs_far += 1;
                 self.exit(c, wi, active_mask);
                 return;
@@ -1012,36 +1128,30 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             return;
         }
 
-        match (instr.op, instr.space) {
-            (Op::Ld | Op::St | Op::Red, Some(Space::Global)) => {
-                self.issue_global(c, wi, pc, &instr, exec_mask);
-            }
-            (Op::Ld | Op::St | Op::Red, Some(Space::Shared)) => {
-                self.issue_shared(c, wi, pc, &instr, exec_mask, hint);
-            }
-            _ => {
-                self.issue_alu(c, wi, pc, &instr, exec_mask, hint);
-            }
+        match mop.class {
+            OpClass::Global => self.issue_global(c, wi, pc, &mop, exec_mask),
+            OpClass::Shared => self.issue_shared(c, wi, pc, &mop, exec_mask, mop.hint),
+            _ => self.issue_alu(c, wi, pc, &mop, exec_mask, mop.hint),
         }
     }
 
     /// Gather `(lane, byte address)` of every executing lane into the
     /// reusable scratch buffer (caller returns it via `self.scratch`).
-    fn fill_lane_addrs(&mut self, c: usize, wi: usize, instr: &Instr, exec_mask: u64) -> Vec<(usize, u64)> {
+    fn fill_lane_addrs(&mut self, c: usize, wi: usize, instr: &MacroOp, exec_mask: u64) -> Vec<(usize, u64)> {
         let mut addrs = std::mem::take(&mut self.scratch.addrs);
         addrs.clear();
         let w = &self.cores[c].warps[wi];
-        let m = instr.mem.expect("memory instruction");
+        debug_assert!(instr.has_mem, "memory instruction");
         for l in 0..w.lanes {
             if exec_mask >> l & 1 == 1 {
-                let base = w.read(m.base, l);
-                addrs.push((l, (base as i64 + m.offset as i64) as u64));
+                let base = w.read(instr.mem_base, l);
+                addrs.push((l, (base as i64 + instr.mem_offset as i64) as u64));
             }
         }
         addrs
     }
 
-    fn issue_alu(&mut self, c: usize, wi: usize, pc: usize, instr: &Instr, exec_mask: u64, hint: Loc) {
+    fn issue_alu(&mut self, c: usize, wi: usize, pc: usize, instr: &MacroOp, exec_mask: u64, hint: Loc) {
         let launch = self.launch.unwrap();
         let (loc, ready) = self.mem_sys.pre_issue(
             c,
@@ -1057,7 +1167,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             let w = &self.cores[c].warps[wi];
             (w.block, w.warp_in_block, w.lanes)
         };
-        let n_srcs = instr.srcs.len() as u64;
+        let n_srcs = instr.n_srcs as u64;
         let mut srcs = std::mem::take(&mut self.scratch.srcs);
         for lane in 0..lanes {
             if exec_mask >> lane & 1 == 0 {
@@ -1072,11 +1182,11 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
             srcs.clear();
             {
                 let w = &self.cores[c].warps[wi];
-                for o in &instr.srcs {
-                    srcs.push(operand_value(o, &ctx, &|r| w.read(r, lane)));
+                for &slot in instr.src_slots() {
+                    srcs.push(slot_value(slot, &ctx, &|r| w.read(r, lane)));
                 }
             }
-            let v = alu_lane(instr, &srcs);
+            let v = alu_eval(instr.op, instr.ty, instr.src_ty, instr.cmp, &srcs);
             if let Some(d) = instr.dst {
                 self.cores[c].warps[wi].write(d, lane, v);
             }
@@ -1097,7 +1207,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         }
         self.stats.opc_accesses += n_srcs;
         self.stats.alu_lane_ops += exec_mask.count_ones() as u64;
-        let lat = if instr.op.is_sfu() { self.params.sfu_latency } else { self.params.alu_latency };
+        let lat = if instr.is_sfu { self.params.sfu_latency } else { self.params.alu_latency };
         let start = self.mem_sys.alu_start(c, loc, ready, self.now, &mut self.stats);
         let done = start + self.params.opc_latency + lat;
 
@@ -1105,11 +1215,11 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         self.cores[c].warps[wi].set_pc(pc + 1);
     }
 
-    fn issue_global(&mut self, c: usize, wi: usize, pc: usize, instr: &Instr, exec_mask: u64) {
+    fn issue_global(&mut self, c: usize, wi: usize, pc: usize, instr: &MacroOp, exec_mask: u64) {
         self.stats.global_mem_instrs += 1;
         let launch = self.launch.unwrap();
         let addrs = self.fill_lane_addrs(c, wi, instr, exec_mask);
-        self.record_mem_trace(c, wi, pc, instr, &addrs, 1);
+        self.record_mem_trace(c, wi, pc, Space::Global, &addrs, 1);
 
         // Functional execution first (program order per warp).
         match instr.op {
@@ -1139,7 +1249,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
                         nctaid: launch.grid,
                     };
                     let w = &self.cores[c].warps[wi];
-                    let v = operand_value(&src, &ctx, &|r| w.read(r, l));
+                    let v = slot_value(src, &ctx, &|r| w.read(r, l));
                     self.mem_write_u32(a, v);
                 }
             }
@@ -1149,9 +1259,9 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
                 for &(l, a) in &addrs {
                     let w = &self.cores[c].warps[wi];
                     let v = match src {
-                        crate::isa::Operand::Reg(r) => w.read(r, l),
-                        o => operand_value(
-                            &o,
+                        Slot::Reg(r) => w.read(r, l),
+                        s => slot_value(
+                            s,
                             &LaneCtx { tid: 0, ntid: 0, ctaid: 0, nctaid: 0 },
                             &|r| w.read(r, l),
                         ),
@@ -1178,7 +1288,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         self.scratch.addrs = addrs;
     }
 
-    fn issue_shared(&mut self, c: usize, wi: usize, pc: usize, instr: &Instr, exec_mask: u64, hint: Loc) {
+    fn issue_shared(&mut self, c: usize, wi: usize, pc: usize, instr: &MacroOp, exec_mask: u64, hint: Loc) {
         self.stats.shared_mem_instrs += 1;
         let launch = self.launch.unwrap();
         let (loc, ready) = self.mem_sys.pre_issue(
@@ -1225,7 +1335,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
                     };
                     let v = {
                         let w = &self.cores[c].warps[wi];
-                        operand_value(&src, &ctx, &|r| w.read(r, l))
+                        slot_value(src, &ctx, &|r| w.read(r, l))
                     };
                     let smem = &mut self.cores[c].blocks[bslot].smem;
                     if instr.op == Op::St {
@@ -1250,7 +1360,7 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         let conflicts = self.cores[c].blocks[bslot].smem.conflict_factor(&a32);
         a32.clear();
         self.scratch.a32 = a32;
-        self.record_mem_trace(c, wi, pc, instr, &addrs, conflicts);
+        self.record_mem_trace(c, wi, pc, Space::Shared, &addrs, conflicts);
         self.stats.smem_accesses += conflicts;
         let done = self.now.max(ready) + self.params.smem_latency + (conflicts - 1);
         match loc {
@@ -1349,4 +1459,54 @@ impl<M: MemorySystem + OffloadModel> SimtFrontend<M> {
         self.blocks_done += 1;
         while self.try_dispatch_block(c) {}
     }
+}
+
+/// Compute the issue picks the serial scan would make on one core at
+/// cycle `now`, without mutating anything (phase A of
+/// [`SimtFrontend::issue_all_parallel`]; GTO only — see there). Sound
+/// because nothing issued at `now` becomes issueable at `now`: an
+/// issued warp's refreshed wake is `> now`, so excluding
+/// already-picked warps replicates the serial scan's post-issue view.
+fn plan_core(params: &FrontendParams, core: &CoreState, now: u64, plan: &mut CorePlan) {
+    plan.picks.clear();
+    plan.tighten.clear();
+    for sc in 0..params.subcores_per_core {
+        if core.sc_min_wake[sc] > now {
+            continue; // lower bound: nothing here can issue yet
+        }
+        let mut last = core.last_issued[sc];
+        for _ in 0..params.issue_width {
+            match plan_pick(core, sc, now, last, &plan.picks) {
+                Some(wi) => {
+                    plan.picks.push((sc, wi));
+                    last = Some(wi);
+                }
+                None => {
+                    plan.tighten.push(sc);
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// GTO pick over cycle-top state: [`SimtFrontend::pick_warp`] with
+/// already-picked warps excluded (their post-issue wake is `> now`).
+fn plan_pick(
+    core: &CoreState,
+    sc: usize,
+    now: u64,
+    last: Option<usize>,
+    picked: &[(usize, usize)],
+) -> Option<usize> {
+    let can_issue = |wi: usize| -> bool {
+        let w = &core.warps[wi];
+        w.subcore == sc && w.wake_at <= now && !picked.iter().any(|&(_, p)| p == wi)
+    };
+    if let Some(l) = last {
+        if l < core.warps.len() && can_issue(l) {
+            return Some(l);
+        }
+    }
+    core.sc_warps[sc].iter().copied().find(|&wi| can_issue(wi))
 }

@@ -22,18 +22,19 @@ use super::frontend::{
 use super::lsu::{coalesce, WarpAccess};
 use super::offload::{self, ExecLoc, MoveDir};
 use super::warp::Warp;
-use crate::compiler::CompiledKernel;
+use crate::compiler::DecodedKernel;
 use crate::config::{MachineConfig, PipelineMode};
 use crate::dram::{DramRequest, MemController};
 use crate::isa::instr::Loc;
 use crate::isa::program::ParamValue;
-use crate::isa::{Instr, LaunchConfig, Op, Reg, RegClass};
+use crate::isa::{LaunchConfig, MacroOp, Op, Reg, RegClass};
 use crate::mem::AddrMap;
 use crate::noc::{Mesh, OffchipLink, Tsv};
 use crate::sim::stats::TsvTraffic;
 use crate::sim::Stats;
 use anyhow::Result;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 
 /// Simulation events (things that happen at a future cycle on another
 /// component).
@@ -125,6 +126,9 @@ pub struct NearBankMemory {
     routes: HashMap<u64, ChunkRoute>,
     next_id: u64,
     completed: Vec<Completion>,
+    /// Reusable step-2 buffer: the per-issue required-register list
+    /// (kept warm so the offload path never allocates).
+    req_buf: Vec<(Reg, ExecLoc)>,
 }
 
 impl NearBankMemory {
@@ -146,6 +150,7 @@ impl NearBankMemory {
             routes: HashMap::new(),
             next_id: 1,
             completed: Vec::new(),
+            req_buf: Vec::new(),
         }
     }
 
@@ -246,10 +251,22 @@ impl NearBankMemory {
         now: u64,
         stats: &mut Stats,
     ) -> u64 {
-        let moves = offload::plan_moves(required, &w.track);
         let warp_bytes = (self.cfg.warp_size * 4) as u64;
         let mut ready = now;
-        for (r, dir) in moves {
+        // Plan first (all decisions against the pre-move track state —
+        // a duplicated source register plans one move per occurrence,
+        // like `offload::plan_moves`), then execute. The list fits on
+        // the stack: at most 3 sources + an address register.
+        assert!(required.len() <= 8, "required-register list overflow");
+        let mut moves = [(Reg::r(0), MoveDir::ToNb); 8];
+        let mut n_moves = 0;
+        for &(r, want) in required {
+            if let Some(dir) = offload::move_for(r, want, &w.track) {
+                moves[n_moves] = (r, dir);
+                n_moves += 1;
+            }
+        }
+        for &(r, dir) in &moves[..n_moves] {
             let dep = w.reg_ready.get(r);
             let start = now.max(dep);
             let arr = self.links[c].tsv.transfer(start, warp_bytes, TsvTraffic::RegMove, stats);
@@ -292,12 +309,13 @@ impl MemorySystem for NearBankMemory {
         // Address register must be far-bank (LSU); store data stays in
         // the near-bank RF in hybrid mode (value registers are N by
         // §IV-B1 hardware policy) and far-bank on PonB.
-        let mut required: Vec<(Reg, ExecLoc)> = Vec::new();
-        if let Some(a) = instr.addr_reg() {
-            required.push((a, ExecLoc::Far));
+        let mut required = std::mem::take(&mut self.req_buf);
+        required.clear();
+        if instr.has_mem {
+            required.push((instr.mem_base, ExecLoc::Far));
         }
         if is_write {
-            for s in instr.srcs.iter().filter_map(|o| o.as_reg()) {
+            for s in instr.src_regs_iter() {
                 if s.class != RegClass::P {
                     let want = if ponb { ExecLoc::Far } else { ExecLoc::Near };
                     required.push((s, want));
@@ -305,6 +323,7 @@ impl MemorySystem for NearBankMemory {
             }
         }
         let moves_done = self.do_moves(c, w, &required, now, stats);
+        self.req_buf = required;
 
         if offloadable {
             stats.instrs_near += 1;
@@ -516,16 +535,19 @@ impl OffloadModel for NearBankMemory {
         &mut self,
         core: usize,
         w: &mut Warp,
-        instr: &Instr,
+        instr: &MacroOp,
         hint: Loc,
         now: u64,
         stats: &mut Stats,
     ) -> (ExecLoc, u64) {
         // Fig. 3 step 1: location decision; step 2: source-register
-        // locations; step 3: register movement.
+        // locations; step 3: register movement. The step-2 list lives in
+        // a reused buffer — nothing here allocates per issue.
         let loc = offload::instr_location(instr, hint, &self.cfg, &w.track);
-        let required = offload::required_reg_locs(instr, loc, &self.cfg);
+        let mut required = std::mem::take(&mut self.req_buf);
+        offload::required_reg_locs_into(instr, loc, &self.cfg, &mut required);
         let ready = self.do_moves(core, w, &required, now, stats);
+        self.req_buf = required;
         (loc, ready)
     }
 
@@ -545,7 +567,7 @@ impl OffloadModel for NearBankMemory {
         }
     }
 
-    fn retire_dst(&mut self, w: &mut Warp, instr: &Instr, loc: ExecLoc, done: u64) {
+    fn retire_dst(&mut self, w: &mut Warp, instr: &MacroOp, loc: ExecLoc, done: u64) {
         if let Some((d, where_)) = offload::dst_location(instr, loc, &self.cfg) {
             w.reg_ready.insert(d, done);
             match where_ {
@@ -581,6 +603,7 @@ impl FrontendParams {
             // Functional memory: cap to something simulatable.
             mem_bytes: cfg.total_mem_bytes().min(256 << 20),
             max_cycles: cfg.max_cycles,
+            threads: 1,
         }
     }
 }
@@ -617,15 +640,24 @@ impl Machine {
     }
 
     /// Launch a kernel; `home_addr(block)` is the §V-A data-local
-    /// dispatch hint.
+    /// dispatch hint. Accepts a `CompiledKernel` by value (decoded here)
+    /// or a shared `Arc<DecodedKernel>` (the kernel cache's zero-copy
+    /// path).
     pub fn launch(
         &mut self,
-        kernel: CompiledKernel,
+        kernel: impl Into<Arc<DecodedKernel>>,
         launch: LaunchConfig,
         params: &[ParamValue],
         home_addr: impl Fn(u32) -> Option<u64>,
     ) -> Result<()> {
         self.fe.launch(kernel, launch, params, home_addr)
+    }
+
+    /// Shard cores across `n` worker threads during issue (deterministic;
+    /// `run()` output is byte-identical for any `n`). `n <= 1` keeps the
+    /// serial path.
+    pub fn set_threads(&mut self, n: usize) {
+        self.fe.set_threads(n);
     }
 
     /// Run to completion; returns final stats.

@@ -13,11 +13,16 @@
 //! Step 3: register movement — compare against the track table; every
 //! miss is one warp-register (128 B) transfer by the register move
 //! engine.
+//!
+//! All decisions run on the issue hot path, so they operate over the
+//! pre-decoded [`MacroOp`] form: the operand walks use the inlined
+//! register slots and nothing here allocates (step 2 writes into a
+//! caller-owned buffer via [`required_reg_locs_into`]).
 
 use super::warp::TrackTable;
 use crate::config::{MachineConfig, OffloadPolicy, PipelineMode, SmemLocation};
 use crate::isa::instr::Loc;
-use crate::isa::{Instr, Op, Reg, RegClass, Space};
+use crate::isa::{MacroOp, Op, OpClass, Reg, RegClass};
 
 /// Where an instruction executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,7 +42,7 @@ pub enum MoveDir {
 
 /// Step 1 of Fig. 3: decide the execution location.
 pub fn instr_location(
-    instr: &Instr,
+    m: &MacroOp,
     instr_loc_hint: Loc,
     cfg: &MachineConfig,
     track: &TrackTable,
@@ -46,18 +51,14 @@ pub fn instr_location(
         return ExecLoc::Far;
     }
     // Hardware-mandated set (highest priority).
-    match instr.op {
-        Op::Bra | Op::Bar | Op::Exit => return ExecLoc::Far,
-        Op::Ld | Op::St | Op::Red => {
-            return match instr.space {
-                Some(Space::Shared) if cfg.smem_location == SmemLocation::NearBank => ExecLoc::Near,
-                // Far-bank smem executes on the base logic die; global
-                // accesses always go through the far-bank LSU front half
-                // (the near-bank handoff is modelled inside the LSU path).
-                _ => ExecLoc::Far,
-            };
-        }
-        _ => {}
+    match m.class {
+        OpClass::Branch | OpClass::Bar | OpClass::Exit => return ExecLoc::Far,
+        OpClass::Shared if cfg.smem_location == SmemLocation::NearBank => return ExecLoc::Near,
+        // Far-bank smem executes on the base logic die; global accesses
+        // always go through the far-bank LSU front half (the near-bank
+        // handoff is modelled inside the LSU path).
+        OpClass::Shared | OpClass::Global => return ExecLoc::Far,
+        OpClass::Alu => {}
     }
     match cfg.offload_policy {
         OffloadPolicy::AllNearBank => ExecLoc::Near,
@@ -65,114 +66,125 @@ pub fn instr_location(
         OffloadPolicy::CompilerAnnotated => match instr_loc_hint {
             Loc::N => ExecLoc::Near,
             Loc::F | Loc::B => ExecLoc::Far,
-            Loc::U => hardware_default(instr, track),
+            Loc::U => hardware_default(m, track),
         },
-        OffloadPolicy::HardwareDefault => hardware_default(instr, track),
+        OffloadPolicy::HardwareDefault => hardware_default(m, track),
     }
 }
 
 /// The §IV-B1 default policy: offload iff every source register has a
 /// valid near-bank copy; far-bank is the fall-back with full pipeline
-/// support.
-fn hardware_default(instr: &Instr, track: &TrackTable) -> ExecLoc {
-    let srcs: Vec<Reg> = instr
-        .reads()
-        .into_iter()
-        .filter(|r| r.class != RegClass::P)
-        .collect();
-    if !srcs.is_empty() && srcs.iter().all(|r| track.nb_valid(*r)) {
+/// support. Predicates are excluded — they travel with the instruction
+/// packet.
+fn hardware_default(m: &MacroOp, track: &TrackTable) -> ExecLoc {
+    let mut any = false;
+    for r in m.src_regs_iter() {
+        if r.class == RegClass::P {
+            continue;
+        }
+        if !track.nb_valid(r) {
+            return ExecLoc::Far;
+        }
+        any = true;
+    }
+    if any {
         ExecLoc::Near
     } else {
         ExecLoc::Far
     }
 }
 
-/// Required location of each *read* register (step 2 of Fig. 3).
+/// Required location of each *read* register (step 2 of Fig. 3), pushed
+/// into `out` (cleared first) so the per-issue path reuses one buffer.
 /// Predicates never move — the SIMT mask travels with the instruction
 /// packet.
-pub fn required_reg_locs(instr: &Instr, loc: ExecLoc, cfg: &MachineConfig) -> Vec<(Reg, ExecLoc)> {
-    let mut out = Vec::new();
-    match (instr.op, instr.space) {
-        (Op::Ld, Some(Space::Global)) => {
-            if let Some(a) = instr.addr_reg() {
-                out.push((a, ExecLoc::Far));
+pub fn required_reg_locs_into(
+    m: &MacroOp,
+    loc: ExecLoc,
+    cfg: &MachineConfig,
+    out: &mut Vec<(Reg, ExecLoc)>,
+) {
+    out.clear();
+    match (m.op, m.class) {
+        (Op::Ld, OpClass::Global) => {
+            if m.has_mem {
+                out.push((m.mem_base, ExecLoc::Far));
             }
         }
-        (Op::St, Some(Space::Global)) | (Op::Red, Some(Space::Global)) => {
-            if let Some(a) = instr.addr_reg() {
-                out.push((a, ExecLoc::Far));
+        (Op::St | Op::Red, OpClass::Global) => {
+            if m.has_mem {
+                out.push((m.mem_base, ExecLoc::Far));
             }
             let value_loc = if cfg.pipeline_mode == PipelineMode::PonB {
                 ExecLoc::Far
             } else {
                 ExecLoc::Near
             };
-            for s in instr.srcs.iter().filter_map(|o| o.as_reg()) {
+            for s in m.src_regs_iter() {
                 if s.class != RegClass::P {
                     out.push((s, value_loc));
                 }
             }
         }
-        (Op::Ld | Op::St | Op::Red, Some(Space::Shared)) => {
+        (_, OpClass::Shared) => {
             // Shared memory executes wherever the smem lives; all its
             // registers are needed there.
-            for r in instr
-                .srcs
-                .iter()
-                .filter_map(|o| o.as_reg())
-                .chain(instr.addr_reg())
-            {
+            for r in m.src_regs_iter().chain(m.has_mem.then_some(m.mem_base)) {
                 if r.class != RegClass::P {
                     out.push((r, loc));
                 }
             }
         }
         _ => {
-            for r in instr
-                .srcs
-                .iter()
-                .filter_map(|o| o.as_reg())
-                .chain(instr.addr_reg())
-            {
+            for r in m.src_regs_iter().chain(m.has_mem.then_some(m.mem_base)) {
                 if r.class != RegClass::P {
                     out.push((r, loc));
                 }
             }
         }
     }
+}
+
+/// Allocating convenience wrapper over [`required_reg_locs_into`]
+/// (tests and analysis; the simulator uses the buffer form).
+pub fn required_reg_locs(m: &MacroOp, loc: ExecLoc, cfg: &MachineConfig) -> Vec<(Reg, ExecLoc)> {
+    let mut out = Vec::new();
+    required_reg_locs_into(m, loc, cfg, &mut out);
     out
 }
 
-/// Step 3 of Fig. 3: plan the register moves against the track table.
-/// A register valid in *neither* file has never been written (reads as
-/// zero) and is materialized in place without traffic.
-pub fn plan_moves(required: &[(Reg, ExecLoc)], track: &TrackTable) -> Vec<(Reg, MoveDir)> {
-    let mut moves = Vec::new();
-    for (r, want) in required {
-        match want {
-            ExecLoc::Near if !track.nb_valid(*r) && track.fb_valid(*r) => {
-                moves.push((*r, MoveDir::ToNb));
-            }
-            ExecLoc::Far if !track.fb_valid(*r) && track.nb_valid(*r) => {
-                moves.push((*r, MoveDir::ToFb));
-            }
-            _ => {}
-        }
+/// The per-register move decision of step 3: does `r` need a transfer to
+/// be readable at `want`? A register valid in *neither* file has never
+/// been written (reads as zero) and is materialized in place without
+/// traffic.
+#[inline]
+pub fn move_for(r: Reg, want: ExecLoc, track: &TrackTable) -> Option<MoveDir> {
+    match want {
+        ExecLoc::Near if !track.nb_valid(r) && track.fb_valid(r) => Some(MoveDir::ToNb),
+        ExecLoc::Far if !track.fb_valid(r) && track.nb_valid(r) => Some(MoveDir::ToFb),
+        _ => None,
     }
-    moves
+}
+
+/// Step 3 of Fig. 3: plan the register moves against the track table.
+pub fn plan_moves(required: &[(Reg, ExecLoc)], track: &TrackTable) -> Vec<(Reg, MoveDir)> {
+    required
+        .iter()
+        .filter_map(|&(r, want)| move_for(r, want, track).map(|d| (r, d)))
+        .collect()
 }
 
 /// Where the destination register is written (updates the track table).
-pub fn dst_location(instr: &Instr, loc: ExecLoc, cfg: &MachineConfig) -> Option<(Reg, ExecLoc)> {
-    let dst = instr.dst?;
+pub fn dst_location(m: &MacroOp, loc: ExecLoc, cfg: &MachineConfig) -> Option<(Reg, ExecLoc)> {
+    let dst = m.dst?;
     // Predicates physically live far-bank (control logic).
     if dst.class == RegClass::P {
         return Some((dst, ExecLoc::Far));
     }
-    match (instr.op, instr.space) {
+    match (m.op, m.class) {
         // §IV-B2: global-load data always lands in the near-bank RF
         // first (PonB has no near-bank RF).
-        (Op::Ld, Some(Space::Global)) => {
+        (Op::Ld, OpClass::Global) => {
             if cfg.pipeline_mode == PipelineMode::PonB {
                 Some((dst, ExecLoc::Far))
             } else {
@@ -187,6 +199,7 @@ pub fn dst_location(instr: &Instr, loc: ExecLoc, cfg: &MachineConfig) -> Option<
 mod tests {
     use super::*;
     use crate::isa::assemble;
+    use crate::isa::Instr;
 
     fn cfg() -> MachineConfig {
         MachineConfig::scaled()
@@ -198,33 +211,40 @@ mod tests {
         instrs
     }
 
+    /// Decode instruction 0 of `src` (hint is supplied per-test, so the
+    /// macro-op's own pre-resolved hint is irrelevant here).
+    fn mop(src: &str) -> MacroOp {
+        let i = annotated(src);
+        MacroOp::decode(&i[0], 0, None, i[0].loc)
+    }
+
     #[test]
     fn hardware_set_overrides_everything() {
         let cfg = cfg();
         let t = TrackTable::default();
-        let i = annotated("ld.global.f32 %f1, [%r1+0]\nexit");
-        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far);
-        let i = annotated("bar.sync\nexit");
-        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far);
+        let m = mop("ld.global.f32 %f1, [%r1+0]\nexit");
+        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far);
+        let m = mop("bar.sync\nexit");
+        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far);
     }
 
     #[test]
     fn smem_follows_its_location() {
         let mut cfg = cfg();
         let t = TrackTable::default();
-        let i = annotated("st.shared.f32 [%r1+0], %f1\nexit");
-        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Near);
+        let m = mop("st.shared.f32 [%r1+0], %f1\nexit");
+        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Near);
         cfg.smem_location = SmemLocation::FarBank;
-        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far);
+        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far);
     }
 
     #[test]
     fn compiler_hint_decides_alu() {
         let cfg = cfg();
         let t = TrackTable::default();
-        let i = annotated("add.f32 %f1, %f2, %f3\nexit");
-        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Near);
-        assert_eq!(instr_location(&i[0], Loc::F, &cfg, &t), ExecLoc::Far);
+        let m = mop("add.f32 %f1, %f2, %f3\nexit");
+        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Near);
+        assert_eq!(instr_location(&m, Loc::F, &cfg, &t), ExecLoc::Far);
     }
 
     #[test]
@@ -232,11 +252,11 @@ mod tests {
         let mut cfg = cfg();
         cfg.offload_policy = OffloadPolicy::HardwareDefault;
         let mut t = TrackTable::default();
-        let i = annotated("add.f32 %f1, %f2, %f3\nexit");
-        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far, "no NB copies yet");
+        let m = mop("add.f32 %f1, %f2, %f3\nexit");
+        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far, "no NB copies yet");
         t.write_nb(Reg::f(2));
         t.write_nb(Reg::f(3));
-        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Near);
+        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Near);
     }
 
     #[test]
@@ -246,25 +266,25 @@ mod tests {
         let mut t = TrackTable::default();
         t.write_nb(Reg::f(2));
         t.write_nb(Reg::f(3));
-        let i = annotated("add.f32 %f1, %f2, %f3\nexit");
-        assert_eq!(instr_location(&i[0], Loc::N, &cfg, &t), ExecLoc::Far);
-        assert_eq!(dst_location(&i[0], ExecLoc::Far, &cfg), Some((Reg::f(1), ExecLoc::Far)));
+        let m = mop("add.f32 %f1, %f2, %f3\nexit");
+        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far);
+        assert_eq!(dst_location(&m, ExecLoc::Far, &cfg), Some((Reg::f(1), ExecLoc::Far)));
     }
 
     #[test]
     fn ld_global_addr_far_data_near() {
         let cfg = cfg();
-        let i = annotated("ld.global.f32 %f1, [%r1+0]\nexit");
-        let req = required_reg_locs(&i[0], ExecLoc::Far, &cfg);
+        let m = mop("ld.global.f32 %f1, [%r1+0]\nexit");
+        let req = required_reg_locs(&m, ExecLoc::Far, &cfg);
         assert_eq!(req, vec![(Reg::r(1), ExecLoc::Far)]);
-        assert_eq!(dst_location(&i[0], ExecLoc::Far, &cfg), Some((Reg::f(1), ExecLoc::Near)));
+        assert_eq!(dst_location(&m, ExecLoc::Far, &cfg), Some((Reg::f(1), ExecLoc::Near)));
     }
 
     #[test]
     fn st_global_value_near_addr_far() {
         let cfg = cfg();
-        let i = annotated("st.global.f32 [%r1+0], %f1\nexit");
-        let req = required_reg_locs(&i[0], ExecLoc::Far, &cfg);
+        let m = mop("st.global.f32 [%r1+0], %f1\nexit");
+        let req = required_reg_locs(&m, ExecLoc::Far, &cfg);
         assert!(req.contains(&(Reg::r(1), ExecLoc::Far)));
         assert!(req.contains(&(Reg::f(1), ExecLoc::Near)));
     }
@@ -287,11 +307,11 @@ mod tests {
     #[test]
     fn predicates_never_move() {
         let cfg = cfg();
-        let i = annotated("@%p1 add.f32 %f1, %f2, %f3\nexit");
-        let req = required_reg_locs(&i[0], ExecLoc::Near, &cfg);
+        let m = mop("@%p1 add.f32 %f1, %f2, %f3\nexit");
+        let req = required_reg_locs(&m, ExecLoc::Near, &cfg);
         assert!(req.iter().all(|(r, _)| r.class != RegClass::P));
         // And a setp destination lands far-bank even if issued near.
-        let i = annotated("setp.lt.f32 %p1, %f1, %f2\nexit");
-        assert_eq!(dst_location(&i[0], ExecLoc::Near, &cfg), Some((Reg::p(1), ExecLoc::Far)));
+        let m = mop("setp.lt.f32 %p1, %f1, %f2\nexit");
+        assert_eq!(dst_location(&m, ExecLoc::Near, &cfg), Some((Reg::p(1), ExecLoc::Far)));
     }
 }

@@ -2,7 +2,7 @@
 //! the scoreboard view (`reg_ready`), and the register track table that
 //! the offload machinery consults (§IV-B1: *FBValid*/*NBValid* bits).
 
-use crate::isa::{Instr, Operand, Reg, RegClass};
+use crate::isa::{Instr, MacroOp, Operand, Reg, RegClass};
 use std::collections::HashSet;
 
 /// One SIMT-stack entry: execution resumes at `pc` under `mask`, popping
@@ -285,6 +285,19 @@ impl Warp {
         }
         if let Some(d) = i.dst {
             t = t.max(self.reg_ready.get(d));
+        }
+        t
+    }
+
+    /// Scoreboard check over a pre-decoded macro-op: one pass over the
+    /// precomputed read set (must agree with [`Warp::instr_ready_at`] on
+    /// the corresponding `Instr` — the decode builds the set from the
+    /// same fields).
+    #[inline]
+    pub fn macro_ready_at(&self, m: &MacroOp) -> u64 {
+        let mut t = 0u64;
+        for &r in m.read_set() {
+            t = t.max(self.reg_ready.get(r));
         }
         t
     }

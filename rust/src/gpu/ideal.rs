@@ -11,7 +11,7 @@
 //! scheduler, scoreboard, ALU latencies, functional semantics — is the
 //! same frontend code.
 
-use crate::compiler::CompiledKernel;
+use crate::compiler::DecodedKernel;
 use crate::config::IdealConfig;
 use crate::core::frontend::{
     AccessCtx, Completion, FrontendParams, MemorySystem, OffloadModel, SimtFrontend,
@@ -20,9 +20,10 @@ use crate::core::warp::Warp;
 use crate::core::ExecLoc;
 use crate::isa::instr::Loc;
 use crate::isa::program::ParamValue;
-use crate::isa::{Instr, LaunchConfig, Op, Reg};
+use crate::isa::{LaunchConfig, MacroOp, Op, Reg};
 use crate::sim::Stats;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Fixed-latency, infinite-bandwidth memory system.
 pub struct IdealMemory {
@@ -81,7 +82,7 @@ impl OffloadModel for IdealMemory {
         &mut self,
         _core: usize,
         _w: &mut Warp,
-        _instr: &Instr,
+        _instr: &MacroOp,
         _hint: Loc,
         now: u64,
         _stats: &mut Stats,
@@ -93,7 +94,7 @@ impl OffloadModel for IdealMemory {
         now.max(ready)
     }
 
-    fn retire_dst(&mut self, w: &mut Warp, instr: &Instr, _loc: ExecLoc, done: u64) {
+    fn retire_dst(&mut self, w: &mut Warp, instr: &MacroOp, _loc: ExecLoc, done: u64) {
         if let Some(d) = instr.dst {
             w.reg_ready.insert(d, done);
         }
@@ -124,6 +125,7 @@ impl FrontendParams {
             smem_latency: cfg.smem_latency,
             mem_bytes: 256 << 20,
             max_cycles: cfg.max_cycles,
+            threads: 1,
         }
     }
 }
@@ -154,7 +156,7 @@ impl IdealMachine {
 
     pub fn launch(
         &mut self,
-        kernel: CompiledKernel,
+        kernel: impl Into<Arc<DecodedKernel>>,
         launch: LaunchConfig,
         params: &[ParamValue],
     ) -> Result<()> {
@@ -169,6 +171,12 @@ impl IdealMachine {
     /// timing oracle; see `SimtFrontend::run_reference`).
     pub fn run_reference(&mut self) -> Result<Stats> {
         self.fe.run_reference()
+    }
+
+    /// Shard the issue phase across `n` worker threads (byte-identical
+    /// output for any `n` — see `SimtFrontend::set_threads`).
+    pub fn set_threads(&mut self, n: usize) {
+        self.fe.set_threads(n);
     }
 
     /// Statistics accumulated so far.

@@ -10,7 +10,7 @@
 //! This is exactly the comparison the paper makes: identical programs,
 //! compute-centric vs near-bank memory systems.
 
-use crate::compiler::CompiledKernel;
+use crate::compiler::DecodedKernel;
 use crate::config::GpuConfig;
 use crate::core::frontend::{
     AccessCtx, Completion, FrontendParams, MemorySystem, OffloadModel, SimtFrontend,
@@ -19,9 +19,10 @@ use crate::core::warp::Warp;
 use crate::core::ExecLoc;
 use crate::isa::instr::Loc;
 use crate::isa::program::ParamValue;
-use crate::isa::{Instr, LaunchConfig, Op, Reg};
+use crate::isa::{LaunchConfig, MacroOp, Op, Reg};
 use crate::sim::{BandwidthBus, Prng, Stats};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// The compute-centric memory system: coalesced 32-B sectors through a
 /// flat-hit-rate L2 in front of a single chip-wide HBM bandwidth pipe.
@@ -98,7 +99,7 @@ impl OffloadModel for HbmMemory {
         &mut self,
         _core: usize,
         _w: &mut Warp,
-        _instr: &Instr,
+        _instr: &MacroOp,
         _hint: Loc,
         now: u64,
         _stats: &mut Stats,
@@ -111,7 +112,7 @@ impl OffloadModel for HbmMemory {
         now.max(ready)
     }
 
-    fn retire_dst(&mut self, w: &mut Warp, instr: &Instr, _loc: ExecLoc, done: u64) {
+    fn retire_dst(&mut self, w: &mut Warp, instr: &MacroOp, _loc: ExecLoc, done: u64) {
         if let Some(d) = instr.dst {
             w.reg_ready.insert(d, done);
         }
@@ -142,6 +143,7 @@ impl FrontendParams {
             smem_latency: cfg.smem_latency,
             mem_bytes: 256 << 20,
             max_cycles: cfg.max_cycles,
+            threads: 1,
         }
     }
 }
@@ -172,7 +174,7 @@ impl GpuMachine {
 
     pub fn launch(
         &mut self,
-        kernel: CompiledKernel,
+        kernel: impl Into<Arc<DecodedKernel>>,
         launch: LaunchConfig,
         params: &[ParamValue],
     ) -> Result<()> {
@@ -187,6 +189,12 @@ impl GpuMachine {
     /// timing oracle; see `SimtFrontend::run_reference`).
     pub fn run_reference(&mut self) -> Result<Stats> {
         self.fe.run_reference()
+    }
+
+    /// Shard the issue phase across `n` worker threads (byte-identical
+    /// output for any `n` — see `SimtFrontend::set_threads`).
+    pub fn set_threads(&mut self, n: usize) {
+        self.fe.set_threads(n);
     }
 
     /// Statistics accumulated so far.

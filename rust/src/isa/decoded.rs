@@ -1,0 +1,330 @@
+//! Pre-decoded macro-ops: the simulator's dense execution format.
+//!
+//! The assembler/compiler-facing [`Instr`](super::Instr) is built for
+//! analysis — heap-backed `srcs: Vec<Operand>`, `Option`-heavy fields —
+//! and the frontend used to clone one per *issue* and re-interpret its
+//! operands per lane. [`MacroOp`] lowers every instruction **once** (at
+//! kernel-cache time) into a dense, `Copy`, match-free form:
+//!
+//! * operand slots with register indices / immediates inlined
+//!   ([`Slot`]) — no `Operand` enum walk per lane;
+//! * the scoreboard's read set precomputed into a fixed array
+//!   ([`MacroOp::read_set`]) — replaces the allocating
+//!   [`Instr::reads`](super::Instr::reads) walk on the issue path;
+//! * a pre-classified dispatch class ([`OpClass`]) so issue dispatch is
+//!   a single jump instead of nested `(op, space)` matches;
+//! * the re-convergence pc, branch target and location hint resolved
+//!   (sentinels instead of `Option`s, unknown → far-bank applied).
+//!
+//! Decoding is pure lowering: a [`MacroOp`] program must execute
+//! bit-identically to interpreting the `Instr` form (the property tests
+//! assert this on random kernels, and the `run_reference` timing oracle
+//! keeps scanning the `Instr` view so the equivalence suite cross-checks
+//! the decode on every workload).
+
+use super::instr::{CmpOp, Instr, Loc, Op, Operand, Reg, Space, Special, Ty};
+
+/// Maximum source operands of any mini-PTX instruction (`mad`, `selp`).
+pub const MAX_SRCS: usize = 3;
+
+/// Maximum scoreboard read-set size: 3 source registers + memory base +
+/// guard predicate + destination (WAW hazard — the scoreboard tracks the
+/// destination's pending write too).
+pub const MAX_READS: usize = 6;
+
+/// A pre-resolved operand slot: what [`Operand`](super::Operand) becomes
+/// once there is nothing left to look up.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Slot {
+    /// Read this register.
+    Reg(Reg),
+    /// Immediate bit pattern (integer and float immediates unify here).
+    Imm(u32),
+    /// `%tid.x`
+    Tid,
+    /// `%ntid.x`
+    NTid,
+    /// `%ctaid.x`
+    CtaId,
+    /// `%nctaid.x`
+    NCtaId,
+}
+
+impl Slot {
+    fn decode(o: &Operand) -> Slot {
+        match o {
+            Operand::Reg(r) => Slot::Reg(*r),
+            Operand::ImmI(i) => Slot::Imm(*i as u32),
+            Operand::ImmF(f) => Slot::Imm(f.to_bits()),
+            Operand::Special(s) => match s {
+                Special::TidX => Slot::Tid,
+                Special::NTidX => Slot::NTid,
+                Special::CtaIdX => Slot::CtaId,
+                Special::NCtaIdX => Slot::NCtaId,
+            },
+        }
+    }
+}
+
+/// Pre-classified dispatch class: the one jump `issue` makes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpClass {
+    Branch,
+    Bar,
+    Exit,
+    /// `ld/st/red.global`
+    Global,
+    /// `ld/st/red.shared`
+    Shared,
+    Alu,
+}
+
+/// One pre-decoded instruction. `Copy`, fixed-size, pointer-free — the
+/// issue path copies it off the kernel's `ops` array (a small POD move)
+/// and never touches the heap.
+#[derive(Clone, Copy, Debug)]
+pub struct MacroOp {
+    pub class: OpClass,
+    pub op: Op,
+    /// Primary type (destination type for `cvt`).
+    pub ty: Ty,
+    /// Source type, resolved (`cvt`'s `src_ty`, else `ty`).
+    pub src_ty: Ty,
+    pub cmp: Option<CmpOp>,
+    pub dst: Option<Reg>,
+    /// Pre-resolved operand slots; `srcs[..n_srcs]` are valid.
+    pub srcs: [Slot; MAX_SRCS],
+    pub n_srcs: u8,
+    /// Memory base register + byte offset (`has_mem` gates validity).
+    pub mem_base: Reg,
+    pub mem_offset: i32,
+    pub has_mem: bool,
+    /// Guard predicate `@%p` / `@!%p`: (register, negated).
+    pub guard: Option<(Reg, bool)>,
+    /// Branch target pc (fall-through `pc + 1` pre-applied when absent).
+    pub target: usize,
+    /// Re-convergence pc (`usize::MAX` = none).
+    pub reconv: usize,
+    /// Location hint with the unknown → far-bank fallback pre-applied.
+    pub hint: Loc,
+    /// Precomputed scoreboard read set (source registers + memory base +
+    /// guard + destination); `reads[..n_reads]` are valid. Duplicates
+    /// are allowed — consumers take a max/union over the slice.
+    pub reads: [Reg; MAX_READS],
+    pub n_reads: u8,
+    /// Long-latency special-function op (`div`/`rem`/`sqrt`).
+    pub is_sfu: bool,
+}
+
+impl MacroOp {
+    /// Decode one instruction at `pc`. `reconv` is the compiler's
+    /// re-convergence pc for branches; `hint` its location annotation
+    /// (pass [`Loc::U`] for uncompiled kernels — the far-bank fallback
+    /// is applied here).
+    pub fn decode(instr: &Instr, pc: usize, reconv: Option<usize>, hint: Loc) -> MacroOp {
+        let class = match (instr.op, instr.space) {
+            (Op::Bra, _) => OpClass::Branch,
+            (Op::Bar, _) => OpClass::Bar,
+            (Op::Exit, _) => OpClass::Exit,
+            (Op::Ld | Op::St | Op::Red, Some(Space::Shared)) => OpClass::Shared,
+            (Op::Ld | Op::St | Op::Red, _) => OpClass::Global,
+            _ => OpClass::Alu,
+        };
+        assert!(instr.srcs.len() <= MAX_SRCS, "instruction has more than {MAX_SRCS} sources");
+        let mut srcs = [Slot::Imm(0); MAX_SRCS];
+        for (s, o) in srcs.iter_mut().zip(&instr.srcs) {
+            *s = Slot::decode(o);
+        }
+        // The scoreboard read set mirrors `Warp::instr_ready_at` exactly:
+        // source registers, the address base, the guard predicate, and
+        // the destination (its own pending write must land first).
+        let mut reads = [Reg::r(0); MAX_READS];
+        let mut n_reads = 0usize;
+        let mut push = |r: Reg, reads: &mut [Reg; MAX_READS]| {
+            reads[n_reads] = r;
+            n_reads += 1;
+        };
+        for o in &instr.srcs {
+            if let Operand::Reg(r) = o {
+                push(*r, &mut reads);
+            }
+        }
+        if let Some(m) = instr.mem {
+            push(m.base, &mut reads);
+        }
+        if let Some((p, _)) = instr.guard {
+            push(p, &mut reads);
+        }
+        if let Some(d) = instr.dst {
+            push(d, &mut reads);
+        }
+        MacroOp {
+            class,
+            op: instr.op,
+            ty: instr.ty,
+            src_ty: instr.src_ty.unwrap_or(instr.ty),
+            cmp: instr.cmp,
+            dst: instr.dst,
+            srcs,
+            n_srcs: instr.srcs.len() as u8,
+            mem_base: instr.mem.map(|m| m.base).unwrap_or(Reg::r(0)),
+            mem_offset: instr.mem.map(|m| m.offset).unwrap_or(0),
+            has_mem: instr.mem.is_some(),
+            guard: instr.guard,
+            target: instr.target.unwrap_or(pc + 1),
+            reconv: reconv.unwrap_or(usize::MAX),
+            hint: match hint {
+                Loc::U => Loc::F,
+                l => l,
+            },
+            reads,
+            n_reads: n_reads as u8,
+            is_sfu: instr.op.is_sfu(),
+        }
+    }
+
+    /// Valid operand slots.
+    #[inline]
+    pub fn src_slots(&self) -> &[Slot] {
+        &self.srcs[..self.n_srcs as usize]
+    }
+
+    /// Precomputed scoreboard read set (may contain duplicates).
+    #[inline]
+    pub fn read_set(&self) -> &[Reg] {
+        &self.reads[..self.n_reads as usize]
+    }
+
+    /// The address space, for memory classes.
+    #[inline]
+    pub fn space(&self) -> Option<Space> {
+        match self.class {
+            OpClass::Global => Some(Space::Global),
+            OpClass::Shared => Some(Space::Shared),
+            _ => None,
+        }
+    }
+
+    /// Register operands of the source slots (Algorithm-1 sources minus
+    /// the convention split — used by the hardware-default offload
+    /// policy, which inspects every read).
+    #[inline]
+    pub fn src_regs_iter(&self) -> impl Iterator<Item = Reg> + '_ {
+        self.src_slots().iter().filter_map(|s| match s {
+            Slot::Reg(r) => Some(*r),
+            _ => None,
+        })
+    }
+}
+
+/// Decode a whole instruction stream. `reconv[pc]` and `loc(pc)` supply
+/// the compiler's per-pc annotations (see
+/// [`CompiledKernel::instr_loc`](crate::compiler::CompiledKernel::instr_loc)).
+pub fn decode_program(
+    instrs: &[Instr],
+    reconv: &[Option<usize>],
+    loc: impl Fn(usize) -> Loc,
+) -> Vec<MacroOp> {
+    instrs
+        .iter()
+        .enumerate()
+        .map(|(pc, i)| MacroOp::decode(i, pc, reconv.get(pc).copied().flatten(), loc(pc)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::MemRef;
+
+    fn mad() -> Instr {
+        Instr {
+            op: Op::Mad,
+            ty: Ty::F32,
+            src_ty: None,
+            dst: Some(Reg::f(3)),
+            srcs: vec![
+                Operand::Reg(Reg::f(1)),
+                Operand::ImmF(2.0),
+                Operand::Special(Special::TidX),
+            ],
+            mem: None,
+            space: None,
+            cmp: None,
+            guard: Some((Reg::p(1), true)),
+            target: None,
+            loc: Loc::N,
+        }
+    }
+
+    #[test]
+    fn alu_decode_inlines_operands_and_read_set() {
+        let m = MacroOp::decode(&mad(), 7, None, Loc::N);
+        assert_eq!(m.class, OpClass::Alu);
+        assert_eq!(
+            m.src_slots(),
+            &[Slot::Reg(Reg::f(1)), Slot::Imm(2.0f32.to_bits()), Slot::Tid]
+        );
+        // Read set: src reg + guard + dst (immediates and specials drop out).
+        assert_eq!(m.read_set(), &[Reg::f(1), Reg::p(1), Reg::f(3)]);
+        assert_eq!(m.hint, Loc::N);
+        assert_eq!(m.target, 8, "fall-through target pre-applied");
+        assert_eq!(m.reconv, usize::MAX);
+        assert!(!m.is_sfu);
+    }
+
+    #[test]
+    fn memory_decode_carries_base_offset_space() {
+        let st = Instr {
+            op: Op::St,
+            ty: Ty::F32,
+            src_ty: None,
+            dst: None,
+            srcs: vec![Operand::Reg(Reg::f(2))],
+            mem: Some(MemRef { base: Reg::r(5), offset: -8 }),
+            space: Some(Space::Shared),
+            cmp: None,
+            guard: None,
+            target: None,
+            loc: Loc::U,
+        };
+        let m = MacroOp::decode(&st, 0, None, Loc::U);
+        assert_eq!(m.class, OpClass::Shared);
+        assert_eq!(m.space(), Some(Space::Shared));
+        assert!(m.has_mem);
+        assert_eq!((m.mem_base, m.mem_offset), (Reg::r(5), -8));
+        // Scoreboard reads value + address (no dst).
+        assert_eq!(m.read_set(), &[Reg::f(2), Reg::r(5)]);
+        assert_eq!(m.hint, Loc::F, "unknown location falls back to far-bank");
+    }
+
+    #[test]
+    fn branch_decode_resolves_target_and_reconv() {
+        let bra = Instr {
+            op: Op::Bra,
+            ty: Ty::U32,
+            src_ty: None,
+            dst: None,
+            srcs: vec![],
+            mem: None,
+            space: None,
+            cmp: None,
+            guard: Some((Reg::p(0), false)),
+            target: Some(3),
+            loc: Loc::F,
+        };
+        let m = MacroOp::decode(&bra, 1, Some(5), Loc::F);
+        assert_eq!(m.class, OpClass::Branch);
+        assert_eq!(m.target, 3);
+        assert_eq!(m.reconv, 5);
+        assert_eq!(m.read_set(), &[Reg::p(0)]);
+    }
+
+    #[test]
+    fn sfu_flag_matches_op_classification() {
+        let mut i = mad();
+        i.op = Op::Sqrt;
+        i.srcs.truncate(1);
+        assert!(MacroOp::decode(&i, 0, None, Loc::U).is_sfu);
+    }
+}

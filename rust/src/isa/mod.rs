@@ -10,12 +10,15 @@
 //! Submodules:
 //! * [`instr`] — registers, operands, opcodes, instruction struct;
 //! * [`asm`] — the text assembler;
-//! * [`program`] — assembled kernels and launch configuration.
+//! * [`program`] — assembled kernels and launch configuration;
+//! * [`decoded`] — the pre-decoded macro-op form the simulator executes.
 
 pub mod instr;
 pub mod asm;
 pub mod program;
+pub mod decoded;
 
 pub use asm::assemble;
+pub use decoded::{MacroOp, OpClass, Slot};
 pub use instr::{CmpOp, Instr, MemRef, Op, Operand, Reg, RegClass, Space, Special, Ty};
 pub use program::{KernelSource, LaunchConfig};

@@ -2,9 +2,10 @@
 //!
 //! Subcommands:
 //!   run <workload> [key=val ...] [--tiny|--paper-scale]
-//!       [--machine mpu|gpu|ideal|mpu_nooff | --gpu]
+//!       [--machine mpu|gpu|ideal|mpu_nooff | --gpu] [--threads N]
 //!   suite [key=val ...] [--tiny] [--out FILE] [--variants] [--strict]
-//!         [--store DIR] [--perf]     run all 12 workloads (MPU vs GPU,
+//!         [--store DIR] [--threads N] [--perf [--repeat N]]
+//!                                    run all 12 workloads (MPU vs GPU,
 //!                                    plus the ideal-bandwidth roofline
 //!                                    and MPU-no-offload variants with
 //!                                    --variants) through the parallel
@@ -12,11 +13,18 @@
 //!                                    BENCH_suite.json; --strict exits
 //!                                    non-zero on any incorrect run;
 //!                                    --store reuses/feeds the on-disk
-//!                                    result store; --perf additionally
-//!                                    re-simulates every variant ×
-//!                                    workload fresh + serially and
-//!                                    writes the simulator-throughput
-//!                                    report BENCH_simperf.json
+//!                                    result store; --threads shards
+//!                                    each machine's issue phase across
+//!                                    N worker threads (bit-identical
+//!                                    results for any N); --perf
+//!                                    additionally re-simulates every
+//!                                    variant × workload fresh +
+//!                                    serially and writes the
+//!                                    simulator-throughput report
+//!                                    BENCH_simperf.json; --repeat N
+//!                                    times each --perf point N times
+//!                                    after an untimed warmup pass and
+//!                                    records the median wall-ms
 //!   cycles [--tiny] [--out FILE] [--check FILE]
 //!                                    golden per-workload cycle counts
 //!                                    for all four machine variants
@@ -37,6 +45,12 @@
 //!   check-json --compare <old> <new> additionally diff per-workload
 //!                                    cycles; exits non-zero on any >5%
 //!                                    cycle regression vs the baseline
+//!   check-json --compare-perf <old> <new>
+//!                                    diff two BENCH_simperf.json docs
+//!                                    per (variant × workload) point;
+//!                                    exits non-zero on any >20%
+//!                                    simulator-throughput (cycles/s)
+//!                                    regression vs the baseline
 //!   serve [--addr A] [--store DIR] [--store-max-mb N] [--no-store]
 //!         [--workers H:P,H:P,...]
 //!                                    long-running sweep daemon (JSONL
@@ -77,12 +91,14 @@
 
 use mpu::config::{MachineConfig, MachineKind, ServeConfig};
 use mpu::coordinator::bench::{
-    all_correct, simperf_json, suite_json_with_variants, write_simperf_json, write_suite_json,
-    SuiteStats, SIMPERF_JSON, SUITE_JSON,
+    all_correct, simperf_json_repeated, suite_json_with_variants, write_simperf_json,
+    write_suite_json, SuiteStats, SIMPERF_JSON, SUITE_JSON,
 };
 use mpu::coordinator::proto::{self, Request, Response, StreamOutcome, SubmitRequest};
 use mpu::coordinator::report::{f2, Table};
-use mpu::coordinator::sweep::{run_suite, run_suite_kind, SimCache, Sweep, Target};
+use mpu::coordinator::sweep::{
+    run_suite_kind, run_suite_kind_threaded, run_suite_threaded, SimCache, Sweep, Target,
+};
 use mpu::coordinator::{
     compile_for, Coordinator, DiskStore, FedEvent, Federation, GcOptions, KernelCache, Service,
     StoreConfig, SweepServer,
@@ -100,11 +116,13 @@ fn usage() -> ! {
          \n  mpu lint --deny warnings --json --out LINT_report.json\
          \n  mpu lint --workload gemv\
          \n  mpu suite offload_policy=hw --out BENCH_suite.json\
-         \n  mpu suite --tiny --variants --strict --perf\
+         \n  mpu suite --tiny --variants --strict --perf --repeat 3\
+         \n  mpu suite --threads 4\
          \n  mpu cycles --tiny --out CYCLES_tiny.json\
          \n  mpu cycles --tiny --check baselines/CYCLES_tiny.json\
          \n  mpu check-json BENCH_suite.json\
          \n  mpu check-json --compare baselines/BENCH_suite.small.json BENCH_suite.json\
+         \n  mpu check-json --compare-perf baselines/BENCH_simperf.json BENCH_simperf.json\
          \n  mpu serve --addr 127.0.0.1:7117 --store .mpu-store\
          \n  mpu serve --addr 127.0.0.1:7200 --workers 127.0.0.1:7201,127.0.0.1:7202\
          \n  mpu submit suite --tiny --variants mpu,gpu --stream\
@@ -160,6 +178,18 @@ fn flag_value(args: &[String], flag: &str) -> Option<String> {
     None
 }
 
+/// Positive-integer value of a `--flag N` pair, defaulting to 1.
+fn usize_flag(args: &[String], flag: &str) -> usize {
+    flag_value(args, flag)
+        .map(|v| {
+            v.parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or_else(|| {
+                eprintln!("{flag} needs a positive integer, got `{v}`");
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or(1)
+}
+
 /// `--out FILE` value, defaulting to `BENCH_suite.json`.
 fn out_path(args: &[String]) -> String {
     flag_value(args, "--out").unwrap_or_else(|| SUITE_JSON.to_string())
@@ -168,7 +198,7 @@ fn out_path(args: &[String]) -> String {
 /// Positional arguments: everything that is not a `--flag` (or its
 /// value) and not a `key=val` configuration pair.
 fn positionals(args: &[String]) -> Vec<String> {
-    const VALUE_FLAGS: [&str; 12] = [
+    const VALUE_FLAGS: [&str; 14] = [
         "--variants",
         "--priority",
         "--addr",
@@ -181,6 +211,8 @@ fn positionals(args: &[String]) -> Vec<String> {
         "--max-mb",
         "--workload",
         "--deny",
+        "--threads",
+        "--repeat",
     ];
     let mut out = Vec::new();
     let mut it = args.iter();
@@ -287,6 +319,100 @@ fn compare_docs(old_path: &str, new_path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `check-json --compare-perf` gate: per-(variant × workload)
+/// simulator-throughput (cycles/s) deltas between two
+/// `BENCH_simperf.json` documents; >20% regressions fail. Wall-clock
+/// throughput is noisier than cycle counts, so the threshold is wider
+/// than `--compare`'s and only *drops* fail — speedups are the point.
+fn compare_perf_docs(old_path: &str, new_path: &str) -> anyhow::Result<()> {
+    const REGRESSION_PCT: f64 = 20.0;
+    let load = |p: &str| -> anyhow::Result<serde_json::Value> {
+        Ok(serde_json::from_str(&std::fs::read_to_string(p)?)?)
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    anyhow::ensure!(
+        old["scale"] == new["scale"],
+        "scale mismatch: baseline is {} but candidate is {}",
+        old["scale"],
+        new["scale"]
+    );
+    let points = |doc: &serde_json::Value| -> Vec<(String, String, f64)> {
+        doc["points"]
+            .as_array()
+            .map(|ps| {
+                ps.iter()
+                    .filter_map(|p| {
+                        Some((
+                            p["variant"].as_str()?.to_string(),
+                            p["workload"].as_str()?.to_string(),
+                            p["cycles_per_sec"].as_f64()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let old_ps = points(&old);
+    let new_ps = points(&new);
+    anyhow::ensure!(!old_ps.is_empty(), "baseline {old_path} has no throughput points");
+    anyhow::ensure!(!new_ps.is_empty(), "candidate {new_path} has no throughput points");
+    let mut t = Table::new(
+        "simulator-throughput deltas vs baseline (positive = faster)",
+        &["variant", "workload", "base Mcyc/s", "new Mcyc/s", "Δ%"],
+    );
+    let mut regressions: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+    for (variant, workload, new_cps) in &new_ps {
+        let Some((_, _, old_cps)) =
+            old_ps.iter().find(|(v, w, _)| v == variant && w == workload)
+        else {
+            t.row(vec![variant.clone(), workload.clone(), "(new)".into(), f2(new_cps / 1e6), String::new()]);
+            continue;
+        };
+        let delta = (new_cps - old_cps) / old_cps.max(1e-9) * 100.0;
+        t.row(vec![
+            variant.clone(),
+            workload.clone(),
+            f2(old_cps / 1e6),
+            f2(new_cps / 1e6),
+            format!("{delta:+.1}"),
+        ]);
+        compared += 1;
+        if delta < -REGRESSION_PCT {
+            regressions.push(format!(
+                "{variant}/{workload} cycles/s {:.2e} -> {:.2e} ({delta:+.1}%)",
+                old_cps, new_cps
+            ));
+        }
+    }
+    for (variant, workload, _) in &old_ps {
+        if !new_ps.iter().any(|(v, w, _)| v == variant && w == workload) {
+            regressions
+                .push(format!("{variant}/{workload} present in baseline but missing from candidate"));
+        }
+    }
+    t.emit("compare-perf");
+    if let (Some(og), Some(ng)) = (
+        old["geomean_cycles_per_sec"].as_f64(),
+        new["geomean_cycles_per_sec"].as_f64(),
+    ) {
+        println!(
+            "geomean throughput: baseline {:.2} -> candidate {:.2} Mcycles/s ({:+.1}%)",
+            og / 1e6,
+            ng / 1e6,
+            (ng - og) / og.max(1e-9) * 100.0
+        );
+    }
+    println!("compared {compared} points against {old_path}");
+    anyhow::ensure!(
+        regressions.is_empty(),
+        "simulator-throughput regressions over {REGRESSION_PCT}%:\n  {}",
+        regressions.join("\n  ")
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
@@ -331,7 +457,10 @@ fn main() -> anyhow::Result<()> {
                 }
             }
             let target = Target::for_kind(kind, &cfg);
-            let results = Sweep::new().point(kind.name(), w, scale, target).run()?;
+            let results = Sweep::new()
+                .point(kind.name(), w, scale, target)
+                .threads(usize_flag(rest, "--threads"))
+                .run()?;
             let r = &results[0].report;
             match kind {
                 MachineKind::Gpu | MachineKind::IdealBw => println!(
@@ -369,12 +498,13 @@ fn main() -> anyhow::Result<()> {
                 let store = DiskStore::open(StoreConfig::new(dir))?;
                 SimCache::global().attach_store(Arc::new(store));
             }
+            let threads = usize_flag(rest, "--threads");
             let t0 = std::time::Instant::now();
-            let pairs = run_suite(&cfg, scale)?;
+            let pairs = run_suite_threaded(&cfg, scale, threads)?;
             let mut variants: Vec<(String, Vec<mpu::RunReport>)> = Vec::new();
             if with_variants {
                 for kind in [MachineKind::IdealBw, MachineKind::MpuNoOffload] {
-                    let runs = run_suite_kind(&cfg, scale, kind)?;
+                    let runs = run_suite_kind_threaded(&cfg, scale, kind, threads)?;
                     variants.push((kind.name().to_string(), runs));
                 }
             }
@@ -425,13 +555,40 @@ fn main() -> anyhow::Result<()> {
                 // (variant × workload) point fresh and serially —
                 // bypassing the caches and the rayon pool — so the
                 // wall-times measure the simulator's hot loop itself.
-                let mut sw = Sweep::new();
-                for kind in MachineKind::ALL {
-                    sw = sw.suite_kind(kind, scale, &cfg);
-                }
+                // With --repeat N each point is timed N times (after one
+                // untimed warmup pass) and the median wall-ms recorded,
+                // damping scheduler noise in the committed trajectory.
+                let repeat = usize_flag(rest, "--repeat");
+                let build = || {
+                    let mut sw = Sweep::new();
+                    for kind in MachineKind::ALL {
+                        sw = sw.suite_kind(kind, scale, &cfg);
+                    }
+                    sw.fresh().serial()
+                };
                 let t0 = std::time::Instant::now();
-                let results = sw.fresh().serial().run()?;
-                let perf = simperf_json(scale, &results, true, true);
+                if repeat > 1 {
+                    build().run()?; // warmup: touch every allocation path once
+                }
+                let mut passes = Vec::with_capacity(repeat);
+                for _ in 0..repeat {
+                    passes.push(build().run()?);
+                }
+                let mut results = passes.remove(0);
+                for (i, r) in results.iter_mut().enumerate() {
+                    let mut walls: Vec<f64> = std::iter::once(r.report.sim_wall_ms)
+                        .chain(passes.iter().map(|p| p[i].report.sim_wall_ms))
+                        .collect();
+                    walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let median = walls[(walls.len() - 1) / 2];
+                    r.report.sim_wall_ms = median;
+                    r.report.sim_cycles_per_sec = if median > 0.0 {
+                        r.report.cycles as f64 / (median / 1e3)
+                    } else {
+                        0.0
+                    };
+                }
+                let perf = simperf_json_repeated(scale, &results, true, true, repeat);
                 let mut t = Table::new(
                     "simulator throughput (fresh, serial)",
                     &["variant", "workload", "cycles", "wall_ms", "Mcyc/s"],
@@ -616,6 +773,14 @@ fn main() -> anyhow::Result<()> {
             if report.errors > 0 || (deny_warnings && report.warnings > 0) {
                 std::process::exit(1);
             }
+        }
+        "check-json" if rest.first().map(|a| a == "--compare-perf").unwrap_or(false) => {
+            let (Some(old), Some(new)) = (rest.get(1), rest.get(2)) else {
+                eprintln!("check-json --compare-perf needs <baseline> <candidate>");
+                std::process::exit(2);
+            };
+            compare_perf_docs(old, new)?;
+            println!("{new}: no simulator-throughput regressions over 20% vs {old}");
         }
         "check-json" if rest.first().map(|a| a == "--compare").unwrap_or(false) => {
             let (Some(old), Some(new)) = (rest.get(1), rest.get(2)) else {

@@ -3,12 +3,15 @@
 //! tolerance); the paper's headline orderings hold on the scaled
 //! machine.
 
+use mpu::compiler::{compile, DecodedKernel};
 use mpu::config::{GpuConfig, IdealConfig, MachineConfig, MachineKind, OffloadPolicy, PipelineMode, SmemLocation};
 use mpu::coordinator::bench::{all_correct, suite_json, suite_json_with_variants, write_suite_json, SUITE_JSON};
 use mpu::coordinator::sweep::{compile_kernel, run_suite, run_suite_kind, Sweep};
 use mpu::coordinator::{geomean, run_pair, run_workload_scaled};
-use mpu::workloads::{prepare, Scale, Workload};
+use mpu::isa::program::ParamValue;
+use mpu::workloads::{fixtures, prepare, Scale, Workload};
 use std::path::Path;
+use std::sync::Arc;
 
 #[test]
 fn all_workloads_correct_on_mpu() {
@@ -196,6 +199,86 @@ fn event_driven_loop_matches_reference_on_gpu_and_ideal() {
         ids.launch(kernel, pis.launch, &pis.params).unwrap();
         let sis = ids.run_reference().unwrap();
         assert_eq!(sif, sis, "ideal stats drift on {w:?}");
+    }
+}
+
+#[test]
+fn event_driven_loop_matches_reference_on_fixture_kernels() {
+    // The lint fixtures stress corner paths the Table-I suite never
+    // takes: uninitialized register reads, a deadlocking divergent
+    // barrier, a live shared-memory race, 32-way bank conflicts. The
+    // run ≡ run_reference contract must hold there too — including
+    // agreeing on the max_cycles bail of the deadlocking fixture.
+    let mut cfg = MachineConfig::scaled();
+    cfg.max_cycles = 100_000;
+    for f in fixtures::fixtures() {
+        let kernel: Arc<DecodedKernel> = compile(&f.kernel).unwrap().into();
+        let params: Vec<ParamValue> =
+            f.params.iter().map(|&(_, v)| ParamValue::U32(v.unwrap_or(4096) as u32)).collect();
+
+        let mut fast = mpu::core::Machine::new(&cfg);
+        fast.launch(kernel.clone(), f.launch, &params, |_| None).unwrap();
+        let rf = fast.run();
+
+        let mut slow = mpu::core::Machine::new(&cfg);
+        slow.launch(kernel, f.launch, &params, |_| None).unwrap();
+        let rs = slow.run_reference();
+
+        if f.expect_code == "E002" {
+            // Divergent barrier: both loops must bail at max_cycles.
+            let ef = rf.expect_err("event-driven run must deadlock on the divergent barrier");
+            let es = rs.expect_err("reference run must deadlock on the divergent barrier");
+            assert!(ef.to_string().contains("max_cycles"), "{}: {ef}", f.name);
+            assert!(es.to_string().contains("max_cycles"), "{}: {es}", f.name);
+            continue;
+        }
+        let sf = rf.unwrap_or_else(|e| panic!("{} failed on run: {e}", f.name));
+        let ss = rs.unwrap_or_else(|e| panic!("{} failed on run_reference: {e}", f.name));
+        assert_eq!(sf, ss, "event-driven stats drift from reference on fixture {}", f.name);
+        // The fixtures store through placeholder pointer params (4096 /
+        // 8192), so comparing the low memory image covers their output.
+        assert_eq!(
+            fast.read_u32s(0, 4096),
+            slow.read_u32s(0, 4096),
+            "memory image drift on fixture {}",
+            f.name
+        );
+    }
+}
+
+#[test]
+fn sharded_issue_is_byte_identical_to_serial() {
+    // The `--threads` determinism contract: sharding the issue phase
+    // across worker threads must not change a single bit of any report —
+    // same cycles, same stats, same output image — on all four machine
+    // variants × twelve workloads. `fresh()` bypasses the SimCache so
+    // the sharded sweep actually re-simulates (the cache is keyed on
+    // configuration alone precisely because of this guarantee).
+    let cfg = MachineConfig::scaled();
+    let mut serial = Sweep::new();
+    let mut sharded = Sweep::new();
+    for kind in MachineKind::ALL {
+        serial = serial.suite_kind(kind, Scale::Tiny, &cfg);
+        sharded = sharded.suite_kind(kind, Scale::Tiny, &cfg);
+    }
+    let a = serial.fresh().run().unwrap();
+    let b = sharded.fresh().threads(3).run().unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.label, y.label, "sweep order must match");
+        assert_eq!(x.report.workload, y.report.workload);
+        assert_eq!(
+            x.report.stats, y.report.stats,
+            "stats drift with --threads on {}/{:?}",
+            x.label, x.report.workload
+        );
+        let xa: Vec<u32> = x.report.output.iter().map(|v| v.to_bits()).collect();
+        let ya: Vec<u32> = y.report.output.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(
+            xa, ya,
+            "output bits drift with --threads on {}/{:?}",
+            x.label, x.report.workload
+        );
     }
 }
 
