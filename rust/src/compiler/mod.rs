@@ -104,6 +104,28 @@ impl CompiledKernel {
             l => l,
         }
     }
+
+    /// The autotuner's candidate pc set: ALU instructions, i.e. the pcs
+    /// whose location the offload policy actually decides. Control flow,
+    /// barriers and memory ops are hardware-mandated in
+    /// `core::offload::instr_location` and flipping them is a no-op.
+    pub fn tunable_pcs(&self) -> Vec<usize> {
+        (0..self.instrs.len()).filter(|&pc| self.instrs[pc].op.is_alu()).collect()
+    }
+
+    /// Export the Algorithm-1 annotations over the tunable pc set as an
+    /// explicit policy-table fragment — the autotuner's seed candidate.
+    /// `Loc::U` annotations are left out: under `OffloadPolicy::Explicit`
+    /// an absent entry falls back to the compiler hint and then the
+    /// hardware default, which is exactly what `CompilerAnnotated` does,
+    /// so this table reproduces the heuristic bit-for-bit in timing.
+    pub fn seed_policy(&self) -> std::collections::BTreeMap<u32, Loc> {
+        self.tunable_pcs()
+            .into_iter()
+            .filter(|&pc| self.instrs[pc].loc != Loc::U)
+            .map(|pc| (pc as u32, self.instrs[pc].loc))
+            .collect()
+    }
 }
 
 /// A compiled kernel plus its pre-decoded [`MacroOp`] program — the form

@@ -24,6 +24,54 @@ pub enum OffloadPolicy {
     AllNearBank,
     /// Naive: keep every instruction far-bank.
     AllFarBank,
+    /// Consult the explicit per-kernel, per-pc [`OffloadPolicyTable`]
+    /// first; instructions the table leaves `U` fall back to the
+    /// compiler annotation, then to the hardware default — so an empty
+    /// table reproduces `CompilerAnnotated` exactly. This is the policy
+    /// the `mpu tune` autotuner searches over.
+    Explicit,
+}
+
+/// An explicit offload policy: per-kernel, per-pc `Loc` overrides.
+///
+/// This is the artifact the autotuner searches over. `BTreeMap`s (not
+/// hash maps) keep the serde output deterministically ordered, so the
+/// table folds into the FNV-1a config fingerprint stably: every
+/// candidate policy is just another config hash, and the `SimCache` /
+/// `DiskStore` / federation layers dedup its evaluation for free.
+#[derive(Clone, Debug, Default, PartialEq, Eq, serde::Serialize, serde::Deserialize)]
+pub struct OffloadPolicyTable {
+    /// kernel name -> (pc -> forced location). `Loc::U` entries are
+    /// legal and mean "no override at this pc".
+    pub kernels: std::collections::BTreeMap<String, std::collections::BTreeMap<u32, crate::isa::instr::Loc>>,
+}
+
+impl OffloadPolicyTable {
+    /// True when no kernel carries any override.
+    pub fn is_empty(&self) -> bool {
+        self.kernels.values().all(|m| m.is_empty())
+    }
+
+    /// Force `loc` at `pc` of `kernel` (overwrites a previous entry).
+    pub fn set(&mut self, kernel: &str, pc: u32, loc: crate::isa::instr::Loc) {
+        self.kernels.entry(kernel.to_string()).or_default().insert(pc, loc);
+    }
+
+    /// Resolve the table into a dense per-pc vector for one kernel
+    /// (`Loc::U` where the table has no entry). Out-of-range pcs are
+    /// ignored rather than erroring: a table tuned for one kernel
+    /// version stays harmless on another.
+    pub fn resolve(&self, kernel: &str, n_ops: usize) -> Vec<crate::isa::instr::Loc> {
+        let mut dense = vec![crate::isa::instr::Loc::U; n_ops];
+        if let Some(m) = self.kernels.get(kernel) {
+            for (&pc, &loc) in m {
+                if let Some(slot) = dense.get_mut(pc as usize) {
+                    *slot = loc;
+                }
+            }
+        }
+        dense
+    }
 }
 
 /// Shared-memory placement (Fig. 11 ablation; §IV-C).
@@ -191,6 +239,10 @@ pub struct MachineConfig {
     pub energy: EnergyCoeffs,
     pub pipeline_mode: PipelineMode,
     pub offload_policy: OffloadPolicy,
+    /// Explicit per-kernel, per-pc overrides, consulted only under
+    /// [`OffloadPolicy::Explicit`]. Serialized with the rest of the
+    /// config, so a different table means a different fingerprint.
+    pub offload_table: OffloadPolicyTable,
     pub smem_location: SmemLocation,
     pub sched_policy: SchedPolicy,
     /// Interleave consecutive DRAM rows across subarrays so MASA
@@ -240,6 +292,7 @@ impl MachineConfig {
             energy: EnergyCoeffs::default(),
             pipeline_mode: PipelineMode::Hybrid,
             offload_policy: OffloadPolicy::CompilerAnnotated,
+            offload_table: OffloadPolicyTable::default(),
             smem_location: SmemLocation::NearBank,
             sched_policy: SchedPolicy::Gto,
             subarray_interleave: true,
@@ -329,8 +382,16 @@ impl MachineConfig {
                     "hw" => OffloadPolicy::HardwareDefault,
                     "all_nb" => OffloadPolicy::AllNearBank,
                     "all_fb" => OffloadPolicy::AllFarBank,
+                    "explicit" => OffloadPolicy::Explicit,
                     _ => return Err(format!("bad offload_policy `{value}`")),
                 }
+            }
+            // The federation wire format for candidate policies: configs
+            // travel as `key=value` string pairs, so the table rides as
+            // its canonical JSON.
+            "offload_table" => {
+                self.offload_table = serde_json::from_str(value)
+                    .map_err(|e| format!("bad offload_table JSON: {e}"))?
             }
             "smem_location" => {
                 self.smem_location = match value {

@@ -181,6 +181,11 @@ pub struct SuiteJson {
     /// from `mpu lint`. Empty when a workload failed to lint.
     #[serde(skip_serializing_if = "Vec::is_empty")]
     pub lint: Vec<WorkloadLintSummary>,
+    /// Offload-autotuner appendix (append-only addition): best
+    /// explicit-policy speedups vs the compiler heuristic, written by
+    /// `mpu tune --append-suite` after the suite document exists.
+    #[serde(skip_serializing_if = "Option::is_none")]
+    pub tuning: Option<crate::tuner::TuningAppendix>,
 }
 
 /// Build the suite document from MPU/GPU pairs.
@@ -249,6 +254,7 @@ pub fn suite_json_with_variants(
             .collect(),
         variants,
         stats: None,
+        tuning: None,
         lint: {
             let wls: Vec<Workload> = pairs.iter().map(|p| p.mpu.workload).collect();
             let warp = crate::config::MachineConfig::scaled().warp_size;

@@ -744,6 +744,39 @@ mod tests {
     }
 
     #[test]
+    fn policy_table_fingerprint_known_vector() {
+        use crate::config::{OffloadPolicy, OffloadPolicyTable};
+        use crate::isa::instr::Loc;
+        // The explicit offload-policy table rides inside the config
+        // fingerprint. Pin its canonical serde rendering and FNV-1a hash
+        // (computed independently) so candidate-policy cache keys never
+        // silently move: BTreeMaps give deterministic ordering and
+        // integer pcs serialize as JSON string keys.
+        let mut table = OffloadPolicyTable::default();
+        table.set("axpy", 5, Loc::F);
+        table.set("axpy", 2, Loc::N);
+        let j = serde_json::to_string(&table).unwrap();
+        assert_eq!(j, r#"{"kernels":{"axpy":{"2":"N","5":"F"}}}"#);
+        assert_eq!(stable_hash(&j), 0x4cf6_6c8d_11ab_a92e);
+        assert_eq!(stable_hash(r#"{"kernels":{}}"#), 0xbbaf_21e2_0a98_a969);
+        // Round trip through the federation wire format (`cfg.set`).
+        let mut cfg = MachineConfig::scaled();
+        cfg.set("offload_policy", "explicit").unwrap();
+        cfg.set("offload_table", &j).unwrap();
+        assert_eq!(cfg.offload_policy, OffloadPolicy::Explicit);
+        assert_eq!(cfg.offload_table, table);
+        // A non-empty table moves the whole-config fingerprint, and two
+        // different tables land on different keys — every candidate
+        // policy is its own cache entry.
+        let base = Target::Mpu(MachineConfig::scaled()).fingerprint();
+        let with_table = Target::Mpu(cfg.clone()).fingerprint();
+        assert_ne!(base.1, with_table.1);
+        let mut cfg2 = cfg.clone();
+        cfg2.offload_table.set("axpy", 2, Loc::F);
+        assert_ne!(with_table.1, Target::Mpu(cfg2).fingerprint().1);
+    }
+
+    #[test]
     fn target_for_kind_covers_all_variants() {
         let cfg = MachineConfig::scaled();
         for kind in MachineKind::ALL {

@@ -23,7 +23,7 @@ use super::lsu::{coalesce, WarpAccess};
 use super::offload::{self, ExecLoc, MoveDir};
 use super::warp::Warp;
 use crate::compiler::DecodedKernel;
-use crate::config::{MachineConfig, PipelineMode};
+use crate::config::{MachineConfig, OffloadPolicy, PipelineMode};
 use crate::dram::{DramRequest, MemController};
 use crate::isa::instr::Loc;
 use crate::isa::program::ParamValue;
@@ -129,6 +129,11 @@ pub struct NearBankMemory {
     /// Reusable step-2 buffer: the per-issue required-register list
     /// (kept warm so the offload path never allocates).
     req_buf: Vec<(Reg, ExecLoc)>,
+    /// Dense per-pc explicit offload overrides for the launched kernel
+    /// (resolved from `cfg.offload_table` at launch; empty unless the
+    /// policy is `Explicit`). Indexed by `MacroOp::pc`; out-of-range or
+    /// `Loc::U` entries mean "no override".
+    explicit: Vec<Loc>,
 }
 
 impl NearBankMemory {
@@ -151,6 +156,7 @@ impl NearBankMemory {
             next_id: 1,
             completed: Vec::new(),
             req_buf: Vec::new(),
+            explicit: Vec::new(),
         }
     }
 
@@ -543,7 +549,8 @@ impl OffloadModel for NearBankMemory {
         // Fig. 3 step 1: location decision; step 2: source-register
         // locations; step 3: register movement. The step-2 list lives in
         // a reused buffer — nothing here allocates per issue.
-        let loc = offload::instr_location(instr, hint, &self.cfg, &w.track);
+        let explicit = self.explicit.get(instr.pc as usize).copied().unwrap_or(Loc::U);
+        let loc = offload::instr_location(instr, hint, explicit, &self.cfg, &w.track);
         let mut required = std::mem::take(&mut self.req_buf);
         offload::required_reg_locs_into(instr, loc, &self.cfg, &mut required);
         let ready = self.do_moves(core, w, &required, now, stats);
@@ -650,6 +657,17 @@ impl Machine {
         params: &[ParamValue],
         home_addr: impl Fn(u32) -> Option<u64>,
     ) -> Result<()> {
+        let kernel: Arc<DecodedKernel> = kernel.into();
+        // Resolve the explicit policy table into a dense per-pc override
+        // vector for this kernel. Resolution happens here — not at
+        // decode time — so the decoded kernel stays shareable across
+        // configurations (the kernel cache hands the same `Arc` to every
+        // candidate policy).
+        self.fe.mem_sys.explicit = if self.cfg.offload_policy == OffloadPolicy::Explicit {
+            self.cfg.offload_table.resolve(&kernel.name, kernel.ops.len())
+        } else {
+            Vec::new()
+        };
         self.fe.launch(kernel, launch, params, home_addr)
     }
 

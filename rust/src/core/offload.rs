@@ -41,9 +41,16 @@ pub enum MoveDir {
 }
 
 /// Step 1 of Fig. 3: decide the execution location.
+///
+/// `explicit` is the per-pc entry of an explicit policy table (resolved
+/// at launch; `Loc::U` when the table has no override or the policy is
+/// not [`OffloadPolicy::Explicit`]). Under `Explicit` the fallback chain
+/// is explicit override → compiler hint → hardware default, so an empty
+/// table reproduces `CompilerAnnotated` exactly.
 pub fn instr_location(
     m: &MacroOp,
     instr_loc_hint: Loc,
+    explicit: Loc,
     cfg: &MachineConfig,
     track: &TrackTable,
 ) -> ExecLoc {
@@ -69,6 +76,15 @@ pub fn instr_location(
             Loc::U => hardware_default(m, track),
         },
         OffloadPolicy::HardwareDefault => hardware_default(m, track),
+        OffloadPolicy::Explicit => match explicit {
+            Loc::N => ExecLoc::Near,
+            Loc::F | Loc::B => ExecLoc::Far,
+            Loc::U => match instr_loc_hint {
+                Loc::N => ExecLoc::Near,
+                Loc::F | Loc::B => ExecLoc::Far,
+                Loc::U => hardware_default(m, track),
+            },
+        },
     }
 }
 
@@ -223,9 +239,9 @@ mod tests {
         let cfg = cfg();
         let t = TrackTable::default();
         let m = mop("ld.global.f32 %f1, [%r1+0]\nexit");
-        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far);
+        assert_eq!(instr_location(&m, Loc::N, Loc::U, &cfg, &t), ExecLoc::Far);
         let m = mop("bar.sync\nexit");
-        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far);
+        assert_eq!(instr_location(&m, Loc::N, Loc::U, &cfg, &t), ExecLoc::Far);
     }
 
     #[test]
@@ -233,9 +249,9 @@ mod tests {
         let mut cfg = cfg();
         let t = TrackTable::default();
         let m = mop("st.shared.f32 [%r1+0], %f1\nexit");
-        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Near);
+        assert_eq!(instr_location(&m, Loc::N, Loc::U, &cfg, &t), ExecLoc::Near);
         cfg.smem_location = SmemLocation::FarBank;
-        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far);
+        assert_eq!(instr_location(&m, Loc::N, Loc::U, &cfg, &t), ExecLoc::Far);
     }
 
     #[test]
@@ -243,8 +259,8 @@ mod tests {
         let cfg = cfg();
         let t = TrackTable::default();
         let m = mop("add.f32 %f1, %f2, %f3\nexit");
-        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Near);
-        assert_eq!(instr_location(&m, Loc::F, &cfg, &t), ExecLoc::Far);
+        assert_eq!(instr_location(&m, Loc::N, Loc::U, &cfg, &t), ExecLoc::Near);
+        assert_eq!(instr_location(&m, Loc::F, Loc::U, &cfg, &t), ExecLoc::Far);
     }
 
     #[test]
@@ -253,10 +269,10 @@ mod tests {
         cfg.offload_policy = OffloadPolicy::HardwareDefault;
         let mut t = TrackTable::default();
         let m = mop("add.f32 %f1, %f2, %f3\nexit");
-        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far, "no NB copies yet");
+        assert_eq!(instr_location(&m, Loc::N, Loc::U, &cfg, &t), ExecLoc::Far, "no NB copies yet");
         t.write_nb(Reg::f(2));
         t.write_nb(Reg::f(3));
-        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Near);
+        assert_eq!(instr_location(&m, Loc::N, Loc::U, &cfg, &t), ExecLoc::Near);
     }
 
     #[test]
@@ -267,7 +283,7 @@ mod tests {
         t.write_nb(Reg::f(2));
         t.write_nb(Reg::f(3));
         let m = mop("add.f32 %f1, %f2, %f3\nexit");
-        assert_eq!(instr_location(&m, Loc::N, &cfg, &t), ExecLoc::Far);
+        assert_eq!(instr_location(&m, Loc::N, Loc::U, &cfg, &t), ExecLoc::Far);
         assert_eq!(dst_location(&m, ExecLoc::Far, &cfg), Some((Reg::f(1), ExecLoc::Far)));
     }
 
@@ -313,5 +329,56 @@ mod tests {
         // And a setp destination lands far-bank even if issued near.
         let m = mop("setp.lt.f32 %p1, %f1, %f2\nexit");
         assert_eq!(dst_location(&m, ExecLoc::Near, &cfg), Some((Reg::p(1), ExecLoc::Far)));
+    }
+
+    #[test]
+    fn explicit_override_beats_the_compiler_hint() {
+        let mut cfg = cfg();
+        cfg.offload_policy = OffloadPolicy::Explicit;
+        let t = TrackTable::default();
+        let m = mop("add.f32 %f1, %f2, %f3\nexit");
+        // The table's entry wins over the hint in both directions.
+        assert_eq!(instr_location(&m, Loc::N, Loc::F, &cfg, &t), ExecLoc::Far);
+        assert_eq!(instr_location(&m, Loc::F, Loc::N, &cfg, &t), ExecLoc::Near);
+        // B is "either file is valid" — treated as far (full pipeline).
+        assert_eq!(instr_location(&m, Loc::N, Loc::B, &cfg, &t), ExecLoc::Far);
+    }
+
+    #[test]
+    fn explicit_without_override_matches_compiler_annotated() {
+        // The seed-in-search-space guarantee: an empty table under
+        // `Explicit` must reproduce `CompilerAnnotated` for every hint.
+        let ann = cfg();
+        let mut exp = cfg();
+        exp.offload_policy = OffloadPolicy::Explicit;
+        let mut t = TrackTable::default();
+        let m = mop("add.f32 %f1, %f2, %f3\nexit");
+        for hint in [Loc::U, Loc::N, Loc::F, Loc::B] {
+            assert_eq!(
+                instr_location(&m, hint, Loc::U, &exp, &t),
+                instr_location(&m, hint, Loc::U, &ann, &t),
+                "hint {hint:?} (empty track)"
+            );
+        }
+        t.write_nb(Reg::f(2));
+        t.write_nb(Reg::f(3));
+        for hint in [Loc::U, Loc::N, Loc::F, Loc::B] {
+            assert_eq!(
+                instr_location(&m, hint, Loc::U, &exp, &t),
+                instr_location(&m, hint, Loc::U, &ann, &t),
+                "hint {hint:?} (NB-valid track)"
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_never_overrides_the_mandated_set() {
+        let mut cfg = cfg();
+        cfg.offload_policy = OffloadPolicy::Explicit;
+        let t = TrackTable::default();
+        let m = mop("ld.global.f32 %f1, [%r1+0]\nexit");
+        assert_eq!(instr_location(&m, Loc::N, Loc::N, &cfg, &t), ExecLoc::Far);
+        let m = mop("bar.sync\nexit");
+        assert_eq!(instr_location(&m, Loc::N, Loc::N, &cfg, &t), ExecLoc::Far);
     }
 }

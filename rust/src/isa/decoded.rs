@@ -107,6 +107,10 @@ pub struct MacroOp {
     pub reconv: usize,
     /// Location hint with the unknown → far-bank fallback pre-applied.
     pub hint: Loc,
+    /// The instruction's pc in the kernel. Lets backends look up per-pc
+    /// state (e.g. an explicit offload-policy override) without changing
+    /// the shared issue-path signatures.
+    pub pc: u32,
     /// Precomputed scoreboard read set (source registers + memory base +
     /// guard + destination); `reads[..n_reads]` are valid. Duplicates
     /// are allowed — consumers take a max/union over the slice.
@@ -177,6 +181,7 @@ impl MacroOp {
                 Loc::U => Loc::F,
                 l => l,
             },
+            pc: pc as u32,
             reads,
             n_reads: n_reads as u8,
             is_sfu: instr.op.is_sfu(),

@@ -191,8 +191,11 @@ impl Op {
 }
 
 /// Compiler/hardware location annotation of a register or instruction
-/// (Algorithm 1).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+/// (Algorithm 1). Serializes as the bare letter (`"U"`/`"N"`/`"F"`/`"B"`)
+/// so explicit offload-policy tables stay compact and fingerprint-stable.
+#[derive(
+    Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default, serde::Serialize, serde::Deserialize,
+)]
 pub enum Loc {
     /// Unknown (pre-analysis).
     #[default]

@@ -58,7 +58,13 @@
 //!   batch across many worker daemons by consistent hashing on the
 //!   stable store keys (`mpu serve --workers` / `mpu submit
 //!   --workers`), merge the streamed results back into point order,
-//!   and redistribute a dead worker's unfinished points mid-batch.
+//!   and redistribute a dead worker's unfinished points mid-batch;
+//! * the **offload-policy autotuner** ([`tuner`], `mpu tune`): treats
+//!   the Algorithm-1 placement decision as a searchable artifact — an
+//!   explicit per-kernel, per-pc policy table inside the config
+//!   fingerprint — and searches it (exhaustive / greedy + seeded
+//!   annealing) through the same cache, store and federation tiers,
+//!   emitting a schema-versioned `TUNE_report.json`.
 //!
 //! ## Quickstart
 //!
@@ -86,6 +92,7 @@ pub mod energy;
 pub mod workloads;
 pub mod runtime;
 pub mod coordinator;
+pub mod tuner;
 
 pub use config::MachineConfig;
 pub use coordinator::{run_workload, RunReport};

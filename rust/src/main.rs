@@ -3,6 +3,10 @@
 //! Subcommands:
 //!   run <workload> [key=val ...] [--tiny|--paper-scale]
 //!       [--machine mpu|gpu|ideal|mpu_nooff | --gpu] [--threads N]
+//!       [--loc-stats]                --loc-stats additionally prints the
+//!                                    compiler's Fig.-14 register-location
+//!                                    breakdown (N/F/B/U counts and
+//!                                    fractions)
 //!   suite [key=val ...] [--tiny] [--out FILE] [--variants] [--strict]
 //!         [--store DIR] [--threads N] [--perf [--repeat N]]
 //!                                    run all 12 workloads (MPU vs GPU,
@@ -82,6 +86,24 @@
 //!                                    days, LRU-evicts to the byte cap
 //!                                    and compacts index.json
 //!   shutdown [--addr A]              stop the daemon
+//!   tune [<workload>...|--all] [--tiny] [--budget N] [--seed S]
+//!        [--threads N] [--store DIR] [--workers H:P,...]
+//!        [--out FILE] [--append-suite FILE] [key=val ...]
+//!                                    offload-policy autotuner: search
+//!                                    explicit per-pc policy tables
+//!                                    (exhaustive for small kernels,
+//!                                    greedy + seeded annealing beyond)
+//!                                    against the CompilerAnnotated /
+//!                                    HardwareDefault / no-offload
+//!                                    baselines and write the
+//!                                    schema-versioned TUNE_report.json;
+//!                                    every candidate is just another
+//!                                    config fingerprint, so --store
+//!                                    and --workers dedup evaluations
+//!                                    through the usual cache tiers;
+//!                                    --append-suite folds the tuning
+//!                                    appendix into an existing
+//!                                    BENCH_suite.json
 //!   compile <workload>               show backend annotations
 //!   validate [--tiny]                cross-check vs XLA artifacts
 //!   list                             list workloads (Table I)
@@ -105,14 +127,18 @@ use mpu::coordinator::{
 };
 use mpu::analysis::{lint_workload, LintReport};
 use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
+use mpu::tuner::{self, TuneOptions};
 use mpu::workloads::{prepare, Scale, Workload};
 use std::path::Path;
 use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mpu <run|suite|cycles|lint|check-json|serve|submit|status|shutdown|store|compile|validate|list|config> [args]\n\
+        "usage: mpu <run|suite|cycles|lint|check-json|serve|submit|status|shutdown|store|tune|compile|validate|list|config> [args]\n\
          \n  mpu run axpy row_buffers_per_bank=2 --machine ideal\
+         \n  mpu run axpy --tiny --loc-stats\
+         \n  mpu tune axpy gemv --tiny --budget 16 --store .mpu-store\
+         \n  mpu tune --all --tiny --out TUNE_report.json --append-suite BENCH_suite.json\
          \n  mpu lint --deny warnings --json --out LINT_report.json\
          \n  mpu lint --workload gemv\
          \n  mpu suite offload_policy=hw --out BENCH_suite.json\
@@ -198,7 +224,7 @@ fn out_path(args: &[String]) -> String {
 /// Positional arguments: everything that is not a `--flag` (or its
 /// value) and not a `key=val` configuration pair.
 fn positionals(args: &[String]) -> Vec<String> {
-    const VALUE_FLAGS: [&str; 14] = [
+    const VALUE_FLAGS: [&str; 17] = [
         "--variants",
         "--priority",
         "--addr",
@@ -213,6 +239,9 @@ fn positionals(args: &[String]) -> Vec<String> {
         "--deny",
         "--threads",
         "--repeat",
+        "--budget",
+        "--seed",
+        "--append-suite",
     ];
     let mut out = Vec::new();
     let mut it = args.iter();
@@ -413,6 +442,79 @@ fn compare_perf_docs(old_path: &str, new_path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// A required numeric field that must be present and finite. NaN/Inf
+/// serialize to JSON `null`, so the null check doubles as the NaN gate.
+fn finite_field(v: &serde_json::Value, key: &str) -> anyhow::Result<f64> {
+    v[key]
+        .as_f64()
+        .filter(|x| x.is_finite())
+        .ok_or_else(|| anyhow::anyhow!("key `{key}` missing or not a finite number"))
+}
+
+/// Shared validation of tuning entries: `TUNE_report.json` workload
+/// rows and the `tuning` appendix rows of a `BENCH_suite.json`.
+fn check_tuning_rows(ws: &[serde_json::Value], ctx: &str) -> anyhow::Result<usize> {
+    anyhow::ensure!(!ws.is_empty(), "{ctx}: empty workload list");
+    for w in ws {
+        let name = w["workload"].as_str().unwrap_or("?");
+        let tuned = w["tuned_cycles"]
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("{ctx}: {name} missing tuned_cycles"))?;
+        let ann = w["annotated_cycles"]
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("{ctx}: {name} missing annotated_cycles"))?;
+        anyhow::ensure!(
+            tuned <= ann,
+            "{ctx}: {name} tuned {tuned} cycles worse than annotated {ann} — the \
+             Algorithm-1 seed is in the search space, so this must never happen"
+        );
+        for key in ["speedup_vs_annotated", "speedup_vs_hw_default", "speedup_vs_nooff"] {
+            let s = finite_field(w, key).map_err(|e| anyhow::anyhow!("{ctx}: {name}: {e}"))?;
+            anyhow::ensure!(s > 0.0, "{ctx}: {name} non-positive {key} {s}");
+        }
+    }
+    Ok(ws.len())
+}
+
+/// `check-json` gate for a `TUNE_report.json` document.
+fn check_tune_doc(v: &serde_json::Value) -> anyhow::Result<usize> {
+    anyhow::ensure!(v["schema_version"] == 1, "schema_version must be 1");
+    for key in ["scale", "budget", "seed", "evaluations", "simulated", "mem_hits", "disk_hits"] {
+        anyhow::ensure!(!v[key].is_null(), "missing key `{key}`");
+    }
+    finite_field(v, "geomean_speedup_vs_annotated")?;
+    let ws = v["workloads"].as_array().ok_or_else(|| anyhow::anyhow!("missing workloads"))?;
+    for w in ws {
+        for key in ["kernel", "search_mode", "best_policy", "candidate_pcs", "loc_stats"] {
+            anyhow::ensure!(
+                !w[key].is_null(),
+                "workload {} missing key `{key}`",
+                w["workload"]
+            );
+        }
+    }
+    check_tuning_rows(ws, "tune report")
+}
+
+/// `check-json` gate for the append-only `tuning` appendix of a
+/// `BENCH_suite.json` document.
+fn check_tuning_appendix(v: &serde_json::Value) -> anyhow::Result<usize> {
+    for key in ["scale", "budget", "seed"] {
+        anyhow::ensure!(!v[key].is_null(), "tuning appendix missing key `{key}`");
+    }
+    for key in [
+        "geomean_speedup_vs_annotated",
+        "geomean_speedup_vs_hw_default",
+        "geomean_speedup_vs_nooff",
+    ] {
+        finite_field(v, key).map_err(|e| anyhow::anyhow!("tuning appendix: {e}"))?;
+    }
+    let ws = v["workloads"]
+        .as_array()
+        .ok_or_else(|| anyhow::anyhow!("tuning appendix missing workloads"))?;
+    check_tuning_rows(ws, "tuning appendix")
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
@@ -485,6 +587,21 @@ fn main() -> anyhow::Result<()> {
                     r.stats.row_miss_rate() * 100.0,
                     r.energy.total() * 1e3
                 ),
+            }
+            if rest.iter().any(|a| a == "--loc-stats") {
+                // Fig.-14 compile-time register-location breakdown.
+                let ls = &r.loc_stats;
+                println!(
+                    "loc-stats {}: N={} F={} B={} U={} (near {:.1}% / far {:.1}% / both {:.1}%)",
+                    w.name(),
+                    ls.near,
+                    ls.far,
+                    ls.both,
+                    ls.unknown,
+                    ls.near_frac() * 100.0,
+                    ls.far_frac() * 100.0,
+                    ls.both_frac() * 100.0
+                );
             }
         }
         "suite" => {
@@ -794,6 +911,11 @@ fn main() -> anyhow::Result<()> {
             let Some(path) = rest.first() else { usage() };
             let body = std::fs::read_to_string(path)?;
             let v: serde_json::Value = serde_json::from_str(&body)?;
+            if v["report"] == "tune" {
+                let n = check_tune_doc(&v)?;
+                println!("{path}: tune schema v1 OK, {n} workloads tuned, none worse than annotated");
+                return Ok(());
+            }
             anyhow::ensure!(v["schema_version"] == 1, "schema_version must be 1");
             for key in ["suite", "scale", "geomean_speedup", "geomean_energy_reduction"] {
                 anyhow::ensure!(!v[key].is_null(), "missing key `{key}`");
@@ -830,6 +952,10 @@ fn main() -> anyhow::Result<()> {
                         checked += 1;
                     }
                 }
+            }
+            if !v["tuning"].is_null() {
+                let n = check_tuning_appendix(&v["tuning"])?;
+                println!("{path}: tuning appendix OK ({n} workloads, none worse than annotated)");
             }
             println!("{path}: schema v1 OK, {checked} machine runs all correct");
         }
@@ -1123,6 +1249,124 @@ fn main() -> anyhow::Result<()> {
                     eprintln!("unknown store action `{other}` (stats | gc)");
                     std::process::exit(2);
                 }
+            }
+        }
+        "tune" => {
+            // Offload-policy autotuner: each candidate policy table is
+            // just another config fingerprint, so --store / --workers
+            // dedup its evaluation through the usual cache tiers.
+            let scale = scale_of(rest);
+            let mut workloads: Vec<Workload> = Vec::new();
+            let mut names = positionals(rest);
+            if let Some(name) = flag_value(rest, "--workload") {
+                names.push(name);
+            }
+            for name in names {
+                let w = Workload::from_name(&name).unwrap_or_else(|| {
+                    eprintln!("unknown workload `{name}` (see `mpu list`)");
+                    std::process::exit(2);
+                });
+                if !workloads.contains(&w) {
+                    workloads.push(w);
+                }
+            }
+            if rest.iter().any(|a| a == "--all") || workloads.is_empty() {
+                workloads = Workload::ALL.to_vec();
+            }
+            let defaults = TuneOptions::default();
+            let budget = flag_value(rest, "--budget")
+                .map(|v| {
+                    v.parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or_else(|| {
+                        eprintln!("--budget needs a positive integer, got `{v}`");
+                        std::process::exit(2);
+                    })
+                })
+                .unwrap_or(defaults.budget);
+            let seed = flag_value(rest, "--seed")
+                .map(|v| {
+                    v.parse::<u64>().unwrap_or_else(|_| {
+                        eprintln!("--seed needs an unsigned integer, got `{v}`");
+                        std::process::exit(2);
+                    })
+                })
+                .unwrap_or(defaults.seed);
+            let workers = flag_value(rest, "--workers")
+                .map(|v| ServeConfig::parse_workers(&v))
+                .unwrap_or_default();
+            if let Some(dir) = flag_value(rest, "--store") {
+                let store = DiskStore::open(StoreConfig::new(dir))?;
+                SimCache::global().attach_store(Arc::new(store));
+            }
+            let base_overrides: Vec<(String, String)> = rest
+                .iter()
+                .filter_map(|a| a.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
+                .collect();
+            let opts = TuneOptions {
+                workloads,
+                scale,
+                budget,
+                seed,
+                threads: usize_flag(rest, "--threads"),
+                workers,
+                base_overrides,
+            };
+            let t0 = std::time::Instant::now();
+            let report = tuner::tune(&opts, SimCache::global())?;
+            let mut t = Table::new(
+                "tune: explicit policy vs baselines",
+                &["workload", "pcs", "mode", "tuned", "annotated", "speedup", "vs_hw", "vs_nooff"],
+            );
+            for w in &report.workloads {
+                t.row(vec![
+                    w.workload.clone(),
+                    w.candidate_pcs.to_string(),
+                    w.search_mode.clone(),
+                    w.tuned_cycles.to_string(),
+                    w.annotated_cycles.to_string(),
+                    format!("{:.3}x", w.speedup_vs_annotated),
+                    format!("{:.3}x", w.speedup_vs_hw_default),
+                    format!("{:.3}x", w.speedup_vs_nooff),
+                ]);
+            }
+            t.emit("tune");
+            let out = flag_value(rest, "--out").unwrap_or_else(|| tuner::TUNE_REPORT.to_string());
+            let mut body = serde_json::to_string_pretty(&report)?;
+            body.push('\n');
+            std::fs::write(&out, body)?;
+            println!(
+                "wrote {} ({} workloads, geomean speedup vs annotated {:.3}x) in {:.1}s",
+                out,
+                report.workloads.len(),
+                report.geomean_speedup_vs_annotated,
+                t0.elapsed().as_secs_f64()
+            );
+            // Stable machine-greppable summary (the CI smoke gate parses
+            // `simulated=`).
+            println!(
+                "tune: workloads={} evaluations={} simulated={} cached={} (mem={} disk={}) geomean_speedup={:.4}",
+                report.workloads.len(),
+                report.evaluations,
+                report.simulated,
+                report.mem_hits + report.disk_hits,
+                report.mem_hits,
+                report.disk_hits,
+                report.geomean_speedup_vs_annotated
+            );
+            if let Some(suite_path) = flag_value(rest, "--append-suite") {
+                // Append-only by construction: the suite doc is parsed
+                // as a generic JSON value, only the `tuning` key is
+                // (re)placed, every other field survives byte-for-byte.
+                let body = std::fs::read_to_string(&suite_path)?;
+                let mut doc: serde_json::Value = serde_json::from_str(&body)?;
+                anyhow::ensure!(
+                    doc["schema_version"] == 1,
+                    "{suite_path}: not a schema-v1 suite document"
+                );
+                doc["tuning"] = serde_json::to_value(report.appendix())?;
+                let mut body = serde_json::to_string_pretty(&doc)?;
+                body.push('\n');
+                std::fs::write(&suite_path, body)?;
+                println!("appended tuning appendix to {suite_path}");
             }
         }
         "compile" => {

@@ -1,0 +1,500 @@
+//! Offload-policy autotuner (`mpu tune`).
+//!
+//! The paper's Algorithm-1 compiler pass (§V-B) fixes a near/far
+//! placement for every instruction statically. This module treats that
+//! decision as a *searchable artifact* instead: a candidate policy is an
+//! explicit per-kernel, per-pc [`OffloadPolicyTable`] carried inside
+//! [`MachineConfig`], so each candidate has its own config fingerprint
+//! and rides the existing caching stack — [`SimCache`] memory tier, the
+//! persistent disk store, and federation dedup — for free. Re-tuning
+//! against a warm store performs zero fresh simulations for candidates
+//! that were already evaluated.
+//!
+//! [`search`] enumerates the candidate space exhaustively when the
+//! kernel's tunable (ALU, non-mandated) pc set is small enough for the
+//! budget, and otherwise runs deterministic greedy bit-flips followed by
+//! seeded simulated annealing ([`crate::sim::Prng`]; no ambient
+//! randomness, so the same seed and budget reproduce the same best
+//! policy). The Algorithm-1 annotation is always candidate #0, so the
+//! tuned policy is never worse than the compiler heuristic.
+
+pub mod search;
+
+use crate::compiler::LocStats;
+use crate::config::{MachineConfig, OffloadPolicyTable, SmemLocation};
+use crate::coordinator::proto::{PointSpec, SubmitRequest};
+use crate::coordinator::sweep::{compile_kernel, CacheTier, SweepPoint, Target};
+use crate::coordinator::{geomean, Federation, KernelCache, SimCache};
+use crate::isa::instr::Loc;
+use crate::workloads::{Scale, Workload};
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// Default report file name.
+pub const TUNE_REPORT: &str = "TUNE_report.json";
+
+/// Schema version of [`TuneReport`].
+pub const TUNE_SCHEMA_VERSION: u64 = 1;
+
+/// Options for one `tune` invocation.
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    pub workloads: Vec<Workload>,
+    pub scale: Scale,
+    /// Maximum candidate-policy evaluations per workload (the
+    /// Algorithm-1 seed counts as the first; baselines do not).
+    pub budget: usize,
+    /// Annealing seed — same seed and budget reproduce the same search.
+    pub seed: u64,
+    /// Simulation threads per local evaluation.
+    pub threads: usize,
+    /// Worker daemon addresses; empty means evaluate in-process.
+    pub workers: Vec<String>,
+    /// Base config overrides applied under every candidate.
+    pub base_overrides: Vec<(String, String)>,
+}
+
+impl Default for TuneOptions {
+    fn default() -> TuneOptions {
+        TuneOptions {
+            workloads: Workload::ALL.to_vec(),
+            scale: Scale::Tiny,
+            budget: 32,
+            seed: 0xA11CE,
+            threads: 1,
+            workers: Vec::new(),
+            base_overrides: Vec::new(),
+        }
+    }
+}
+
+/// How the evaluations were served, by tier.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalCounters {
+    pub evaluations: usize,
+    pub simulated: usize,
+    pub mem_hits: usize,
+    pub disk_hits: usize,
+}
+
+impl EvalCounters {
+    pub fn cached(&self) -> usize {
+        self.mem_hits + self.disk_hits
+    }
+}
+
+/// One candidate's measured objective.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub cycles: u64,
+    pub energy_j: f64,
+    pub correct: bool,
+}
+
+enum EvalMode<'a> {
+    /// In-process: simulate through the shared two-tier cache.
+    Local { cache: &'a SimCache, kernels: KernelCache, threads: usize },
+    /// Ship each candidate to worker daemons; their stores dedup.
+    Federated { fed: Federation },
+}
+
+/// Evaluates candidate configs for the tuner. Both modes express a
+/// candidate as config-override *pairs* on top of shared base pairs —
+/// the federation wire format — so a local evaluation and a federated
+/// one build identical configs and therefore identical fingerprints and
+/// cache keys.
+pub struct Evaluator<'a> {
+    base_pairs: Vec<(String, String)>,
+    base: MachineConfig,
+    mode: EvalMode<'a>,
+    counters: EvalCounters,
+}
+
+impl<'a> Evaluator<'a> {
+    fn base_config(pairs: &[(String, String)]) -> Result<MachineConfig> {
+        let mut cfg = MachineConfig::scaled();
+        for (k, v) in pairs {
+            cfg.set(k, v).map_err(|e| anyhow::anyhow!("bad base override {k}={v}: {e}"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// In-process evaluator over `cache` (attach a disk store to the
+    /// cache beforehand for persistent dedup).
+    pub fn local(
+        base_pairs: Vec<(String, String)>,
+        cache: &'a SimCache,
+        threads: usize,
+    ) -> Result<Evaluator<'a>> {
+        let base = Evaluator::base_config(&base_pairs)?;
+        Ok(Evaluator {
+            base_pairs,
+            base,
+            mode: EvalMode::Local { cache, kernels: KernelCache::new(), threads },
+            counters: EvalCounters::default(),
+        })
+    }
+
+    /// Federated evaluator fanning candidates out over worker daemons.
+    pub fn federated(
+        base_pairs: Vec<(String, String)>,
+        workers: Vec<String>,
+    ) -> Result<Evaluator<'a>> {
+        let base = Evaluator::base_config(&base_pairs)?;
+        let fed = Federation::new(workers)?;
+        fed.handshake()?;
+        Ok(Evaluator {
+            base_pairs,
+            base,
+            mode: EvalMode::Federated { fed },
+            counters: EvalCounters::default(),
+        })
+    }
+
+    /// The shared base config every candidate is applied on top of.
+    pub fn base(&self) -> &MachineConfig {
+        &self.base
+    }
+
+    pub fn counters(&self) -> EvalCounters {
+        self.counters
+    }
+
+    /// Evaluate the base config plus `extra` override pairs on one
+    /// workload/scale point.
+    pub fn eval(
+        &mut self,
+        w: Workload,
+        scale: Scale,
+        extra: &[(String, String)],
+    ) -> Result<EvalResult> {
+        self.counters.evaluations += 1;
+        match &mut self.mode {
+            EvalMode::Local { cache, kernels, threads } => {
+                let mut cfg = self.base.clone();
+                for (k, v) in extra {
+                    cfg.set(k, v).map_err(|e| anyhow::anyhow!("bad override {k}={v}: {e}"))?;
+                }
+                let pt = SweepPoint {
+                    label: "tune".to_string(),
+                    workload: w,
+                    scale,
+                    target: Target::Mpu(cfg),
+                };
+                let threads = *threads;
+                let (r, tier) =
+                    cache.get_or_run_traced(&pt, || pt.simulate_with_threads(kernels, threads))?;
+                match tier {
+                    CacheTier::Memory => self.counters.mem_hits += 1,
+                    CacheTier::Disk => self.counters.disk_hits += 1,
+                    CacheTier::Simulated => self.counters.simulated += 1,
+                }
+                Ok(EvalResult { cycles: r.cycles, energy_j: r.energy.total(), correct: r.correct })
+            }
+            EvalMode::Federated { fed } => {
+                let mut config = self.base_pairs.clone();
+                config.extend(extra.iter().cloned());
+                let req = SubmitRequest {
+                    scale: scale.name().to_string(),
+                    config,
+                    point_specs: vec![PointSpec {
+                        workload: w.name().to_string(),
+                        variant: "mpu".to_string(),
+                    }],
+                    ..SubmitRequest::default()
+                };
+                let res = fed.submit_streamed(&req, |_| {})?;
+                let reply = res.reply;
+                self.counters.simulated += reply.simulated;
+                self.counters.mem_hits += reply.mem_hits + reply.deduped;
+                self.counters.disk_hits += reply.disk_hits;
+                let p = reply
+                    .results
+                    .into_iter()
+                    .next()
+                    .context("federated tune evaluation returned no result")?;
+                Ok(EvalResult { cycles: p.cycles, energy_j: p.energy_j, correct: p.correct })
+            }
+        }
+    }
+}
+
+/// The config-override pairs carrying one candidate policy table (the
+/// federation wire format; local evaluation routes the same pairs
+/// through [`MachineConfig::set`], producing an identical fingerprint).
+pub fn policy_pairs(table: &OffloadPolicyTable) -> Vec<(String, String)> {
+    vec![
+        ("offload_policy".to_string(), "explicit".to_string()),
+        (
+            "offload_table".to_string(),
+            serde_json::to_string(table).expect("policy tables always serialize"),
+        ),
+    ]
+}
+
+/// One point of the best-so-far search trajectory.
+#[derive(Clone, Copy, Debug, serde::Serialize, serde::Deserialize)]
+pub struct TrajectoryPoint {
+    /// Candidate-evaluation index at which this best was found (0 = the
+    /// Algorithm-1 seed).
+    pub evaluation: usize,
+    pub cycles: u64,
+}
+
+/// Per-workload tuning result.
+#[derive(Clone, Debug, serde::Serialize, serde::Deserialize)]
+pub struct WorkloadTune {
+    pub workload: String,
+    pub kernel: String,
+    /// `"seed-only"`, `"exhaustive"` or `"greedy+anneal"`.
+    pub search_mode: String,
+    /// Size of the tunable (ALU) pc set.
+    pub candidate_pcs: usize,
+    /// Candidate policies evaluated (≤ budget; intra-search duplicates
+    /// are not re-evaluated).
+    pub evaluations: usize,
+    /// Winning per-pc assignment over the tunable set.
+    pub best_policy: BTreeMap<u32, Loc>,
+    pub tuned_cycles: u64,
+    pub annotated_cycles: u64,
+    pub hw_default_cycles: u64,
+    pub nooff_cycles: u64,
+    pub tuned_energy_j: f64,
+    pub annotated_energy_j: f64,
+    pub speedup_vs_annotated: f64,
+    pub speedup_vs_hw_default: f64,
+    pub speedup_vs_nooff: f64,
+    /// Fig.-14 register-location breakdown of the compiled kernel.
+    pub loc_stats: LocStats,
+    /// Tunable pcs the compiler annotated near-bank.
+    pub near_pcs_annotated: usize,
+    /// Tunable pcs the winning policy places near-bank.
+    pub near_pcs_tuned: usize,
+    /// Best-so-far improvements in evaluation order.
+    pub trajectory: Vec<TrajectoryPoint>,
+}
+
+/// The `TUNE_report.json` schema (versioned; validated by
+/// `mpu check-json`).
+#[derive(Clone, Debug, serde::Serialize, serde::Deserialize)]
+pub struct TuneReport {
+    pub schema_version: u64,
+    /// Report discriminator, always `"tune"`.
+    pub report: String,
+    pub scale: String,
+    pub budget: usize,
+    pub seed: u64,
+    pub federated: bool,
+    pub geomean_speedup_vs_annotated: f64,
+    /// Total evaluations across workloads, baselines included.
+    pub evaluations: usize,
+    /// Evaluations that actually simulated (the rest were served by the
+    /// memory/disk/federation cache tiers).
+    pub simulated: usize,
+    pub mem_hits: usize,
+    pub disk_hits: usize,
+    pub workloads: Vec<WorkloadTune>,
+}
+
+/// One row of the suite doc's `tuning` appendix.
+#[derive(Clone, Debug, serde::Serialize, serde::Deserialize)]
+pub struct TuningWorkload {
+    pub workload: String,
+    pub tuned_cycles: u64,
+    pub annotated_cycles: u64,
+    pub speedup_vs_annotated: f64,
+    pub speedup_vs_hw_default: f64,
+    pub speedup_vs_nooff: f64,
+}
+
+/// The append-only `tuning` appendix of `BENCH_suite.json`: the tuned
+/// best-vs-heuristic speedups per workload plus suite geomeans. Written
+/// by `mpu tune --append-suite`, validated by `mpu check-json`.
+#[derive(Clone, Debug, serde::Serialize, serde::Deserialize)]
+pub struct TuningAppendix {
+    pub scale: String,
+    pub budget: usize,
+    pub seed: u64,
+    pub geomean_speedup_vs_annotated: f64,
+    pub geomean_speedup_vs_hw_default: f64,
+    pub geomean_speedup_vs_nooff: f64,
+    pub workloads: Vec<TuningWorkload>,
+}
+
+impl TuneReport {
+    /// Condense this report into the suite appendix.
+    pub fn appendix(&self) -> TuningAppendix {
+        let col = |f: fn(&WorkloadTune) -> f64| -> Vec<f64> {
+            self.workloads.iter().map(f).collect()
+        };
+        TuningAppendix {
+            scale: self.scale.clone(),
+            budget: self.budget,
+            seed: self.seed,
+            geomean_speedup_vs_annotated: geomean(&col(|w| w.speedup_vs_annotated)),
+            geomean_speedup_vs_hw_default: geomean(&col(|w| w.speedup_vs_hw_default)),
+            geomean_speedup_vs_nooff: geomean(&col(|w| w.speedup_vs_nooff)),
+            workloads: self
+                .workloads
+                .iter()
+                .map(|w| TuningWorkload {
+                    workload: w.workload.clone(),
+                    tuned_cycles: w.tuned_cycles,
+                    annotated_cycles: w.annotated_cycles,
+                    speedup_vs_annotated: w.speedup_vs_annotated,
+                    speedup_vs_hw_default: w.speedup_vs_hw_default,
+                    speedup_vs_nooff: w.speedup_vs_nooff,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Tune every requested workload and assemble the report.
+pub fn tune(opts: &TuneOptions, cache: &SimCache) -> Result<TuneReport> {
+    ensure!(!opts.workloads.is_empty(), "no workloads to tune");
+    ensure!(opts.budget >= 1, "budget must be at least 1 (the Algorithm-1 seed)");
+    let mut ev = if opts.workers.is_empty() {
+        Evaluator::local(opts.base_overrides.clone(), cache, opts.threads.max(1))?
+    } else {
+        Evaluator::federated(opts.base_overrides.clone(), opts.workers.clone())?
+    };
+    let mut entries = Vec::new();
+    for &w in &opts.workloads {
+        entries.push(tune_workload(&mut ev, w, opts)?);
+    }
+    let speedups: Vec<f64> = entries.iter().map(|e| e.speedup_vs_annotated).collect();
+    let c = ev.counters();
+    Ok(TuneReport {
+        schema_version: TUNE_SCHEMA_VERSION,
+        report: "tune".to_string(),
+        scale: opts.scale.name().to_string(),
+        budget: opts.budget,
+        seed: opts.seed,
+        federated: !opts.workers.is_empty(),
+        geomean_speedup_vs_annotated: geomean(&speedups),
+        evaluations: c.evaluations,
+        simulated: c.simulated,
+        mem_hits: c.mem_hits,
+        disk_hits: c.disk_hits,
+        workloads: entries,
+    })
+}
+
+fn tune_workload(ev: &mut Evaluator, w: Workload, opts: &TuneOptions) -> Result<WorkloadTune> {
+    // Baselines go through the same evaluator, so they share the caches
+    // and show up in the tier counters like any candidate.
+    let ann = ev.eval(w, opts.scale, &[])?;
+    ensure!(ann.correct, "{}: incorrect under CompilerAnnotated", w.name());
+    let hw =
+        ev.eval(w, opts.scale, &[("offload_policy".to_string(), "hw".to_string())])?;
+    // `all_fb` is exactly the `mpu_nooff` machine variant
+    // (`Target::for_kind` builds it as `cfg.no_offload()`), so this hits
+    // the same cache entries a suite run produced.
+    let nooff =
+        ev.eval(w, opts.scale, &[("offload_policy".to_string(), "all_fb".to_string())])?;
+
+    // The candidate pc set and the Algorithm-1 seed come from a local
+    // compile. Compilation is deterministic, so federated workers see
+    // exactly this kernel.
+    let smem_near = ev.base().smem_location == SmemLocation::NearBank;
+    let kernel = compile_kernel(w, smem_near)?;
+    let out = search::search_policy(ev, w, opts.scale, &kernel, opts.budget, opts.seed)?;
+
+    // The seed reproduces CompilerAnnotated timing exactly, so the best
+    // candidate can never lose to it.
+    ensure!(
+        out.best_cycles <= ann.cycles,
+        "{}: tuned {} cycles worse than annotated {} — seed candidate lost",
+        w.name(),
+        out.best_cycles,
+        ann.cycles
+    );
+
+    let near_pcs_tuned = out.best.values().filter(|&&l| l == Loc::N).count();
+    let near_pcs_annotated =
+        kernel.tunable_pcs().iter().filter(|&&pc| kernel.ops[pc].hint == Loc::N).count();
+    Ok(WorkloadTune {
+        workload: w.name().to_string(),
+        kernel: kernel.name.clone(),
+        search_mode: out.mode.to_string(),
+        candidate_pcs: kernel.tunable_pcs().len(),
+        evaluations: out.evaluations,
+        best_policy: out.best,
+        tuned_cycles: out.best_cycles,
+        annotated_cycles: ann.cycles,
+        hw_default_cycles: hw.cycles,
+        nooff_cycles: nooff.cycles,
+        tuned_energy_j: out.best_energy_j,
+        annotated_energy_j: ann.energy_j,
+        speedup_vs_annotated: ann.cycles as f64 / out.best_cycles.max(1) as f64,
+        speedup_vs_hw_default: hw.cycles as f64 / out.best_cycles.max(1) as f64,
+        speedup_vs_nooff: nooff.cycles as f64 / out.best_cycles.max(1) as f64,
+        loc_stats: kernel.loc_stats.clone(),
+        near_pcs_annotated,
+        near_pcs_tuned,
+        trajectory: out.trajectory,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn axpy_opts(budget: usize, seed: u64) -> TuneOptions {
+        TuneOptions {
+            workloads: vec![Workload::Axpy],
+            budget,
+            seed,
+            ..TuneOptions::default()
+        }
+    }
+
+    #[test]
+    fn policy_pairs_round_trip_through_config_set() {
+        let mut table = OffloadPolicyTable::default();
+        table.set("axpy", 3, Loc::N);
+        table.set("axpy", 7, Loc::F);
+        let mut cfg = MachineConfig::scaled();
+        for (k, v) in policy_pairs(&table) {
+            cfg.set(&k, &v).unwrap();
+        }
+        assert_eq!(cfg.offload_policy, crate::config::OffloadPolicy::Explicit);
+        assert_eq!(cfg.offload_table, table);
+    }
+
+    #[test]
+    fn tune_axpy_never_worse_and_warm_rerun_is_all_cached() {
+        let cache = SimCache::default();
+        let opts = axpy_opts(6, 42);
+        let r1 = tune(&opts, &cache).unwrap();
+        assert_eq!(r1.schema_version, TUNE_SCHEMA_VERSION);
+        assert_eq!(r1.report, "tune");
+        let wt = &r1.workloads[0];
+        assert!(
+            wt.tuned_cycles <= wt.annotated_cycles,
+            "tuned {} > annotated {}",
+            wt.tuned_cycles,
+            wt.annotated_cycles
+        );
+        assert!(wt.speedup_vs_annotated >= 1.0);
+        assert!(r1.simulated > 0, "cold run must simulate");
+        assert!(!wt.trajectory.is_empty(), "seed eval must appear in the trajectory");
+
+        // Same cache, same options: every candidate the deterministic
+        // search revisits is served from the memory tier.
+        let r2 = tune(&opts, &cache).unwrap();
+        assert_eq!(r2.simulated, 0, "warm rerun must not simulate");
+        assert_eq!(r2.workloads[0].best_policy, wt.best_policy);
+        assert_eq!(r2.workloads[0].tuned_cycles, wt.tuned_cycles);
+    }
+
+    #[test]
+    fn tune_is_deterministic_for_a_seed() {
+        let a = tune(&axpy_opts(5, 7), &SimCache::default()).unwrap();
+        let b = tune(&axpy_opts(5, 7), &SimCache::default()).unwrap();
+        assert_eq!(a.workloads[0].best_policy, b.workloads[0].best_policy);
+        assert_eq!(a.workloads[0].tuned_cycles, b.workloads[0].tuned_cycles);
+        assert_eq!(a.workloads[0].search_mode, b.workloads[0].search_mode);
+    }
+}

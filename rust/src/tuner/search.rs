@@ -1,0 +1,251 @@
+//! Search strategies over the per-pc offload-policy space.
+//!
+//! A candidate is one bit per tunable pc (near-bank vs far-bank). Small
+//! kernels are enumerated exhaustively; past the budget the search runs
+//! deterministic greedy bit-flips from the Algorithm-1 seed, then seeded
+//! simulated annealing. All randomness comes from [`Prng`] seeded with
+//! `seed ^ stable_hash(kernel)`, so the same seed and budget always
+//! reproduce the same best policy.
+
+use super::{policy_pairs, Evaluator, TrajectoryPoint};
+use crate::compiler::DecodedKernel;
+use crate::config::OffloadPolicyTable;
+use crate::coordinator::sweep::stable_hash;
+use crate::isa::instr::Loc;
+use crate::sim::prng::Prng;
+use crate::workloads::{Scale, Workload};
+use anyhow::{ensure, Result};
+use std::collections::{BTreeMap, HashMap};
+
+/// Exhaustive enumeration is considered only below this candidate-set
+/// size (and only when `2^k` also fits the evaluation budget).
+const EXHAUSTIVE_MAX_PCS: usize = 16;
+
+/// Result of one per-kernel search.
+pub struct SearchOutcome {
+    /// Winning assignment over the tunable pc set.
+    pub best: BTreeMap<u32, Loc>,
+    pub best_cycles: u64,
+    pub best_energy_j: f64,
+    /// `"seed-only"`, `"exhaustive"` or `"greedy+anneal"`.
+    pub mode: &'static str,
+    /// Unique candidates evaluated (duplicates are served from the
+    /// intra-search memo and cost nothing).
+    pub evaluations: usize,
+    pub trajectory: Vec<TrajectoryPoint>,
+}
+
+/// Objective order: cycles first, energy breaks ties.
+fn lt(a: (u64, f64), b: (u64, f64)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+struct SearchState<'s, 'c> {
+    ev: &'s mut Evaluator<'c>,
+    w: Workload,
+    scale: Scale,
+    kernel: &'s DecodedKernel,
+    /// Tunable pcs; candidate masks index this vector.
+    pcs: Vec<usize>,
+    budget: usize,
+    evaluations: usize,
+    /// Intra-search memo: mask → (cycles, energy).
+    seen: HashMap<Vec<bool>, (u64, f64)>,
+    best_mask: Vec<bool>,
+    best: (u64, f64),
+    trajectory: Vec<TrajectoryPoint>,
+}
+
+impl SearchState<'_, '_> {
+    fn table_of(&self, mask: &[bool]) -> OffloadPolicyTable {
+        let mut t = OffloadPolicyTable::default();
+        for (&pc, &near) in self.pcs.iter().zip(mask) {
+            t.set(&self.kernel.name, pc as u32, if near { Loc::N } else { Loc::F });
+        }
+        t
+    }
+
+    /// Evaluate one mask. Returns `None` once the budget is exhausted
+    /// (already-seen masks are free and always answer).
+    fn eval(&mut self, mask: &[bool]) -> Result<Option<(u64, f64)>> {
+        if let Some(&obj) = self.seen.get(mask) {
+            return Ok(Some(obj));
+        }
+        if self.evaluations >= self.budget {
+            return Ok(None);
+        }
+        let table = self.table_of(mask);
+        let r = self.ev.eval(self.w, self.scale, &policy_pairs(&table))?;
+        ensure!(
+            r.correct,
+            "{}: candidate policy changed functional output — placement must be timing-only",
+            self.w.name()
+        );
+        let obj = (r.cycles, r.energy_j);
+        let idx = self.evaluations;
+        self.evaluations += 1;
+        self.seen.insert(mask.to_vec(), obj);
+        if lt(obj, self.best) {
+            self.best = obj;
+            self.best_mask = mask.to_vec();
+            self.trajectory.push(TrajectoryPoint { evaluation: idx, cycles: r.cycles });
+        }
+        Ok(Some(obj))
+    }
+
+    fn finish(self, mode: &'static str) -> SearchOutcome {
+        let best: BTreeMap<u32, Loc> = self
+            .pcs
+            .iter()
+            .zip(&self.best_mask)
+            .map(|(&pc, &near)| (pc as u32, if near { Loc::N } else { Loc::F }))
+            .collect();
+        SearchOutcome {
+            best,
+            best_cycles: self.best.0,
+            best_energy_j: self.best.1,
+            mode,
+            evaluations: self.evaluations,
+            trajectory: self.trajectory,
+        }
+    }
+}
+
+/// Search the policy space of one kernel within `budget` evaluations.
+pub fn search_policy(
+    ev: &mut Evaluator,
+    w: Workload,
+    scale: Scale,
+    kernel: &DecodedKernel,
+    budget: usize,
+    seed: u64,
+) -> Result<SearchOutcome> {
+    let pcs = kernel.tunable_pcs();
+    let k = pcs.len();
+    let budget = budget.max(1);
+    // Seed assignment = the Algorithm-1 annotation with the decode-time
+    // unknown → far fallback applied; under `Explicit` it reproduces
+    // CompilerAnnotated timing bit-for-bit.
+    let seed_mask: Vec<bool> = pcs.iter().map(|&pc| kernel.ops[pc].hint == Loc::N).collect();
+
+    let mut st = SearchState {
+        ev,
+        w,
+        scale,
+        kernel,
+        pcs,
+        budget,
+        evaluations: 0,
+        seen: HashMap::new(),
+        best_mask: seed_mask.clone(),
+        best: (u64::MAX, f64::INFINITY),
+        trajectory: Vec::new(),
+    };
+    // The seed is always candidate #0: with it in the space the tuned
+    // policy can never lose to the compiler heuristic.
+    st.eval(&seed_mask)?;
+
+    let mode = if k == 0 {
+        "seed-only"
+    } else if k <= EXHAUSTIVE_MAX_PCS && (1usize << k) <= budget {
+        for bits in 0..(1u64 << k) {
+            let mask: Vec<bool> = (0..k).map(|i| bits >> i & 1 == 1).collect();
+            if st.eval(&mask)?.is_none() {
+                break;
+            }
+        }
+        "exhaustive"
+    } else {
+        let cur = greedy(&mut st, &seed_mask)?;
+        anneal(&mut st, cur, seed ^ stable_hash(&kernel.name))?;
+        "greedy+anneal"
+    };
+    Ok(st.finish(mode))
+}
+
+/// Deterministic first-improvement bit-flip passes from `start`.
+fn greedy(st: &mut SearchState, start: &[bool]) -> Result<Vec<bool>> {
+    let mut cur = start.to_vec();
+    let mut cur_obj = match st.eval(&cur)? {
+        Some(o) => o,
+        None => return Ok(cur),
+    };
+    loop {
+        let mut improved = false;
+        for i in 0..cur.len() {
+            let mut cand = cur.clone();
+            cand[i] = !cand[i];
+            let obj = match st.eval(&cand)? {
+                Some(o) => o,
+                None => return Ok(cur),
+            };
+            if lt(obj, cur_obj) {
+                cur = cand;
+                cur_obj = obj;
+                improved = true;
+            }
+        }
+        if !improved {
+            return Ok(cur);
+        }
+    }
+}
+
+/// Seeded simulated annealing from `start` until the budget runs out.
+fn anneal(st: &mut SearchState, start: Vec<bool>, seed: u64) -> Result<()> {
+    let n = start.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let mut rng = Prng::new(seed);
+    let mut cur = start;
+    let mut cur_obj = match st.eval(&cur)? {
+        Some(o) => o,
+        None => return Ok(()),
+    };
+    // The step cap bounds re-visits of already-memoized masks once the
+    // budget outpaces the reachable neighborhood.
+    let max_steps = st.budget.saturating_mul(64).max(256);
+    for _ in 0..max_steps {
+        if st.evaluations >= st.budget {
+            break;
+        }
+        let mut cand = cur.clone();
+        cand[rng.below(n as u64) as usize] ^= true;
+        if rng.chance(0.3) {
+            cand[rng.below(n as u64) as usize] ^= true;
+        }
+        let obj = match st.eval(&cand)? {
+            Some(o) => o,
+            None => break,
+        };
+        // Relative-cycles Metropolis criterion; temperature cools
+        // linearly with spent budget.
+        let progress = st.evaluations as f64 / st.budget as f64;
+        let t = (0.08 * (1.0 - progress)).max(0.005);
+        let accept = if lt(obj, cur_obj) {
+            true
+        } else {
+            let delta = (obj.0 as f64 - cur_obj.0 as f64) / cur_obj.0.max(1) as f64;
+            (rng.f32() as f64) < (-delta / t).exp()
+        };
+        if accept {
+            cur = cand;
+            cur_obj = obj;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_order_is_cycles_then_energy() {
+        assert!(lt((10, 5.0), (11, 0.0)));
+        assert!(lt((10, 1.0), (10, 2.0)));
+        assert!(!lt((10, 2.0), (10, 2.0)));
+        assert!(!lt((12, 0.0), (11, 9.0)));
+    }
+}

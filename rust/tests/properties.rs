@@ -12,7 +12,13 @@ use mpu::analysis::defs::ReachingDefs;
 use mpu::analysis::race;
 use mpu::compiler::cfg::Cfg;
 use mpu::compiler::compile;
-use mpu::config::{GpuConfig, MachineConfig, OffloadPolicy, SchedPolicy, SmemLocation};
+use mpu::config::{
+    GpuConfig, MachineConfig, OffloadPolicy, OffloadPolicyTable, SchedPolicy, SmemLocation,
+};
+use mpu::coordinator::sweep::compile_kernel;
+use mpu::coordinator::SimCache;
+use mpu::isa::instr::Loc;
+use mpu::tuner::{tune, TuneOptions};
 use mpu::core::Machine;
 use mpu::gpu::GpuMachine;
 use mpu::isa::program::ParamValue;
@@ -548,4 +554,64 @@ fn paper_scale_machine_also_runs() {
     cfg.bank_bytes = 64 << 10; // keep the functional memory small
     let r = mpu::coordinator::run_workload_scaled(Workload::Axpy, &cfg, Scale::Tiny).unwrap();
     assert!(r.correct, "paper-scale axpy incorrect (max_err {})", r.max_err);
+}
+
+#[test]
+fn explicit_policy_tables_never_change_outputs() {
+    // Placement is timing-only: ANY valid explicit policy table must
+    // leave every Table-I workload's output bit-identical to the
+    // CompilerAnnotated run.
+    let base = MachineConfig::scaled();
+    for w in Workload::ALL {
+        let annotated = mpu::coordinator::run_workload_scaled(w, &base, Scale::Tiny).unwrap();
+        assert!(annotated.correct, "{w:?} incorrect under CompilerAnnotated");
+        let bits: Vec<u32> = annotated.output.iter().map(|v| v.to_bits()).collect();
+        let kernel = compile_kernel(w, base.smem_location == SmemLocation::NearBank).unwrap();
+        check_cases(&format!("policy_table_{}", w.name()), 2, |rng| {
+            let mut table = OffloadPolicyTable::default();
+            for pc in 0..kernel.ops.len() {
+                if rng.chance(0.5) {
+                    let loc = [Loc::N, Loc::F, Loc::B, Loc::U][rng.range(0, 4)];
+                    table.set(&kernel.name, pc as u32, loc);
+                }
+            }
+            let mut cfg = base.clone();
+            cfg.offload_policy = OffloadPolicy::Explicit;
+            cfg.offload_table = table;
+            let r = mpu::coordinator::run_workload_scaled(w, &cfg, Scale::Tiny)
+                .unwrap_or_else(|e| panic!("{w:?} failed under explicit table: {e}"));
+            assert!(
+                r.correct,
+                "{w:?} incorrect under a random explicit table (max_err {})",
+                r.max_err
+            );
+            let got: Vec<u32> = r.output.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, bits, "{w:?} output bits changed under an explicit policy table");
+        });
+    }
+}
+
+#[test]
+fn tuner_search_is_deterministic_for_any_seed() {
+    // No ambient RNG and no wall clock anywhere in the search: the same
+    // seed and budget must reproduce the same best policy, cycles and
+    // trajectory, even across fresh caches.
+    check_cases("tuner_determinism", 3, |rng| {
+        let opts = TuneOptions {
+            workloads: vec![Workload::Axpy],
+            budget: 3 + rng.range(0, 3),
+            seed: rng.next_u64(),
+            ..TuneOptions::default()
+        };
+        let a = tune(&opts, &SimCache::default()).unwrap();
+        let b = tune(&opts, &SimCache::default()).unwrap();
+        let (wa, wb) = (&a.workloads[0], &b.workloads[0]);
+        assert_eq!(wa.best_policy, wb.best_policy);
+        assert_eq!(wa.tuned_cycles, wb.tuned_cycles);
+        assert_eq!(wa.search_mode, wb.search_mode);
+        let path = |r: &mpu::tuner::WorkloadTune| -> Vec<(usize, u64)> {
+            r.trajectory.iter().map(|t| (t.evaluation, t.cycles)).collect()
+        };
+        assert_eq!(path(wa), path(wb));
+    });
 }
