@@ -584,31 +584,71 @@ pub struct ServeConfig {
     /// `mpu submit` fans out client-side instead of talking to one
     /// daemon.
     pub workers: Vec<String>,
+    /// TCP connect deadline for client and federation sockets
+    /// (`MPU_CONNECT_TIMEOUT_MS`).
+    pub connect_timeout: std::time::Duration,
+    /// Read/write deadline on streamed and probe sockets
+    /// (`MPU_IO_TIMEOUT_MS`). Generous by default — a cold tiny suite
+    /// takes seconds, a large fresh batch minutes.
+    pub io_timeout: std::time::Duration,
+    /// Attempts per socket operation before a failure is treated as
+    /// fatal/dead (`MPU_RETRIES`).
+    pub retries: u32,
+    /// Base backoff delay between retries (`MPU_BACKOFF_MS`); grows
+    /// exponentially with seeded jitter, capped internally.
+    pub backoff: std::time::Duration,
+    /// Admission cap on queued points before submits get `busy`
+    /// (`MPU_MAX_QUEUE`); 0 disables the cap.
+    pub max_queue: usize,
+    /// Fault-injection spec (`MPU_FAULTS`); `None` disables the chaos
+    /// plane.
+    pub faults: Option<String>,
 }
 
 impl ServeConfig {
     pub const DEFAULT_ADDR: &'static str = "127.0.0.1:7117";
     pub const DEFAULT_STORE_DIR: &'static str = ".mpu-store";
     pub const DEFAULT_STORE_MAX_MB: u64 = 512;
+    pub const DEFAULT_CONNECT_TIMEOUT_MS: u64 = 5_000;
+    pub const DEFAULT_IO_TIMEOUT_MS: u64 = 300_000;
+    pub const DEFAULT_RETRIES: u32 = 4;
+    pub const DEFAULT_BACKOFF_MS: u64 = 50;
+    pub const DEFAULT_MAX_QUEUE: usize = 4096;
 
     /// Built-in defaults with environment overrides applied.
     pub fn from_env() -> ServeConfig {
+        fn env_u64(key: &str) -> Option<u64> {
+            std::env::var(key).ok().and_then(|v| v.parse::<u64>().ok())
+        }
         let addr =
             std::env::var("MPU_ADDR").unwrap_or_else(|_| Self::DEFAULT_ADDR.to_string());
         let store_dir = std::env::var("MPU_STORE_DIR")
             .unwrap_or_else(|_| Self::DEFAULT_STORE_DIR.to_string());
-        let max_mb = std::env::var("MPU_STORE_MAX_MB")
-            .ok()
-            .and_then(|v| v.parse::<u64>().ok())
-            .unwrap_or(Self::DEFAULT_STORE_MAX_MB);
+        let max_mb = env_u64("MPU_STORE_MAX_MB").unwrap_or(Self::DEFAULT_STORE_MAX_MB);
         let workers = std::env::var("MPU_WORKERS")
             .map(|v| Self::parse_workers(&v))
             .unwrap_or_default();
+        let connect_ms =
+            env_u64("MPU_CONNECT_TIMEOUT_MS").unwrap_or(Self::DEFAULT_CONNECT_TIMEOUT_MS);
+        let io_ms = env_u64("MPU_IO_TIMEOUT_MS").unwrap_or(Self::DEFAULT_IO_TIMEOUT_MS);
+        let retries =
+            env_u64("MPU_RETRIES").map(|v| v as u32).unwrap_or(Self::DEFAULT_RETRIES);
+        let backoff_ms = env_u64("MPU_BACKOFF_MS").unwrap_or(Self::DEFAULT_BACKOFF_MS);
+        let max_queue = env_u64("MPU_MAX_QUEUE")
+            .map(|v| v as usize)
+            .unwrap_or(Self::DEFAULT_MAX_QUEUE);
+        let faults = std::env::var("MPU_FAULTS").ok().filter(|v| !v.trim().is_empty());
         ServeConfig {
             addr,
             store_dir: Some(std::path::PathBuf::from(store_dir)),
             store_max_bytes: max_mb * 1024 * 1024,
             workers,
+            connect_timeout: std::time::Duration::from_millis(connect_ms),
+            io_timeout: std::time::Duration::from_millis(io_ms),
+            retries: retries.max(1),
+            backoff: std::time::Duration::from_millis(backoff_ms),
+            max_queue,
+            faults,
         }
     }
 

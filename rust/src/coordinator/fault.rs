@@ -1,0 +1,455 @@
+//! Deterministic fault-injection plane for the sweep service.
+//!
+//! A `FaultPlan` is parsed from a compact spec string (`--faults` /
+//! `MPU_FAULTS`) and activated process-wide. Every injection point in the
+//! transport, store, and federation layers consults [`should_fail`] with a
+//! stable context string; decisions are drawn from a seeded [`Prng`] stream
+//! per `(class, ctx)` pair, so a decision at call `k` is a pure function of
+//! `(seed, class, ctx, k)` — independent of thread interleaving. The same
+//! seed replays the same fault schedule exactly.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::prng::Prng;
+
+use super::sweep::stable_hash;
+
+/// The injectable failure classes, one per infrastructure seam.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultClass {
+    /// TCP connect refused before the handshake.
+    Connect,
+    /// Mid-stream connection reset on a socket read or write.
+    Disconnect,
+    /// Stalled socket I/O: the read/write times out as if the peer hung.
+    Stall,
+    /// Entry file write torn in half (crash mid-write).
+    TornEntry,
+    /// `index.json` write torn in half (crash mid-write).
+    TornIndex,
+    /// Store write fails with "no space left on device".
+    Enospc,
+}
+
+impl FaultClass {
+    pub const ALL: [FaultClass; 6] = [
+        FaultClass::Connect,
+        FaultClass::Disconnect,
+        FaultClass::Stall,
+        FaultClass::TornEntry,
+        FaultClass::TornIndex,
+        FaultClass::Enospc,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultClass::Connect => "connect",
+            FaultClass::Disconnect => "disconnect",
+            FaultClass::Stall => "stall",
+            FaultClass::TornEntry => "torn_entry",
+            FaultClass::TornIndex => "torn_index",
+            FaultClass::Enospc => "enospc",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<FaultClass> {
+        FaultClass::ALL.into_iter().find(|c| c.name() == name)
+    }
+
+    fn tag(self) -> u64 {
+        stable_hash(self.name())
+    }
+}
+
+/// Per-class injection rule: probability per call, optional cap on how many
+/// times the fault fires per `(class, ctx)` stream.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultRule {
+    pub rate: f64,
+    pub budget: Option<u64>,
+}
+
+/// A parsed fault specification: seed plus per-class rules.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    rules: Vec<(FaultClass, FaultRule)>,
+}
+
+impl FaultPlan {
+    /// Parse a spec like `seed=42,connect=1.0:2,disconnect=0.3`.
+    ///
+    /// Grammar: comma-separated terms, each either `seed=<u64>` or
+    /// `<class>=<rate>[:<budget>]` with rate in `[0, 1]`. The default seed
+    /// is 1 so a bare class list is still deterministic.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 1u64;
+        let mut rules: Vec<(FaultClass, FaultRule)> = Vec::new();
+        for term in spec.split(',') {
+            let term = term.trim();
+            if term.is_empty() {
+                continue;
+            }
+            let (key, val) = term
+                .split_once('=')
+                .with_context(|| format!("fault term `{term}` is not key=value"))?;
+            let key = key.trim();
+            let val = val.trim();
+            if key == "seed" {
+                seed = val
+                    .parse()
+                    .with_context(|| format!("bad fault seed `{val}`"))?;
+                continue;
+            }
+            let Some(class) = FaultClass::from_name(key) else {
+                bail!(
+                    "unknown fault class `{key}` (expected one of {})",
+                    FaultClass::ALL
+                        .iter()
+                        .map(|c| c.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            };
+            let (rate_s, budget) = match val.split_once(':') {
+                Some((r, b)) => {
+                    let b: u64 = b
+                        .parse()
+                        .with_context(|| format!("bad fault budget `{b}` for `{key}`"))?;
+                    (r, Some(b))
+                }
+                None => (val, None),
+            };
+            let rate: f64 = rate_s
+                .parse()
+                .with_context(|| format!("bad fault rate `{rate_s}` for `{key}`"))?;
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("fault rate for `{key}` must be in [0, 1], got {rate}");
+            }
+            if let Some(slot) = rules.iter_mut().find(|(c, _)| *c == class) {
+                slot.1 = FaultRule { rate, budget };
+            } else {
+                rules.push((class, FaultRule { rate, budget }));
+            }
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+
+    pub fn rule(&self, class: FaultClass) -> Option<FaultRule> {
+        self.rules
+            .iter()
+            .find(|(c, _)| *c == class)
+            .map(|(_, r)| *r)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+/// One injection decision, recorded for replay verification.
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    pub class: FaultClass,
+    pub ctx: String,
+    pub call: u64,
+    pub fired: bool,
+}
+
+struct StreamState {
+    prng: Prng,
+    calls: u64,
+    fired: u64,
+}
+
+/// Draws fault decisions from seeded per-`(class, ctx)` streams and keeps an
+/// event log so a chaos run can be replay-checked against the same plan.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    streams: Mutex<HashMap<(FaultClass, u64), StreamState>>,
+    log: Mutex<Vec<FaultEvent>>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            plan,
+            streams: Mutex::new(HashMap::new()),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Decide whether the fault of `class` fires for this call at `ctx`.
+    ///
+    /// The decision stream for a `(class, ctx)` pair is seeded
+    /// `plan.seed ^ class.tag() ^ stable_hash(ctx)`; budgets are tracked per
+    /// stream so every decision stays a pure function of the call index.
+    pub fn check(&self, class: FaultClass, ctx: &str) -> bool {
+        let Some(rule) = self.plan.rule(class) else {
+            return false;
+        };
+        let key = (class, stable_hash(ctx));
+        let mut streams = self.streams.lock().unwrap_or_else(|e| e.into_inner());
+        let st = streams.entry(key).or_insert_with(|| StreamState {
+            prng: Prng::new(self.plan.seed ^ class.tag() ^ stable_hash(ctx)),
+            calls: 0,
+            fired: 0,
+        });
+        st.calls += 1;
+        // Always draw so the stream position depends only on the call count.
+        let drew = st.prng.chance(rule.rate);
+        let fire = drew && st.fired < rule.budget.unwrap_or(u64::MAX);
+        if fire {
+            st.fired += 1;
+        }
+        let ev = FaultEvent {
+            class,
+            ctx: ctx.to_string(),
+            call: st.calls,
+            fired: fire,
+        };
+        drop(streams);
+        self.log.lock().unwrap_or_else(|e| e.into_inner()).push(ev);
+        fire
+    }
+
+    /// Snapshot of every decision drawn so far, in draw order.
+    pub fn log(&self) -> Vec<FaultEvent> {
+        self.log
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// How many faults of `class` actually fired.
+    pub fn injected(&self, class: FaultClass) -> u64 {
+        self.log
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .filter(|e| e.class == class && e.fired)
+            .count() as u64
+    }
+
+    pub fn total_injected(&self) -> u64 {
+        self.log
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .filter(|e| e.fired)
+            .count() as u64
+    }
+}
+
+// --- process-wide fault plane -----------------------------------------------
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+fn slot() -> &'static Mutex<Option<Arc<FaultInjector>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<FaultInjector>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install `plan` as the process-wide fault plane and return its injector.
+pub fn activate(plan: FaultPlan) -> Arc<FaultInjector> {
+    let inj = Arc::new(FaultInjector::new(plan));
+    *slot().lock().unwrap_or_else(|e| e.into_inner()) = Some(Arc::clone(&inj));
+    ACTIVE.store(true, Ordering::SeqCst);
+    inj
+}
+
+/// Remove the process-wide fault plane (all injection points become no-ops).
+pub fn deactivate() {
+    ACTIVE.store(false, Ordering::SeqCst);
+    *slot().lock().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+/// The currently active injector, if any.
+pub fn active() -> Option<Arc<FaultInjector>> {
+    if !ACTIVE.load(Ordering::SeqCst) {
+        return None;
+    }
+    slot().lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Fast-path query used by the injection points. False when no plan is active.
+pub fn should_fail(class: FaultClass, ctx: &str) -> bool {
+    match active() {
+        Some(inj) => inj.check(class, ctx),
+        None => false,
+    }
+}
+
+// --- hardening knobs ---------------------------------------------------------
+
+/// Socket deadlines applied to client and federation connections.
+#[derive(Debug, Clone, Copy)]
+pub struct Timeouts {
+    pub connect: Duration,
+    pub io: Duration,
+}
+
+impl Default for Timeouts {
+    fn default() -> Timeouts {
+        Timeouts {
+            connect: Duration::from_millis(5_000),
+            io: Duration::from_millis(300_000),
+        }
+    }
+}
+
+/// Bounded exponential backoff with seeded jitter — like the fault plane,
+/// retry pacing has no ambient randomness.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub attempts: u32,
+    pub base_delay: Duration,
+    pub max_delay: Duration,
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 4,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_millis(2_000),
+            seed: 0x6d70_755f_7265_7472, // "mpu_retr"
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay before retry number `attempt` (0-based) of the operation at
+    /// `ctx`: exponential growth capped at `max_delay`, scaled by a
+    /// deterministic jitter fraction in `[0.5, 1.0]`.
+    pub fn delay(&self, ctx: &str, attempt: u32) -> Duration {
+        let exp = self
+            .base_delay
+            .saturating_mul(1u32.checked_shl(attempt.min(16)).unwrap_or(u32::MAX));
+        let capped = exp.min(self.max_delay);
+        let mut prng = Prng::new(
+            self.seed ^ stable_hash(ctx) ^ (attempt as u64).wrapping_mul(0x9E37_79B9),
+        );
+        let frac = 0.5 + 0.5 * prng.f32() as f64;
+        Duration::from_secs_f64(capped.as_secs_f64() * frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let plan = FaultPlan::parse("seed=42, connect=1.0:2, disconnect=0.3").unwrap();
+        assert_eq!(plan.seed, 42);
+        let c = plan.rule(FaultClass::Connect).unwrap();
+        assert_eq!(c.rate, 1.0);
+        assert_eq!(c.budget, Some(2));
+        let d = plan.rule(FaultClass::Disconnect).unwrap();
+        assert_eq!(d.rate, 0.3);
+        assert_eq!(d.budget, None);
+        assert!(plan.rule(FaultClass::Enospc).is_none());
+    }
+
+    #[test]
+    fn default_seed_and_empty_terms() {
+        let plan = FaultPlan::parse("stall=0.5,,").unwrap();
+        assert_eq!(plan.seed, 1);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FaultPlan::parse("connect").is_err());
+        assert!(FaultPlan::parse("warp_divergence=0.5").is_err());
+        assert!(FaultPlan::parse("connect=1.5").is_err());
+        assert!(FaultPlan::parse("connect=-0.1").is_err());
+        assert!(FaultPlan::parse("connect=0.5:x").is_err());
+        assert!(FaultPlan::parse("seed=abc").is_err());
+    }
+
+    #[test]
+    fn same_plan_replays_identically() {
+        let plan = FaultPlan::parse("seed=7,disconnect=0.4,stall=0.9:3").unwrap();
+        let a = FaultInjector::new(plan.clone());
+        for i in 0..200 {
+            let ctx = format!("peer{}", i % 3);
+            a.check(FaultClass::Disconnect, &ctx);
+            a.check(FaultClass::Stall, &ctx);
+        }
+        let b = FaultInjector::new(plan);
+        for ev in a.log() {
+            assert_eq!(b.check(ev.class, &ev.ctx), ev.fired, "event {ev:?}");
+        }
+    }
+
+    #[test]
+    fn budget_caps_per_context_stream() {
+        let plan = FaultPlan::parse("seed=3,connect=1.0:2").unwrap();
+        let inj = FaultInjector::new(plan);
+        for _ in 0..10 {
+            inj.check(FaultClass::Connect, "a");
+            inj.check(FaultClass::Connect, "b");
+        }
+        // rate 1.0 fires on every draw until the per-(class,ctx) budget runs out.
+        assert_eq!(inj.injected(FaultClass::Connect), 4);
+        let fired_a: Vec<bool> = inj
+            .log()
+            .iter()
+            .filter(|e| e.ctx == "a")
+            .map(|e| e.fired)
+            .collect();
+        assert_eq!(&fired_a[..3], &[true, true, false]);
+    }
+
+    #[test]
+    fn contexts_are_independent_streams() {
+        let plan = FaultPlan::parse("seed=11,stall=0.5").unwrap();
+        let inj = FaultInjector::new(plan.clone());
+        let a: Vec<bool> = (0..64).map(|_| inj.check(FaultClass::Stall, "a")).collect();
+        // Interleaving another context does not perturb a's stream.
+        let inj2 = FaultInjector::new(plan);
+        let mut a2 = Vec::new();
+        for _ in 0..64 {
+            inj2.check(FaultClass::Stall, "noise");
+            a2.push(inj2.check(FaultClass::Stall, "a"));
+        }
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn deactivate_clears_the_plane() {
+        let inj = activate(FaultPlan::parse("seed=1,connect=1.0").unwrap());
+        assert!(should_fail(FaultClass::Connect, "x"));
+        assert_eq!(inj.injected(FaultClass::Connect), 1);
+        deactivate();
+        assert!(!should_fail(FaultClass::Connect, "x"));
+        assert!(active().is_none());
+    }
+
+    #[test]
+    fn retry_delay_is_deterministic_and_bounded() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.delay("w1", 0), p.delay("w1", 0));
+        assert_ne!(p.delay("w1", 0), p.delay("w2", 0));
+        for attempt in 0..40 {
+            let d = p.delay("w1", attempt);
+            assert!(d <= p.max_delay);
+            assert!(d >= p.base_delay / 2 || attempt == 0);
+        }
+        // Growth: attempt 3 should be well above attempt 0's ceiling.
+        assert!(p.delay("w1", 3) > p.base_delay);
+    }
+}

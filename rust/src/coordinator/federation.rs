@@ -21,12 +21,13 @@
 //! a worker dies mid-batch only its *unfinished* points are
 //! repartitioned over the survivors on the next round.
 
+use super::fault::{RetryPolicy, Timeouts};
 use super::proto::{
     self, PointSpec, PointSummary, ProgressBody, Request, Response, ResultBody, StatusBody,
     StreamOutcome, SubmitReply, SubmitRequest, WireReport, WorkerStatus, PROTO_MAJOR,
     PROTO_VERSION,
 };
-use super::service::{write_line, PointSource};
+use super::service::{summarize, write_line, PointSource, Service};
 use super::sweep::stable_hash;
 use super::RunReport;
 use anyhow::Result;
@@ -34,7 +35,7 @@ use std::collections::HashMap;
 use std::io::BufWriter;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Virtual nodes per worker on the hash ring. Enough that a small
@@ -73,6 +74,16 @@ pub struct FedReply {
 /// A fixed set of worker daemons a batch can be sharded across.
 pub struct Federation {
     workers: Vec<String>,
+    /// Socket deadlines on worker links.
+    timeouts: Timeouts,
+    /// Bounded backoff applied before a worker failure is treated as
+    /// fatal (transient errors) or as death (transport errors).
+    retry: RetryPolicy,
+    /// Local simulation fallback for a batch whose workers all died;
+    /// `None` keeps the historical all-dead hard failure.
+    fallback: Option<Arc<Service>>,
+    retries: AtomicU64,
+    degraded_batches: AtomicU64,
 }
 
 /// Shared mutable state of one federated submit: the merge slots and
@@ -87,10 +98,44 @@ struct Merge<F> {
 
 impl Federation {
     pub fn new(workers: Vec<String>) -> Result<Federation> {
+        Federation::with_config(workers, Timeouts::default(), RetryPolicy::default())
+    }
+
+    /// [`Federation::new`] with explicit deadlines and retry policy
+    /// (from [`ServeConfig`](crate::config::ServeConfig) knobs).
+    pub fn with_config(
+        workers: Vec<String>,
+        timeouts: Timeouts,
+        retry: RetryPolicy,
+    ) -> Result<Federation> {
         let workers: Vec<String> =
             workers.into_iter().map(|w| w.trim().to_string()).filter(|w| !w.is_empty()).collect();
         anyhow::ensure!(!workers.is_empty(), "a federation needs at least one worker address");
-        Ok(Federation { workers })
+        Ok(Federation {
+            workers,
+            timeouts,
+            retry,
+            fallback: None,
+            retries: AtomicU64::new(0),
+            degraded_batches: AtomicU64::new(0),
+        })
+    }
+
+    /// Attach a local [`Service`] to simulate the leftover points of a
+    /// batch whose workers have all died (graceful degradation; the
+    /// reply carries `degraded: true`).
+    pub fn set_fallback(&mut self, svc: Arc<Service>) {
+        self.fallback = Some(svc);
+    }
+
+    /// Worker-link operations retried after a transient failure.
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Batches that fell back to local simulation.
+    pub fn degraded_batches(&self) -> u64 {
+        self.degraded_batches.load(Ordering::Relaxed)
     }
 
     pub fn workers(&self) -> &[String] {
@@ -165,11 +210,14 @@ impl Federation {
     }
 
     /// Shard a batch across the fleet, streaming merged events as
-    /// points complete. Points of a worker that dies mid-batch are
-    /// repartitioned across the survivors (their already-streamed
-    /// results are kept); the submit fails only when a worker rejects
-    /// the batch outright (a config error fails everywhere) or no
-    /// alive worker remains.
+    /// points complete. Every worker link gets deadlines and a bounded
+    /// seeded-backoff retry (idempotent via `request_id`); points of a
+    /// worker that stays dead are repartitioned across the survivors
+    /// (their already-streamed results are kept). The submit fails only
+    /// when a worker keeps rejecting the batch (a config error fails
+    /// everywhere) or when no alive worker remains *and* no local
+    /// fallback is attached — with one, the leftovers are simulated
+    /// locally and the reply is flagged `degraded`.
     pub fn submit_streamed(
         &self,
         req: &SubmitRequest,
@@ -190,6 +238,7 @@ impl Federation {
             on_event,
         });
         let mut alive: Vec<bool> = vec![true; self.workers.len()];
+        let mut degraded = false;
         loop {
             let pending: Vec<usize> = {
                 let m = merge.lock().unwrap();
@@ -200,11 +249,45 @@ impl Federation {
             }
             let alive_idx: Vec<usize> =
                 (0..alive.len()).filter(|&i| alive[i]).collect();
-            anyhow::ensure!(
-                !alive_idx.is_empty(),
-                "every worker died with {} of {total} points unfinished",
-                pending.len()
-            );
+            if alive_idx.is_empty() {
+                let Some(fallback) = &self.fallback else {
+                    anyhow::bail!(
+                        "every worker died with {} of {total} points unfinished",
+                        pending.len()
+                    );
+                };
+                // Graceful degradation: the whole fleet is gone, so
+                // simulate the leftover points locally. Results stay
+                // exact; the reply's `degraded` flag records that the
+                // serving path was impaired.
+                self.degraded_batches.fetch_add(1, Ordering::Relaxed);
+                degraded = true;
+                let fb_points: Vec<_> = pending.iter().map(|&i| points[i].clone()).collect();
+                let job = fallback.submit(fb_points, req.priority, req.fresh);
+                let results = job.wait()?;
+                let mut guard = merge.lock().unwrap();
+                let m = &mut *guard;
+                for (&global, pr) in pending.iter().zip(&results) {
+                    if m.summaries[global].is_some() {
+                        continue;
+                    }
+                    m.summaries[global] = Some(summarize(&pr.point, &pr.report, pr.source));
+                    m.reports[global] = req
+                        .return_reports
+                        .then(|| WireReport::from_report(pr.point.scale, &pr.report));
+                    m.completed += 1;
+                    let completed = m.completed;
+                    let summary = m.summaries[global].as_ref().unwrap();
+                    let report = m.reports[global].as_ref();
+                    (m.on_event)(FedEvent::Result { index: global, summary, report });
+                    (m.on_event)(FedEvent::Progress {
+                        completed,
+                        total,
+                        elapsed_ms: t0.elapsed().as_millis() as u64,
+                    });
+                }
+                break;
+            }
             let shares = self.partition(&keys, &pending, &alive_idx);
             let outcomes: Vec<(usize, Result<StreamOutcome>)> = std::thread::scope(|scope| {
                 let handles: Vec<_> = shares
@@ -224,10 +307,20 @@ impl Federation {
                             suite: false,
                             workloads: vec![],
                             variants: vec![],
+                            // One id per share, reused across retry
+                            // attempts: a retried stream attaches to
+                            // the worker's in-flight job instead of
+                            // re-simulating, and replays of finished
+                            // points hit the duplicate-index skip in
+                            // the merge below.
+                            request_id: Some(proto::new_request_id(addr)),
                         };
                         let merge = &merge;
+                        let timeouts = self.timeouts;
+                        let retry = self.retry;
+                        let retries_ctr = &self.retries;
                         scope.spawn(move || {
-                            let res = proto::submit_streamed(addr, &wreq, |resp| {
+                            let merge_one = |resp: &Response| {
                                 let Response::Result(body) = resp else { return };
                                 // The worker's indices address its share.
                                 let Some(&global) = share.get(body.index) else { return };
@@ -248,7 +341,56 @@ impl Federation {
                                     total,
                                     elapsed_ms: t0.elapsed().as_millis() as u64,
                                 });
-                            });
+                            };
+                            // Bounded retry with seeded-jitter backoff:
+                            // transient rejections, busy signals and
+                            // transport hiccups get `retry.attempts`
+                            // tries before the worker is treated as
+                            // failed/dead for this batch.
+                            let mut failures: u32 = 0;
+                            let res = loop {
+                                let attempt = proto::submit_streamed_with(
+                                    addr,
+                                    &wreq,
+                                    Some(timeouts),
+                                    |resp| merge_one(resp),
+                                );
+                                match attempt {
+                                    Ok(StreamOutcome::Done(reply)) => {
+                                        break Ok(StreamOutcome::Done(reply))
+                                    }
+                                    Ok(StreamOutcome::ServerError(msg)) => {
+                                        failures += 1;
+                                        if failures >= retry.attempts {
+                                            break Ok(StreamOutcome::ServerError(msg));
+                                        }
+                                    }
+                                    Ok(StreamOutcome::Busy { retry_after_ms }) => {
+                                        failures += 1;
+                                        if failures >= retry.attempts {
+                                            break Err(anyhow::anyhow!(
+                                                "worker {addr} stayed busy through \
+                                                 {failures} attempts"
+                                            ));
+                                        }
+                                        retries_ctr.fetch_add(1, Ordering::Relaxed);
+                                        std::thread::sleep(
+                                            retry
+                                                .delay(addr, failures - 1)
+                                                .max(Duration::from_millis(retry_after_ms)),
+                                        );
+                                        continue;
+                                    }
+                                    Err(e) => {
+                                        failures += 1;
+                                        if failures >= retry.attempts {
+                                            break Err(e);
+                                        }
+                                    }
+                                }
+                                retries_ctr.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(retry.delay(addr, failures - 1));
+                            };
                             (wi, res)
                         })
                     })
@@ -299,6 +441,7 @@ impl Federation {
             deduped: count(PointSource::Dedup),
             elapsed_ms: t0.elapsed().as_millis() as u64,
             results: summaries,
+            degraded,
         };
         Ok(FedReply {
             reply,
@@ -362,7 +505,13 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    pub fn new(fed: Federation) -> Coordinator {
+    pub fn new(mut fed: Federation) -> Coordinator {
+        // A resident coordinator always degrades gracefully: if the
+        // whole fleet dies mid-batch it simulates the leftovers
+        // locally (storeless) rather than failing the client.
+        if fed.fallback.is_none() {
+            fed.set_fallback(Arc::new(Service::new(None)));
+        }
         Coordinator {
             fed,
             started: Instant::now(),
@@ -408,6 +557,10 @@ impl Coordinator {
             inflight: workers.iter().filter(|w| w.alive).map(|w| w.inflight).sum(),
             active_requests: *self.active.lock().unwrap(),
             workers: Some(workers),
+            admission_rejected: 0,
+            queue_limit: 0,
+            retries: self.fed.retries(),
+            degraded_batches: self.fed.degraded_batches(),
         }
     }
 

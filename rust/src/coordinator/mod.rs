@@ -17,6 +17,7 @@
 //! and redistributes the points of workers that die mid-batch.
 
 pub mod bench;
+pub mod fault;
 pub mod federation;
 pub mod proto;
 pub mod report;
@@ -31,6 +32,7 @@ use crate::sim::Stats;
 use crate::workloads::{Prepared, Scale, Workload};
 use anyhow::Result;
 
+pub use fault::{FaultClass, FaultInjector, FaultPlan, RetryPolicy, Timeouts};
 pub use federation::{Coordinator, FedEvent, FedReply, Federation};
 pub use service::{Service, SweepServer};
 pub use store::{DiskStore, GcOptions, GcReport, StoreConfig};

@@ -36,21 +36,27 @@
 //! coordinator whether a worker understands `point_specs` streaming.
 
 use crate::config::{MachineConfig, MachineKind};
-use crate::coordinator::sweep::{SweepPoint, Target};
+use crate::coordinator::fault::{self, FaultClass, RetryPolicy, Timeouts};
+use crate::coordinator::sweep::{stable_hash, SweepPoint, Target};
 use crate::coordinator::RunReport;
 use crate::workloads::{Scale, Workload};
 use anyhow::{anyhow, Context, Result};
 use serde::{Deserialize, Serialize};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::collections::HashSet;
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Protocol feature level. v2 adds the `hello` handshake, streamed
 /// submits (`stream`), explicit per-point batches (`point_specs`),
 /// full-report transfer (`return_reports` + `result.report`) and the
-/// queue/worker fields of `status`. All v2 additions are append-only,
-/// so v1 and v2 share [`PROTO_MAJOR`] 1.
-pub const PROTO_VERSION: u32 = 2;
+/// queue/worker fields of `status`. v3 adds admission control (the
+/// `busy` response + `retry_after_ms`), idempotent retried submits
+/// (`request_id`), the `degraded` reply flag, and the
+/// retry/degradation counters of `status`. All additions are
+/// append-only, so v1–v3 share [`PROTO_MAJOR`] 1.
+pub const PROTO_VERSION: u32 = 3;
 
 /// Compatibility epoch. Bumped only when a change cannot be expressed
 /// append-only; a server rejects a `hello` from a different major with
@@ -61,7 +67,8 @@ pub const PROTO_MAJOR: u32 = 1;
 /// coordinator requires `point_specs` + `stream` from its workers).
 /// Only capabilities with an actual protocol surface belong here —
 /// the list is append-only once released.
-pub const FEATURES: [&str; 3] = ["stream", "point_specs", "return_reports"];
+pub const FEATURES: [&str; 5] =
+    ["stream", "point_specs", "return_reports", "busy", "request_id"];
 
 fn default_proto_major() -> u32 {
     PROTO_MAJOR
@@ -131,6 +138,11 @@ pub struct SubmitRequest {
     /// results).
     #[serde(default)]
     pub return_reports: bool,
+    /// Idempotency token (v3). A retried submit that carries the same
+    /// `request_id` attaches to the batch already in flight instead of
+    /// re-enqueueing — a dropped-reply retry never re-simulates.
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub request_id: Option<String>,
 }
 
 impl Default for SubmitRequest {
@@ -148,6 +160,7 @@ impl Default for SubmitRequest {
             stream: false,
             point_specs: vec![],
             return_reports: false,
+            request_id: None,
         }
     }
 }
@@ -250,6 +263,11 @@ pub enum Response {
     /// Streamed: running completion count (v2).
     Progress(ProgressBody),
     Done(SubmitReply),
+    /// Admission control (v3): the queue is full; retry the submit
+    /// after `retry_after_ms`. Pre-v3 clients that do not understand
+    /// `busy` surface it as an unexpected-reply error, which is still
+    /// better than unbounded queueing server-side.
+    Busy { retry_after_ms: u64 },
     Bye,
 }
 
@@ -291,6 +309,11 @@ pub struct SubmitReply {
     pub elapsed_ms: u64,
     /// Per-point summaries, in request (variant-major) order.
     pub results: Vec<PointSummary>,
+    /// The batch was served in a degraded mode (v3): a coordinator
+    /// whose workers all died fell back to local simulation. Results
+    /// are still exact — only the serving path was impaired.
+    #[serde(default)]
+    pub degraded: bool,
 }
 
 impl SubmitReply {
@@ -420,6 +443,20 @@ pub struct StatusBody {
     /// Per-worker liveness, present only from a coordinator (v2).
     #[serde(default)]
     pub workers: Option<Vec<WorkerStatus>>,
+    /// Submits refused with `busy` because the queue was full (v3).
+    #[serde(default)]
+    pub admission_rejected: u64,
+    /// Admission cap on queued points; 0 means unbounded (v3).
+    #[serde(default)]
+    pub queue_limit: usize,
+    /// Worker-link operations retried after transient failure (v3;
+    /// coordinator only).
+    #[serde(default)]
+    pub retries: u64,
+    /// Batches served via the degraded local-fallback path (v3;
+    /// coordinator only).
+    #[serde(default)]
+    pub degraded_batches: u64,
 }
 
 /// One worker's liveness row in a coordinator's `status` reply.
@@ -441,23 +478,94 @@ pub struct WorkerStatus {
     pub inflight: usize,
 }
 
+/// Connect to `addr`, consulting the fault plane first: an active
+/// [`FaultClass::Connect`] rule can refuse the connection before any
+/// socket is opened, exactly like a dead peer.
+fn connect_checked(addr: &str, timeout: Option<Duration>) -> Result<TcpStream> {
+    if fault::should_fail(FaultClass::Connect, addr) {
+        anyhow::bail!("connecting to mpu serve at {addr}: connection refused (injected)");
+    }
+    match timeout {
+        None => TcpStream::connect(addr)
+            .with_context(|| format!("connecting to mpu serve at {addr}")),
+        Some(t) => {
+            let sa = addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolving {addr}"))?
+                .next()
+                .ok_or_else(|| anyhow!("{addr} resolves to no address"))?;
+            TcpStream::connect_timeout(&sa, t)
+                .with_context(|| format!("connecting to mpu serve at {addr}"))
+        }
+    }
+}
+
+/// A [`TcpStream`] wrapper that consults the fault plane on every read
+/// and write: an active `disconnect` rule resets the connection
+/// mid-stream, a `stall` rule makes the call time out as if the peer
+/// hung with the socket open. Inert (two atomic loads) when no plan is
+/// active.
+pub(crate) struct FaultStream {
+    inner: TcpStream,
+    ctx: String,
+}
+
+impl FaultStream {
+    pub(crate) fn new(inner: TcpStream, ctx: &str) -> FaultStream {
+        FaultStream { inner, ctx: ctx.to_string() }
+    }
+
+    fn fault(&self) -> Option<io::Error> {
+        if fault::should_fail(FaultClass::Disconnect, &self.ctx) {
+            return Some(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "injected disconnect",
+            ));
+        }
+        if fault::should_fail(FaultClass::Stall, &self.ctx) {
+            return Some(io::Error::new(
+                io::ErrorKind::TimedOut,
+                "injected stall (deadline elapsed)",
+            ));
+        }
+        None
+    }
+}
+
+impl Read for FaultStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if let Some(e) = self.fault() {
+            return Err(e);
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl Write for FaultStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if let Some(e) = self.fault() {
+            return Err(e);
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
 /// Send one request and read one response over a fresh connection.
+/// Deadline-free (a blocking submit may legitimately run for minutes);
+/// callers with liveness requirements use [`request_with_timeout`].
 pub fn request(addr: &str, req: &Request) -> Result<Response> {
-    let stream = TcpStream::connect(addr)
-        .with_context(|| format!("connecting to mpu serve at {addr}"))?;
+    let stream = connect_checked(addr, None)?;
     request_over(stream, req)
 }
 
 /// [`request`] with connect/read/write timeouts — the coordinator's
 /// liveness probes must not hang on a half-dead worker.
 pub fn request_with_timeout(addr: &str, req: &Request, timeout: Duration) -> Result<Response> {
-    let sa = addr
-        .to_socket_addrs()
-        .with_context(|| format!("resolving {addr}"))?
-        .next()
-        .ok_or_else(|| anyhow!("{addr} resolves to no address"))?;
-    let stream = TcpStream::connect_timeout(&sa, timeout)
-        .with_context(|| format!("connecting to mpu serve at {addr}"))?;
+    let stream = connect_checked(addr, Some(timeout))?;
     stream.set_read_timeout(Some(timeout))?;
     stream.set_write_timeout(Some(timeout))?;
     request_over(stream, req)
@@ -513,28 +621,47 @@ pub fn hello(addr: &str, timeout: Duration) -> Result<HelloOutcome> {
 pub enum StreamOutcome {
     Done(SubmitReply),
     ServerError(String),
+    /// The server's admission queue is full (v3); retry after the
+    /// indicated delay.
+    Busy { retry_after_ms: u64 },
 }
 
 /// Submit with `stream` forced on, invoking `on_event` for every
 /// incremental `result`/`progress` record. Returns when the terminal
-/// `done`/`error` record arrives; a connection that drops mid-stream is
-/// an `Err` (the events already delivered remain valid — that is what
-/// lets a coordinator keep a dead worker's completed points).
+/// `done`/`error`/`busy` record arrives; a connection that drops
+/// mid-stream is an `Err` (the events already delivered remain valid —
+/// that is what lets a coordinator keep a dead worker's completed
+/// points).
 pub fn submit_streamed(
     addr: &str,
     req: &SubmitRequest,
+    on_event: impl FnMut(&Response),
+) -> Result<StreamOutcome> {
+    submit_streamed_with(addr, req, None, on_event)
+}
+
+/// [`submit_streamed`] with optional socket deadlines. Both directions
+/// pass through the fault plane ([`FaultStream`]), so chaos runs can
+/// reset or stall the stream mid-flight.
+pub fn submit_streamed_with(
+    addr: &str,
+    req: &SubmitRequest,
+    timeouts: Option<Timeouts>,
     mut on_event: impl FnMut(&Response),
 ) -> Result<StreamOutcome> {
     let mut req = req.clone();
     req.stream = true;
-    let stream = TcpStream::connect(addr)
-        .with_context(|| format!("connecting to mpu serve at {addr}"))?;
-    let mut w = BufWriter::new(stream.try_clone()?);
+    let stream = connect_checked(addr, timeouts.map(|t| t.connect))?;
+    if let Some(t) = timeouts {
+        stream.set_read_timeout(Some(t.io))?;
+        stream.set_write_timeout(Some(t.io))?;
+    }
+    let mut w = BufWriter::new(FaultStream::new(stream.try_clone()?, addr));
     let line = serde_json::to_string(&Request::Submit(req))?;
     w.write_all(line.as_bytes())?;
     w.write_all(b"\n")?;
     w.flush()?;
-    let reader = BufReader::new(stream);
+    let reader = BufReader::new(FaultStream::new(stream, addr));
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
@@ -544,10 +671,79 @@ pub fn submit_streamed(
         match resp {
             Response::Done(reply) => return Ok(StreamOutcome::Done(reply)),
             Response::Error { message } => return Ok(StreamOutcome::ServerError(message)),
+            Response::Busy { retry_after_ms } => {
+                return Ok(StreamOutcome::Busy { retry_after_ms })
+            }
             other => on_event(&other),
         }
     }
     anyhow::bail!("{addr}: connection closed before the terminal done record")
+}
+
+/// Mint a process-unique request id for idempotent retries. The id
+/// only needs to be unique per server conversation; a stable tag hash
+/// plus pid plus a process-wide counter is enough without pulling in
+/// ambient randomness.
+pub fn new_request_id(tag: &str) -> String {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    format!("{:016x}-{}-{n}", stable_hash(tag), std::process::id())
+}
+
+/// A streamed submit hardened for operation under failure: socket
+/// deadlines, bounded seeded-jitter backoff, `busy` honoring, and an
+/// idempotency `request_id` so a retry after a dropped reply attaches
+/// to the in-flight batch instead of re-simulating. Replayed `result`
+/// records from earlier attempts are deduplicated client-side by batch
+/// index, so `on_event` sees each point at most once.
+pub fn submit_resilient(
+    addr: &str,
+    req: &SubmitRequest,
+    timeouts: Timeouts,
+    retry: &RetryPolicy,
+    mut on_event: impl FnMut(&Response),
+) -> Result<StreamOutcome> {
+    let mut req = req.clone();
+    if req.request_id.is_none() {
+        req.request_id = Some(new_request_id(addr));
+    }
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut failures: u32 = 0;
+    loop {
+        let outcome = submit_streamed_with(addr, &req, Some(timeouts), |ev| {
+            if let Response::Result(body) = ev {
+                if !seen.insert(body.index) {
+                    return;
+                }
+            }
+            on_event(ev);
+        });
+        match outcome {
+            Ok(StreamOutcome::Done(reply)) => return Ok(StreamOutcome::Done(reply)),
+            Ok(StreamOutcome::ServerError(msg)) => {
+                // The server rejected the batch itself (bad config,
+                // unknown workload): retrying cannot help.
+                return Ok(StreamOutcome::ServerError(msg));
+            }
+            Ok(StreamOutcome::Busy { retry_after_ms }) => {
+                failures += 1;
+                if failures >= retry.attempts {
+                    return Ok(StreamOutcome::Busy { retry_after_ms });
+                }
+                let delay = retry
+                    .delay(addr, failures - 1)
+                    .max(Duration::from_millis(retry_after_ms));
+                std::thread::sleep(delay);
+            }
+            Err(e) => {
+                failures += 1;
+                if failures >= retry.attempts {
+                    return Err(e);
+                }
+                std::thread::sleep(retry.delay(addr, failures - 1));
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -689,6 +885,69 @@ mod tests {
             }
             other => panic!("expected status, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn request_id_round_trips_and_defaults_off() {
+        // v2 lines lack request_id; it must default to None.
+        let s: Request = serde_json::from_str(r#"{"cmd":"submit","suite":true}"#).unwrap();
+        match s {
+            Request::Submit(s) => assert!(s.request_id.is_none()),
+            other => panic!("expected submit, got {other:?}"),
+        }
+        let mut req = SubmitRequest { suite: true, ..SubmitRequest::default() };
+        // None is skipped on the wire (v2 servers never see the field).
+        let line = serde_json::to_string(&Request::Submit(req.clone())).unwrap();
+        assert!(!line.contains("request_id"));
+        req.request_id = Some("abc-1".into());
+        let line = serde_json::to_string(&Request::Submit(req)).unwrap();
+        assert!(line.contains(r#""request_id":"abc-1""#));
+        match serde_json::from_str::<Request>(&line).unwrap() {
+            Request::Submit(s) => assert_eq!(s.request_id.as_deref(), Some("abc-1")),
+            other => panic!("expected submit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn busy_response_round_trips() {
+        let line = serde_json::to_string(&Response::Busy { retry_after_ms: 200 }).unwrap();
+        assert!(line.contains(r#""resp":"busy""#));
+        match serde_json::from_str::<Response>(&line).unwrap() {
+            Response::Busy { retry_after_ms } => assert_eq!(retry_after_ms, 200),
+            other => panic!("expected busy, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_done_and_status_parse_with_v3_defaults() {
+        // A v2 server's done reply has no `degraded`; a v3 client must
+        // parse it as the non-degraded default.
+        let v2 = r#"{"resp":"done","points":1,"simulated":1,"mem_hits":0,
+            "disk_hits":0,"deduped":0,"elapsed_ms":3,"results":[]}"#;
+        match serde_json::from_str::<Response>(v2).unwrap() {
+            Response::Done(r) => assert!(!r.degraded),
+            other => panic!("expected done, got {other:?}"),
+        }
+        let v2 = r#"{"resp":"status","proto_version":2,"uptime_ms":5,"requests":1,
+            "points":2,"simulated":2,"mem_hits":0,"disk_hits":0,"dedup_waits":0,
+            "kernels_compiled":1,"mem_entries":2,"store":null}"#;
+        match serde_json::from_str::<Response>(v2).unwrap() {
+            Response::Status(s) => {
+                assert_eq!(s.admission_rejected, 0);
+                assert_eq!(s.queue_limit, 0);
+                assert_eq!(s.retries, 0);
+                assert_eq!(s.degraded_batches, 0);
+            }
+            other => panic!("expected status, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_ids_are_unique() {
+        let a = new_request_id("w1");
+        let b = new_request_id("w1");
+        assert_ne!(a, b);
+        assert!(a.contains('-'));
     }
 
     #[test]

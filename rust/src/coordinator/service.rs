@@ -33,12 +33,19 @@ use super::sweep::{CacheTier, KernelCache, SimCache, SweepPoint};
 use super::RunReport;
 use anyhow::{anyhow, Result};
 use std::cmp::Ordering as CmpOrdering;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// Delay hint sent with a `busy` rejection.
+const BUSY_RETRY_AFTER_MS: u64 = 200;
+
+/// How many recent `request_id`s (with their jobs) the service keeps
+/// so a retried submit can attach instead of re-enqueueing.
+const RECENT_IDS: usize = 32;
 
 /// Which path produced a point's result, from the submitting request's
 /// point of view.
@@ -255,6 +262,7 @@ struct ServiceCounters {
     mem_hits: AtomicU64,
     disk_hits: AtomicU64,
     dedup_waits: AtomicU64,
+    admission_rejected: AtomicU64,
 }
 
 /// The resident sweep service. One instance per daemon; shared across
@@ -270,6 +278,17 @@ pub struct Service {
     /// Submits currently executing (the graceful-shutdown drain latch).
     active: Mutex<u64>,
     idle_cv: Condvar,
+    /// Admission cap on queued points; 0 disables backpressure.
+    max_queue: AtomicUsize,
+    /// Recently admitted `request_id`s and their jobs (retry dedup).
+    recent: Mutex<VecDeque<(String, Arc<Job>)>>,
+}
+
+/// Admission-control verdict on a submit: started, or refused because
+/// the queue is full (the client should retry after the hint).
+pub enum Admission {
+    Started(ActiveRequest),
+    Busy { retry_after_ms: u64 },
 }
 
 /// A submit in execution: the job plus the RAII active-count guard the
@@ -305,6 +324,7 @@ impl ActiveRequest {
                 .iter()
                 .map(|r| summarize(&r.point, &r.report, r.source))
                 .collect(),
+            degraded: false,
         })
     }
 }
@@ -337,7 +357,15 @@ impl Service {
             started: Instant::now(),
             active: Mutex::new(0),
             idle_cv: Condvar::new(),
+            max_queue: AtomicUsize::new(0),
+            recent: Mutex::new(VecDeque::new()),
         }
+    }
+
+    /// Set the admission cap on queued points (0 disables backpressure:
+    /// every submit is admitted, as before v3).
+    pub fn set_max_queue(&self, n: usize) {
+        self.max_queue.store(n, Ordering::Relaxed);
     }
 
     /// Block until no submit is executing — the shutdown path drains
@@ -383,15 +411,60 @@ impl Service {
         job
     }
 
-    /// Expand a protocol request and start it executing; the returned
-    /// [`ActiveRequest`] holds the drain latch and exposes the job for
-    /// incremental (streamed) consumption.
-    pub fn begin_request(self: &Arc<Self>, req: &SubmitRequest) -> Result<ActiveRequest> {
+    /// Expand a protocol request and start it executing, subject to
+    /// admission control. A request whose `request_id` matches a
+    /// recently admitted batch attaches to that batch's job (a retry
+    /// after a dropped reply never re-simulates); a full queue earns a
+    /// `busy` with a retry hint instead of unbounded growth.
+    pub fn try_begin_request(self: &Arc<Self>, req: &SubmitRequest) -> Result<Admission> {
+        if let Some(id) = &req.request_id {
+            let recent = self.recent.lock().unwrap();
+            if let Some((_, job)) = recent.iter().find(|(rid, _)| rid == id) {
+                let job = job.clone();
+                drop(recent);
+                *self.active.lock().unwrap() += 1;
+                return Ok(Admission::Started(ActiveRequest {
+                    svc: self.clone(),
+                    job,
+                    started: Instant::now(),
+                }));
+            }
+        }
         let points = req.points()?;
+        let limit = self.max_queue.load(Ordering::Relaxed);
+        if limit > 0 && self.queue.lock().unwrap().len() >= limit {
+            self.counters.admission_rejected.fetch_add(1, Ordering::Relaxed);
+            return Ok(Admission::Busy { retry_after_ms: BUSY_RETRY_AFTER_MS });
+        }
         *self.active.lock().unwrap() += 1;
         let started = Instant::now();
         let job = self.submit(points, req.priority, req.fresh);
-        Ok(ActiveRequest { svc: self.clone(), job, started })
+        if let Some(id) = &req.request_id {
+            self.remember(id, &job);
+        }
+        Ok(Admission::Started(ActiveRequest { svc: self.clone(), job, started }))
+    }
+
+    fn remember(&self, id: &str, job: &Arc<Job>) {
+        let mut recent = self.recent.lock().unwrap();
+        if recent.iter().any(|(rid, _)| rid == id) {
+            return;
+        }
+        if recent.len() >= RECENT_IDS {
+            recent.pop_front();
+        }
+        recent.push_back((id.to_string(), job.clone()));
+    }
+
+    /// [`Service::try_begin_request`] for callers without a busy path
+    /// of their own: a rejection becomes an error.
+    pub fn begin_request(self: &Arc<Self>, req: &SubmitRequest) -> Result<ActiveRequest> {
+        match self.try_begin_request(req)? {
+            Admission::Started(ar) => Ok(ar),
+            Admission::Busy { retry_after_ms } => Err(anyhow!(
+                "server busy (queue full); retry after {retry_after_ms} ms"
+            )),
+        }
     }
 
     /// Expand a protocol request, run it to completion, and summarize —
@@ -434,6 +507,10 @@ impl Service {
             inflight: self.inflight_len(),
             active_requests: self.active_requests(),
             workers: None,
+            admission_rejected: self.counters.admission_rejected.load(Ordering::Relaxed),
+            queue_limit: self.max_queue.load(Ordering::Relaxed),
+            retries: 0,
+            degraded_batches: 0,
         }
     }
 
@@ -585,14 +662,25 @@ fn handle_conn(
     stop: Arc<AtomicBool>,
     addr: SocketAddr,
 ) -> std::io::Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        // Byte-level framing: a malformed frame — including invalid
+        // UTF-8, which `lines()` would turn into a handler-killing
+        // error — must reach the parser and earn an `error` reply,
+        // leaving the connection serving. Only real transport errors
+        // end the handler.
+        buf.clear();
+        if reader.read_until(b'\n', &mut buf)? == 0 {
+            return Ok(()); // clean EOF
+        }
+        let raw = String::from_utf8_lossy(&buf);
+        let line = raw.trim();
+        if line.is_empty() {
             continue;
         }
-        let req = match serde_json::from_str::<Request>(&line) {
+        let req = match serde_json::from_str::<Request>(line) {
             Err(e) => {
                 write_line(&mut writer, &Response::Error { message: format!("bad request line: {e}") })?;
                 continue;
@@ -621,17 +709,25 @@ fn handle_conn(
             }
             Request::Status => write_line(&mut writer, &Response::Status(mode.status()))?,
             Request::Submit(req) => match &mode {
-                ServeMode::Local(svc) => {
-                    if req.stream {
-                        stream_submit_local(svc, &req, &mut writer)?;
-                    } else {
-                        let resp = match svc.run_request(&req) {
-                            Ok(reply) => Response::Done(reply),
-                            Err(e) => Response::Error { message: e.to_string() },
-                        };
-                        write_line(&mut writer, &resp)?;
+                ServeMode::Local(svc) => match svc.try_begin_request(&req) {
+                    Err(e) => {
+                        write_line(&mut writer, &Response::Error { message: e.to_string() })?
                     }
-                }
+                    Ok(Admission::Busy { retry_after_ms }) => {
+                        write_line(&mut writer, &Response::Busy { retry_after_ms })?
+                    }
+                    Ok(Admission::Started(ar)) => {
+                        if req.stream {
+                            stream_submit_local(&ar, &req, &mut writer)?;
+                        } else {
+                            let resp = match ar.wait_reply() {
+                                Ok(reply) => Response::Done(reply),
+                                Err(e) => Response::Error { message: e.to_string() },
+                            };
+                            write_line(&mut writer, &resp)?;
+                        }
+                    }
+                },
                 ServeMode::Federated(co) => {
                     co.serve_submit(&req, &mut writer)?;
                 }
@@ -648,21 +744,19 @@ fn handle_conn(
             }
         }
     }
-    Ok(())
 }
 
-/// Serve one streamed submit from the local service: emit a `result`
-/// record per completed point (in completion order) and a `progress`
-/// record per wake-up, then the terminal `done`/`error`.
+/// Serve one streamed submit already admitted to the local service:
+/// emit a `result` record per completed point (in completion order)
+/// and a `progress` record per wake-up, then the terminal
+/// `done`/`error`. For a retried request attached to an in-flight job,
+/// already-finished points replay immediately — the client dedups by
+/// batch index.
 fn stream_submit_local(
-    svc: &Arc<Service>,
+    ar: &ActiveRequest,
     req: &SubmitRequest,
     writer: &mut BufWriter<TcpStream>,
 ) -> std::io::Result<()> {
-    let ar = match svc.begin_request(req) {
-        Ok(ar) => ar,
-        Err(e) => return write_line(writer, &Response::Error { message: e.to_string() }),
-    };
     let total = ar.job().total();
     // The terminal reply is assembled from the summaries accumulated
     // while streaming — no second full-report clone of every slot.
@@ -715,6 +809,7 @@ fn stream_submit_local(
             deduped: count("dedup"),
             elapsed_ms: ar.elapsed_ms(),
             results,
+            degraded: false,
         })
     };
     write_line(writer, &resp)
@@ -841,6 +936,74 @@ mod tests {
         assert_eq!(results[0].source, PointSource::MemHit);
         assert_eq!(results[1].source, PointSource::Simulated);
         assert_eq!(job.wait().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn full_queue_earns_busy_and_drains_back_to_admission() {
+        let svc = Arc::new(Service::new(None));
+        svc.set_max_queue(1);
+        // Park a synthetic queued point so the backlog is at the cap
+        // (no rayon task will ever pop it — it exists only to occupy
+        // the queue).
+        let cfg = MachineConfig::scaled();
+        let parked = Arc::new(Job::new(
+            vec![SweepPoint {
+                label: "mpu".into(),
+                workload: Workload::Axpy,
+                scale: Scale::Tiny,
+                target: Target::Mpu(cfg),
+            }],
+            false,
+        ));
+        svc.queue
+            .lock()
+            .unwrap()
+            .push(QueuedPoint { priority: 0, seq: 0, idx: 0, job: parked });
+        match svc.try_begin_request(&axpy_req()).unwrap() {
+            Admission::Busy { retry_after_ms } => assert!(retry_after_ms > 0),
+            Admission::Started(_) => panic!("full queue must refuse admission"),
+        }
+        assert_eq!(svc.status().admission_rejected, 1);
+        assert_eq!(svc.status().queue_limit, 1);
+        // Drain the parked point; admission recovers.
+        svc.queue.lock().unwrap().pop();
+        match svc.try_begin_request(&axpy_req()).unwrap() {
+            Admission::Started(ar) => {
+                ar.wait_reply().unwrap();
+            }
+            Admission::Busy { .. } => panic!("empty queue must admit"),
+        }
+    }
+
+    #[test]
+    fn retried_request_id_attaches_to_the_inflight_job() {
+        let svc = Arc::new(Service::new(None));
+        let mut req = axpy_req();
+        req.fresh = true; // prove dedup is by request id, not cache
+        req.request_id = Some("retry-me-1".into());
+        let first = match svc.try_begin_request(&req).unwrap() {
+            Admission::Started(ar) => ar,
+            Admission::Busy { .. } => panic!("must admit"),
+        };
+        let second = match svc.try_begin_request(&req).unwrap() {
+            Admission::Started(ar) => ar,
+            Admission::Busy { .. } => panic!("must attach, not refuse"),
+        };
+        assert!(
+            Arc::ptr_eq(first.job(), second.job()),
+            "same request_id must attach to the same job"
+        );
+        let a = first.wait_reply().unwrap();
+        let b = second.wait_reply().unwrap();
+        assert_eq!(a.simulated, 1);
+        assert_eq!(b.simulated, 1, "the attached view sees the same single run");
+        assert_eq!(svc.status().requests, 1, "one logical batch, not two");
+        assert_eq!(svc.status().points, 1);
+        // A different id is a genuinely new batch.
+        req.request_id = Some("retry-me-2".into());
+        let third = svc.begin_request(&req).unwrap();
+        third.wait_reply().unwrap();
+        assert_eq!(svc.status().requests, 2);
     }
 
     #[test]

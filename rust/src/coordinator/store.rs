@@ -15,11 +15,22 @@
 //!
 //! Robustness rules:
 //! - Every write is tmp-file + atomic rename.
-//! - A corrupt or schema-mismatched entry is dropped (file removed,
-//!   counted in `corrupt_dropped`) and treated as a miss — never an error.
+//! - A corrupt or schema-mismatched entry is quarantined (moved to
+//!   `<root>/quarantine/` for post-mortem, counted in `corrupt_dropped`
+//!   and `quarantined`) and treated as a miss — never an error.
 //! - A missing or corrupt index is rebuilt by scanning `entries/`.
 //! - The store is bounded: once `total bytes > max_bytes`, entries are
 //!   evicted least-recently-*accessed* first (loads refresh recency).
+//! - Persistent write failures (full disk, dead mount) demote the store
+//!   to memory-only caching: after [`DEGRADE_AFTER`] consecutive
+//!   failures, writes are skipped (counted) and the disk is re-probed
+//!   every [`PROBE_EVERY`]-th store so a healed disk re-engages
+//!   automatically. The batch never aborts on store trouble.
+//!
+//! Every write funnels through [`atomic_write`], which doubles as the
+//! store's fault-injection seam: an active [`fault::FaultPlan`] can
+//! tear an entry or index write in half (modelling a crash mid-write)
+//! or fail it with ENOSPC.
 //!
 //! One writer (the `mpu serve` daemon) is the intended steady state;
 //! concurrent multi-process writers are safe for entry files (atomic
@@ -33,6 +44,7 @@
 //! v2; the former `DefaultHasher`-over-`Debug` fingerprint went cold —
 //! safely, but silently — on toolchain updates.)
 
+use super::fault::{self, FaultClass};
 use super::proto::WireReport;
 use super::RunReport;
 use crate::workloads::Scale;
@@ -40,9 +52,18 @@ use anyhow::{Context, Result};
 use serde::{Deserialize, Serialize};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, SystemTime};
+
+/// Consecutive write failures before the store demotes itself to
+/// memory-only caching.
+const DEGRADE_AFTER: u64 = 3;
+
+/// While degraded, every N-th store attempt probes the disk (the first
+/// attempt after degrading probes immediately) so recovery is
+/// automatic once the disk heals.
+const PROBE_EVERY: u64 = 8;
 
 /// Version of the on-disk entry/index schema. Bumping it invalidates
 /// every existing entry (they are dropped on load, not migrated).
@@ -88,6 +109,13 @@ pub struct StoreStats {
     /// Entries dropped because they were unreadable or carried a stale
     /// schema version.
     pub corrupt_dropped: u64,
+    /// Entry/index writes that failed (ENOSPC, dead mount, ...).
+    pub write_failures: u64,
+    /// Corrupt entries moved to `<root>/quarantine/` instead of lost.
+    pub quarantined: u64,
+    /// The store is currently in memory-only mode after persistent
+    /// write failures (it re-probes the disk periodically).
+    pub degraded: bool,
 }
 
 /// Knobs of an explicit GC pass (`mpu store gc`): age-based expiry
@@ -190,6 +218,11 @@ pub struct DiskStore {
     misses: AtomicU64,
     evictions: AtomicU64,
     corrupt_dropped: AtomicU64,
+    write_failures: AtomicU64,
+    consec_failures: AtomicU64,
+    degraded: AtomicBool,
+    skipped_since_probe: AtomicU64,
+    quarantined: AtomicU64,
 }
 
 impl DiskStore {
@@ -206,6 +239,11 @@ impl DiskStore {
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             corrupt_dropped: AtomicU64::new(0),
+            write_failures: AtomicU64::new(0),
+            consec_failures: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+            skipped_since_probe: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
         };
         let loaded = std::fs::read_to_string(store.index_path())
             .ok()
@@ -254,7 +292,26 @@ impl DiskStore {
     /// recency on the next open).
     fn persist_index(&self, ix: &Index) {
         if let Ok(body) = serde_json::to_string(ix) {
-            let _ = atomic_write(&self.index_path(), body.as_bytes());
+            if atomic_write(&self.index_path(), body.as_bytes(), FaultClass::TornIndex)
+                .is_err()
+            {
+                self.write_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Move a corrupt entry file to `<root>/quarantine/` for
+    /// post-mortem instead of destroying the evidence; falls back to
+    /// removal when the rename itself fails.
+    fn quarantine(&self, key: &str, path: &Path) {
+        let qdir = self.root.join("quarantine");
+        let moved = std::fs::create_dir_all(&qdir)
+            .and_then(|_| std::fs::rename(path, qdir.join(format!("{key}.json"))))
+            .is_ok();
+        if moved {
+            self.quarantined.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let _ = std::fs::remove_file(path);
         }
     }
 
@@ -290,10 +347,10 @@ impl DiskStore {
                 Some(r)
             }
             None => {
-                // Corrupt or schema-stale: recover by dropping it.
+                // Corrupt or schema-stale: recover by quarantining it.
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 self.corrupt_dropped.fetch_add(1, Ordering::Relaxed);
-                let _ = std::fs::remove_file(&path);
+                self.quarantine(key, &path);
                 self.index.lock().unwrap().entries.remove(key);
                 None
             }
@@ -301,13 +358,36 @@ impl DiskStore {
     }
 
     /// Store a result under a key (best effort; failures degrade to a
-    /// future miss). Evicts least-recently-accessed entries if the cap
-    /// is exceeded.
+    /// future miss, and *persistent* failures demote the whole store to
+    /// memory-only mode — the memory tier above is unaffected, so the
+    /// batch always completes). Evicts least-recently-accessed entries
+    /// if the cap is exceeded.
     pub fn store(&self, key: &str, scale: Scale, report: &RunReport) {
         let entry = StoredEntry::from_report(key, scale, report);
         let Ok(body) = serde_json::to_string(&entry) else { return };
-        if atomic_write(&self.entry_path(key), body.as_bytes()).is_err() {
-            return;
+        if self.degraded.load(Ordering::Relaxed) {
+            // Memory-only mode: skip the disk, but probe it
+            // periodically so a healed disk re-engages.
+            let n = self.skipped_since_probe.fetch_add(1, Ordering::Relaxed);
+            if n % PROBE_EVERY != 0 {
+                return;
+            }
+        }
+        match atomic_write(&self.entry_path(key), body.as_bytes(), FaultClass::TornEntry) {
+            Err(_) => {
+                self.write_failures.fetch_add(1, Ordering::Relaxed);
+                let consec = self.consec_failures.fetch_add(1, Ordering::Relaxed) + 1;
+                if consec >= DEGRADE_AFTER {
+                    self.degraded.store(true, Ordering::Relaxed);
+                }
+                return;
+            }
+            Ok(()) => {
+                self.consec_failures.store(0, Ordering::Relaxed);
+                if self.degraded.swap(false, Ordering::Relaxed) {
+                    self.skipped_since_probe.store(0, Ordering::Relaxed);
+                }
+            }
         }
         let mut ix = self.index.lock().unwrap();
         ix.clock += 1;
@@ -381,13 +461,13 @@ impl DiskStore {
                     (bytes, intact)
                 });
             let Some((bytes, intact)) = parsed else {
-                let _ = std::fs::remove_file(&path);
+                self.quarantine(key, &path);
                 report.stale_dropped += 1;
                 self.corrupt_dropped.fetch_add(1, Ordering::Relaxed);
                 continue;
             };
             if !intact {
-                let _ = std::fs::remove_file(&path);
+                self.quarantine(key, &path);
                 report.stale_dropped += 1;
                 self.corrupt_dropped.fetch_add(1, Ordering::Relaxed);
                 continue;
@@ -462,6 +542,9 @@ impl DiskStore {
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             corrupt_dropped: self.corrupt_dropped.load(Ordering::Relaxed),
+            write_failures: self.write_failures.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
         }
     }
 }
@@ -475,7 +558,22 @@ impl Drop for DiskStore {
 }
 
 /// Write via tmp file + rename so readers never observe a torn file.
-fn atomic_write(path: &Path, body: &[u8]) -> std::io::Result<()> {
+///
+/// This is the store's fault-injection seam: an active plan can fail
+/// the write with ENOSPC, or tear it — half the body written straight
+/// to the final path, the way a crash mid-write (or a rename across a
+/// dying filesystem) leaves it. A torn write reports success; the
+/// corruption is discovered on the next load, which is exactly the
+/// recovery path the quarantine logic exists for.
+fn atomic_write(path: &Path, body: &[u8], tear: FaultClass) -> std::io::Result<()> {
+    let ctx = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    if fault::should_fail(FaultClass::Enospc, &ctx) {
+        return Err(std::io::Error::other("injected ENOSPC (storage full)"));
+    }
+    if fault::should_fail(tear, &ctx) {
+        std::fs::write(path, &body[..body.len() / 2])?;
+        return Ok(());
+    }
     let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, body)?;
     std::fs::rename(&tmp, path)

@@ -122,8 +122,8 @@ use mpu::coordinator::sweep::{
     run_suite_kind, run_suite_kind_threaded, run_suite_threaded, SimCache, Sweep, Target,
 };
 use mpu::coordinator::{
-    compile_for, Coordinator, DiskStore, FedEvent, Federation, GcOptions, KernelCache, Service,
-    StoreConfig, SweepServer,
+    compile_for, fault, Coordinator, DiskStore, FaultPlan, FedEvent, Federation, GcOptions,
+    KernelCache, RetryPolicy, Service, StoreConfig, SweepServer, Timeouts,
 };
 use mpu::analysis::{lint_workload, LintReport};
 use mpu::runtime::{artifacts_available, validate_against_xla, XlaGolden};
@@ -151,6 +151,7 @@ fn usage() -> ! {
          \n  mpu check-json --compare-perf baselines/BENCH_simperf.json BENCH_simperf.json\
          \n  mpu serve --addr 127.0.0.1:7117 --store .mpu-store\
          \n  mpu serve --addr 127.0.0.1:7200 --workers 127.0.0.1:7201,127.0.0.1:7202\
+         \n  mpu serve --max-queue 4096 --faults \"seed=42,disconnect=0.1\"\
          \n  mpu submit suite --tiny --variants mpu,gpu --stream\
          \n  mpu submit suite --tiny --workers 127.0.0.1:7201,127.0.0.1:7202\
          \n  mpu status | mpu shutdown\
@@ -162,18 +163,59 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
+/// Flags that consume the next argument as their value. Shared by the
+/// positional scan and the `key=val` config scan, so a flag value that
+/// happens to contain `=` (a `--faults` spec) is never misread as a
+/// machine-config pair.
+const VALUE_FLAGS: [&str; 19] = [
+    "--variants",
+    "--priority",
+    "--addr",
+    "--out",
+    "--store",
+    "--store-max-mb",
+    "--machine",
+    "--workers",
+    "--max-age-days",
+    "--max-mb",
+    "--workload",
+    "--deny",
+    "--threads",
+    "--repeat",
+    "--budget",
+    "--seed",
+    "--append-suite",
+    "--faults",
+    "--max-queue",
+];
+
+/// The `key=val` machine-configuration pairs among `args`, skipping
+/// the values of [`VALUE_FLAGS`].
+fn config_pairs(args: &[String]) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if VALUE_FLAGS.contains(&a.as_str()) {
+            it.next();
+        } else if !a.starts_with("--") {
+            if let Some((k, v)) = a.split_once('=') {
+                out.push((k.to_string(), v.to_string()));
+            }
+        }
+    }
+    out
+}
+
 fn parse_cfg(args: &[String]) -> MachineConfig {
     let mut cfg = if args.iter().any(|a| a == "--paper-scale") {
         MachineConfig::paper()
     } else {
         MachineConfig::scaled()
     };
-    for a in args {
-        if let Some((k, v)) = a.split_once('=') {
-            if let Err(e) = cfg.set(k, v) {
-                eprintln!("config error: {e}");
-                std::process::exit(2);
-            }
+    for (k, v) in config_pairs(args) {
+        if let Err(e) = cfg.set(&k, &v) {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
         }
     }
     cfg
@@ -224,25 +266,6 @@ fn out_path(args: &[String]) -> String {
 /// Positional arguments: everything that is not a `--flag` (or its
 /// value) and not a `key=val` configuration pair.
 fn positionals(args: &[String]) -> Vec<String> {
-    const VALUE_FLAGS: [&str; 17] = [
-        "--variants",
-        "--priority",
-        "--addr",
-        "--out",
-        "--store",
-        "--store-max-mb",
-        "--machine",
-        "--workers",
-        "--max-age-days",
-        "--max-mb",
-        "--workload",
-        "--deny",
-        "--threads",
-        "--repeat",
-        "--budget",
-        "--seed",
-        "--append-suite",
-    ];
     let mut out = Vec::new();
     let mut it = args.iter();
     while let Some(a) = it.next() {
@@ -264,6 +287,9 @@ fn addr_of(args: &[String]) -> String {
 fn daemon_request(addr: &str, req: &Request) -> anyhow::Result<Response> {
     match proto::request(addr, req)? {
         Response::Error { message } => anyhow::bail!("server error: {message}"),
+        Response::Busy { retry_after_ms } => {
+            anyhow::bail!("server busy, retry after {retry_after_ms} ms")
+        }
         resp => Ok(resp),
     }
 }
@@ -961,15 +987,31 @@ fn main() -> anyhow::Result<()> {
         }
         "serve" => {
             let env = ServeConfig::from_env();
-            let addr = flag_value(rest, "--addr").unwrap_or(env.addr);
+            let addr = flag_value(rest, "--addr").unwrap_or(env.addr.clone());
             let workers = flag_value(rest, "--workers")
                 .map(|v| ServeConfig::parse_workers(&v))
-                .unwrap_or(env.workers);
+                .unwrap_or(env.workers.clone());
+            // Deterministic fault injection (chaos testing): --faults /
+            // MPU_FAULTS arms the process-wide fault plane before any
+            // socket or store is touched.
+            if let Some(spec) = flag_value(rest, "--faults").or(env.faults.clone()) {
+                let plan = FaultPlan::parse(&spec)?;
+                if !plan.is_empty() {
+                    println!("mpu serve: fault injection ACTIVE ({spec})");
+                }
+                fault::activate(plan);
+            }
+            let timeouts = Timeouts { connect: env.connect_timeout, io: env.io_timeout };
+            let retry = RetryPolicy {
+                attempts: env.retries,
+                base_delay: env.backoff,
+                ..RetryPolicy::default()
+            };
             if !workers.is_empty() {
                 // Coordinator mode: no local simulation — submits are
                 // sharded across the worker daemons by consistent
                 // hashing on the stable store keys.
-                let fed = Federation::new(workers)?;
+                let fed = Federation::with_config(workers, timeouts, retry)?;
                 let reachable = fed.handshake()?;
                 let n = fed.workers().len();
                 let co = Arc::new(Coordinator::new(fed));
@@ -1001,6 +1043,15 @@ fn main() -> anyhow::Result<()> {
                 None => None,
             };
             let svc = Arc::new(Service::new(store));
+            let max_queue = flag_value(rest, "--max-queue")
+                .map(|v| {
+                    v.parse::<usize>().unwrap_or_else(|_| {
+                        eprintln!("--max-queue needs an integer, got `{v}`");
+                        std::process::exit(2);
+                    })
+                })
+                .unwrap_or(env.max_queue);
+            svc.set_max_queue(max_queue);
             let server = SweepServer::bind(svc, &addr)?;
             match store_dir {
                 Some(dir) => println!(
@@ -1036,11 +1087,18 @@ fn main() -> anyhow::Result<()> {
                     })
                 })
                 .unwrap_or(0);
-            let config: Vec<(String, String)> = rest
-                .iter()
-                .filter_map(|a| a.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
-                .collect();
+            let config: Vec<(String, String)> = config_pairs(rest);
             let stream = rest.iter().any(|a| a == "--stream");
+            let env = ServeConfig::from_env();
+            if let Some(spec) = flag_value(rest, "--faults").or(env.faults.clone()) {
+                fault::activate(FaultPlan::parse(&spec)?);
+            }
+            let timeouts = Timeouts { connect: env.connect_timeout, io: env.io_timeout };
+            let retry = RetryPolicy {
+                attempts: env.retries,
+                base_delay: env.backoff,
+                ..RetryPolicy::default()
+            };
             let req = SubmitRequest {
                 suite,
                 workloads,
@@ -1058,14 +1116,16 @@ fn main() -> anyhow::Result<()> {
             // with neither flag does MPU_WORKERS federate client-side.
             let fed_workers = match flag_value(rest, "--workers") {
                 Some(v) => ServeConfig::parse_workers(&v),
-                None if flag_value(rest, "--addr").is_none() => ServeConfig::from_env().workers,
+                None if flag_value(rest, "--addr").is_none() => env.workers.clone(),
                 None => vec![],
             };
             let reply = if !fed_workers.is_empty() {
                 // Client-side federation (--workers or MPU_WORKERS):
                 // shard the batch across the worker fleet directly, no
-                // coordinator daemon needed.
-                let fed = Federation::new(fed_workers)?;
+                // coordinator daemon needed. A storeless local service
+                // backstops total fleet death (degraded mode).
+                let mut fed = Federation::with_config(fed_workers, timeouts, retry)?;
+                fed.set_fallback(Arc::new(Service::new(None)));
                 fed.handshake()?;
                 let fr = fed.submit_streamed(&req, |ev| {
                     if stream {
@@ -1076,7 +1136,10 @@ fn main() -> anyhow::Result<()> {
                 })?;
                 fr.reply
             } else if stream {
-                match proto::submit_streamed(&addr, &req, |resp| {
+                // Streamed submits ride the resilient path: socket
+                // deadlines, bounded backoff on transient failures, and
+                // a request id so retries dedup onto the in-flight job.
+                match proto::submit_resilient(&addr, &req, timeouts, &retry, |resp| {
                     if let Response::Progress(p) = resp {
                         eprintln!(
                             "progress: {}/{} ({} ms)",
@@ -1086,6 +1149,9 @@ fn main() -> anyhow::Result<()> {
                 })? {
                     StreamOutcome::Done(reply) => reply,
                     StreamOutcome::ServerError(m) => anyhow::bail!("server error: {m}"),
+                    StreamOutcome::Busy { retry_after_ms } => anyhow::bail!(
+                        "server busy (queue full) after retries; retry after {retry_after_ms} ms"
+                    ),
                 }
             } else {
                 let Response::Done(reply) = daemon_request(&addr, &Request::Submit(req))? else {
@@ -1107,15 +1173,17 @@ fn main() -> anyhow::Result<()> {
             t.emit("submit");
             // Stable machine-greppable summary (the CI smoke gate parses
             // `simulated=` and `disk=`).
+            let degraded_note = if reply.degraded { " degraded=1" } else { "" };
             println!(
-                "submit: points={} simulated={} cached={} (mem={} disk={} dedup={}) in {}ms",
+                "submit: points={} simulated={} cached={} (mem={} disk={} dedup={}) in {}ms{}",
                 reply.points,
                 reply.simulated,
                 reply.cached(),
                 reply.mem_hits,
                 reply.disk_hits,
                 reply.deduped,
-                reply.elapsed_ms
+                reply.elapsed_ms,
+                degraded_note
             );
             if rest.iter().any(|a| a == "--strict") {
                 let bad: Vec<&str> = reply
@@ -1143,18 +1211,25 @@ fn main() -> anyhow::Result<()> {
             println!("  kernels         {}", s.kernels_compiled);
             println!("  mem entries     {}", s.mem_entries);
             println!("  queue depth     {}", s.queue_depth);
+            println!("  queue-limit     {}", s.queue_limit);
             println!("  in flight       {}", s.inflight);
             println!("  active submits  {}", s.active_requests);
+            println!("  rejected        {}", s.admission_rejected);
+            println!("  retries         {}", s.retries);
+            println!("  degraded        {}", s.degraded_batches);
             match &s.store {
                 Some(st) => println!(
-                    "  store           {} entries, {}/{} KiB, hits={} misses={} evictions={} corrupt_dropped={}",
+                    "  store           {} entries, {}/{} KiB, hits={} misses={} evictions={} corrupt_dropped={} write_failures={} quarantined={}{}",
                     st.entries,
                     st.bytes / 1024,
                     st.max_bytes / 1024,
                     st.hits,
                     st.misses,
                     st.evictions,
-                    st.corrupt_dropped
+                    st.corrupt_dropped,
+                    st.write_failures,
+                    st.quarantined,
+                    if st.degraded { " DEGRADED" } else { "" }
                 ),
                 None => println!("  store           (none)"),
             }
@@ -1204,8 +1279,8 @@ fn main() -> anyhow::Result<()> {
                         st.max_bytes / 1024
                     );
                     println!(
-                        "  hits={} misses={} evictions={} corrupt_dropped={}",
-                        st.hits, st.misses, st.evictions, st.corrupt_dropped
+                        "  hits={} misses={} evictions={} corrupt_dropped={} quarantined={}",
+                        st.hits, st.misses, st.evictions, st.corrupt_dropped, st.quarantined
                     );
                 }
                 "gc" => {
@@ -1297,10 +1372,7 @@ fn main() -> anyhow::Result<()> {
                 let store = DiskStore::open(StoreConfig::new(dir))?;
                 SimCache::global().attach_store(Arc::new(store));
             }
-            let base_overrides: Vec<(String, String)> = rest
-                .iter()
-                .filter_map(|a| a.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
-                .collect();
+            let base_overrides: Vec<(String, String)> = config_pairs(rest);
             let opts = TuneOptions {
                 workloads,
                 scale,

@@ -1,0 +1,460 @@
+//! Chaos tests: the federated sweep service under deterministic fault
+//! injection. Every scenario arms the process-wide fault plane with a
+//! seeded `FaultPlan`, drives a 2-worker federated tiny suite (or the
+//! disk store directly), and asserts three things:
+//!
+//!   1. the batch still completes, with results byte-identical (modulo
+//!      wall-clock fields) to a fault-free run,
+//!   2. the hardening layer actually engaged (retry / quarantine /
+//!      degradation counters moved), and
+//!   3. the recorded fault schedule replays exactly when re-driven
+//!      through a fresh injector with the same plan — same seed, same
+//!      faults.
+//!
+//! The fault plane is process-wide state, so every test takes
+//! `CHAOS_LOCK` and deactivates the plane before asserting.
+
+use mpu::config::MachineConfig;
+use mpu::coordinator::proto::WireReport;
+use mpu::coordinator::sweep::{SweepPoint, Target};
+use mpu::coordinator::{
+    fault, run_workload_scaled, DiskStore, FaultClass, FaultInjector, FaultPlan, FedReply,
+    Federation, RetryPolicy, Service, StoreConfig, SweepServer, Timeouts,
+};
+use mpu::coordinator::proto::{self, Request, Response, SubmitRequest};
+use mpu::workloads::{Scale, Workload};
+use mpu::RunReport;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// The fault plane is process-wide: chaos scenarios run one at a time.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Clears the fault plane even when an assertion panics mid-scenario,
+/// so one failing test cannot leak faults into the next.
+struct PlaneGuard;
+impl Drop for PlaneGuard {
+    fn drop(&mut self) {
+        fault::deactivate();
+    }
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("mpu_chaos_test")
+        .join(format!("{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spawn_worker() -> (String, std::thread::JoinHandle<()>) {
+    let svc = Arc::new(Service::new(None));
+    let server = SweepServer::bind(svc, "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+fn spawn_worker_with_store(root: PathBuf) -> (String, std::thread::JoinHandle<()>) {
+    let store = DiskStore::open(StoreConfig::new(root)).unwrap();
+    let svc = Arc::new(Service::new(Some(store)));
+    let server = SweepServer::bind(svc, "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+fn shutdown(addr: &str) {
+    match proto::request(addr, &Request::Shutdown).unwrap() {
+        Response::Bye => {}
+        other => panic!("expected bye, got {other:?}"),
+    }
+}
+
+fn status_of(addr: &str) -> proto::StatusBody {
+    match proto::request(addr, &Request::Status).unwrap() {
+        Response::Status(s) => s,
+        other => panic!("expected status, got {other:?}"),
+    }
+}
+
+fn tiny_req() -> SubmitRequest {
+    SubmitRequest {
+        suite: true,
+        scale: "tiny".into(),
+        variants: vec!["mpu".into(), "gpu".into()],
+        return_reports: true,
+        ..SubmitRequest::default()
+    }
+}
+
+/// Wall-clock fields are the one legitimately nondeterministic part of a
+/// report — zero them, then compare serialized bytes.
+fn canon(r: &RunReport) -> String {
+    let mut c = r.clone();
+    c.sim_wall_ms = 0.0;
+    c.sim_cycles_per_sec = 0.0;
+    serde_json::to_string(&WireReport::from_report(Scale::Tiny, &c)).unwrap()
+}
+
+/// Canonical fault-free reports for the tiny suite, computed once on a
+/// storeless local service (which touches no injection point).
+fn baseline() -> &'static Vec<(String, String)> {
+    static BASE: OnceLock<Vec<(String, String)>> = OnceLock::new();
+    BASE.get_or_init(|| {
+        assert!(fault::active().is_none(), "baseline must be computed fault-free");
+        let solo = Arc::new(Service::new(None));
+        let active = solo.begin_request(&tiny_req()).unwrap();
+        let results = active.job().wait().unwrap();
+        results
+            .iter()
+            .map(|p| {
+                (
+                    format!("{} [{}]", p.point.workload.name(), p.point.label),
+                    canon(&p.report),
+                )
+            })
+            .collect()
+    })
+}
+
+/// The acceptance criterion: a chaos run's merged reply is complete,
+/// correct, and byte-identical to the fault-free baseline.
+fn assert_identical_to_baseline(fr: &FedReply) {
+    let base = baseline();
+    assert_eq!(fr.reply.points, base.len());
+    assert!(fr.reply.results.iter().all(|r| r.correct), "every result must stay correct");
+    assert_eq!(fr.reports.len(), base.len());
+    for ((desc, want), got) in base.iter().zip(&fr.reports) {
+        let got = got.as_ref().expect("return_reports streams every report");
+        assert_eq!(want, &canon(got), "{desc} diverged under fault injection");
+    }
+}
+
+/// Same plan + same (class, ctx, call) sequence must reproduce the same
+/// decisions — the chaos-seed replay guarantee.
+fn assert_replays(inj: &FaultInjector) {
+    let fresh = FaultInjector::new(inj.plan().clone());
+    for ev in inj.log() {
+        assert_eq!(
+            fresh.check(ev.class, &ev.ctx),
+            ev.fired,
+            "fault schedule must replay exactly: {ev:?}"
+        );
+    }
+}
+
+/// Millisecond-scale backoff so chaos scenarios stay fast.
+fn fast_retry(attempts: u32) -> RetryPolicy {
+    RetryPolicy {
+        attempts,
+        base_delay: Duration::from_millis(1),
+        max_delay: Duration::from_millis(10),
+        seed: 7,
+    }
+}
+
+fn test_timeouts() -> Timeouts {
+    Timeouts { connect: Duration::from_secs(5), io: Duration::from_secs(30) }
+}
+
+fn two_worker_fed(a1: &str, a2: &str, attempts: u32) -> Federation {
+    let mut fed = Federation::with_config(
+        vec![a1.to_string(), a2.to_string()],
+        test_timeouts(),
+        fast_retry(attempts),
+    )
+    .unwrap();
+    fed.set_fallback(Arc::new(Service::new(None)));
+    fed
+}
+
+fn axpy_key() -> String {
+    let cfg = MachineConfig::scaled();
+    SweepPoint {
+        label: "mpu".into(),
+        workload: Workload::Axpy,
+        scale: Scale::Tiny,
+        target: Target::Mpu(cfg),
+    }
+    .cache_key()
+}
+
+// --- transport fault classes -------------------------------------------------
+
+#[test]
+fn injected_connect_refusals_retry_to_a_byte_identical_merge() {
+    let _l = chaos_lock();
+    baseline();
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let _g = PlaneGuard;
+    // rate 1.0, budget 2 per (class, worker) stream: each share's first
+    // two connects are refused, the third goes through.
+    let inj = fault::activate(FaultPlan::parse("seed=42,connect=1.0:2").unwrap());
+    let fed = two_worker_fed(&a1, &a2, 6);
+    let fr = fed.submit_streamed(&tiny_req(), |_| {}).unwrap();
+    fault::deactivate();
+
+    assert_eq!(inj.injected(FaultClass::Connect), 4, "two refusals per worker");
+    assert_eq!(fed.retries(), 4, "every refusal must be retried, not fatal");
+    assert_eq!(fed.degraded_batches(), 0);
+    assert!(!fr.reply.degraded);
+    assert_eq!(fr.reply.simulated, 24);
+    assert_identical_to_baseline(&fr);
+    assert_replays(&inj);
+
+    shutdown(&a1);
+    shutdown(&a2);
+    h1.join().unwrap();
+    h2.join().unwrap();
+}
+
+#[test]
+fn mid_stream_disconnects_dedup_onto_the_inflight_job() {
+    let _l = chaos_lock();
+    baseline();
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let _g = PlaneGuard;
+    let inj = fault::activate(FaultPlan::parse("seed=7,disconnect=1.0:2").unwrap());
+    let fed = two_worker_fed(&a1, &a2, 6);
+    let fr = fed.submit_streamed(&tiny_req(), |_| {}).unwrap();
+    fault::deactivate();
+
+    assert_eq!(inj.injected(FaultClass::Disconnect), 4);
+    assert_eq!(fed.retries(), 4);
+    assert!(!fr.reply.degraded);
+    assert_identical_to_baseline(&fr);
+    assert_replays(&inj);
+
+    // The dedup proof: retried shares reuse their request id, so across
+    // every attempt no point was ever simulated twice fleet-wide.
+    let s1 = status_of(&a1);
+    let s2 = status_of(&a2);
+    assert_eq!(
+        s1.simulated + s2.simulated,
+        24,
+        "request-id dedup must keep retried streams from re-simulating"
+    );
+
+    shutdown(&a1);
+    shutdown(&a2);
+    h1.join().unwrap();
+    h2.join().unwrap();
+}
+
+#[test]
+fn stalled_sockets_time_out_and_retry_to_completion() {
+    let _l = chaos_lock();
+    baseline();
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let _g = PlaneGuard;
+    let inj = fault::activate(FaultPlan::parse("seed=9,stall=1.0:2").unwrap());
+    let fed = two_worker_fed(&a1, &a2, 6);
+    let fr = fed.submit_streamed(&tiny_req(), |_| {}).unwrap();
+    fault::deactivate();
+
+    assert_eq!(inj.injected(FaultClass::Stall), 4);
+    assert_eq!(fed.retries(), 4);
+    assert!(!fr.reply.degraded);
+    assert_identical_to_baseline(&fr);
+    assert_replays(&inj);
+
+    shutdown(&a1);
+    shutdown(&a2);
+    h1.join().unwrap();
+    h2.join().unwrap();
+}
+
+#[test]
+fn mixed_transport_chaos_replays_deterministically() {
+    let _l = chaos_lock();
+    baseline();
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let _g = PlaneGuard;
+    // All three transport classes at fractional rates. Budgets cap the
+    // total fires per worker stream at 3+3+2 = 8, and every failed
+    // attempt burns at least one fire — so 10 attempts always complete.
+    let inj = fault::activate(
+        FaultPlan::parse("seed=99,connect=0.6:3,disconnect=0.5:3,stall=0.4:2").unwrap(),
+    );
+    let fed = two_worker_fed(&a1, &a2, 10);
+    let fr = fed.submit_streamed(&tiny_req(), |_| {}).unwrap();
+    fault::deactivate();
+
+    assert!(inj.total_injected() > 0, "the mixed plan must actually fire");
+    assert!(!fr.reply.degraded, "budgeted chaos must not exhaust the fleet");
+    assert_identical_to_baseline(&fr);
+    assert_replays(&inj);
+
+    shutdown(&a1);
+    shutdown(&a2);
+    h1.join().unwrap();
+    h2.join().unwrap();
+}
+
+// --- graceful degradation ----------------------------------------------------
+
+#[test]
+fn whole_fleet_death_falls_back_to_local_simulation() {
+    let _l = chaos_lock();
+    baseline();
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let _g = PlaneGuard;
+    // Unbudgeted connect refusal: both workers stay unreachable through
+    // every retry, so the batch must complete on the local fallback.
+    let inj = fault::activate(FaultPlan::parse("seed=13,connect=1.0").unwrap());
+    let fed = two_worker_fed(&a1, &a2, 2);
+    let fr = fed.submit_streamed(&tiny_req(), |_| {}).unwrap();
+    fault::deactivate();
+
+    assert!(inj.injected(FaultClass::Connect) >= 4, "every attempt refused");
+    assert_eq!(fed.retries(), 2, "one bounded retry per share before giving up");
+    assert_eq!(fed.degraded_batches(), 1);
+    assert!(fr.reply.degraded, "the reply must carry the degradation flag");
+    assert_eq!(fr.reply.simulated, 24, "the fallback simulated the whole batch");
+    assert_identical_to_baseline(&fr);
+    assert_replays(&inj);
+
+    // The (never-reached) workers did no work and still serve.
+    let s1 = status_of(&a1);
+    let s2 = status_of(&a2);
+    assert_eq!(s1.simulated + s2.simulated, 0);
+
+    shutdown(&a1);
+    shutdown(&a2);
+    h1.join().unwrap();
+    h2.join().unwrap();
+}
+
+// --- store fault classes -----------------------------------------------------
+
+#[test]
+fn torn_entry_write_is_quarantined_and_recovered() {
+    let _l = chaos_lock();
+    let root = tmp_root("torn_entry");
+    let key = axpy_key();
+    let r = run_workload_scaled(Workload::Axpy, &MachineConfig::scaled(), Scale::Tiny).unwrap();
+    let store = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+    let _g = PlaneGuard;
+    let inj = fault::activate(FaultPlan::parse("seed=11,torn_entry=1.0:1").unwrap());
+
+    // The torn write models a crash mid-write: half the entry lands on
+    // disk and the store only discovers the damage on the next load.
+    store.store(&key, Scale::Tiny, &r);
+    assert_eq!(inj.injected(FaultClass::TornEntry), 1);
+    assert!(store.load(&key).is_none(), "a torn entry must read as a miss");
+
+    let stats = store.stats();
+    assert_eq!(stats.corrupt_dropped, 1);
+    assert_eq!(stats.quarantined, 1, "the torn entry is kept for post-mortem");
+    let qfile = root.join("quarantine").join(format!("{key}.json"));
+    assert!(qfile.exists(), "quarantined file must exist at {}", qfile.display());
+    assert!(
+        !root.join("entries").join(format!("{key}.json")).exists(),
+        "the torn entry must leave the entries dir"
+    );
+
+    // Budget spent: the re-store goes through cleanly and round-trips.
+    store.store(&key, Scale::Tiny, &r);
+    let back = store.load(&key).expect("the store must keep working after quarantine");
+    assert_eq!(back.cycles, r.cycles);
+    fault::deactivate();
+    assert_replays(&inj);
+}
+
+#[test]
+fn torn_index_write_rebuilds_on_reopen() {
+    let _l = chaos_lock();
+    let root = tmp_root("torn_index");
+    let key = axpy_key();
+    let r = run_workload_scaled(Workload::Axpy, &MachineConfig::scaled(), Scale::Tiny).unwrap();
+    {
+        // Drop order is reverse declaration order: the store (and its
+        // Drop-time index persist) must go down while the plane is
+        // still armed, so the guard is declared first.
+        let _g = PlaneGuard;
+        fault::activate(FaultPlan::parse("seed=5,torn_index=1.0").unwrap());
+        let store = DiskStore::open(StoreConfig::new(root.clone())).unwrap();
+        // The entry write is clean; only index.json is torn in half.
+        store.store(&key, Scale::Tiny, &r);
+    }
+    fault::deactivate();
+    // A fresh open finds the corrupt index and rebuilds it from the
+    // entry files — the entries are the truth, the index is a cache.
+    let store = DiskStore::open(StoreConfig::new(root)).unwrap();
+    assert_eq!(store.stats().entries, 1, "rebuilt index must recover the entry");
+    let back = store.load(&key).expect("the entry survives a torn index");
+    assert_eq!(back.cycles, r.cycles);
+}
+
+#[test]
+fn enospc_degrades_to_memory_only_and_recovers() {
+    let _l = chaos_lock();
+    let root = tmp_root("enospc");
+    let key = axpy_key();
+    let r = run_workload_scaled(Workload::Axpy, &MachineConfig::scaled(), Scale::Tiny).unwrap();
+    let store = DiskStore::open(StoreConfig::new(root)).unwrap();
+    let _g = PlaneGuard;
+    let inj = fault::activate(FaultPlan::parse("seed=3,enospc=1.0").unwrap());
+
+    // Three consecutive failed writes demote the store to memory-only.
+    for _ in 0..3 {
+        store.store(&key, Scale::Tiny, &r);
+    }
+    let stats = store.stats();
+    assert_eq!(stats.write_failures, 3);
+    assert!(stats.degraded, "repeated ENOSPC must trip degraded mode");
+    assert_eq!(inj.injected(FaultClass::Enospc), 3);
+
+    // Disk heals (plane off): the next store is a probe, succeeds, and
+    // re-engages persistence.
+    fault::deactivate();
+    store.store(&key, Scale::Tiny, &r);
+    let stats = store.stats();
+    assert!(!stats.degraded, "a successful probe must clear degraded mode");
+    assert_eq!(stats.write_failures, 3);
+    assert!(store.load(&key).is_some(), "the probe write must have landed");
+    assert_replays(&inj);
+}
+
+#[test]
+fn store_chaos_under_federation_never_poisons_results() {
+    let _l = chaos_lock();
+    baseline();
+    let (a1, h1) = spawn_worker_with_store(tmp_root("fed_store_a"));
+    let (a2, h2) = spawn_worker_with_store(tmp_root("fed_store_b"));
+    let _g = PlaneGuard;
+    // Both workers persist through a misbehaving disk: torn entries,
+    // torn index writes, intermittent ENOSPC. Results must be exact —
+    // the store is a cache, never an authority.
+    let inj = fault::activate(
+        FaultPlan::parse("seed=21,torn_entry=0.5,enospc=0.25,torn_index=0.5").unwrap(),
+    );
+    let fed = two_worker_fed(&a1, &a2, 6);
+    let fr = fed.submit_streamed(&tiny_req(), |_| {}).unwrap();
+    fault::deactivate();
+
+    assert!(!fr.reply.degraded);
+    assert_eq!(fr.reply.simulated, 24);
+    assert_identical_to_baseline(&fr);
+    assert_replays(&inj);
+
+    let s1 = status_of(&a1);
+    let s2 = status_of(&a2);
+    assert_eq!(s1.simulated + s2.simulated, 24);
+
+    shutdown(&a1);
+    shutdown(&a2);
+    h1.join().unwrap();
+    h2.join().unwrap();
+}

@@ -110,10 +110,46 @@ fn corrupt_entry_recovers_as_a_miss() {
     let stats = store.stats();
     assert_eq!(stats.corrupt_dropped, 1);
     assert_eq!(stats.misses, 1);
-    assert!(!entry_path.exists(), "corrupt entry file must be removed");
+    assert_eq!(stats.quarantined, 1, "the corrupt entry is kept, not destroyed");
+    assert!(!entry_path.exists(), "corrupt entry file must leave the entries dir");
+    let qfile = root.join("quarantine").join(format!("{key}.json"));
+    assert!(qfile.exists(), "corrupt entry must be quarantined for post-mortem");
     // The store keeps working: re-store, re-load.
     store.store(&key, Scale::Tiny, &r);
     assert!(store.load(&key).is_some());
+}
+
+#[test]
+fn protocol_garbage_gets_an_error_and_the_daemon_keeps_serving() {
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, handle) = spawn_worker();
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut reply = String::new();
+
+    // Invalid UTF-8 that is not JSON either: an error reply, not a
+    // dropped connection and not a dead daemon.
+    stream.write_all(b"\xff\xfe{{{ not even close\n").unwrap();
+    reader.read_line(&mut reply).unwrap();
+    let v: serde_json::Value = serde_json::from_str(&reply).unwrap();
+    assert_eq!(v["resp"], "error", "garbage bytes must earn an error: {reply}");
+
+    // A truncated JSON line (client died mid-write).
+    reply.clear();
+    stream.write_all(b"{\"cmd\":\"submit\",\"workloads\":[\"ax\n").unwrap();
+    reader.read_line(&mut reply).unwrap();
+    let v: serde_json::Value = serde_json::from_str(&reply).unwrap();
+    assert_eq!(v["resp"], "error", "truncated JSON must earn an error: {reply}");
+
+    // Blank lines are tolerated and the same connection still serves.
+    reply.clear();
+    stream.write_all(b"\n{\"cmd\":\"ping\"}\n").unwrap();
+    reader.read_line(&mut reply).unwrap();
+    let v: serde_json::Value = serde_json::from_str(&reply).unwrap();
+    assert_eq!(v["resp"], "pong", "the daemon must keep serving after garbage: {reply}");
+
+    shutdown(&addr);
+    handle.join().unwrap();
 }
 
 #[test]
