@@ -568,8 +568,214 @@ impl MachineKind {
     }
 }
 
+/// One resolvable serving knob: the CLI flag that sets it, the `MPU_*`
+/// environment variable behind it, the built-in default (as the string
+/// the parser would accept), and the `--help` line. [`SERVE_KNOBS`] is
+/// the single table driving parsing, precedence and help text.
+pub struct Knob {
+    pub flag: &'static str,
+    pub env: &'static str,
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+/// Every serving knob, resolved with precedence **CLI flag > `MPU_*`
+/// env > default** by [`ServeConfigBuilder`].
+pub const SERVE_KNOBS: &[Knob] = &[
+    Knob {
+        flag: "--addr",
+        env: "MPU_ADDR",
+        default: "127.0.0.1:7117",
+        help: "daemon listen / client connect address",
+    },
+    Knob {
+        flag: "--store",
+        env: "MPU_STORE_DIR",
+        default: ".mpu-store",
+        help: "on-disk result-store root (empty disables the persistent tier)",
+    },
+    Knob {
+        flag: "--store-max-mb",
+        env: "MPU_STORE_MAX_MB",
+        default: "512",
+        help: "store size cap in MiB",
+    },
+    Knob {
+        flag: "--workers",
+        env: "MPU_WORKERS",
+        default: "",
+        help: "comma-separated worker addresses (serve: coordinator mode; submit: client-side federation)",
+    },
+    Knob {
+        flag: "--connect-timeout-ms",
+        env: "MPU_CONNECT_TIMEOUT_MS",
+        default: "5000",
+        help: "TCP connect deadline for client and federation sockets",
+    },
+    Knob {
+        flag: "--io-timeout-ms",
+        env: "MPU_IO_TIMEOUT_MS",
+        default: "300000",
+        help: "read/write deadline on streamed and probe sockets",
+    },
+    Knob {
+        flag: "--retries",
+        env: "MPU_RETRIES",
+        default: "4",
+        help: "attempts per socket operation before a failure is fatal/dead",
+    },
+    Knob {
+        flag: "--backoff-ms",
+        env: "MPU_BACKOFF_MS",
+        default: "50",
+        help: "base retry backoff; grows exponentially with seeded jitter",
+    },
+    Knob {
+        flag: "--max-queue",
+        env: "MPU_MAX_QUEUE",
+        default: "4096",
+        help: "admission cap on queued points before submits get `busy` (0 = unbounded)",
+    },
+    Knob {
+        flag: "--faults",
+        env: "MPU_FAULTS",
+        default: "",
+        help: "deterministic fault-injection spec (empty disables the chaos plane)",
+    },
+    Knob {
+        flag: "--client-id",
+        env: "MPU_CLIENT_ID",
+        default: "",
+        help: "client identity for fair-share scheduling (empty = anonymous)",
+    },
+    Knob {
+        flag: "--max-client-queue",
+        env: "MPU_MAX_CLIENT_QUEUE",
+        default: "0",
+        help: "per-client admission cap on queued points (0 = unbounded)",
+    },
+    Knob {
+        flag: "--client-weights",
+        env: "MPU_CLIENT_WEIGHTS",
+        default: "",
+        help: "deficit-round-robin weights, e.g. `alice=3,bob=1` (unlisted clients weigh 1)",
+    },
+    Knob {
+        flag: "--coordinator",
+        env: "MPU_COORDINATOR",
+        default: "",
+        help: "coordinator address a worker self-registers with (join on boot, drain on shutdown)",
+    },
+];
+
+/// Where a knob's resolved value came from (precedence order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnobOrigin {
+    Cli,
+    Env,
+    Default,
+}
+
+/// Resolves [`SERVE_KNOBS`] into a [`ServeConfig`] with precedence CLI
+/// flag > `MPU_*` env > default. A malformed **CLI** value is an error
+/// (the operator typed it just now); a malformed **environment** value
+/// falls back to the default (a daemon must boot even under a junk
+/// environment — the historical `from_env` behavior).
+pub struct ServeConfigBuilder {
+    cli: Vec<(String, String)>,
+    env: Box<dyn Fn(&str) -> Option<String>>,
+}
+
+impl ServeConfigBuilder {
+    /// Record a CLI override for `flag` (a no-op on `None`, so call
+    /// sites can pass `flag_value(..)` straight through). Panics on a
+    /// flag absent from [`SERVE_KNOBS`] — that is a programming error,
+    /// not operator input.
+    pub fn cli_flag(mut self, flag: &str, value: Option<String>) -> Self {
+        assert!(
+            SERVE_KNOBS.iter().any(|k| k.flag == flag),
+            "unknown serve knob `{flag}`"
+        );
+        if let Some(v) = value {
+            self.cli.push((flag.to_string(), v));
+        }
+        self
+    }
+
+    /// Replace the environment source (tests inject a map here instead
+    /// of racing on the real process environment).
+    pub fn env_source(mut self, f: impl Fn(&str) -> Option<String> + 'static) -> Self {
+        self.env = Box::new(f);
+        self
+    }
+
+    /// The raw resolved string for `flag` and where it came from.
+    pub fn raw(&self, flag: &str) -> (String, KnobOrigin) {
+        let knob = SERVE_KNOBS
+            .iter()
+            .find(|k| k.flag == flag)
+            .unwrap_or_else(|| panic!("unknown serve knob `{flag}`"));
+        if let Some((_, v)) = self.cli.iter().rev().find(|(f, _)| f == flag) {
+            return (v.clone(), KnobOrigin::Cli);
+        }
+        if let Some(v) = (self.env)(knob.env) {
+            return (v, KnobOrigin::Env);
+        }
+        (knob.default.to_string(), KnobOrigin::Default)
+    }
+
+    fn u64_knob(&self, flag: &str) -> anyhow::Result<u64> {
+        let (raw, origin) = self.raw(flag);
+        match raw.trim().parse::<u64>() {
+            Ok(v) => Ok(v),
+            Err(_) if origin == KnobOrigin::Env => {
+                let knob = SERVE_KNOBS.iter().find(|k| k.flag == flag).unwrap();
+                Ok(knob.default.parse().expect("table defaults parse"))
+            }
+            Err(_) => anyhow::bail!("{flag} needs an unsigned integer, got `{raw}`"),
+        }
+    }
+
+    /// An optional-string knob: empty resolves to `None`.
+    fn opt_knob(&self, flag: &str) -> Option<String> {
+        let (raw, _) = self.raw(flag);
+        let raw = raw.trim().to_string();
+        (!raw.is_empty()).then_some(raw)
+    }
+
+    pub fn build(self) -> anyhow::Result<ServeConfig> {
+        let weights = {
+            let (raw, origin) = self.raw("--client-weights");
+            match ServeConfig::parse_client_weights(&raw) {
+                Ok(w) => w,
+                Err(_) if origin == KnobOrigin::Env => std::collections::HashMap::new(),
+                Err(e) => anyhow::bail!("--client-weights: {e}"),
+            }
+        };
+        Ok(ServeConfig {
+            addr: self.raw("--addr").0,
+            store_dir: self.opt_knob("--store").map(std::path::PathBuf::from),
+            store_max_bytes: self.u64_knob("--store-max-mb")? * 1024 * 1024,
+            workers: ServeConfig::parse_workers(&self.raw("--workers").0),
+            connect_timeout: std::time::Duration::from_millis(
+                self.u64_knob("--connect-timeout-ms")?,
+            ),
+            io_timeout: std::time::Duration::from_millis(self.u64_knob("--io-timeout-ms")?),
+            retries: (self.u64_knob("--retries")? as u32).max(1),
+            backoff: std::time::Duration::from_millis(self.u64_knob("--backoff-ms")?),
+            max_queue: self.u64_knob("--max-queue")? as usize,
+            faults: self.opt_knob("--faults"),
+            client_id: self.opt_knob("--client-id"),
+            max_client_queue: self.u64_knob("--max-client-queue")? as usize,
+            client_weights: weights,
+            coordinator: self.opt_knob("--coordinator"),
+        })
+    }
+}
+
 /// Defaults for the sweep service (`mpu serve` / `submit` / `status`),
-/// overridable by environment and then by CLI flags.
+/// overridable by environment and then by CLI flags — see
+/// [`SERVE_KNOBS`] for the full table.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Daemon listen / client connect address (`MPU_ADDR`).
@@ -603,58 +809,80 @@ pub struct ServeConfig {
     /// Fault-injection spec (`MPU_FAULTS`); `None` disables the chaos
     /// plane.
     pub faults: Option<String>,
+    /// Client identity stamped onto submits (`MPU_CLIENT_ID`); `None`
+    /// lands in the server's anonymous fair-share bucket.
+    pub client_id: Option<String>,
+    /// Per-client admission cap on queued points
+    /// (`MPU_MAX_CLIENT_QUEUE`); 0 disables the cap.
+    pub max_client_queue: usize,
+    /// Deficit-round-robin weights per client id
+    /// (`MPU_CLIENT_WEIGHTS`, `alice=3,bob=1`); unlisted clients
+    /// weigh 1.
+    pub client_weights: std::collections::HashMap<String, u64>,
+    /// Coordinator address a worker self-registers with
+    /// (`MPU_COORDINATOR`): `join` once serving, `drain` on graceful
+    /// shutdown.
+    pub coordinator: Option<String>,
 }
 
 impl ServeConfig {
-    pub const DEFAULT_ADDR: &'static str = "127.0.0.1:7117";
-    pub const DEFAULT_STORE_DIR: &'static str = ".mpu-store";
-    pub const DEFAULT_STORE_MAX_MB: u64 = 512;
-    pub const DEFAULT_CONNECT_TIMEOUT_MS: u64 = 5_000;
-    pub const DEFAULT_IO_TIMEOUT_MS: u64 = 300_000;
-    pub const DEFAULT_RETRIES: u32 = 4;
-    pub const DEFAULT_BACKOFF_MS: u64 = 50;
-    pub const DEFAULT_MAX_QUEUE: usize = 4096;
+    /// Start resolving [`SERVE_KNOBS`] against the real process
+    /// environment (override with
+    /// [`env_source`](ServeConfigBuilder::env_source)).
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cli: Vec::new(), env: Box::new(|key| std::env::var(key).ok()) }
+    }
 
-    /// Built-in defaults with environment overrides applied.
+    /// Built-in defaults with environment overrides applied — the
+    /// no-CLI case of [`ServeConfig::builder`], which cannot fail
+    /// (malformed environment values fall back to the defaults).
     pub fn from_env() -> ServeConfig {
-        fn env_u64(key: &str) -> Option<u64> {
-            std::env::var(key).ok().and_then(|v| v.parse::<u64>().ok())
-        }
-        let addr =
-            std::env::var("MPU_ADDR").unwrap_or_else(|_| Self::DEFAULT_ADDR.to_string());
-        let store_dir = std::env::var("MPU_STORE_DIR")
-            .unwrap_or_else(|_| Self::DEFAULT_STORE_DIR.to_string());
-        let max_mb = env_u64("MPU_STORE_MAX_MB").unwrap_or(Self::DEFAULT_STORE_MAX_MB);
-        let workers = std::env::var("MPU_WORKERS")
-            .map(|v| Self::parse_workers(&v))
-            .unwrap_or_default();
-        let connect_ms =
-            env_u64("MPU_CONNECT_TIMEOUT_MS").unwrap_or(Self::DEFAULT_CONNECT_TIMEOUT_MS);
-        let io_ms = env_u64("MPU_IO_TIMEOUT_MS").unwrap_or(Self::DEFAULT_IO_TIMEOUT_MS);
-        let retries =
-            env_u64("MPU_RETRIES").map(|v| v as u32).unwrap_or(Self::DEFAULT_RETRIES);
-        let backoff_ms = env_u64("MPU_BACKOFF_MS").unwrap_or(Self::DEFAULT_BACKOFF_MS);
-        let max_queue = env_u64("MPU_MAX_QUEUE")
-            .map(|v| v as usize)
-            .unwrap_or(Self::DEFAULT_MAX_QUEUE);
-        let faults = std::env::var("MPU_FAULTS").ok().filter(|v| !v.trim().is_empty());
-        ServeConfig {
-            addr,
-            store_dir: Some(std::path::PathBuf::from(store_dir)),
-            store_max_bytes: max_mb * 1024 * 1024,
-            workers,
-            connect_timeout: std::time::Duration::from_millis(connect_ms),
-            io_timeout: std::time::Duration::from_millis(io_ms),
-            retries: retries.max(1),
-            backoff: std::time::Duration::from_millis(backoff_ms),
-            max_queue,
-            faults,
-        }
+        Self::builder().build().expect("no CLI overrides: resolution is infallible")
+    }
+
+    /// The serving-knob section of `--help`, rendered from
+    /// [`SERVE_KNOBS`] so flags, environment variables, defaults and
+    /// help text cannot drift apart.
+    pub fn knob_help() -> String {
+        let width = SERVE_KNOBS.iter().map(|k| k.flag.len()).max().unwrap_or(0);
+        SERVE_KNOBS
+            .iter()
+            .map(|k| {
+                let default = if k.default.is_empty() { "(empty)" } else { k.default };
+                format!(
+                    "  {:<width$}  {} [{}, default {}]",
+                    k.flag, k.help, k.env, default
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
     }
 
     /// Split a comma-separated worker list, dropping empty segments.
     pub fn parse_workers(s: &str) -> Vec<String> {
         s.split(',').map(|w| w.trim().to_string()).filter(|w| !w.is_empty()).collect()
+    }
+
+    /// Parse a `client=weight,...` list. Weights clamp to ≥ 1 (a
+    /// zero-weight client would never be scheduled at all — quotas are
+    /// the starvation tool, not weights).
+    pub fn parse_client_weights(
+        s: &str,
+    ) -> anyhow::Result<std::collections::HashMap<String, u64>> {
+        let mut out = std::collections::HashMap::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((client, weight)) = part.split_once('=') else {
+                anyhow::bail!("`{part}` is not a client=weight pair");
+            };
+            let client = client.trim();
+            anyhow::ensure!(!client.is_empty(), "`{part}` has an empty client id");
+            let weight: u64 = weight
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("`{part}` has a non-integer weight"))?;
+            out.insert(client.to_string(), weight.max(1));
+        }
+        Ok(out)
     }
 }
 
@@ -761,5 +989,103 @@ mod tests {
         let n = m.no_offload();
         assert_eq!(n.offload_policy, OffloadPolicy::AllFarBank);
         assert_eq!(n.pipeline_mode, m.pipeline_mode, "memory system unchanged");
+    }
+
+    /// A builder over an injected (empty or synthetic) environment —
+    /// never the real one, so parallel tests cannot race on env vars.
+    fn builder_with_env(vars: &[(&str, &str)]) -> ServeConfigBuilder {
+        let map: std::collections::HashMap<String, String> =
+            vars.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        ServeConfig::builder().env_source(move |key| map.get(key).cloned())
+    }
+
+    #[test]
+    fn every_knob_resolves_cli_over_env_over_default() {
+        for knob in SERVE_KNOBS {
+            let empty = builder_with_env(&[]);
+            assert_eq!(
+                empty.raw(knob.flag),
+                (knob.default.to_string(), KnobOrigin::Default),
+                "{} without overrides",
+                knob.flag
+            );
+            let env_only = builder_with_env(&[(knob.env, "from-env")]);
+            assert_eq!(
+                env_only.raw(knob.flag),
+                ("from-env".to_string(), KnobOrigin::Env),
+                "{} must honor {}",
+                knob.flag,
+                knob.env
+            );
+            let both = builder_with_env(&[(knob.env, "from-env")])
+                .cli_flag(knob.flag, Some("from-cli".to_string()));
+            assert_eq!(
+                both.raw(knob.flag),
+                ("from-cli".to_string(), KnobOrigin::Cli),
+                "{} must prefer the CLI flag over {}",
+                knob.flag,
+                knob.env
+            );
+        }
+    }
+
+    #[test]
+    fn builder_builds_typed_config_with_documented_precedence() {
+        let cfg = builder_with_env(&[
+            ("MPU_ADDR", "10.0.0.1:9"),
+            ("MPU_MAX_QUEUE", "77"),
+            ("MPU_CLIENT_WEIGHTS", "alice=3, bob=1"),
+        ])
+        .cli_flag("--addr", Some("10.0.0.2:9".into()))
+        .cli_flag("--max-client-queue", Some("5".into()))
+        .build()
+        .unwrap();
+        assert_eq!(cfg.addr, "10.0.0.2:9", "CLI beats env");
+        assert_eq!(cfg.max_queue, 77, "env beats default");
+        assert_eq!(cfg.max_client_queue, 5);
+        assert_eq!(cfg.client_weights.get("alice"), Some(&3));
+        assert_eq!(cfg.client_weights.get("bob"), Some(&1));
+        assert_eq!(cfg.client_id, None, "empty default resolves to None");
+        assert_eq!(cfg.coordinator, None);
+        assert_eq!(cfg.retries, 4);
+        assert_eq!(cfg.io_timeout, std::time::Duration::from_millis(300_000));
+        assert_eq!(cfg.store_dir.as_deref(), Some(std::path::Path::new(".mpu-store")));
+    }
+
+    #[test]
+    fn malformed_env_falls_back_but_malformed_cli_errors() {
+        // A daemon must boot under a junk environment...
+        let cfg = builder_with_env(&[("MPU_MAX_QUEUE", "lots")]).build().unwrap();
+        assert_eq!(cfg.max_queue, 4096);
+        let cfg = builder_with_env(&[("MPU_CLIENT_WEIGHTS", "not-a-pair")]).build().unwrap();
+        assert!(cfg.client_weights.is_empty());
+        // ...but an operator typo on the command line is an error.
+        let bad = builder_with_env(&[])
+            .cli_flag("--max-queue", Some("lots".into()))
+            .build();
+        assert!(bad.is_err());
+        let bad = builder_with_env(&[])
+            .cli_flag("--client-weights", Some("alice".into()))
+            .build();
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn client_weight_parsing_clamps_and_rejects() {
+        let w = ServeConfig::parse_client_weights("alice=0, bob=2,, ").unwrap();
+        assert_eq!(w.get("alice"), Some(&1), "zero weights clamp to 1");
+        assert_eq!(w.get("bob"), Some(&2));
+        assert!(ServeConfig::parse_client_weights("=3").is_err());
+        assert!(ServeConfig::parse_client_weights("alice=x").is_err());
+        assert!(ServeConfig::parse_client_weights("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn knob_help_covers_every_knob() {
+        let help = ServeConfig::knob_help();
+        for knob in SERVE_KNOBS {
+            assert!(help.contains(knob.flag), "help must mention {}", knob.flag);
+            assert!(help.contains(knob.env), "help must mention {}", knob.env);
+        }
     }
 }

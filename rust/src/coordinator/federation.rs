@@ -23,15 +23,15 @@
 
 use super::fault::{RetryPolicy, Timeouts};
 use super::proto::{
-    self, PointSpec, PointSummary, ProgressBody, Request, Response, ResultBody, StatusBody,
-    StreamOutcome, SubmitReply, SubmitRequest, WireReport, WorkerStatus, PROTO_MAJOR,
-    PROTO_VERSION,
+    self, FleetWorker, MetricsBody, PointSpec, PointSummary, ProgressBody, Request, Response,
+    ResultBody, StatusBody, StreamOutcome, SubmitReply, SubmitRequest, WireReport, WorkerMetrics,
+    WorkerStatus, METRICS_SCHEMA_VERSION, PROTO_MAJOR, PROTO_VERSION,
 };
 use super::service::{summarize, write_line, PointSource, Service};
 use super::sweep::stable_hash;
 use super::RunReport;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::BufWriter;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -45,6 +45,60 @@ pub const VNODES: usize = 64;
 
 /// Liveness-probe / handshake timeout.
 const PROBE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Reject a live worker whose protocol a coordinator cannot drive:
+/// wrong major, or missing the streamed-shard features.
+fn check_worker_features(
+    addr: &str,
+    proto_version: u32,
+    proto_major: u32,
+    features: &[String],
+) -> Result<()> {
+    anyhow::ensure!(
+        proto_major == PROTO_MAJOR,
+        "worker {addr} speaks protocol major {proto_major}, coordinator speaks {PROTO_MAJOR}"
+    );
+    // `spec_config` is required because shares forward per-spec config
+    // overrides; an older worker would silently drop them and return
+    // results for the wrong machine configuration.
+    for need in ["stream", "point_specs", "spec_config"] {
+        anyhow::ensure!(
+            features.iter().any(|f| f == need),
+            "worker {addr} (proto v{proto_version}) lacks the `{need}` feature a \
+             coordinator requires — upgrade it"
+        );
+    }
+    Ok(())
+}
+
+/// Consistent-hash partition of `pending` (indices into `keys`) across
+/// `addrs`: [`VNODES`] vnodes per address, points assigned clockwise.
+/// Returns `(address index, point indices)` shares, sorted. Depends
+/// only on the addresses themselves, so membership changes remap only
+/// the points of the workers that changed.
+fn partition_addrs(
+    addrs: &[String],
+    keys: &[String],
+    pending: &[usize],
+) -> Vec<(usize, Vec<usize>)> {
+    let mut ring = Vec::with_capacity(addrs.len() * VNODES);
+    for (wi, addr) in addrs.iter().enumerate() {
+        for v in 0..VNODES {
+            ring.push((stable_hash(&format!("{addr}#{v}")), wi));
+        }
+    }
+    ring.sort_unstable();
+    let mut shares: HashMap<usize, Vec<usize>> = HashMap::new();
+    for &pi in pending {
+        let h = stable_hash(&keys[pi]);
+        let at = ring.partition_point(|&(pos, _)| pos < h);
+        let (_, wi) = ring[at % ring.len()];
+        shares.entry(wi).or_default().push(pi);
+    }
+    let mut out: Vec<(usize, Vec<usize>)> = shares.into_iter().collect();
+    out.sort();
+    out
+}
 
 /// An incremental federation event, forwarded to the submitting
 /// client: one merged `result` per completed point (indices in the
@@ -71,9 +125,23 @@ pub struct FedReply {
     pub reports: Vec<Option<RunReport>>,
 }
 
-/// A fixed set of worker daemons a batch can be sharded across.
+/// One worker of the fleet: address plus drain state. A draining
+/// worker keeps finishing the shares already streaming to it, but
+/// redistribution rounds stop assigning it new points.
+#[derive(Clone, Debug)]
+struct WorkerEntry {
+    addr: String,
+    draining: bool,
+}
+
+/// The set of worker daemons a batch can be sharded across. Since v4
+/// the membership is *hot*: [`Federation::join`] and
+/// [`Federation::drain`] mutate the fleet while the coordinator runs,
+/// and every redistribution round of an in-flight batch re-snapshots
+/// the eligible workers — the consistent-hash ring grows and shrinks
+/// without a restart.
 pub struct Federation {
-    workers: Vec<String>,
+    workers: Mutex<Vec<WorkerEntry>>,
     /// Socket deadlines on worker links.
     timeouts: Timeouts,
     /// Bounded backoff applied before a worker failure is treated as
@@ -108,11 +176,15 @@ impl Federation {
         timeouts: Timeouts,
         retry: RetryPolicy,
     ) -> Result<Federation> {
-        let workers: Vec<String> =
-            workers.into_iter().map(|w| w.trim().to_string()).filter(|w| !w.is_empty()).collect();
+        let workers: Vec<WorkerEntry> = workers
+            .into_iter()
+            .map(|w| w.trim().to_string())
+            .filter(|w| !w.is_empty())
+            .map(|addr| WorkerEntry { addr, draining: false })
+            .collect();
         anyhow::ensure!(!workers.is_empty(), "a federation needs at least one worker address");
         Ok(Federation {
-            workers,
+            workers: Mutex::new(workers),
             timeouts,
             retry,
             fallback: None,
@@ -138,8 +210,70 @@ impl Federation {
         self.degraded_batches.load(Ordering::Relaxed)
     }
 
-    pub fn workers(&self) -> &[String] {
-        &self.workers
+    /// Snapshot of the fleet's worker addresses (draining included).
+    pub fn workers(&self) -> Vec<String> {
+        self.workers.lock().unwrap().iter().map(|w| w.addr.clone()).collect()
+    }
+
+    /// Snapshot of the fleet for a membership ack or `metrics`.
+    pub fn fleet(&self) -> Vec<FleetWorker> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|w| FleetWorker { addr: w.addr.clone(), draining: w.draining })
+            .collect()
+    }
+
+    /// Addresses eligible for new shares: not draining.
+    fn eligible(&self) -> Vec<String> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|w| !w.draining)
+            .map(|w| w.addr.clone())
+            .collect()
+    }
+
+    /// Register a worker while the coordinator runs (v4). The worker
+    /// must pass the same handshake a startup worker does — an
+    /// unreachable or incompatible joiner is refused, not enqueued.
+    /// Idempotent; re-joining a draining worker cancels the drain. New
+    /// points start mapping to it at the next redistribution round.
+    pub fn join(&self, addr: &str) -> Result<Vec<FleetWorker>> {
+        let addr = addr.trim();
+        anyhow::ensure!(!addr.is_empty(), "join: empty worker address");
+        match proto::hello(addr, PROBE_TIMEOUT)? {
+            proto::HelloOutcome::Compatible { proto_version, proto_major, features } => {
+                check_worker_features(addr, proto_version, proto_major, &features)?;
+            }
+            proto::HelloOutcome::Rejected(msg) => {
+                anyhow::bail!("worker {addr} rejected the handshake: {msg}")
+            }
+        }
+        let mut workers = self.workers.lock().unwrap();
+        match workers.iter_mut().find(|w| w.addr == addr) {
+            Some(w) => w.draining = false,
+            None => workers.push(WorkerEntry { addr: addr.to_string(), draining: false }),
+        }
+        drop(workers);
+        Ok(self.fleet())
+    }
+
+    /// Mark a worker draining (v4): shares already streaming to it
+    /// finish, but redistribution rounds stop assigning it new points.
+    /// Draining the last eligible worker leaves batches to the
+    /// degraded local fallback.
+    pub fn drain(&self, addr: &str) -> Result<Vec<FleetWorker>> {
+        let addr = addr.trim();
+        let mut workers = self.workers.lock().unwrap();
+        let Some(w) = workers.iter_mut().find(|w| w.addr == addr) else {
+            anyhow::bail!("drain: {addr} is not in the fleet");
+        };
+        w.draining = true;
+        drop(workers);
+        Ok(self.fleet())
     }
 
     /// Handshake with every reachable worker; a *live* worker that
@@ -149,21 +283,10 @@ impl Federation {
     /// submits route around dead workers anyway.
     pub fn handshake(&self) -> Result<usize> {
         let mut reachable = 0;
-        for addr in &self.workers {
-            match proto::hello(addr, PROBE_TIMEOUT) {
+        for addr in self.workers() {
+            match proto::hello(&addr, PROBE_TIMEOUT) {
                 Ok(proto::HelloOutcome::Compatible { proto_version, proto_major, features }) => {
-                    anyhow::ensure!(
-                        proto_major == PROTO_MAJOR,
-                        "worker {addr} speaks protocol major {proto_major}, coordinator \
-                         speaks {PROTO_MAJOR}"
-                    );
-                    for need in ["stream", "point_specs"] {
-                        anyhow::ensure!(
-                            features.iter().any(|f| f == need),
-                            "worker {addr} (proto v{proto_version}) lacks the `{need}` \
-                             feature a coordinator requires — upgrade it"
-                        );
-                    }
+                    check_worker_features(&addr, proto_version, proto_major, &features)?;
                     reachable += 1;
                 }
                 Ok(proto::HelloOutcome::Rejected(msg)) => {
@@ -175,38 +298,22 @@ impl Federation {
         Ok(reachable)
     }
 
-    /// The hash ring over a set of worker indices.
-    fn ring(&self, alive: &[usize]) -> Vec<(u64, usize)> {
-        let mut ring = Vec::with_capacity(alive.len() * VNODES);
-        for &wi in alive {
-            for v in 0..VNODES {
-                ring.push((stable_hash(&format!("{}#{v}", self.workers[wi])), wi));
-            }
-        }
-        ring.sort_unstable();
-        ring
-    }
-
     /// Partition `pending` (indices into `keys`) across the `alive`
-    /// workers by consistent hashing on the stable store key. Returns
-    /// `(worker index, point indices)` shares, sorted by worker.
+    /// workers (indices into the current fleet snapshot) by consistent
+    /// hashing on the stable store key. Returns `(worker index, point
+    /// indices)` shares, sorted by worker.
     pub fn partition(
         &self,
         keys: &[String],
         pending: &[usize],
         alive: &[usize],
     ) -> Vec<(usize, Vec<usize>)> {
-        let ring = self.ring(alive);
-        let mut shares: HashMap<usize, Vec<usize>> = HashMap::new();
-        for &pi in pending {
-            let h = stable_hash(&keys[pi]);
-            let at = ring.partition_point(|&(pos, _)| pos < h);
-            let (_, wi) = ring[at % ring.len()];
-            shares.entry(wi).or_default().push(pi);
-        }
-        let mut out: Vec<(usize, Vec<usize>)> = shares.into_iter().collect();
-        out.sort();
-        out
+        let addrs = self.workers();
+        let chosen: Vec<String> = alive.iter().map(|&i| addrs[i].clone()).collect();
+        partition_addrs(&chosen, keys, pending)
+            .into_iter()
+            .map(|(ci, pts)| (alive[ci], pts))
+            .collect()
     }
 
     /// Shard a batch across the fleet, streaming merged events as
@@ -226,10 +333,22 @@ impl Federation {
         let points = req.points()?;
         let total = points.len();
         let keys: Vec<String> = points.iter().map(|p| p.cache_key()).collect();
-        let specs: Vec<PointSpec> = points
-            .iter()
-            .map(|p| PointSpec { workload: p.workload.name().to_string(), variant: p.label.clone() })
-            .collect();
+        // Shares are re-submitted as `point_specs`. When the request
+        // already came as specs, forward them verbatim (they expand
+        // 1:1, in order) so per-spec `config` overrides survive the
+        // hop; otherwise derive one override-free spec per point.
+        let specs: Vec<PointSpec> = if req.point_specs.is_empty() {
+            points
+                .iter()
+                .map(|p| PointSpec {
+                    workload: p.workload.name().to_string(),
+                    variant: p.label.clone(),
+                    config: vec![],
+                })
+                .collect()
+        } else {
+            req.point_specs.clone()
+        };
         let t0 = Instant::now();
         let merge = Mutex::new(Merge {
             summaries: vec![None; total],
@@ -237,7 +356,11 @@ impl Federation {
             completed: 0,
             on_event,
         });
-        let mut alive: Vec<bool> = vec![true; self.workers.len()];
+        // Workers that died during *this batch*, by address. The fleet
+        // itself is re-snapshotted every round, so a `join` grows the
+        // ring mid-batch and a `drain` shrinks it — without disturbing
+        // the shares already streaming.
+        let mut dead: HashSet<String> = HashSet::new();
         let mut degraded = false;
         loop {
             let pending: Vec<usize> = {
@@ -247,9 +370,12 @@ impl Federation {
             if pending.is_empty() {
                 break;
             }
-            let alive_idx: Vec<usize> =
-                (0..alive.len()).filter(|&i| alive[i]).collect();
-            if alive_idx.is_empty() {
+            let round_workers: Vec<String> = self
+                .eligible()
+                .into_iter()
+                .filter(|addr| !dead.contains(addr))
+                .collect();
+            if round_workers.is_empty() {
                 let Some(fallback) = &self.fallback else {
                     anyhow::bail!(
                         "every worker died with {} of {total} points unfinished",
@@ -288,13 +414,13 @@ impl Federation {
                 }
                 break;
             }
-            let shares = self.partition(&keys, &pending, &alive_idx);
+            let shares = partition_addrs(&round_workers, &keys, &pending);
             let outcomes: Vec<(usize, Result<StreamOutcome>)> = std::thread::scope(|scope| {
                 let handles: Vec<_> = shares
                     .iter()
                     .map(|(wi, share)| {
                         let wi = *wi;
-                        let addr = self.workers[wi].as_str();
+                        let addr = round_workers[wi].as_str();
                         let share = share.clone();
                         let wreq = SubmitRequest {
                             scale: req.scale.clone(),
@@ -307,6 +433,10 @@ impl Federation {
                             suite: false,
                             workloads: vec![],
                             variants: vec![],
+                            // The coordinator is the worker's client;
+                            // end-user identity stays at the front door
+                            // where fair share is enforced.
+                            client_id: None,
                             // One id per share, reused across retry
                             // attempts: a retried stream attaches to
                             // the worker's in-flight job instead of
@@ -404,11 +534,11 @@ impl Federation {
                     // A rejected batch (unknown workload, bad config) is
                     // fatal: the same request fails on every worker.
                     Ok(StreamOutcome::ServerError(msg)) => {
-                        anyhow::bail!("worker {} rejected the batch: {msg}", self.workers[wi])
+                        anyhow::bail!("worker {} rejected the batch: {msg}", round_workers[wi])
                     }
                     // Transport death: mark dead, redistribute next round.
                     Err(_) => {
-                        alive[wi] = false;
+                        dead.insert(round_workers[wi].clone());
                         lost_worker = true;
                     }
                 }
@@ -417,7 +547,18 @@ impl Federation {
                 let m = merge.lock().unwrap();
                 (0..total).filter(|&i| m.summaries[i].is_none()).count()
             };
-            if still_pending > 0 && !lost_worker {
+            // A drain between rounds also shrinks the worker set, so a
+            // fully-done round with leftovers and no deaths can only be
+            // protocol skew when the membership held still.
+            let shrunk = {
+                let now: HashSet<String> = self
+                    .eligible()
+                    .into_iter()
+                    .filter(|addr| !dead.contains(addr))
+                    .collect();
+                round_workers.iter().any(|w| !now.contains(w))
+            };
+            if still_pending > 0 && !lost_worker && !shrunk {
                 anyhow::bail!(
                     "workers reported done but {still_pending} of {total} points never \
                      arrived (protocol skew?)"
@@ -458,15 +599,16 @@ impl Federation {
     /// liveness view. Probes run concurrently so a fleet of dead
     /// workers costs one probe timeout, not one per worker.
     pub fn worker_statuses(&self) -> Vec<WorkerStatus> {
+        let entries = self.workers.lock().unwrap().clone();
         std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .workers
+            let handles: Vec<_> = entries
                 .iter()
-                .map(|addr| {
+                .map(|entry| {
+                    let addr = entry.addr.clone();
                     scope.spawn(move || {
-                        match proto::request_with_timeout(addr, &Request::Status, PROBE_TIMEOUT) {
-                            Ok(Response::Status(s)) => WorkerStatus {
-                                addr: addr.clone(),
+                        match proto::Client::new(addr.clone()).status_timed(PROBE_TIMEOUT) {
+                            Ok(s) => WorkerStatus {
+                                addr,
                                 alive: true,
                                 proto_version: s.proto_version,
                                 points: s.points,
@@ -474,8 +616,8 @@ impl Federation {
                                 queue_depth: s.queue_depth,
                                 inflight: s.inflight,
                             },
-                            _ => WorkerStatus {
-                                addr: addr.clone(),
+                            Err(_) => WorkerStatus {
+                                addr,
                                 alive: false,
                                 proto_version: 0,
                                 points: 0,
@@ -488,6 +630,45 @@ impl Federation {
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("status probe panicked")).collect()
+        })
+    }
+
+    /// Probe every worker's `metrics` — the per-worker rows of a
+    /// coordinator's `metrics` reply, drain flags included.
+    pub fn worker_metrics(&self) -> Vec<WorkerMetrics> {
+        let entries = self.workers.lock().unwrap().clone();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = entries
+                .iter()
+                .map(|entry| {
+                    let addr = entry.addr.clone();
+                    let draining = entry.draining;
+                    scope.spawn(move || {
+                        let probe = proto::Client::new(addr.clone())
+                            .request_timed(&Request::Metrics, PROBE_TIMEOUT);
+                        match probe {
+                            Ok(Response::Metrics(m)) => WorkerMetrics {
+                                addr,
+                                alive: true,
+                                draining,
+                                proto_version: m.proto_version,
+                                points: m.points,
+                                simulated: m.simulated,
+                                queue_depth: m.queue_depth,
+                                inflight: m.inflight,
+                                sim_cycles_per_sec: m.sim_cycles_per_sec,
+                            },
+                            _ => WorkerMetrics {
+                                addr,
+                                alive: false,
+                                draining,
+                                ..WorkerMetrics::default()
+                            },
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("metrics probe panicked")).collect()
         })
     }
 }
@@ -561,6 +742,39 @@ impl Coordinator {
             queue_limit: 0,
             retries: self.fed.retries(),
             degraded_batches: self.fed.degraded_batches(),
+        }
+    }
+
+    /// Coordinator metrics: own request counters plus per-worker
+    /// metric rows and fleet-aggregated depths/throughput. Cache and
+    /// client rows live on the workers, not here — each worker's own
+    /// `metrics` reply carries them.
+    pub fn metrics(&self) -> MetricsBody {
+        let workers = self.fed.worker_metrics();
+        let alive = || workers.iter().filter(|w| w.alive);
+        MetricsBody {
+            schema_version: METRICS_SCHEMA_VERSION,
+            report: "metrics".to_string(),
+            proto_version: PROTO_VERSION,
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+            queue_depth: alive().map(|w| w.queue_depth).sum(),
+            queue_limit: 0,
+            inflight: alive().map(|w| w.inflight).sum(),
+            active_requests: *self.active.lock().unwrap(),
+            requests: self.requests.load(Ordering::Relaxed),
+            points: self.points.load(Ordering::Relaxed),
+            simulated: alive().map(|w| w.simulated).sum(),
+            mem_hits: 0,
+            disk_hits: 0,
+            dedup_waits: 0,
+            cache_hit_rate: 0.0,
+            admission_rejected: 0,
+            retries: self.fed.retries(),
+            degraded_batches: self.fed.degraded_batches(),
+            sim_cycles_per_sec: alive().map(|w| w.sim_cycles_per_sec).sum(),
+            store: None,
+            clients: vec![],
+            workers,
         }
     }
 
@@ -699,5 +913,53 @@ mod tests {
         assert!(shares.iter().all(|(_, pts)| !pts.is_empty()));
         let total: usize = shares.iter().map(|(_, pts)| pts.len()).sum();
         assert_eq!(total, 24);
+    }
+
+    #[test]
+    fn drain_marks_a_worker_and_excludes_it_from_new_shares() {
+        let f = fed(&["127.0.0.1:7201", "127.0.0.1:7202"]);
+        let fleet = f.drain("127.0.0.1:7202").unwrap();
+        assert_eq!(fleet.len(), 2, "drain keeps the worker in the fleet: {fleet:?}");
+        assert!(fleet.iter().any(|w| w.addr == "127.0.0.1:7202" && w.draining));
+        assert!(fleet.iter().any(|w| w.addr == "127.0.0.1:7201" && !w.draining));
+        // Still listed (in-flight shares finish there)...
+        assert_eq!(f.workers().len(), 2);
+        // ...but no longer eligible for new shares.
+        assert_eq!(f.eligible(), ["127.0.0.1:7201"]);
+        // Draining an unknown address is an operator typo, not a no-op.
+        assert!(f.drain("127.0.0.1:9999").is_err());
+    }
+
+    #[test]
+    fn growing_the_ring_only_remaps_points_onto_the_joiner() {
+        // The membership-change half of consistent hashing: adding a
+        // worker must never move a point between two survivors. (The
+        // shrink direction is pinned by
+        // `removing_a_worker_only_remaps_its_share`.)
+        let two: Vec<String> = vec!["127.0.0.1:7201".into(), "127.0.0.1:7202".into()];
+        let three: Vec<String> =
+            vec!["127.0.0.1:7201".into(), "127.0.0.1:7202".into(), "127.0.0.1:7203".into()];
+        let ks = keys(96);
+        let pending: Vec<usize> = (0..ks.len()).collect();
+        let owner_of = |addrs: &[String]| {
+            let mut owner = vec![usize::MAX; ks.len()];
+            for (wi, pts) in partition_addrs(addrs, &ks, &pending) {
+                for &p in &pts {
+                    owner[p] = wi;
+                }
+            }
+            owner
+        };
+        let before = owner_of(&two);
+        let after = owner_of(&three);
+        let mut moved = 0;
+        for (p, (&a, &b)) in before.iter().zip(&after).enumerate() {
+            if a != b {
+                assert_eq!(b, 2, "point {p} moved to a survivor instead of the joiner");
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "a three-way ring must hand the joiner some points");
+        assert!(moved < ks.len(), "the joiner must not steal the whole batch");
     }
 }

@@ -54,9 +54,13 @@ use std::time::Duration;
 /// queue/worker fields of `status`. v3 adds admission control (the
 /// `busy` response + `retry_after_ms`), idempotent retried submits
 /// (`request_id`), the `degraded` reply flag, and the
-/// retry/degradation counters of `status`. All additions are
-/// append-only, so v1–v3 share [`PROTO_MAJOR`] 1.
-pub const PROTO_VERSION: u32 = 3;
+/// retry/degradation counters of `status`. v4 adds the operability
+/// surface: the `metrics` record, per-client identity (`client_id` on
+/// `hello`/`submit`) driving fair-share scheduling and per-client
+/// quotas, hot fleet membership (`join`/`drain` + the `fleet`
+/// response), and per-spec config overrides (`point_specs[].config`).
+/// All additions are append-only, so v1–v4 share [`PROTO_MAJOR`] 1.
+pub const PROTO_VERSION: u32 = 4;
 
 /// Compatibility epoch. Bumped only when a change cannot be expressed
 /// append-only; a server rejects a `hello` from a different major with
@@ -67,8 +71,17 @@ pub const PROTO_MAJOR: u32 = 1;
 /// coordinator requires `point_specs` + `stream` from its workers).
 /// Only capabilities with an actual protocol surface belong here —
 /// the list is append-only once released.
-pub const FEATURES: [&str; 5] =
-    ["stream", "point_specs", "return_reports", "busy", "request_id"];
+pub const FEATURES: [&str; 9] = [
+    "stream",
+    "point_specs",
+    "return_reports",
+    "busy",
+    "request_id",
+    "metrics",
+    "membership",
+    "client_id",
+    "spec_config",
+];
 
 fn default_proto_major() -> u32 {
     PROTO_MAJOR
@@ -86,11 +99,27 @@ pub enum Request {
         proto_version: u32,
         #[serde(default = "default_proto_major")]
         proto_major: u32,
+        /// Client identity (v4): becomes the connection's default
+        /// identity for fair-share scheduling and per-client quotas.
+        #[serde(default, skip_serializing_if = "Option::is_none")]
+        client_id: Option<String>,
     },
     /// Daemon + store counters.
     Status,
+    /// Operational metrics snapshot (v4): queue/in-flight depths,
+    /// store hit rates, per-client and per-worker rows.
+    Metrics,
     /// Run a batch of sweep points and return their results.
     Submit(SubmitRequest),
+    /// Hot fleet membership (v4, coordinator only): register `addr` as
+    /// a worker. The consistent-hash ring grows at the next
+    /// redistribution round — no restart. Idempotent; re-joining a
+    /// draining worker cancels the drain.
+    Join { addr: String },
+    /// Hot fleet membership (v4, coordinator only): mark `addr`
+    /// draining. In-flight shares finish; new points remap to
+    /// survivors via the PR-5 redistribution path.
+    Drain { addr: String },
     /// Stop the daemon: drains submits already executing (their clients
     /// still get results), responds `bye`, then stops accepting.
     Shutdown,
@@ -143,6 +172,11 @@ pub struct SubmitRequest {
     /// re-enqueueing — a dropped-reply retry never re-simulates.
     #[serde(default, skip_serializing_if = "Option::is_none")]
     pub request_id: Option<String>,
+    /// Client identity (v4) for fair-share scheduling and per-client
+    /// quotas. Overrides the connection's `hello` identity; absent
+    /// everywhere means the shared `"anon"` bucket.
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub client_id: Option<String>,
 }
 
 impl Default for SubmitRequest {
@@ -161,16 +195,23 @@ impl Default for SubmitRequest {
             point_specs: vec![],
             return_reports: false,
             request_id: None,
+            client_id: None,
         }
     }
 }
 
-/// One explicit sweep point of a `point_specs` batch (scale and config
-/// come from the enclosing request).
+/// One explicit sweep point of a `point_specs` batch (scale and base
+/// config come from the enclosing request; `config` layers per-spec
+/// overrides on top — v4, how `mpu tune` ships a whole candidate
+/// generation as one batch).
 #[derive(Clone, Debug, PartialEq, Eq, Serialize, Deserialize)]
 pub struct PointSpec {
     pub workload: String,
     pub variant: String,
+    /// Per-spec knob overrides (v4), applied after the request-level
+    /// `config`. Empty (the default) is wire-identical to v2/v3.
+    #[serde(default, skip_serializing_if = "Vec::is_empty")]
+    pub config: Vec<(String, String)>,
 }
 
 fn default_scale() -> String {
@@ -200,11 +241,20 @@ impl SubmitRequest {
                     .ok_or_else(|| anyhow!("unknown workload `{}`", spec.workload))?;
                 let kind = MachineKind::from_name(&spec.variant)
                     .ok_or_else(|| anyhow!("unknown machine variant `{}`", spec.variant))?;
+                let target = if spec.config.is_empty() {
+                    Target::for_kind(kind, &cfg)
+                } else {
+                    let mut spec_cfg = cfg.clone();
+                    for (k, v) in &spec.config {
+                        spec_cfg.set(k, v).map_err(|e| anyhow!("config error: {e}"))?;
+                    }
+                    Target::for_kind(kind, &spec_cfg)
+                };
                 points.push(SweepPoint {
                     label: kind.name().to_string(),
                     workload: w,
                     scale,
-                    target: Target::for_kind(kind, &cfg),
+                    target,
                 });
             }
             return Ok(points);
@@ -258,6 +308,11 @@ pub enum Response {
         message: String,
     },
     Status(StatusBody),
+    /// Operational metrics snapshot (v4).
+    Metrics(MetricsBody),
+    /// Fleet membership ack (v4): the post-`join`/`drain` worker list,
+    /// draining workers marked.
+    Fleet { workers: Vec<FleetWorker> },
     /// Streamed: one completed point (v2).
     Result(ResultBody),
     /// Streamed: running completion count (v2).
@@ -478,6 +533,136 @@ pub struct WorkerStatus {
     pub inflight: usize,
 }
 
+/// Schema version of the `metrics` record / `METRICS.json` document.
+pub const METRICS_SCHEMA_VERSION: u32 = 1;
+
+fn metrics_report_tag() -> String {
+    "metrics".to_string()
+}
+
+/// Operational metrics snapshot (v4) — the body of the `metrics`
+/// response and, unchanged, of a dumped `METRICS.json`. Every field
+/// beyond the schema header is `#[serde(default)]`, so the document
+/// stays append-only under the same discipline as `status`.
+#[derive(Clone, Debug, Default, Serialize, Deserialize)]
+pub struct MetricsBody {
+    /// Document schema version ([`METRICS_SCHEMA_VERSION`]).
+    pub schema_version: u32,
+    /// Document discriminator, always `"metrics"` (routes
+    /// `mpu check-json`).
+    #[serde(default = "metrics_report_tag")]
+    pub report: String,
+    #[serde(default)]
+    pub proto_version: u32,
+    #[serde(default)]
+    pub uptime_ms: u64,
+    /// Points queued but not yet claimed by a runner.
+    #[serde(default)]
+    pub queue_depth: usize,
+    /// Admission cap on queued points; 0 means unbounded.
+    #[serde(default)]
+    pub queue_limit: usize,
+    /// Simulations currently executing or awaited by a dedup waiter.
+    #[serde(default)]
+    pub inflight: usize,
+    /// Submit requests currently executing.
+    #[serde(default)]
+    pub active_requests: u64,
+    /// Lifetime submit requests served.
+    #[serde(default)]
+    pub requests: u64,
+    /// Lifetime points across all submits.
+    #[serde(default)]
+    pub points: u64,
+    #[serde(default)]
+    pub simulated: u64,
+    #[serde(default)]
+    pub mem_hits: u64,
+    #[serde(default)]
+    pub disk_hits: u64,
+    #[serde(default)]
+    pub dedup_waits: u64,
+    /// Fraction of lifetime points served without re-simulation
+    /// (memory + disk + dedup over points); 0 before any traffic.
+    #[serde(default)]
+    pub cache_hit_rate: f64,
+    /// Submits refused with `busy` (queue or quota full).
+    #[serde(default)]
+    pub admission_rejected: u64,
+    /// Worker-link operations retried after transient failure
+    /// (coordinator only).
+    #[serde(default)]
+    pub retries: u64,
+    /// Batches served via the degraded local-fallback path
+    /// (coordinator only).
+    #[serde(default)]
+    pub degraded_batches: u64,
+    /// Aggregate simulation throughput: lifetime simulated cycles over
+    /// lifetime simulation wall time (cycles/s; 0 before the first
+    /// simulation).
+    #[serde(default)]
+    pub sim_cycles_per_sec: f64,
+    /// On-disk store counters (absent when the daemon runs storeless).
+    #[serde(default)]
+    pub store: Option<super::store::StoreStats>,
+    /// Per-client fair-share rows, sorted by client id.
+    #[serde(default)]
+    pub clients: Vec<ClientMetrics>,
+    /// Per-worker rows (coordinator only).
+    #[serde(default)]
+    pub workers: Vec<WorkerMetrics>,
+}
+
+/// One client's fair-share row in a `metrics` reply.
+#[derive(Clone, Debug, Default, Serialize, Deserialize)]
+pub struct ClientMetrics {
+    pub client_id: String,
+    /// Deficit-round-robin weight (pops per scheduling turn).
+    #[serde(default)]
+    pub weight: u64,
+    /// Points currently queued for this client.
+    #[serde(default)]
+    pub queued: usize,
+    /// Lifetime points completed for this client.
+    #[serde(default)]
+    pub completed: u64,
+    /// Submits refused because this client's quota was full.
+    #[serde(default)]
+    pub rejected: u64,
+}
+
+/// One worker's row in a coordinator's `metrics` reply.
+#[derive(Clone, Debug, Default, Serialize, Deserialize)]
+pub struct WorkerMetrics {
+    pub addr: String,
+    pub alive: bool,
+    /// The worker is draining: it finishes in-flight shares but new
+    /// points remap to survivors.
+    #[serde(default)]
+    pub draining: bool,
+    #[serde(default)]
+    pub proto_version: u32,
+    #[serde(default)]
+    pub points: u64,
+    #[serde(default)]
+    pub simulated: u64,
+    #[serde(default)]
+    pub queue_depth: usize,
+    #[serde(default)]
+    pub inflight: usize,
+    /// The worker's aggregate simulation throughput (cycles/s).
+    #[serde(default)]
+    pub sim_cycles_per_sec: f64,
+}
+
+/// One worker row in a `fleet` membership ack.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct FleetWorker {
+    pub addr: String,
+    #[serde(default)]
+    pub draining: bool,
+}
+
 /// Connect to `addr`, consulting the fault plane first: an active
 /// [`FaultClass::Connect`] rule can refuse the connection before any
 /// socket is opened, exactly like a dead peer.
@@ -603,7 +788,21 @@ pub enum HelloOutcome {
 /// Handshake with a server. `Err` is transport-level (unreachable);
 /// [`HelloOutcome::Rejected`] is a live server refusing our version.
 pub fn hello(addr: &str, timeout: Duration) -> Result<HelloOutcome> {
-    let req = Request::Hello { proto_version: PROTO_VERSION, proto_major: PROTO_MAJOR };
+    hello_as(addr, timeout, None)
+}
+
+/// [`hello`] carrying a client identity (v4): the server adopts it as
+/// the connection's default for fair-share accounting.
+pub fn hello_as(
+    addr: &str,
+    timeout: Duration,
+    client_id: Option<&str>,
+) -> Result<HelloOutcome> {
+    let req = Request::Hello {
+        proto_version: PROTO_VERSION,
+        proto_major: PROTO_MAJOR,
+        client_id: client_id.map(|s| s.to_string()),
+    };
     match request_with_timeout(addr, &req, timeout)? {
         Response::Hello { proto_version, proto_major, features } => {
             Ok(HelloOutcome::Compatible { proto_version, proto_major, features })
@@ -746,6 +945,176 @@ pub fn submit_resilient(
     }
 }
 
+/// A typed client for the sweep service: one value holding the
+/// address, identity, socket deadlines and retry policy that
+/// `mpu submit/status/shutdown` and the federation's worker links used
+/// to each re-derive by hand. Every method opens a fresh connection
+/// (the protocol is stateless per line), so a `Client` is cheap to
+/// clone and freely shared across threads.
+#[derive(Clone, Debug)]
+pub struct Client {
+    addr: String,
+    client_id: Option<String>,
+    timeouts: Option<Timeouts>,
+    retry: RetryPolicy,
+}
+
+impl Client {
+    /// A client with no socket deadlines and the default retry policy —
+    /// right for interactive CLI use against a local daemon, where a
+    /// blocking submit may legitimately run for minutes.
+    pub fn new(addr: impl Into<String>) -> Client {
+        Client {
+            addr: addr.into(),
+            client_id: None,
+            timeouts: None,
+            retry: RetryPolicy::default(),
+        }
+    }
+
+    /// Apply connect/io socket deadlines to every call.
+    pub fn with_timeouts(mut self, timeouts: Timeouts) -> Client {
+        self.timeouts = Some(timeouts);
+        self
+    }
+
+    /// Replace the retry policy used by [`Client::submit_resilient`].
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Client {
+        self.retry = retry;
+        self
+    }
+
+    /// Attach a client identity (v4): sent on `hello` and stamped onto
+    /// every submit that does not already carry one.
+    pub fn with_identity(mut self, client_id: Option<String>) -> Client {
+        self.client_id = client_id;
+        self
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn retry_policy(&self) -> &RetryPolicy {
+        &self.retry
+    }
+
+    pub fn timeouts(&self) -> Option<Timeouts> {
+        self.timeouts
+    }
+
+    /// One request, one response, honoring the configured deadlines.
+    pub fn request(&self, req: &Request) -> Result<Response> {
+        match self.timeouts {
+            None => request(&self.addr, req),
+            Some(t) => request_with_timeout(&self.addr, req, t.connect.max(t.io)),
+        }
+    }
+
+    /// [`Client::request`] with an explicit per-call deadline (liveness
+    /// probes want a tight bound regardless of the submit deadlines).
+    pub fn request_timed(&self, req: &Request, timeout: Duration) -> Result<Response> {
+        request_with_timeout(&self.addr, req, timeout)
+    }
+
+    /// Version/feature handshake carrying this client's identity.
+    pub fn hello(&self, timeout: Duration) -> Result<HelloOutcome> {
+        hello_as(&self.addr, timeout, self.client_id.as_deref())
+    }
+
+    pub fn status(&self) -> Result<StatusBody> {
+        match self.request(&Request::Status)? {
+            Response::Status(s) => Ok(s),
+            Response::Error { message } => Err(anyhow!("{}: {message}", self.addr)),
+            other => Err(anyhow!("{}: unexpected status reply: {other:?}", self.addr)),
+        }
+    }
+
+    /// [`Client::status`] with a tight probe deadline.
+    pub fn status_timed(&self, timeout: Duration) -> Result<StatusBody> {
+        match self.request_timed(&Request::Status, timeout)? {
+            Response::Status(s) => Ok(s),
+            Response::Error { message } => Err(anyhow!("{}: {message}", self.addr)),
+            other => Err(anyhow!("{}: unexpected status reply: {other:?}", self.addr)),
+        }
+    }
+
+    pub fn metrics(&self) -> Result<MetricsBody> {
+        match self.request(&Request::Metrics)? {
+            Response::Metrics(m) => Ok(m),
+            Response::Error { message } => Err(anyhow!("{}: {message}", self.addr)),
+            other => Err(anyhow!("{}: unexpected metrics reply: {other:?}", self.addr)),
+        }
+    }
+
+    pub fn shutdown(&self) -> Result<()> {
+        match self.request(&Request::Shutdown)? {
+            Response::Bye => Ok(()),
+            Response::Error { message } => Err(anyhow!("{}: {message}", self.addr)),
+            other => Err(anyhow!("{}: unexpected shutdown reply: {other:?}", self.addr)),
+        }
+    }
+
+    /// Register a worker with a coordinator (v4).
+    pub fn join(&self, worker: &str) -> Result<Vec<FleetWorker>> {
+        self.fleet_request(Request::Join { addr: worker.to_string() })
+    }
+
+    /// Mark a worker draining on a coordinator (v4).
+    pub fn drain(&self, worker: &str) -> Result<Vec<FleetWorker>> {
+        self.fleet_request(Request::Drain { addr: worker.to_string() })
+    }
+
+    fn fleet_request(&self, req: Request) -> Result<Vec<FleetWorker>> {
+        match self.request(&req)? {
+            Response::Fleet { workers } => Ok(workers),
+            Response::Error { message } => Err(anyhow!("{}: {message}", self.addr)),
+            other => Err(anyhow!("{}: unexpected fleet reply: {other:?}", self.addr)),
+        }
+    }
+
+    /// Stamp this client's identity onto a request that lacks one.
+    fn identify(&self, req: &SubmitRequest) -> SubmitRequest {
+        let mut req = req.clone();
+        if req.client_id.is_none() {
+            req.client_id = self.client_id.clone();
+        }
+        req
+    }
+
+    /// Blocking submit: one request line, one terminal reply.
+    pub fn submit(&self, req: &SubmitRequest) -> Result<Response> {
+        self.request(&Request::Submit(self.identify(req)))
+    }
+
+    /// One streamed submit attempt (no retries) — the federation keeps
+    /// its own per-share retry loop and calls this.
+    pub fn stream(
+        &self,
+        req: &SubmitRequest,
+        on_event: impl FnMut(&Response),
+    ) -> Result<StreamOutcome> {
+        submit_streamed_with(&self.addr, &self.identify(req), self.timeouts, on_event)
+    }
+
+    /// Streamed submit with the full resilience stack: deadlines,
+    /// bounded backoff, `busy` honoring, idempotent `request_id`
+    /// retries, and client-side replay dedup.
+    pub fn submit_resilient(
+        &self,
+        req: &SubmitRequest,
+        on_event: impl FnMut(&Response),
+    ) -> Result<StreamOutcome> {
+        submit_resilient(
+            &self.addr,
+            &self.identify(req),
+            self.timeouts.unwrap_or_default(),
+            &self.retry,
+            on_event,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -802,9 +1171,10 @@ mod tests {
     fn hello_round_trips_and_defaults_major() {
         let line = r#"{"cmd":"hello","proto_version":2}"#;
         match serde_json::from_str::<Request>(line).unwrap() {
-            Request::Hello { proto_version, proto_major } => {
+            Request::Hello { proto_version, proto_major, client_id } => {
                 assert_eq!(proto_version, 2);
                 assert_eq!(proto_major, PROTO_MAJOR);
+                assert!(client_id.is_none(), "pre-v4 hello has no identity");
             }
             other => panic!("expected hello, got {other:?}"),
         }
@@ -838,8 +1208,8 @@ mod tests {
         s.workloads = vec!["axpy".into()];
         s.variants = vec!["gpu".into()];
         s.point_specs = vec![
-            PointSpec { workload: "knn".into(), variant: "mpu".into() },
-            PointSpec { workload: "axpy".into(), variant: "ideal".into() },
+            PointSpec { workload: "knn".into(), variant: "mpu".into(), config: vec![] },
+            PointSpec { workload: "axpy".into(), variant: "ideal".into(), config: vec![] },
         ];
         let pts = s.points().unwrap();
         assert_eq!(pts.len(), 2);
@@ -848,7 +1218,8 @@ mod tests {
         assert_eq!(pts[1].workload, Workload::Axpy);
         assert_eq!(pts[1].label, "ideal");
         // A bogus spec is rejected like any other name.
-        s.point_specs.push(PointSpec { workload: "nope".into(), variant: "mpu".into() });
+        s.point_specs
+            .push(PointSpec { workload: "nope".into(), variant: "mpu".into(), config: vec![] });
         assert!(s.points().is_err());
     }
 
@@ -948,6 +1319,137 @@ mod tests {
         let b = new_request_id("w1");
         assert_ne!(a, b);
         assert!(a.contains('-'));
+    }
+
+    #[test]
+    fn v4_metrics_and_membership_records_round_trip() {
+        let req = serde_json::to_string(&Request::Metrics).unwrap();
+        assert!(req.contains(r#""cmd":"metrics""#));
+        let body = MetricsBody {
+            schema_version: METRICS_SCHEMA_VERSION,
+            report: "metrics".into(),
+            queue_depth: 3,
+            cache_hit_rate: 0.5,
+            clients: vec![ClientMetrics {
+                client_id: "alice".into(),
+                weight: 3,
+                queued: 2,
+                completed: 7,
+                rejected: 1,
+            }],
+            workers: vec![WorkerMetrics {
+                addr: "127.0.0.1:7201".into(),
+                alive: true,
+                draining: true,
+                sim_cycles_per_sec: 1e6,
+                ..WorkerMetrics::default()
+            }],
+            ..MetricsBody::default()
+        };
+        let line = serde_json::to_string(&Response::Metrics(body)).unwrap();
+        assert!(line.contains(r#""resp":"metrics""#));
+        match serde_json::from_str::<Response>(&line).unwrap() {
+            Response::Metrics(m) => {
+                assert_eq!(m.schema_version, METRICS_SCHEMA_VERSION);
+                assert_eq!(m.clients[0].client_id, "alice");
+                assert!(m.workers[0].draining);
+            }
+            other => panic!("expected metrics, got {other:?}"),
+        }
+        for (req, wire) in [
+            (Request::Join { addr: "w:1".into() }, r#""cmd":"join""#),
+            (Request::Drain { addr: "w:1".into() }, r#""cmd":"drain""#),
+        ] {
+            let line = serde_json::to_string(&req).unwrap();
+            assert!(line.contains(wire), "{line}");
+            serde_json::from_str::<Request>(&line).unwrap();
+        }
+        let ack = Response::Fleet {
+            workers: vec![FleetWorker { addr: "w:1".into(), draining: false }],
+        };
+        let line = serde_json::to_string(&ack).unwrap();
+        match serde_json::from_str::<Response>(&line).unwrap() {
+            Response::Fleet { workers } => assert_eq!(workers[0].addr, "w:1"),
+            other => panic!("expected fleet, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v3_lines_parse_with_v4_defaults() {
+        // A v3 client's hello and submit lack client_id; a v3 spec
+        // lacks per-spec config. All must parse to the v4 defaults.
+        let s: Request = serde_json::from_str(
+            r#"{"cmd":"submit","point_specs":[{"workload":"axpy","variant":"mpu"}]}"#,
+        )
+        .unwrap();
+        match s {
+            Request::Submit(s) => {
+                assert!(s.client_id.is_none());
+                assert!(s.point_specs[0].config.is_empty());
+            }
+            other => panic!("expected submit, got {other:?}"),
+        }
+        // And the v4 fields are skipped on the wire when defaulted, so
+        // a v3 server never sees unknown keys from a v4 client.
+        let line = serde_json::to_string(&Request::Submit(SubmitRequest {
+            point_specs: vec![PointSpec {
+                workload: "axpy".into(),
+                variant: "mpu".into(),
+                config: vec![],
+            }],
+            ..SubmitRequest::default()
+        }))
+        .unwrap();
+        assert!(!line.contains("client_id"));
+        assert!(!line.contains("config\":[]"));
+        // A v4 metrics doc parsed by a future reader keeps defaults for
+        // fields it predates (append-only discipline, like status).
+        let v4 = r#"{"resp":"metrics","schema_version":1,"report":"metrics"}"#;
+        match serde_json::from_str::<Response>(v4).unwrap() {
+            Response::Metrics(m) => {
+                assert_eq!(m.queue_depth, 0);
+                assert!(m.clients.is_empty() && m.workers.is_empty());
+                assert!(m.store.is_none());
+            }
+            other => panic!("expected metrics, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn per_spec_config_overrides_the_base_config() {
+        let mut s = plain_submit();
+        s.config = vec![("row_buffers_per_bank".into(), "2".into())];
+        s.point_specs = vec![
+            PointSpec { workload: "axpy".into(), variant: "mpu".into(), config: vec![] },
+            PointSpec {
+                workload: "axpy".into(),
+                variant: "mpu".into(),
+                config: vec![("row_buffers_per_bank".into(), "4".into())],
+            },
+        ];
+        let pts = s.points().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_ne!(
+            pts[0].cache_key(),
+            pts[1].cache_key(),
+            "per-spec overrides must yield a distinct point"
+        );
+        // A bad per-spec knob is rejected like a bad base knob.
+        s.point_specs[1].config = vec![("warp_speed".into(), "9".into())];
+        assert!(s.points().is_err());
+    }
+
+    #[test]
+    fn client_stamps_identity_onto_submits() {
+        let c = Client::new("127.0.0.1:1").with_identity(Some("alice".into()));
+        let stamped = c.identify(&SubmitRequest::default());
+        assert_eq!(stamped.client_id.as_deref(), Some("alice"));
+        // An explicit per-request identity wins over the client's.
+        let own = SubmitRequest {
+            client_id: Some("bob".into()),
+            ..SubmitRequest::default()
+        };
+        assert_eq!(c.identify(&own).client_id.as_deref(), Some("bob"));
     }
 
     #[test]

@@ -2,11 +2,15 @@
 //! sweep engine, and the TCP server that exposes it (`mpu serve`).
 //!
 //! Scheduling model:
-//! - Every submitted batch becomes a [`Job`]; its points go into one
-//!   global priority queue (higher [`SubmitRequest::priority`] first,
-//!   FIFO within a priority). Within a batch, points are enqueued
-//!   grouped by kernel (workload × smem placement) so the shared
-//!   [`KernelCache`] sees consecutive same-kernel points.
+//! - Every submitted batch becomes a [`Job`] owned by a client
+//!   identity (`client_id`, default `"anon"`). Points enter that
+//!   client's priority queue (higher [`SubmitRequest::priority`]
+//!   first, FIFO within a priority); clients take turns
+//!   deficit-round-robin — `weight` pops per turn — so one greedy
+//!   client cannot starve the rest ([`FairQueue`]). Within a batch,
+//!   points are enqueued grouped by kernel (workload × smem placement)
+//!   so the shared [`KernelCache`] sees consecutive same-kernel
+//!   points.
 //! - Each queued point gets one `rayon::spawn` task on the existing
 //!   global pool; every task pops the *best* queued point, not "its
 //!   own", which is what makes priorities effective.
@@ -25,15 +29,16 @@
 
 use super::federation::Coordinator;
 use super::proto::{
-    PointSummary, ProgressBody, Request, Response, ResultBody, StatusBody, SubmitReply,
-    SubmitRequest, WireReport, FEATURES, PROTO_MAJOR, PROTO_VERSION,
+    ClientMetrics, MetricsBody, PointSummary, ProgressBody, Request, Response, ResultBody,
+    StatusBody, SubmitReply, SubmitRequest, WireReport, FEATURES, METRICS_SCHEMA_VERSION,
+    PROTO_MAJOR, PROTO_VERSION,
 };
 use super::store::DiskStore;
 use super::sweep::{CacheTier, KernelCache, SimCache, SweepPoint};
 use super::RunReport;
 use anyhow::{anyhow, Result};
 use std::cmp::Ordering as CmpOrdering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -46,6 +51,9 @@ const BUSY_RETRY_AFTER_MS: u64 = 200;
 /// How many recent `request_id`s (with their jobs) the service keeps
 /// so a retried submit can attach instead of re-enqueueing.
 const RECENT_IDS: usize = 32;
+
+/// The fair-share bucket of submits that carry no `client_id`.
+pub const ANON_CLIENT: &str = "anon";
 
 /// Which path produced a point's result, from the submitting request's
 /// point of view.
@@ -144,6 +152,9 @@ type Slot = Option<Result<(RunReport, PointSource), String>>;
 pub struct Job {
     points: Vec<SweepPoint>,
     fresh: bool,
+    /// Fair-share owner of the batch ([`ANON_CLIENT`] when the submit
+    /// carried no identity).
+    client: String,
     slots: Mutex<Vec<Slot>>,
     /// Indices of finished points, in completion order. Guarded by its
     /// own mutex, paired with `done_cv`.
@@ -152,15 +163,21 @@ pub struct Job {
 }
 
 impl Job {
-    fn new(points: Vec<SweepPoint>, fresh: bool) -> Job {
+    fn new(points: Vec<SweepPoint>, fresh: bool, client: String) -> Job {
         let n = points.len();
         Job {
             points,
             fresh,
+            client,
             slots: Mutex::new(vec![None; n]),
             finished: Mutex::new(Vec::with_capacity(n)),
             done_cv: Condvar::new(),
         }
+    }
+
+    /// The client identity that owns this batch.
+    pub fn client(&self) -> &str {
+        &self.client
     }
 
     fn record(&self, idx: usize, res: Result<(RunReport, PointSource), String>) {
@@ -254,6 +271,127 @@ impl Ord for QueuedPoint {
     }
 }
 
+/// One client's lane in the [`FairQueue`]: its own priority heap plus
+/// lifetime fair-share accounting. The entry outlives its queued work
+/// so `metrics` keeps reporting completed/rejected counts.
+struct ClientLane {
+    heap: BinaryHeap<QueuedPoint>,
+    /// Deficit-round-robin weight: pops this client gets per turn.
+    weight: u64,
+    completed: u64,
+    rejected: u64,
+}
+
+impl ClientLane {
+    fn new(weight: u64) -> ClientLane {
+        ClientLane { heap: BinaryHeap::new(), weight, completed: 0, rejected: 0 }
+    }
+}
+
+/// Deficit-round-robin scheduler across client identities: each client
+/// keeps its own priority heap (higher priority first, FIFO within),
+/// and clients with queued work take turns of `weight` pops each, so
+/// the interleave between two equal-weight clients is strict
+/// alternation no matter how lopsided their backlogs are. With a
+/// single client this degenerates to exactly the pre-v4 global heap.
+struct FairQueue {
+    lanes: BTreeMap<String, ClientLane>,
+    /// Clients with queued work, in rotation order. Invariant: a
+    /// client is in `rr` iff its lane's heap is non-empty.
+    rr: VecDeque<String>,
+    /// Pops left in the front client's turn.
+    credit: u64,
+    len: usize,
+}
+
+impl FairQueue {
+    fn new() -> FairQueue {
+        FairQueue { lanes: BTreeMap::new(), rr: VecDeque::new(), credit: 0, len: 0 }
+    }
+
+    fn lane(&mut self, client: &str, weight: u64) -> &mut ClientLane {
+        self.lanes.entry(client.to_string()).or_insert_with(|| ClientLane::new(weight))
+    }
+
+    fn push(&mut self, client: &str, weight: u64, qp: QueuedPoint) {
+        let lane = self.lane(client, weight);
+        lane.weight = weight;
+        if lane.heap.is_empty() {
+            self.rr.push_back(client.to_string());
+            if self.rr.len() == 1 {
+                self.credit = lane.weight;
+            }
+        }
+        lane.heap.push(qp);
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<QueuedPoint> {
+        let front = self.rr.front()?.clone();
+        if self.credit == 0 {
+            self.rotate();
+        }
+        let name = self.rr.front().cloned().unwrap_or(front);
+        let lane = self.lanes.get_mut(&name).expect("rr names an existing lane");
+        let qp = lane.heap.pop().expect("rr lanes are non-empty");
+        self.len -= 1;
+        self.credit = self.credit.saturating_sub(1);
+        if lane.heap.is_empty() {
+            self.rr.pop_front();
+            self.refresh_credit();
+        } else if self.credit == 0 {
+            self.rotate();
+        }
+        Some(qp)
+    }
+
+    /// Move the front client to the back and hand the turn on.
+    fn rotate(&mut self) {
+        if let Some(name) = self.rr.pop_front() {
+            self.rr.push_back(name);
+        }
+        self.refresh_credit();
+    }
+
+    fn refresh_credit(&mut self) {
+        self.credit = match self.rr.front() {
+            Some(name) => self.lanes[name].weight.max(1),
+            None => 0,
+        };
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Points queued for one client (0 for an unknown client).
+    fn queued_for(&self, client: &str) -> usize {
+        self.lanes.get(client).map_or(0, |l| l.heap.len())
+    }
+
+    fn note_completed(&mut self, client: &str, weight: u64) {
+        self.lane(client, weight).completed += 1;
+    }
+
+    fn note_rejected(&mut self, client: &str, weight: u64) {
+        self.lane(client, weight).rejected += 1;
+    }
+
+    /// Per-client `metrics` rows, sorted by client id (BTreeMap order).
+    fn client_rows(&self) -> Vec<ClientMetrics> {
+        self.lanes
+            .iter()
+            .map(|(id, lane)| ClientMetrics {
+                client_id: id.clone(),
+                weight: lane.weight,
+                queued: lane.heap.len(),
+                completed: lane.completed,
+                rejected: lane.rejected,
+            })
+            .collect()
+    }
+}
+
 #[derive(Default)]
 struct ServiceCounters {
     requests: AtomicU64,
@@ -271,7 +409,7 @@ pub struct Service {
     cache: SimCache,
     kernels: KernelCache,
     inflight: Mutex<HashMap<String, Arc<Flight>>>,
-    queue: Mutex<BinaryHeap<QueuedPoint>>,
+    queue: Mutex<FairQueue>,
     seq: AtomicU64,
     counters: ServiceCounters,
     started: Instant,
@@ -280,8 +418,16 @@ pub struct Service {
     idle_cv: Condvar,
     /// Admission cap on queued points; 0 disables backpressure.
     max_queue: AtomicUsize,
+    /// Per-client admission cap on queued points; 0 disables quotas.
+    max_client_queue: AtomicUsize,
+    /// Configured deficit-round-robin weights (absent clients get 1).
+    weights: Mutex<HashMap<String, u64>>,
     /// Recently admitted `request_id`s and their jobs (retry dedup).
     recent: Mutex<VecDeque<(String, Arc<Job>)>>,
+    /// Lifetime simulated cycles and simulation wall time (µs) — the
+    /// aggregate cycles/s the `metrics` record reports.
+    sim_cycles: AtomicU64,
+    sim_wall_us: AtomicU64,
 }
 
 /// Admission-control verdict on a submit: started, or refused because
@@ -351,14 +497,18 @@ impl Service {
             cache,
             kernels: KernelCache::new(),
             inflight: Mutex::new(HashMap::new()),
-            queue: Mutex::new(BinaryHeap::new()),
+            queue: Mutex::new(FairQueue::new()),
             seq: AtomicU64::new(0),
             counters: ServiceCounters::default(),
             started: Instant::now(),
             active: Mutex::new(0),
             idle_cv: Condvar::new(),
             max_queue: AtomicUsize::new(0),
+            max_client_queue: AtomicUsize::new(0),
+            weights: Mutex::new(HashMap::new()),
             recent: Mutex::new(VecDeque::new()),
+            sim_cycles: AtomicU64::new(0),
+            sim_wall_us: AtomicU64::new(0),
         }
     }
 
@@ -366,6 +516,23 @@ impl Service {
     /// every submit is admitted, as before v3).
     pub fn set_max_queue(&self, n: usize) {
         self.max_queue.store(n, Ordering::Relaxed);
+    }
+
+    /// Set the per-client admission quota on queued points (v4; 0
+    /// disables it). A client already holding `n` queued points gets
+    /// `busy` instead of admission, independent of the global cap.
+    pub fn set_max_client_queue(&self, n: usize) {
+        self.max_client_queue.store(n, Ordering::Relaxed);
+    }
+
+    /// Install deficit-round-robin weights per client id; clients not
+    /// listed weigh 1. Takes effect for newly enqueued work.
+    pub fn set_client_weights(&self, weights: HashMap<String, u64>) {
+        *self.weights.lock().unwrap() = weights;
+    }
+
+    fn weight_of(&self, client: &str) -> u64 {
+        self.weights.lock().unwrap().get(client).copied().unwrap_or(1).max(1)
     }
 
     /// Block until no submit is executing — the shutdown path drains
@@ -383,11 +550,19 @@ impl Service {
         &self.cache
     }
 
-    /// Enqueue a batch and fan its points out on the rayon pool.
-    pub fn submit(self: &Arc<Self>, points: Vec<SweepPoint>, priority: i32, fresh: bool) -> Arc<Job> {
+    /// Enqueue a batch under a client identity and fan its points out
+    /// on the rayon pool.
+    pub fn submit_as(
+        self: &Arc<Self>,
+        points: Vec<SweepPoint>,
+        priority: i32,
+        fresh: bool,
+        client: &str,
+    ) -> Arc<Job> {
         self.counters.requests.fetch_add(1, Ordering::Relaxed);
         self.counters.points.fetch_add(points.len() as u64, Ordering::Relaxed);
-        let job = Arc::new(Job::new(points, fresh));
+        let weight = self.weight_of(client);
+        let job = Arc::new(Job::new(points, fresh, client.to_string()));
         // Enqueue grouped by kernel so same-kernel points pop
         // consecutively (KernelCache compiles once either way; grouping
         // keeps the compile fully off the tail points' critical path).
@@ -401,7 +576,7 @@ impl Service {
             let mut q = self.queue.lock().unwrap();
             for idx in order {
                 let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-                q.push(QueuedPoint { priority, seq, idx, job: job.clone() });
+                q.push(client, weight, QueuedPoint { priority, seq, idx, job: job.clone() });
             }
         }
         for _ in 0..n {
@@ -411,11 +586,17 @@ impl Service {
         job
     }
 
+    /// [`Service::submit_as`] under the shared [`ANON_CLIENT`] bucket.
+    pub fn submit(self: &Arc<Self>, points: Vec<SweepPoint>, priority: i32, fresh: bool) -> Arc<Job> {
+        self.submit_as(points, priority, fresh, ANON_CLIENT)
+    }
+
     /// Expand a protocol request and start it executing, subject to
     /// admission control. A request whose `request_id` matches a
     /// recently admitted batch attaches to that batch's job (a retry
-    /// after a dropped reply never re-simulates); a full queue earns a
-    /// `busy` with a retry hint instead of unbounded growth.
+    /// after a dropped reply never re-simulates); a full queue — global
+    /// cap or the submitting client's quota — earns a `busy` with a
+    /// retry hint instead of unbounded growth.
     pub fn try_begin_request(self: &Arc<Self>, req: &SubmitRequest) -> Result<Admission> {
         if let Some(id) = &req.request_id {
             let recent = self.recent.lock().unwrap();
@@ -431,14 +612,26 @@ impl Service {
             }
         }
         let points = req.points()?;
+        let client = req.client_id.as_deref().unwrap_or(ANON_CLIENT);
         let limit = self.max_queue.load(Ordering::Relaxed);
-        if limit > 0 && self.queue.lock().unwrap().len() >= limit {
-            self.counters.admission_rejected.fetch_add(1, Ordering::Relaxed);
-            return Ok(Admission::Busy { retry_after_ms: BUSY_RETRY_AFTER_MS });
+        let quota = self.max_client_queue.load(Ordering::Relaxed);
+        let weight = self.weight_of(client);
+        {
+            let mut q = self.queue.lock().unwrap();
+            let over_global = limit > 0 && q.len() >= limit;
+            let over_quota = quota > 0 && q.queued_for(client) >= quota;
+            if over_global || over_quota {
+                if over_quota {
+                    q.note_rejected(client, weight);
+                }
+                drop(q);
+                self.counters.admission_rejected.fetch_add(1, Ordering::Relaxed);
+                return Ok(Admission::Busy { retry_after_ms: BUSY_RETRY_AFTER_MS });
+            }
         }
         *self.active.lock().unwrap() += 1;
         let started = Instant::now();
-        let job = self.submit(points, req.priority, req.fresh);
+        let job = self.submit_as(points, req.priority, req.fresh, client);
         if let Some(id) = &req.request_id {
             self.remember(id, &job);
         }
@@ -514,6 +707,61 @@ impl Service {
         }
     }
 
+    /// Aggregate simulation throughput: lifetime simulated cycles over
+    /// lifetime simulation wall time.
+    pub fn sim_cycles_per_sec(&self) -> f64 {
+        let cycles = self.sim_cycles.load(Ordering::Relaxed) as f64;
+        let wall_us = self.sim_wall_us.load(Ordering::Relaxed) as f64;
+        if wall_us <= 0.0 {
+            return 0.0;
+        }
+        cycles / (wall_us / 1e6)
+    }
+
+    /// Operational metrics snapshot (v4): everything `status` reports
+    /// plus derived rates and per-client fair-share rows. A coordinator
+    /// extends this with per-worker rows.
+    pub fn metrics(&self) -> MetricsBody {
+        let simulated = self.counters.simulated.load(Ordering::Relaxed);
+        let mem_hits = self.counters.mem_hits.load(Ordering::Relaxed);
+        let disk_hits = self.counters.disk_hits.load(Ordering::Relaxed);
+        let dedup_waits = self.counters.dedup_waits.load(Ordering::Relaxed);
+        let served = simulated + mem_hits + disk_hits + dedup_waits;
+        let cache_hit_rate = if served == 0 {
+            0.0
+        } else {
+            (mem_hits + disk_hits + dedup_waits) as f64 / served as f64
+        };
+        let (queue_depth, clients) = {
+            let q = self.queue.lock().unwrap();
+            (q.len(), q.client_rows())
+        };
+        MetricsBody {
+            schema_version: METRICS_SCHEMA_VERSION,
+            report: "metrics".to_string(),
+            proto_version: PROTO_VERSION,
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+            queue_depth,
+            queue_limit: self.max_queue.load(Ordering::Relaxed),
+            inflight: self.inflight_len(),
+            active_requests: self.active_requests(),
+            requests: self.counters.requests.load(Ordering::Relaxed),
+            points: self.counters.points.load(Ordering::Relaxed),
+            simulated,
+            mem_hits,
+            disk_hits,
+            dedup_waits,
+            cache_hit_rate,
+            admission_rejected: self.counters.admission_rejected.load(Ordering::Relaxed),
+            retries: 0,
+            degraded_batches: 0,
+            sim_cycles_per_sec: self.sim_cycles_per_sec(),
+            store: self.cache.store().map(|s| s.stats()),
+            clients,
+            workers: vec![],
+        }
+    }
+
     fn drain_one(self: Arc<Self>) {
         let qp = self.queue.lock().unwrap().pop();
         let Some(qp) = qp else { return };
@@ -527,10 +775,17 @@ impl Service {
                     PointSource::Dedup => &self.counters.dedup_waits,
                 };
                 ctr.fetch_add(1, Ordering::Relaxed);
+                if source == PointSource::Simulated {
+                    self.sim_cycles.fetch_add(report.cycles, Ordering::Relaxed);
+                    self.sim_wall_us
+                        .fetch_add((report.sim_wall_ms * 1_000.0) as u64, Ordering::Relaxed);
+                }
                 Ok((report, source))
             }
             Err(e) => Err(e.to_string()),
         };
+        let weight = self.weight_of(qp.job.client());
+        self.queue.lock().unwrap().note_completed(qp.job.client(), weight);
         qp.job.record(qp.idx, res);
     }
 
@@ -595,6 +850,13 @@ impl ServeMode {
         match self {
             ServeMode::Local(svc) => svc.status(),
             ServeMode::Federated(co) => co.status(),
+        }
+    }
+
+    fn metrics(&self) -> MetricsBody {
+        match self {
+            ServeMode::Local(svc) => svc.metrics(),
+            ServeMode::Federated(co) => co.metrics(),
         }
     }
 
@@ -665,6 +927,9 @@ fn handle_conn(
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let mut buf: Vec<u8> = Vec::new();
+    // The connection's default fair-share identity, set by a v4
+    // `hello` and inherited by submits that carry no `client_id`.
+    let mut conn_client: Option<String> = None;
     loop {
         // Byte-level framing: a malformed frame — including invalid
         // UTF-8, which `lines()` would turn into a handler-killing
@@ -689,7 +954,7 @@ fn handle_conn(
         };
         match req {
             Request::Ping => write_line(&mut writer, &Response::Pong { proto_version: PROTO_VERSION })?,
-            Request::Hello { proto_version, proto_major } => {
+            Request::Hello { proto_version, proto_major, client_id } => {
                 let resp = if proto_major != PROTO_MAJOR {
                     Response::Error {
                         message: format!(
@@ -699,6 +964,9 @@ fn handle_conn(
                         ),
                     }
                 } else {
+                    if client_id.is_some() {
+                        conn_client = client_id;
+                    }
                     Response::Hello {
                         proto_version: PROTO_VERSION,
                         proto_major: PROTO_MAJOR,
@@ -708,30 +976,60 @@ fn handle_conn(
                 write_line(&mut writer, &resp)?;
             }
             Request::Status => write_line(&mut writer, &Response::Status(mode.status()))?,
-            Request::Submit(req) => match &mode {
-                ServeMode::Local(svc) => match svc.try_begin_request(&req) {
-                    Err(e) => {
-                        write_line(&mut writer, &Response::Error { message: e.to_string() })?
-                    }
-                    Ok(Admission::Busy { retry_after_ms }) => {
-                        write_line(&mut writer, &Response::Busy { retry_after_ms })?
-                    }
-                    Ok(Admission::Started(ar)) => {
-                        if req.stream {
-                            stream_submit_local(&ar, &req, &mut writer)?;
-                        } else {
-                            let resp = match ar.wait_reply() {
-                                Ok(reply) => Response::Done(reply),
-                                Err(e) => Response::Error { message: e.to_string() },
-                            };
-                            write_line(&mut writer, &resp)?;
-                        }
-                    }
-                },
-                ServeMode::Federated(co) => {
-                    co.serve_submit(&req, &mut writer)?;
+            Request::Metrics => write_line(&mut writer, &Response::Metrics(mode.metrics()))?,
+            Request::Join { addr: worker } => {
+                let resp = match &mode {
+                    ServeMode::Local(_) => Response::Error {
+                        message: "join: this daemon is a worker, not a coordinator".into(),
+                    },
+                    ServeMode::Federated(co) => match co.federation().join(&worker) {
+                        Ok(workers) => Response::Fleet { workers },
+                        Err(e) => Response::Error { message: e.to_string() },
+                    },
+                };
+                write_line(&mut writer, &resp)?;
+            }
+            Request::Drain { addr: worker } => {
+                let resp = match &mode {
+                    ServeMode::Local(_) => Response::Error {
+                        message: "drain: this daemon is a worker, not a coordinator".into(),
+                    },
+                    ServeMode::Federated(co) => match co.federation().drain(&worker) {
+                        Ok(workers) => Response::Fleet { workers },
+                        Err(e) => Response::Error { message: e.to_string() },
+                    },
+                };
+                write_line(&mut writer, &resp)?;
+            }
+            Request::Submit(mut req) => {
+                if req.client_id.is_none() {
+                    req.client_id = conn_client.clone();
                 }
-            },
+                match &mode {
+                    ServeMode::Local(svc) => match svc.try_begin_request(&req) {
+                        Err(e) => {
+                            write_line(&mut writer, &Response::Error { message: e.to_string() })?
+                        }
+                        Ok(Admission::Busy { retry_after_ms }) => {
+                            write_line(&mut writer, &Response::Busy { retry_after_ms })?
+                        }
+                        Ok(Admission::Started(ar)) => {
+                            if req.stream {
+                                stream_submit_local(&ar, &req, &mut writer)?;
+                            } else {
+                                let resp = match ar.wait_reply() {
+                                    Ok(reply) => Response::Done(reply),
+                                    Err(e) => Response::Error { message: e.to_string() },
+                                };
+                                write_line(&mut writer, &resp)?;
+                            }
+                        }
+                    },
+                    ServeMode::Federated(co) => {
+                        co.serve_submit(&req, &mut writer)?;
+                    }
+                }
+            }
             Request::Shutdown => {
                 // Drain batches still executing on other connections so
                 // their clients get results, then stop accepting.
@@ -841,10 +1139,9 @@ mod tests {
         }
     }
 
-    #[test]
-    fn queue_orders_by_priority_then_fifo() {
+    fn dummy_job() -> Arc<Job> {
         let cfg = MachineConfig::scaled();
-        let job = Arc::new(Job::new(
+        Arc::new(Job::new(
             vec![SweepPoint {
                 label: "mpu".into(),
                 workload: Workload::Axpy,
@@ -852,14 +1149,65 @@ mod tests {
                 target: Target::Mpu(cfg),
             }],
             false,
-        ));
-        let mut heap = BinaryHeap::new();
+            ANON_CLIENT.to_string(),
+        ))
+    }
+
+    #[test]
+    fn queue_orders_by_priority_then_fifo() {
+        // A single client's lane is the pre-v4 global heap: priority
+        // desc, FIFO within a priority.
+        let job = dummy_job();
+        let mut q = FairQueue::new();
         for (priority, seq) in [(0, 0u64), (5, 1), (5, 2), (-1, 3), (0, 4)] {
-            heap.push(QueuedPoint { priority, seq, idx: 0, job: job.clone() });
+            q.push(ANON_CLIENT, 1, QueuedPoint { priority, seq, idx: 0, job: job.clone() });
         }
         let popped: Vec<(i32, u64)> =
-            std::iter::from_fn(|| heap.pop().map(|q| (q.priority, q.seq))).collect();
+            std::iter::from_fn(|| q.pop().map(|qp| (qp.priority, qp.seq))).collect();
         assert_eq!(popped, vec![(5, 1), (5, 2), (0, 0), (0, 4), (-1, 3)]);
+    }
+
+    #[test]
+    fn fair_queue_interleaves_clients_deficit_round_robin() {
+        // Two equal-weight clients with lopsided backlogs (alice
+        // enqueues 4 points before bob's 2 arrive) still alternate
+        // strictly; the straggler's backlog drains at the tail.
+        let job = dummy_job();
+        let mut q = FairQueue::new();
+        let mut seq = 0u64;
+        let mut push = |q: &mut FairQueue, client: &str, weight: u64| {
+            q.push(client, weight, QueuedPoint { priority: 0, seq, idx: 0, job: job.clone() });
+            seq += 1;
+        };
+        for _ in 0..4 {
+            push(&mut q, "alice", 1);
+        }
+        for _ in 0..2 {
+            push(&mut q, "bob", 1);
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|qp| qp.seq)).collect();
+        // alice holds seqs 0..4, bob 4..6: strict alternation, then
+        // alice's leftover backlog.
+        assert_eq!(order, vec![0, 4, 1, 5, 2, 3]);
+        assert_eq!(q.len(), 0);
+
+        // Weights skew the interleave: weight 2 earns two pops a turn.
+        let mut q = FairQueue::new();
+        for _ in 0..4 {
+            push(&mut q, "alice", 2);
+        }
+        for _ in 0..2 {
+            push(&mut q, "bob", 1);
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|qp| qp.seq)).collect();
+        assert_eq!(order, vec![6, 7, 10, 8, 9, 11]);
+        // Lifetime rows survive the drain (metrics keeps reporting).
+        q.note_completed("alice", 2);
+        let rows = q.client_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].client_id, "alice");
+        assert_eq!(rows[0].completed, 1);
+        assert_eq!(rows[0].queued, 0);
     }
 
     #[test]
@@ -911,7 +1259,11 @@ mod tests {
             scale: Scale::Tiny,
             target: Target::Mpu(cfg.clone()),
         };
-        let job = Job::new(vec![mk(Workload::Axpy), mk(Workload::Knn)], false);
+        let job = Job::new(
+            vec![mk(Workload::Axpy), mk(Workload::Knn)],
+            false,
+            ANON_CLIENT.to_string(),
+        );
         assert_eq!(job.total(), 2);
         assert_eq!(job.completed(), 0);
         assert!(job.peek(0).is_none());
@@ -945,20 +1297,11 @@ mod tests {
         // Park a synthetic queued point so the backlog is at the cap
         // (no rayon task will ever pop it — it exists only to occupy
         // the queue).
-        let cfg = MachineConfig::scaled();
-        let parked = Arc::new(Job::new(
-            vec![SweepPoint {
-                label: "mpu".into(),
-                workload: Workload::Axpy,
-                scale: Scale::Tiny,
-                target: Target::Mpu(cfg),
-            }],
-            false,
-        ));
+        let parked = dummy_job();
         svc.queue
             .lock()
             .unwrap()
-            .push(QueuedPoint { priority: 0, seq: 0, idx: 0, job: parked });
+            .push(ANON_CLIENT, 1, QueuedPoint { priority: 0, seq: 0, idx: 0, job: parked });
         match svc.try_begin_request(&axpy_req()).unwrap() {
             Admission::Busy { retry_after_ms } => assert!(retry_after_ms > 0),
             Admission::Started(_) => panic!("full queue must refuse admission"),
@@ -1004,6 +1347,68 @@ mod tests {
         let third = svc.begin_request(&req).unwrap();
         third.wait_reply().unwrap();
         assert_eq!(svc.status().requests, 2);
+    }
+
+    #[test]
+    fn client_quota_earns_busy_independently_per_client() {
+        let svc = Arc::new(Service::new(None));
+        svc.set_max_client_queue(1);
+        // Park a point in alice's lane so her quota is exhausted (no
+        // rayon task will pop it yet — nothing has been spawned).
+        svc.queue.lock().unwrap().push(
+            "alice",
+            1,
+            QueuedPoint { priority: 0, seq: 0, idx: 0, job: dummy_job() },
+        );
+        let mut req = axpy_req();
+        req.client_id = Some("alice".into());
+        match svc.try_begin_request(&req).unwrap() {
+            Admission::Busy { retry_after_ms } => assert!(retry_after_ms > 0),
+            Admission::Started(_) => panic!("over-quota client must be refused"),
+        }
+        let m = svc.metrics();
+        assert_eq!(m.admission_rejected, 1);
+        let alice = m.clients.iter().find(|c| c.client_id == "alice").unwrap();
+        assert_eq!(alice.rejected, 1);
+        assert_eq!(alice.queued, 1);
+        // Another client is unaffected by alice's backlog.
+        req.client_id = Some("bob".into());
+        match svc.try_begin_request(&req).unwrap() {
+            Admission::Started(_) => {}
+            Admission::Busy { .. } => panic!("bob is under quota"),
+        }
+    }
+
+    #[test]
+    fn metrics_counters_and_rates_move_with_traffic() {
+        let svc = Arc::new(Service::new(None));
+        let m0 = svc.metrics();
+        assert_eq!(m0.points, 0);
+        assert_eq!(m0.cache_hit_rate, 0.0);
+        assert_eq!(m0.sim_cycles_per_sec, 0.0);
+        let mut req = axpy_req();
+        req.client_id = Some("alice".into());
+        svc.run_request(&req).unwrap();
+        svc.run_request(&req).unwrap(); // warm rerun: memory hit
+        let m = svc.metrics();
+        assert_eq!(m.schema_version, METRICS_SCHEMA_VERSION);
+        assert_eq!(m.report, "metrics");
+        assert_eq!(m.proto_version, PROTO_VERSION);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.points, 2);
+        assert_eq!(m.simulated, 1);
+        assert_eq!(m.mem_hits, 1);
+        assert!((m.cache_hit_rate - 0.5).abs() < 1e-9);
+        assert!(m.sim_cycles_per_sec > 0.0, "simulation must register throughput");
+        assert!(m.workers.is_empty(), "a worker daemon has no worker rows");
+        let alice = m.clients.iter().find(|c| c.client_id == "alice").unwrap();
+        assert_eq!(alice.completed, 2);
+        assert_eq!(alice.queued, 0);
+        assert_eq!(alice.weight, 1);
+        // The body doubles as the METRICS.json document, unchanged.
+        let doc = serde_json::to_value(&m).unwrap();
+        assert_eq!(doc["report"], "metrics");
+        assert_eq!(doc["schema_version"], METRICS_SCHEMA_VERSION);
     }
 
     #[test]

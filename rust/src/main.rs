@@ -56,7 +56,7 @@
 //!                                    simulator-throughput (cycles/s)
 //!                                    regression vs the baseline
 //!   serve [--addr A] [--store DIR] [--store-max-mb N] [--no-store]
-//!         [--workers H:P,H:P,...]
+//!         [--workers H:P,H:P,...] [--coordinator A] [serve knobs]
 //!                                    long-running sweep daemon (JSONL
 //!                                    over TCP) with the persistent
 //!                                    on-disk result store; with
@@ -65,19 +65,45 @@
 //!                                    that shards submits across the
 //!                                    worker daemons by consistent
 //!                                    hashing and merges their
-//!                                    streamed results
+//!                                    streamed results; --coordinator
+//!                                    self-registers the worker with a
+//!                                    running coordinator (join on
+//!                                    boot, drain on shutdown); every
+//!                                    serving knob resolves CLI flag >
+//!                                    MPU_* env > default (see the
+//!                                    knob table in the usage text)
 //!   submit [suite|<workload>...] [--tiny] [--variants a,b] [--priority N]
-//!          [--fresh] [--strict] [--stream] [--addr A]
+//!          [--fresh] [--strict] [--stream] [--addr A] [--client-id ID]
 //!          [--workers H:P,...] [key=val ...]
 //!                                    submit a batch to the daemon;
 //!                                    --stream prints progress as
 //!                                    points complete; --workers fans
 //!                                    the batch out client-side across
-//!                                    a worker fleet
-//!   status [--addr A]                daemon + store counters (adds
+//!                                    a worker fleet; --client-id names
+//!                                    the fair-share lane the batch
+//!                                    queues in
+//!   status [--addr A] [--watch [--interval-ms N]]
+//!                                    daemon + store counters (adds
 //!                                    queue depth, in-flight count and
 //!                                    per-worker liveness against a
-//!                                    busy daemon / coordinator)
+//!                                    busy daemon / coordinator);
+//!                                    --watch rerenders the live
+//!                                    metrics view every N ms
+//!   metrics [--addr A] [--out METRICS.json]
+//!                                    one schema-versioned metrics
+//!                                    snapshot: queue/in-flight depths,
+//!                                    cache hit rates, per-client
+//!                                    fair-share rows, per-worker
+//!                                    liveness and cycles/s; --out
+//!                                    writes the METRICS.json document
+//!                                    `mpu check-json` validates
+//!   fleet {join|drain} <worker> [--addr A]
+//!                                    hot fleet membership against a
+//!                                    running coordinator: join adds
+//!                                    (or un-drains) a worker without
+//!                                    a restart, drain lets it finish
+//!                                    in-flight points while new ones
+//!                                    remap to the survivors
 //!   store {stats|gc} [--store DIR] [--max-age-days D] [--max-mb N]
 //!                                    inspect or garbage-collect the
 //!                                    on-disk result store: gc drops
@@ -111,12 +137,14 @@
 //!
 //! The CLI is hand-rolled (no clap in the offline crate set).
 
-use mpu::config::{MachineConfig, MachineKind, ServeConfig};
+use mpu::config::{MachineConfig, MachineKind, ServeConfig, SERVE_KNOBS};
 use mpu::coordinator::bench::{
     all_correct, simperf_json_repeated, suite_json_with_variants, write_simperf_json,
     write_suite_json, SuiteStats, SIMPERF_JSON, SUITE_JSON,
 };
-use mpu::coordinator::proto::{self, Request, Response, StreamOutcome, SubmitRequest};
+use mpu::coordinator::proto::{
+    self, MetricsBody, Response, StreamOutcome, SubmitRequest, METRICS_SCHEMA_VERSION,
+};
 use mpu::coordinator::report::{f2, Table};
 use mpu::coordinator::sweep::{
     run_suite_kind, run_suite_kind_threaded, run_suite_threaded, SimCache, Sweep, Target,
@@ -134,7 +162,7 @@ use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mpu <run|suite|cycles|lint|check-json|serve|submit|status|shutdown|store|tune|compile|validate|list|config> [args]\n\
+        "usage: mpu <run|suite|cycles|lint|check-json|serve|submit|status|metrics|fleet|shutdown|store|tune|compile|validate|list|config> [args]\n\
          \n  mpu run axpy row_buffers_per_bank=2 --machine ideal\
          \n  mpu run axpy --tiny --loc-stats\
          \n  mpu tune axpy gemv --tiny --budget 16 --store .mpu-store\
@@ -154,11 +182,21 @@ fn usage() -> ! {
          \n  mpu serve --max-queue 4096 --faults \"seed=42,disconnect=0.1\"\
          \n  mpu submit suite --tiny --variants mpu,gpu --stream\
          \n  mpu submit suite --tiny --workers 127.0.0.1:7201,127.0.0.1:7202\
-         \n  mpu status | mpu shutdown\
+         \n  mpu submit suite --tiny --client-id alice --stream\
+         \n  mpu serve --addr 127.0.0.1:7203 --coordinator 127.0.0.1:7200\
+         \n  mpu fleet join 127.0.0.1:7203 --addr 127.0.0.1:7200\
+         \n  mpu fleet drain 127.0.0.1:7202 --addr 127.0.0.1:7200\
+         \n  mpu status | mpu status --watch --interval-ms 500\
+         \n  mpu metrics --out METRICS.json | mpu check-json METRICS.json\
+         \n  mpu shutdown\
          \n  mpu store stats | mpu store gc --max-age-days 30\
          \n  mpu compile gemv\
          \n  mpu validate --tiny\
-         \n  mpu list | mpu config"
+         \n  mpu list | mpu config\
+         \n\
+         \nserving knobs (CLI flag > MPU_* env > default):\
+         \n{}",
+        ServeConfig::knob_help()
     );
     std::process::exit(2);
 }
@@ -167,7 +205,7 @@ fn usage() -> ! {
 /// positional scan and the `key=val` config scan, so a flag value that
 /// happens to contain `=` (a `--faults` spec) is never misread as a
 /// machine-config pair.
-const VALUE_FLAGS: [&str; 19] = [
+const VALUE_FLAGS: [&str; 28] = [
     "--variants",
     "--priority",
     "--addr",
@@ -187,6 +225,15 @@ const VALUE_FLAGS: [&str; 19] = [
     "--append-suite",
     "--faults",
     "--max-queue",
+    "--connect-timeout-ms",
+    "--io-timeout-ms",
+    "--retries",
+    "--backoff-ms",
+    "--client-id",
+    "--max-client-queue",
+    "--client-weights",
+    "--coordinator",
+    "--interval-ms",
 ];
 
 /// The `key=val` machine-configuration pairs among `args`, skipping
@@ -278,20 +325,36 @@ fn positionals(args: &[String]) -> Vec<String> {
     out
 }
 
-/// Daemon address: `--addr`, else `MPU_ADDR`, else the built-in default.
-fn addr_of(args: &[String]) -> String {
-    flag_value(args, "--addr").unwrap_or_else(|| ServeConfig::from_env().addr)
+/// Resolve every serving knob for this invocation: each flag in
+/// [`SERVE_KNOBS`] is read from the command line and layered over the
+/// `MPU_*` environment and the built-in defaults (CLI > env > default).
+fn serve_cfg(args: &[String]) -> ServeConfig {
+    let mut b = ServeConfig::builder();
+    for knob in SERVE_KNOBS {
+        b = b.cli_flag(knob.flag, flag_value(args, knob.flag));
+    }
+    b.build().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
 }
 
-/// Send one request to the daemon; protocol errors exit non-zero.
-fn daemon_request(addr: &str, req: &Request) -> anyhow::Result<Response> {
-    match proto::request(addr, req)? {
-        Response::Error { message } => anyhow::bail!("server error: {message}"),
-        Response::Busy { retry_after_ms } => {
-            anyhow::bail!("server busy, retry after {retry_after_ms} ms")
-        }
-        resp => Ok(resp),
+/// Typed client for the addressed daemon, carrying the resolved retry
+/// policy and client identity. `deadline` applies the socket timeouts
+/// too — right for probes and streamed submits; a blocking interactive
+/// submit legitimately runs for minutes and stays deadline-free.
+fn client_from(cfg: &ServeConfig, deadline: bool) -> proto::Client {
+    let mut c = proto::Client::new(cfg.addr.clone())
+        .with_retry(RetryPolicy {
+            attempts: cfg.retries,
+            base_delay: cfg.backoff,
+            ..RetryPolicy::default()
+        })
+        .with_identity(cfg.client_id.clone());
+    if deadline {
+        c = c.with_timeouts(Timeouts { connect: cfg.connect_timeout, io: cfg.io_timeout });
     }
+    c
 }
 
 /// `check-json --compare` gate: per-workload MPU/GPU cycle deltas, >5%
@@ -539,6 +602,117 @@ fn check_tuning_appendix(v: &serde_json::Value) -> anyhow::Result<usize> {
         .as_array()
         .ok_or_else(|| anyhow::anyhow!("tuning appendix missing workloads"))?;
     check_tuning_rows(ws, "tuning appendix")
+}
+
+/// `check-json` gate for a `METRICS.json` document (the serialized
+/// `metrics` protocol record). Returns (client lanes, worker rows).
+fn check_metrics_doc(v: &serde_json::Value) -> anyhow::Result<(usize, usize)> {
+    anyhow::ensure!(
+        v["schema_version"] == METRICS_SCHEMA_VERSION,
+        "metrics schema_version must be {METRICS_SCHEMA_VERSION}"
+    );
+    for key in [
+        "proto_version",
+        "uptime_ms",
+        "queue_depth",
+        "inflight",
+        "active_requests",
+        "requests",
+        "points",
+        "simulated",
+        "admission_rejected",
+        "retries",
+        "degraded_batches",
+    ] {
+        anyhow::ensure!(v[key].is_u64(), "key `{key}` missing or not an unsigned integer");
+    }
+    let rate = finite_field(v, "cache_hit_rate")?;
+    anyhow::ensure!((0.0..=1.0).contains(&rate), "cache_hit_rate {rate} outside [0, 1]");
+    let cps = finite_field(v, "sim_cycles_per_sec")?;
+    anyhow::ensure!(cps >= 0.0, "negative sim_cycles_per_sec {cps}");
+    let clients = v["clients"].as_array().cloned().unwrap_or_default();
+    for c in &clients {
+        anyhow::ensure!(c["client_id"].is_string(), "client row missing client_id");
+        anyhow::ensure!(
+            c["weight"].as_u64().is_some_and(|w| w >= 1),
+            "client {} weight must be >= 1",
+            c["client_id"]
+        );
+    }
+    let workers = v["workers"].as_array().cloned().unwrap_or_default();
+    for w in &workers {
+        anyhow::ensure!(w["addr"].is_string(), "worker row missing addr");
+        anyhow::ensure!(w["alive"].is_boolean(), "worker {} missing alive flag", w["addr"]);
+    }
+    Ok((clients.len(), workers.len()))
+}
+
+/// Human rendering of a `metrics` snapshot (`mpu metrics`, one frame
+/// of `mpu status --watch`).
+fn print_metrics(addr: &str, m: &MetricsBody) {
+    println!("mpu metrics at {addr} (proto v{}, schema v{})", m.proto_version, m.schema_version);
+    println!("  uptime          {:.1}s", m.uptime_ms as f64 / 1e3);
+    println!("  queue depth     {} (limit {})", m.queue_depth, m.queue_limit);
+    println!("  in flight       {}", m.inflight);
+    println!("  active submits  {}", m.active_requests);
+    println!("  requests        {}", m.requests);
+    println!("  points          {}", m.points);
+    println!(
+        "  simulated       {} (mem={} disk={} dedup={}, hit rate {:.1}%)",
+        m.simulated,
+        m.mem_hits,
+        m.disk_hits,
+        m.dedup_waits,
+        m.cache_hit_rate * 100.0
+    );
+    println!("  rejected        {}", m.admission_rejected);
+    println!("  retries         {}", m.retries);
+    println!("  degraded        {}", m.degraded_batches);
+    println!("  sim cycles/s    {:.2}M", m.sim_cycles_per_sec / 1e6);
+    if let Some(st) = &m.store {
+        println!(
+            "  store           {} entries, {}/{} KiB, hits={} misses={} evictions={}",
+            st.entries,
+            st.bytes / 1024,
+            st.max_bytes / 1024,
+            st.hits,
+            st.misses,
+            st.evictions
+        );
+    }
+    if !m.clients.is_empty() {
+        println!("  clients ({}):", m.clients.len());
+        for c in &m.clients {
+            println!(
+                "    {:<16} weight={} queued={} completed={} rejected={}",
+                c.client_id, c.weight, c.queued, c.completed, c.rejected
+            );
+        }
+    }
+    if !m.workers.is_empty() {
+        println!("  workers ({}):", m.workers.len());
+        for w in &m.workers {
+            if w.alive {
+                println!(
+                    "    {:<21} {:<8} proto v{} points={} simulated={} queue={} inflight={} {:.2}Mcyc/s",
+                    w.addr,
+                    if w.draining { "draining" } else { "alive" },
+                    w.proto_version,
+                    w.points,
+                    w.simulated,
+                    w.queue_depth,
+                    w.inflight,
+                    w.sim_cycles_per_sec / 1e6
+                );
+            } else {
+                println!(
+                    "    {:<21} DEAD{}",
+                    w.addr,
+                    if w.draining { " (draining)" } else { "" }
+                );
+            }
+        }
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -942,6 +1116,14 @@ fn main() -> anyhow::Result<()> {
                 println!("{path}: tune schema v1 OK, {n} workloads tuned, none worse than annotated");
                 return Ok(());
             }
+            if v["report"] == "metrics" {
+                let (clients, workers) = check_metrics_doc(&v)?;
+                println!(
+                    "{path}: metrics schema v{METRICS_SCHEMA_VERSION} OK \
+                     ({clients} client lanes, {workers} workers)"
+                );
+                return Ok(());
+            }
             anyhow::ensure!(v["schema_version"] == 1, "schema_version must be 1");
             for key in ["suite", "scale", "geomean_speedup", "geomean_energy_reduction"] {
                 anyhow::ensure!(!v[key].is_null(), "missing key `{key}`");
@@ -986,36 +1168,32 @@ fn main() -> anyhow::Result<()> {
             println!("{path}: schema v1 OK, {checked} machine runs all correct");
         }
         "serve" => {
-            let env = ServeConfig::from_env();
-            let addr = flag_value(rest, "--addr").unwrap_or(env.addr.clone());
-            let workers = flag_value(rest, "--workers")
-                .map(|v| ServeConfig::parse_workers(&v))
-                .unwrap_or(env.workers.clone());
+            let cfg = serve_cfg(rest);
             // Deterministic fault injection (chaos testing): --faults /
             // MPU_FAULTS arms the process-wide fault plane before any
             // socket or store is touched.
-            if let Some(spec) = flag_value(rest, "--faults").or(env.faults.clone()) {
-                let plan = FaultPlan::parse(&spec)?;
+            if let Some(spec) = &cfg.faults {
+                let plan = FaultPlan::parse(spec)?;
                 if !plan.is_empty() {
                     println!("mpu serve: fault injection ACTIVE ({spec})");
                 }
                 fault::activate(plan);
             }
-            let timeouts = Timeouts { connect: env.connect_timeout, io: env.io_timeout };
+            let timeouts = Timeouts { connect: cfg.connect_timeout, io: cfg.io_timeout };
             let retry = RetryPolicy {
-                attempts: env.retries,
-                base_delay: env.backoff,
+                attempts: cfg.retries,
+                base_delay: cfg.backoff,
                 ..RetryPolicy::default()
             };
-            if !workers.is_empty() {
+            if !cfg.workers.is_empty() {
                 // Coordinator mode: no local simulation — submits are
                 // sharded across the worker daemons by consistent
                 // hashing on the stable store keys.
-                let fed = Federation::with_config(workers, timeouts, retry)?;
+                let fed = Federation::with_config(cfg.workers.clone(), timeouts, retry)?;
                 let reachable = fed.handshake()?;
                 let n = fed.workers().len();
                 let co = Arc::new(Coordinator::new(fed));
-                let server = SweepServer::bind_coordinator(co, &addr)?;
+                let server = SweepServer::bind_coordinator(co, &cfg.addr)?;
                 println!(
                     "mpu serve: coordinating {n} workers ({reachable} reachable) on {}",
                     server.addr()
@@ -1025,48 +1203,63 @@ fn main() -> anyhow::Result<()> {
                 return Ok(());
             }
             let no_store = rest.iter().any(|a| a == "--no-store");
-            let store_dir = flag_value(rest, "--store")
-                .map(std::path::PathBuf::from)
-                .or(env.store_dir)
-                .filter(|_| !no_store);
-            let max_mb = flag_value(rest, "--store-max-mb")
-                .map(|v| {
-                    v.parse::<u64>().unwrap_or_else(|_| {
-                        eprintln!("--store-max-mb needs an integer, got `{v}`");
-                        std::process::exit(2);
-                    })
-                })
-                .map(|mb| mb * 1024 * 1024)
-                .unwrap_or(env.store_max_bytes);
+            let store_dir = cfg.store_dir.clone().filter(|_| !no_store);
             let store = match &store_dir {
-                Some(dir) => Some(DiskStore::open(StoreConfig::new(dir).max_bytes(max_mb))?),
+                Some(dir) => Some(DiskStore::open(
+                    StoreConfig::new(dir).max_bytes(cfg.store_max_bytes),
+                )?),
                 None => None,
             };
             let svc = Arc::new(Service::new(store));
-            let max_queue = flag_value(rest, "--max-queue")
-                .map(|v| {
-                    v.parse::<usize>().unwrap_or_else(|_| {
-                        eprintln!("--max-queue needs an integer, got `{v}`");
-                        std::process::exit(2);
-                    })
-                })
-                .unwrap_or(env.max_queue);
-            svc.set_max_queue(max_queue);
-            let server = SweepServer::bind(svc, &addr)?;
-            match store_dir {
+            svc.set_max_queue(cfg.max_queue);
+            svc.set_max_client_queue(cfg.max_client_queue);
+            svc.set_client_weights(cfg.client_weights.clone());
+            let server = SweepServer::bind(svc, &cfg.addr)?;
+            let self_addr = server.addr().to_string();
+            match &store_dir {
                 Some(dir) => println!(
-                    "mpu serve: listening on {} (store {}, cap {} MiB)",
-                    server.addr(),
+                    "mpu serve: listening on {self_addr} (store {}, cap {} MiB)",
                     dir.display(),
-                    max_mb / (1024 * 1024)
+                    cfg.store_max_bytes / (1024 * 1024)
                 ),
-                None => println!("mpu serve: listening on {} (no store)", server.addr()),
+                None => println!("mpu serve: listening on {self_addr} (no store)"),
+            }
+            // Hot self-registration: join the coordinator once our
+            // accept loop is live (it handshakes us back, so the join
+            // retries until the first accept), drain on shutdown so
+            // new points remap to the survivors without a restart.
+            if let Some(co) = cfg.coordinator.clone() {
+                let me = self_addr.clone();
+                std::thread::spawn(move || {
+                    let client = proto::Client::new(co.clone());
+                    for attempt in 1u32..=20 {
+                        match client.join(&me) {
+                            Ok(fleet) => {
+                                println!(
+                                    "mpu serve: joined coordinator {co} ({} workers)",
+                                    fleet.len()
+                                );
+                                return;
+                            }
+                            Err(e) if attempt == 20 => {
+                                eprintln!("mpu serve: joining coordinator {co} failed: {e}");
+                            }
+                            Err(_) => std::thread::sleep(std::time::Duration::from_millis(250)),
+                        }
+                    }
+                });
             }
             server.run()?;
+            if let Some(co) = &cfg.coordinator {
+                match proto::Client::new(co.clone()).drain(&self_addr) {
+                    Ok(_) => println!("mpu serve: drained from coordinator {co}"),
+                    Err(e) => eprintln!("mpu serve: drain from coordinator {co} failed: {e}"),
+                }
+            }
             println!("mpu serve: shut down");
         }
         "submit" => {
-            let addr = addr_of(rest);
+            let cfg = serve_cfg(rest);
             let mut suite = false;
             let mut workloads: Vec<String> = Vec::new();
             for a in positionals(rest) {
@@ -1089,14 +1282,13 @@ fn main() -> anyhow::Result<()> {
                 .unwrap_or(0);
             let config: Vec<(String, String)> = config_pairs(rest);
             let stream = rest.iter().any(|a| a == "--stream");
-            let env = ServeConfig::from_env();
-            if let Some(spec) = flag_value(rest, "--faults").or(env.faults.clone()) {
-                fault::activate(FaultPlan::parse(&spec)?);
+            if let Some(spec) = &cfg.faults {
+                fault::activate(FaultPlan::parse(spec)?);
             }
-            let timeouts = Timeouts { connect: env.connect_timeout, io: env.io_timeout };
+            let timeouts = Timeouts { connect: cfg.connect_timeout, io: cfg.io_timeout };
             let retry = RetryPolicy {
-                attempts: env.retries,
-                base_delay: env.backoff,
+                attempts: cfg.retries,
+                base_delay: cfg.backoff,
                 ..RetryPolicy::default()
             };
             let req = SubmitRequest {
@@ -1116,7 +1308,7 @@ fn main() -> anyhow::Result<()> {
             // with neither flag does MPU_WORKERS federate client-side.
             let fed_workers = match flag_value(rest, "--workers") {
                 Some(v) => ServeConfig::parse_workers(&v),
-                None if flag_value(rest, "--addr").is_none() => env.workers.clone(),
+                None if flag_value(rest, "--addr").is_none() => cfg.workers.clone(),
                 None => vec![],
             };
             let reply = if !fed_workers.is_empty() {
@@ -1139,7 +1331,8 @@ fn main() -> anyhow::Result<()> {
                 // Streamed submits ride the resilient path: socket
                 // deadlines, bounded backoff on transient failures, and
                 // a request id so retries dedup onto the in-flight job.
-                match proto::submit_resilient(&addr, &req, timeouts, &retry, |resp| {
+                let client = client_from(&cfg, true);
+                match client.submit_resilient(&req, |resp| {
                     if let Response::Progress(p) = resp {
                         eprintln!(
                             "progress: {}/{} ({} ms)",
@@ -1154,10 +1347,16 @@ fn main() -> anyhow::Result<()> {
                     ),
                 }
             } else {
-                let Response::Done(reply) = daemon_request(&addr, &Request::Submit(req))? else {
-                    anyhow::bail!("unexpected response to submit");
-                };
-                reply
+                // Blocking interactive submit: no socket deadline (a
+                // cold batch legitimately simulates for minutes).
+                match client_from(&cfg, false).submit(&req)? {
+                    Response::Done(reply) => reply,
+                    Response::Error { message } => anyhow::bail!("server error: {message}"),
+                    Response::Busy { retry_after_ms } => {
+                        anyhow::bail!("server busy, retry after {retry_after_ms} ms")
+                    }
+                    _ => anyhow::bail!("unexpected response to submit"),
+                }
             };
             let mut t =
                 Table::new("submitted batch", &["label", "workload", "cycles", "ok", "source"]);
@@ -1196,10 +1395,36 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "status" => {
-            let addr = addr_of(rest);
-            let Response::Status(s) = daemon_request(&addr, &Request::Status)? else {
-                anyhow::bail!("unexpected response to status");
-            };
+            let cfg = serve_cfg(rest);
+            let client = client_from(&cfg, true);
+            if rest.iter().any(|a| a == "--watch") {
+                let interval = flag_value(rest, "--interval-ms")
+                    .map(|v| {
+                        v.parse::<u64>().ok().filter(|&n| n >= 1).unwrap_or_else(|| {
+                            eprintln!("--interval-ms needs a positive integer, got `{v}`");
+                            std::process::exit(2);
+                        })
+                    })
+                    .unwrap_or(1000);
+                // Live metrics view: rerender until interrupted. A
+                // fetch error is one stale frame, not an exit — the
+                // daemon may be restarting.
+                loop {
+                    match client.metrics() {
+                        Ok(m) => {
+                            print!("\x1b[2J\x1b[H");
+                            print_metrics(client.addr(), &m);
+                            println!("\n(watching every {interval} ms — ctrl-c to stop)");
+                        }
+                        Err(e) => println!("metrics fetch failed: {e}"),
+                    }
+                    use std::io::Write as _;
+                    std::io::stdout().flush().ok();
+                    std::thread::sleep(std::time::Duration::from_millis(interval));
+                }
+            }
+            let addr = client.addr().to_string();
+            let s = client.status()?;
             println!("mpu daemon at {addr} (proto v{})", s.proto_version);
             println!("  uptime          {:.1}s", s.uptime_ms as f64 / 1e3);
             println!("  requests        {}", s.requests);
@@ -1247,12 +1472,51 @@ fn main() -> anyhow::Result<()> {
                 }
             }
         }
-        "shutdown" => {
-            let addr = addr_of(rest);
-            let Response::Bye = daemon_request(&addr, &Request::Shutdown)? else {
-                anyhow::bail!("unexpected response to shutdown");
+        "metrics" => {
+            let cfg = serve_cfg(rest);
+            let client = client_from(&cfg, true);
+            let m = client.metrics()?;
+            match flag_value(rest, "--out") {
+                Some(out) => {
+                    let mut body = serde_json::to_string_pretty(&m)?;
+                    body.push('\n');
+                    std::fs::write(&out, body)?;
+                    println!(
+                        "wrote {out} (metrics schema v{}, {} clients, {} workers)",
+                        m.schema_version,
+                        m.clients.len(),
+                        m.workers.len()
+                    );
+                }
+                None => print_metrics(client.addr(), &m),
+            }
+        }
+        "fleet" => {
+            let pos = positionals(rest);
+            let (Some(action), Some(worker)) = (pos.first(), pos.get(1)) else {
+                eprintln!("mpu fleet needs an action and a worker: fleet {{join|drain}} H:P [--addr COORDINATOR]");
+                std::process::exit(2);
             };
-            println!("mpu daemon at {addr} stopped");
+            let cfg = serve_cfg(rest);
+            let client = client_from(&cfg, true);
+            let fleet = match action.as_str() {
+                "join" => client.join(worker)?,
+                "drain" => client.drain(worker)?,
+                other => {
+                    eprintln!("unknown fleet action `{other}` (join | drain)");
+                    std::process::exit(2);
+                }
+            };
+            println!("fleet at {} ({} workers):", client.addr(), fleet.len());
+            for w in &fleet {
+                println!("  {:<21} {}", w.addr, if w.draining { "draining" } else { "active" });
+            }
+        }
+        "shutdown" => {
+            let cfg = serve_cfg(rest);
+            let client = client_from(&cfg, true);
+            client.shutdown()?;
+            println!("mpu daemon at {} stopped", client.addr());
         }
         "store" => {
             // Daemonless store maintenance: stats + the beyond-LRU GC

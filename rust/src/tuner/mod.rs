@@ -200,6 +200,7 @@ impl<'a> Evaluator<'a> {
                     point_specs: vec![PointSpec {
                         workload: w.name().to_string(),
                         variant: "mpu".to_string(),
+                        config: vec![],
                     }],
                     ..SubmitRequest::default()
                 };
@@ -216,6 +217,57 @@ impl<'a> Evaluator<'a> {
                 Ok(EvalResult { cycles: p.cycles, energy_j: p.energy_j, correct: p.correct })
             }
         }
+    }
+
+    /// Evaluate many candidates of one workload in a single round.
+    /// Locally this is a plain loop through the cache; federated it is
+    /// ONE `point_specs` submit whose specs carry the per-candidate
+    /// override pairs (v4 `spec_config`), so a whole search generation
+    /// costs one coordinator round trip instead of one per candidate.
+    /// Results come back in `extras` order.
+    pub fn eval_batch(
+        &mut self,
+        w: Workload,
+        scale: Scale,
+        extras: &[Vec<(String, String)>],
+    ) -> Result<Vec<EvalResult>> {
+        if extras.is_empty() {
+            return Ok(Vec::new());
+        }
+        if matches!(self.mode, EvalMode::Local { .. }) {
+            return extras.iter().map(|extra| self.eval(w, scale, extra)).collect();
+        }
+        self.counters.evaluations += extras.len();
+        let EvalMode::Federated { fed } = &mut self.mode else { unreachable!() };
+        let req = SubmitRequest {
+            scale: scale.name().to_string(),
+            config: self.base_pairs.clone(),
+            point_specs: extras
+                .iter()
+                .map(|extra| PointSpec {
+                    workload: w.name().to_string(),
+                    variant: "mpu".to_string(),
+                    config: extra.clone(),
+                })
+                .collect(),
+            ..SubmitRequest::default()
+        };
+        let res = fed.submit_streamed(&req, |_| {})?;
+        let reply = res.reply;
+        self.counters.simulated += reply.simulated;
+        self.counters.mem_hits += reply.mem_hits + reply.deduped;
+        self.counters.disk_hits += reply.disk_hits;
+        ensure!(
+            reply.results.len() == extras.len(),
+            "federated tune batch returned {} of {} results",
+            reply.results.len(),
+            extras.len()
+        );
+        Ok(reply
+            .results
+            .into_iter()
+            .map(|p| EvalResult { cycles: p.cycles, energy_j: p.energy_j, correct: p.correct })
+            .collect())
     }
 }
 

@@ -6,6 +6,13 @@
 //! simulated annealing. All randomness comes from [`Prng`] seeded with
 //! `seed ^ stable_hash(kernel)`, so the same seed and budget always
 //! reproduce the same best policy.
+//!
+//! Candidates are evaluated in *generations*: each search phase proposes
+//! a batch of masks up front and hands them to
+//! [`SearchState::eval_many`], which answers memo hits for free and
+//! sends the fresh remainder through [`Evaluator::eval_batch`] — against
+//! a federation that is ONE `point_specs` submit per generation instead
+//! of one round trip per candidate.
 
 use super::{policy_pairs, Evaluator, TrajectoryPoint};
 use crate::compiler::DecodedKernel;
@@ -20,6 +27,10 @@ use std::collections::{BTreeMap, HashMap};
 /// Exhaustive enumeration is considered only below this candidate-set
 /// size (and only when `2^k` also fits the evaluation budget).
 const EXHAUSTIVE_MAX_PCS: usize = 16;
+
+/// Candidates proposed (and submitted as one federated batch) per
+/// search generation.
+const GENERATION: usize = 8;
 
 /// Result of one per-kernel search.
 pub struct SearchOutcome {
@@ -93,6 +104,46 @@ impl SearchState<'_, '_> {
         Ok(Some(obj))
     }
 
+    /// Evaluate a whole generation of masks in one shot. Memo hits
+    /// answer for free; the unique fresh remainder — capped so the
+    /// budget is never exceeded — goes through
+    /// [`Evaluator::eval_batch`] as a single submit. Returns one slot
+    /// per input mask, `None` where the budget ran out first.
+    fn eval_many(&mut self, masks: &[Vec<bool>]) -> Result<Vec<Option<(u64, f64)>>> {
+        let mut fresh: Vec<Vec<bool>> = Vec::new();
+        for mask in masks {
+            if self.seen.contains_key(mask) || fresh.contains(mask) {
+                continue;
+            }
+            if self.evaluations + fresh.len() >= self.budget {
+                continue;
+            }
+            fresh.push(mask.clone());
+        }
+        if !fresh.is_empty() {
+            let extras: Vec<Vec<(String, String)>> =
+                fresh.iter().map(|m| policy_pairs(&self.table_of(m))).collect();
+            let results = self.ev.eval_batch(self.w, self.scale, &extras)?;
+            for (mask, r) in fresh.iter().zip(results) {
+                ensure!(
+                    r.correct,
+                    "{}: candidate policy changed functional output — placement must be timing-only",
+                    self.w.name()
+                );
+                let obj = (r.cycles, r.energy_j);
+                let idx = self.evaluations;
+                self.evaluations += 1;
+                self.seen.insert(mask.clone(), obj);
+                if lt(obj, self.best) {
+                    self.best = obj;
+                    self.best_mask = mask.clone();
+                    self.trajectory.push(TrajectoryPoint { evaluation: idx, cycles: r.cycles });
+                }
+            }
+        }
+        Ok(masks.iter().map(|m| self.seen.get(m).copied()).collect())
+    }
+
     fn finish(self, mode: &'static str) -> SearchOutcome {
         let best: BTreeMap<u32, Loc> = self
             .pcs
@@ -148,10 +199,20 @@ pub fn search_policy(
     let mode = if k == 0 {
         "seed-only"
     } else if k <= EXHAUSTIVE_MAX_PCS && (1usize << k) <= budget {
-        for bits in 0..(1u64 << k) {
-            let mask: Vec<bool> = (0..k).map(|i| bits >> i & 1 == 1).collect();
-            if st.eval(&mask)?.is_none() {
-                break;
+        // Enumerate LSB-first, one generation-sized batch per submit.
+        let mut bits = 0u64;
+        'enumerate: while bits < (1u64 << k) {
+            let gen: Vec<Vec<bool>> = (0..GENERATION as u64)
+                .map_while(|off| {
+                    let b = bits + off;
+                    (b < (1u64 << k)).then(|| (0..k).map(|i| b >> i & 1 == 1).collect())
+                })
+                .collect();
+            bits += gen.len() as u64;
+            for obj in st.eval_many(&gen)? {
+                if obj.is_none() {
+                    break 'enumerate;
+                }
             }
         }
         "exhaustive"
@@ -163,7 +224,9 @@ pub fn search_policy(
     Ok(st.finish(mode))
 }
 
-/// Deterministic first-improvement bit-flip passes from `start`.
+/// Deterministic bit-flip hill climbing from `start`. Each pass
+/// proposes every single-bit flip of the current mask as one batch,
+/// then takes improvements in pc order against the pass results.
 fn greedy(st: &mut SearchState, start: &[bool]) -> Result<Vec<bool>> {
     let mut cur = start.to_vec();
     let mut cur_obj = match st.eval(&cur)? {
@@ -171,16 +234,21 @@ fn greedy(st: &mut SearchState, start: &[bool]) -> Result<Vec<bool>> {
         None => return Ok(cur),
     };
     loop {
+        let flips: Vec<Vec<bool>> = (0..cur.len())
+            .map(|i| {
+                let mut cand = cur.clone();
+                cand[i] = !cand[i];
+                cand
+            })
+            .collect();
         let mut improved = false;
-        for i in 0..cur.len() {
-            let mut cand = cur.clone();
-            cand[i] = !cand[i];
-            let obj = match st.eval(&cand)? {
+        for (cand, obj) in flips.iter().zip(st.eval_many(&flips)?) {
+            let obj = match obj {
                 Some(o) => o,
                 None => return Ok(cur),
             };
             if lt(obj, cur_obj) {
-                cur = cand;
+                cur = cand.clone();
                 cur_obj = obj;
                 improved = true;
             }
@@ -192,6 +260,11 @@ fn greedy(st: &mut SearchState, start: &[bool]) -> Result<Vec<bool>> {
 }
 
 /// Seeded simulated annealing from `start` until the budget runs out.
+/// Proposals come in generations of [`GENERATION`] mutations of the
+/// current mask, evaluated as one batch and then accepted or rejected
+/// in proposal order by the Metropolis criterion — so an accepted move
+/// takes effect from the next generation, and all `Prng` draws happen
+/// in a fixed order regardless of how the batch was served.
 fn anneal(st: &mut SearchState, start: Vec<bool>, seed: u64) -> Result<()> {
     let n = start.len();
     if n == 0 {
@@ -206,32 +279,38 @@ fn anneal(st: &mut SearchState, start: Vec<bool>, seed: u64) -> Result<()> {
     // The step cap bounds re-visits of already-memoized masks once the
     // budget outpaces the reachable neighborhood.
     let max_steps = st.budget.saturating_mul(64).max(256);
-    for _ in 0..max_steps {
-        if st.evaluations >= st.budget {
-            break;
-        }
-        let mut cand = cur.clone();
-        cand[rng.below(n as u64) as usize] ^= true;
-        if rng.chance(0.3) {
-            cand[rng.below(n as u64) as usize] ^= true;
-        }
-        let obj = match st.eval(&cand)? {
-            Some(o) => o,
-            None => break,
-        };
-        // Relative-cycles Metropolis criterion; temperature cools
-        // linearly with spent budget.
-        let progress = st.evaluations as f64 / st.budget as f64;
-        let t = (0.08 * (1.0 - progress)).max(0.005);
-        let accept = if lt(obj, cur_obj) {
-            true
-        } else {
-            let delta = (obj.0 as f64 - cur_obj.0 as f64) / cur_obj.0.max(1) as f64;
-            (rng.f32() as f64) < (-delta / t).exp()
-        };
-        if accept {
-            cur = cand;
-            cur_obj = obj;
+    let mut steps = 0usize;
+    while steps < max_steps && st.evaluations < st.budget {
+        let gen: Vec<Vec<bool>> = (0..GENERATION)
+            .map(|_| {
+                let mut cand = cur.clone();
+                cand[rng.below(n as u64) as usize] ^= true;
+                if rng.chance(0.3) {
+                    cand[rng.below(n as u64) as usize] ^= true;
+                }
+                cand
+            })
+            .collect();
+        for (cand, obj) in gen.iter().zip(st.eval_many(&gen)?) {
+            steps += 1;
+            let obj = match obj {
+                Some(o) => o,
+                None => return Ok(()),
+            };
+            // Relative-cycles Metropolis criterion; temperature cools
+            // linearly with spent budget.
+            let progress = st.evaluations as f64 / st.budget as f64;
+            let t = (0.08 * (1.0 - progress)).max(0.005);
+            let accept = if lt(obj, cur_obj) {
+                true
+            } else {
+                let delta = (obj.0 as f64 - cur_obj.0 as f64) / cur_obj.0.max(1) as f64;
+                (rng.f32() as f64) < (-delta / t).exp()
+            };
+            if accept {
+                cur = cand.clone();
+                cur_obj = obj;
+            }
         }
     }
     Ok(())

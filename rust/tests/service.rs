@@ -322,7 +322,7 @@ fn mismatched_major_handshake_is_rejected_with_a_clear_error() {
         proto::HelloOutcome::Compatible { proto_version, proto_major, features } => {
             assert_eq!(proto_version, PROTO_VERSION);
             assert_eq!(proto_major, PROTO_MAJOR);
-            for need in ["stream", "point_specs"] {
+            for need in ["stream", "point_specs", "spec_config", "metrics", "membership"] {
                 assert!(
                     features.iter().any(|f| f == need),
                     "missing feature {need}: {features:?}"
@@ -555,4 +555,245 @@ fn coordinator_daemon_federates_submits_and_reports_worker_liveness() {
     ch.join().unwrap();
     shutdown(&a1);
     h1.join().unwrap();
+}
+
+/// Compare two submit replies point-for-point on the deterministic
+/// fields (source and wall-clock legitimately differ across runs).
+fn assert_same_results(a: &proto::SubmitReply, b: &proto::SubmitReply) {
+    assert_eq!(a.results.len(), b.results.len());
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.workload, y.workload, "merged results must keep point order");
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.cycles, y.cycles, "{} [{}] diverged", x.workload, x.label);
+        assert!(y.correct);
+    }
+}
+
+#[test]
+fn fleet_grows_and_shrinks_without_restart_and_stays_bit_identical() {
+    // The acceptance criterion: a 2 → 3 → 2 worker fleet — third worker
+    // joined over the wire, then drained, no coordinator restart —
+    // completes the tiny suite identically to a static single daemon at
+    // every membership stage.
+    let req = SubmitRequest {
+        suite: true,
+        scale: "tiny".into(),
+        variants: vec!["mpu".into(), "gpu".into()],
+        fresh: true, // every stage re-simulates: shares are real work
+        ..SubmitRequest::default()
+    };
+    let solo = Arc::new(Service::new(None));
+    let solo_reply = solo.run_request(&req).unwrap();
+    assert_eq!(solo_reply.points, 24);
+
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let (a3, h3) = spawn_worker();
+    let fed = Federation::new(vec![a1.clone(), a2.clone()]).unwrap();
+    let co = Arc::new(Coordinator::new(fed));
+    let server = SweepServer::bind_coordinator(co, "127.0.0.1:0").unwrap();
+    let caddr = server.addr().to_string();
+    let ch = std::thread::spawn(move || server.run().unwrap());
+    let client = proto::Client::new(caddr.clone());
+
+    // Stage 1: two workers.
+    let Response::Done(r1) = client.submit(&req).unwrap() else {
+        panic!("expected done from the 2-worker fleet");
+    };
+    assert_eq!(r1.simulated, 24);
+    assert_same_results(&solo_reply, &r1);
+
+    // Stage 2: a third worker joins over the wire — no restart.
+    let fleet = client.join(&a3).unwrap();
+    assert_eq!(fleet.len(), 3);
+    assert!(fleet.iter().all(|w| !w.draining));
+    let Response::Done(r2) = client.submit(&req).unwrap() else {
+        panic!("expected done from the 3-worker fleet");
+    };
+    assert_eq!(r2.simulated, 24);
+    assert_same_results(&solo_reply, &r2);
+    let a3_simulated = status_of(&a3).simulated;
+
+    // Stage 3: drain the joiner. It stays in the fleet (visible,
+    // flagged) but new shares remap to the survivors.
+    let fleet = client.drain(&a3).unwrap();
+    assert_eq!(fleet.len(), 3, "a draining worker is still fleet-visible");
+    assert!(fleet.iter().find(|w| w.addr == a3).unwrap().draining);
+    assert!(fleet.iter().filter(|w| !w.draining).count() == 2);
+    let Response::Done(r3) = client.submit(&req).unwrap() else {
+        panic!("expected done from the drained-back fleet");
+    };
+    assert_eq!(r3.simulated, 24);
+    assert_same_results(&solo_reply, &r3);
+    assert_eq!(
+        status_of(&a3).simulated,
+        a3_simulated,
+        "a draining worker must get no new shares"
+    );
+
+    // The coordinator's metrics see all three rows, drain flag included.
+    let m = client.metrics().unwrap();
+    assert_eq!(m.workers.len(), 3);
+    let w3 = m.workers.iter().find(|w| w.addr == a3).unwrap();
+    assert!(w3.alive && w3.draining);
+
+    client.shutdown().unwrap();
+    ch.join().unwrap();
+    for (a, h) in [(a1, h1), (a2, h2), (a3, h3)] {
+        shutdown(&a);
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn drain_mid_batch_finishes_in_flight_points_and_merges_bit_identical() {
+    // Drain a worker *while its share is in flight*: it finishes the
+    // points it already owns, the merged batch is byte-identical to a
+    // single daemon's, and the next batch routes entirely around it.
+    let req = SubmitRequest {
+        suite: true,
+        scale: "tiny".into(),
+        variants: vec!["mpu".into(), "gpu".into()],
+        return_reports: true,
+        ..SubmitRequest::default()
+    };
+    let solo = Arc::new(Service::new(None));
+    let active = solo.begin_request(&req).unwrap();
+    let solo_results = active.job().wait().unwrap();
+    let solo_reply = active.wait_reply().unwrap();
+    drop(active);
+
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let fed = Federation::new(vec![a1.clone(), a2.clone()]).unwrap();
+    let mut drained = false;
+    let fr = fed
+        .submit_streamed(&req, |ev| {
+            if !drained {
+                if let FedEvent::Result { .. } = ev {
+                    fed.drain(&a2).unwrap();
+                    drained = true;
+                }
+            }
+        })
+        .unwrap();
+    assert!(drained, "the batch must stream at least one result");
+    assert_eq!(fr.reply.points, 24);
+    assert_eq!(fr.reply.simulated, 24, "drain must not drop or re-run points");
+    assert_same_results(&solo_reply, &fr.reply);
+
+    // Full reports byte-identical modulo the wall-clock fields.
+    let canon = |r: &RunReport| {
+        let mut c = r.clone();
+        c.sim_wall_ms = 0.0;
+        c.sim_cycles_per_sec = 0.0;
+        serde_json::to_string(&WireReport::from_report(Scale::Tiny, &c)).unwrap()
+    };
+    assert_eq!(fr.reports.len(), 24);
+    for (solo_point, fed_report) in solo_results.iter().zip(&fr.reports) {
+        let fed_report = fed_report.as_ref().expect("return_reports streams every report");
+        assert_eq!(
+            canon(&solo_point.report),
+            canon(fed_report),
+            "{} [{}] diverged across the drain",
+            solo_point.point.workload.name(),
+            solo_point.point.label
+        );
+    }
+
+    // The drained worker finished the share it owned when the batch
+    // started, and gets nothing afterwards: a fresh resubmit lands on
+    // the survivor alone.
+    let s2 = status_of(&a2);
+    assert!(s2.simulated > 0, "the draining worker must finish its in-flight share");
+    let s1 = status_of(&a1);
+    let fresh = SubmitRequest { fresh: true, return_reports: false, ..req.clone() };
+    let fr2 = fed.submit(&fresh).unwrap();
+    assert_eq!(fr2.reply.simulated, 24);
+    assert_eq!(status_of(&a2).simulated, s2.simulated, "no new shares after drain");
+    assert_eq!(
+        status_of(&a1).simulated,
+        s1.simulated + 24,
+        "the survivor owns the whole next batch"
+    );
+
+    shutdown(&a1);
+    shutdown(&a2);
+    h1.join().unwrap();
+    h2.join().unwrap();
+}
+
+#[test]
+fn metrics_over_the_wire_report_client_rows_and_move_with_traffic() {
+    let (addr, handle) = spawn_worker();
+    let client = proto::Client::new(addr.clone()).with_identity(Some("alice".into()));
+
+    let Response::Done(reply) = client.submit(&submit_axpy(0)).unwrap() else {
+        panic!("expected done");
+    };
+    assert_eq!(reply.points, 1);
+    let m = client.metrics().unwrap();
+    assert_eq!(m.schema_version, proto::METRICS_SCHEMA_VERSION);
+    assert_eq!(m.report, "metrics");
+    assert_eq!(m.proto_version, PROTO_VERSION);
+    assert_eq!(m.requests, 1);
+    assert_eq!(m.points, 1);
+    assert_eq!(m.simulated, 1);
+    assert_eq!(m.queue_depth, 0, "nothing queued after the reply");
+    let alice = m.clients.iter().find(|c| c.client_id == "alice").expect("client row");
+    assert!(alice.weight >= 1);
+    assert_eq!(alice.completed, 1);
+    assert_eq!(alice.rejected, 0);
+
+    // A warm resubmit moves the request counter and the hit rate but
+    // simulates nothing.
+    let Response::Done(_) = client.submit(&submit_axpy(0)).unwrap() else {
+        panic!("expected done");
+    };
+    let m2 = client.metrics().unwrap();
+    assert_eq!(m2.requests, 2);
+    assert_eq!(m2.simulated, 1, "warm resubmit must not simulate");
+    assert!(m2.cache_hit_rate > 0.0, "the warm hit must show in the rate");
+    assert!(m2.sim_cycles_per_sec >= 0.0);
+
+    shutdown(&addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn federated_tune_matches_local_tune_exactly() {
+    // The batched `point_specs` evaluation path (one submit per search
+    // generation, per-spec config overrides) must reach the same best
+    // policy, cycles, and evaluation count as the in-process path.
+    use mpu::coordinator::SimCache;
+    use mpu::tuner::{tune, TuneOptions};
+    use mpu::workloads::Workload as W;
+
+    let opts = TuneOptions {
+        workloads: vec![W::Axpy],
+        budget: 6,
+        seed: 42,
+        ..TuneOptions::default()
+    };
+    let local = tune(&opts, &SimCache::new()).unwrap();
+
+    let (a1, h1) = spawn_worker();
+    let (a2, h2) = spawn_worker();
+    let fed_opts = TuneOptions { workers: vec![a1.clone(), a2.clone()], ..opts };
+    let fed = tune(&fed_opts, &SimCache::new()).unwrap();
+    assert!(fed.federated);
+
+    assert_eq!(local.workloads.len(), fed.workloads.len());
+    for (l, f) in local.workloads.iter().zip(&fed.workloads) {
+        assert_eq!(l.best_policy, f.best_policy, "{}: policies diverged", l.workload);
+        assert_eq!(l.tuned_cycles, f.tuned_cycles);
+        assert_eq!(l.annotated_cycles, f.annotated_cycles);
+        assert_eq!(l.evaluations, f.evaluations);
+        assert_eq!(l.search_mode, f.search_mode);
+    }
+
+    shutdown(&a1);
+    shutdown(&a2);
+    h1.join().unwrap();
+    h2.join().unwrap();
 }
